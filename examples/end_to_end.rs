@@ -1,0 +1,86 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//!     make artifacts && cargo run --release --example end_to_end
+//!
+//! Layer 1 (Pallas candidate-scoring kernel) and Layer 2 (JAX predictor
+//! model) were AOT-compiled by `make artifacts` into
+//! `artifacts/predictor.hlo.txt`. This driver:
+//!
+//! 1. loads that artifact through the PJRT CPU client (Layer 3's
+//!    `runtime`), verifying the compiled model agrees with the pure-Rust
+//!    oracle on a live state vector;
+//! 2. runs a complete transfer session — the paper's mixed dataset
+//!    (25,128 files, ~42 GB) over the DIDCLab testbed — under the
+//!    **predictive governor**, which calls the compiled model on every
+//!    tuning decision;
+//! 3. runs the identical session under the paper's threshold governor
+//!    (Algorithm 3) and reports both, demonstrating the whole stack:
+//!    Pallas kernel → JAX model → HLO text → PJRT runtime → Rust
+//!    coordinator → simulated WAN + DVFS substrate.
+
+use greendt::config::experiment::TunerParams;
+use greendt::config::testbeds;
+use greendt::coordinator::AlgorithmKind;
+use greendt::dataset::standard;
+use greendt::predictor::{cpu_grid, demo_state_for_tests, Predictor};
+use greendt::sim::session::{run_session, SessionConfig};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. Load + verify the AOT artifact through PJRT. ---------------
+    let path = greendt::runtime::default_predictor_path();
+    let pjrt = Predictor::from_artifact(&path).map_err(|e| {
+        anyhow::anyhow!("{e:#}\nrun `make artifacts` first to build {path}")
+    })?;
+    let oracle = Predictor::oracle();
+    let grid = cpu_grid(&testbeds::didclab().client_cpu, 6);
+    let state = demo_state_for_tests();
+    let a = pjrt.predict(&grid, &state)?;
+    let b = oracle.predict(&grid, &state)?;
+    let max_rel = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| {
+            ((x.energy_j - y.energy_j).abs() / x.energy_j.abs().max(1.0))
+                .max((x.tput_bps - y.tput_bps).abs() / x.tput_bps.abs().max(1.0))
+        })
+        .fold(0.0f64, f64::max);
+    println!("[1/3] PJRT artifact loaded from {path}");
+    println!("      {} candidates evaluated; max rel. deviation vs oracle {:.2e}", a.len(), max_rel);
+    assert!(max_rel < 2e-4, "PJRT and oracle must agree");
+
+    // --- 2. Full transfer under the predictive (PJRT) governor. --------
+    let mk = |params: TunerParams| {
+        SessionConfig::new(
+            testbeds::didclab(),
+            standard::mixed_dataset(42),
+            AlgorithmKind::MinEnergy,
+        )
+        .with_params(params)
+    };
+    let predictive = run_session(&mk(TunerParams::default().predictive()));
+    assert!(predictive.completed);
+    println!(
+        "[2/3] predictive governor : {} in {} — client energy {} ({} cores @ {} at end)",
+        predictive.moved,
+        predictive.duration,
+        predictive.client_energy,
+        predictive.final_active_cores,
+        predictive.final_freq
+    );
+
+    // --- 3. Same session under the paper's threshold governor. ---------
+    let threshold = run_session(&mk(TunerParams::default()));
+    assert!(threshold.completed);
+    println!(
+        "[3/3] threshold governor  : {} in {} — client energy {}",
+        threshold.moved, threshold.duration, threshold.client_energy
+    );
+
+    let delta = 100.0
+        * (1.0
+            - predictive.client_energy.as_joules() / threshold.client_energy.as_joules());
+    println!(
+        "\nend-to-end OK: all layers compose; predictive vs threshold energy: {delta:+.1}%"
+    );
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Quickstart: one energy-efficient transfer, five lines of setup.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Runs the Energy-Efficient Maximum Throughput algorithm (Alg. 5 +
+//! load control, Alg. 3) moving the paper's medium dataset (Table II)
+//! over the CloudLab testbed (Table I), and prints what the paper's
+//! figures would plot for this cell.
+
+use greendt::config::testbeds;
+use greendt::coordinator::AlgorithmKind;
+use greendt::dataset::standard;
+use greendt::sim::session::{run_session, SessionConfig};
+
+fn main() {
+    let testbed = testbeds::cloudlab();
+    let dataset = standard::medium_dataset(42);
+    let cfg = SessionConfig::new(testbed, dataset, AlgorithmKind::MaxThroughput);
+
+    let out = run_session(&cfg);
+
+    println!("GreenDT quickstart — EEMT on CloudLab, medium dataset");
+    println!("  moved          : {}", out.moved);
+    println!("  duration       : {}", out.duration);
+    println!("  avg throughput : {}", out.avg_throughput);
+    println!("  client energy  : {}", out.client_energy);
+    println!("  server energy  : {}", out.server_energy);
+    println!("  final CPU      : {} cores @ {}", out.final_active_cores, out.final_freq);
+    assert!(out.completed, "transfer must complete");
+}

@@ -1,0 +1,59 @@
+"""AOT pipeline: lower the Layer-2 predictor to HLO text for the Rust side.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out ../artifacts/predictor.hlo.txt
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_predictor() -> str:
+    lowered = jax.jit(model.predict).lower(*model.example_args())
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default="../artifacts/predictor.hlo.txt",
+        help="output path for the HLO text artifact",
+    )
+    args = ap.parse_args()
+
+    text = lower_predictor()
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars of HLO to {args.out}")
+
+    # Smoke-check the lowered function agrees with the oracle on demo data.
+    import numpy as np
+
+    got = np.asarray(model.predict(model.demo_grid(), model.demo_state()))
+    want = np.asarray(model.predict_reference(model.demo_grid(), model.demo_state()))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-3)
+    print("kernel vs oracle: OK")
+
+
+if __name__ == "__main__":
+    main()

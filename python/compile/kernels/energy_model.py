@@ -1,0 +1,127 @@
+"""Layer-1 Pallas kernel: candidate-grid energy/throughput scoring.
+
+The Rust coordinator's predictive governor evaluates, at every tuning
+timeout, a grid of (channels, cores, frequency) operating points against
+the analytic transfer model. This kernel is that evaluation, tiled along
+the candidate axis so each block fits comfortably in VMEM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid dimension iterates
+TILE-row blocks of the candidate matrix; the `state` vector is small and
+replicated to every block (`index_map` pins it to block 0). All math is
+elementwise f32 — VPU work, no MXU — so the natural layout is (TILE, 3)
+blocks streamed HBM→VMEM. `interpret=True` is mandatory on this CPU-only
+image; on a real TPU the same kernel lowers through Mosaic unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import layout as L
+
+EPS = 1e-9
+INFEASIBLE_ENERGY = 1e30
+
+
+def _predict_kernel(cand_ref, state_ref, out_ref):
+    """One TILE-row block of the candidate grid."""
+    cand = cand_ref[...]
+    state = state_ref[...]
+
+    channels = cand[:, L.CAND_CHANNELS]
+    cores = cand[:, L.CAND_CORES]
+    freq = cand[:, L.CAND_FREQ_GHZ]
+
+    capacity = state[L.S_CAPACITY_BPS]
+    rtt = state[L.S_RTT_S]
+    avg_win = state[L.S_AVG_WIN_BYTES]
+    knee = state[L.S_KNEE_STREAMS]
+    gamma = state[L.S_OVERLOAD_GAMMA]
+    floor = state[L.S_OVERLOAD_FLOOR]
+    par = state[L.S_PARALLELISM]
+    remaining = state[L.S_REMAINING_BYTES]
+    avg_file = state[L.S_AVG_FILE_BYTES]
+    pp = state[L.S_PP_LEVEL]
+    cpb = state[L.S_CYCLES_PER_BYTE]
+    cpr = state[L.S_CYCLES_PER_REQ]
+    cps = state[L.S_CYCLES_PER_STREAM]
+    max_util = state[L.S_MAX_APP_UTIL]
+
+    # Network: window-limited aggregate with overload penalty.
+    streams = channels * par
+    win_rate = avg_win / jnp.maximum(rtt, EPS)
+    over = jnp.maximum(streams - knee, 0.0) / jnp.maximum(knee, EPS)
+    penalty = jnp.maximum(1.0 / (1.0 + gamma * over), floor)
+    net = jnp.minimum(streams * win_rate, capacity * penalty)
+
+    # Pipelining pacing.
+    r_chan = net / jnp.maximum(channels, EPS)
+    xfer = avg_file / jnp.maximum(r_chan, EPS)
+    paced = jnp.maximum(xfer, rtt / jnp.maximum(pp, 1.0))
+    eff = xfer / jnp.maximum(paced, EPS)
+    net_eff = net * eff
+
+    # CPU ceiling.
+    cap_cycles = cores * freq * 1e9 * max_util
+    req_rate_net = net_eff / jnp.maximum(avg_file, EPS)
+    overhead = req_rate_net * cpr + streams * cps
+    cpu_bytes = jnp.maximum(cap_cycles - overhead, 0.0) / jnp.maximum(cpb, EPS)
+    tput = jnp.minimum(net_eff, cpu_bytes)
+
+    # Utilization at the achieved rate.
+    req_rate = tput / jnp.maximum(avg_file, EPS)
+    demand = tput * cpb + req_rate * cpr + streams * cps
+    cap_full = cores * freq * 1e9
+    load = demand / jnp.maximum(cap_full, EPS)
+    util = jnp.clip(load, 0.0, 1.0)
+
+    # Package power.
+    v_min = state[L.S_V_MIN]
+    v_max = state[L.S_V_MAX]
+    f_min = state[L.S_F_MIN_GHZ]
+    f_max = state[L.S_F_MAX_GHZ]
+    t = jnp.clip((freq - f_min) / jnp.maximum(f_max - f_min, EPS), 0.0, 1.0)
+    v = v_min + (v_max - v_min) * t
+    per_core_idle = (
+        state[L.S_CORE_IDLE_BASE_W] + state[L.S_CORE_IDLE_PER_GHZ_W] * freq
+    )
+    per_core_dyn = util * state[L.S_DYN_KAPPA] * v * v * freq
+    dram = state[L.S_DRAM_W_PER_GBS] * tput / 1e9
+    power = state[L.S_PKG_STATIC_W] + cores * (per_core_idle + per_core_dyn) + dram
+
+    feasible = tput > EPS
+    energy = jnp.where(
+        feasible, power * remaining / jnp.maximum(tput, EPS), INFEASIBLE_ENERGY
+    )
+    tput = jnp.where(feasible, tput, 0.0)
+
+    out_ref[...] = jnp.stack([tput, power, energy], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def predict_pallas(cand, state, *, interpret=True):
+    """Pallas-tiled candidate evaluation.
+
+    `cand` must have a row count divisible by `layout.TILE` (the AOT entry
+    point fixes it at `layout.NUM_CANDIDATES`); `state` is broadcast to
+    every tile.
+    """
+    cand = jnp.asarray(cand, jnp.float32)
+    state = jnp.asarray(state, jnp.float32)
+    n = cand.shape[0]
+    assert n % L.TILE == 0, f"candidate rows {n} not a multiple of {L.TILE}"
+    grid = (n // L.TILE,)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L.TILE, L.CAND_WIDTH), lambda i: (i, 0)),
+            # The state vector is replicated: every tile reads block 0.
+            pl.BlockSpec((L.STATE_WIDTH,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((L.TILE, L.OUT_WIDTH), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, L.OUT_WIDTH), jnp.float32),
+        interpret=interpret,
+    )(cand, state)

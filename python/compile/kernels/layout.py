@@ -1,0 +1,63 @@
+"""Shared tensor layouts for the GreenDT predictor.
+
+This file is the single source of truth for the interchange format between
+Layer 2 (the JAX model, AOT-compiled to `artifacts/predictor.hlo.txt`) and
+Layer 3 (the Rust coordinator, `rust/src/predictor/layout.rs` mirrors these
+constants — keep the two in sync; the `predictor_parity` integration test
+executes the artifact against the Rust oracle and fails on drift).
+
+Inputs
+------
+``cand``: float32[NUM_CANDIDATES, CAND_WIDTH]
+    Per-candidate operating points: (channels, active_cores, freq_ghz).
+    Unused rows are padded with zeros; a zero-core candidate yields zero
+    throughput and +inf-ish energy, so padding never wins the argmin.
+
+``state``: float32[STATE_WIDTH]
+    Scalars describing the transfer + platform at this instant.
+
+Output
+------
+float32[NUM_CANDIDATES, OUT_WIDTH]: (throughput_Bps, power_W, energy_J).
+"""
+
+# Grid sizing: 8-16 cores x ~12 P-states fits comfortably; the kernel is
+# tiled in TILE-row blocks along the candidate axis.
+NUM_CANDIDATES = 128
+TILE = 32
+
+CAND_WIDTH = 3
+CAND_CHANNELS = 0
+CAND_CORES = 1
+CAND_FREQ_GHZ = 2
+
+STATE_WIDTH = 24
+S_CAPACITY_BPS = 0  # available bottleneck capacity, bytes/s (bg deducted)
+S_RTT_S = 1
+S_AVG_WIN_BYTES = 2
+S_KNEE_STREAMS = 3
+S_OVERLOAD_GAMMA = 4
+S_OVERLOAD_FLOOR = 5
+S_PARALLELISM = 6  # streams per channel
+S_REMAINING_BYTES = 7
+S_AVG_FILE_BYTES = 8
+S_PP_LEVEL = 9
+S_CYCLES_PER_BYTE = 10
+S_CYCLES_PER_REQ = 11
+S_CYCLES_PER_STREAM = 12
+S_MAX_APP_UTIL = 13
+S_PKG_STATIC_W = 14
+S_CORE_IDLE_BASE_W = 15
+S_CORE_IDLE_PER_GHZ_W = 16
+S_DYN_KAPPA = 17
+S_V_MIN = 18
+S_V_MAX = 19
+S_F_MIN_GHZ = 20
+S_F_MAX_GHZ = 21
+S_DRAM_W_PER_GBS = 22
+S_RESERVED = 23
+
+OUT_WIDTH = 3
+OUT_TPUT_BPS = 0
+OUT_POWER_W = 1
+OUT_ENERGY_J = 2

@@ -1,0 +1,102 @@
+"""Pure-jnp oracle for the predictor kernel.
+
+Implements the analytic throughput / power / energy model (DESIGN.md §5)
+with plain vectorized jax.numpy — no Pallas. This is the correctness
+reference the Pallas kernel is tested against, and it mirrors formula-for-
+formula the Rust-side oracle (`rust/src/predictor/reference.rs`).
+"""
+
+import jax.numpy as jnp
+
+from . import layout as L
+
+EPS = 1e-9
+# Energy reported for infeasible candidates (zero cores / zero throughput):
+# large enough to lose every argmin, small enough to stay finite in f32.
+INFEASIBLE_ENERGY = 1e30
+
+
+def predict_ref(cand, state):
+    """Evaluate all candidates against the transfer state.
+
+    Args:
+      cand: float32[N, 3] — (channels, active_cores, freq_ghz) rows.
+      state: float32[STATE_WIDTH] — see `layout`.
+
+    Returns:
+      float32[N, 3] — (throughput_Bps, power_W, energy_J) rows.
+    """
+    cand = jnp.asarray(cand, jnp.float32)
+    state = jnp.asarray(state, jnp.float32)
+
+    channels = cand[:, L.CAND_CHANNELS]
+    cores = cand[:, L.CAND_CORES]
+    freq = cand[:, L.CAND_FREQ_GHZ]
+
+    capacity = state[L.S_CAPACITY_BPS]
+    rtt = state[L.S_RTT_S]
+    avg_win = state[L.S_AVG_WIN_BYTES]
+    knee = state[L.S_KNEE_STREAMS]
+    gamma = state[L.S_OVERLOAD_GAMMA]
+    floor = state[L.S_OVERLOAD_FLOOR]
+    par = state[L.S_PARALLELISM]
+    remaining = state[L.S_REMAINING_BYTES]
+    avg_file = state[L.S_AVG_FILE_BYTES]
+    pp = state[L.S_PP_LEVEL]
+    cpb = state[L.S_CYCLES_PER_BYTE]
+    cpr = state[L.S_CYCLES_PER_REQ]
+    cps = state[L.S_CYCLES_PER_STREAM]
+    max_util = state[L.S_MAX_APP_UTIL]
+
+    # --- Network side (mirrors netsim::share_goodput + pipelining) -------
+    streams = channels * par
+    win_rate = avg_win / jnp.maximum(rtt, EPS)  # bytes/s per stream
+    over = jnp.maximum(streams - knee, 0.0) / jnp.maximum(knee, EPS)
+    penalty = jnp.maximum(1.0 / (1.0 + gamma * over), floor)
+    net = jnp.minimum(streams * win_rate, capacity * penalty)
+
+    # Pipelining efficiency: time/file = max(S/r, RTT/pp) per channel.
+    r_chan = net / jnp.maximum(channels, EPS)
+    xfer = avg_file / jnp.maximum(r_chan, EPS)
+    paced = jnp.maximum(xfer, rtt / jnp.maximum(pp, 1.0))
+    eff = xfer / jnp.maximum(paced, EPS)
+    net_eff = net * eff
+
+    # --- CPU side (mirrors cpusim) ----------------------------------------
+    cap_cycles = cores * freq * 1e9 * max_util
+    req_rate_net = net_eff / jnp.maximum(avg_file, EPS)
+    overhead = req_rate_net * cpr + streams * cps
+    cpu_bytes = jnp.maximum(cap_cycles - overhead, 0.0) / jnp.maximum(cpb, EPS)
+    tput = jnp.minimum(net_eff, cpu_bytes)
+
+    # Load implied by the achieved throughput.
+    req_rate = tput / jnp.maximum(avg_file, EPS)
+    demand = tput * cpb + req_rate * cpr + streams * cps
+    cap_full = cores * freq * 1e9
+    load = demand / jnp.maximum(cap_full, EPS)
+    util = jnp.clip(load, 0.0, 1.0)
+
+    # --- Power (mirrors power::PowerModel) ---------------------------------
+    v_min = state[L.S_V_MIN]
+    v_max = state[L.S_V_MAX]
+    f_min = state[L.S_F_MIN_GHZ]
+    f_max = state[L.S_F_MAX_GHZ]
+    t = jnp.clip((freq - f_min) / jnp.maximum(f_max - f_min, EPS), 0.0, 1.0)
+    v = v_min + (v_max - v_min) * t
+    per_core_idle = (
+        state[L.S_CORE_IDLE_BASE_W] + state[L.S_CORE_IDLE_PER_GHZ_W] * freq
+    )
+    per_core_dyn = util * state[L.S_DYN_KAPPA] * v * v * freq
+    dram = state[L.S_DRAM_W_PER_GBS] * tput / 1e9
+    power = state[L.S_PKG_STATIC_W] + cores * (per_core_idle + per_core_dyn) + dram
+
+    # --- Energy projection ---------------------------------------------------
+    feasible = tput > EPS
+    energy = jnp.where(
+        feasible,
+        power * remaining / jnp.maximum(tput, EPS),
+        INFEASIBLE_ENERGY,
+    )
+    tput = jnp.where(feasible, tput, 0.0)
+
+    return jnp.stack([tput, power, energy], axis=1)

@@ -1,0 +1,78 @@
+"""Layer-2 JAX model: the predictor the Rust coordinator executes via PJRT.
+
+The model wraps the Layer-1 Pallas kernel (`kernels.energy_model`) into the
+jitted function that `aot.py` lowers to HLO text. Shapes are fixed at AOT
+time (`layout.NUM_CANDIDATES` candidate rows); the Rust side pads its grid
+to that size.
+
+Python only ever runs at build time: the compiled artifact is executed by
+`rust/src/runtime` on the coordinator's decision path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import layout as L
+from .kernels.energy_model import predict_pallas
+from .kernels.ref import predict_ref
+
+
+def predict(cand, state):
+    """The exported entry point: (cand[N,3], state[24]) -> out[N,3]."""
+    return predict_pallas(cand, state, interpret=True)
+
+
+def predict_reference(cand, state):
+    """Pure-jnp oracle (identical math, no Pallas) for tests."""
+    return predict_ref(cand, state)
+
+
+def example_args():
+    """ShapeDtypeStructs the AOT pipeline lowers against."""
+    return (
+        jax.ShapeDtypeStruct((L.NUM_CANDIDATES, L.CAND_WIDTH), jnp.float32),
+        jax.ShapeDtypeStruct((L.STATE_WIDTH,), jnp.float32),
+    )
+
+
+def demo_state():
+    """A CloudLab-flavoured state vector (used by tests and smoke checks)."""
+    s = [0.0] * L.STATE_WIDTH
+    s[L.S_CAPACITY_BPS] = 115e6  # 1 Gbps * (1 - 8% bg) in bytes/s
+    s[L.S_RTT_S] = 0.036
+    s[L.S_AVG_WIN_BYTES] = 1e6
+    s[L.S_KNEE_STREAMS] = 4.5
+    s[L.S_OVERLOAD_GAMMA] = 0.02
+    s[L.S_OVERLOAD_FLOOR] = 0.55
+    s[L.S_PARALLELISM] = 1.0
+    s[L.S_REMAINING_BYTES] = 10e9
+    s[L.S_AVG_FILE_BYTES] = 2.4e6
+    s[L.S_PP_LEVEL] = 2.0
+    s[L.S_CYCLES_PER_BYTE] = 2.2
+    s[L.S_CYCLES_PER_REQ] = 11_000.0
+    s[L.S_CYCLES_PER_STREAM] = 1.4e6
+    s[L.S_MAX_APP_UTIL] = 0.92
+    s[L.S_PKG_STATIC_W] = 10.0
+    s[L.S_CORE_IDLE_BASE_W] = 0.5
+    s[L.S_CORE_IDLE_PER_GHZ_W] = 0.28
+    s[L.S_DYN_KAPPA] = 1.7
+    s[L.S_V_MIN] = 0.65
+    s[L.S_V_MAX] = 1.05
+    s[L.S_F_MIN_GHZ] = 1.2
+    s[L.S_F_MAX_GHZ] = 3.4
+    s[L.S_DRAM_W_PER_GBS] = 2.0
+    return jnp.asarray(s, jnp.float32)
+
+
+def demo_grid():
+    """A (cores x freq) grid at fixed channel count, padded to NUM_CANDIDATES."""
+    rows = []
+    for cores in range(1, 11):
+        f = 1.2
+        while f <= 3.4 + 1e-9:
+            rows.append((6.0, float(cores), round(f, 1)))
+            f += 0.2
+    rows = rows[: L.NUM_CANDIDATES]
+    while len(rows) < L.NUM_CANDIDATES:
+        rows.append((0.0, 0.0, 0.0))
+    return jnp.asarray(rows, jnp.float32)

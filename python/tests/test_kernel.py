@@ -1,0 +1,142 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps the state space (link speeds, RTTs, CPU parameters) and
+candidate grids; the kernel must agree with `ref.predict_ref` everywhere.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import layout as L
+from compile.kernels.energy_model import predict_pallas
+from compile.kernels.ref import predict_ref
+from compile import model
+
+
+def run_both(cand, state):
+    got = np.asarray(predict_pallas(cand, state, interpret=True))
+    want = np.asarray(predict_ref(cand, state))
+    return got, want
+
+
+def assert_match(cand, state):
+    got, want = run_both(cand, state)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-3)
+
+
+def test_demo_grid_matches():
+    assert_match(model.demo_grid(), model.demo_state())
+
+
+def test_padding_rows_are_infeasible():
+    out = np.asarray(model.predict(model.demo_grid(), model.demo_state()))
+    # demo_grid pads the tail with zero candidates.
+    assert out[-1, L.OUT_TPUT_BPS] == 0.0
+    assert out[-1, L.OUT_ENERGY_J] >= 1e29
+
+
+def test_output_shape_and_dtype():
+    out = model.predict(model.demo_grid(), model.demo_state())
+    assert out.shape == (L.NUM_CANDIDATES, L.OUT_WIDTH)
+    assert out.dtype == jnp.float32
+
+
+def test_more_cores_never_reduce_throughput():
+    state = model.demo_state()
+    rows = [(6.0, float(c), 2.0) for c in range(1, 11)]
+    rows += [(0.0, 0.0, 0.0)] * (L.NUM_CANDIDATES - len(rows))
+    out = np.asarray(model.predict(jnp.asarray(rows, jnp.float32), state))
+    tputs = out[:10, L.OUT_TPUT_BPS]
+    assert (np.diff(tputs) >= -1e-3).all(), tputs
+
+
+def test_power_monotone_in_frequency():
+    state = model.demo_state()
+    freqs = [1.2 + 0.2 * i for i in range(12)]
+    rows = [(6.0, 4.0, f) for f in freqs]
+    rows += [(0.0, 0.0, 0.0)] * (L.NUM_CANDIDATES - len(rows))
+    out = np.asarray(model.predict(jnp.asarray(rows, jnp.float32), state))
+    powers = out[: len(freqs), L.OUT_POWER_W]
+    assert (np.diff(powers) > 0).all(), powers
+
+
+def test_energy_has_interior_optimum_under_network_bound():
+    # On a 1 Gbps path the CPU is over-provisioned: energy should be
+    # minimized at a low-frequency setting, not the highest.
+    state = model.demo_state()
+    freqs = [1.2 + 0.2 * i for i in range(12)]
+    rows = [(6.0, 2.0, f) for f in freqs]
+    rows += [(0.0, 0.0, 0.0)] * (L.NUM_CANDIDATES - len(rows))
+    out = np.asarray(model.predict(jnp.asarray(rows, jnp.float32), state))
+    energies = out[: len(freqs), L.OUT_ENERGY_J]
+    assert np.argmin(energies) <= 2, energies
+
+
+state_strategy = st.fixed_dictionaries(
+    {
+        "capacity_gbps": st.floats(0.1, 40.0),
+        "rtt_ms": st.floats(1.0, 200.0),
+        "avg_win_mb": st.floats(0.05, 16.0),
+        "gamma": st.floats(0.0, 0.5),
+        "floor": st.floats(0.1, 0.9),
+        "par": st.integers(1, 16),
+        "remaining_gb": st.floats(0.01, 100.0),
+        "avg_file_mb": st.floats(0.01, 500.0),
+        "pp": st.integers(1, 64),
+        "cpb": st.floats(0.5, 8.0),
+    }
+)
+
+
+def build_state(p):
+    s = np.asarray(model.demo_state()).copy()
+    s[L.S_CAPACITY_BPS] = p["capacity_gbps"] * 0.125e9
+    s[L.S_RTT_S] = p["rtt_ms"] / 1e3
+    s[L.S_AVG_WIN_BYTES] = p["avg_win_mb"] * 1e6
+    s[L.S_KNEE_STREAMS] = max(
+        s[L.S_CAPACITY_BPS] / max(s[L.S_AVG_WIN_BYTES] / s[L.S_RTT_S], 1.0), 1.0
+    )
+    s[L.S_OVERLOAD_GAMMA] = p["gamma"]
+    s[L.S_OVERLOAD_FLOOR] = p["floor"]
+    s[L.S_PARALLELISM] = float(p["par"])
+    s[L.S_REMAINING_BYTES] = p["remaining_gb"] * 1e9
+    s[L.S_AVG_FILE_BYTES] = p["avg_file_mb"] * 1e6
+    s[L.S_PP_LEVEL] = float(p["pp"])
+    s[L.S_CYCLES_PER_BYTE] = p["cpb"]
+    return jnp.asarray(s, jnp.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=state_strategy, seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_ref_across_state_space(p, seed):
+    rng = np.random.default_rng(seed)
+    cand = np.zeros((L.NUM_CANDIDATES, L.CAND_WIDTH), np.float32)
+    n = rng.integers(1, L.NUM_CANDIDATES + 1)
+    cand[:n, L.CAND_CHANNELS] = rng.integers(1, 49, n)
+    cand[:n, L.CAND_CORES] = rng.integers(1, 17, n)
+    cand[:n, L.CAND_FREQ_GHZ] = rng.uniform(0.8, 4.0, n)
+    assert_match(jnp.asarray(cand), build_state(p))
+
+
+@settings(max_examples=10, deadline=None)
+@given(tiles=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_kernel_handles_any_tile_multiple(tiles, seed):
+    # The kernel is shape-polymorphic in TILE multiples even though the AOT
+    # artifact pins NUM_CANDIDATES.
+    rng = np.random.default_rng(seed)
+    n = tiles * L.TILE
+    cand = np.zeros((n, L.CAND_WIDTH), np.float32)
+    cand[:, L.CAND_CHANNELS] = rng.integers(1, 33, n)
+    cand[:, L.CAND_CORES] = rng.integers(1, 9, n)
+    cand[:, L.CAND_FREQ_GHZ] = rng.uniform(1.0, 3.6, n)
+    got, want = run_both(jnp.asarray(cand), model.demo_state())
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-3)
+    assert got.shape == (n, L.OUT_WIDTH)
+
+
+def test_non_tile_multiple_rejected():
+    cand = jnp.zeros((L.TILE + 1, L.CAND_WIDTH), jnp.float32)
+    with pytest.raises(AssertionError):
+        predict_pallas(cand, model.demo_state(), interpret=True)

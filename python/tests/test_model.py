@@ -1,0 +1,63 @@
+"""Layer-2 model and AOT pipeline tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import layout as L
+
+
+def test_example_args_match_layout():
+    cand, state = model.example_args()
+    assert cand.shape == (L.NUM_CANDIDATES, L.CAND_WIDTH)
+    assert state.shape == (L.STATE_WIDTH,)
+    assert cand.dtype == jnp.float32
+
+
+def test_demo_grid_is_padded_and_valid():
+    g = np.asarray(model.demo_grid())
+    assert g.shape == (L.NUM_CANDIDATES, L.CAND_WIDTH)
+    # Real rows first, zero padding after.
+    real = g[:, L.CAND_CORES] > 0
+    if real.any():
+        last_real = np.nonzero(real)[0].max()
+        assert not real[last_real + 1 :].any() if last_real + 1 < len(g) else True
+
+
+def test_lowering_produces_hlo_text():
+    text = aot.lower_predictor()
+    assert text.startswith("HloModule")
+    assert "f32[128,3]" in text
+    # The lowered module is self-contained: no TPU custom-calls (interpret
+    # mode flattens the Pallas kernel into plain HLO ops).
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+def test_lowered_module_runs_and_matches_reference():
+    """Execute the lowered HLO via jax's own CPU client — the same artifact
+    the Rust runtime loads — and compare with the oracle."""
+    lowered = jax.jit(model.predict).lower(*model.example_args())
+    compiled = lowered.compile()
+    cand, state = model.demo_grid(), model.demo_state()
+    got = np.asarray(compiled(cand, state))
+    want = np.asarray(model.predict_reference(cand, state))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-3)
+
+
+def test_tile_divides_candidates():
+    assert L.NUM_CANDIDATES % L.TILE == 0
+
+
+def test_layout_indices_are_unique():
+    idx = [
+        L.S_CAPACITY_BPS, L.S_RTT_S, L.S_AVG_WIN_BYTES, L.S_KNEE_STREAMS,
+        L.S_OVERLOAD_GAMMA, L.S_OVERLOAD_FLOOR, L.S_PARALLELISM,
+        L.S_REMAINING_BYTES, L.S_AVG_FILE_BYTES, L.S_PP_LEVEL,
+        L.S_CYCLES_PER_BYTE, L.S_CYCLES_PER_REQ, L.S_CYCLES_PER_STREAM,
+        L.S_MAX_APP_UTIL, L.S_PKG_STATIC_W, L.S_CORE_IDLE_BASE_W,
+        L.S_CORE_IDLE_PER_GHZ_W, L.S_DYN_KAPPA, L.S_V_MIN, L.S_V_MAX,
+        L.S_F_MIN_GHZ, L.S_F_MAX_GHZ, L.S_DRAM_W_PER_GBS, L.S_RESERVED,
+    ]
+    assert len(set(idx)) == L.STATE_WIDTH
+    assert max(idx) == L.STATE_WIDTH - 1

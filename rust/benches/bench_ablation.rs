@@ -1,0 +1,52 @@
+//! Design-choice ablations (DESIGN.md §6): the concurrency landscape the
+//! tuners search, feedback-band / timeout sensitivity, and the Slow Start
+//! and server-scaling ablations.
+//!
+//!     cargo bench --bench bench_ablation
+
+use greendt::benchkit::time_once;
+use greendt::config::testbeds;
+use greendt::coordinator::AlgorithmKind;
+use greendt::dataset::standard;
+use greendt::experiments::sweep;
+use greendt::sim::session::{run_session, SessionConfig};
+
+fn main() {
+    println!("== bench_ablation: design-choice ablations ==\n");
+
+    let ((), secs) = time_once("all ablation grids", || {
+        for tb in ["chameleon", "cloudlab", "didclab"] {
+            let pts = sweep::concurrency_sweep(tb, "large", 42);
+            println!("{}", sweep::sweep_table(tb, "large", &pts).to_markdown());
+            // The landscape the FSMs search: report knee and overload tail.
+            let peak = pts.iter().map(|p| p.throughput_gbps).fold(0.0, f64::max);
+            let tail = pts.last().unwrap().throughput_gbps;
+            println!(
+                "  peak {peak:.2} Gbps, 48-channel tail {tail:.2} Gbps ({:.0}% of peak)\n",
+                tail / peak * 100.0
+            );
+        }
+        println!("{}", sweep::band_sensitivity(42).to_markdown());
+        println!("{}", sweep::timeout_sensitivity(42).to_markdown());
+        println!("{}", sweep::slow_start_ablation(42).to_markdown());
+    });
+
+    // Server-scaling extension ablation.
+    let base = SessionConfig::new(
+        testbeds::cloudlab(),
+        standard::mixed_dataset(42),
+        AlgorithmKind::MaxThroughput,
+    );
+    let plain = run_session(&base.clone());
+    let scaled = run_session(&base.with_server_scaling());
+    println!("server-scaling extension (EEMT, CloudLab/mixed):");
+    println!(
+        "  server energy {} -> {} ({:+.0}%), throughput {} -> {}",
+        plain.server_energy,
+        scaled.server_energy,
+        (scaled.server_energy.as_joules() / plain.server_energy.as_joules() - 1.0) * 100.0,
+        plain.avg_throughput,
+        scaled.avg_throughput
+    );
+    println!("\nwall time: {secs:.2}s");
+}

@@ -1,0 +1,25 @@
+//! Figure 2 macro-benchmark: regenerates the full tool × dataset ×
+//! testbed grid (84 sessions) and reports wall time plus the tables.
+//!
+//!     cargo bench --bench bench_fig2
+
+use greendt::benchkit::time_once;
+use greendt::experiments::fig2;
+
+fn main() {
+    println!("== bench_fig2: full Figure 2 grid ==");
+    let (results, secs) = time_once("fig2 grid (84 sessions)", || fig2::run(42));
+    for t in &results.tables {
+        println!("{}", t.to_markdown());
+    }
+    results.headlines().print();
+    let total_sim: f64 =
+        results.outcomes.iter().map(|(_, _, _, o)| o.duration.as_secs()).sum();
+    println!(
+        "\n{} sessions, {:.0} simulated seconds in {:.2} wall seconds ({:.0}x real time)",
+        results.outcomes.len(),
+        total_sim,
+        secs,
+        total_sim / secs.max(1e-9)
+    );
+}

@@ -1,0 +1,27 @@
+//! Figure 3 macro-benchmark: the target-throughput comparison
+//! (2 testbeds × 4 targets × 2 algorithms).
+//!
+//!     cargo bench --bench bench_fig3
+
+use greendt::benchkit::time_once;
+use greendt::experiments::fig3;
+
+fn main() {
+    println!("== bench_fig3: target-throughput comparison ==");
+    let (results, secs) = time_once("fig3 grid (16 sessions)", || fig3::run(42));
+    for t in &results.tables {
+        println!("{}", t.to_markdown());
+    }
+    // Paper claim: EETT within 5–10% of target in nearly all scenarios.
+    let mut worst: f64 = 0.0;
+    for (tb, target, tool, out) in &results.outcomes {
+        if tool == "EETT" {
+            let err =
+                (out.avg_throughput.as_mbps() - target.as_mbps()).abs() / target.as_mbps();
+            println!("  EETT on {tb} @ {target}: err {:.1}%", err * 100.0);
+            worst = worst.max(err);
+        }
+    }
+    println!("worst EETT tracking error: {:.1}% (paper: 5-10%)", worst * 100.0);
+    println!("wall time: {secs:.2}s");
+}

@@ -1,0 +1,17 @@
+//! Figure 4 macro-benchmark: the frequency/core-scaling ablation
+//! (3 testbeds × 6 variants, mixed dataset, client energy).
+//!
+//!     cargo bench --bench bench_fig4
+
+use greendt::benchkit::time_once;
+use greendt::experiments::fig4;
+
+fn main() {
+    println!("== bench_fig4: load-control ablation ==");
+    let (results, secs) = time_once("fig4 grid (18 sessions)", || fig4::run(42));
+    for t in &results.tables {
+        println!("{}", t.to_markdown());
+    }
+    results.print_headlines();
+    println!("wall time: {secs:.2}s");
+}

@@ -1,0 +1,67 @@
+//! Predictor benchmarks: PJRT decision latency + the governor ablation.
+//!
+//!     make artifacts && cargo bench --bench bench_predictor
+//!
+//! (a) Latency of one candidate-grid evaluation through the compiled
+//!     JAX/Pallas artifact vs the pure-Rust oracle — the cost ME pays per
+//!     tuning timeout when running the predictive governor.
+//! (b) Ablation: identical ME sessions under threshold (Alg. 3),
+//!     predictive (PJRT), and OS-only governors.
+
+use greendt::benchkit::{bench, time_once};
+use greendt::config::experiment::TunerParams;
+use greendt::config::testbeds;
+use greendt::coordinator::AlgorithmKind;
+use greendt::cpusim::standard::broadwell_client;
+use greendt::dataset::standard;
+use greendt::predictor::{cpu_grid, demo_state_for_tests, Predictor};
+use greendt::sim::session::{run_session, SessionConfig};
+
+fn main() {
+    println!("== bench_predictor ==\n");
+
+    let grid = cpu_grid(&broadwell_client(), 8);
+    let state = demo_state_for_tests();
+
+    let oracle = Predictor::oracle();
+    bench("oracle grid eval (110 candidates)", 50, 1000, || {
+        oracle.predict(&grid, &state).unwrap()
+    });
+
+    match Predictor::from_artifact(&greendt::runtime::default_predictor_path()) {
+        Ok(pjrt) => {
+            bench("PJRT grid eval (110 candidates)", 50, 1000, || {
+                pjrt.predict(&grid, &state).unwrap()
+            });
+        }
+        Err(e) => println!("PJRT artifact unavailable ({e:#}); run `make artifacts`"),
+    }
+    println!();
+
+    // Governor ablation on an identical workload.
+    let mk = |params: TunerParams, label: &'static str| {
+        let cfg = SessionConfig::new(
+            testbeds::cloudlab(),
+            standard::mixed_dataset(42),
+            AlgorithmKind::MinEnergy,
+        )
+        .with_params(params);
+        let (out, _) = time_once(label, || run_session(&cfg));
+        out
+    };
+    let threshold = mk(TunerParams::default(), "ME session, threshold governor");
+    let predictive = mk(TunerParams::default().predictive(), "ME session, predictive governor");
+    let os_only = mk(TunerParams::default().without_scaling(), "ME session, OS governor only");
+
+    println!("\n  governor    throughput      client energy");
+    for (name, o) in
+        [("threshold", &threshold), ("predictive", &predictive), ("os-only", &os_only)]
+    {
+        println!(
+            "  {:<10}  {:>12}  {:>16}",
+            name,
+            format!("{}", o.avg_throughput),
+            format!("{}", o.client_energy)
+        );
+    }
+}

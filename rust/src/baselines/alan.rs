@@ -1,0 +1,165 @@
+//! Alan et al. [2,3] — the Figure 4 comparators.
+//!
+//! "Alan et al. investigated the energy consumption and throughput of
+//! data transfer under different concurrency and parallelism levels. They
+//! proposed a heuristic based parameter search to improve performance and
+//! energy consumption" (§VI). Their search runs *before* the transfer
+//! (probing a few candidate settings against the path model built from
+//! history) and the winner is applied statically — no runtime adaptation,
+//! no weight redistribution, and no CPU scaling.
+//!
+//! Compared with Ismail et al.: the offline search finds a reasonable
+//! channel count (it is not hard-coded), but it still carries the
+//! buffer≈BDP ⇒ parallelism=1 lineage and cannot react to background
+//! traffic or to partitions draining at different speeds.
+
+use crate::config::Testbed;
+use crate::coordinator::algorithm::{Algorithm, InitPlan};
+use crate::coordinator::load_control::{Governor, OndemandGovernor};
+use crate::cpusim::CpuState;
+use crate::dataset::{partition_files, Dataset};
+use crate::sim::{Simulation, Telemetry};
+use crate::units::SimDuration;
+
+/// Candidate concurrency levels their offline search probes.
+const SEARCH_CANDIDATES: [u32; 5] = [1, 2, 4, 8, 16];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Goal {
+    MinEnergy,
+    MaxThroughput,
+}
+
+/// Alan et al. static heuristic-search tuner.
+#[derive(Debug)]
+pub struct Alan {
+    goal: Goal,
+    chosen: u32,
+    governor: OndemandGovernor,
+}
+
+impl Alan {
+    pub fn min_energy() -> Self {
+        Alan { goal: Goal::MinEnergy, chosen: 1, governor: OndemandGovernor::default() }
+    }
+
+    pub fn max_throughput() -> Self {
+        Alan { goal: Goal::MaxThroughput, chosen: 1, governor: OndemandGovernor::default() }
+    }
+
+    /// The offline search: score each candidate channel count against the
+    /// *historical* path model — their history was collected with
+    /// BDP-sized buffers on quiet paths, so it believes ~8 channels
+    /// saturate any route (the staleness the paper exploits: the live
+    /// path's per-stream throughput is far lower).
+    fn search(&self, testbed: &Testbed) -> u32 {
+        let capacity = testbed.link.capacity.as_bits_per_sec();
+        let per_channel = capacity / 8.0;
+        let mut best = SEARCH_CANDIDATES[0];
+        let mut best_score = f64::NEG_INFINITY;
+        for &c in &SEARCH_CANDIDATES {
+            let tput = (c as f64 * per_channel).min(capacity);
+            let score = match self.goal {
+                Goal::MaxThroughput => tput,
+                // Energy model of their heuristic: transfer time dominates,
+                // but every extra channel costs CPU power; the knee of
+                // time-vs-channels is where they stop.
+                Goal::MinEnergy => tput - 0.08 * capacity * c as f64 / 2.0,
+            };
+            if score > best_score + 1e-9 {
+                best_score = score;
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+impl Algorithm for Alan {
+    fn name(&self) -> &'static str {
+        match self.goal {
+            Goal::MinEnergy => "Alan-ME",
+            Goal::MaxThroughput => "Alan-MT",
+        }
+    }
+
+    fn timeout(&self) -> SimDuration {
+        SimDuration::from_secs(5.0)
+    }
+
+    fn init(&mut self, testbed: &Testbed, dataset: &Dataset) -> InitPlan {
+        let mut partitions = partition_files(dataset, testbed.bdp());
+        for p in &mut partitions {
+            p.parallelism = 1; // buffer ≈ BDP lineage (see module docs)
+        }
+        self.chosen = self.search(testbed);
+        InitPlan::new(
+            partitions,
+            self.chosen,
+            CpuState::performance(testbed.client_cpu.clone()),
+        )
+    }
+
+    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) {
+        // Static after the offline search; only the OS governor acts.
+        self.governor.control(telemetry, &mut sim.client);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::coordinator::AlgorithmKind;
+    use crate::dataset::standard;
+    use crate::sim::session::{run_session, SessionConfig};
+
+    #[test]
+    fn search_picks_saturating_count_for_throughput() {
+        let mut a = Alan::max_throughput();
+        a.init(&testbeds::cloudlab(), &standard::medium_dataset(1));
+        // CloudLab knee ≈ 4.5 channels: the search should pick 8 (first
+        // candidate above the knee).
+        assert!(a.chosen >= 4 && a.chosen <= 8, "chose {}", a.chosen);
+    }
+
+    #[test]
+    fn energy_goal_picks_fewer_channels() {
+        let tb = testbeds::chameleon();
+        let ds = standard::medium_dataset(1);
+        let mut me = Alan::min_energy();
+        let mut mt = Alan::max_throughput();
+        me.init(&tb, &ds);
+        mt.init(&tb, &ds);
+        assert!(me.chosen <= mt.chosen, "ME {} vs MT {}", me.chosen, mt.chosen);
+    }
+
+    #[test]
+    fn runs_performance_governor() {
+        let mut a = Alan::min_energy();
+        let plan = a.init(&testbeds::didclab(), &standard::small_dataset(1));
+        assert!(plan.client_cpu.at_max_cores() && plan.client_cpu.at_max_freq());
+    }
+
+    #[test]
+    fn our_me_uses_less_energy_than_alan_me() {
+        let ds = standard::large_dataset(4);
+        let ours = run_session(&SessionConfig::new(
+            testbeds::chameleon(),
+            ds.clone(),
+            AlgorithmKind::MinEnergy,
+        ));
+        let theirs = run_session(&SessionConfig::new(
+            testbeds::chameleon(),
+            ds,
+            AlgorithmKind::AlanMinEnergy,
+        ));
+        assert!(ours.completed && theirs.completed);
+        assert!(
+            ours.client_energy.as_joules() < theirs.client_energy.as_joules(),
+            "ME {} vs Alan-ME {}",
+            ours.client_energy,
+            theirs.client_energy
+        );
+    }
+}

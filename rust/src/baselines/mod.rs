@@ -1,0 +1,17 @@
+//! Comparison systems from §V.
+//!
+//! * [`simple`] — the standard command-line tools: wget, curl, http/2.0.
+//! * [`ismail`] — the state-of-the-art comparators of Figures 2–3
+//!   (Ismail et al.): static heuristic tuning, no CPU scaling, no channel
+//!   redistribution; the target variant ramps additively from 1 channel.
+//! * [`alan`] — the Figure 4 comparators (Alan et al. [2,3]): heuristic
+//!   power-aware parameter *search* done once before the transfer, static
+//!   afterwards.
+//!
+//! All baselines run under the OS `performance` governor (all cores at max
+//! frequency): the paper's testbeds scale frequency only in the proposed
+//! algorithms.
+
+pub mod alan;
+pub mod ismail;
+pub mod simple;

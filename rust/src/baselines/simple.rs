@@ -1,0 +1,153 @@
+//! wget, curl and http/2.0 baseline models.
+//!
+//! §V-A: "Wget and curl perform very poorly due to the lack of any
+//! optimization ... http/2.0 achieves better performance thanks to
+//! multiplexing, which reduces the impact of RTTs, especially when
+//! transferring small files. However, on a wide area network, http/2.0 is
+//! not able to fully use the bandwidth due to the lack of parallelism and
+//! concurrency tuning."
+
+use crate::config::Testbed;
+use crate::coordinator::algorithm::{Algorithm, InitPlan};
+use crate::coordinator::load_control::{Governor, OndemandGovernor};
+use crate::cpusim::CpuState;
+use crate::dataset::{Dataset, Partition};
+use crate::sim::{Simulation, Telemetry};
+use crate::units::{Bytes, SimDuration};
+
+/// Effectively infinite pipelining: HTTP/2 multiplexes all requests on one
+/// connection, so per-file RTTs vanish.
+const HTTP2_MULTIPLEX_DEPTH: u32 = 10_000;
+
+/// A non-tuning, single-connection transfer tool.
+#[derive(Debug)]
+pub struct SimpleTool {
+    name: &'static str,
+    /// Pipelining depth of the single connection.
+    pp_level: u32,
+    /// Extra RTTs charged per file (fresh TCP + sequential request).
+    handshake_rtts: f64,
+    /// The OS default frequency governor (no tool controls the CPU).
+    governor: OndemandGovernor,
+}
+
+impl SimpleTool {
+    /// wget: new TCP connection per file, fully sequential requests —
+    /// 2 extra RTTs per file on top of the un-pipelined request RTT.
+    pub fn wget() -> Self {
+        SimpleTool { name: "wget", pp_level: 1, handshake_rtts: 2.0, governor: OndemandGovernor::default() }
+    }
+
+    /// curl (with keep-alive): one persistent connection, but still one
+    /// sequential request-response per file.
+    pub fn curl() -> Self {
+        SimpleTool { name: "curl", pp_level: 1, handshake_rtts: 0.0, governor: OndemandGovernor::default() }
+    }
+
+    /// http/2.0: one connection, all requests multiplexed.
+    pub fn http2() -> Self {
+        SimpleTool { name: "http2", pp_level: HTTP2_MULTIPLEX_DEPTH, handshake_rtts: 0.0, governor: OndemandGovernor::default() }
+    }
+}
+
+impl Algorithm for SimpleTool {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn timeout(&self) -> SimDuration {
+        // No tuning happens; the timeout only paces telemetry draining.
+        SimDuration::from_secs(5.0)
+    }
+
+    fn init(&mut self, testbed: &Testbed, dataset: &Dataset) -> InitPlan {
+        // One partition holding the whole dataset in order, one channel,
+        // one stream; no chunking (these tools are file-at-a-time).
+        let total: Bytes = dataset.files.iter().map(|f| f.size).sum();
+        let n = dataset.files.len().max(1);
+        let partition = Partition {
+            name: "all",
+            files: dataset.files.clone(),
+            pp_level: self.pp_level,
+            parallelism: 1,
+            chunk_size: total / n as f64,
+        };
+        InitPlan {
+            partitions: vec![partition],
+            num_channels: 1,
+            client_cpu: CpuState::performance(testbed.client_cpu.clone()),
+            handshake_rtts: self.handshake_rtts,
+        }
+    }
+
+    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) {
+        // No runtime tuning — only the OS frequency governor acts.
+        self.governor.control(telemetry, &mut sim.client);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::coordinator::AlgorithmKind;
+    use crate::dataset::standard;
+    use crate::sim::session::{run_session, SessionConfig};
+
+    fn outcome(kind: AlgorithmKind, dataset: &str) -> crate::sim::session::SessionOutcome {
+        let mut cfg = SessionConfig::new(
+            testbeds::cloudlab(),
+            standard::by_name(dataset, 4).unwrap(),
+            kind,
+        );
+        cfg.max_sim_time = SimDuration::from_secs(100_000.0);
+        run_session(&cfg)
+    }
+
+    #[test]
+    fn single_connection_only() {
+        let mut t = SimpleTool::http2();
+        let plan = t.init(&testbeds::cloudlab(), &standard::medium_dataset(1));
+        assert_eq!(plan.num_channels, 1);
+        assert_eq!(plan.partitions.len(), 1);
+        assert!(plan.client_cpu.at_max_cores() && plan.client_cpu.at_max_freq());
+    }
+
+    #[test]
+    fn http2_beats_curl_on_small_files() {
+        let h2 = outcome(AlgorithmKind::Http2, "small");
+        let curl = outcome(AlgorithmKind::Curl, "small");
+        assert!(h2.completed && curl.completed);
+        assert!(
+            h2.avg_throughput.as_mbps() > 3.0 * curl.avg_throughput.as_mbps(),
+            "http2 {} vs curl {}",
+            h2.avg_throughput,
+            curl.avg_throughput
+        );
+    }
+
+    #[test]
+    fn curl_beats_wget() {
+        let curl = outcome(AlgorithmKind::Curl, "small");
+        let wget = outcome(AlgorithmKind::Wget, "small");
+        assert!(
+            curl.avg_throughput.as_mbps() > 1.5 * wget.avg_throughput.as_mbps(),
+            "curl {} vs wget {}",
+            curl.avg_throughput,
+            wget.avg_throughput
+        );
+    }
+
+    #[test]
+    fn http2_window_limited_on_wan() {
+        // One multiplexed connection cannot exceed avg_win / RTT.
+        let h2 = outcome(AlgorithmKind::Http2, "large");
+        let cap = testbeds::cloudlab().link.channel_throughput();
+        assert!(
+            h2.avg_throughput.as_bits_per_sec() <= 1.05 * cap.as_bits_per_sec(),
+            "http2 {} vs single-stream cap {}",
+            h2.avg_throughput,
+            cap
+        );
+    }
+}

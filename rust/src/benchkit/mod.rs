@@ -1,0 +1,97 @@
+//! Measurement harness for `cargo bench` targets.
+//!
+//! The offline crate set has no criterion, so GreenDT ships a small
+//! warmup-then-measure harness with criterion-like reporting (mean ± std,
+//! p50/p99) plus a stopwatch for macro benchmarks that run whole simulated
+//! sessions.
+
+use crate::metrics::Summary;
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchReport {
+    pub fn print(&self) {
+        let s = &self.summary;
+        println!(
+            "{:<44} {:>12} ± {:>10}   p50 {:>12}  p99 {:>12}  (n={})",
+            self.name,
+            fmt_duration(s.mean),
+            fmt_duration(s.std),
+            fmt_duration(s.p50),
+            fmt_duration(s.p99),
+            s.n
+        );
+    }
+}
+
+fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Time `iters` runs of `f` after `warmup` unmeasured runs; prints and
+/// returns the report. The closure's return value is black-boxed so the
+/// optimizer cannot elide the work.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchReport {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let report = BenchReport { name: name.to_string(), summary: Summary::of(&samples) };
+    report.print();
+    report
+}
+
+/// Wall-clock a single long-running closure (macro benchmarks).
+pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{name:<44} {:>12}", fmt_duration(dt));
+    (out, dt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 2, 16, || 1 + 1);
+        assert_eq!(r.summary.n, 16);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once("quick", || 7);
+        assert_eq!(v, 7);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).contains("µs"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny argument parser: positionals, `--key value` flags, `--switch`es.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgError(pub String);
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct ParsedArgs {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: BTreeSet<String>,
+}
+
+impl ParsedArgs {
+    /// Parse `argv` (without the program name). `known_switches` take no
+    /// value; every other `--name` consumes the next token as its value.
+    pub fn parse(argv: &[String], known_switches: &[&str]) -> Result<ParsedArgs, ArgError> {
+        let mut out = ParsedArgs::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(ArgError("bare '--' is not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&name) {
+                    out.switches.insert(name.to_string());
+                } else {
+                    i += 1;
+                    let v = argv.get(i).ok_or_else(|| {
+                        ArgError(format!("flag --{name} expects a value"))
+                    })?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, ArgError> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().map_err(|_| ArgError(format!("--{name}: bad number '{v}'"))))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, ArgError> {
+        self.get(name)
+            .map(|v| v.parse::<u64>().map_err(|_| ArgError(format!("--{name}: bad integer '{v}'"))))
+            .transpose()
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.contains(switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixture() {
+        let a = ParsedArgs::parse(&argv("run --testbed didclab --trace --seed 7"), &["trace"])
+            .unwrap();
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("testbed"), Some("didclab"));
+        assert!(a.has("trace"));
+        assert_eq!(a.get_u64("seed").unwrap(), Some(7));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = ParsedArgs::parse(&argv("--target-mbps=400"), &[]).unwrap();
+        assert_eq!(a.get_f64("target-mbps").unwrap(), Some(400.0));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(ParsedArgs::parse(&argv("--testbed"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = ParsedArgs::parse(&argv("--seed x"), &[]).unwrap();
+        assert!(a.get_u64("seed").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = ParsedArgs::parse(&argv(""), &[]).unwrap();
+        assert_eq!(a.get_or("dataset", "mixed"), "mixed");
+        assert!(!a.has("trace"));
+    }
+}

@@ -1,0 +1,266 @@
+//! CLI subcommand implementations.
+
+use super::args::{ArgError, ParsedArgs};
+use crate::config::experiment::{GovernorKind, TunerParams};
+use crate::config::testbeds;
+use crate::coordinator::AlgorithmKind;
+use crate::dataset::standard;
+use crate::experiments::{fig2, fig3, fig4, validate};
+use crate::sim::session::{run_session, SessionConfig};
+use crate::units::Rate;
+use anyhow::{bail, Context, Result};
+
+pub const USAGE: &str = "\
+GreenDT — energy-efficient high-throughput data transfers
+(reproduction of Di Tacchio et al., CS.DC 2019)
+
+USAGE:
+  greendt <COMMAND> [OPTIONS]
+
+COMMANDS:
+  run        Run one transfer session
+             --config <FILE>       load session/tuner/testbed from TOML
+             --csv <FILE>          write the per-timeout timeline as CSV
+             --testbed chameleon|cloudlab|didclab   (default cloudlab)
+             --dataset small|medium|large|mixed     (default mixed)
+             --algo me|eemt|eett|wget|curl|http2|ismail-me|ismail-mt|
+                    ismail-tt|alan-me|alan-mt       (default eemt)
+             --target-mbps <N>     target for eett / ismail-tt
+             --governor threshold|predictive|os     (default threshold)
+             --seed <N>            RNG seed (default 42)
+             --trace               print the per-timeout timeline
+             --server-scaling      extension: Algorithm 3 on the server too
+  sweep      Ablations: static-concurrency sweep + tuner sensitivity
+             --testbed <T> --dataset <D>  (sweep panel; default cloudlab/large)
+  fig2       Reproduce Figure 2 (all tools × datasets × testbeds)
+  fig3       Reproduce Figure 3 (target-throughput comparison)
+  fig4       Reproduce Figure 4 (frequency/core-scaling ablation)
+             --seed <N>   --out <DIR>   (CSV output dir, default results/)
+  validate   Regenerate Tables I & II and check them against the paper
+  help       Show this message
+
+ENVIRONMENT:
+  GREENDT_PREDICTOR   path to predictor.hlo.txt (default artifacts/…)
+  GREENDT_LOG         error|warn|info|debug|trace (default warn)
+";
+
+/// Entry point used by `main` (and by CLI tests). Returns the exit code.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let args = ParsedArgs::parse(argv, &["trace", "no-csv", "server-scaling"]).map_err(|e| anyhow::anyhow!(e))?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "fig2" => cmd_fig2(&args),
+        "fig3" => cmd_fig3(&args),
+        "fig4" => cmd_fig4(&args),
+        "validate" => cmd_validate(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn parse_algo(args: &ParsedArgs) -> Result<AlgorithmKind> {
+    let id = args.get_or("algo", "eemt");
+    let target = args
+        .get_f64("target-mbps")
+        .map_err(|e: ArgError| anyhow::anyhow!(e))?
+        .map(Rate::from_mbps);
+    AlgorithmKind::parse(id, target).with_context(|| {
+        format!("unknown algorithm '{id}' (or missing --target-mbps for target algorithms)")
+    })
+}
+
+fn parse_params(args: &ParsedArgs) -> Result<TunerParams> {
+    let mut p = TunerParams::default();
+    p.governor = match args.get_or("governor", "threshold") {
+        "threshold" => GovernorKind::Threshold,
+        "predictive" => GovernorKind::Predictive,
+        "none" | "os" => GovernorKind::Os,
+        other => bail!("unknown governor '{other}'"),
+    };
+    Ok(p)
+}
+
+fn cmd_run(args: &ParsedArgs) -> Result<i32> {
+    // Either a TOML config file or individual flags (flags win over file
+    // values only for --seed; a config file fully specifies the session).
+    let (testbed, dataset, kind, params, seed) = if let Some(path) = args.get("config") {
+        let c = crate::config::load_file(path)?;
+        let seed = args.get_u64("seed").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(c.seed);
+        (c.testbed, c.dataset, c.algorithm, c.tuner, seed)
+    } else {
+        let tb_name = args.get_or("testbed", "cloudlab");
+        let ds_name = args.get_or("dataset", "mixed");
+        let seed = args.get_u64("seed").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(42);
+        let testbed = testbeds::by_name(tb_name)
+            .with_context(|| format!("unknown testbed '{tb_name}'"))?;
+        let dataset = standard::by_name(ds_name, seed)
+            .with_context(|| format!("unknown dataset '{ds_name}'"))?;
+        (testbed, dataset, parse_algo(args)?, parse_params(args)?, seed)
+    };
+
+    let mut cfg =
+        SessionConfig::new(testbed, dataset, kind).with_params(params).with_seed(seed);
+    if args.has("trace") || args.get("csv").is_some() {
+        cfg = cfg.recording();
+    }
+    if args.has("server-scaling") {
+        cfg = cfg.with_server_scaling();
+    }
+    let out = run_session(&cfg);
+
+    println!("session: {} on {} / {}", out.algorithm, out.testbed, out.dataset);
+    println!("  completed        : {}", out.completed);
+    println!("  moved            : {}", out.moved);
+    println!("  duration         : {}", out.duration);
+    println!("  avg throughput   : {}", out.avg_throughput);
+    println!("  client energy    : {}", out.client_energy);
+    println!("  client pkg energy: {}", out.client_package_energy);
+    println!("  server energy    : {}", out.server_energy);
+    println!("  peak channels    : {}", out.peak_channels);
+    println!("  final CPU        : {} cores @ {}", out.final_active_cores, out.final_freq);
+    if args.has("trace") {
+        println!("\n  t(s)    state       tput        ch  cores  freq     load   power");
+        for p in &out.timeline {
+            println!(
+                "  {:>6.1}  {:<10}  {:>10}  {:>2}  {:>5}  {:>7}  {:>5.2}  {:>6.1} W",
+                p.t_secs,
+                p.fsm,
+                format!("{}", p.throughput),
+                p.channels,
+                p.active_cores,
+                format!("{}", p.freq),
+                p.cpu_load,
+                p.power_w
+            );
+        }
+    }
+    if let Some(path) = args.get("csv") {
+        crate::metrics::timeseries::save_timeline(&out, path)?;
+        println!("\ntimeline written to {path}");
+    }
+    Ok(if out.completed { 0 } else { 1 })
+}
+
+fn cmd_sweep(args: &ParsedArgs) -> Result<i32> {
+    use crate::experiments::sweep;
+    let tb = args.get_or("testbed", "cloudlab").to_string();
+    let ds = args.get_or("dataset", "large").to_string();
+    let seed = seed_of(args)?;
+    let points = sweep::concurrency_sweep(&tb, &ds, seed);
+    println!("{}", sweep::sweep_table(&tb, &ds, &points).to_markdown());
+    println!("{}", sweep::band_sensitivity(seed).to_markdown());
+    println!("{}", sweep::timeout_sensitivity(seed).to_markdown());
+    println!("{}", sweep::slow_start_ablation(seed).to_markdown());
+    Ok(0)
+}
+
+fn out_dir(args: &ParsedArgs) -> String {
+    args.get_or("out", "results").to_string()
+}
+
+fn seed_of(args: &ParsedArgs) -> Result<u64> {
+    Ok(args.get_u64("seed").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(42))
+}
+
+fn cmd_fig2(args: &ParsedArgs) -> Result<i32> {
+    let results = fig2::run(seed_of(args)?);
+    for t in &results.tables {
+        println!("{}", t.to_markdown());
+    }
+    results.headlines().print();
+    if !args.has("no-csv") {
+        results.save_csvs(out_dir(args))?;
+        println!("\nCSV written to {}/fig2_*.csv", out_dir(args));
+    }
+    Ok(0)
+}
+
+fn cmd_fig3(args: &ParsedArgs) -> Result<i32> {
+    let results = fig3::run(seed_of(args)?);
+    for t in &results.tables {
+        println!("{}", t.to_markdown());
+    }
+    if !args.has("no-csv") {
+        results.save_csvs(out_dir(args))?;
+        println!("\nCSV written to {}/fig3_*.csv", out_dir(args));
+    }
+    Ok(0)
+}
+
+fn cmd_fig4(args: &ParsedArgs) -> Result<i32> {
+    let results = fig4::run(seed_of(args)?);
+    for t in &results.tables {
+        println!("{}", t.to_markdown());
+    }
+    results.print_headlines();
+    if !args.has("no-csv") {
+        results.save_csvs(out_dir(args))?;
+        println!("\nCSV written to {}/fig4_*.csv", out_dir(args));
+    }
+    Ok(0)
+}
+
+fn cmd_validate() -> Result<i32> {
+    println!("{}", validate::table1().to_markdown());
+    println!("{}", validate::table2(42).to_markdown());
+    let problems = validate::check(42);
+    if problems.is_empty() {
+        println!("all Table I / Table II values match the paper ✓");
+        Ok(0)
+    } else {
+        for p in &problems {
+            println!("MISMATCH: {p}");
+        }
+        Ok(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn help_exits_zero() {
+        assert_eq!(run(&argv("help")).unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_command_exits_two() {
+        assert_eq!(run(&argv("frobnicate")).unwrap(), 2);
+    }
+
+    #[test]
+    fn validate_passes() {
+        assert_eq!(run(&argv("validate")).unwrap(), 0);
+    }
+
+    #[test]
+    fn run_quick_session() {
+        let code =
+            run(&argv("run --testbed cloudlab --dataset large --algo eemt --seed 3")).unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn eett_requires_target() {
+        assert!(run(&argv("run --algo eett")).is_err());
+        assert_eq!(run(&argv("run --algo eett --target-mbps 400 --dataset large")).unwrap(), 0);
+    }
+
+    #[test]
+    fn bad_governor_rejected() {
+        assert!(run(&argv("run --governor warp")).is_err());
+    }
+}

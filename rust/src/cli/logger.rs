@@ -1,0 +1,47 @@
+//! Minimal stderr logger for the `log` facade (no env_logger offline).
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger {
+    max: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:<5}] {}: {}", record.level(), record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; level from `GREENDT_LOG`
+/// (`error|warn|info|debug|trace`, default `warn`).
+pub fn init_logger() {
+    let level = match std::env::var("GREENDT_LOG").unwrap_or_default().to_lowercase().as_str() {
+        "error" => Level::Error,
+        "info" => Level::Info,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => Level::Warn,
+    };
+    let logger = Box::leak(Box::new(StderrLogger { max: level }));
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(LevelFilter::max());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init_logger();
+        super::init_logger(); // second call must not panic
+        log::warn!("logger smoke");
+    }
+}

@@ -1,0 +1,9 @@
+//! Command-line interface (hand-rolled; the offline crate set has no clap).
+
+mod args;
+mod logger;
+mod commands;
+
+pub use args::{ArgError, ParsedArgs};
+pub use commands::{run, USAGE};
+pub use logger::init_logger;

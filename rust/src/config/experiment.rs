@@ -1,0 +1,133 @@
+//! Typed experiment configuration.
+
+use crate::coordinator::load_control::LoadThresholds;
+use crate::units::SimDuration;
+
+/// Which CPU-scaling policy a tuning algorithm runs with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GovernorKind {
+    /// No application-level scaling: the OS `ondemand` default applies
+    /// (baselines; Figure 4 "w/o scaling" ablation).
+    Os,
+    /// Algorithm 3 thresholds (the paper's policy; default).
+    Threshold,
+    /// Candidate-grid energy model compiled from JAX/Pallas, executed via
+    /// PJRT (GreenDT extension; see `predictor`).
+    Predictive,
+}
+
+/// Knobs shared by the three tuning algorithms (Algorithms 4–6).
+#[derive(Debug, Clone, Copy)]
+pub struct TunerParams {
+    /// Negative-feedback band (the paper's α).
+    pub alpha: f64,
+    /// Positive-feedback band (the paper's β).
+    pub beta: f64,
+    /// Channel step ΔCh.
+    pub delta_ch: u32,
+    /// EETT's channel step: one channel is the rate quantum it controls
+    /// in, so a finer step keeps it inside the SLA band (§IV-C).
+    pub target_delta_ch: u32,
+    /// Hard channel cap (`maxCh`).
+    pub max_ch: u32,
+    /// Tuning timeout for ME/EEMT.
+    pub timeout: SimDuration,
+    /// EETT uses a shorter timeout ("faster reaction time", §IV-C).
+    pub target_timeout: SimDuration,
+    /// Slow-start correction rounds.
+    pub slow_start_rounds: u32,
+    /// Algorithm 3 thresholds.
+    pub thresholds: LoadThresholds,
+    /// CPU-scaling policy.
+    pub governor: GovernorKind,
+}
+
+impl Default for TunerParams {
+    fn default() -> Self {
+        TunerParams {
+            alpha: 0.10,
+            beta: 0.05,
+            delta_ch: 2,
+            target_delta_ch: 1,
+            max_ch: 48,
+            timeout: SimDuration::from_secs(3.0),
+            target_timeout: SimDuration::from_secs(1.0),
+            slow_start_rounds: 2,
+            thresholds: LoadThresholds::default(),
+            governor: GovernorKind::Threshold,
+        }
+    }
+}
+
+impl TunerParams {
+    /// The Figure 4 ablation: identical tuner, application CPU scaling
+    /// removed (the OS ondemand default applies).
+    pub fn without_scaling(mut self) -> Self {
+        self.governor = GovernorKind::Os;
+        self
+    }
+
+    /// Use the PJRT-compiled predictive governor.
+    pub fn predictive(mut self) -> Self {
+        self.governor = GovernorKind::Predictive;
+        self
+    }
+}
+
+/// A fully specified experiment run (one session).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub testbed: String,
+    pub dataset: String,
+    pub algorithm: String,
+    /// Optional target rate in Mbps (EETT / Ismail-TT).
+    pub target_mbps: Option<f64>,
+    pub seed: u64,
+    /// Simulation tick.
+    pub tick: SimDuration,
+    /// Give up after this much simulated time.
+    pub max_sim_time: SimDuration,
+    pub tuner: TunerParams,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            testbed: "cloudlab".into(),
+            dataset: "medium".into(),
+            algorithm: "eemt".into(),
+            target_mbps: None,
+            seed: 42,
+            tick: SimDuration::from_millis(100.0),
+            max_sim_time: SimDuration::from_secs(14_400.0),
+            tuner: TunerParams::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let p = TunerParams::default();
+        assert!(p.alpha > 0.0 && p.beta > 0.0);
+        assert!(p.max_ch > p.delta_ch);
+        assert!(p.target_timeout < p.timeout);
+        assert_eq!(p.governor, GovernorKind::Threshold);
+    }
+
+    #[test]
+    fn without_scaling_flips_governor_only() {
+        let p = TunerParams::default().without_scaling();
+        assert_eq!(p.governor, GovernorKind::Os);
+        assert_eq!(p.alpha, TunerParams::default().alpha);
+    }
+
+    #[test]
+    fn experiment_default_has_long_deadline() {
+        let e = ExperimentConfig::default();
+        assert!(e.max_sim_time.as_secs() >= 3600.0);
+    }
+}

@@ -1,0 +1,255 @@
+//! Load experiment configuration from TOML files.
+//!
+//! `greendt run --config transfer.toml` reads everything a session needs —
+//! testbed (by name, or fully custom link/CPU parameters), dataset (by
+//! name, or a custom spec), algorithm, SLA target, tuner knobs — letting a
+//! downstream user script experiments without recompiling.
+//!
+//! ```toml
+//! # transfer.toml
+//! [session]
+//! testbed  = "cloudlab"        # or define [testbed] below
+//! dataset  = "mixed"           # or define [dataset] below
+//! algorithm = "eett"
+//! target_mbps = 400
+//! seed = 7
+//!
+//! [tuner]
+//! alpha = 0.1
+//! beta = 0.05
+//! delta_ch = 2
+//! max_ch = 48
+//! timeout_s = 3.0
+//! governor = "predictive"
+//!
+//! [testbed]                    # optional full override
+//! name = "custom"
+//! bandwidth_gbps = 2.5
+//! rtt_ms = 20
+//! avg_win_mb = 2.0
+//! bg_mean = 0.1
+//! client_cpu = "broadwell"     # haswell|broadwell|bloomfield
+//!
+//! [dataset]                    # optional synthetic spec
+//! num_files = 500
+//! avg_size_mb = 8.0
+//! std_size_mb = 2.0
+//! ```
+
+use super::experiment::{GovernorKind, TunerParams};
+use super::testbeds::{self, Testbed};
+use super::toml::Document;
+use crate::coordinator::AlgorithmKind;
+use crate::cpusim::standard as cpus;
+use crate::dataset::{generate, Dataset, DatasetSpec};
+use crate::units::{Bytes, Power, Rate, SimDuration};
+use anyhow::{bail, Context, Result};
+
+/// Everything parsed from a config file.
+#[derive(Debug, Clone)]
+pub struct LoadedConfig {
+    pub testbed: Testbed,
+    pub dataset: Dataset,
+    pub algorithm: AlgorithmKind,
+    pub tuner: TunerParams,
+    pub seed: u64,
+}
+
+/// Parse a config file's contents.
+pub fn load_str(input: &str) -> Result<LoadedConfig> {
+    let doc = Document::parse(input).map_err(|e| anyhow::anyhow!("config parse error: {e}"))?;
+
+    let seed = doc.get_int("session.seed").unwrap_or(42) as u64;
+
+    // --- testbed --------------------------------------------------------
+    let testbed = if doc.get("testbed.bandwidth_gbps").is_some() {
+        custom_testbed(&doc)?
+    } else {
+        let name = doc.get_str("session.testbed").unwrap_or("cloudlab");
+        testbeds::by_name(name).with_context(|| format!("unknown testbed '{name}'"))?
+    };
+
+    // --- dataset --------------------------------------------------------
+    let dataset = if doc.get("dataset.num_files").is_some() {
+        let spec = DatasetSpec::new(
+            "custom",
+            doc.get_int("dataset.num_files").unwrap_or(100) as usize,
+            Bytes::from_mb(doc.get_float("dataset.avg_size_mb").unwrap_or(1.0)),
+            Bytes::from_mb(doc.get_float("dataset.std_size_mb").unwrap_or(0.1)),
+        );
+        generate(&spec, seed)
+    } else {
+        let name = doc.get_str("session.dataset").unwrap_or("mixed");
+        crate::dataset::standard::by_name(name, seed)
+            .with_context(|| format!("unknown dataset '{name}'"))?
+    };
+
+    // --- algorithm ------------------------------------------------------
+    let algo_id = doc.get_str("session.algorithm").unwrap_or("eemt");
+    let target = doc.get_float("session.target_mbps").map(Rate::from_mbps);
+    let algorithm = AlgorithmKind::parse(algo_id, target).with_context(|| {
+        format!("unknown algorithm '{algo_id}' (target algorithms need session.target_mbps)")
+    })?;
+
+    // --- tuner ----------------------------------------------------------
+    let mut tuner = TunerParams::default();
+    if let Some(v) = doc.get_float("tuner.alpha") {
+        tuner.alpha = v;
+    }
+    if let Some(v) = doc.get_float("tuner.beta") {
+        tuner.beta = v;
+    }
+    if let Some(v) = doc.get_int("tuner.delta_ch") {
+        tuner.delta_ch = v.max(1) as u32;
+    }
+    if let Some(v) = doc.get_int("tuner.max_ch") {
+        tuner.max_ch = v.max(1) as u32;
+    }
+    if let Some(v) = doc.get_float("tuner.timeout_s") {
+        tuner.timeout = SimDuration::from_secs(v);
+    }
+    if let Some(v) = doc.get_float("tuner.target_timeout_s") {
+        tuner.target_timeout = SimDuration::from_secs(v);
+    }
+    if let Some(v) = doc.get_int("tuner.slow_start_rounds") {
+        tuner.slow_start_rounds = v.max(1) as u32;
+    }
+    if let Some(v) = doc.get_float("tuner.max_load") {
+        tuner.thresholds.max_load = v;
+    }
+    if let Some(v) = doc.get_float("tuner.min_load") {
+        tuner.thresholds.min_load = v;
+    }
+    if let Some(g) = doc.get_str("tuner.governor") {
+        tuner.governor = match g {
+            "threshold" => GovernorKind::Threshold,
+            "predictive" => GovernorKind::Predictive,
+            "os" | "none" => GovernorKind::Os,
+            other => bail!("unknown governor '{other}'"),
+        };
+    }
+    validate_tuner(&tuner)?;
+
+    Ok(LoadedConfig { testbed, dataset, algorithm, tuner, seed })
+}
+
+/// Load from a file path.
+pub fn load_file(path: &str) -> Result<LoadedConfig> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+    load_str(&text).with_context(|| format!("in config {path}"))
+}
+
+fn custom_testbed(doc: &Document) -> Result<Testbed> {
+    let cpu = |key: &str, default: &str| -> Result<crate::cpusim::CpuSpec> {
+        Ok(match doc.get_str(key).unwrap_or(default) {
+            "haswell" => cpus::haswell_client(),
+            "haswell-server" => cpus::haswell_server(),
+            "broadwell" => cpus::broadwell_client(),
+            "bloomfield" => cpus::bloomfield_client(),
+            other => bail!("unknown CPU '{other}'"),
+        })
+    };
+    let bw = doc.get_float("testbed.bandwidth_gbps").unwrap_or(1.0);
+    let rtt = doc.get_float("testbed.rtt_ms").unwrap_or(30.0);
+    anyhow::ensure!(bw > 0.0, "testbed.bandwidth_gbps must be positive");
+    anyhow::ensure!(rtt > 0.0, "testbed.rtt_ms must be positive");
+    Ok(Testbed {
+        name: "custom",
+        link: crate::netsim::LinkParams {
+            capacity: Rate::from_gbps(bw),
+            rtt: SimDuration::from_millis(rtt),
+            avg_win: Bytes::from_mb(doc.get_float("testbed.avg_win_mb").unwrap_or(1.0)),
+            overload_gamma: doc.get_float("testbed.overload_gamma").unwrap_or(0.02),
+            overload_floor: doc.get_float("testbed.overload_floor").unwrap_or(0.55),
+        },
+        bg_mean: doc.get_float("testbed.bg_mean").unwrap_or(0.1),
+        client_cpu: cpu("testbed.client_cpu", "haswell")?,
+        server_cpu: cpu("testbed.server_cpu", "haswell-server")?,
+        client_base_power: Power::from_watts(
+            doc.get_float("testbed.client_base_power_w").unwrap_or(45.0),
+        ),
+        wall_meter: doc.get_bool("testbed.wall_meter").unwrap_or(false),
+    })
+}
+
+fn validate_tuner(t: &TunerParams) -> Result<()> {
+    anyhow::ensure!(t.alpha > 0.0 && t.alpha < 1.0, "tuner.alpha must be in (0,1)");
+    anyhow::ensure!(t.beta > 0.0 && t.beta < 1.0, "tuner.beta must be in (0,1)");
+    anyhow::ensure!(t.delta_ch <= t.max_ch, "tuner.delta_ch must not exceed tuner.max_ch");
+    anyhow::ensure!(
+        t.thresholds.min_load < t.thresholds.max_load,
+        "tuner.min_load must be below tuner.max_load"
+    );
+    anyhow::ensure!(!t.timeout.is_zero(), "tuner.timeout_s must be positive");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_config_uses_defaults() {
+        let c = load_str("").unwrap();
+        assert_eq!(c.testbed.name, "CloudLab");
+        assert_eq!(c.dataset.name, "mixed");
+        assert_eq!(c.algorithm.id(), "eemt");
+        assert_eq!(c.seed, 42);
+    }
+
+    #[test]
+    fn full_session_config() {
+        let c = load_str(
+            "[session]\ntestbed = \"chameleon\"\ndataset = \"large\"\n\
+             algorithm = \"eett\"\ntarget_mbps = 2000\nseed = 7\n\
+             [tuner]\nalpha = 0.2\ngovernor = \"predictive\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.testbed.name, "Chameleon");
+        assert_eq!(c.dataset.name, "large");
+        assert_eq!(c.algorithm.id(), "eett");
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.tuner.alpha, 0.2);
+        assert_eq!(c.tuner.governor, GovernorKind::Predictive);
+    }
+
+    #[test]
+    fn custom_testbed_and_dataset() {
+        let c = load_str(
+            "[testbed]\nbandwidth_gbps = 2.5\nrtt_ms = 20\navg_win_mb = 2.0\n\
+             client_cpu = \"bloomfield\"\nwall_meter = true\n\
+             [dataset]\nnum_files = 50\navg_size_mb = 8.0\nstd_size_mb = 1.0\n",
+        )
+        .unwrap();
+        assert_eq!(c.testbed.name, "custom");
+        assert!((c.testbed.link.capacity.as_gbps() - 2.5).abs() < 1e-9);
+        assert!(c.testbed.wall_meter);
+        assert!(c.testbed.client_cpu.name.starts_with("Bloomfield"));
+        assert_eq!(c.dataset.num_files(), 50);
+        assert!((c.dataset.avg_file_size().as_mb() - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bad_values_are_rejected() {
+        assert!(load_str("[session]\nalgorithm = \"warp\"\n").is_err());
+        assert!(load_str("[session]\nalgorithm = \"eett\"\n").is_err(), "missing target");
+        assert!(load_str("[tuner]\nalpha = 1.5\n").is_err());
+        assert!(load_str("[tuner]\ngovernor = \"chaos\"\n").is_err());
+        assert!(load_str("[testbed]\nbandwidth_gbps = -1\n").is_err());
+        assert!(load_str("[tuner]\nmin_load = 0.9\nmax_load = 0.5\n").is_err());
+    }
+
+    #[test]
+    fn loaded_config_runs_a_session() {
+        let c = load_str(
+            "[session]\ntestbed = \"cloudlab\"\ndataset = \"large\"\nalgorithm = \"me\"\n",
+        )
+        .unwrap();
+        let cfg = crate::sim::session::SessionConfig::new(c.testbed, c.dataset, c.algorithm)
+            .with_params(c.tuner)
+            .with_seed(c.seed);
+        let out = crate::sim::session::run_session(&cfg);
+        assert!(out.completed);
+    }
+}

@@ -1,0 +1,16 @@
+//! Configuration: testbed definitions, experiment configs, and a
+//! TOML-subset parser for user-supplied config files.
+//!
+//! [`testbeds`] carries the paper's three evaluation environments
+//! (Table I) as ready-made [`Testbed`] values; [`toml`] implements the
+//! parser (the offline crate set has no serde/toml, so GreenDT ships its
+//! own); [`experiment`] maps parsed files to typed experiment configs.
+
+pub mod experiment;
+pub mod loader;
+pub mod testbeds;
+pub mod toml;
+
+pub use experiment::{ExperimentConfig, TunerParams};
+pub use loader::{load_file, load_str, LoadedConfig};
+pub use testbeds::Testbed;

@@ -1,0 +1,177 @@
+//! The paper's testbeds (Table I).
+//!
+//! | Testbed   | Bandwidth | RTT   | BDP    | CPUs |
+//! |-----------|-----------|-------|--------|------|
+//! | Chameleon | 10 Gbps   | 32 ms | 40 MB  | Haswell server + Haswell client |
+//! | CloudLab  | 1 Gbps    | 36 ms | 4.5 MB | Haswell server + Broadwell client |
+//! | DIDCLab   | 1 Gbps    | 44 ms | 5.5 MB | Haswell server + Bloomfield client |
+
+use crate::cpusim::{standard as cpus, CpuSpec};
+use crate::netsim::{BackgroundTraffic, Link, LinkParams};
+use crate::units::{Bytes, Power, Rate, SimDuration};
+
+/// A complete evaluation environment: WAN path + the two end systems.
+#[derive(Debug, Clone)]
+pub struct Testbed {
+    pub name: &'static str,
+    pub link: LinkParams,
+    /// Mean background cross-traffic fraction on the bottleneck.
+    pub bg_mean: f64,
+    pub client_cpu: CpuSpec,
+    pub server_cpu: CpuSpec,
+    /// Platform base power (wall meter minus package) on the client.
+    pub client_base_power: Power,
+    /// True if the client energy is read from a wall meter (DIDCLab's
+    /// Yokogawa WT210) rather than RAPL.
+    pub wall_meter: bool,
+}
+
+impl Testbed {
+    /// Build the live link for a session (background process + events are
+    /// per-session state).
+    pub fn make_link(&self) -> Link {
+        Link::new(self.link.clone(), BackgroundTraffic::quiet(self.bg_mean))
+    }
+
+    /// Link with a fully deterministic background (tests).
+    pub fn make_link_constant_bg(&self) -> Link {
+        Link::new(self.link.clone(), BackgroundTraffic::constant(self.bg_mean))
+    }
+
+    /// Live link with scripted background events (failure injection).
+    pub fn make_link_with_events(
+        &self,
+        events: Vec<crate::netsim::BandwidthEvent>,
+    ) -> Link {
+        Link::new(
+            self.link.clone(),
+            BackgroundTraffic::quiet(self.bg_mean).with_events(events),
+        )
+    }
+
+    pub fn bdp(&self) -> Bytes {
+        self.link.bdp()
+    }
+}
+
+/// Chameleon Cloud: UChicago → TACC, 10 Gbps, 32 ms.
+pub fn chameleon() -> Testbed {
+    Testbed {
+        name: "Chameleon",
+        link: LinkParams {
+            capacity: Rate::from_gbps(10.0),
+            rtt: SimDuration::from_millis(32.0),
+            // A single stream reaches ~750 Mbps on this path (3 MB average
+            // window over 32 ms) — large-BDP WANs are loss-limited well
+            // below the pipe, which is why concurrency tuning matters.
+            avg_win: Bytes::from_mb(3.0),
+            overload_gamma: 0.015,
+            overload_floor: 0.55,
+        },
+        bg_mean: 0.12,
+        client_cpu: cpus::haswell_client(),
+        server_cpu: cpus::haswell_server(),
+        client_base_power: Power::from_watts(45.0),
+        wall_meter: false,
+    }
+}
+
+/// CloudLab: Wisconsin → Utah, 1 Gbps, 36 ms.
+pub fn cloudlab() -> Testbed {
+    Testbed {
+        name: "CloudLab",
+        link: LinkParams {
+            capacity: Rate::from_gbps(1.0),
+            rtt: SimDuration::from_millis(36.0),
+            avg_win: Bytes::from_mb(1.0),
+            overload_gamma: 0.02,
+            overload_floor: 0.55,
+        },
+        bg_mean: 0.08,
+        client_cpu: cpus::broadwell_client(),
+        server_cpu: cpus::haswell_server(),
+        client_base_power: Power::from_watts(40.0),
+        wall_meter: false,
+    }
+}
+
+/// DIDCLab: UChicago → Buffalo, 1 Gbps, 44 ms, older client hardware,
+/// busier path (campus network).
+pub fn didclab() -> Testbed {
+    Testbed {
+        name: "DIDCLab",
+        link: LinkParams {
+            capacity: Rate::from_gbps(1.0),
+            rtt: SimDuration::from_millis(44.0),
+            avg_win: Bytes::from_mb(1.0),
+            overload_gamma: 0.03,
+            overload_floor: 0.5,
+        },
+        bg_mean: 0.15,
+        client_cpu: cpus::bloomfield_client(),
+        server_cpu: cpus::haswell_server(),
+        client_base_power: Power::from_watts(55.0),
+        wall_meter: true,
+    }
+}
+
+/// All three testbeds in paper order.
+pub fn all() -> Vec<Testbed> {
+    vec![chameleon(), cloudlab(), didclab()]
+}
+
+/// Look a testbed up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Testbed> {
+    match name.to_ascii_lowercase().as_str() {
+        "chameleon" => Some(chameleon()),
+        "cloudlab" => Some(cloudlab()),
+        "didclab" => Some(didclab()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bdps_match_table1() {
+        assert!((chameleon().bdp().as_mb() - 40.0).abs() < 0.5);
+        assert!((cloudlab().bdp().as_mb() - 4.5).abs() < 0.1);
+        assert!((didclab().bdp().as_mb() - 5.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn client_cpus_match_table1() {
+        assert!(chameleon().client_cpu.name.starts_with("Haswell"));
+        assert!(cloudlab().client_cpu.name.starts_with("Broadwell"));
+        assert!(didclab().client_cpu.name.starts_with("Bloomfield"));
+        for tb in all() {
+            assert!(tb.server_cpu.name.starts_with("Haswell"), "{}", tb.name);
+        }
+    }
+
+    #[test]
+    fn only_didclab_uses_wall_meter() {
+        assert!(didclab().wall_meter);
+        assert!(!chameleon().wall_meter);
+        assert!(!cloudlab().wall_meter);
+    }
+
+    #[test]
+    fn by_name_is_case_insensitive() {
+        assert!(by_name("Chameleon").is_some());
+        assert!(by_name("CHAMELEON").is_some());
+        assert!(by_name("didclab").is_some());
+        assert!(by_name("unknown").is_none());
+    }
+
+    #[test]
+    fn knee_stream_counts_are_plausible() {
+        // Enough streams should be needed that concurrency tuning matters.
+        for tb in all() {
+            let knee = tb.link.knee_streams();
+            assert!((2.0..20.0).contains(&knee), "{}: knee {knee}", tb.name);
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! A small TOML-subset parser.
+//!
+//! The offline crate set has no `serde`/`toml`, so GreenDT parses its own
+//! config files. Supported subset (everything the CLI's `--config` files
+//! need):
+//!
+//! * `[table]` and `[table.subtable]` headers,
+//! * `key = value` with string (`"…"`), boolean, integer, float values,
+//! * homogeneous arrays of the above (`[1, 2, 3]`),
+//! * `#` comments and blank lines.
+//!
+//! Values are exposed as a flat map from dotted path (`table.key`) to
+//! [`Value`]; helpers perform checked typed access.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`42` is a valid float value).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document: dotted-path → value.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    values: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(input: &str) -> Result<Document, ParseError> {
+        let mut values = BTreeMap::new();
+        let mut prefix = String::new();
+        for (idx, raw) in input.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno,
+                    message: "unterminated table header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() || !name.chars().all(is_key_char_or_dot) {
+                    return Err(ParseError {
+                        line: lineno,
+                        message: format!("invalid table name '{name}'"),
+                    });
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: lineno,
+                message: "expected 'key = value'".into(),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() || !key.chars().all(is_key_char) {
+                return Err(ParseError { line: lineno, message: format!("invalid key '{key}'") });
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let path =
+                if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+            if values.insert(path.clone(), value).is_some() {
+                return Err(ParseError { line: lineno, message: format!("duplicate key '{path}'") });
+            }
+        }
+        Ok(Document { values })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.values.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// Iterate all (path, value) pairs (sorted by path).
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Value)> {
+        self.values.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+fn is_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-'
+}
+
+fn is_key_char_or_dot(c: char) -> bool {
+    is_key_char(c) || c == '.'
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    let err = |m: String| ParseError { line, message: m };
+    if s.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        if inner.contains('"') {
+            return Err(err("embedded quotes are not supported".into()));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| err("unterminated array".into()))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|item| parse_value(item.trim(), line))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(format!("cannot parse value '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let doc = Document::parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(doc.get_int("a"), Some(1));
+        assert_eq!(doc.get_float("b"), Some(2.5));
+        assert_eq!(doc.get_str("c"), Some("hi"));
+        assert_eq!(doc.get_bool("d"), Some(true));
+        assert_eq!(doc.len(), 4);
+    }
+
+    #[test]
+    fn tables_prefix_keys() {
+        let doc = Document::parse("[tuner]\nalpha = 0.1\n[tuner.nested]\nx = 2\n").unwrap();
+        assert_eq!(doc.get_float("tuner.alpha"), Some(0.1));
+        assert_eq!(doc.get_int("tuner.nested.x"), Some(2));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = Document::parse("# header\n\na = 1 # trailing\nb = \"x # not comment\"\n")
+            .unwrap();
+        assert_eq!(doc.get_int("a"), Some(1));
+        assert_eq!(doc.get_str("b"), Some("x # not comment"));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = Document::parse("xs = [1, 2, 3]\nys = [0.5, 1.5]\nempty = []\n").unwrap();
+        let xs = doc.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_int(), Some(3));
+        assert_eq!(doc.get("empty").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn int_accepted_as_float() {
+        let doc = Document::parse("x = 3\n").unwrap();
+        assert_eq!(doc.get_float("x"), Some(3.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Document::parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Document::parse("a = \"unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Document::parse("[unclosed\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let e = Document::parse("a = 1\na = 2\n").unwrap_err();
+        assert!(e.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = Document::parse("a = -5\nb = 1e9\nc = -0.25\n").unwrap();
+        assert_eq!(doc.get_int("a"), Some(-5));
+        assert_eq!(doc.get_float("b"), Some(1e9));
+        assert_eq!(doc.get_float("c"), Some(-0.25));
+    }
+}

@@ -1,0 +1,233 @@
+//! The common tuning-algorithm interface and factory.
+
+use super::load_control::{Governor, OndemandGovernor, ThresholdGovernor};
+use super::sla::SlaPolicy;
+use crate::config::experiment::{GovernorKind, TunerParams};
+use crate::config::Testbed;
+use crate::cpusim::CpuState;
+use crate::dataset::{Dataset, Partition};
+use crate::sim::{Simulation, Telemetry};
+use crate::units::{Rate, SimDuration};
+
+/// Everything a session needs to start: Algorithm 1's output (or a
+/// baseline's static choice).
+#[derive(Debug, Clone)]
+pub struct InitPlan {
+    pub partitions: Vec<Partition>,
+    pub num_channels: u32,
+    pub client_cpu: CpuState,
+    /// Extra per-file round-trips applied to every partition (0 for
+    /// persistent-connection tools; wget pays handshakes per file).
+    pub handshake_rtts: f64,
+}
+
+impl InitPlan {
+    pub fn new(partitions: Vec<Partition>, num_channels: u32, client_cpu: CpuState) -> Self {
+        InitPlan { partitions, num_channels, client_cpu, handshake_rtts: 0.0 }
+    }
+}
+
+/// A runtime tuning algorithm driving one transfer session.
+pub trait Algorithm: std::fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    /// Tuning interval: the session driver calls [`Self::on_timeout`]
+    /// every `timeout()` of simulated time.
+    fn timeout(&self) -> SimDuration;
+
+    /// Choose initial parameters (Algorithm 1 for the paper's algorithms;
+    /// static heuristics for baselines).
+    fn init(&mut self, testbed: &Testbed, dataset: &Dataset) -> InitPlan;
+
+    /// One tuning step: read telemetry, adjust channels / CPU setting.
+    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation);
+
+    /// Current FSM state label (observability: traces, the `--trace` CLI
+    /// output, failure-injection assertions). Baselines have no FSM.
+    fn fsm_label(&self) -> &'static str {
+        "-"
+    }
+}
+
+/// Construct the configured governor. `mode` tells the predictive backend
+/// what the SLA optimizes for.
+pub fn make_governor(
+    kind: GovernorKind,
+    params: &TunerParams,
+    mode: crate::predictor::PredictMode,
+) -> Box<dyn Governor> {
+    match kind {
+        GovernorKind::Os => Box::new(OndemandGovernor::default()),
+        GovernorKind::Threshold => Box::new(ThresholdGovernor::new(params.thresholds)),
+        GovernorKind::Predictive => {
+            Box::new(crate::predictor::PredictiveGovernor::from_env(mode))
+        }
+    }
+}
+
+/// Every algorithm the experiment harness can run — the paper's three plus
+/// all comparison tools of §V.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AlgorithmKind {
+    /// Alg. 4 — Minimum Energy (ours).
+    MinEnergy,
+    /// Alg. 5 — Energy-Efficient Maximum Throughput (ours).
+    MaxThroughput,
+    /// Alg. 6 — Energy-Efficient Target Throughput (ours).
+    TargetThroughput(Rate),
+    /// wget: sequential, one connection, no pipelining.
+    Wget,
+    /// curl: sequential, one keep-alive connection.
+    Curl,
+    /// HTTP/2: one connection, full multiplexing.
+    Http2,
+    /// Ismail et al. Minimum Energy (static tuning).
+    IsmailMinEnergy,
+    /// Ismail et al. Maximum Throughput (static tuning).
+    IsmailMaxThroughput,
+    /// Ismail et al. Target Throughput (slow additive ramp from 1 channel).
+    IsmailTarget(Rate),
+    /// Alan et al. Minimum Energy (Figure 4 comparison).
+    AlanMinEnergy,
+    /// Alan et al. Maximum Throughput (Figure 4 comparison).
+    AlanMaxThroughput,
+}
+
+impl AlgorithmKind {
+    /// Stable identifier used in CSV output and the CLI.
+    pub fn id(&self) -> &'static str {
+        match self {
+            AlgorithmKind::MinEnergy => "me",
+            AlgorithmKind::MaxThroughput => "eemt",
+            AlgorithmKind::TargetThroughput(_) => "eett",
+            AlgorithmKind::Wget => "wget",
+            AlgorithmKind::Curl => "curl",
+            AlgorithmKind::Http2 => "http2",
+            AlgorithmKind::IsmailMinEnergy => "ismail-me",
+            AlgorithmKind::IsmailMaxThroughput => "ismail-mt",
+            AlgorithmKind::IsmailTarget(_) => "ismail-tt",
+            AlgorithmKind::AlanMinEnergy => "alan-me",
+            AlgorithmKind::AlanMaxThroughput => "alan-mt",
+        }
+    }
+
+    /// Parse a CLI identifier (target rates are provided separately).
+    pub fn parse(id: &str, target: Option<Rate>) -> Option<AlgorithmKind> {
+        Some(match id {
+            "me" => AlgorithmKind::MinEnergy,
+            "eemt" => AlgorithmKind::MaxThroughput,
+            "eett" => AlgorithmKind::TargetThroughput(target?),
+            "wget" => AlgorithmKind::Wget,
+            "curl" => AlgorithmKind::Curl,
+            "http2" => AlgorithmKind::Http2,
+            "ismail-me" => AlgorithmKind::IsmailMinEnergy,
+            "ismail-mt" => AlgorithmKind::IsmailMaxThroughput,
+            "ismail-tt" => AlgorithmKind::IsmailTarget(target?),
+            "alan-me" => AlgorithmKind::AlanMinEnergy,
+            "alan-mt" => AlgorithmKind::AlanMaxThroughput,
+            _ => return None,
+        })
+    }
+
+    /// Instantiate the algorithm.
+    pub fn build(&self, params: TunerParams) -> Box<dyn Algorithm> {
+        match *self {
+            AlgorithmKind::MinEnergy => {
+                Box::new(super::min_energy::MinEnergy::new(params))
+            }
+            AlgorithmKind::MaxThroughput => {
+                Box::new(super::max_throughput::MaxThroughput::new(params))
+            }
+            AlgorithmKind::TargetThroughput(rate) => {
+                Box::new(super::target_throughput::TargetThroughput::new(params, rate))
+            }
+            AlgorithmKind::Wget => Box::new(crate::baselines::simple::SimpleTool::wget()),
+            AlgorithmKind::Curl => Box::new(crate::baselines::simple::SimpleTool::curl()),
+            AlgorithmKind::Http2 => Box::new(crate::baselines::simple::SimpleTool::http2()),
+            AlgorithmKind::IsmailMinEnergy => {
+                Box::new(crate::baselines::ismail::Ismail::min_energy())
+            }
+            AlgorithmKind::IsmailMaxThroughput => {
+                Box::new(crate::baselines::ismail::Ismail::max_throughput())
+            }
+            AlgorithmKind::IsmailTarget(rate) => {
+                Box::new(crate::baselines::ismail::IsmailTarget::new(rate))
+            }
+            AlgorithmKind::AlanMinEnergy => {
+                Box::new(crate::baselines::alan::Alan::min_energy())
+            }
+            AlgorithmKind::AlanMaxThroughput => {
+                Box::new(crate::baselines::alan::Alan::max_throughput())
+            }
+        }
+    }
+
+    /// The SLA the algorithm serves (drives Alg. 1's CPU init).
+    pub fn sla(&self) -> SlaPolicy {
+        match *self {
+            AlgorithmKind::MinEnergy | AlgorithmKind::IsmailMinEnergy
+            | AlgorithmKind::AlanMinEnergy => SlaPolicy::Energy,
+            AlgorithmKind::TargetThroughput(r) | AlgorithmKind::IsmailTarget(r) => {
+                SlaPolicy::TargetThroughput(r)
+            }
+            _ => SlaPolicy::Throughput,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_round_trip() {
+        let target = Some(Rate::from_gbps(2.0));
+        for kind in [
+            AlgorithmKind::MinEnergy,
+            AlgorithmKind::MaxThroughput,
+            AlgorithmKind::TargetThroughput(Rate::from_gbps(2.0)),
+            AlgorithmKind::Wget,
+            AlgorithmKind::Curl,
+            AlgorithmKind::Http2,
+            AlgorithmKind::IsmailMinEnergy,
+            AlgorithmKind::IsmailMaxThroughput,
+            AlgorithmKind::IsmailTarget(Rate::from_gbps(2.0)),
+            AlgorithmKind::AlanMinEnergy,
+            AlgorithmKind::AlanMaxThroughput,
+        ] {
+            let parsed = AlgorithmKind::parse(kind.id(), target).unwrap();
+            assert_eq!(parsed.id(), kind.id());
+        }
+        assert!(AlgorithmKind::parse("bogus", None).is_none());
+        assert!(AlgorithmKind::parse("eett", None).is_none(), "target required");
+    }
+
+    #[test]
+    fn sla_mapping() {
+        assert!(AlgorithmKind::MinEnergy.sla().is_energy());
+        assert!(!AlgorithmKind::MaxThroughput.sla().is_energy());
+        assert!(AlgorithmKind::TargetThroughput(Rate::from_mbps(400.0)).sla().target().is_some());
+    }
+
+    #[test]
+    fn build_constructs_every_kind() {
+        let p = TunerParams::default();
+        for kind in [
+            AlgorithmKind::MinEnergy,
+            AlgorithmKind::MaxThroughput,
+            AlgorithmKind::TargetThroughput(Rate::from_gbps(1.0)),
+            AlgorithmKind::Wget,
+            AlgorithmKind::Curl,
+            AlgorithmKind::Http2,
+            AlgorithmKind::IsmailMinEnergy,
+            AlgorithmKind::IsmailMaxThroughput,
+            AlgorithmKind::IsmailTarget(Rate::from_gbps(1.0)),
+            AlgorithmKind::AlanMinEnergy,
+            AlgorithmKind::AlanMaxThroughput,
+        ] {
+            let a = kind.build(p);
+            assert!(!a.name().is_empty());
+            assert!(a.timeout().as_secs() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Figure 1 — the shared tuning finite state machine.
+//!
+//! All three algorithms move through the same four states. What differs is
+//! (a) how *feedback* is computed (energy estimate for ME, measured
+//! throughput vs reference for EEMT, distance to target for EETT) and
+//! (b) the action taken on each transition. This module encodes the state
+//! graph itself so its totality/legality is testable in isolation
+//! (`cargo test fsm`), plus the transition function shared by ME/EEMT.
+
+/// Tuning states (Figure 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FsmState {
+    /// Initial correction phase right after Algorithm 1.
+    SlowStart,
+    /// Normal operation: grow parameters on positive feedback.
+    Increase,
+    /// One negative feedback seen; watching whether it persists.
+    Warning,
+    /// Parameters were reduced; deciding whether that helped.
+    Recovery,
+}
+
+impl FsmState {
+    pub fn label(self) -> &'static str {
+        match self {
+            FsmState::SlowStart => "slow-start",
+            FsmState::Increase => "increase",
+            FsmState::Warning => "warning",
+            FsmState::Recovery => "recovery",
+        }
+    }
+}
+
+/// Channel feedback classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Feedback {
+    Positive,
+    Neutral,
+    Negative,
+}
+
+/// Action the algorithm should take alongside a transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Increase the channel count (`numCh += ΔCh`).
+    Grow,
+    /// Decrease the channel count (`numCh -= ΔCh`).
+    Shrink,
+    /// Restore the channel count reduced on entry to Recovery.
+    Restore,
+    /// Leave parameters unchanged.
+    Hold,
+}
+
+/// The transition function shared by ME (Alg. 4) and EEMT (Alg. 5):
+/// returns the next state and the action to apply.
+///
+/// * Increase: positive → stay, Grow; neutral → stay, Hold;
+///   negative → Warning, Hold.
+/// * Warning: positive/neutral → Increase, Hold (drop was temporary);
+///   negative → Recovery, Shrink.
+/// * Recovery: positive/neutral → Increase, Hold (reduction helped);
+///   negative → Increase, Restore (bandwidth changed; put channels back).
+/// * SlowStart is handled by [`super::slow_start`] and exits to Increase.
+pub fn step(state: FsmState, feedback: Feedback) -> (FsmState, Action) {
+    use Action::*;
+    use Feedback::*;
+    use FsmState::*;
+    match (state, feedback) {
+        (SlowStart, _) => (Increase, Hold),
+        (Increase, Positive) => (Increase, Grow),
+        (Increase, Neutral) => (Increase, Hold),
+        (Increase, Negative) => (Warning, Hold),
+        (Warning, Positive) | (Warning, Neutral) => (Increase, Hold),
+        (Warning, Negative) => (Recovery, Shrink),
+        (Recovery, Positive) | (Recovery, Neutral) => (Increase, Hold),
+        (Recovery, Negative) => (Increase, Restore),
+    }
+}
+
+/// Classify a measurement against a reference with the paper's (α, β)
+/// bands: `> (1+β)·ref` is positive, `< (1−α)·ref` is negative, otherwise
+/// neutral. Used with throughput (EEMT, EETT); ME inverts the comparison
+/// because *lower* energy is good.
+pub fn classify(value: f64, reference: f64, alpha: f64, beta: f64) -> Feedback {
+    if value > (1.0 + beta) * reference {
+        Feedback::Positive
+    } else if value < (1.0 - alpha) * reference {
+        Feedback::Negative
+    } else {
+        Feedback::Neutral
+    }
+}
+
+/// Inverted classification for energy-valued feedback (lower is better).
+pub fn classify_energy(value: f64, reference: f64, alpha: f64, beta: f64) -> Feedback {
+    if value < (1.0 - alpha) * reference {
+        Feedback::Positive
+    } else if value > (1.0 + beta) * reference {
+        Feedback::Negative
+    } else {
+        Feedback::Neutral
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Action::*;
+    use super::Feedback::*;
+    use super::FsmState::*;
+    use super::*;
+
+    const STATES: [FsmState; 4] = [SlowStart, Increase, Warning, Recovery];
+    const FEEDBACK: [Feedback; 3] = [Positive, Neutral, Negative];
+
+    #[test]
+    fn transition_function_is_total() {
+        for s in STATES {
+            for f in FEEDBACK {
+                let (next, _) = step(s, f);
+                // SlowStart is never re-entered (Figure 1 has no edge back).
+                assert_ne!(next, SlowStart, "{s:?} + {f:?} must not re-enter SlowStart");
+            }
+        }
+    }
+
+    #[test]
+    fn increase_grows_only_on_positive() {
+        assert_eq!(step(Increase, Positive), (Increase, Grow));
+        assert_eq!(step(Increase, Neutral), (Increase, Hold));
+        assert_eq!(step(Increase, Negative), (Warning, Hold));
+    }
+
+    #[test]
+    fn warning_forgives_temporary_drops() {
+        assert_eq!(step(Warning, Positive), (Increase, Hold));
+        assert_eq!(step(Warning, Neutral), (Increase, Hold));
+        assert_eq!(step(Warning, Negative), (Recovery, Shrink));
+    }
+
+    #[test]
+    fn recovery_restores_on_persistent_drop() {
+        assert_eq!(step(Recovery, Positive), (Increase, Hold));
+        assert_eq!(step(Recovery, Negative), (Increase, Restore));
+    }
+
+    #[test]
+    fn warning_needs_two_negatives_to_shrink() {
+        // One negative: Increase -> Warning (no shrink). Second: shrink.
+        let (s1, a1) = step(Increase, Negative);
+        assert_eq!((s1, a1), (Warning, Hold));
+        let (s2, a2) = step(s1, Negative);
+        assert_eq!((s2, a2), (Recovery, Shrink));
+    }
+
+    #[test]
+    fn classify_bands() {
+        assert_eq!(classify(1.2, 1.0, 0.1, 0.1), Positive);
+        assert_eq!(classify(1.05, 1.0, 0.1, 0.1), Neutral);
+        assert_eq!(classify(0.95, 1.0, 0.1, 0.1), Neutral);
+        assert_eq!(classify(0.8, 1.0, 0.1, 0.1), Negative);
+    }
+
+    #[test]
+    fn classify_energy_inverts() {
+        assert_eq!(classify_energy(0.8, 1.0, 0.1, 0.1), Positive);
+        assert_eq!(classify_energy(1.2, 1.0, 0.1, 0.1), Negative);
+        assert_eq!(classify_energy(1.0, 1.0, 0.1, 0.1), Neutral);
+    }
+}

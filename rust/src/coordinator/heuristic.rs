@@ -1,0 +1,129 @@
+//! Algorithm 1 — heuristic-based parameter initialization.
+//!
+//! Runs once before the transfer starts:
+//!
+//! 1. partition the dataset and split over-BDP files into BDP chunks
+//!    (lines 1–5, implemented in [`crate::dataset::partition_files`]);
+//! 2. per-partition pipelining `⌈BDP / avgFileSize⌉` (line 6);
+//! 3. estimate the single-channel throughput `avgWinSize / RTT` and the
+//!    channel count `⌈bandwidth / tputChannel⌉` needed to fill the pipe
+//!    (lines 8–9);
+//! 4. distribute channels across partitions by data-fraction weight
+//!    (lines 10–13);
+//! 5. pick the initial CPU setting from the SLA policy (lines 14–20).
+
+use super::sla::SlaPolicy;
+use crate::config::Testbed;
+use crate::cpusim::CpuState;
+use crate::dataset::{partition_files_capped, Dataset, Partition};
+
+/// Result of Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct HeuristicInit {
+    pub partitions: Vec<Partition>,
+    /// Total channels to open (`numChannels`, line 9).
+    pub num_channels: u32,
+    /// Initial client CPU setting (lines 14–20).
+    pub client_cpu: CpuState,
+}
+
+/// Hard cap on the initial channel estimate (keeps pathological RTT/window
+/// combinations from opening hundreds of connections before slow start
+/// has any feedback).
+pub const MAX_INITIAL_CHANNELS: u32 = 32;
+
+/// Execute Algorithm 1.
+pub fn initialize(testbed: &Testbed, dataset: &Dataset, sla: SlaPolicy) -> HeuristicInit {
+    // Lines 1–7: partition + chunk + pipelining. Parallelism per channel
+    // is capped at the stream count that fills the pipe — except for
+    // target-throughput SLAs, where one stream per channel keeps the
+    // channel count a fine-grained rate knob (a channel's worth of
+    // throughput is the control quantum EETT works in).
+    let p_cap = match sla {
+        SlaPolicy::TargetThroughput(_) => 1,
+        _ => (testbed.link.knee_streams().ceil() as u32).max(1),
+    };
+    let partitions = partition_files_capped(dataset, testbed.bdp(), p_cap);
+
+    // Line 8: theoretical throughput of one TCP channel.
+    let tput_channel = testbed.link.channel_throughput();
+    // Line 9: channels needed to fill the bandwidth — or, for a target
+    // SLA, to reach the target.
+    let goal_rate = match sla {
+        SlaPolicy::TargetThroughput(r) => r.min(testbed.link.capacity),
+        _ => testbed.link.capacity,
+    };
+    let num_channels = (goal_rate / tput_channel).ceil() as u32;
+    let num_channels = num_channels.clamp(1, MAX_INITIAL_CHANNELS);
+
+    // Lines 14–20: SLA-based CPU setting.
+    let client_cpu = match sla {
+        SlaPolicy::Energy => CpuState::min_energy_start(testbed.client_cpu.clone()),
+        // Throughput and target-throughput SLAs start with all cores at
+        // min frequency; Algorithm 3 raises frequency only under load.
+        SlaPolicy::Throughput | SlaPolicy::TargetThroughput(_) => {
+            CpuState::max_throughput_start(testbed.client_cpu.clone())
+        }
+    };
+
+    HeuristicInit { partitions, num_channels, client_cpu }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::dataset::standard;
+
+    #[test]
+    fn channel_estimate_fills_the_pipe() {
+        // Chameleon: 10 Gbps / (3 MB / 32 ms = 750 Mbps) = 14 channels.
+        let init = initialize(
+            &testbeds::chameleon(),
+            &standard::medium_dataset(1),
+            SlaPolicy::Throughput,
+        );
+        assert_eq!(init.num_channels, 14);
+
+        // CloudLab: 1 Gbps / (1 MB / 36 ms ≈ 222 Mbps) = 5 channels.
+        let init = initialize(
+            &testbeds::cloudlab(),
+            &standard::medium_dataset(1),
+            SlaPolicy::Throughput,
+        );
+        assert_eq!(init.num_channels, 5);
+    }
+
+    #[test]
+    fn energy_sla_starts_minimal() {
+        let init =
+            initialize(&testbeds::didclab(), &standard::small_dataset(1), SlaPolicy::Energy);
+        assert_eq!(init.client_cpu.active_cores(), 1);
+        assert!(init.client_cpu.at_min_freq());
+    }
+
+    #[test]
+    fn throughput_sla_starts_all_cores_min_freq() {
+        let tb = testbeds::chameleon();
+        let init = initialize(&tb, &standard::large_dataset(1), SlaPolicy::Throughput);
+        assert_eq!(init.client_cpu.active_cores(), tb.client_cpu.num_cores);
+        assert!(init.client_cpu.at_min_freq());
+    }
+
+    #[test]
+    fn partitions_cover_dataset() {
+        let ds = standard::mixed_dataset(1);
+        let init = initialize(&testbeds::cloudlab(), &ds, SlaPolicy::Throughput);
+        let n: usize = init.partitions.iter().map(|p| p.files.len()).sum();
+        assert_eq!(n, ds.num_files());
+    }
+
+    #[test]
+    fn channel_estimate_is_capped() {
+        // Degenerate testbed: tiny window + long RTT would ask for hundreds.
+        let mut tb = testbeds::chameleon();
+        tb.link.avg_win = crate::units::Bytes::from_kb(64.0);
+        let init = initialize(&tb, &standard::medium_dataset(1), SlaPolicy::Throughput);
+        assert_eq!(init.num_channels, MAX_INITIAL_CHANNELS);
+    }
+}

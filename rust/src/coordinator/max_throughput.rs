@@ -1,0 +1,213 @@
+//! Algorithm 5 — the Energy-Efficient Maximum Throughput (EEMT) algorithm.
+//!
+//! Maximizes throughput *while keeping the channel count as low as
+//! possible*: channels are added only when doing so actually raised the
+//! measured throughput past the reference by β; a reference throughput
+//! (`refTput`, the best observed in state Increase) anchors the feedback.
+
+use super::algorithm::{make_governor, Algorithm, InitPlan};
+use super::fsm::{self, Action, FsmState};
+use super::heuristic;
+use super::load_control::Governor;
+use super::sla::SlaPolicy;
+use super::slow_start::SlowStart;
+use crate::config::experiment::TunerParams;
+use crate::config::Testbed;
+use crate::dataset::Dataset;
+use crate::sim::{Simulation, Telemetry};
+use crate::units::SimDuration;
+
+#[derive(Debug)]
+pub struct MaxThroughput {
+    params: TunerParams,
+    governor: Box<dyn Governor>,
+    state: FsmState,
+    slow_start: Option<SlowStart>,
+    /// Reference throughput in bits/s (`refTput`).
+    ref_tput: f64,
+    num_ch: u32,
+}
+
+impl MaxThroughput {
+    pub fn new(params: TunerParams) -> Self {
+        MaxThroughput {
+            governor: make_governor(
+                params.governor,
+                &params,
+                crate::predictor::PredictMode::MaxThroughput,
+            ),
+            params,
+            state: FsmState::SlowStart,
+            slow_start: None,
+            ref_tput: 0.0,
+            num_ch: 1,
+        }
+    }
+
+    pub fn fsm_state(&self) -> FsmState {
+        self.state
+    }
+
+    pub fn num_channels(&self) -> u32 {
+        self.num_ch
+    }
+
+    pub fn ref_tput_bps(&self) -> f64 {
+        self.ref_tput
+    }
+
+    fn apply_channels(&mut self, sim: &mut Simulation) {
+        sim.engine.update_weights();
+        sim.engine.set_num_channels(self.num_ch);
+    }
+}
+
+impl Algorithm for MaxThroughput {
+    fn name(&self) -> &'static str {
+        "EEMT"
+    }
+
+    fn timeout(&self) -> SimDuration {
+        self.params.timeout
+    }
+
+    fn init(&mut self, testbed: &Testbed, dataset: &Dataset) -> InitPlan {
+        let init = heuristic::initialize(testbed, dataset, SlaPolicy::Throughput);
+        self.num_ch = init.num_channels;
+        self.slow_start = Some(SlowStart::new(
+            testbed.link.capacity,
+            self.params.max_ch,
+            self.params.slow_start_rounds,
+        ));
+        self.state = FsmState::SlowStart;
+        // Without the load-control module the OS owns the CPU: all cores
+        // online, ondemand frequency (Figure 4's "w/o scaling" ablation).
+        let client_cpu = if self.params.governor == crate::config::experiment::GovernorKind::Os {
+            crate::cpusim::CpuState::performance(testbed.client_cpu.clone())
+        } else {
+            init.client_cpu
+        };
+        InitPlan::new(init.partitions, init.num_channels, client_cpu)
+    }
+
+    fn fsm_label(&self) -> &'static str {
+        self.state.label()
+    }
+
+    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) {
+        // Algorithm 3 at every timeout.
+        self.governor.control(telemetry, &mut sim.client);
+
+        if let Some(ss) = &mut self.slow_start {
+            let done = ss.on_timeout(telemetry, sim);
+            self.num_ch = sim.engine.num_channels().max(1);
+            if done {
+                self.slow_start = None;
+                self.state = FsmState::Increase;
+                // "updates the reference throughput to the average
+                // throughput measured in the Slow Start phase" (§IV-B).
+                self.ref_tput = telemetry.avg_throughput.as_bits_per_sec();
+            }
+            return;
+        }
+
+        let avg = telemetry.avg_throughput.as_bits_per_sec();
+        let feedback = fsm::classify(avg, self.ref_tput, self.params.alpha, self.params.beta);
+        let (next, action) = fsm::step(self.state, feedback);
+
+        match (self.state, action) {
+            (FsmState::Increase, Action::Grow) => {
+                // Lines 5–7: grow and move the reference up.
+                self.num_ch = (self.num_ch + self.params.delta_ch).min(self.params.max_ch);
+                self.ref_tput = avg;
+            }
+            (_, Action::Shrink) => {
+                // Lines 14–16.
+                self.num_ch = self.num_ch.saturating_sub(self.params.delta_ch).max(1);
+            }
+            (_, Action::Restore) => {
+                // Lines 21–24: the drop was a bandwidth change — restore the
+                // channel count and accept the new reality as reference.
+                self.num_ch = (self.num_ch + self.params.delta_ch).min(self.params.max_ch);
+                self.ref_tput = avg;
+            }
+            _ => {}
+        }
+        self.state = next;
+        self.apply_channels(sim);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::coordinator::AlgorithmKind;
+    use crate::dataset::standard;
+    use crate::sim::session::{run_session, SessionConfig};
+
+    #[test]
+    fn init_uses_throughput_sla() {
+        let mut a = MaxThroughput::new(TunerParams::default());
+        let tb = testbeds::chameleon();
+        let plan = a.init(&tb, &standard::large_dataset(1));
+        assert_eq!(plan.client_cpu.active_cores(), tb.client_cpu.num_cores);
+        assert!(plan.client_cpu.at_min_freq());
+    }
+
+    #[test]
+    fn session_reaches_high_utilization_on_cloudlab() {
+        let cfg = SessionConfig::new(
+            testbeds::cloudlab(),
+            standard::large_dataset(2),
+            AlgorithmKind::MaxThroughput,
+        );
+        let out = run_session(&cfg);
+        assert!(out.completed);
+        assert!(
+            out.avg_throughput.as_mbps() > 600.0,
+            "EEMT should fill most of 1 Gbps, got {}",
+            out.avg_throughput
+        );
+    }
+
+    #[test]
+    fn session_beats_single_channel_on_chameleon() {
+        let cfg_eemt = SessionConfig::new(
+            testbeds::chameleon(),
+            standard::medium_dataset(2),
+            AlgorithmKind::MaxThroughput,
+        );
+        let out_eemt = run_session(&cfg_eemt);
+        let cfg_curl = SessionConfig::new(
+            testbeds::chameleon(),
+            standard::medium_dataset(2),
+            AlgorithmKind::Curl,
+        );
+        let out_curl = run_session(&cfg_curl);
+        assert!(out_eemt.completed && out_curl.completed);
+        assert!(
+            out_eemt.avg_throughput.as_gbps() > 2.0 * out_curl.avg_throughput.as_gbps(),
+            "EEMT {} vs curl {}",
+            out_eemt.avg_throughput,
+            out_curl.avg_throughput
+        );
+    }
+
+    #[test]
+    fn reference_updates_on_growth() {
+        let mut a = MaxThroughput::new(TunerParams {
+            slow_start_rounds: 1,
+            governor: crate::config::experiment::GovernorKind::Os,
+            ..Default::default()
+        });
+        a.state = FsmState::Increase;
+        a.ref_tput = 1e9;
+        a.num_ch = 4;
+        // Positive: avg well above reference.
+        let f = fsm::classify(1.3e9, a.ref_tput, a.params.alpha, a.params.beta);
+        let (s, act) = fsm::step(a.state, f);
+        assert_eq!(s, FsmState::Increase);
+        assert_eq!(act, Action::Grow);
+    }
+}

@@ -1,0 +1,28 @@
+//! The paper's contribution: SLA-driven runtime parameter tuning.
+//!
+//! * [`sla`] — the three SLA policies (§I: "user can set performance or
+//!   energy constraints based on SLAs").
+//! * [`heuristic`] — Algorithm 1: heuristic parameter initialization.
+//! * [`fsm`] — Figure 1: the shared finite state machine.
+//! * [`slow_start`] — Algorithm 2: initial channel-count correction.
+//! * [`load_control`] — Algorithm 3: threshold-based dynamic frequency and
+//!   core scaling, plus the predictive (PJRT model-driven) governor
+//!   extension.
+//! * [`min_energy`] / [`max_throughput`] / [`target_throughput`] —
+//!   Algorithms 4, 5, 6.
+//! * [`algorithm`] — the common [`algorithm::Algorithm`] trait and the
+//!   factory used by sessions, experiments and the CLI.
+
+pub mod algorithm;
+pub mod fsm;
+pub mod heuristic;
+pub mod load_control;
+pub mod max_throughput;
+pub mod min_energy;
+pub mod sla;
+pub mod slow_start;
+pub mod target_throughput;
+
+pub use algorithm::{Algorithm, AlgorithmKind, InitPlan};
+pub use fsm::{Feedback, FsmState};
+pub use sla::SlaPolicy;

@@ -1,0 +1,51 @@
+//! Service-level-agreement policies.
+
+use crate::units::Rate;
+
+/// What the user asked for (§IV): minimum energy, maximum throughput, or a
+/// specific throughput target.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SlaPolicy {
+    /// Finish the transfer with the least end-system energy.
+    Energy,
+    /// Finish as fast as possible, spending no more energy than needed.
+    Throughput,
+    /// Hold the transfer at a target rate (± the tuner's tolerance band).
+    TargetThroughput(Rate),
+}
+
+impl SlaPolicy {
+    pub fn is_energy(&self) -> bool {
+        matches!(self, SlaPolicy::Energy)
+    }
+
+    pub fn target(&self) -> Option<Rate> {
+        match self {
+            SlaPolicy::TargetThroughput(r) => Some(*r),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SlaPolicy::Energy => "energy",
+            SlaPolicy::Throughput => "throughput",
+            SlaPolicy::TargetThroughput(_) => "target-throughput",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        assert!(SlaPolicy::Energy.is_energy());
+        assert!(!SlaPolicy::Throughput.is_energy());
+        assert_eq!(SlaPolicy::Throughput.target(), None);
+        let t = SlaPolicy::TargetThroughput(Rate::from_gbps(2.0));
+        assert_eq!(t.target(), Some(Rate::from_gbps(2.0)));
+        assert_eq!(t.name(), "target-throughput");
+    }
+}

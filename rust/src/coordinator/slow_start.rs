@@ -1,0 +1,145 @@
+//! Algorithm 2 — the Slow Start correction phase.
+//!
+//! Algorithm 1's channel estimate is built from `avgWinSize / RTT`, which
+//! can be off when the path is shared or the window estimate is stale.
+//! After the first timeout(s), Slow Start measures the real throughput and
+//! rescales the channel count by `bandwidth / lastThroughput`, then
+//! redistributes channels over datasets by weight.
+
+use crate::sim::{Simulation, Telemetry};
+use crate::units::Rate;
+
+/// Slow-start controller state.
+#[derive(Debug, Clone)]
+pub struct SlowStart {
+    /// Nominal path bandwidth (the rescaling target).
+    bandwidth: Rate,
+    /// Cap on the channel count after rescaling.
+    max_channels: u32,
+    /// Correction rounds left before handing over to the main FSM.
+    rounds_left: u32,
+}
+
+impl SlowStart {
+    /// `rounds` correction timeouts (the paper uses a short phase; 2 keeps
+    /// one re-measurement after the first correction).
+    pub fn new(bandwidth: Rate, max_channels: u32, rounds: u32) -> Self {
+        SlowStart { bandwidth, max_channels, rounds_left: rounds.max(1) }
+    }
+
+    pub fn done(&self) -> bool {
+        self.rounds_left == 0
+    }
+
+    /// One Slow Start timeout (Alg. 2 body). Returns `true` if the phase
+    /// is finished after this call.
+    pub fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) -> bool {
+        if self.rounds_left == 0 {
+            return true;
+        }
+        self.rounds_left -= 1;
+
+        let measured = telemetry.avg_throughput;
+        if !measured.is_zero() {
+            // numCh *= bandwidth / lastThroughput  (line 3)
+            let factor = self.bandwidth / measured;
+            // Keep the correction sane: the first interval still contains
+            // TCP slow-start ramp, which understates steady throughput.
+            let factor = factor.clamp(0.25, 8.0);
+            let current = sim.engine.num_channels().max(1);
+            let target =
+                ((current as f64 * factor).round() as u32).clamp(1, self.max_channels);
+            // updateWeights + redistribute (lines 4–8).
+            sim.engine.update_weights();
+            sim.engine.set_num_channels(target);
+        }
+        // Early exit: measured throughput already close to the bandwidth.
+        if measured.as_bits_per_sec() >= 0.85 * self.bandwidth.as_bits_per_sec() {
+            self.rounds_left = 0;
+        }
+        self.rounds_left == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::cpusim::CpuState;
+    use crate::dataset::{partition_files, standard};
+    use crate::sim::Simulation;
+    use crate::transfer::TransferEngine;
+    use crate::units::SimDuration;
+
+    fn sim_with_channels(n: u32) -> Simulation {
+        let tb = testbeds::cloudlab();
+        let ds = standard::medium_dataset(1);
+        let parts = partition_files(&ds, tb.bdp());
+        let mut engine = TransferEngine::new(&parts, tb.link.avg_win);
+        engine.set_num_channels(n);
+        Simulation::new(
+            &tb,
+            engine,
+            CpuState::performance(tb.client_cpu.clone()),
+            SimDuration::from_millis(100.0),
+            1,
+        )
+    }
+
+    #[test]
+    fn underestimation_is_corrected_upward() {
+        let mut sim = sim_with_channels(1);
+        // Warm up for one interval with a single channel (~220 Mbps).
+        for _ in 0..30 {
+            sim.step();
+        }
+        let tel = sim.drain_telemetry();
+        let mut ss = SlowStart::new(Rate::from_gbps(1.0), 32, 2);
+        ss.on_timeout(&tel, &mut sim);
+        assert!(
+            sim.engine.num_channels() >= 3,
+            "should scale up from 1, got {}",
+            sim.engine.num_channels()
+        );
+    }
+
+    #[test]
+    fn saturated_measurement_ends_phase_early() {
+        let mut sim = sim_with_channels(6);
+        for _ in 0..60 {
+            sim.step();
+        }
+        let tel = sim.drain_telemetry();
+        let mut ss = SlowStart::new(Rate::from_gbps(1.0), 32, 3);
+        let done = ss.on_timeout(&tel, &mut sim);
+        assert!(done, "already ≥85% of bandwidth → phase over");
+    }
+
+    #[test]
+    fn rounds_are_bounded() {
+        let mut sim = sim_with_channels(2);
+        let mut ss = SlowStart::new(Rate::from_gbps(1.0), 32, 2);
+        let mut finished = false;
+        for _ in 0..5 {
+            for _ in 0..30 {
+                sim.step();
+            }
+            let tel = sim.drain_telemetry();
+            if ss.on_timeout(&tel, &mut sim) {
+                finished = true;
+                break;
+            }
+        }
+        assert!(finished, "slow start must terminate");
+    }
+
+    #[test]
+    fn zero_throughput_does_not_panic_or_change() {
+        let mut sim = sim_with_channels(4);
+        let tel = sim.drain_telemetry(); // empty interval, zero throughput
+        let before = sim.engine.num_channels();
+        let mut ss = SlowStart::new(Rate::from_gbps(1.0), 32, 1);
+        ss.on_timeout(&tel, &mut sim);
+        assert_eq!(sim.engine.num_channels(), before);
+    }
+}

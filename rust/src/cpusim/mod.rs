@@ -1,0 +1,24 @@
+//! End-system CPU substrate: cores, DVFS P-states, utilization.
+//!
+//! The paper's load-control module (Algorithm 3) observes `cpuLoad` and
+//! actuates two knobs: the number of *active cores* (offlining via CPU
+//! hotplug / cpusets) and the *core frequency* (a P-state ladder shared by
+//! all active cores, as on the paper's Haswell/Broadwell testbeds).
+//!
+//! This module models the mechanics the algorithm interacts with:
+//!
+//! * [`CpuSpec`] — a CPU model: core count, P-state ladder, and the cycle
+//!   costs of transfer work (cycles/byte for the network stack + memcpy,
+//!   cycles/request for protocol processing, polling overhead per stream);
+//! * [`CpuState`] — current (active cores, frequency) setting;
+//! * [`CpuDemand`] / [`CpuSpec::load`] — translate transfer activity into
+//!   CPU utilization, and — when the CPU saturates — back-pressure the
+//!   achievable throughput ([`CpuSpec::achievable_bytes_per_sec`]), which
+//!   is exactly why running at minimum frequency can slow a 10 Gbps
+//!   transfer and why Algorithm 3 exists.
+
+mod spec;
+mod state;
+
+pub use spec::{standard, CpuDemand, CpuSpec};
+pub use state::CpuState;

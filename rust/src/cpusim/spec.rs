@@ -1,0 +1,216 @@
+//! CPU models and the utilization ↔ throughput coupling.
+
+use crate::units::Freq;
+
+/// Transfer activity that consumes CPU cycles during one interval.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CpuDemand {
+    /// Application goodput being moved, bytes/s.
+    pub bytes_per_sec: f64,
+    /// File/chunk requests issued per second (protocol processing).
+    pub requests_per_sec: f64,
+    /// Open TCP streams (each costs polling/interrupt overhead).
+    pub open_streams: f64,
+}
+
+/// A CPU model: topology, P-state ladder, and cycle costs.
+///
+/// Cycle costs are calibrated so that moving 10 Gbps (1.25 GB/s) of TCP
+/// traffic costs roughly one fully-loaded modern core at ~3 GHz — the
+/// commonly reported "1 GHz per 1 Gbps processed, amortized" rule adjusted
+/// for large-segment offload.
+#[derive(Debug, Clone)]
+pub struct CpuSpec {
+    /// Marketing / micro-architecture name, e.g. `"Haswell (client)"`.
+    pub name: String,
+    /// Physical cores available for hotplugging.
+    pub num_cores: u32,
+    /// P-state ladder, ascending. Algorithm 3 moves one step at a time.
+    pub freq_levels: Vec<Freq>,
+    /// Cycles consumed per byte moved (syscall + memcpy + TCP stack).
+    pub cycles_per_byte: f64,
+    /// Cycles per file/chunk request (metadata, protocol round-trip work).
+    pub cycles_per_request: f64,
+    /// Cycles per open stream per second (epoll/interrupt housekeeping).
+    pub cycles_per_stream_sec: f64,
+}
+
+impl CpuSpec {
+    pub fn min_freq(&self) -> Freq {
+        *self.freq_levels.first().expect("non-empty ladder")
+    }
+
+    pub fn max_freq(&self) -> Freq {
+        *self.freq_levels.last().expect("non-empty ladder")
+    }
+
+    /// Total cycle demand per second for the given activity.
+    pub fn cycles_demanded(&self, demand: &CpuDemand) -> f64 {
+        demand.bytes_per_sec * self.cycles_per_byte
+            + demand.requests_per_sec * self.cycles_per_request
+            + demand.open_streams * self.cycles_per_stream_sec
+    }
+
+    /// Cycle capacity per second at a setting.
+    pub fn cycles_capacity(&self, active_cores: u32, freq: Freq) -> f64 {
+        active_cores as f64 * freq.as_hz()
+    }
+
+    /// CPU load (utilization) in [0, ∞): demand / capacity. Values > 1 mean
+    /// the CPU cannot keep up and throughput is being back-pressured.
+    pub fn load(&self, demand: &CpuDemand, active_cores: u32, freq: Freq) -> f64 {
+        let cap = self.cycles_capacity(active_cores, freq);
+        if cap <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.cycles_demanded(demand) / cap
+    }
+
+    /// The highest goodput (bytes/s) the CPU can sustain at a setting given
+    /// fixed request/stream overheads — the inversion of [`Self::load`] at
+    /// load = `max_utilization`.
+    ///
+    /// `max_utilization` < 1.0 reflects that transfer threads never get
+    /// 100% of the machine (kernel, interrupts, the tuning process itself).
+    pub fn achievable_bytes_per_sec(
+        &self,
+        active_cores: u32,
+        freq: Freq,
+        requests_per_sec: f64,
+        open_streams: f64,
+        max_utilization: f64,
+    ) -> f64 {
+        let cap = self.cycles_capacity(active_cores, freq) * max_utilization;
+        let overhead = requests_per_sec * self.cycles_per_request
+            + open_streams * self.cycles_per_stream_sec;
+        ((cap - overhead) / self.cycles_per_byte).max(0.0)
+    }
+}
+
+/// The paper's CPU models (Table I column "CPU architecture").
+pub mod standard {
+    use super::CpuSpec;
+    use crate::units::Freq;
+
+    fn ladder(min_ghz: f64, max_ghz: f64, step_ghz: f64) -> Vec<Freq> {
+        let mut v = Vec::new();
+        let mut f = min_ghz;
+        while f <= max_ghz + 1e-9 {
+            v.push(Freq::from_ghz((f * 10.0).round() / 10.0));
+            f += step_ghz;
+        }
+        v
+    }
+
+    /// Haswell-EP server (Chameleon + CloudLab servers, DIDCLab server):
+    /// 8 cores, 1.2–3.5 GHz.
+    pub fn haswell_server() -> CpuSpec {
+        CpuSpec {
+            name: "Haswell (server)".into(),
+            num_cores: 8,
+            freq_levels: ladder(1.2, 3.5, 0.2),
+            cycles_per_byte: 2.4,
+            cycles_per_request: 12_000.0,
+            cycles_per_stream_sec: 1.5e6,
+        }
+    }
+
+    /// Haswell client (Chameleon client): 8 cores, 1.2–3.5 GHz.
+    pub fn haswell_client() -> CpuSpec {
+        CpuSpec { name: "Haswell (client)".into(), ..haswell_server() }
+    }
+
+    /// Broadwell client (CloudLab client): 10 cores, 1.2–3.4 GHz, slightly
+    /// better per-byte efficiency than Haswell.
+    pub fn broadwell_client() -> CpuSpec {
+        CpuSpec {
+            name: "Broadwell (client)".into(),
+            num_cores: 10,
+            freq_levels: ladder(1.2, 3.4, 0.2),
+            cycles_per_byte: 2.2,
+            cycles_per_request: 11_000.0,
+            cycles_per_stream_sec: 1.4e6,
+        }
+    }
+
+    /// Bloomfield client (DIDCLab client): 4 cores, 1.6–3.2 GHz, an older
+    /// Nehalem-era part with a higher per-byte cost.
+    pub fn bloomfield_client() -> CpuSpec {
+        CpuSpec {
+            name: "Bloomfield (client)".into(),
+            num_cores: 4,
+            freq_levels: ladder(1.6, 3.2, 0.2),
+            cycles_per_byte: 3.2,
+            cycles_per_request: 16_000.0,
+            cycles_per_stream_sec: 2.0e6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::standard::*;
+    use super::*;
+
+    #[test]
+    fn ladders_are_ascending_and_bounded() {
+        for spec in [haswell_server(), broadwell_client(), bloomfield_client()] {
+            assert!(spec.freq_levels.len() >= 5, "{}", spec.name);
+            for w in spec.freq_levels.windows(2) {
+                assert!(w[0] < w[1], "{} ladder must ascend", spec.name);
+            }
+            assert_eq!(spec.min_freq(), spec.freq_levels[0]);
+            assert_eq!(spec.max_freq(), *spec.freq_levels.last().unwrap());
+        }
+    }
+
+    #[test]
+    fn ten_gbps_needs_about_one_fast_core() {
+        let spec = haswell_server();
+        let demand = CpuDemand { bytes_per_sec: 1.25e9, requests_per_sec: 10.0, open_streams: 8.0 };
+        let load = spec.load(&demand, 1, Freq::from_ghz(3.5));
+        assert!(load > 0.8 && load < 1.1, "load {load}");
+    }
+
+    #[test]
+    fn one_gbps_fits_min_freq_single_core() {
+        let spec = haswell_server();
+        let demand = CpuDemand { bytes_per_sec: 0.125e9, requests_per_sec: 20.0, open_streams: 4.0 };
+        let load = spec.load(&demand, 1, spec.min_freq());
+        assert!(load < 0.5, "load {load} — 1 Gbps should be cheap at min freq");
+    }
+
+    #[test]
+    fn load_scales_inversely_with_cores_and_freq() {
+        let spec = haswell_server();
+        let demand = CpuDemand { bytes_per_sec: 1e9, requests_per_sec: 0.0, open_streams: 0.0 };
+        let l1 = spec.load(&demand, 1, Freq::from_ghz(2.0));
+        let l2 = spec.load(&demand, 2, Freq::from_ghz(2.0));
+        let l4 = spec.load(&demand, 1, Freq::from_ghz(4.0));
+        assert!((l1 / l2 - 2.0).abs() < 1e-9);
+        assert!((l1 / l4 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn achievable_inverts_load() {
+        let spec = haswell_server();
+        let bps = spec.achievable_bytes_per_sec(2, Freq::from_ghz(2.0), 50.0, 16.0, 0.9);
+        let demand = CpuDemand { bytes_per_sec: bps, requests_per_sec: 50.0, open_streams: 16.0 };
+        let load = spec.load(&demand, 2, Freq::from_ghz(2.0));
+        assert!((load - 0.9).abs() < 1e-9, "load {load}");
+    }
+
+    #[test]
+    fn achievable_never_negative() {
+        let spec = bloomfield_client();
+        let bps = spec.achievable_bytes_per_sec(1, spec.min_freq(), 1e9, 1e6, 0.9);
+        assert_eq!(bps, 0.0);
+    }
+
+    #[test]
+    fn zero_capacity_is_infinite_load() {
+        let spec = haswell_server();
+        let demand = CpuDemand { bytes_per_sec: 1.0, ..Default::default() };
+        assert!(spec.load(&demand, 0, Freq::ZERO).is_infinite());
+    }
+}

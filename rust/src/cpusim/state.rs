@@ -1,0 +1,186 @@
+//! Mutable CPU setting: active cores + current P-state.
+
+use super::CpuSpec;
+use crate::units::Freq;
+
+/// The knobs Algorithm 3 actuates: which P-state the active cores run at
+/// and how many cores are online. Transitions move one step at a time,
+/// mirroring the paper's `increaseFrequency()` / `decreaseActiveCores()`
+/// primitives.
+#[derive(Debug, Clone)]
+pub struct CpuState {
+    spec: CpuSpec,
+    active_cores: u32,
+    freq_index: usize,
+}
+
+impl CpuState {
+    /// Start at a given setting (clamped into the valid range).
+    pub fn new(spec: CpuSpec, active_cores: u32, freq: Freq) -> Self {
+        let freq_index = spec
+            .freq_levels
+            .iter()
+            .position(|&f| f >= freq)
+            .unwrap_or(spec.freq_levels.len() - 1);
+        let active_cores = active_cores.clamp(1, spec.num_cores);
+        CpuState { spec, active_cores, freq_index }
+    }
+
+    /// SLA(Energy) initial setting (Alg. 1 lines 14-16): 1 core, min freq.
+    pub fn min_energy_start(spec: CpuSpec) -> Self {
+        CpuState { active_cores: 1, freq_index: 0, spec }
+    }
+
+    /// SLA(Throughput) initial setting (Alg. 1 lines 17-19): all cores,
+    /// min frequency (Alg. 3 ramps frequency up only if load demands it).
+    pub fn max_throughput_start(spec: CpuSpec) -> Self {
+        CpuState { active_cores: spec.num_cores, freq_index: 0, spec }
+    }
+
+    /// Baseline governor: everything on, maximum frequency (what the
+    /// comparison tools run under — no scaling).
+    pub fn performance(spec: CpuSpec) -> Self {
+        CpuState {
+            active_cores: spec.num_cores,
+            freq_index: spec.freq_levels.len() - 1,
+            spec,
+        }
+    }
+
+    pub fn spec(&self) -> &CpuSpec {
+        &self.spec
+    }
+
+    pub fn active_cores(&self) -> u32 {
+        self.active_cores
+    }
+
+    pub fn freq(&self) -> Freq {
+        self.spec.freq_levels[self.freq_index]
+    }
+
+    pub fn at_max_freq(&self) -> bool {
+        self.freq_index + 1 == self.spec.freq_levels.len()
+    }
+
+    pub fn at_min_freq(&self) -> bool {
+        self.freq_index == 0
+    }
+
+    pub fn at_max_cores(&self) -> bool {
+        self.active_cores == self.spec.num_cores
+    }
+
+    pub fn at_min_cores(&self) -> bool {
+        self.active_cores == 1
+    }
+
+    /// `increaseActiveCores()` — one core, saturating.
+    pub fn increase_cores(&mut self) -> bool {
+        if self.at_max_cores() {
+            false
+        } else {
+            self.active_cores += 1;
+            true
+        }
+    }
+
+    /// `decreaseActiveCores()` — one core, floor 1.
+    pub fn decrease_cores(&mut self) -> bool {
+        if self.at_min_cores() {
+            false
+        } else {
+            self.active_cores -= 1;
+            true
+        }
+    }
+
+    /// `increaseFrequency()` — one P-state up, saturating.
+    pub fn increase_freq(&mut self) -> bool {
+        if self.at_max_freq() {
+            false
+        } else {
+            self.freq_index += 1;
+            true
+        }
+    }
+
+    /// `decreaseFrequency()` — one P-state down, saturating.
+    pub fn decrease_freq(&mut self) -> bool {
+        if self.at_min_freq() {
+            false
+        } else {
+            self.freq_index -= 1;
+            true
+        }
+    }
+
+    /// Jump directly to a setting (used by the predictive governor, which
+    /// picks a whole operating point rather than stepping). Clamped to the
+    /// valid range; frequency snaps to the nearest ladder level at or
+    /// above the request.
+    pub fn apply(&mut self, active_cores: u32, freq: Freq) {
+        self.active_cores = active_cores.clamp(1, self.spec.num_cores);
+        self.freq_index = self
+            .spec
+            .freq_levels
+            .iter()
+            .position(|&f| f.as_hz() >= freq.as_hz() - 1.0)
+            .unwrap_or(self.spec.freq_levels.len() - 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpusim::standard::haswell_server;
+
+    #[test]
+    fn starts_clamped() {
+        let s = CpuState::new(haswell_server(), 99, Freq::from_ghz(99.0));
+        assert_eq!(s.active_cores(), 8);
+        assert!(s.at_max_freq());
+        let s = CpuState::new(haswell_server(), 0, Freq::ZERO);
+        assert_eq!(s.active_cores(), 1);
+        assert!(s.at_min_freq());
+    }
+
+    #[test]
+    fn sla_starts_match_algorithm1() {
+        let e = CpuState::min_energy_start(haswell_server());
+        assert_eq!(e.active_cores(), 1);
+        assert!(e.at_min_freq());
+        let t = CpuState::max_throughput_start(haswell_server());
+        assert_eq!(t.active_cores(), 8);
+        assert!(t.at_min_freq());
+    }
+
+    #[test]
+    fn performance_governor_is_maxed() {
+        let p = CpuState::performance(haswell_server());
+        assert!(p.at_max_cores() && p.at_max_freq());
+    }
+
+    #[test]
+    fn steps_saturate() {
+        let mut s = CpuState::min_energy_start(haswell_server());
+        assert!(!s.decrease_freq());
+        assert!(!s.decrease_cores());
+        for _ in 0..100 {
+            s.increase_freq();
+            s.increase_cores();
+        }
+        assert!(s.at_max_freq() && s.at_max_cores());
+        assert!(!s.increase_freq());
+        assert!(!s.increase_cores());
+    }
+
+    #[test]
+    fn freq_moves_one_level() {
+        let mut s = CpuState::min_energy_start(haswell_server());
+        let f0 = s.freq();
+        s.increase_freq();
+        let f1 = s.freq();
+        assert!((f1.as_ghz() - f0.as_ghz() - 0.2).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,134 @@
+//! File and dataset value types.
+
+use crate::units::Bytes;
+
+/// Opaque file identifier, unique within a [`Dataset`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FileId(pub u32);
+
+/// A single file in a dataset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FileSpec {
+    pub id: FileId,
+    pub size: Bytes,
+}
+
+impl FileSpec {
+    pub fn new(id: u32, size: Bytes) -> Self {
+        FileSpec { id: FileId(id), size }
+    }
+}
+
+/// A named collection of files — the unit a transfer session moves.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub files: Vec<FileSpec>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, files: Vec<FileSpec>) -> Self {
+        Dataset { name: name.into(), files }
+    }
+
+    pub fn num_files(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn total_size(&self) -> Bytes {
+        self.files.iter().map(|f| f.size).sum()
+    }
+
+    pub fn avg_file_size(&self) -> Bytes {
+        if self.files.is_empty() {
+            Bytes::ZERO
+        } else {
+            self.total_size() / self.files.len() as f64
+        }
+    }
+
+    /// Sample standard deviation of file sizes (bytes).
+    pub fn std_file_size(&self) -> Bytes {
+        let n = self.files.len();
+        if n < 2 {
+            return Bytes::ZERO;
+        }
+        let mean = self.avg_file_size().as_f64();
+        let var = self
+            .files
+            .iter()
+            .map(|f| {
+                let d = f.size.as_f64() - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / (n as f64 - 1.0);
+        Bytes::new(var.sqrt())
+    }
+
+    /// Concatenate two datasets (used to build the paper's *mixed* dataset),
+    /// re-assigning ids to stay unique.
+    pub fn concat(name: impl Into<String>, parts: &[&Dataset]) -> Dataset {
+        let mut files = Vec::new();
+        let mut next_id = 0u32;
+        for part in parts {
+            for f in &part.files {
+                files.push(FileSpec::new(next_id, f.size));
+                next_id += 1;
+            }
+        }
+        Dataset { name: name.into(), files }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> Dataset {
+        Dataset::new(
+            "t",
+            vec![
+                FileSpec::new(0, Bytes::from_mb(1.0)),
+                FileSpec::new(1, Bytes::from_mb(3.0)),
+                FileSpec::new(2, Bytes::from_mb(2.0)),
+            ],
+        )
+    }
+
+    #[test]
+    fn totals_and_averages() {
+        let d = ds();
+        assert_eq!(d.total_size(), Bytes::from_mb(6.0));
+        assert_eq!(d.avg_file_size(), Bytes::from_mb(2.0));
+        assert_eq!(d.num_files(), 3);
+    }
+
+    #[test]
+    fn std_dev() {
+        let d = ds();
+        // sample std of {1,3,2} MB = 1 MB
+        assert!((d.std_file_size().as_mb() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_dataset_is_safe() {
+        let d = Dataset::new("e", vec![]);
+        assert_eq!(d.avg_file_size(), Bytes::ZERO);
+        assert_eq!(d.std_file_size(), Bytes::ZERO);
+        assert_eq!(d.total_size(), Bytes::ZERO);
+    }
+
+    #[test]
+    fn concat_reassigns_unique_ids() {
+        let a = ds();
+        let b = ds();
+        let m = Dataset::concat("mixed", &[&a, &b]);
+        assert_eq!(m.num_files(), 6);
+        let mut ids: Vec<u32> = m.files.iter().map(|f| f.id.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 6, "ids must be unique after concat");
+        assert_eq!(m.total_size(), Bytes::from_mb(12.0));
+    }
+}

@@ -1,0 +1,122 @@
+//! Dataset manifests: load and save real file listings.
+//!
+//! Besides the synthetic Table II generators, GreenDT can transfer a
+//! *real* dataset described by a manifest — a CSV of `name,size_bytes`
+//! rows (what `find -printf '%p,%s\n'` produces). This is how a
+//! downstream user points the tuner at their actual corpus.
+
+use super::{Dataset, FileSpec};
+use crate::units::Bytes;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Parse manifest text (`name,size_bytes` per line; `#` comments and a
+/// `name,size` header row are tolerated).
+pub fn parse_manifest(name: &str, text: &str) -> Result<Dataset> {
+    let mut files = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (_, size_str) = line
+            .rsplit_once(',')
+            .with_context(|| format!("manifest line {}: expected 'name,size'", idx + 1))?;
+        let size_str = size_str.trim();
+        // Header detection is explicit: the first row may be `…,size`.
+        if idx == 0 && size_str.eq_ignore_ascii_case("size") {
+            continue;
+        }
+        let size: f64 = size_str
+            .parse()
+            .with_context(|| format!("manifest line {}: bad size '{size_str}'", idx + 1))?;
+        if size < 0.0 {
+            bail!("manifest line {}: negative size", idx + 1);
+        }
+        files.push(FileSpec::new(files.len() as u32, Bytes::new(size)));
+    }
+    if files.is_empty() {
+        bail!("manifest contains no files");
+    }
+    Ok(Dataset::new(name, files))
+}
+
+/// Load a manifest file.
+pub fn load_manifest(path: impl AsRef<Path>) -> Result<Dataset> {
+    let path = path.as_ref();
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("manifest");
+    parse_manifest(name, &text)
+}
+
+/// Serialize a dataset back to manifest form (round-trip and tooling).
+pub fn to_manifest(dataset: &Dataset) -> String {
+    let mut out = String::from("name,size\n");
+    for f in &dataset.files {
+        out.push_str(&format!("file{:06},{:.0}\n", f.id.0, f.size.as_f64()));
+    }
+    out
+}
+
+/// Save a dataset as a manifest file.
+pub fn save_manifest(dataset: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, to_manifest(dataset))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plain_rows() {
+        let d = parse_manifest("t", "a.bin,1000\nb.bin,2500\n").unwrap();
+        assert_eq!(d.num_files(), 2);
+        assert_eq!(d.total_size(), Bytes::new(3500.0));
+    }
+
+    #[test]
+    fn tolerates_header_and_comments() {
+        let d = parse_manifest("t", "name,size\n# comment\nx,10\n\ny,20\n").unwrap();
+        assert_eq!(d.num_files(), 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_manifest("t", "").is_err());
+        assert!(parse_manifest("t", "no-comma-here\n").is_err());
+        assert!(parse_manifest("t", "x,abc\ny,5\n").is_err());
+        assert!(parse_manifest("t", "x,-5\n").is_err());
+    }
+
+    #[test]
+    fn names_with_commas_use_last_field() {
+        let d = parse_manifest("t", "weird,name,123\n").unwrap();
+        assert_eq!(d.files[0].size, Bytes::new(123.0));
+    }
+
+    #[test]
+    fn round_trip() {
+        let d = crate::dataset::standard::large_dataset(3);
+        let text = to_manifest(&d);
+        let back = parse_manifest("large", &text).unwrap();
+        assert_eq!(back.num_files(), d.num_files());
+        assert!((back.total_size().as_f64() - d.total_size().as_f64()).abs() < d.num_files() as f64);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let d = crate::dataset::standard::medium_dataset(1);
+        let path = std::env::temp_dir().join("greendt_manifest_test/m.csv");
+        save_manifest(&d, &path).unwrap();
+        let back = load_manifest(&path).unwrap();
+        assert_eq!(back.num_files(), d.num_files());
+        assert_eq!(back.name, "m");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}

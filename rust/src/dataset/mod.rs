@@ -1,0 +1,20 @@
+//! Datasets, file partitioning, and BDP-based chunking.
+//!
+//! Mirrors §II and Algorithm 1 of the paper: a transfer moves a *dataset*
+//! (a list of files); the heuristic initializer clusters files into
+//! partitions of similar size, splits files larger than the BDP into
+//! BDP-sized chunks, and assigns per-partition pipelining levels.
+//!
+//! [`standard`] provides deterministic generators for the exact datasets of
+//! Table II (small / medium / large / mixed).
+
+mod files;
+mod generator;
+pub mod manifest;
+mod partition;
+pub mod standard;
+
+pub use files::{Dataset, FileId, FileSpec};
+pub use generator::{DatasetSpec, generate};
+pub use manifest::{load_manifest, parse_manifest, save_manifest};
+pub use partition::{partition_files, partition_files_capped, Partition, PartitionStats};

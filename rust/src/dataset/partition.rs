@@ -1,0 +1,195 @@
+//! File partitioning and BDP chunking — the data-layout half of Algorithm 1.
+//!
+//! `partitionFiles()` clusters the dataset into partitions of similar file
+//! size (relative to the network BDP), so that each partition can get its
+//! own pipelining / parallelism setting:
+//!
+//! * files larger than the BDP are split into BDP-sized chunks, to be
+//!   transferred on parallel streams ("parallelism", §II);
+//! * each partition's pipelining level is `⌈BDP / avgFileSize⌉` (Alg. 1
+//!   line 6) so that back-to-back requests keep a channel's BDP full even
+//!   when individual files are small.
+
+use super::{Dataset, FileSpec};
+use crate::units::Bytes;
+
+/// Upper bound on the per-partition pipelining level. Matches the cap used
+/// by real transfer tools (GridFTP pipelining depth); prevents the
+/// small-file partition from requesting thousands of outstanding requests.
+pub const MAX_PIPELINING: u32 = 32;
+
+/// Upper bound on per-file parallelism (streams per file).
+pub const MAX_PARALLELISM: u32 = 16;
+
+/// Size-band boundaries relative to BDP. A file of size `s` falls in band
+/// `i` where `s < BDP * BAND_EDGES[i]` first holds (last band is open).
+const BAND_EDGES: [f64; 3] = [0.1, 1.0, f64::INFINITY];
+const BAND_NAMES: [&str; 3] = ["small", "medium", "large"];
+
+/// Aggregate statistics of one partition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionStats {
+    pub num_files: usize,
+    pub total_size: Bytes,
+    pub avg_file_size: Bytes,
+}
+
+/// A cluster of similar-sized files plus its tuned per-partition
+/// parameters.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Band label (`small`/`medium`/`large` relative to BDP).
+    pub name: &'static str,
+    /// The files assigned to this partition (original, pre-chunking).
+    pub files: Vec<FileSpec>,
+    /// Pipelining level: requests in flight back-to-back per connection.
+    pub pp_level: u32,
+    /// Parallelism: chunks of a single file moved concurrently
+    /// (1 unless files exceed the BDP and are chunked).
+    pub parallelism: u32,
+    /// Chunk size used when splitting (equals BDP for the large band).
+    pub chunk_size: Bytes,
+}
+
+impl Partition {
+    pub fn stats(&self) -> PartitionStats {
+        let total: Bytes = self.files.iter().map(|f| f.size).sum();
+        let n = self.files.len();
+        PartitionStats {
+            num_files: n,
+            total_size: total,
+            avg_file_size: if n == 0 { Bytes::ZERO } else { total / n as f64 },
+        }
+    }
+
+    pub fn total_size(&self) -> Bytes {
+        self.files.iter().map(|f| f.size).sum()
+    }
+}
+
+/// Algorithm 1, lines 1–7 with the default parallelism cap.
+pub fn partition_files(dataset: &Dataset, bdp: Bytes) -> Vec<Partition> {
+    partition_files_capped(dataset, bdp, MAX_PARALLELISM)
+}
+
+/// Algorithm 1, lines 1–7: cluster files into size bands relative to the
+/// BDP, split over-BDP files into BDP chunks (expressed as a per-partition
+/// `parallelism` level), and derive the pipelining level.
+///
+/// `max_parallelism` caps the streams opened per channel — callers that
+/// know the path (the heuristic initializer) pass the number of streams
+/// that fills the pipe (`⌈BDP / avgWin⌉`); more than that per channel
+/// only adds overhead.
+///
+/// Empty bands are dropped; the result is ordered small → large.
+pub fn partition_files_capped(
+    dataset: &Dataset,
+    bdp: Bytes,
+    max_parallelism: u32,
+) -> Vec<Partition> {
+    let bdp_f = bdp.as_f64().max(1.0);
+    let mut bands: Vec<Vec<FileSpec>> = vec![Vec::new(); BAND_EDGES.len()];
+    for f in &dataset.files {
+        let ratio = f.size.as_f64() / bdp_f;
+        let band = BAND_EDGES.iter().position(|&e| ratio < e).unwrap_or(BAND_EDGES.len() - 1);
+        bands[band].push(*f);
+    }
+
+    let mut partitions = Vec::new();
+    for (i, files) in bands.into_iter().enumerate() {
+        if files.is_empty() {
+            continue;
+        }
+        let total: Bytes = files.iter().map(|f| f.size).sum();
+        let avg = total / files.len() as f64;
+
+        // Alg. 1 line 3-5: if avg file size exceeds BDP, split into BDP
+        // chunks; the number of concurrent chunks is the parallelism level.
+        let parallelism = if avg.as_f64() > bdp_f {
+            ((avg.as_f64() / bdp_f).ceil() as u32)
+                .clamp(1, max_parallelism.clamp(1, MAX_PARALLELISM))
+        } else {
+            1
+        };
+
+        // Alg. 1 line 6: ppLevel = ceil(BDP / avgFileSize).
+        let pp_level = ((bdp_f / avg.as_f64().max(1.0)).ceil() as u32).clamp(1, MAX_PIPELINING);
+
+        partitions.push(Partition {
+            name: BAND_NAMES[i],
+            files,
+            pp_level,
+            parallelism,
+            chunk_size: bdp.min(avg),
+        });
+    }
+    partitions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::standard;
+    use crate::units::{bdp, Rate, SimDuration};
+
+    fn chameleon_bdp() -> Bytes {
+        bdp(Rate::from_gbps(10.0), SimDuration::from_millis(32.0))
+    }
+
+    #[test]
+    fn partitions_cover_all_files() {
+        let d = standard::mixed_dataset(1);
+        let parts = partition_files(&d, chameleon_bdp());
+        let covered: usize = parts.iter().map(|p| p.files.len()).sum();
+        assert_eq!(covered, d.num_files(), "every file lands in exactly one partition");
+        let total: f64 = parts.iter().map(|p| p.total_size().as_f64()).sum();
+        assert!((total - d.total_size().as_f64()).abs() < 1.0);
+    }
+
+    #[test]
+    fn small_files_get_pipelining() {
+        // 102 KB files vs a 40 MB BDP -> deep pipelining, capped.
+        let d = standard::small_dataset(1);
+        let parts = partition_files(&d, chameleon_bdp());
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].pp_level, MAX_PIPELINING);
+        assert_eq!(parts[0].parallelism, 1);
+    }
+
+    #[test]
+    fn large_files_get_parallelism_on_small_bdp() {
+        // 222 MB files vs a 5.5 MB BDP (DIDCLab) -> chunked, parallelism > 1.
+        let d = standard::large_dataset(1);
+        let didclab_bdp = bdp(Rate::from_gbps(1.0), SimDuration::from_millis(44.0));
+        let parts = partition_files(&d, didclab_bdp);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].name, "large");
+        assert!(parts[0].parallelism > 1, "parallelism {}", parts[0].parallelism);
+        assert_eq!(parts[0].pp_level, 1);
+    }
+
+    #[test]
+    fn mixed_dataset_spans_bands() {
+        let d = standard::mixed_dataset(1);
+        let didclab_bdp = bdp(Rate::from_gbps(1.0), SimDuration::from_millis(44.0));
+        let parts = partition_files(&d, didclab_bdp);
+        assert!(parts.len() >= 2, "mixed should split into multiple bands, got {}", parts.len());
+    }
+
+    #[test]
+    fn empty_dataset_yields_no_partitions() {
+        let d = Dataset::new("e", vec![]);
+        assert!(partition_files(&d, chameleon_bdp()).is_empty());
+    }
+
+    #[test]
+    fn pp_level_bounds() {
+        let d = standard::mixed_dataset(2);
+        for tb_bdp in [chameleon_bdp(), Bytes::from_mb(4.5), Bytes::from_mb(5.5)] {
+            for p in partition_files(&d, tb_bdp) {
+                assert!(p.pp_level >= 1 && p.pp_level <= MAX_PIPELINING);
+                assert!(p.parallelism >= 1 && p.parallelism <= MAX_PARALLELISM);
+            }
+        }
+    }
+}

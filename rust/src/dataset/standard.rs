@@ -1,0 +1,105 @@
+//! The paper's four benchmark datasets (Table II).
+//!
+//! | Dataset | Num files | Total size | Avg file size | Std dev |
+//! |---------|-----------|------------|---------------|---------|
+//! | Small   | 20,000    | 1.94 GB    | 101.92 KB     | 29.06 KB |
+//! | Medium  | 5,000     | 11.70 GB   | 2.40 MB       | 0.27 MB |
+//! | Large   | 128       | 27.85 GB   | 222.78 MB     | 15.19 MB |
+//! | Mixed   | combination of the above three |
+
+use super::{generate, Dataset, DatasetSpec};
+use crate::units::Bytes;
+
+/// Table II "Small files": 20,000 files averaging 101.92 KB.
+pub fn small_spec() -> DatasetSpec {
+    DatasetSpec::new("small", 20_000, Bytes::from_kb(101.92), Bytes::from_kb(29.06))
+}
+
+/// Table II "Medium files": 5,000 files averaging 2.40 MB.
+pub fn medium_spec() -> DatasetSpec {
+    DatasetSpec::new("medium", 5_000, Bytes::from_mb(2.40), Bytes::from_mb(0.27))
+}
+
+/// Table II "Large files": 128 files averaging 222.78 MB.
+pub fn large_spec() -> DatasetSpec {
+    DatasetSpec::new("large", 128, Bytes::from_mb(222.78), Bytes::from_mb(15.19))
+}
+
+pub fn small_dataset(seed: u64) -> Dataset {
+    generate(&small_spec(), seed)
+}
+
+pub fn medium_dataset(seed: u64) -> Dataset {
+    generate(&medium_spec(), seed)
+}
+
+pub fn large_dataset(seed: u64) -> Dataset {
+    generate(&large_spec(), seed)
+}
+
+/// The paper's *mixed* dataset: the three Table II datasets combined.
+pub fn mixed_dataset(seed: u64) -> Dataset {
+    let s = small_dataset(seed);
+    let m = medium_dataset(seed);
+    let l = large_dataset(seed);
+    Dataset::concat("mixed", &[&s, &m, &l])
+}
+
+/// Look a standard dataset up by name (`small|medium|large|mixed`).
+pub fn by_name(name: &str, seed: u64) -> Option<Dataset> {
+    match name {
+        "small" => Some(small_dataset(seed)),
+        "medium" => Some(medium_dataset(seed)),
+        "large" => Some(large_dataset(seed)),
+        "mixed" => Some(mixed_dataset(seed)),
+        _ => None,
+    }
+}
+
+/// All four standard dataset names in paper order.
+pub const STANDARD_NAMES: [&str; 4] = ["small", "medium", "large", "mixed"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_matches_table2() {
+        let d = small_dataset(42);
+        assert_eq!(d.num_files(), 20_000);
+        assert!((d.total_size().as_gb() - 1.94).abs() < 0.12, "total {}", d.total_size());
+        assert!((d.avg_file_size().as_kb() - 101.92).abs() < 1.0);
+    }
+
+    #[test]
+    fn medium_matches_table2() {
+        let d = medium_dataset(42);
+        assert_eq!(d.num_files(), 5_000);
+        assert!((d.total_size().as_gb() - 11.70).abs() < 0.5, "total {}", d.total_size());
+    }
+
+    #[test]
+    fn large_matches_table2() {
+        let d = large_dataset(42);
+        assert_eq!(d.num_files(), 128);
+        assert!((d.total_size().as_gb() - 27.85).abs() < 1.0, "total {}", d.total_size());
+    }
+
+    #[test]
+    fn mixed_is_the_union() {
+        let d = mixed_dataset(42);
+        assert_eq!(d.num_files(), 20_000 + 5_000 + 128);
+        let expect = small_dataset(42).total_size()
+            + medium_dataset(42).total_size()
+            + large_dataset(42).total_size();
+        assert!((d.total_size().as_f64() - expect.as_f64()).abs() < 1.0);
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for name in STANDARD_NAMES {
+            assert!(by_name(name, 1).is_some(), "{name}");
+        }
+        assert!(by_name("nope", 1).is_none());
+    }
+}

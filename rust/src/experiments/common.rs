@@ -1,0 +1,98 @@
+//! Shared experiment plumbing: one "cell" = one session of one algorithm
+//! on one testbed × dataset.
+
+use crate::config::experiment::TunerParams;
+use crate::config::testbeds;
+use crate::coordinator::AlgorithmKind;
+use crate::dataset::standard;
+use crate::sim::session::{run_session, SessionConfig, SessionOutcome};
+
+/// One experiment cell.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub testbed: &'static str,
+    pub dataset: &'static str,
+    pub kind: AlgorithmKind,
+    pub params: TunerParams,
+    pub seed: u64,
+}
+
+impl Cell {
+    pub fn new(testbed: &'static str, dataset: &'static str, kind: AlgorithmKind) -> Cell {
+        Cell { testbed, dataset, kind, params: TunerParams::default(), seed: 42 }
+    }
+
+    pub fn with_params(mut self, params: TunerParams) -> Cell {
+        self.params = params;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Cell {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Run one cell to completion.
+pub fn run_cell(cell: &Cell) -> SessionOutcome {
+    let testbed = testbeds::by_name(cell.testbed).expect("unknown testbed");
+    let dataset = standard::by_name(cell.dataset, cell.seed).expect("unknown dataset");
+    let cfg = SessionConfig::new(testbed, dataset, cell.kind)
+        .with_params(cell.params)
+        .with_seed(cell.seed);
+    run_session(&cfg)
+}
+
+/// Run cells across worker threads (cells are independent sessions).
+/// Results come back in input order.
+pub fn run_cells(cells: &[Cell]) -> Vec<SessionOutcome> {
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut results: Vec<Option<SessionOutcome>> = (0..cells.len()).map(|_| None).collect();
+    let slots: Vec<std::sync::Mutex<&mut Option<SessionOutcome>>> =
+        results.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(cells.len().max(1)) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let out = run_cell(&cells[i]);
+                **slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("cell completed")).collect()
+}
+
+/// Format helpers shared by the figure harnesses.
+pub fn fmt_tput(out: &SessionOutcome) -> String {
+    if out.avg_throughput.as_gbps() >= 1.0 {
+        format!("{:.2} Gbps", out.avg_throughput.as_gbps())
+    } else {
+        format!("{:.0} Mbps", out.avg_throughput.as_mbps())
+    }
+}
+
+pub fn fmt_energy_kj(joules: f64) -> String {
+    format!("{:.2} kJ", joules / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_cells_preserves_order_and_completes() {
+        let cells = vec![
+            Cell::new("cloudlab", "large", AlgorithmKind::MaxThroughput),
+            Cell::new("didclab", "large", AlgorithmKind::MinEnergy),
+        ];
+        let outs = run_cells(&cells);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].testbed, "CloudLab");
+        assert_eq!(outs[1].testbed, "DIDCLab");
+        assert!(outs.iter().all(|o| o.completed));
+    }
+}

@@ -1,0 +1,149 @@
+//! Figure 2 — throughput and energy consumption of all transfer tools
+//! across the three testbeds and four datasets.
+//!
+//! Paper shapes this harness must reproduce (§V-A):
+//! * wget/curl far behind everything; http/2.0 better on small files but
+//!   window-limited on the WAN;
+//! * Ismail et al. competitive on the 1 Gbps testbeds but weak on the
+//!   large-BDP testbed (static tuning + parallelism=1), especially on the
+//!   large and mixed datasets;
+//! * ME cuts energy up to ~48 % vs Ismail-ME (mixed), EEMT gains up to
+//!   ~80 % throughput vs Ismail-MT (mixed) at up to ~43 % less energy.
+
+use super::common::{fmt_energy_kj, fmt_tput, run_cells, Cell};
+use crate::coordinator::AlgorithmKind;
+use crate::metrics::Table;
+use crate::sim::session::SessionOutcome;
+use std::path::Path;
+
+pub const TESTBEDS: [&str; 3] = ["chameleon", "cloudlab", "didclab"];
+pub const DATASETS: [&str; 4] = ["small", "medium", "large", "mixed"];
+
+pub fn tools() -> Vec<(&'static str, AlgorithmKind)> {
+    vec![
+        ("wget", AlgorithmKind::Wget),
+        ("curl", AlgorithmKind::Curl),
+        ("http2", AlgorithmKind::Http2),
+        ("Ismail-ME", AlgorithmKind::IsmailMinEnergy),
+        ("Ismail-MT", AlgorithmKind::IsmailMaxThroughput),
+        ("ME", AlgorithmKind::MinEnergy),
+        ("EEMT", AlgorithmKind::MaxThroughput),
+    ]
+}
+
+/// All outcomes of the Figure 2 grid, in (testbed, dataset, tool) order.
+pub struct Fig2Results {
+    pub outcomes: Vec<(String, String, String, SessionOutcome)>,
+    pub tables: Vec<Table>,
+}
+
+/// Run the whole grid and build one throughput + one energy table per
+/// testbed (the six panels of Figure 2).
+pub fn run(seed: u64) -> Fig2Results {
+    let tool_list = tools();
+    let mut cells = Vec::new();
+    for tb in TESTBEDS {
+        for ds in DATASETS {
+            for (_, kind) in &tool_list {
+                cells.push(Cell::new(tb, ds, *kind).with_seed(seed));
+            }
+        }
+    }
+    let outs = run_cells(&cells);
+
+    let mut outcomes = Vec::new();
+    let mut tables = Vec::new();
+    let mut idx = 0;
+    for tb in TESTBEDS {
+        let mut t_tput = Table::new(
+            format!("Figure 2 — average throughput on {tb}"),
+            &[&["dataset"], &tool_list.iter().map(|(n, _)| *n).collect::<Vec<_>>()[..]]
+                .concat(),
+        );
+        let mut t_energy = Table::new(
+            format!("Figure 2 — client energy on {tb}"),
+            &[&["dataset"], &tool_list.iter().map(|(n, _)| *n).collect::<Vec<_>>()[..]]
+                .concat(),
+        );
+        for ds in DATASETS {
+            let mut row_t = vec![ds.to_string()];
+            let mut row_e = vec![ds.to_string()];
+            for (name, _) in &tool_list {
+                let out = &outs[idx];
+                idx += 1;
+                row_t.push(fmt_tput(out));
+                row_e.push(fmt_energy_kj(out.client_energy.as_joules()));
+                outcomes.push((tb.to_string(), ds.to_string(), name.to_string(), out.clone()));
+            }
+            t_tput.push_row(row_t);
+            t_energy.push_row(row_e);
+        }
+        tables.push(t_tput);
+        tables.push(t_energy);
+    }
+    Fig2Results { outcomes, tables }
+}
+
+impl Fig2Results {
+    pub fn outcome(&self, testbed: &str, dataset: &str, tool: &str) -> &SessionOutcome {
+        &self
+            .outcomes
+            .iter()
+            .find(|(tb, ds, t, _)| tb == testbed && ds == dataset && t == tool)
+            .expect("cell present")
+            .3
+    }
+
+    /// The paper's two headline comparisons (§V-A), as ratios.
+    pub fn headlines(&self) -> Fig2Headlines {
+        let me = self.outcome("chameleon", "mixed", "ME");
+        let ismail_me = self.outcome("chameleon", "mixed", "Ismail-ME");
+        let eemt = self.outcome("chameleon", "mixed", "EEMT");
+        let ismail_mt = self.outcome("chameleon", "mixed", "Ismail-MT");
+        Fig2Headlines {
+            me_energy_reduction: 1.0
+                - me.client_energy.as_joules() / ismail_me.client_energy.as_joules(),
+            eemt_tput_gain: eemt.avg_throughput.as_bits_per_sec()
+                / ismail_mt.avg_throughput.as_bits_per_sec()
+                - 1.0,
+            eemt_energy_reduction: 1.0
+                - eemt.client_energy.as_joules() / ismail_mt.client_energy.as_joules(),
+        }
+    }
+
+    pub fn save_csvs(&self, dir: impl AsRef<Path>) -> anyhow::Result<()> {
+        let dir = dir.as_ref();
+        for (i, t) in self.tables.iter().enumerate() {
+            let kind = if i % 2 == 0 { "throughput" } else { "energy" };
+            let tb = TESTBEDS[i / 2];
+            t.save_csv(dir.join(format!("fig2_{tb}_{kind}.csv")))?;
+        }
+        Ok(())
+    }
+}
+
+/// §V-A headline ratios.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig2Headlines {
+    /// ME energy reduction vs Ismail-ME on Chameleon/mixed (paper: up to 0.48).
+    pub me_energy_reduction: f64,
+    /// EEMT throughput gain vs Ismail-MT on Chameleon/mixed (paper: up to 0.80).
+    pub eemt_tput_gain: f64,
+    /// EEMT energy reduction vs Ismail-MT (paper: up to 0.43).
+    pub eemt_energy_reduction: f64,
+}
+
+impl Fig2Headlines {
+    pub fn print(&self) {
+        println!("Fig2 headlines (Chameleon, mixed dataset):");
+        println!(
+            "  ME   vs Ismail-ME : {:+.0}% energy (paper: -48%)",
+            -self.me_energy_reduction * 100.0
+        );
+        println!(
+            "  EEMT vs Ismail-MT : {:+.0}% throughput (paper: +80%), {:+.0}% energy (paper: -43%)",
+            self.eemt_tput_gain * 100.0,
+            -self.eemt_energy_reduction * 100.0
+        );
+    }
+}

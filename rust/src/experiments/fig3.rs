@@ -1,0 +1,106 @@
+//! Figure 3 — target-throughput tracking and energy, EETT vs Ismail-TT.
+//!
+//! Targets are 80/60/40/20 % of the nominal bandwidth on Chameleon and
+//! CloudLab (DIDCLab is excluded, as in the paper, for its low available
+//! bandwidth), on the mixed dataset. Paper shapes:
+//! * EETT tracks within 5–10 % everywhere except the 8 Gbps Chameleon
+//!   point (bandwidth-limited);
+//! * Ismail-TT only reaches low targets (slow 1-channel ramp) and
+//!   overshoots the lowest one;
+//! * EETT uses ~20–29 % less energy at comparable targets.
+
+use super::common::{fmt_energy_kj, run_cells, Cell};
+use crate::coordinator::AlgorithmKind;
+use crate::metrics::Table;
+use crate::sim::session::SessionOutcome;
+use crate::units::Rate;
+use std::path::Path;
+
+/// (testbed, bandwidth Mbps) panels of Figure 3.
+pub const PANELS: [(&str, f64); 2] = [("chameleon", 10_000.0), ("cloudlab", 1_000.0)];
+/// Target fractions of the nominal bandwidth.
+pub const FRACTIONS: [f64; 4] = [0.8, 0.6, 0.4, 0.2];
+
+pub struct Fig3Results {
+    /// (testbed, target, tool, outcome)
+    pub outcomes: Vec<(String, Rate, String, SessionOutcome)>,
+    pub tables: Vec<Table>,
+}
+
+pub fn run(seed: u64) -> Fig3Results {
+    let mut cells = Vec::new();
+    let mut keys = Vec::new();
+    for (tb, bw_mbps) in PANELS {
+        for frac in FRACTIONS {
+            let target = Rate::from_mbps(bw_mbps * frac);
+            for (name, kind) in [
+                ("EETT", AlgorithmKind::TargetThroughput(target)),
+                ("Ismail-TT", AlgorithmKind::IsmailTarget(target)),
+            ] {
+                cells.push(Cell::new(tb, "mixed", kind).with_seed(seed));
+                keys.push((tb.to_string(), target, name.to_string()));
+            }
+        }
+    }
+    let outs = run_cells(&cells);
+
+    let mut outcomes = Vec::new();
+    for (k, o) in keys.into_iter().zip(outs) {
+        outcomes.push((k.0, k.1, k.2, o));
+    }
+
+    let mut tables = Vec::new();
+    for (tb, bw_mbps) in PANELS {
+        let mut t = Table::new(
+            format!("Figure 3 — target tracking on {tb} (mixed dataset)"),
+            &["target", "EETT tput", "EETT energy", "Ismail-TT tput", "Ismail-TT energy",
+              "EETT err %", "Ismail err %"],
+        );
+        for frac in FRACTIONS {
+            let target = Rate::from_mbps(bw_mbps * frac);
+            let eett = lookup(&outcomes, tb, target, "EETT");
+            let ismail = lookup(&outcomes, tb, target, "Ismail-TT");
+            let err = |o: &SessionOutcome| {
+                (o.avg_throughput.as_mbps() - target.as_mbps()).abs() / target.as_mbps() * 100.0
+            };
+            t.push_row(vec![
+                format!("{target}"),
+                format!("{}", eett.avg_throughput),
+                fmt_energy_kj(eett.client_energy.as_joules()),
+                format!("{}", ismail.avg_throughput),
+                fmt_energy_kj(ismail.client_energy.as_joules()),
+                format!("{:.1}", err(eett)),
+                format!("{:.1}", err(ismail)),
+            ]);
+        }
+        tables.push(t);
+    }
+    Fig3Results { outcomes, tables }
+}
+
+fn lookup<'a>(
+    outcomes: &'a [(String, Rate, String, SessionOutcome)],
+    tb: &str,
+    target: Rate,
+    tool: &str,
+) -> &'a SessionOutcome {
+    &outcomes
+        .iter()
+        .find(|(t, r, n, _)| t == tb && *r == target && n == tool)
+        .expect("cell present")
+        .3
+}
+
+impl Fig3Results {
+    pub fn outcome(&self, tb: &str, target: Rate, tool: &str) -> &SessionOutcome {
+        lookup(&self.outcomes, tb, target, tool)
+    }
+
+    pub fn save_csvs(&self, dir: impl AsRef<Path>) -> anyhow::Result<()> {
+        let dir = dir.as_ref();
+        for (t, (tb, _)) in self.tables.iter().zip(PANELS) {
+            t.save_csv(dir.join(format!("fig3_{tb}.csv")))?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,116 @@
+//! Figure 4 — effect of frequency and core scaling on the client's
+//! energy consumption (the load-control ablation).
+//!
+//! Six bars per testbed, mixed dataset, client energy only:
+//! Alan-ME, ME w/o scaling, ME, Alan-MT, EEMT w/o scaling, EEMT.
+//!
+//! Paper shapes (§V-C): on Chameleon, ME w/o scaling already saves ~42 %
+//! vs Alan-ME, and load control adds ~19 pp more (total ~53 %); EEMT w/o
+//! scaling saves ~30 % vs Alan-MT, +17 pp with scaling (total ~43 %).
+//! On DIDCLab the no-scaling gains are small (~9 %/~8 %) but scaling
+//! lifts them to ~22 %/~23 %.
+
+use super::common::{fmt_energy_kj, fmt_tput, run_cells, Cell};
+use crate::config::experiment::TunerParams;
+use crate::coordinator::AlgorithmKind;
+use crate::metrics::Table;
+use crate::sim::session::SessionOutcome;
+use std::path::Path;
+
+pub const TESTBEDS: [&str; 3] = ["chameleon", "cloudlab", "didclab"];
+
+/// The six bars of each Figure 4 panel.
+pub fn variants() -> Vec<(&'static str, AlgorithmKind, TunerParams)> {
+    let base = TunerParams::default();
+    vec![
+        ("Alan-ME", AlgorithmKind::AlanMinEnergy, base),
+        ("ME w/o scaling", AlgorithmKind::MinEnergy, base.without_scaling()),
+        ("ME", AlgorithmKind::MinEnergy, base),
+        ("Alan-MT", AlgorithmKind::AlanMaxThroughput, base),
+        ("EEMT w/o scaling", AlgorithmKind::MaxThroughput, base.without_scaling()),
+        ("EEMT", AlgorithmKind::MaxThroughput, base),
+    ]
+}
+
+pub struct Fig4Results {
+    /// (testbed, variant, outcome)
+    pub outcomes: Vec<(String, String, SessionOutcome)>,
+    pub tables: Vec<Table>,
+}
+
+pub fn run(seed: u64) -> Fig4Results {
+    let vars = variants();
+    let mut cells = Vec::new();
+    for tb in TESTBEDS {
+        for (_, kind, params) in &vars {
+            cells.push(Cell::new(tb, "mixed", *kind).with_params(*params).with_seed(seed));
+        }
+    }
+    let outs = run_cells(&cells);
+
+    let mut outcomes = Vec::new();
+    let mut tables = Vec::new();
+    let mut idx = 0;
+    for tb in TESTBEDS {
+        let mut t = Table::new(
+            format!("Figure 4 — client energy on {tb} (mixed dataset)"),
+            &["variant", "client energy", "throughput", "final cores", "final freq"],
+        );
+        for (name, _, _) in &vars {
+            let out = &outs[idx];
+            idx += 1;
+            t.push_row(vec![
+                name.to_string(),
+                fmt_energy_kj(out.client_energy.as_joules()),
+                fmt_tput(out),
+                out.final_active_cores.to_string(),
+                format!("{}", out.final_freq),
+            ]);
+            outcomes.push((tb.to_string(), name.to_string(), out.clone()));
+        }
+        tables.push(t);
+    }
+    Fig4Results { outcomes, tables }
+}
+
+impl Fig4Results {
+    pub fn outcome(&self, tb: &str, variant: &str) -> &SessionOutcome {
+        &self
+            .outcomes
+            .iter()
+            .find(|(t, v, _)| t == tb && v == variant)
+            .expect("cell present")
+            .2
+    }
+
+    /// Energy reduction of `variant` relative to `reference` on `tb`.
+    pub fn reduction(&self, tb: &str, variant: &str, reference: &str) -> f64 {
+        let v = self.outcome(tb, variant).client_energy.as_joules();
+        let r = self.outcome(tb, reference).client_energy.as_joules();
+        1.0 - v / r
+    }
+
+    pub fn print_headlines(&self) {
+        for tb in TESTBEDS {
+            println!("Fig4 on {tb} (vs Alan et al., client energy):");
+            println!(
+                "  ME   w/o scaling {:+.0}%, with scaling {:+.0}%  (paper Chameleon: -42%/-53%)",
+                -self.reduction(tb, "ME w/o scaling", "Alan-ME") * 100.0,
+                -self.reduction(tb, "ME", "Alan-ME") * 100.0,
+            );
+            println!(
+                "  EEMT w/o scaling {:+.0}%, with scaling {:+.0}%  (paper Chameleon: -30%/-43%)",
+                -self.reduction(tb, "EEMT w/o scaling", "Alan-MT") * 100.0,
+                -self.reduction(tb, "EEMT", "Alan-MT") * 100.0,
+            );
+        }
+    }
+
+    pub fn save_csvs(&self, dir: impl AsRef<Path>) -> anyhow::Result<()> {
+        let dir = dir.as_ref();
+        for (t, tb) in self.tables.iter().zip(TESTBEDS) {
+            t.save_csv(dir.join(format!("fig4_{tb}.csv")))?;
+        }
+        Ok(())
+    }
+}

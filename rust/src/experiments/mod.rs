@@ -1,0 +1,20 @@
+//! Experiment harnesses that regenerate every table and figure of the
+//! paper's evaluation (§V). Each harness returns [`crate::metrics::Table`]s
+//! (and writes CSVs under `results/` when asked) so the CLI, the bench
+//! targets and the integration tests share one implementation.
+//!
+//! | Paper artifact | Harness |
+//! |---|---|
+//! | Table I / II   | [`validate`] |
+//! | Figure 2 (a–f) | [`fig2`] |
+//! | Figure 3 (a–d) | [`fig3`] |
+//! | Figure 4 (a–c) | [`fig4`] |
+
+mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod sweep;
+pub mod validate;
+
+pub use common::{run_cell, run_cells, Cell};

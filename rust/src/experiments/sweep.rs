@@ -1,0 +1,198 @@
+//! Parameter sweeps and design-choice ablations (DESIGN.md §6).
+//!
+//! Not figures from the paper, but the experiments that *justify* its
+//! design choices on this substrate:
+//!
+//! * [`concurrency_sweep`] — throughput and client energy as a function of
+//!   a *fixed* channel count: exposes the concave throughput curve and the
+//!   energy bathtub the FSM algorithms search (the reason runtime tuning
+//!   beats any static choice);
+//! * [`band_sensitivity`] — how the (α, β) feedback bands affect EEMT;
+//! * [`timeout_sensitivity`] — tuning-interval length vs outcome;
+//! * [`slow_start_ablation`] — Algorithm 2 on/off.
+
+use super::common::{run_cell, Cell};
+use crate::config::experiment::TunerParams;
+use crate::config::testbeds;
+use crate::coordinator::AlgorithmKind;
+use crate::cpusim::CpuState;
+use crate::dataset::{partition_files_capped, standard};
+use crate::metrics::Table;
+use crate::sim::Simulation;
+use crate::transfer::TransferEngine;
+use crate::units::SimDuration;
+
+/// One point of the concurrency sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    pub channels: u32,
+    pub throughput_gbps: f64,
+    pub client_energy_kj: f64,
+    pub duration_s: f64,
+}
+
+/// Fixed-channel transfers (no tuning at all — OS governor, static cc,
+/// parallelism pinned to 1 so the channel count is the only concurrency
+/// knob) across a channel grid. This is the landscape the paper's
+/// algorithms navigate online.
+pub fn concurrency_sweep(testbed_name: &str, dataset_name: &str, seed: u64) -> Vec<SweepPoint> {
+    let tb = testbeds::by_name(testbed_name).expect("testbed");
+    let channel_grid = [1u32, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48];
+    let mut points = Vec::new();
+    for &channels in &channel_grid {
+        let ds = standard::by_name(dataset_name, seed).expect("dataset");
+        let parts = partition_files_capped(&ds, tb.bdp(), 1);
+        let mut engine =
+            TransferEngine::with_knee(&parts, tb.link.avg_win, tb.link.knee_streams());
+        engine.update_weights();
+        engine.set_num_channels(channels);
+        let mut sim = Simulation::new(
+            &tb,
+            engine,
+            CpuState::performance(tb.client_cpu.clone()),
+            SimDuration::from_millis(100.0),
+            seed,
+        );
+        let cap_s = 36_000.0;
+        while !sim.is_done() && sim.now.as_secs() < cap_s {
+            sim.step();
+            // Keep the static channel count pinned as partitions finish.
+            if sim.engine.num_channels() < channels && !sim.is_done() {
+                sim.engine.update_weights();
+                sim.engine.set_num_channels(channels);
+            }
+        }
+        let moved = sim.engine.total().saturating_sub(sim.engine.remaining());
+        let dur = sim.now.as_secs().max(1e-9);
+        points.push(SweepPoint {
+            channels,
+            throughput_gbps: moved.as_f64() * 8.0 / dur / 1e9,
+            client_energy_kj: sim.client_energy().as_joules() / 1e3,
+            duration_s: dur,
+        });
+    }
+    points
+}
+
+/// Render a sweep as a table.
+pub fn sweep_table(testbed: &str, dataset: &str, points: &[SweepPoint]) -> Table {
+    let mut t = Table::new(
+        format!("concurrency sweep — {testbed} / {dataset} (static channels, OS governor)"),
+        &["channels", "throughput", "client energy", "duration"],
+    );
+    for p in points {
+        t.push_row(vec![
+            p.channels.to_string(),
+            format!("{:.2} Gbps", p.throughput_gbps),
+            format!("{:.2} kJ", p.client_energy_kj),
+            format!("{:.1} s", p.duration_s),
+        ]);
+    }
+    t
+}
+
+/// (α, β) sensitivity of EEMT on Chameleon/mixed.
+pub fn band_sensitivity(seed: u64) -> Table {
+    let mut t = Table::new(
+        "EEMT (alpha, beta) sensitivity — Chameleon / mixed",
+        &["alpha", "beta", "throughput", "client energy", "peak channels"],
+    );
+    for (alpha, beta) in
+        [(0.05, 0.02), (0.10, 0.05), (0.20, 0.10), (0.30, 0.20)]
+    {
+        let params = TunerParams { alpha, beta, ..TunerParams::default() };
+        let out = run_cell(
+            &Cell::new("chameleon", "mixed", AlgorithmKind::MaxThroughput)
+                .with_params(params)
+                .with_seed(seed),
+        );
+        t.push_row(vec![
+            format!("{alpha}"),
+            format!("{beta}"),
+            format!("{}", out.avg_throughput),
+            format!("{}", out.client_energy),
+            out.peak_channels.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Tuning-interval sensitivity of ME on CloudLab/mixed.
+pub fn timeout_sensitivity(seed: u64) -> Table {
+    let mut t = Table::new(
+        "ME timeout sensitivity — CloudLab / mixed",
+        &["timeout", "throughput", "client energy"],
+    );
+    for secs in [1.0, 3.0, 5.0, 10.0] {
+        let params =
+            TunerParams { timeout: SimDuration::from_secs(secs), ..TunerParams::default() };
+        let out = run_cell(
+            &Cell::new("cloudlab", "mixed", AlgorithmKind::MinEnergy)
+                .with_params(params)
+                .with_seed(seed),
+        );
+        t.push_row(vec![
+            format!("{secs} s"),
+            format!("{}", out.avg_throughput),
+            format!("{}", out.client_energy),
+        ]);
+    }
+    t
+}
+
+/// Algorithm 2 ablation: slow-start correction on vs minimal.
+pub fn slow_start_ablation(seed: u64) -> Table {
+    let mut t = Table::new(
+        "Slow Start (Alg. 2) ablation — EEMT, Chameleon / large",
+        &["slow-start rounds", "throughput", "client energy", "peak channels"],
+    );
+    for rounds in [1u32, 2, 4] {
+        let params = TunerParams { slow_start_rounds: rounds, ..TunerParams::default() };
+        let out = run_cell(
+            &Cell::new("chameleon", "large", AlgorithmKind::MaxThroughput)
+                .with_params(params)
+                .with_seed(seed),
+        );
+        t.push_row(vec![
+            rounds.to_string(),
+            format!("{}", out.avg_throughput),
+            format!("{}", out.client_energy),
+            out.peak_channels.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_shows_rise_then_saturation() {
+        let pts = concurrency_sweep("cloudlab", "large", 42);
+        assert_eq!(pts.len(), 11);
+        // Throughput rises from 1 channel to the knee…
+        assert!(pts[0].throughput_gbps < 0.4);
+        let peak = pts.iter().map(|p| p.throughput_gbps).fold(0.0, f64::max);
+        assert!(peak > 0.8, "peak {peak}");
+        // …and the tail never collapses (graceful overload).
+        assert!(pts.last().unwrap().throughput_gbps > 0.5 * peak);
+    }
+
+    #[test]
+    fn energy_has_a_bathtub() {
+        // Too few channels: long transfer at idle-ish power. The optimum
+        // sits at moderate concurrency, clearly below both extremes' cost.
+        let pts = concurrency_sweep("cloudlab", "large", 42);
+        let first = pts.first().unwrap().client_energy_kj;
+        let best = pts.iter().map(|p| p.client_energy_kj).fold(f64::MAX, f64::min);
+        assert!(best < 0.6 * first, "single-channel {first} vs best {best}");
+    }
+
+    #[test]
+    fn tables_render() {
+        let pts = concurrency_sweep("didclab", "large", 1);
+        let t = sweep_table("didclab", "large", &pts);
+        assert_eq!(t.rows.len(), pts.len());
+    }
+}

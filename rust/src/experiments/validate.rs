@@ -1,0 +1,95 @@
+//! Tables I and II — regenerate the testbed and dataset characteristics
+//! tables and check them against the paper's numbers.
+
+use crate::config::testbeds;
+use crate::dataset::standard;
+use crate::metrics::Table;
+
+/// Table I: testbed characteristics.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table I — testbed characteristics",
+        &["testbed", "bandwidth", "RTT", "BDP", "server CPU", "client CPU"],
+    );
+    for tb in testbeds::all() {
+        t.push_row(vec![
+            tb.name.to_string(),
+            format!("{}", tb.link.capacity),
+            format!("{:.0} ms", tb.link.rtt.as_millis()),
+            format!("{:.1} MB", tb.bdp().as_mb()),
+            tb.server_cpu.name.clone(),
+            tb.client_cpu.name.clone(),
+        ]);
+    }
+    t
+}
+
+/// Table II: dataset characteristics (regenerated from the generators).
+pub fn table2(seed: u64) -> Table {
+    let mut t = Table::new(
+        "Table II — dataset characteristics",
+        &["dataset", "num files", "total size", "avg file size", "std dev"],
+    );
+    for name in standard::STANDARD_NAMES {
+        let d = standard::by_name(name, seed).unwrap();
+        t.push_row(vec![
+            name.to_string(),
+            d.num_files().to_string(),
+            format!("{}", d.total_size()),
+            format!("{}", d.avg_file_size()),
+            format!("{}", d.std_file_size()),
+        ]);
+    }
+    t
+}
+
+/// Check the regenerated values against the paper (used by `greendt
+/// validate` and the figures integration test). Returns mismatch strings.
+pub fn check(seed: u64) -> Vec<String> {
+    let mut problems = Vec::new();
+    let mut expect = |ok: bool, what: &str| {
+        if !ok {
+            problems.push(what.to_string());
+        }
+    };
+
+    // Table I.
+    let bdps = [("chameleon", 40.0), ("cloudlab", 4.5), ("didclab", 5.5)];
+    for (name, mb) in bdps {
+        let tb = testbeds::by_name(name).unwrap();
+        expect((tb.bdp().as_mb() - mb).abs() < 0.5, &format!("{name} BDP ≈ {mb} MB"));
+    }
+
+    // Table II.
+    let ds = standard::small_dataset(seed);
+    expect(ds.num_files() == 20_000, "small: 20,000 files");
+    expect((ds.total_size().as_gb() - 1.94).abs() < 0.15, "small: ≈1.94 GB");
+    let ds = standard::medium_dataset(seed);
+    expect(ds.num_files() == 5_000, "medium: 5,000 files");
+    expect((ds.total_size().as_gb() - 11.70).abs() < 0.5, "medium: ≈11.70 GB");
+    let ds = standard::large_dataset(seed);
+    expect(ds.num_files() == 128, "large: 128 files");
+    expect((ds.total_size().as_gb() - 27.85).abs() < 1.0, "large: ≈27.85 GB");
+
+    problems
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render() {
+        let t1 = table1();
+        assert_eq!(t1.rows.len(), 3);
+        let t2 = table2(42);
+        assert_eq!(t2.rows.len(), 4);
+        assert!(t2.to_markdown().contains("mixed"));
+    }
+
+    #[test]
+    fn paper_values_check_out() {
+        let problems = check(42);
+        assert!(problems.is_empty(), "mismatches: {problems:?}");
+    }
+}

@@ -1,0 +1,42 @@
+//! # GreenDT
+//!
+//! Full-system reproduction of *"Energy-Efficient High-Throughput Data
+//! Transfers via Dynamic CPU Frequency and Core Scaling"* (Di Tacchio,
+//! Nine, Kosar, Bulut, Hwang — CS.DC 2019).
+//!
+//! GreenDT is a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the paper's three
+//!   SLA-driven parameter-tuning algorithms (Minimum Energy, Energy-Efficient
+//!   Maximum Throughput, Energy-Efficient Target Throughput) jointly tuning
+//!   pipelining, parallelism, concurrency, active CPU cores and CPU
+//!   frequency over a simulated WAN + end-system substrate.
+//! * **Layer 2 (python/compile/model.py)** — a JAX energy/throughput
+//!   prediction model, AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — the Pallas candidate-grid
+//!   scoring kernel called by Layer 2.
+//!
+//! The compiled predictor is executed from Rust through
+//! [`runtime`] (PJRT CPU client); Python never runs on the decision path.
+
+pub mod units;
+pub mod rng;
+pub mod testutil;
+pub mod dataset;
+pub mod netsim;
+pub mod cpusim;
+pub mod power;
+pub mod transfer;
+pub mod sim;
+pub mod coordinator;
+pub mod baselines;
+pub mod predictor;
+pub mod runtime;
+pub mod config;
+pub mod cli;
+pub mod metrics;
+pub mod experiments;
+pub mod benchkit;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,15 @@
+//! GreenDT leader binary: CLI entry point.
+
+use greendt::cli;
+
+fn main() {
+    cli::init_logger();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Result tables, summary statistics and file output.
+
+mod stats;
+mod table;
+pub mod timeseries;
+
+pub use stats::Summary;
+pub use table::Table;

@@ -1,0 +1,94 @@
+//! Session timeline export.
+
+use crate::sim::session::{SessionOutcome, TimelinePoint};
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Render a session's per-timeout timeline as CSV (one row per tuning
+/// interval) — the raw material for time-series plots like the paper's
+/// FSM walkthroughs.
+pub fn timeline_csv(outcome: &SessionOutcome) -> String {
+    let mut out = String::from(
+        "t_s,fsm,throughput_mbps,channels,active_cores,freq_ghz,cpu_load,power_w\n",
+    );
+    for p in &outcome.timeline {
+        let _ = writeln!(
+            out,
+            "{:.1},{},{:.1},{},{},{:.2},{:.3},{:.1}",
+            p.t_secs,
+            p.fsm,
+            p.throughput.as_mbps(),
+            p.channels,
+            p.active_cores,
+            p.freq.as_ghz(),
+            p.cpu_load,
+            p.power_w
+        );
+    }
+    out
+}
+
+/// Write the timeline CSV to a file (creating parent directories).
+pub fn save_timeline(outcome: &SessionOutcome, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, timeline_csv(outcome))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Aggregate statistics over a timeline slice (plot annotations, tests).
+pub fn mean_throughput_mbps(points: &[TimelinePoint]) -> f64 {
+    if points.is_empty() {
+        return 0.0;
+    }
+    points.iter().map(|p| p.throughput.as_mbps()).sum::<f64>() / points.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::coordinator::AlgorithmKind;
+    use crate::dataset::standard;
+    use crate::sim::session::{run_session, SessionConfig};
+
+    fn outcome() -> SessionOutcome {
+        run_session(
+            &SessionConfig::new(
+                testbeds::cloudlab(),
+                standard::large_dataset(1),
+                AlgorithmKind::MaxThroughput,
+            )
+            .recording(),
+        )
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let out = outcome();
+        let csv = timeline_csv(&out);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].starts_with("t_s,fsm,throughput_mbps"));
+        assert_eq!(lines.len(), out.timeline.len() + 1);
+    }
+
+    #[test]
+    fn save_round_trips() {
+        let out = outcome();
+        let path = std::env::temp_dir().join("greendt_tl_test/tl.csv");
+        save_timeline(&out, &path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), timeline_csv(&out));
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn mean_matches_hand_computation() {
+        let out = outcome();
+        let m = mean_throughput_mbps(&out.timeline);
+        assert!(m > 0.0);
+        assert_eq!(mean_throughput_mbps(&[]), 0.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Background cross-traffic process.
+//!
+//! Real WAN paths (Chameleon/CloudLab share their links with other tenants)
+//! have slowly varying residual capacity. We model the *fraction* of the
+//! bottleneck consumed by cross traffic as a mean-reverting
+//! (Ornstein-Uhlenbeck-style) process, clamped to [0, max_fraction],
+//! plus optional scripted step events so experiments can inject bandwidth
+//! drops deterministically (used by the Warning/Recovery tests and the
+//! `adaptive_bandwidth` example).
+
+use crate::rng::Xoshiro256;
+use crate::units::{SimDuration, SimTime};
+
+/// A scripted change to the background-traffic mean at a given time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BandwidthEvent {
+    /// When the event takes effect.
+    pub at: SimTime,
+    /// New mean background fraction in [0, 1) from that time on.
+    pub mean_fraction: f64,
+}
+
+/// Mean-reverting background-traffic fraction.
+#[derive(Debug, Clone)]
+pub struct BackgroundTraffic {
+    /// Long-run mean fraction of the bottleneck used by cross traffic.
+    mean: f64,
+    /// Reversion rate (1/s). Larger = faster return to the mean.
+    theta: f64,
+    /// Diffusion strength (fraction / sqrt(s)).
+    sigma: f64,
+    /// Hard cap on the fraction (never starve the transfer entirely).
+    max_fraction: f64,
+    /// Current value.
+    value: f64,
+    /// Scripted events, sorted by time; consumed as the clock passes them.
+    events: Vec<BandwidthEvent>,
+    next_event: usize,
+}
+
+impl BackgroundTraffic {
+    /// A quiet path: small mean load, gentle variation.
+    pub fn quiet(mean: f64) -> Self {
+        Self::new(mean, 0.5, 0.02, 0.85)
+    }
+
+    /// A completely deterministic, constant background (for unit tests).
+    pub fn constant(fraction: f64) -> Self {
+        Self::new(fraction, 0.0, 0.0, 0.95)
+    }
+
+    pub fn new(mean: f64, theta: f64, sigma: f64, max_fraction: f64) -> Self {
+        assert!((0.0..1.0).contains(&mean), "mean fraction must be in [0,1)");
+        BackgroundTraffic {
+            mean,
+            theta,
+            sigma,
+            max_fraction,
+            value: mean,
+            events: Vec::new(),
+            next_event: 0,
+        }
+    }
+
+    /// Register scripted events (must be pushed in time order).
+    pub fn with_events(mut self, mut events: Vec<BandwidthEvent>) -> Self {
+        events.sort_by(|a, b| a.at.as_secs().partial_cmp(&b.at.as_secs()).unwrap());
+        self.events = events;
+        self
+    }
+
+    /// Current fraction of the bottleneck taken by cross traffic.
+    pub fn fraction(&self) -> f64 {
+        self.value
+    }
+
+    /// Advance the process by `dt`.
+    pub fn tick(&mut self, now: SimTime, dt: SimDuration, rng: &mut Xoshiro256) {
+        // Apply any scripted events whose time has come.
+        while self.next_event < self.events.len() && self.events[self.next_event].at <= now {
+            self.mean = self.events[self.next_event].mean_fraction.clamp(0.0, self.max_fraction);
+            // Step events move the value immediately: a new flow starting is
+            // abrupt at WAN timescales.
+            self.value = self.mean;
+            self.next_event += 1;
+        }
+
+        let dt_s = dt.as_secs();
+        if dt_s <= 0.0 {
+            return;
+        }
+        // Euler-Maruyama step of dX = theta (mu - X) dt + sigma dW.
+        let noise = if self.sigma > 0.0 {
+            // Polar method inline to avoid importing Normal (hot path).
+            let z;
+            loop {
+                let u = 2.0 * rng.next_f64() - 1.0;
+                let v = 2.0 * rng.next_f64() - 1.0;
+                let s = u * u + v * v;
+                if s > 0.0 && s < 1.0 {
+                    z = u * (-2.0 * s.ln() / s).sqrt();
+                    break;
+                }
+            }
+            self.sigma * dt_s.sqrt() * z
+        } else {
+            0.0
+        };
+        self.value += self.theta * (self.mean - self.value) * dt_s + noise;
+        self.value = self.value.clamp(0.0, self.max_fraction);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_stays_constant() {
+        let mut bg = BackgroundTraffic::constant(0.2);
+        let mut rng = Xoshiro256::seeded(1);
+        let mut t = SimTime::ZERO;
+        for _ in 0..100 {
+            bg.tick(t, SimDuration::from_millis(100.0), &mut rng);
+            t += SimDuration::from_millis(100.0);
+            assert_eq!(bg.fraction(), 0.2);
+        }
+    }
+
+    #[test]
+    fn reverts_to_mean() {
+        let mut bg = BackgroundTraffic::new(0.3, 2.0, 0.0, 0.9);
+        bg.value = 0.8;
+        let mut rng = Xoshiro256::seeded(2);
+        let mut t = SimTime::ZERO;
+        for _ in 0..200 {
+            bg.tick(t, SimDuration::from_millis(100.0), &mut rng);
+            t += SimDuration::from_millis(100.0);
+        }
+        assert!((bg.fraction() - 0.3).abs() < 0.02, "value {}", bg.fraction());
+    }
+
+    #[test]
+    fn stays_in_bounds_under_noise() {
+        let mut bg = BackgroundTraffic::new(0.1, 0.5, 0.2, 0.85);
+        let mut rng = Xoshiro256::seeded(3);
+        let mut t = SimTime::ZERO;
+        for _ in 0..5000 {
+            bg.tick(t, SimDuration::from_millis(100.0), &mut rng);
+            t += SimDuration::from_millis(100.0);
+            assert!((0.0..=0.85).contains(&bg.fraction()));
+        }
+    }
+
+    #[test]
+    fn scripted_event_applies_at_time() {
+        let mut bg = BackgroundTraffic::constant(0.0).with_events(vec![BandwidthEvent {
+            at: SimTime::from_secs(5.0),
+            mean_fraction: 0.5,
+        }]);
+        let mut rng = Xoshiro256::seeded(4);
+        let dt = SimDuration::from_millis(100.0);
+        let mut t = SimTime::ZERO;
+        for _ in 0..200 {
+            bg.tick(t, dt, &mut rng);
+            t += dt;
+        }
+        assert_eq!(bg.fraction(), 0.5);
+    }
+
+    #[test]
+    fn events_sorted_even_if_pushed_unsorted() {
+        let bg = BackgroundTraffic::constant(0.0).with_events(vec![
+            BandwidthEvent { at: SimTime::from_secs(10.0), mean_fraction: 0.2 },
+            BandwidthEvent { at: SimTime::from_secs(5.0), mean_fraction: 0.4 },
+        ]);
+        assert!(bg.events[0].at < bg.events[1].at);
+    }
+}

@@ -1,0 +1,268 @@
+//! Bottleneck link and fair-share goodput allocation.
+
+use super::{BackgroundTraffic, StreamState};
+use crate::rng::Xoshiro256;
+use crate::units::{Bytes, Rate, Rtt, SimDuration, SimTime};
+
+/// Static parameters of a WAN path (one row of Table I).
+#[derive(Debug, Clone)]
+pub struct LinkParams {
+    /// Nominal bottleneck capacity.
+    pub capacity: Rate,
+    /// Round-trip time.
+    pub rtt: Rtt,
+    /// Average TCP window a single stream reaches (what iperf reports —
+    /// Alg. 1 uses `avgWinSize / RTT` as the per-channel throughput).
+    pub avg_win: Bytes,
+    /// Overload penalty strength: how sharply aggregate goodput degrades
+    /// once the open-stream count exceeds the knee (retransmission +
+    /// contention losses).
+    pub overload_gamma: f64,
+    /// Goodput floor under extreme overload, as a fraction of available
+    /// capacity (TCP keeps moving data even when over-subscribed).
+    pub overload_floor: f64,
+}
+
+impl LinkParams {
+    /// Number of steady-state streams needed to fill the pipe — the "knee"
+    /// of the throughput-vs-streams curve.
+    pub fn knee_streams(&self) -> f64 {
+        let per_stream = self.avg_win.as_f64() / self.rtt.as_secs().max(1e-9); // bytes/s
+        (self.capacity.as_bytes_per_sec() / per_stream.max(1.0)).max(1.0)
+    }
+
+    /// Throughput of one steady-state stream (Alg. 1 line 8).
+    pub fn channel_throughput(&self) -> Rate {
+        Rate::from_bytes_per_sec(self.avg_win.as_f64() / self.rtt.as_secs().max(1e-9))
+    }
+
+    /// Bandwidth-delay product of the path.
+    pub fn bdp(&self) -> Bytes {
+        crate::units::bdp(self.capacity, self.rtt)
+    }
+}
+
+/// A bottleneck link with time-varying residual capacity.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub params: LinkParams,
+    bg: BackgroundTraffic,
+}
+
+impl Link {
+    pub fn new(params: LinkParams, bg: BackgroundTraffic) -> Self {
+        Link { params, bg }
+    }
+
+    /// Capacity left for the transfer after background cross traffic.
+    pub fn available(&self) -> Rate {
+        self.params.capacity * (1.0 - self.bg.fraction())
+    }
+
+    /// Current background fraction (observability for tests/metrics).
+    pub fn background_fraction(&self) -> f64 {
+        self.bg.fraction()
+    }
+
+    /// Advance the background process.
+    pub fn tick(&mut self, now: SimTime, dt: SimDuration, rng: &mut Xoshiro256) {
+        self.bg.tick(now, dt, rng);
+    }
+}
+
+/// Allocate goodput to `streams` over `link` for one tick.
+///
+/// Model (see DESIGN.md §5):
+/// 1. each stream is bounded by its window rate `win/RTT`;
+/// 2. the aggregate is bounded by the available capacity, shared
+///    max-min-fairly (equal split, window-limited streams donate surplus);
+/// 3. past the knee, over-subscription causes losses: the aggregate is
+///    scaled by `1 / (1 + gamma * (n - knee)/knee)`, floored at
+///    `overload_floor` — TCP degrades gracefully, but "more channels"
+///    eventually *hurts*, the concavity Algorithms 4–6 search.
+///
+/// Returns per-stream rates (same order as `streams`).
+pub fn share_goodput(link: &Link, streams: &[StreamState]) -> Vec<Rate> {
+    let mut out = Vec::new();
+    share_goodput_into(link, streams, &mut out);
+    out.into_iter().map(Rate::from_bytes_per_sec).collect()
+}
+
+/// Allocation-free variant for the per-tick hot path: writes per-stream
+/// rates in **bytes/s** into `out` (cleared and refilled; scratch space is
+/// reused by the caller across ticks).
+pub fn share_goodput_into(link: &Link, streams: &[StreamState], out: &mut Vec<f64>) {
+    out.clear();
+    let n = streams.len();
+    if n == 0 {
+        return;
+    }
+    let rtt = link.params.rtt;
+    let avail = link.available().as_bytes_per_sec();
+
+    // Overload penalty on the aggregate: past the knee, every extra
+    // stream adds retransmission + contention losses. Linear in the
+    // over-subscription ratio (TCP degrades gracefully), floored.
+    let knee = link.params.knee_streams();
+    let over = (n as f64 - knee).max(0.0) / knee;
+    let penalty =
+        (1.0 / (1.0 + link.params.overload_gamma * over)).max(link.params.overload_floor);
+    let budget = avail * penalty;
+
+    // Max-min fair allocation among window-capped streams:
+    // iterate: give every unfrozen stream an equal share; freeze streams
+    // whose window cap is below their share; redistribute the surplus.
+    // `out` doubles as the allocation buffer; caps are computed on the fly
+    // in the freeze scan (window_rate is two flops).
+    out.resize(n, 0.0);
+    let caps: Vec<f64> = streams.iter().map(|s| s.window_rate(rtt).as_bytes_per_sec()).collect();
+    let alloc = out;
+    let mut frozen = vec![false; n];
+    let mut remaining = budget;
+    let mut active = n;
+    // At most n rounds; typically 1-2. `remaining`/`active` are maintained
+    // incrementally so each round is a single O(n) scan (the naive
+    // re-summation made the allocator O(n²) at high stream counts).
+    for _ in 0..n {
+        if active == 0 || remaining <= 1e-9 {
+            break;
+        }
+        let share = remaining / active as f64;
+        let mut newly_frozen = 0;
+        for i in 0..n {
+            if frozen[i] {
+                continue;
+            }
+            if caps[i] <= share {
+                alloc[i] = caps[i];
+                frozen[i] = true;
+                newly_frozen += 1;
+                remaining -= caps[i];
+                active -= 1;
+            }
+        }
+        if newly_frozen == 0 {
+            // Everyone can absorb the equal share.
+            for i in 0..n {
+                if !frozen[i] {
+                    alloc[i] = share;
+                }
+            }
+            break;
+        }
+        if remaining < 0.0 {
+            remaining = 0.0;
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::BackgroundTraffic;
+
+    /// CloudLab-like link: 1 Gbps, 36 ms, 4.5 MB BDP, ~1 MB avg window.
+    fn link() -> Link {
+        Link::new(
+            LinkParams {
+                capacity: Rate::from_gbps(1.0),
+                rtt: SimDuration::from_millis(36.0),
+                avg_win: Bytes::from_mb(1.0),
+                overload_gamma: 0.02,
+                overload_floor: 0.55,
+            },
+            BackgroundTraffic::constant(0.0),
+        )
+    }
+
+    fn warm_streams(link: &Link, n: usize) -> Vec<StreamState> {
+        (0..n).map(|_| StreamState::warm(link.params.avg_win)).collect()
+    }
+
+    #[test]
+    fn knee_matches_alg1_channel_estimate() {
+        let l = link();
+        // one stream: 1 MB / 36 ms = 27.8 MB/s = 222 Mbps; knee = 1 Gbps / 222 Mbps ≈ 4.5
+        let knee = l.params.knee_streams();
+        assert!((knee - 4.5).abs() < 0.1, "knee {knee}");
+        assert!((l.params.channel_throughput().as_mbps() - 222.2).abs() < 1.0);
+    }
+
+    #[test]
+    fn single_stream_is_window_limited() {
+        let l = link();
+        let rates = share_goodput(&l, &warm_streams(&l, 1));
+        assert!((rates[0].as_mbps() - 222.2).abs() < 1.0, "{}", rates[0]);
+    }
+
+    #[test]
+    fn aggregate_grows_then_saturates() {
+        let l = link();
+        let t1: f64 = share_goodput(&l, &warm_streams(&l, 1)).iter().map(|r| r.as_mbps()).sum();
+        let t4: f64 = share_goodput(&l, &warm_streams(&l, 4)).iter().map(|r| r.as_mbps()).sum();
+        let t5: f64 = share_goodput(&l, &warm_streams(&l, 5)).iter().map(|r| r.as_mbps()).sum();
+        assert!(t4 > 3.9 * t1 * 0.99, "linear regime: {t4} vs {t1}");
+        assert!(t5 <= 1000.0 + 1.0, "cannot exceed capacity: {t5}");
+        assert!(t5 > 950.0, "near-saturation at the knee: {t5}");
+    }
+
+    #[test]
+    fn overload_degrades_aggregate() {
+        let l = link();
+        let t5: f64 = share_goodput(&l, &warm_streams(&l, 5)).iter().map(|r| r.as_mbps()).sum();
+        let t80: f64 = share_goodput(&l, &warm_streams(&l, 80)).iter().map(|r| r.as_mbps()).sum();
+        assert!(t80 < t5 * 0.9, "overload must hurt: {t80} vs {t5}");
+        let floor = 1000.0 * l.params.overload_floor;
+        assert!(t80 >= floor * 0.99, "floor holds: {t80} >= {floor}");
+        // Degradation is graceful: 2x the knee costs only a few percent.
+        let t9: f64 = share_goodput(&l, &warm_streams(&l, 9)).iter().map(|r| r.as_mbps()).sum();
+        assert!(t9 > t5 * 0.95, "mild oversubscription is cheap: {t9} vs {t5}");
+    }
+
+    #[test]
+    fn slow_start_stream_gets_less() {
+        let l = link();
+        let mut streams = warm_streams(&l, 3);
+        streams.push(StreamState::new(l.params.avg_win)); // cold
+        let rates = share_goodput(&l, &streams);
+        assert!(rates[3] < rates[0], "cold stream {} vs warm {}", rates[3], rates[0]);
+    }
+
+    #[test]
+    fn background_traffic_reduces_budget() {
+        let mut l = link();
+        l.bg = BackgroundTraffic::constant(0.5);
+        let total: f64 = share_goodput(&l, &warm_streams(&l, 10)).iter().map(|r| r.as_mbps()).sum();
+        assert!(total < 510.0, "half capacity available: {total}");
+    }
+
+    #[test]
+    fn empty_streams_ok() {
+        assert!(share_goodput(&link(), &[]).is_empty());
+    }
+
+    #[test]
+    fn allocation_never_exceeds_window_cap() {
+        let l = link();
+        let mut streams = warm_streams(&l, 2);
+        streams.push(StreamState::new(l.params.avg_win));
+        let rates = share_goodput(&l, &streams);
+        for (s, r) in streams.iter().zip(&rates) {
+            let cap = s.window_rate(l.params.rtt);
+            assert!(r.as_bits_per_sec() <= cap.as_bits_per_sec() * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn max_min_fairness_redistributes_surplus() {
+        let l = link();
+        // One tiny-window stream + two warm: tiny's surplus goes to the warm.
+        let mut streams = vec![StreamState::new(Bytes::new(14600.0))];
+        streams.extend(warm_streams(&l, 2));
+        let rates = share_goodput(&l, &streams);
+        let total: f64 = rates.iter().map(|r| r.as_mbps()).sum();
+        // 2 warm streams can take 444 Mbps; tiny adds its cap.
+        assert!(total > 440.0, "total {total}");
+    }
+}

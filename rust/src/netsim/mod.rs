@@ -1,0 +1,25 @@
+//! Wide-area network substrate.
+//!
+//! The paper's testbeds (Table I) are WAN paths with a single bottleneck
+//! link. The tuning algorithms never see packets — they observe *throughput
+//! over time* as a function of how many TCP streams they open and how they
+//! pipeline requests. This module reproduces exactly that observable
+//! surface:
+//!
+//! * [`Link`] — bottleneck capacity, RTT, and a mean-reverting background
+//!   cross-traffic process (plus scripted bandwidth events for failure
+//!   injection);
+//! * [`StreamState`] — per-TCP-connection congestion window with slow
+//!   start, giving new channels the ramp-up that Algorithm 2 (Slow Start)
+//!   corrects for;
+//! * [`share_goodput`] — fair-share allocation with an overload penalty
+//!   past the stream-count knee, producing the concave
+//!   throughput-vs-channels curve that the FSM algorithms search.
+
+mod background;
+mod link;
+mod stream;
+
+pub use background::{BackgroundTraffic, BandwidthEvent};
+pub use link::{share_goodput, share_goodput_into, Link, LinkParams};
+pub use stream::StreamState;

@@ -1,0 +1,155 @@
+//! Per-TCP-connection congestion-window model.
+//!
+//! Each open connection (a "stream"; a channel with parallelism `p` holds
+//! `p` streams) carries a congestion window that ramps via slow start from
+//! `INIT_WINDOW` toward the path's average window size (Table I's
+//! `avgWinSize`, what `iperf` would report). The window bounds the stream's
+//! rate at `win / RTT`; the bottleneck's fair share caps it further (see
+//! [`super::share_goodput`]).
+
+use crate::units::{Bytes, Rate, Rtt, SimDuration};
+
+/// Initial congestion window: 10 MSS of 1460 B (RFC 6928).
+pub const INIT_WINDOW: f64 = 10.0 * 1460.0;
+
+/// Congestion state of one TCP connection.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamState {
+    /// Current congestion window.
+    window: Bytes,
+    /// Path average window (slow start target).
+    avg_win: Bytes,
+    /// True while still in the exponential ramp.
+    slow_start: bool,
+}
+
+impl StreamState {
+    /// A fresh connection entering slow start.
+    pub fn new(avg_win: Bytes) -> Self {
+        StreamState {
+            window: Bytes::new(INIT_WINDOW.min(avg_win.as_f64())),
+            avg_win,
+            slow_start: true,
+        }
+    }
+
+    /// A connection already at steady state (for tests and warm restarts).
+    pub fn warm(avg_win: Bytes) -> Self {
+        StreamState { window: avg_win, avg_win, slow_start: false }
+    }
+
+    pub fn window(&self) -> Bytes {
+        self.window
+    }
+
+    pub fn in_slow_start(&self) -> bool {
+        self.slow_start
+    }
+
+    /// Maximum rate this stream's window allows.
+    pub fn window_rate(&self, rtt: Rtt) -> Rate {
+        if rtt.is_zero() {
+            return Rate::ZERO;
+        }
+        Rate::from_bytes_per_sec(self.window.as_f64() / rtt.as_secs())
+    }
+
+    /// Advance the window by `dt`: during slow start the window doubles
+    /// once per RTT (continuous-time equivalent: `w *= 2^(dt/rtt)`), capped
+    /// at `avg_win`, after which the stream holds steady (the paper's
+    /// testbeds are loss-managed by the overload penalty at the link level,
+    /// not per-stream AIMD).
+    pub fn tick(&mut self, dt: SimDuration, rtt: Rtt) {
+        if !self.slow_start || rtt.is_zero() {
+            return;
+        }
+        let growth = (dt.as_secs() / rtt.as_secs()).min(32.0); // avoid inf pow
+        let w = self.window.as_f64() * 2f64.powf(growth);
+        if w >= self.avg_win.as_f64() {
+            self.window = self.avg_win;
+            self.slow_start = false;
+        } else {
+            self.window = Bytes::new(w);
+        }
+    }
+
+    /// Back off after an overload signal: halve the window (multiplicative
+    /// decrease) but never below the initial window.
+    pub fn backoff(&mut self) {
+        self.window = Bytes::new((self.window.as_f64() * 0.5).max(INIT_WINDOW));
+        self.slow_start = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rtt() -> Rtt {
+        SimDuration::from_millis(32.0)
+    }
+
+    #[test]
+    fn starts_in_slow_start() {
+        let s = StreamState::new(Bytes::from_mb(4.0));
+        assert!(s.in_slow_start());
+        assert_eq!(s.window().as_f64(), INIT_WINDOW);
+    }
+
+    #[test]
+    fn window_doubles_per_rtt() {
+        let mut s = StreamState::new(Bytes::from_mb(4.0));
+        let w0 = s.window().as_f64();
+        s.tick(rtt(), rtt());
+        assert!((s.window().as_f64() / w0 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn converges_to_avg_win_and_exits_slow_start() {
+        let mut s = StreamState::new(Bytes::from_mb(4.0));
+        for _ in 0..1000 {
+            s.tick(SimDuration::from_millis(100.0), rtt());
+        }
+        assert!(!s.in_slow_start());
+        assert_eq!(s.window(), Bytes::from_mb(4.0));
+    }
+
+    #[test]
+    fn ramp_time_is_log2_of_ratio() {
+        // From 14.6 KB to 4 MB is log2(274) ≈ 8.1 RTTs ≈ 0.26 s at 32 ms.
+        let mut s = StreamState::new(Bytes::from_mb(4.0));
+        let mut t = 0.0;
+        let dt = SimDuration::from_millis(10.0);
+        while s.in_slow_start() && t < 10.0 {
+            s.tick(dt, rtt());
+            t += dt.as_secs();
+        }
+        assert!(t > 0.2 && t < 0.4, "ramp took {t}s");
+    }
+
+    #[test]
+    fn window_rate() {
+        let s = StreamState::warm(Bytes::from_mb(4.0));
+        let r = s.window_rate(SimDuration::from_millis(32.0));
+        // 4 MB / 32 ms = 125 MB/s = 1 Gbps.
+        assert!((r.as_gbps() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backoff_halves_but_floors() {
+        let mut s = StreamState::warm(Bytes::from_mb(4.0));
+        s.backoff();
+        assert_eq!(s.window(), Bytes::from_mb(2.0));
+        for _ in 0..64 {
+            s.backoff();
+        }
+        assert_eq!(s.window().as_f64(), INIT_WINDOW);
+    }
+
+    #[test]
+    fn warm_stream_does_not_grow() {
+        let mut s = StreamState::warm(Bytes::from_mb(4.0));
+        s.tick(SimDuration::from_secs(1.0), rtt());
+        assert_eq!(s.window(), Bytes::from_mb(4.0));
+    }
+}

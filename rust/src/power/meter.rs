@@ -1,0 +1,129 @@
+//! Energy meters: RAPL-style package meter and wall-socket node meter.
+
+use crate::units::{Energy, Power, SimDuration, SimTime};
+
+/// One power sample (kept for time-series plots and debugging).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergySample {
+    pub at: SimTime,
+    pub power: Power,
+}
+
+/// Intel-RAPL-equivalent: integrates package (+DRAM) power over time and
+/// exposes cumulative energy counters, like reading
+/// `/sys/class/powercap/intel-rapl/.../energy_uj` at two instants.
+#[derive(Debug, Clone, Default)]
+pub struct RaplMeter {
+    total: Energy,
+    samples: Vec<EnergySample>,
+    keep_samples: bool,
+}
+
+impl RaplMeter {
+    pub fn new() -> Self {
+        RaplMeter { total: Energy::ZERO, samples: Vec::new(), keep_samples: false }
+    }
+
+    /// Also retain the full sample series (costs memory; used by reports).
+    pub fn recording() -> Self {
+        RaplMeter { total: Energy::ZERO, samples: Vec::new(), keep_samples: true }
+    }
+
+    /// Integrate one tick at constant `power`.
+    pub fn record(&mut self, at: SimTime, power: Power, dt: SimDuration) {
+        self.total += power.over(dt);
+        if self.keep_samples {
+            self.samples.push(EnergySample { at, power });
+        }
+    }
+
+    /// Cumulative energy counter (the "RAPL reading").
+    pub fn total(&self) -> Energy {
+        self.total
+    }
+
+    /// Energy consumed since a previous reading.
+    pub fn since(&self, earlier: Energy) -> Energy {
+        self.total.saturating_sub(earlier)
+    }
+
+    pub fn samples(&self) -> &[EnergySample] {
+        &self.samples
+    }
+}
+
+/// Wall-socket meter (the Yokogawa WT210 on the DIDCLab client): package
+/// power plus a constant platform base — NIC, fans, VRM losses, idle disks.
+#[derive(Debug, Clone)]
+pub struct NodeMeter {
+    rapl: RaplMeter,
+    base: Power,
+}
+
+impl NodeMeter {
+    pub fn new(base: Power) -> Self {
+        NodeMeter { rapl: RaplMeter::new(), base }
+    }
+
+    /// Default platform base for the paper's server-class nodes.
+    pub fn standard() -> Self {
+        NodeMeter::new(Power::from_watts(45.0))
+    }
+
+    pub fn record(&mut self, at: SimTime, package: Power, dt: SimDuration) {
+        self.rapl.record(at, package + self.base, dt);
+    }
+
+    pub fn total(&self) -> Energy {
+        self.rapl.total()
+    }
+
+    pub fn base(&self) -> Power {
+        self.base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integrates_power_over_time() {
+        let mut m = RaplMeter::new();
+        let dt = SimDuration::from_millis(100.0);
+        let mut t = SimTime::ZERO;
+        for _ in 0..100 {
+            m.record(t, Power::from_watts(50.0), dt);
+            t += dt;
+        }
+        // 50 W * 10 s = 500 J
+        assert!((m.total().as_joules() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn since_gives_interval_energy() {
+        let mut m = RaplMeter::new();
+        m.record(SimTime::ZERO, Power::from_watts(10.0), SimDuration::from_secs(1.0));
+        let checkpoint = m.total();
+        m.record(SimTime::from_secs(1.0), Power::from_watts(20.0), SimDuration::from_secs(2.0));
+        assert!((m.since(checkpoint).as_joules() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recording_keeps_samples() {
+        let mut m = RaplMeter::recording();
+        m.record(SimTime::ZERO, Power::from_watts(5.0), SimDuration::from_secs(1.0));
+        m.record(SimTime::from_secs(1.0), Power::from_watts(6.0), SimDuration::from_secs(1.0));
+        assert_eq!(m.samples().len(), 2);
+        assert_eq!(m.samples()[1].power, Power::from_watts(6.0));
+        let quiet = RaplMeter::new();
+        assert!(quiet.samples().is_empty());
+    }
+
+    #[test]
+    fn node_meter_adds_base() {
+        let mut m = NodeMeter::new(Power::from_watts(40.0));
+        m.record(SimTime::ZERO, Power::from_watts(60.0), SimDuration::from_secs(10.0));
+        assert!((m.total().as_joules() - 1000.0).abs() < 1e-9);
+    }
+}

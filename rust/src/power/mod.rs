@@ -1,0 +1,22 @@
+//! Power modeling and energy measurement.
+//!
+//! Substitutes the paper's measurement instruments:
+//!
+//! * **Intel RAPL** (used on Chameleon/CloudLab nodes) → [`PowerModel`] +
+//!   [`RaplMeter`]: a package-level CMOS power model — static package
+//!   power plus per-active-core idle and utilization-proportional dynamic
+//!   power `util · κ · V(f)² · f`, with voltage affine in frequency across
+//!   the P-state ladder, plus a DRAM term proportional to moved bytes.
+//! * **Yokogawa WT210 wall meter** (DIDCLab client) → [`NodeMeter`]: RAPL
+//!   plus a constant platform base (NIC, fans, VRs, disks idle).
+//!
+//! The cubic-ish growth of power in frequency (V scales with f, P with
+//! V²·f) is the physics the paper's load-control module exploits: finishing
+//! *slightly* slower at a much lower P-state usually wins on energy, unless
+//! race-to-idle effects dominate — both regimes exist in this model.
+
+mod model;
+mod meter;
+
+pub use meter::{EnergySample, NodeMeter, RaplMeter};
+pub use model::{standard_power, PowerModel, PowerParams};

@@ -1,0 +1,190 @@
+//! CMOS package power model.
+
+use crate::cpusim::CpuSpec;
+use crate::units::{Freq, Power};
+
+/// Parameters of the package power model (per CPU micro-architecture).
+#[derive(Debug, Clone)]
+pub struct PowerParams {
+    /// Uncore + LLC + memory controller static draw, W.
+    pub pkg_static_w: f64,
+    /// Per-active-core idle draw at min frequency, W.
+    pub core_idle_base_w: f64,
+    /// Additional per-core idle draw per GHz (clock tree, leakage w/ f), W.
+    pub core_idle_per_ghz_w: f64,
+    /// Dynamic coefficient κ in `P_dyn = util · κ · V(f)² · f_GHz`, W.
+    pub dyn_kappa: f64,
+    /// Core voltage at the bottom / top of the P-state ladder, V.
+    pub v_min: f64,
+    pub v_max: f64,
+    /// DRAM power per GB/s of moved data, W (RAPL DRAM domain).
+    pub dram_w_per_gbs: f64,
+}
+
+/// A CPU spec paired with its power parameters: everything needed to map a
+/// (cores, freq, utilization, traffic) operating point to watts.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub spec: CpuSpec,
+    pub params: PowerParams,
+}
+
+impl PowerModel {
+    pub fn new(spec: CpuSpec, params: PowerParams) -> Self {
+        PowerModel { spec, params }
+    }
+
+    /// Core voltage at frequency `f`: affine across the ladder.
+    pub fn voltage(&self, f: Freq) -> f64 {
+        let fmin = self.spec.min_freq().as_ghz();
+        let fmax = self.spec.max_freq().as_ghz();
+        if fmax <= fmin {
+            return self.params.v_max;
+        }
+        let t = ((f.as_ghz() - fmin) / (fmax - fmin)).clamp(0.0, 1.0);
+        self.params.v_min + (self.params.v_max - self.params.v_min) * t
+    }
+
+    /// Package power at an operating point.
+    ///
+    /// `utilization` is the average load of the *active* cores in [0, 1];
+    /// `bytes_per_sec` feeds the DRAM domain.
+    pub fn package_power(
+        &self,
+        active_cores: u32,
+        f: Freq,
+        utilization: f64,
+        bytes_per_sec: f64,
+    ) -> Power {
+        let util = utilization.clamp(0.0, 1.0);
+        let v = self.voltage(f);
+        let per_core_idle =
+            self.params.core_idle_base_w + self.params.core_idle_per_ghz_w * f.as_ghz();
+        let per_core_dyn = util * self.params.dyn_kappa * v * v * f.as_ghz();
+        let dram = self.params.dram_w_per_gbs * (bytes_per_sec / 1e9);
+        Power::from_watts(
+            self.params.pkg_static_w + active_cores as f64 * (per_core_idle + per_core_dyn) + dram,
+        )
+    }
+
+    /// Power with every core active at max frequency and full load —
+    /// the worst case (and roughly the TDP this model implies).
+    pub fn max_power(&self) -> Power {
+        self.package_power(self.spec.num_cores, self.spec.max_freq(), 1.0, 0.0)
+    }
+
+    /// Idle package power at the lowest setting.
+    pub fn floor_power(&self) -> Power {
+        self.package_power(1, self.spec.min_freq(), 0.0, 0.0)
+    }
+}
+
+/// Standard power parameters for the paper's CPU models. Calibrated so
+/// that: Haswell-EP 8-core full load ≈ 85 W package, idle ≈ 15 W;
+/// Bloomfield (45 nm, 2008) is markedly less efficient; Broadwell (14 nm)
+/// slightly better than Haswell.
+pub fn standard_power(spec: &CpuSpec) -> PowerModel {
+    let params = if spec.name.starts_with("Bloomfield") {
+        PowerParams {
+            pkg_static_w: 17.0,
+            core_idle_base_w: 3.6,
+            core_idle_per_ghz_w: 1.0,
+            dyn_kappa: 3.4,
+            v_min: 0.95,
+            v_max: 1.30,
+            dram_w_per_gbs: 3.0,
+        }
+    } else if spec.name.starts_with("Broadwell") {
+        PowerParams {
+            pkg_static_w: 10.0,
+            core_idle_base_w: 0.5,
+            core_idle_per_ghz_w: 0.28,
+            dyn_kappa: 1.7,
+            v_min: 0.65,
+            v_max: 1.05,
+            dram_w_per_gbs: 2.0,
+        }
+    } else {
+        // Haswell default.
+        PowerParams {
+            pkg_static_w: 12.0,
+            core_idle_base_w: 0.6,
+            core_idle_per_ghz_w: 0.30,
+            dyn_kappa: 1.9,
+            v_min: 0.70,
+            v_max: 1.10,
+            dram_w_per_gbs: 2.2,
+        }
+    };
+    PowerModel::new(spec.clone(), params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpusim::standard::*;
+
+    #[test]
+    fn haswell_envelope_is_realistic() {
+        let m = standard_power(&haswell_server());
+        let max = m.max_power().as_watts();
+        let idle = m.floor_power().as_watts();
+        assert!(max > 70.0 && max < 110.0, "max {max} W");
+        assert!(idle > 10.0 && idle < 20.0, "idle {idle} W");
+    }
+
+    #[test]
+    fn power_monotone_in_frequency() {
+        let m = standard_power(&haswell_server());
+        let mut prev = 0.0;
+        for &f in &m.spec.freq_levels.clone() {
+            let p = m.package_power(4, f, 0.7, 1e9).as_watts();
+            assert!(p > prev, "power must rise with f: {p} after {prev}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn power_monotone_in_cores_and_util() {
+        let m = standard_power(&broadwell_client());
+        let f = Freq::from_ghz(2.0);
+        assert!(m.package_power(4, f, 0.5, 0.0) > m.package_power(2, f, 0.5, 0.0));
+        assert!(m.package_power(4, f, 0.9, 0.0) > m.package_power(4, f, 0.2, 0.0));
+    }
+
+    #[test]
+    fn frequency_scaling_is_superlinear() {
+        // Doubling f should more than double the *dynamic* term (V rises too).
+        let m = standard_power(&haswell_server());
+        let lo = Freq::from_ghz(1.6);
+        let hi = Freq::from_ghz(3.2);
+        let p_lo = m.package_power(1, lo, 1.0, 0.0).as_watts() - m.package_power(1, lo, 0.0, 0.0).as_watts();
+        let p_hi = m.package_power(1, hi, 1.0, 0.0).as_watts() - m.package_power(1, hi, 0.0, 0.0).as_watts();
+        assert!(p_hi > 2.2 * p_lo, "dynamic power superlinear: {p_hi} vs {p_lo}");
+    }
+
+    #[test]
+    fn bloomfield_less_efficient_than_haswell() {
+        let hw = standard_power(&haswell_client());
+        let bf = standard_power(&bloomfield_client());
+        // Same work (1 core, ~2.4 GHz-ish, full util): Bloomfield burns more.
+        let p_hw = hw.package_power(1, Freq::from_ghz(2.4), 1.0, 0.5e9).as_watts();
+        let p_bf = bf.package_power(1, Freq::from_ghz(2.4), 1.0, 0.5e9).as_watts();
+        assert!(p_bf > 1.4 * p_hw, "bloomfield {p_bf} vs haswell {p_hw}");
+    }
+
+    #[test]
+    fn voltage_clamps_at_ladder_ends() {
+        let m = standard_power(&haswell_server());
+        assert_eq!(m.voltage(Freq::from_ghz(0.1)), m.params.v_min);
+        assert_eq!(m.voltage(Freq::from_ghz(9.9)), m.params.v_max);
+    }
+
+    #[test]
+    fn utilization_clamped() {
+        let m = standard_power(&haswell_server());
+        let a = m.package_power(2, Freq::from_ghz(2.0), 5.0, 0.0);
+        let b = m.package_power(2, Freq::from_ghz(2.0), 1.0, 0.0);
+        assert_eq!(a, b);
+    }
+}

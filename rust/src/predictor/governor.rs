@@ -1,0 +1,186 @@
+//! The predictive governor — GreenDT's model-driven alternative to the
+//! paper's threshold-based Algorithm 3.
+//!
+//! Every timeout it evaluates the full (cores × P-state) grid at the
+//! current channel count through the compiled JAX/Pallas predictor and
+//! jumps straight to the best operating point for the SLA, instead of
+//! stepping one level at a time. The ablation bench
+//! (`cargo bench --bench bench_predictor`) compares the two policies.
+
+use super::{cpu_grid, Predictor};
+use crate::coordinator::load_control::Governor;
+use crate::cpusim::CpuState;
+use crate::power::standard_power;
+use crate::sim::Telemetry;
+use crate::units::Freq;
+
+/// What "best" means for the SLA being served.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PredictMode {
+    /// Minimize projected energy to completion.
+    MinEnergy,
+    /// Maximize throughput; break ties on power.
+    MaxThroughput,
+    /// Cheapest point that sustains the target (bytes/s); if none can,
+    /// fall back to the fastest.
+    Target(f64),
+}
+
+#[derive(Debug)]
+pub struct PredictiveGovernor {
+    predictor: Predictor,
+    mode: PredictMode,
+}
+
+impl PredictiveGovernor {
+    pub fn new(predictor: Predictor, mode: PredictMode) -> Self {
+        PredictiveGovernor { predictor, mode }
+    }
+
+    /// Production constructor: artifact from `GREENDT_PREDICTOR` (default
+    /// `artifacts/predictor.hlo.txt`), oracle fallback.
+    pub fn from_env(mode: PredictMode) -> Self {
+        PredictiveGovernor { predictor: Predictor::load_or_oracle(), mode }
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        self.predictor.is_pjrt()
+    }
+
+    pub fn mode(&self) -> PredictMode {
+        self.mode
+    }
+}
+
+impl Governor for PredictiveGovernor {
+    fn control(&mut self, telemetry: &Telemetry, cpu: &mut CpuState) {
+        // Nothing to decide before any data has moved.
+        if telemetry.net.avg_file_bytes <= 0.0 || telemetry.remaining.is_zero() {
+            return;
+        }
+        let power = standard_power(cpu.spec());
+        let state = super::build_state(telemetry, &power);
+        let cands = cpu_grid(cpu.spec(), telemetry.num_channels.max(1));
+        let preds = match self.predictor.predict(&cands, &state) {
+            Ok(p) => p,
+            Err(e) => {
+                log::warn!("predictive governor evaluation failed: {e:#}");
+                return;
+            }
+        };
+
+        let mut best: Option<(usize, f64)> = None;
+        for (i, p) in preds.iter().enumerate() {
+            let score = match self.mode {
+                PredictMode::MinEnergy => -p.energy_j,
+                PredictMode::MaxThroughput => p.tput_bps * 1e3 - p.power_w,
+                PredictMode::Target(target) => {
+                    if p.tput_bps + 1e-6 >= target {
+                        1e18 - p.energy_j // feasible: cheapest wins
+                    } else {
+                        p.tput_bps // infeasible: fastest wins
+                    }
+                }
+            };
+            if best.map(|(_, s)| score > s).unwrap_or(true) {
+                best = Some((i, score));
+            }
+        }
+        if let Some((i, _)) = best {
+            let c = cands[i];
+            cpu.apply(c.cores as u32, Freq::from_ghz(c.freq_ghz as f64));
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "predictive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpusim::standard::broadwell_client;
+    use crate::sim::NetView;
+    use crate::units::{Bytes, Energy, Power, Rate, SimDuration, SimTime};
+
+    fn cloudlab_tel(channels: u32) -> Telemetry {
+        Telemetry {
+            now: SimTime::from_secs(10.0),
+            avg_throughput: Rate::from_mbps(900.0),
+            interval_energy: Energy::from_joules(50.0),
+            avg_power: Power::from_watts(25.0),
+            cpu_load: 0.2,
+            remaining: Bytes::from_gb(10.0),
+            total: Bytes::from_gb(12.0),
+            elapsed: SimDuration::from_secs(10.0),
+            num_channels: channels,
+            open_streams: channels as usize,
+            net: NetView {
+                available_bps: 115e6,
+                rtt_s: 0.036,
+                avg_win_bytes: 1e6,
+                knee_streams: 4.5,
+                overload_gamma: 0.02,
+                overload_floor: 0.55,
+                parallelism: 1.0,
+                avg_file_bytes: 2.4e6,
+                pp_level: 2.0,
+            },
+        }
+    }
+
+    #[test]
+    fn min_energy_mode_downscales_on_slow_network() {
+        // 1 Gbps path, 10-core Broadwell: the grid's energy optimum is a
+        // small low-frequency configuration, not the performance governor.
+        let mut g = PredictiveGovernor::new(Predictor::oracle(), PredictMode::MinEnergy);
+        let mut cpu = CpuState::performance(broadwell_client());
+        g.control(&cloudlab_tel(6), &mut cpu);
+        assert!(cpu.active_cores() <= 3, "cores {}", cpu.active_cores());
+        assert!(cpu.freq().as_ghz() <= 2.0, "freq {}", cpu.freq());
+    }
+
+    #[test]
+    fn max_throughput_mode_keeps_enough_capacity() {
+        let mut g = PredictiveGovernor::new(Predictor::oracle(), PredictMode::MaxThroughput);
+        let mut cpu = CpuState::min_energy_start(broadwell_client());
+        g.control(&cloudlab_tel(6), &mut cpu);
+        // 1 Gbps needs well under one fast core; whatever is chosen must
+        // sustain the network-bound throughput.
+        let spec = cpu.spec().clone();
+        let cap = spec.achievable_bytes_per_sec(
+            cpu.active_cores(),
+            cpu.freq(),
+            60.0,
+            6.0,
+            crate::sim::MAX_APP_UTILIZATION,
+        );
+        assert!(cap >= 110e6, "cap {cap}");
+    }
+
+    #[test]
+    fn target_mode_prefers_cheapest_feasible() {
+        let mut g =
+            PredictiveGovernor::new(Predictor::oracle(), PredictMode::Target(50e6));
+        let mut cpu = CpuState::performance(broadwell_client());
+        g.control(&cloudlab_tel(2), &mut cpu);
+        assert!(
+            cpu.active_cores() <= 2 && cpu.freq().as_ghz() <= 2.0,
+            "target mode should pick a small point: {} cores @ {}",
+            cpu.active_cores(),
+            cpu.freq()
+        );
+    }
+
+    #[test]
+    fn empty_interval_is_a_noop() {
+        let mut g = PredictiveGovernor::new(Predictor::oracle(), PredictMode::MinEnergy);
+        let mut cpu = CpuState::performance(broadwell_client());
+        let mut tel = cloudlab_tel(4);
+        tel.net.avg_file_bytes = 0.0;
+        let before = (cpu.active_cores(), cpu.freq());
+        g.control(&tel, &mut cpu);
+        assert_eq!(before, (cpu.active_cores(), cpu.freq()));
+    }
+}

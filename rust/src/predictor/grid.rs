@@ -1,0 +1,152 @@
+//! Candidate grids and state-vector assembly.
+
+use super::layout as L;
+use crate::cpusim::CpuSpec;
+use crate::power::PowerModel;
+use crate::sim::Telemetry;
+
+/// One operating point to evaluate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub channels: f32,
+    pub cores: f32,
+    pub freq_ghz: f32,
+}
+
+/// Model output for one candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    /// Application throughput, bytes/s.
+    pub tput_bps: f64,
+    /// Client package power, W.
+    pub power_w: f64,
+    /// Projected energy to completion, J.
+    pub energy_j: f64,
+}
+
+/// Full (cores × P-state) grid at a fixed channel count — what the
+/// predictive governor evaluates each timeout. Truncated to the artifact
+/// grid size if the CPU is large.
+pub fn cpu_grid(spec: &CpuSpec, channels: u32) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    'outer: for cores in 1..=spec.num_cores {
+        for &f in &spec.freq_levels {
+            out.push(Candidate {
+                channels: channels.max(1) as f32,
+                cores: cores as f32,
+                freq_ghz: f.as_ghz() as f32,
+            });
+            if out.len() == L::NUM_CANDIDATES {
+                break 'outer;
+            }
+        }
+    }
+    out
+}
+
+/// Assemble the state vector from interval telemetry + the client's power
+/// model (see `layout` for slot semantics).
+pub fn build_state(tel: &Telemetry, power: &PowerModel) -> Vec<f32> {
+    let spec = &power.spec;
+    let mut s = vec![0f32; L::STATE_WIDTH];
+    s[L::S_CAPACITY_BPS] = tel.net.available_bps as f32;
+    s[L::S_RTT_S] = tel.net.rtt_s as f32;
+    s[L::S_AVG_WIN_BYTES] = tel.net.avg_win_bytes as f32;
+    s[L::S_KNEE_STREAMS] = tel.net.knee_streams as f32;
+    s[L::S_OVERLOAD_GAMMA] = tel.net.overload_gamma as f32;
+    s[L::S_OVERLOAD_FLOOR] = tel.net.overload_floor as f32;
+    s[L::S_PARALLELISM] = tel.net.parallelism as f32;
+    s[L::S_REMAINING_BYTES] = tel.remaining.as_f64() as f32;
+    s[L::S_AVG_FILE_BYTES] = tel.net.avg_file_bytes as f32;
+    s[L::S_PP_LEVEL] = tel.net.pp_level as f32;
+    s[L::S_CYCLES_PER_BYTE] = spec.cycles_per_byte as f32;
+    s[L::S_CYCLES_PER_REQ] = spec.cycles_per_request as f32;
+    s[L::S_CYCLES_PER_STREAM] = spec.cycles_per_stream_sec as f32;
+    s[L::S_MAX_APP_UTIL] = crate::sim::MAX_APP_UTILIZATION as f32;
+    s[L::S_PKG_STATIC_W] = power.params.pkg_static_w as f32;
+    s[L::S_CORE_IDLE_BASE_W] = power.params.core_idle_base_w as f32;
+    s[L::S_CORE_IDLE_PER_GHZ_W] = power.params.core_idle_per_ghz_w as f32;
+    s[L::S_DYN_KAPPA] = power.params.dyn_kappa as f32;
+    s[L::S_V_MIN] = power.params.v_min as f32;
+    s[L::S_V_MAX] = power.params.v_max as f32;
+    s[L::S_F_MIN_GHZ] = spec.min_freq().as_ghz() as f32;
+    s[L::S_F_MAX_GHZ] = spec.max_freq().as_ghz() as f32;
+    s[L::S_DRAM_W_PER_GBS] = power.params.dram_w_per_gbs as f32;
+    s
+}
+
+/// CloudLab-flavoured demo state, mirroring `model.demo_state()` in
+/// Python — shared by unit tests and the parity integration test.
+pub fn demo_state() -> Vec<f32> {
+    let mut s = vec![0f32; L::STATE_WIDTH];
+    s[L::S_CAPACITY_BPS] = 115e6;
+    s[L::S_RTT_S] = 0.036;
+    s[L::S_AVG_WIN_BYTES] = 1e6;
+    s[L::S_KNEE_STREAMS] = 4.5;
+    s[L::S_OVERLOAD_GAMMA] = 0.02;
+    s[L::S_OVERLOAD_FLOOR] = 0.55;
+    s[L::S_PARALLELISM] = 1.0;
+    s[L::S_REMAINING_BYTES] = 10e9;
+    s[L::S_AVG_FILE_BYTES] = 2.4e6;
+    s[L::S_PP_LEVEL] = 2.0;
+    s[L::S_CYCLES_PER_BYTE] = 2.2;
+    s[L::S_CYCLES_PER_REQ] = 11_000.0;
+    s[L::S_CYCLES_PER_STREAM] = 1.4e6;
+    s[L::S_MAX_APP_UTIL] = 0.92;
+    s[L::S_PKG_STATIC_W] = 10.0;
+    s[L::S_CORE_IDLE_BASE_W] = 0.5;
+    s[L::S_CORE_IDLE_PER_GHZ_W] = 0.28;
+    s[L::S_DYN_KAPPA] = 1.7;
+    s[L::S_V_MIN] = 0.65;
+    s[L::S_V_MAX] = 1.05;
+    s[L::S_F_MIN_GHZ] = 1.2;
+    s[L::S_F_MAX_GHZ] = 3.4;
+    s[L::S_DRAM_W_PER_GBS] = 2.0;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpusim::standard::*;
+
+    #[test]
+    fn grid_covers_cores_times_freqs() {
+        let spec = haswell_server();
+        let g = cpu_grid(&spec, 6);
+        assert_eq!(g.len(), (spec.num_cores as usize * spec.freq_levels.len()).min(128));
+        assert!(g.iter().all(|c| c.channels == 6.0));
+        assert!(g.iter().all(|c| c.cores >= 1.0 && c.cores <= 8.0));
+    }
+
+    #[test]
+    fn grid_truncates_at_artifact_size() {
+        let mut spec = broadwell_client();
+        spec.num_cores = 64;
+        let g = cpu_grid(&spec, 1);
+        assert_eq!(g.len(), L::NUM_CANDIDATES);
+    }
+
+    #[test]
+    fn state_vector_has_layout_width() {
+        let tel = crate::sim::Telemetry {
+            now: crate::units::SimTime::ZERO,
+            avg_throughput: crate::units::Rate::from_mbps(100.0),
+            interval_energy: crate::units::Energy::from_joules(1.0),
+            avg_power: crate::units::Power::from_watts(20.0),
+            cpu_load: 0.5,
+            remaining: crate::units::Bytes::from_gb(1.0),
+            total: crate::units::Bytes::from_gb(2.0),
+            elapsed: crate::units::SimDuration::from_secs(1.0),
+            num_channels: 2,
+            open_streams: 2,
+            net: Default::default(),
+        };
+        let pm = crate::power::standard_power(&haswell_server());
+        let s = build_state(&tel, &pm);
+        assert_eq!(s.len(), L::STATE_WIDTH);
+        assert_eq!(s[L::S_CYCLES_PER_BYTE], 2.4);
+        let spec = haswell_server();
+        assert!((s[L::S_F_MAX_GHZ] as f64 - spec.max_freq().as_ghz()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,63 @@
+//! Interchange layout with the AOT predictor artifact.
+//!
+//! **Mirror of `python/compile/kernels/layout.py`** — keep in sync. The
+//! `predictor_parity` integration test executes the compiled artifact
+//! against [`super::reference`] and fails on drift.
+
+pub const NUM_CANDIDATES: usize = 128;
+pub const TILE: usize = 32;
+
+pub const CAND_WIDTH: usize = 3;
+pub const CAND_CHANNELS: usize = 0;
+pub const CAND_CORES: usize = 1;
+pub const CAND_FREQ_GHZ: usize = 2;
+
+pub const STATE_WIDTH: usize = 24;
+pub const S_CAPACITY_BPS: usize = 0;
+pub const S_RTT_S: usize = 1;
+pub const S_AVG_WIN_BYTES: usize = 2;
+pub const S_KNEE_STREAMS: usize = 3;
+pub const S_OVERLOAD_GAMMA: usize = 4;
+pub const S_OVERLOAD_FLOOR: usize = 5;
+pub const S_PARALLELISM: usize = 6;
+pub const S_REMAINING_BYTES: usize = 7;
+pub const S_AVG_FILE_BYTES: usize = 8;
+pub const S_PP_LEVEL: usize = 9;
+pub const S_CYCLES_PER_BYTE: usize = 10;
+pub const S_CYCLES_PER_REQ: usize = 11;
+pub const S_CYCLES_PER_STREAM: usize = 12;
+pub const S_MAX_APP_UTIL: usize = 13;
+pub const S_PKG_STATIC_W: usize = 14;
+pub const S_CORE_IDLE_BASE_W: usize = 15;
+pub const S_CORE_IDLE_PER_GHZ_W: usize = 16;
+pub const S_DYN_KAPPA: usize = 17;
+pub const S_V_MIN: usize = 18;
+pub const S_V_MAX: usize = 19;
+pub const S_F_MIN_GHZ: usize = 20;
+pub const S_F_MAX_GHZ: usize = 21;
+pub const S_DRAM_W_PER_GBS: usize = 22;
+pub const S_RESERVED: usize = 23;
+
+pub const OUT_WIDTH: usize = 3;
+pub const OUT_TPUT_BPS: usize = 0;
+pub const OUT_POWER_W: usize = 1;
+pub const OUT_ENERGY_J: usize = 2;
+
+/// Energy assigned to infeasible candidates (mirrors the Python constant).
+pub const INFEASIBLE_ENERGY: f32 = 1e30;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_tiles_evenly() {
+        assert_eq!(NUM_CANDIDATES % TILE, 0);
+    }
+
+    #[test]
+    fn state_indices_dense() {
+        // The last index must be the final slot.
+        assert_eq!(S_RESERVED, STATE_WIDTH - 1);
+    }
+}

@@ -1,0 +1,141 @@
+//! The energy/throughput predictor: Layer 2/1 consumed from Layer 3.
+//!
+//! The predictor evaluates a grid of candidate operating points
+//! (channels, active cores, CPU frequency) against the analytic transfer
+//! model and returns `(throughput, power, energy)` per candidate. Two
+//! interchangeable backends:
+//!
+//! * [`Backend::Pjrt`] — the JAX/Pallas model AOT-compiled to
+//!   `artifacts/predictor.hlo.txt`, executed through [`crate::runtime`]
+//!   (the production path; Python never runs at transfer time);
+//! * [`Backend::Oracle`] — a bit-compatible pure-Rust implementation
+//!   ([`reference`]), used as fallback when the artifact is absent and as
+//!   the parity check in tests.
+//!
+//! [`PredictiveGovernor`] is the GreenDT extension of the paper's
+//! Algorithm 3: instead of threshold steps it picks the best whole
+//! operating point for the SLA each timeout.
+
+pub mod layout;
+pub mod reference;
+mod grid;
+mod governor;
+
+pub use governor::{PredictMode, PredictiveGovernor};
+pub use grid::{build_state, cpu_grid, Candidate, Prediction};
+
+/// The shared demo state (mirrors Python's `model.demo_state()`), exposed
+/// for integration tests and benches.
+pub fn demo_state_for_tests() -> Vec<f32> {
+    grid::demo_state()
+}
+
+use crate::runtime::{ArrayF32, Executable};
+use anyhow::Result;
+
+/// Prediction backend.
+#[derive(Debug)]
+pub enum Backend {
+    /// AOT-compiled JAX/Pallas model via PJRT.
+    Pjrt(Executable),
+    /// Pure-Rust oracle (identical math).
+    Oracle,
+}
+
+/// A loaded predictor.
+#[derive(Debug)]
+pub struct Predictor {
+    backend: Backend,
+}
+
+impl Predictor {
+    /// Load the PJRT artifact, falling back to the oracle when missing.
+    pub fn load_or_oracle() -> Predictor {
+        let path = crate::runtime::default_predictor_path();
+        match Executable::load_hlo_text(&path) {
+            Ok(exe) => Predictor { backend: Backend::Pjrt(exe) },
+            Err(e) => {
+                log::warn!("predictor artifact unavailable ({e:#}); using Rust oracle");
+                Predictor { backend: Backend::Oracle }
+            }
+        }
+    }
+
+    pub fn oracle() -> Predictor {
+        Predictor { backend: Backend::Oracle }
+    }
+
+    pub fn from_artifact(path: &str) -> Result<Predictor> {
+        Ok(Predictor { backend: Backend::Pjrt(Executable::load_hlo_text(path)?) })
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self.backend, Backend::Pjrt(_))
+    }
+
+    /// Evaluate candidates (padded internally to the artifact's grid size).
+    pub fn predict(&self, cands: &[Candidate], state: &[f32]) -> Result<Vec<Prediction>> {
+        anyhow::ensure!(
+            state.len() == layout::STATE_WIDTH,
+            "state width {} != {}",
+            state.len(),
+            layout::STATE_WIDTH
+        );
+        anyhow::ensure!(
+            cands.len() <= layout::NUM_CANDIDATES,
+            "too many candidates: {} > {}",
+            cands.len(),
+            layout::NUM_CANDIDATES
+        );
+        match &self.backend {
+            Backend::Oracle => Ok(cands
+                .iter()
+                .map(|c| reference::predict_one(c, state))
+                .collect()),
+            Backend::Pjrt(exe) => {
+                let mut flat = vec![0f32; layout::NUM_CANDIDATES * layout::CAND_WIDTH];
+                for (i, c) in cands.iter().enumerate() {
+                    flat[i * layout::CAND_WIDTH] = c.channels;
+                    flat[i * layout::CAND_WIDTH + 1] = c.cores;
+                    flat[i * layout::CAND_WIDTH + 2] = c.freq_ghz;
+                }
+                let cand_arr =
+                    ArrayF32::new(vec![layout::NUM_CANDIDATES, layout::CAND_WIDTH], flat)?;
+                let state_arr = ArrayF32::vector(state.to_vec());
+                let outs = exe.run_f32(&[cand_arr, state_arr])?;
+                let out = &outs[0];
+                Ok((0..cands.len())
+                    .map(|i| Prediction {
+                        tput_bps: out[i * layout::OUT_WIDTH] as f64,
+                        power_w: out[i * layout::OUT_WIDTH + 1] as f64,
+                        energy_j: out[i * layout::OUT_WIDTH + 2] as f64,
+                    })
+                    .collect())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_backend_predicts() {
+        let p = Predictor::oracle();
+        let cands = vec![Candidate { channels: 4.0, cores: 2.0, freq_ghz: 2.0 }];
+        let state = grid::demo_state();
+        let out = p.predict(&cands, &state).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].tput_bps > 0.0);
+        assert!(out[0].power_w > 0.0);
+        assert!(out[0].energy_j > 0.0);
+    }
+
+    #[test]
+    fn state_width_checked() {
+        let p = Predictor::oracle();
+        let cands = vec![Candidate { channels: 1.0, cores: 1.0, freq_ghz: 1.0 }];
+        assert!(p.predict(&cands, &[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Pure-Rust predictor oracle — formula-for-formula mirror of
+//! `python/compile/kernels/ref.py` (all arithmetic in f32 so PJRT and
+//! oracle agree to float tolerance).
+
+use super::grid::{Candidate, Prediction};
+use super::layout as L;
+
+const EPS: f32 = 1e-9;
+
+/// Evaluate one candidate against a state vector.
+pub fn predict_one(cand: &Candidate, state: &[f32]) -> Prediction {
+    debug_assert_eq!(state.len(), L::STATE_WIDTH);
+    let channels = cand.channels;
+    let cores = cand.cores;
+    let freq = cand.freq_ghz;
+
+    let capacity = state[L::S_CAPACITY_BPS];
+    let rtt = state[L::S_RTT_S];
+    let avg_win = state[L::S_AVG_WIN_BYTES];
+    let knee = state[L::S_KNEE_STREAMS];
+    let gamma = state[L::S_OVERLOAD_GAMMA];
+    let floor = state[L::S_OVERLOAD_FLOOR];
+    let par = state[L::S_PARALLELISM];
+    let remaining = state[L::S_REMAINING_BYTES];
+    let avg_file = state[L::S_AVG_FILE_BYTES];
+    let pp = state[L::S_PP_LEVEL];
+    let cpb = state[L::S_CYCLES_PER_BYTE];
+    let cpr = state[L::S_CYCLES_PER_REQ];
+    let cps = state[L::S_CYCLES_PER_STREAM];
+    let max_util = state[L::S_MAX_APP_UTIL];
+
+    // Network: window-limited aggregate with overload penalty.
+    let streams = channels * par;
+    let win_rate = avg_win / rtt.max(EPS);
+    let over = (streams - knee).max(0.0) / knee.max(EPS);
+    let penalty = (1.0 / (1.0 + gamma * over)).max(floor);
+    let net = (streams * win_rate).min(capacity * penalty);
+
+    // Pipelining pacing.
+    let r_chan = net / channels.max(EPS);
+    let xfer = avg_file / r_chan.max(EPS);
+    let paced = xfer.max(rtt / pp.max(1.0));
+    let eff = xfer / paced.max(EPS);
+    let net_eff = net * eff;
+
+    // CPU ceiling.
+    let cap_cycles = cores * freq * 1e9 * max_util;
+    let req_rate_net = net_eff / avg_file.max(EPS);
+    let overhead = req_rate_net * cpr + streams * cps;
+    let cpu_bytes = (cap_cycles - overhead).max(0.0) / cpb.max(EPS);
+    let tput = net_eff.min(cpu_bytes);
+
+    // Utilization at the achieved rate.
+    let req_rate = tput / avg_file.max(EPS);
+    let demand = tput * cpb + req_rate * cpr + streams * cps;
+    let cap_full = cores * freq * 1e9;
+    let load = demand / cap_full.max(EPS);
+    let util = load.clamp(0.0, 1.0);
+
+    // Package power.
+    let v_min = state[L::S_V_MIN];
+    let v_max = state[L::S_V_MAX];
+    let f_min = state[L::S_F_MIN_GHZ];
+    let f_max = state[L::S_F_MAX_GHZ];
+    let t = ((freq - f_min) / (f_max - f_min).max(EPS)).clamp(0.0, 1.0);
+    let v = v_min + (v_max - v_min) * t;
+    let per_core_idle = state[L::S_CORE_IDLE_BASE_W] + state[L::S_CORE_IDLE_PER_GHZ_W] * freq;
+    let per_core_dyn = util * state[L::S_DYN_KAPPA] * v * v * freq;
+    let dram = state[L::S_DRAM_W_PER_GBS] * tput / 1e9;
+    let power = state[L::S_PKG_STATIC_W] + cores * (per_core_idle + per_core_dyn) + dram;
+
+    let feasible = tput > EPS;
+    let energy = if feasible {
+        power * remaining / tput.max(EPS)
+    } else {
+        L::INFEASIBLE_ENERGY
+    };
+
+    Prediction {
+        tput_bps: if feasible { tput as f64 } else { 0.0 },
+        power_w: power as f64,
+        energy_j: energy as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::grid::demo_state;
+
+    fn cand(ch: f32, cores: f32, f: f32) -> Candidate {
+        Candidate { channels: ch, cores, freq_ghz: f }
+    }
+
+    #[test]
+    fn zero_cores_is_infeasible() {
+        let p = predict_one(&cand(4.0, 0.0, 0.0), &demo_state());
+        assert_eq!(p.tput_bps, 0.0);
+        assert!(p.energy_j >= 1e29);
+    }
+
+    #[test]
+    fn throughput_monotone_in_cores_until_network_bound() {
+        let s = demo_state();
+        let mut prev = 0.0;
+        for cores in 1..=10 {
+            let p = predict_one(&cand(6.0, cores as f32, 2.0), &s);
+            assert!(p.tput_bps >= prev - 1e-3, "cores {cores}");
+            prev = p.tput_bps;
+        }
+    }
+
+    #[test]
+    fn power_monotone_in_frequency() {
+        let s = demo_state();
+        let mut prev = 0.0;
+        for i in 0..12 {
+            let f = 1.2 + 0.2 * i as f32;
+            let p = predict_one(&cand(6.0, 4.0, f), &s);
+            assert!(p.power_w > prev, "f {f}");
+            prev = p.power_w;
+        }
+    }
+
+    #[test]
+    fn network_bound_energy_favors_low_frequency() {
+        // On the CloudLab-like demo state, 2 cores cover 1 Gbps easily:
+        // the energy-optimal frequency is at/near the bottom of the ladder.
+        let s = demo_state();
+        let mut best = (f64::MAX, 0.0f32);
+        for i in 0..12 {
+            let f = 1.2 + 0.2 * i as f32;
+            let p = predict_one(&cand(6.0, 2.0, f), &s);
+            if p.energy_j < best.0 {
+                best = (p.energy_j, f);
+            }
+        }
+        assert!(best.1 <= 1.6, "best frequency {} GHz", best.1);
+    }
+
+    #[test]
+    fn more_channels_saturate_then_cost_power() {
+        let s = demo_state();
+        let p4 = predict_one(&cand(4.0, 4.0, 2.0), &s);
+        let p12 = predict_one(&cand(12.0, 4.0, 2.0), &s);
+        assert!(p12.tput_bps <= p4.tput_bps * 1.25, "saturation");
+        assert!(p12.power_w > p4.power_w, "streams cost cycles -> power");
+    }
+}

@@ -1,0 +1,168 @@
+//! Sampling distributions over [`Xoshiro256`].
+
+use super::Xoshiro256;
+
+/// A samplable distribution over `f64`.
+pub trait Distribution {
+    fn sample(&self, rng: &mut Xoshiro256) -> f64;
+}
+
+/// Uniform over [lo, hi).
+#[derive(Debug, Clone, Copy)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi >= lo, "Uniform requires hi >= lo");
+        Uniform { lo, hi }
+    }
+}
+
+impl Distribution for Uniform {
+    fn sample(&self, rng: &mut Xoshiro256) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+}
+
+/// Normal(mean, std) via Marsaglia's polar method.
+#[derive(Debug, Clone, Copy)]
+pub struct Normal {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0, "Normal requires std >= 0");
+        Normal { mean, std }
+    }
+}
+
+impl Distribution for Normal {
+    fn sample(&self, rng: &mut Xoshiro256) -> f64 {
+        // Polar Box-Muller; draw pairs until inside the unit circle.
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let z = u * (-2.0 * s.ln() / s).sqrt();
+                return self.mean + self.std * z;
+            }
+        }
+    }
+}
+
+/// LogNormal parameterized by the **target** mean and std of the samples
+/// (not of the underlying normal), matching how Table II reports datasets
+/// (avg file size + std dev).
+#[derive(Debug, Clone, Copy)]
+pub struct LogNormal {
+    mu: f64,
+    sigma: f64,
+}
+
+impl LogNormal {
+    /// Build from desired sample mean `m` and standard deviation `s`.
+    pub fn from_mean_std(m: f64, s: f64) -> Self {
+        assert!(m > 0.0, "LogNormal mean must be positive");
+        let v = s * s;
+        let sigma2 = (1.0 + v / (m * m)).ln();
+        let mu = m.ln() - sigma2 / 2.0;
+        LogNormal { mu, sigma: sigma2.sqrt() }
+    }
+
+    pub fn mu(&self) -> f64 {
+        self.mu
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+}
+
+impl Distribution for LogNormal {
+    fn sample(&self, rng: &mut Xoshiro256) -> f64 {
+        let n = Normal::new(self.mu, self.sigma).sample(rng);
+        n.exp()
+    }
+}
+
+/// Exponential with rate `lambda` (mean 1/lambda). Used for event
+/// inter-arrival times in the background-traffic process.
+#[derive(Debug, Clone, Copy)]
+pub struct Exponential {
+    pub lambda: f64,
+}
+
+impl Exponential {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0, "Exponential requires lambda > 0");
+        Exponential { lambda }
+    }
+}
+
+impl Distribution for Exponential {
+    fn sample(&self, rng: &mut Xoshiro256) -> f64 {
+        // Inverse CDF; guard against ln(0).
+        let u = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
+        -u.ln() / self.lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(samples: &[f64]) -> (f64, f64) {
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var.sqrt())
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Xoshiro256::seeded(1);
+        let d = Uniform::new(2.0, 6.0);
+        let xs: Vec<f64> = (0..50_000).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| (2.0..6.0).contains(&x)));
+        let (mean, _) = stats(&xs);
+        assert!((mean - 4.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_mean_std() {
+        let mut rng = Xoshiro256::seeded(2);
+        let d = Normal::new(10.0, 3.0);
+        let xs: Vec<f64> = (0..100_000).map(|_| d.sample(&mut rng)).collect();
+        let (mean, std) = stats(&xs);
+        assert!((mean - 10.0).abs() < 0.05, "mean {mean}");
+        assert!((std - 3.0).abs() < 0.05, "std {std}");
+    }
+
+    #[test]
+    fn lognormal_matches_table2_small_files() {
+        // Table II small files: avg 101.92 KB, std 29.06 KB.
+        let mut rng = Xoshiro256::seeded(3);
+        let d = LogNormal::from_mean_std(101.92e3, 29.06e3);
+        let xs: Vec<f64> = (0..100_000).map(|_| d.sample(&mut rng)).collect();
+        let (mean, std) = stats(&xs);
+        assert!((mean / 101.92e3 - 1.0).abs() < 0.02, "mean {mean}");
+        assert!((std / 29.06e3 - 1.0).abs() < 0.05, "std {std}");
+        assert!(xs.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Xoshiro256::seeded(4);
+        let d = Exponential::new(0.5); // mean 2.0
+        let xs: Vec<f64> = (0..100_000).map(|_| d.sample(&mut rng)).collect();
+        let (mean, _) = stats(&xs);
+        assert!((mean - 2.0).abs() < 0.05, "mean {mean}");
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+}

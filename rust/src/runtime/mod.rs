@@ -1,0 +1,149 @@
+//! PJRT runtime: load and execute AOT-compiled XLA artifacts from Rust.
+//!
+//! The Python layers (JAX model + Pallas kernel) are lowered once at build
+//! time to HLO **text** (`make artifacts`); this module loads that text,
+//! compiles it on the PJRT CPU client, and executes it on the
+//! coordinator's decision path. Python never runs at transfer time.
+//!
+//! HLO text — not a serialized `HloModuleProto` — is the interchange
+//! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A dense f32 tensor with row-major shape, the runtime's argument type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl ArrayF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let expect: usize = shape.iter().product();
+        anyhow::ensure!(
+            expect == data.len(),
+            "shape {:?} wants {} elements, got {}",
+            shape,
+            expect,
+            data.len()
+        );
+        Ok(ArrayF32 { shape, data })
+    }
+
+    pub fn vector(data: Vec<f32>) -> Self {
+        ArrayF32 { shape: vec![data.len()], data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Thread-local PJRT CPU client: the `xla` crate's client is `Rc`-based
+/// (not `Send`), so each session thread owns one. Creation is cheap next
+/// to compilation, and executables are compiled once per [`Executable`].
+fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    thread_local! {
+        static CLIENT: once_cell::unsync::OnceCell<xla::PjRtClient> =
+            const { once_cell::unsync::OnceCell::new() };
+    }
+    CLIENT.with(|cell| {
+        let client = cell.get_or_try_init(|| {
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")
+        })?;
+        f(client)
+    })
+}
+
+/// A compiled XLA executable loaded from an HLO-text artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: String,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").field("path", &self.path).finish()
+    }
+}
+
+impl Executable {
+    /// Load HLO text from `path` and compile it on the CPU client.
+    pub fn load_hlo_text(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text at {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|client| {
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        })?;
+        Ok(Executable { exe, path: path.display().to_string() })
+    }
+
+    /// Execute with f32 inputs; returns the elements of the output tuple
+    /// as flat f32 buffers (jax lowers with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[ArrayF32]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for a in inputs {
+            let shape: Vec<i64> = a.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&a.data)
+                .reshape(&shape)
+                .with_context(|| format!("reshaping input to {:?}", a.shape))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.path))?;
+        let out = result[0][0].to_literal_sync().context("fetching result buffer")?;
+        // Unpack the tuple: jax's return_tuple=True wraps outputs.
+        let elements = out.to_tuple().context("untupling result")?;
+        let mut vecs = Vec::with_capacity(elements.len());
+        for e in elements {
+            vecs.push(e.to_vec::<f32>().context("reading f32 output")?);
+        }
+        Ok(vecs)
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+/// Default artifact location, overridable with `GREENDT_PREDICTOR`.
+pub fn default_predictor_path() -> String {
+    std::env::var("GREENDT_PREDICTOR").unwrap_or_else(|_| "artifacts/predictor.hlo.txt".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn array_shape_validation() {
+        assert!(ArrayF32::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(ArrayF32::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let v = ArrayF32::vector(vec![1.0, 2.0]);
+        assert_eq!(v.shape, vec![2]);
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let r = Executable::load_hlo_text("/nonexistent/predictor.hlo.txt");
+        assert!(r.is_err());
+    }
+
+    // Artifact-backed execution is covered by the integration test
+    // `rust/tests/predictor_parity.rs` (requires `make artifacts`).
+}

@@ -1,0 +1,388 @@
+//! The whole-world simulation stepper.
+
+use super::{Telemetry, TickStats};
+use crate::config::Testbed;
+use crate::cpusim::{CpuDemand, CpuState};
+use crate::netsim::Link;
+use crate::power::{standard_power, NodeMeter, PowerModel, RaplMeter};
+use crate::rng::{self, Xoshiro256};
+use crate::transfer::TransferEngine;
+use crate::units::{Bytes, Energy, Rate, SimDuration, SimTime};
+
+/// Fraction of CPU capacity the transfer application can actually use
+/// (kernel, interrupts and the tuner itself take the rest). Re-exported
+/// as `crate::sim::MAX_APP_UTILIZATION`.
+pub const MAX_APP_UTILIZATION: f64 = 0.92;
+
+/// The complete simulated world for one transfer session.
+#[derive(Debug, Clone)]
+pub struct Simulation {
+    pub link: Link,
+    pub engine: TransferEngine,
+    /// Client CPU setting — the one the tuning algorithms actuate.
+    pub client: CpuState,
+    /// Server CPU setting — pinned to the performance governor (the paper:
+    /// "there is no frequency scaling on the server").
+    pub server: CpuState,
+    client_power: PowerModel,
+    server_power: PowerModel,
+    /// RAPL package meter on the client.
+    pub client_rapl: RaplMeter,
+    /// Wall meter on the client (package + platform base).
+    pub client_node: NodeMeter,
+    /// RAPL package meter on the server.
+    pub server_rapl: RaplMeter,
+    /// Whether this testbed reports client energy from the wall meter.
+    wall_meter: bool,
+    pub now: SimTime,
+    tick: SimDuration,
+    rng: Xoshiro256,
+    /// GreenDT extension (the paper leaves the server unscaled): when
+    /// enabled, an Algorithm-3 threshold policy also drives the server's
+    /// cores/frequency at every telemetry drain.
+    pub server_autoscale: bool,
+    // Interval accumulators (reset by `drain_telemetry`).
+    acc_moved: Bytes,
+    acc_time: SimDuration,
+    acc_load: f64,
+    acc_server_load: f64,
+    acc_load_ticks: u32,
+    acc_client_energy_start: Energy,
+    // Last-tick cached values used for CPU overhead estimation.
+    last_requests_per_sec: f64,
+    last_stats: TickStats,
+}
+
+impl Simulation {
+    /// Assemble a session world. `client` is the initial CPU setting
+    /// chosen by the algorithm (Alg. 1 lines 14–20).
+    pub fn new(
+        testbed: &Testbed,
+        engine: TransferEngine,
+        client: CpuState,
+        tick: SimDuration,
+        seed: u64,
+    ) -> Self {
+        Self::with_bandwidth_events(testbed, engine, client, tick, seed, Vec::new())
+    }
+
+    /// Like [`Self::new`] with scripted background-traffic events
+    /// (failure injection).
+    pub fn with_bandwidth_events(
+        testbed: &Testbed,
+        engine: TransferEngine,
+        client: CpuState,
+        tick: SimDuration,
+        seed: u64,
+        events: Vec<crate::netsim::BandwidthEvent>,
+    ) -> Self {
+        let link = testbed.make_link_with_events(events);
+        let client_power = standard_power(&testbed.client_cpu);
+        let server_power = standard_power(&testbed.server_cpu);
+        Simulation {
+            link,
+            engine,
+            client,
+            server: CpuState::performance(testbed.server_cpu.clone()),
+            client_power,
+            server_power,
+            client_rapl: RaplMeter::new(),
+            client_node: NodeMeter::new(testbed.client_base_power),
+            server_rapl: RaplMeter::new(),
+            wall_meter: testbed.wall_meter,
+            now: SimTime::ZERO,
+            tick,
+            rng: rng::stream(seed, "sim"),
+            server_autoscale: false,
+            acc_moved: Bytes::ZERO,
+            acc_time: SimDuration::ZERO,
+            acc_load: 0.0,
+            acc_server_load: 0.0,
+            acc_load_ticks: 0,
+            acc_client_energy_start: Energy::ZERO,
+            last_requests_per_sec: 0.0,
+            last_stats: TickStats::default(),
+        }
+    }
+
+    pub fn tick_len(&self) -> SimDuration {
+        self.tick
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.engine.is_done()
+    }
+
+    /// Client energy according to the testbed's instrument (RAPL package
+    /// or wall meter).
+    pub fn client_energy(&self) -> Energy {
+        if self.wall_meter {
+            self.client_node.total()
+        } else {
+            self.client_rapl.total()
+        }
+    }
+
+    pub fn server_energy(&self) -> Energy {
+        self.server_rapl.total()
+    }
+
+    pub fn last_stats(&self) -> TickStats {
+        self.last_stats
+    }
+
+    /// Advance the world by one tick.
+    pub fn step(&mut self) -> TickStats {
+        let dt = self.tick;
+        self.link.tick(self.now, dt, &mut self.rng);
+
+        // End-system achievable throughput at current settings, using the
+        // previous tick's request rate and the current stream count as the
+        // overhead estimate (one-step fixed point; error is O(tick)).
+        let streams = self.engine.open_streams() as f64;
+        let client_cap = self.client.spec().achievable_bytes_per_sec(
+            self.client.active_cores(),
+            self.client.freq(),
+            self.last_requests_per_sec,
+            streams,
+            MAX_APP_UTILIZATION,
+        );
+        let server_cap = self.server.spec().achievable_bytes_per_sec(
+            self.server.active_cores(),
+            self.server.freq(),
+            self.last_requests_per_sec,
+            streams,
+            MAX_APP_UTILIZATION,
+        );
+        let cap = client_cap.min(server_cap);
+
+        let out = self.engine.tick(&self.link, dt, cap);
+        self.last_requests_per_sec = out.requests_per_sec;
+
+        // CPU loads implied by the achieved goodput.
+        let demand = CpuDemand {
+            bytes_per_sec: out.goodput.as_bytes_per_sec(),
+            requests_per_sec: out.requests_per_sec,
+            open_streams: out.open_streams as f64,
+        };
+        let client_load =
+            self.client.spec().load(&demand, self.client.active_cores(), self.client.freq());
+        let server_load =
+            self.server.spec().load(&demand, self.server.active_cores(), self.server.freq());
+
+        // Power draw at the operating point.
+        let client_power = self.client_power.package_power(
+            self.client.active_cores(),
+            self.client.freq(),
+            client_load,
+            out.goodput.as_bytes_per_sec(),
+        );
+        let server_power = self.server_power.package_power(
+            self.server.active_cores(),
+            self.server.freq(),
+            server_load,
+            out.goodput.as_bytes_per_sec(),
+        );
+        self.client_rapl.record(self.now, client_power, dt);
+        self.client_node.record(self.now, client_power, dt);
+        self.server_rapl.record(self.now, server_power, dt);
+
+        self.now += dt;
+        self.acc_moved += out.moved;
+        self.acc_time += dt;
+        self.acc_load += client_load.min(4.0);
+        self.acc_server_load += server_load.min(4.0);
+        self.acc_load_ticks += 1;
+
+        let stats = TickStats {
+            goodput: out.goodput,
+            moved: out.moved,
+            client_load,
+            server_load,
+            client_power,
+            server_power,
+            open_streams: out.open_streams,
+        };
+        self.last_stats = stats;
+        stats
+    }
+
+    /// Path + transfer model view for the predictive governor.
+    fn net_view(&self) -> crate::sim::telemetry::NetView {
+        let p = &self.link.params;
+        let parts = self.engine.partitions();
+        let remaining: f64 = parts.iter().map(|x| x.remaining.as_f64()).sum();
+        let (mut avg_file, mut pp) = (0.0, 0.0);
+        if remaining > 0.0 {
+            for x in parts {
+                let w = x.remaining.as_f64() / remaining;
+                avg_file += w * x.avg_file_size.as_f64();
+                pp += w * x.pp_level as f64;
+            }
+        }
+        let channels = self.engine.num_channels().max(1) as f64;
+        crate::sim::telemetry::NetView {
+            available_bps: self.link.available().as_bytes_per_sec(),
+            rtt_s: p.rtt.as_secs(),
+            avg_win_bytes: p.avg_win.as_f64(),
+            knee_streams: p.knee_streams(),
+            overload_gamma: p.overload_gamma,
+            overload_floor: p.overload_floor,
+            parallelism: (self.engine.open_streams() as f64 / channels).max(1.0),
+            avg_file_bytes: avg_file.max(1.0),
+            pp_level: pp.max(1.0),
+        }
+    }
+
+    /// Read and reset the interval accumulators — called by the session
+    /// driver at each tuning timeout to build the algorithm's view.
+    pub fn drain_telemetry(&mut self) -> Telemetry {
+        let interval_energy = self.client_energy().saturating_sub(self.acc_client_energy_start);
+        let tel = Telemetry {
+            now: self.now,
+            avg_throughput: Rate::average(self.acc_moved, self.acc_time),
+            interval_energy,
+            avg_power: interval_energy.average_power(self.acc_time),
+            cpu_load: if self.acc_load_ticks == 0 {
+                0.0
+            } else {
+                self.acc_load / self.acc_load_ticks as f64
+            },
+            remaining: self.engine.remaining(),
+            total: self.engine.total(),
+            elapsed: self.now.since(SimTime::ZERO),
+            num_channels: self.engine.num_channels(),
+            open_streams: self.engine.open_streams(),
+            net: self.net_view(),
+        };
+        // Server-side scaling extension: Algorithm 3 on the server,
+        // driven by the same interval cadence.
+        if self.server_autoscale && self.acc_load_ticks > 0 {
+            let load = self.acc_server_load / self.acc_load_ticks as f64;
+            let th = crate::coordinator::load_control::LoadThresholds::default();
+            if load > th.max_load {
+                if !self.server.increase_cores() {
+                    self.server.increase_freq();
+                }
+            } else if load < th.min_load {
+                if !self.server.decrease_freq() {
+                    self.server.decrease_cores();
+                }
+            }
+        }
+        self.acc_moved = Bytes::ZERO;
+        self.acc_time = SimDuration::ZERO;
+        self.acc_load = 0.0;
+        self.acc_server_load = 0.0;
+        self.acc_load_ticks = 0;
+        self.acc_client_energy_start = self.client_energy();
+        tel
+    }
+
+    /// Average power of the client at an arbitrary hypothetical setting —
+    /// exposed for the predictive governor's candidate evaluation.
+    pub fn client_power_model(&self) -> &PowerModel {
+        &self.client_power
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::dataset::{partition_files, standard};
+
+    fn make_sim(testbed: &str, dataset: &str, channels: u32) -> Simulation {
+        let tb = testbeds::by_name(testbed).unwrap();
+        let ds = standard::by_name(dataset, 5).unwrap();
+        let parts = partition_files(&ds, tb.bdp());
+        let mut engine = TransferEngine::new(&parts, tb.link.avg_win);
+        engine.set_num_channels(channels);
+        let client = CpuState::performance(tb.client_cpu.clone());
+        Simulation::new(&tb, engine, client, SimDuration::from_millis(100.0), 11)
+    }
+
+    #[test]
+    fn stepping_moves_data_and_burns_energy() {
+        let mut sim = make_sim("cloudlab", "medium", 6);
+        for _ in 0..100 {
+            sim.step();
+        }
+        assert!(sim.engine.remaining() < sim.engine.total());
+        assert!(sim.client_energy().as_joules() > 0.0);
+        assert!(sim.server_energy().as_joules() > 0.0);
+        assert!((sim.now.as_secs() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn telemetry_reflects_interval() {
+        let mut sim = make_sim("cloudlab", "medium", 6);
+        for _ in 0..50 {
+            sim.step();
+        }
+        let tel = sim.drain_telemetry();
+        assert!(tel.avg_throughput.as_mbps() > 50.0, "tput {}", tel.avg_throughput);
+        assert!(tel.interval_energy.as_joules() > 0.0);
+        assert!(tel.cpu_load > 0.0);
+        assert!((tel.elapsed.as_secs() - 5.0).abs() < 1e-9);
+        // Drained: second read covers an empty interval.
+        let tel2 = sim.drain_telemetry();
+        assert_eq!(tel2.avg_throughput, Rate::ZERO);
+    }
+
+    #[test]
+    fn min_freq_single_core_caps_10gbps() {
+        let tb = testbeds::chameleon();
+        let ds = standard::large_dataset(5);
+        let parts = partition_files(&ds, tb.bdp());
+        let mut engine = TransferEngine::new(&parts, tb.link.avg_win);
+        engine.set_num_channels(8);
+        let client = CpuState::min_energy_start(tb.client_cpu.clone());
+        let mut sim = Simulation::new(&tb, engine, client, SimDuration::from_millis(100.0), 3);
+        for _ in 0..100 {
+            sim.step();
+        }
+        let tel = sim.drain_telemetry();
+        // 1 core @ 1.2 GHz can push at most ~0.46 GB/s ≈ 3.7 Gbps.
+        assert!(
+            tel.avg_throughput.as_gbps() < 4.5,
+            "CPU should bottleneck: {}",
+            tel.avg_throughput
+        );
+        assert!(tel.cpu_load > 0.85, "load {}", tel.cpu_load);
+    }
+
+    #[test]
+    fn performance_governor_uses_more_power_when_idle_ish() {
+        let mut perf = make_sim("cloudlab", "large", 4);
+        let tb = testbeds::cloudlab();
+        let ds = standard::large_dataset(5);
+        let parts = partition_files(&ds, tb.bdp());
+        let mut engine = TransferEngine::new(&parts, tb.link.avg_win);
+        engine.set_num_channels(4);
+        let low = CpuState::min_energy_start(tb.client_cpu.clone());
+        let mut eco = Simulation::new(&tb, engine, low, SimDuration::from_millis(100.0), 11);
+        for _ in 0..100 {
+            perf.step();
+            eco.step();
+        }
+        let e_perf = perf.client_rapl.total();
+        let e_eco = eco.client_rapl.total();
+        assert!(
+            e_perf.as_joules() > 1.5 * e_eco.as_joules(),
+            "perf {} vs eco {}",
+            e_perf,
+            e_eco
+        );
+    }
+
+    #[test]
+    fn wall_meter_selected_on_didclab() {
+        let mut sim = make_sim("didclab", "medium", 4);
+        for _ in 0..10 {
+            sim.step();
+        }
+        // Wall energy includes the platform base, so it must exceed RAPL.
+        assert!(sim.client_energy() > sim.client_rapl.total());
+    }
+}

@@ -1,0 +1,13 @@
+//! The end-to-end simulation: WAN + two end systems + transfer engine.
+//!
+//! [`Simulation`] advances the whole world one tick at a time;
+//! [`session`] runs a complete transfer under a tuning algorithm and
+//! produces a [`session::SessionOutcome`] (the numbers the paper's figures
+//! plot).
+
+mod engine;
+mod telemetry;
+pub mod session;
+
+pub use engine::{Simulation, MAX_APP_UTILIZATION};
+pub use telemetry::{NetView, Telemetry, TickStats};

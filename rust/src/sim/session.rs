@@ -1,0 +1,278 @@
+//! Session driver: one complete transfer under one tuning algorithm.
+
+use crate::config::experiment::TunerParams;
+use crate::config::Testbed;
+use crate::coordinator::AlgorithmKind;
+use crate::dataset::Dataset;
+use crate::sim::Simulation;
+use crate::transfer::TransferEngine;
+use crate::units::{Bytes, Energy, Freq, Rate, SimDuration};
+
+/// Everything needed to run one session.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub testbed: Testbed,
+    pub dataset: Dataset,
+    pub algorithm: AlgorithmKind,
+    pub params: TunerParams,
+    pub seed: u64,
+    pub tick: SimDuration,
+    /// Abort the session after this much simulated time.
+    pub max_sim_time: SimDuration,
+    /// Record a per-timeout timeline (costs memory; reports/examples).
+    pub record_timeline: bool,
+    /// Scripted background-traffic events (failure injection / the
+    /// `adaptive_bandwidth` example).
+    pub bandwidth_events: Vec<crate::netsim::BandwidthEvent>,
+    /// GreenDT extension: Algorithm-3 scaling on the *server* too (the
+    /// paper's testbeds scale only the client).
+    pub server_scaling: bool,
+}
+
+impl SessionConfig {
+    pub fn new(testbed: Testbed, dataset: Dataset, algorithm: AlgorithmKind) -> Self {
+        SessionConfig {
+            testbed,
+            dataset,
+            algorithm,
+            params: TunerParams::default(),
+            seed: 42,
+            tick: SimDuration::from_millis(100.0),
+            max_sim_time: SimDuration::from_secs(14_400.0),
+            record_timeline: false,
+            bandwidth_events: Vec::new(),
+            server_scaling: false,
+        }
+    }
+
+    /// Enable the server-side scaling extension.
+    pub fn with_server_scaling(mut self) -> Self {
+        self.server_scaling = true;
+        self
+    }
+
+    /// Inject scripted bandwidth events into the session's path.
+    pub fn with_bandwidth_events(mut self, events: Vec<crate::netsim::BandwidthEvent>) -> Self {
+        self.bandwidth_events = events;
+        self
+    }
+
+    pub fn with_params(mut self, params: TunerParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn recording(mut self) -> Self {
+        self.record_timeline = true;
+        self
+    }
+}
+
+/// One point of the per-timeout timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct TimelinePoint {
+    pub t_secs: f64,
+    /// FSM state the algorithm was in when this interval was observed.
+    pub fsm: &'static str,
+    pub throughput: Rate,
+    pub channels: u32,
+    pub active_cores: u32,
+    pub freq: Freq,
+    pub cpu_load: f64,
+    pub power_w: f64,
+}
+
+/// What one session produced — the quantities the paper's figures plot.
+#[derive(Debug, Clone)]
+pub struct SessionOutcome {
+    pub algorithm: String,
+    pub testbed: String,
+    pub dataset: String,
+    pub completed: bool,
+    pub duration: SimDuration,
+    pub moved: Bytes,
+    /// Whole-session average application throughput.
+    pub avg_throughput: Rate,
+    /// Client energy per the testbed's instrument (RAPL or wall meter).
+    pub client_energy: Energy,
+    /// Client package (RAPL) energy, regardless of instrument.
+    pub client_package_energy: Energy,
+    pub server_energy: Energy,
+    pub final_active_cores: u32,
+    pub final_freq: Freq,
+    pub peak_channels: u32,
+    pub timeline: Vec<TimelinePoint>,
+}
+
+impl SessionOutcome {
+    /// Client + server package energy: the "end systems" total.
+    pub fn total_energy(&self) -> Energy {
+        self.client_package_energy + self.server_energy
+    }
+}
+
+/// Run a session to completion (or the time cap).
+pub fn run_session(cfg: &SessionConfig) -> SessionOutcome {
+    let mut algo = cfg.algorithm.build(cfg.params);
+    let plan = algo.init(&cfg.testbed, &cfg.dataset);
+
+    let mut engine = TransferEngine::with_knee(
+        &plan.partitions,
+        cfg.testbed.link.avg_win,
+        cfg.testbed.link.knee_streams(),
+    );
+    if plan.handshake_rtts > 0.0 {
+        for i in 0..plan.partitions.len() {
+            engine.set_handshake_rtts(i, plan.handshake_rtts);
+        }
+    }
+    engine.update_weights();
+    engine.set_num_channels(plan.num_channels);
+
+    let mut sim = Simulation::with_bandwidth_events(
+        &cfg.testbed,
+        engine,
+        plan.client_cpu,
+        cfg.tick,
+        cfg.seed,
+        cfg.bandwidth_events.clone(),
+    );
+    sim.server_autoscale = cfg.server_scaling;
+
+    let total = sim.engine.total();
+    let timeout = algo.timeout();
+    let mut next_timeout = timeout;
+    let mut peak_channels = sim.engine.num_channels();
+    let mut timeline = Vec::new();
+
+    while !sim.is_done() && sim.now.as_secs() < cfg.max_sim_time.as_secs() {
+        sim.step();
+        peak_channels = peak_channels.max(sim.engine.num_channels());
+        if sim.now.as_secs() + 1e-9 >= next_timeout.as_secs() {
+            let tel = sim.drain_telemetry();
+            if cfg.record_timeline {
+                timeline.push(TimelinePoint {
+                    t_secs: tel.now.as_secs(),
+                    fsm: algo.fsm_label(),
+                    throughput: tel.avg_throughput,
+                    channels: tel.num_channels,
+                    active_cores: sim.client.active_cores(),
+                    freq: sim.client.freq(),
+                    cpu_load: tel.cpu_load,
+                    power_w: tel.avg_power.as_watts(),
+                });
+            }
+            algo.on_timeout(&tel, &mut sim);
+            next_timeout = next_timeout + timeout;
+        }
+    }
+
+    let completed = sim.is_done();
+    let duration = sim.now.since(crate::units::SimTime::ZERO);
+    let moved = total.saturating_sub(sim.engine.remaining());
+
+    SessionOutcome {
+        algorithm: algo.name().to_string(),
+        testbed: cfg.testbed.name.to_string(),
+        dataset: cfg.dataset.name.clone(),
+        completed,
+        duration,
+        moved,
+        avg_throughput: Rate::average(moved, duration),
+        client_energy: sim.client_energy(),
+        client_package_energy: sim.client_rapl.total(),
+        server_energy: sim.server_energy(),
+        final_active_cores: sim.client.active_cores(),
+        final_freq: sim.client.freq(),
+        peak_channels,
+        timeline,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::dataset::standard;
+
+    #[test]
+    fn eemt_session_on_cloudlab_medium() {
+        let cfg = SessionConfig::new(
+            testbeds::cloudlab(),
+            standard::medium_dataset(1),
+            AlgorithmKind::MaxThroughput,
+        );
+        let out = run_session(&cfg);
+        assert!(out.completed, "must finish within the cap");
+        // 11.7 GB over 1 Gbps is at least ~94 s.
+        assert!(out.duration.as_secs() > 90.0);
+        assert!(out.avg_throughput.as_mbps() > 500.0, "tput {}", out.avg_throughput);
+        assert!(out.client_energy.as_joules() > 0.0);
+        assert!((out.moved.as_gb() - 11.7).abs() < 0.5);
+    }
+
+    #[test]
+    fn timeline_recorded_when_asked() {
+        let cfg = SessionConfig::new(
+            testbeds::cloudlab(),
+            standard::large_dataset(1),
+            AlgorithmKind::MaxThroughput,
+        )
+        .recording();
+        let out = run_session(&cfg);
+        assert!(!out.timeline.is_empty());
+        // Time increases monotonically.
+        for w in out.timeline.windows(2) {
+            assert!(w[1].t_secs > w[0].t_secs);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            SessionConfig::new(
+                testbeds::didclab(),
+                standard::large_dataset(9),
+                AlgorithmKind::MinEnergy,
+            )
+            .with_seed(123)
+        };
+        let a = run_session(&mk());
+        let b = run_session(&mk());
+        assert_eq!(a.duration.as_secs(), b.duration.as_secs());
+        assert_eq!(a.client_energy.as_joules(), b.client_energy.as_joules());
+    }
+
+    #[test]
+    fn seed_changes_outcome_slightly() {
+        let base = SessionConfig::new(
+            testbeds::didclab(),
+            standard::large_dataset(9),
+            AlgorithmKind::MinEnergy,
+        );
+        let a = run_session(&base.clone().with_seed(1));
+        let b = run_session(&base.with_seed(2));
+        assert_ne!(
+            a.client_energy.as_joules(),
+            b.client_energy.as_joules(),
+            "background noise must differ across seeds"
+        );
+    }
+
+    #[test]
+    fn total_energy_combines_nodes() {
+        let cfg = SessionConfig::new(
+            testbeds::cloudlab(),
+            standard::large_dataset(1),
+            AlgorithmKind::MaxThroughput,
+        );
+        let out = run_session(&cfg);
+        assert!(out.total_energy() > out.client_package_energy);
+        assert!(out.total_energy() > out.server_energy);
+    }
+}

@@ -1,0 +1,136 @@
+//! Observations exposed to the tuning algorithms.
+
+use crate::units::{Bytes, Energy, Power, Rate, SimDuration, SimTime};
+
+/// Instantaneous statistics from one simulation tick.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TickStats {
+    pub goodput: Rate,
+    pub moved: Bytes,
+    pub client_load: f64,
+    pub server_load: f64,
+    pub client_power: Power,
+    pub server_power: Power,
+    pub open_streams: usize,
+}
+
+/// Network-side view exposed to the predictive governor: the path model
+/// the application maintains (bandwidth/RTT probes à la iperf plus its own
+/// transfer bookkeeping).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NetView {
+    /// Estimated available bottleneck capacity, bytes/s.
+    pub available_bps: f64,
+    pub rtt_s: f64,
+    pub avg_win_bytes: f64,
+    pub knee_streams: f64,
+    pub overload_gamma: f64,
+    pub overload_floor: f64,
+    /// Average streams per channel across open channels.
+    pub parallelism: f64,
+    /// Remaining-weighted average file size, bytes.
+    pub avg_file_bytes: f64,
+    /// Remaining-weighted pipelining level.
+    pub pp_level: f64,
+}
+
+/// Aggregated observations over one tuning interval — everything the
+/// paper's algorithms read (`calculateThroughput()`, `calculateEnergy()`,
+/// `cpuLoad`, remaining data).
+#[derive(Debug, Clone, Copy)]
+pub struct Telemetry {
+    pub now: SimTime,
+    /// Average application throughput over the interval.
+    pub avg_throughput: Rate,
+    /// Client-side energy consumed during the interval (package, or wall
+    /// if the testbed uses a wall meter).
+    pub interval_energy: Energy,
+    /// Average client power over the interval.
+    pub avg_power: Power,
+    /// Mean client CPU load over the interval (0..∞; >1 = saturated).
+    pub cpu_load: f64,
+    /// Data still to move.
+    pub remaining: Bytes,
+    /// Total session size.
+    pub total: Bytes,
+    /// Session time elapsed.
+    pub elapsed: SimDuration,
+    /// Channels currently open.
+    pub num_channels: u32,
+    /// TCP streams currently open.
+    pub open_streams: usize,
+    /// Path/transfer model for predictive control.
+    pub net: NetView,
+}
+
+impl Telemetry {
+    /// `remainTime = remainData / avgThroughput` (Alg. 4 line 5); infinite
+    /// when nothing is moving.
+    pub fn remaining_time(&self) -> SimDuration {
+        let bps = self.avg_throughput.as_bytes_per_sec();
+        if bps <= 0.0 {
+            SimDuration::from_secs(f64::INFINITY)
+        } else {
+            SimDuration::from_secs(self.remaining.as_f64() / bps)
+        }
+    }
+
+    /// `predictedEnergy = avgPower × remainTime` (Alg. 4 line 6).
+    pub fn predicted_future_energy(&self) -> Energy {
+        let t = self.remaining_time().as_secs();
+        if t.is_infinite() {
+            Energy::from_joules(f64::MAX / 4.0)
+        } else {
+            Energy::from_joules(self.avg_power.as_watts() * t)
+        }
+    }
+
+    /// Fraction of the session already moved.
+    pub fn progress(&self) -> f64 {
+        1.0 - self.remaining.fraction_of(self.total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tel() -> Telemetry {
+        Telemetry {
+            now: SimTime::from_secs(10.0),
+            avg_throughput: Rate::from_bytes_per_sec(100e6),
+            interval_energy: Energy::from_joules(90.0),
+            avg_power: Power::from_watts(30.0),
+            cpu_load: 0.5,
+            remaining: Bytes::from_gb(1.0),
+            total: Bytes::from_gb(4.0),
+            elapsed: SimDuration::from_secs(10.0),
+            num_channels: 4,
+            open_streams: 8,
+            net: NetView::default(),
+        }
+    }
+
+    #[test]
+    fn remaining_time_divides() {
+        assert!((tel().remaining_time().as_secs() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn predicted_energy_is_power_times_time() {
+        assert!((tel().predicted_future_energy().as_joules() - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stalled_transfer_predicts_huge_energy() {
+        let mut t = tel();
+        t.avg_throughput = Rate::ZERO;
+        assert!(t.remaining_time().as_secs().is_infinite());
+        assert!(t.predicted_future_energy().as_joules() > 1e100);
+    }
+
+    #[test]
+    fn progress_fraction() {
+        assert!((tel().progress() - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,243 @@
+//! Property-test-lite: a tiny deterministic property-testing framework.
+//!
+//! The offline crate set has no `proptest`/`quickcheck`, so GreenDT carries
+//! its own minimal substitute. It supports:
+//!
+//! * generator combinators over [`crate::rng::Xoshiro256`],
+//! * a configurable number of cases per property,
+//! * first-failure reporting that prints the **seed and case index** so any
+//!   failure replays deterministically,
+//! * a greedy scalar shrinking pass for numeric inputs.
+//!
+//! ```no_run
+//! use greendt::testutil::{property, Gen};
+//!
+//! property("addition commutes", 256, |g| {
+//!     let a = g.f64_in(0.0, 1e6);
+//!     let b = g.f64_in(0.0, 1e6);
+//!     assert!((a + b - (b + a)).abs() < 1e-9);
+//! });
+//! ```
+
+use crate::rng::Xoshiro256;
+
+/// Per-case generator handle passed to property closures.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Log of scalar draws made by this case, used for shrink attempts.
+    draws: Vec<f64>,
+    /// When replaying a shrink candidate, values to return instead of fresh
+    /// random draws.
+    replay: Option<Vec<f64>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Xoshiro256::seeded(seed), draws: Vec::new(), replay: None, cursor: 0 }
+    }
+
+    fn replaying(values: Vec<f64>) -> Self {
+        Gen { rng: Xoshiro256::seeded(0), draws: Vec::new(), replay: Some(values), cursor: 0 }
+    }
+
+    fn draw(&mut self, fresh: impl FnOnce(&mut Xoshiro256) -> f64) -> f64 {
+        let v = match &self.replay {
+            Some(values) => {
+                let v = values.get(self.cursor).copied().unwrap_or(0.0);
+                self.cursor += 1;
+                v
+            }
+            None => fresh(&mut self.rng),
+        };
+        self.draws.push(v);
+        v
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.draw(|r| r.next_f64());
+        lo + (hi - lo) * v.clamp(0.0, 1.0 - f64::EPSILON)
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = (hi - lo + 1) as f64;
+        let v = self.f64_in(0.0, span).floor() as usize;
+        lo + v.min(hi - lo)
+    }
+
+    /// Uniform u32 in [lo, hi] inclusive.
+    pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        self.usize_in(lo as usize, hi as usize) as u32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.f64_in(0.0, 1.0) < 0.5
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "choose on empty slice");
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// A vector of `n` samples from `f`.
+    pub fn vec_of<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of running one case, capturing panics.
+fn run_case<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    f: &F,
+    gen: &mut Gen,
+) -> Result<(), String> {
+    // Use AssertUnwindSafe for the generator: it is rebuilt per case.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(gen)));
+    match result {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let msg = if let Some(s) = e.downcast_ref::<&str>() {
+                s.to_string()
+            } else if let Some(s) = e.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "<non-string panic>".to_string()
+            };
+            Err(msg)
+        }
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (failing the enclosing
+/// `#[test]`) on the first counterexample, after a greedy shrink pass.
+///
+/// The environment variable `GREENDT_PT_SEED` overrides the base seed for
+/// replay.
+pub fn property<F>(name: &str, cases: u32, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let base_seed = std::env::var("GREENDT_PT_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x9e3779b97f4a7c15);
+
+    // Silence the default panic hook while probing cases; restore after.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+
+    let mut failure: Option<(u64, Vec<f64>, String)> = None;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = run_case(&prop, &mut gen) {
+            failure = Some((seed, gen.draws.clone(), msg));
+            break;
+        }
+    }
+
+    // Greedy shrink: try to pull each recorded scalar toward zero.
+    let shrunk = failure.map(|(seed, draws, msg)| {
+        let mut best = draws;
+        let mut best_msg = msg;
+        for _round in 0..8 {
+            let mut improved = false;
+            for i in 0..best.len() {
+                for factor in [0.0, 0.5] {
+                    let mut cand = best.clone();
+                    cand[i] *= factor;
+                    if cand == best {
+                        continue;
+                    }
+                    let mut gen = Gen::replaying(cand.clone());
+                    if let Err(m) = run_case(&prop, &mut gen) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        (seed, best, best_msg)
+    });
+
+    std::panic::set_hook(prev_hook);
+
+    if let Some((seed, draws, msg)) = shrunk {
+        panic!(
+            "property '{name}' failed (seed {seed}, {} draws, GREENDT_PT_SEED to replay)\n  \
+             shrunk draws: {:?}\n  panic: {msg}",
+            draws.len(),
+            &draws[..draws.len().min(16)],
+        );
+    }
+}
+
+/// Assert two floats are close (absolute or relative tolerance).
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    let rel = (a - b).abs() / denom;
+    assert!(
+        (a - b).abs() <= tol || rel <= tol,
+        "{what}: {a} vs {b} (rel err {rel:.3e} > tol {tol:.3e})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        property("abs is non-negative", 128, |g| {
+            let x = g.f64_in(-100.0, 100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        property("always fails", 16, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!(x < -1.0, "x = {x}");
+        });
+    }
+
+    #[test]
+    fn usize_in_respects_bounds() {
+        property("usize_in bounds", 512, |g| {
+            let lo = g.usize_in(0, 10);
+            let hi = lo + g.usize_in(0, 10);
+            let v = g.usize_in(lo, hi);
+            assert!(v >= lo && v <= hi, "{lo} <= {v} <= {hi}");
+        });
+    }
+
+    #[test]
+    fn choose_returns_member() {
+        property("choose member", 256, |g| {
+            let xs = [1, 2, 3, 5, 8];
+            let c = *g.choose(&xs);
+            assert!(xs.contains(&c));
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_close() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9, "close");
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_rejects_far() {
+        assert_close(1.0, 2.0, 1e-9, "far");
+    }
+}

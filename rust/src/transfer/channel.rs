@@ -1,0 +1,60 @@
+//! A transfer channel: one concurrent file slot with its TCP streams.
+
+use crate::netsim::StreamState;
+use crate::units::Bytes;
+
+/// One channel = one concurrently transferred file (the unit of
+/// *concurrency*), carried by `parallelism` TCP streams (chunks of the
+/// file in flight at once).
+#[derive(Debug, Clone)]
+pub struct Channel {
+    /// Index of the partition this channel serves.
+    pub partition: usize,
+    /// One TCP congestion state per parallel stream.
+    pub streams: Vec<StreamState>,
+}
+
+impl Channel {
+    /// Open a new (cold) channel: all streams start in slow start.
+    pub fn open(partition: usize, parallelism: u32, avg_win: Bytes) -> Self {
+        let streams =
+            (0..parallelism.max(1)).map(|_| StreamState::new(avg_win)).collect();
+        Channel { partition, streams }
+    }
+
+    /// Open a channel whose streams are already at steady state (used by
+    /// tests and by baselines that model long-lived sessions).
+    pub fn open_warm(partition: usize, parallelism: u32, avg_win: Bytes) -> Self {
+        let streams =
+            (0..parallelism.max(1)).map(|_| StreamState::warm(avg_win)).collect();
+        Channel { partition, streams }
+    }
+
+    pub fn num_streams(&self) -> usize {
+        self.streams.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_creates_parallel_streams() {
+        let c = Channel::open(0, 4, Bytes::from_mb(1.0));
+        assert_eq!(c.num_streams(), 4);
+        assert!(c.streams.iter().all(|s| s.in_slow_start()));
+    }
+
+    #[test]
+    fn parallelism_floors_at_one() {
+        let c = Channel::open(0, 0, Bytes::from_mb(1.0));
+        assert_eq!(c.num_streams(), 1);
+    }
+
+    #[test]
+    fn warm_channels_skip_slow_start() {
+        let c = Channel::open_warm(1, 2, Bytes::from_mb(1.0));
+        assert!(c.streams.iter().all(|s| !s.in_slow_start()));
+    }
+}

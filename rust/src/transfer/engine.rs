@@ -1,0 +1,589 @@
+//! Core transfer bookkeeping and per-tick data movement.
+
+use super::Channel;
+use crate::dataset::Partition;
+use crate::netsim::{Link, StreamState};
+use crate::units::{Bytes, Rate, SimDuration};
+
+/// Per-partition progress the tuning algorithms observe.
+#[derive(Debug, Clone)]
+pub struct PartitionProgress {
+    pub name: &'static str,
+    /// Per-partition pipelining level (requests in flight back-to-back).
+    pub pp_level: u32,
+    /// Streams per channel for this partition.
+    pub parallelism: u32,
+    /// Average file size (drives request-rate and pipelining overhead).
+    pub avg_file_size: Bytes,
+    pub total: Bytes,
+    pub remaining: Bytes,
+    /// Channel-distribution weight (recomputed by `update_weights`).
+    pub weight: f64,
+    /// Channels currently assigned.
+    pub cc_level: u32,
+    /// Extra round-trips charged per file *before* the pipelined request
+    /// (0 for persistent connections; 2 for tools like wget that do a TCP
+    /// handshake + sequential HTTP request per file).
+    pub handshake_rtts: f64,
+}
+
+impl PartitionProgress {
+    pub fn done(&self) -> bool {
+        self.remaining.is_zero()
+    }
+}
+
+/// What moved during one tick (feeds CPU/power models and metrics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TickOutput {
+    /// Application goodput achieved this tick.
+    pub goodput: Rate,
+    /// Bytes moved this tick.
+    pub moved: Bytes,
+    /// File/chunk requests issued per second (CPU protocol work).
+    pub requests_per_sec: f64,
+    /// TCP streams currently open.
+    pub open_streams: usize,
+}
+
+/// The transfer engine: owns partitions + channels and implements
+/// channel (re)distribution and per-tick byte movement.
+#[derive(Debug, Clone)]
+pub struct TransferEngine {
+    partitions: Vec<PartitionProgress>,
+    channels: Vec<Channel>,
+    avg_win: Bytes,
+    /// Streams that fill the pipe (`LinkParams::knee_streams`); used to
+    /// derate per-channel parallelism as the channel count grows.
+    knee_streams: f64,
+    /// Tick-loop scratch (stream snapshot + per-stream rates), reused
+    /// across ticks to keep the hot path allocation-free.
+    scratch_streams: Vec<StreamState>,
+    scratch_rates: Vec<f64>,
+}
+
+impl TransferEngine {
+    /// Build from Algorithm 1's partitions with no parallelism derating
+    /// (tests, baselines).
+    pub fn new(partitions: &[Partition], avg_win: Bytes) -> Self {
+        Self::with_knee(partitions, avg_win, f64::INFINITY)
+    }
+
+    /// Build with pipe-aware parallelism: a channel opens
+    /// `min(partition.parallelism, ceil(knee / total_channels))` streams —
+    /// parallel streams help exactly while the pipe is not already filled
+    /// by concurrency (§II: parallelism vs concurrency trade).
+    pub fn with_knee(partitions: &[Partition], avg_win: Bytes, knee_streams: f64) -> Self {
+        let progress = partitions
+            .iter()
+            .map(|p| {
+                let st = p.stats();
+                PartitionProgress {
+                    name: p.name,
+                    pp_level: p.pp_level,
+                    parallelism: p.parallelism,
+                    avg_file_size: st.avg_file_size,
+                    total: st.total_size,
+                    remaining: st.total_size,
+                    weight: 0.0,
+                    cc_level: 0,
+                    handshake_rtts: 0.0,
+                }
+            })
+            .collect::<Vec<_>>();
+        let mut engine = TransferEngine {
+            partitions: progress,
+            channels: Vec::new(),
+            avg_win,
+            knee_streams,
+            scratch_streams: Vec::new(),
+            scratch_rates: Vec::new(),
+        };
+        engine.update_weights();
+        engine
+    }
+
+    /// Streams a freshly opened channel for partition `i` should carry,
+    /// given the current total channel budget.
+    fn effective_parallelism(&self, partition: usize, total_channels: u32) -> u32 {
+        let p = self.partitions[partition].parallelism;
+        if !self.knee_streams.is_finite() {
+            return p;
+        }
+        let room = (self.knee_streams / total_channels.max(1) as f64).ceil() as u32;
+        p.min(room.max(1))
+    }
+
+    pub fn partitions(&self) -> &[PartitionProgress] {
+        &self.partitions
+    }
+
+    pub fn channels(&self) -> &[Channel] {
+        &self.channels
+    }
+
+    pub fn num_channels(&self) -> u32 {
+        self.channels.len() as u32
+    }
+
+    pub fn open_streams(&self) -> usize {
+        self.channels.iter().map(|c| c.num_streams()).sum()
+    }
+
+    pub fn remaining(&self) -> Bytes {
+        self.partitions.iter().map(|p| p.remaining).sum()
+    }
+
+    pub fn total(&self) -> Bytes {
+        self.partitions.iter().map(|p| p.total).sum()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.partitions.iter().all(|p| p.done())
+    }
+
+    /// Override a partition's pipelining level (exposed for baselines that
+    /// tune statically).
+    pub fn set_pp_level(&mut self, partition: usize, pp: u32) {
+        self.partitions[partition].pp_level = pp.max(1);
+    }
+
+    /// Override a partition's parallelism (affects newly opened channels).
+    pub fn set_parallelism(&mut self, partition: usize, p: u32) {
+        self.partitions[partition].parallelism = p.max(1);
+    }
+
+    /// Charge `rtts` extra round-trips per file (non-persistent tools).
+    pub fn set_handshake_rtts(&mut self, partition: usize, rtts: f64) {
+        self.partitions[partition].handshake_rtts = rtts.max(0.0);
+    }
+
+    /// `updateWeights()` (Algs. 2/4/5/6): weight_i = remaining_i / Σ remaining.
+    ///
+    /// Slower (larger-remainder) partitions get more channels so all
+    /// partitions finish at about the same time (§IV-A last paragraph).
+    pub fn update_weights(&mut self) {
+        let total_remaining: f64 = self.partitions.iter().map(|p| p.remaining.as_f64()).sum();
+        for p in &mut self.partitions {
+            p.weight = if total_remaining <= 0.0 {
+                0.0
+            } else {
+                p.remaining.as_f64() / total_remaining
+            };
+        }
+    }
+
+    /// `updateChannels()`: redistribute `num_channels` total channels over
+    /// partitions proportionally to weight (ccLevel_i = weight_i × numCh).
+    ///
+    /// When the budget covers every unfinished partition, each gets at
+    /// least one channel; when it does not (low-target SLAs run with very
+    /// few channels), the highest-weight partitions get the channels and
+    /// the rest wait — they pick channels up at later redistributions as
+    /// weights shift. Channels are reused where possible: surplus channels
+    /// close newest-first (preserving warm streams), deficits open cold
+    /// channels (slow start — this is why over-eager growth costs).
+    pub fn set_num_channels(&mut self, num_channels: u32) {
+        let unfinished: Vec<usize> =
+            (0..self.partitions.len()).filter(|&i| !self.partitions[i].done()).collect();
+        if unfinished.is_empty() {
+            self.channels.clear();
+            for p in &mut self.partitions {
+                p.cc_level = 0;
+            }
+            return;
+        }
+        let n = num_channels.max(1);
+
+        let weights: Vec<f64> = unfinished.iter().map(|&i| self.partitions[i].weight).collect();
+        let wsum: f64 = weights.iter().sum();
+        let norm: Vec<f64> = if wsum <= 0.0 {
+            vec![1.0 / unfinished.len() as f64; unfinished.len()]
+        } else {
+            weights.iter().map(|w| w / wsum).collect()
+        };
+
+        let mut alloc: Vec<u32>;
+        if n < unfinished.len() as u32 {
+            // Budget below one-per-partition: give the n highest-weight
+            // partitions one channel each.
+            let mut order: Vec<usize> = (0..unfinished.len()).collect();
+            order.sort_by(|&a, &b| norm[b].partial_cmp(&norm[a]).unwrap());
+            alloc = vec![0; unfinished.len()];
+            for &k in order.iter().take(n as usize) {
+                alloc[k] = 1;
+            }
+        } else {
+            // Largest-remainder rounding of weight_i * n, floored at 1.
+            alloc = norm.iter().map(|w| (w * n as f64).floor() as u32).collect();
+            for a in &mut alloc {
+                if *a == 0 {
+                    *a = 1;
+                }
+            }
+            let mut assigned: u32 = alloc.iter().sum();
+            while assigned > n {
+                // Remove from the partition with the most channels (> 1).
+                if let Some(k) =
+                    (0..alloc.len()).filter(|&k| alloc[k] > 1).max_by_key(|&k| alloc[k])
+                {
+                    alloc[k] -= 1;
+                    assigned -= 1;
+                } else {
+                    break; // all at the floor; accept the overshoot
+                }
+            }
+            let mut frac: Vec<(usize, f64)> = norm
+                .iter()
+                .enumerate()
+                .map(|(k, w)| (k, w * n as f64 - (w * n as f64).floor()))
+                .collect();
+            frac.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut fi = 0;
+            while assigned < n {
+                let k = frac[fi % frac.len()].0;
+                alloc[k] += 1;
+                assigned += 1;
+                fi += 1;
+            }
+        }
+
+        // Reconcile the live channel list with the new allocation.
+        for (k, &i) in unfinished.iter().enumerate() {
+            self.partitions[i].cc_level = alloc[k];
+            let current =
+                self.channels.iter().filter(|c| c.partition == i).count() as u32;
+            if current > alloc[k] {
+                // Close surplus channels, newest first.
+                let mut to_close = (current - alloc[k]) as usize;
+                let mut j = self.channels.len();
+                while to_close > 0 && j > 0 {
+                    j -= 1;
+                    if self.channels[j].partition == i {
+                        self.channels.remove(j);
+                        to_close -= 1;
+                    }
+                }
+            } else {
+                let p = self.effective_parallelism(i, n);
+                for _ in current..alloc[k] {
+                    self.channels.push(Channel::open(i, p, self.avg_win));
+                }
+            }
+        }
+        // Drop channels pointing at finished partitions.
+        let parts = &self.partitions;
+        self.channels.retain(|c| !parts[c.partition].done());
+    }
+
+    /// Advance one tick: allocate network goodput to streams, charge
+    /// pipelining overhead, optionally cap by CPU capacity, move bytes.
+    ///
+    /// `cpu_cap_bytes_per_sec` is the end-system ceiling (min of client and
+    /// server achievable throughput); pass `f64::INFINITY` to disable.
+    pub fn tick(
+        &mut self,
+        link: &Link,
+        dt: SimDuration,
+        cpu_cap_bytes_per_sec: f64,
+    ) -> TickOutput {
+        if self.channels.is_empty() || dt.is_zero() {
+            return TickOutput::default();
+        }
+        let rtt = link.params.rtt;
+
+        // 1. Advance stream windows, then allocate the bottleneck
+        //    (scratch buffers reused across ticks; no allocation here).
+        let mut flat = std::mem::take(&mut self.scratch_streams);
+        flat.clear();
+        for c in &mut self.channels {
+            for s in &mut c.streams {
+                s.tick(dt, rtt);
+                flat.push(*s);
+            }
+        }
+        let mut rates = std::mem::take(&mut self.scratch_rates);
+        crate::netsim::share_goodput_into(link, &flat, &mut rates);
+
+        // 2. Per-channel raw rate, then pipelining efficiency:
+        //    long-run goodput of a channel moving files of size S at raw
+        //    rate r with pipelining pp is r * S / (S + r*RTT/pp).
+        let mut idx = 0;
+        let mut channel_rates: Vec<f64> = Vec::with_capacity(self.channels.len());
+        let mut total_raw = 0.0;
+        for c in &self.channels {
+            let mut r = 0.0;
+            for _ in 0..c.num_streams() {
+                r += rates[idx];
+                idx += 1;
+            }
+            let p = &self.partitions[c.partition];
+            let s = p.avg_file_size.as_f64().max(1.0);
+            // Pipelining model: with pp requests in flight the server can
+            // stream files back-to-back as long as pp transmissions cover
+            // one RTT; otherwise the channel idles RTT/pp per file. Non-
+            // persistent tools additionally pay handshake RTTs per file.
+            //   time_per_file = max(S/r, RTT/pp) + handshakes*RTT
+            let eff = if r > 0.0 {
+                let xfer = s / r;
+                let paced = xfer.max(rtt.as_secs() / p.pp_level.max(1) as f64)
+                    + p.handshake_rtts * rtt.as_secs();
+                xfer / paced
+            } else {
+                0.0
+            };
+            let g = r * eff;
+            channel_rates.push(g);
+            total_raw += g;
+        }
+
+        // 3. End-system cap: scale all channels uniformly if the CPUs
+        //    cannot keep up with the network allocation.
+        let scale = if total_raw > cpu_cap_bytes_per_sec && total_raw > 0.0 {
+            cpu_cap_bytes_per_sec / total_raw
+        } else {
+            1.0
+        };
+
+        // 4. Move bytes and account requests.
+        let mut moved_total = 0.0;
+        let mut requests_per_sec = 0.0;
+        for (c, &g) in self.channels.iter().zip(&channel_rates) {
+            let p = &mut self.partitions[c.partition];
+            let rate = g * scale;
+            let moved = (rate * dt.as_secs()).min(p.remaining.as_f64());
+            p.remaining = p.remaining.saturating_sub(Bytes::new(moved));
+            moved_total += moved;
+            // Each avg-file worth of bytes is one request (chunked large
+            // files issue one request per chunk ≈ per avg_file/parallelism).
+            requests_per_sec += rate / p.avg_file_size.as_f64().max(1.0);
+        }
+
+        let open_streams = flat.len();
+        self.scratch_streams = flat;
+        self.scratch_rates = rates;
+        // 5. Reassign channels of partitions that just finished to the
+        //    unfinished partition with the most remaining data (a real
+        //    tool's worker simply dequeues the next file). Streams stay
+        //    warm: the TCP connections are reused.
+        if self.partitions.iter().any(|p| p.done()) {
+            let target = (0..self.partitions.len())
+                .filter(|&i| !self.partitions[i].done())
+                .max_by(|&a, &b| {
+                    self.partitions[a]
+                        .remaining
+                        .partial_cmp(&self.partitions[b].remaining)
+                        .unwrap()
+                });
+            match target {
+                Some(t) => {
+                    let parallelism =
+                        self.effective_parallelism(t, self.channels.len().max(1) as u32);
+                    let avg_win = self.avg_win;
+                    for c in &mut self.channels {
+                        if self.partitions[c.partition].done() {
+                            *c = Channel::open_warm(t, parallelism, avg_win);
+                        }
+                    }
+                }
+                None => self.channels.clear(),
+            }
+            // Refresh cc_level bookkeeping.
+            for i in 0..self.partitions.len() {
+                let count = self.channels.iter().filter(|c| c.partition == i).count() as u32;
+                self.partitions[i].cc_level = count;
+            }
+        }
+
+        TickOutput {
+            goodput: Rate::from_bytes_per_sec(moved_total / dt.as_secs()),
+            moved: Bytes::new(moved_total),
+            requests_per_sec,
+            open_streams,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{partition_files, standard};
+    use crate::netsim::{BackgroundTraffic, LinkParams};
+    use crate::units::Rate;
+
+    fn cloudlab_link() -> Link {
+        Link::new(
+            LinkParams {
+                capacity: Rate::from_gbps(1.0),
+                rtt: SimDuration::from_millis(36.0),
+                avg_win: Bytes::from_mb(1.0),
+                overload_gamma: 0.02,
+                overload_floor: 0.55,
+            },
+            BackgroundTraffic::constant(0.0),
+        )
+    }
+
+    fn engine_for(dataset_name: &str, link: &Link) -> TransferEngine {
+        let ds = standard::by_name(dataset_name, 7).unwrap();
+        // Mirror the heuristic initializer: parallelism capped at the
+        // per-channel stream count that fills the pipe.
+        let p_cap = link.params.knee_streams().ceil() as u32;
+        let parts =
+            crate::dataset::partition_files_capped(&ds, link.params.bdp(), p_cap.max(1));
+        TransferEngine::new(&parts, link.params.avg_win)
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let link = cloudlab_link();
+        let e = engine_for("mixed", &link);
+        let sum: f64 = e.partitions().iter().map(|p| p.weight).sum();
+        assert!((sum - 1.0).abs() < 1e-9, "weights sum {sum}");
+    }
+
+    #[test]
+    fn channel_distribution_conserves_total() {
+        let link = cloudlab_link();
+        let mut e = engine_for("mixed", &link);
+        for n in [3u32, 8, 17, 2, 1, 30] {
+            e.set_num_channels(n);
+            assert_eq!(e.num_channels(), n, "requested {n}");
+            let cc_sum: u32 = e.partitions().iter().map(|p| p.cc_level).sum();
+            assert_eq!(cc_sum, n);
+        }
+    }
+
+    #[test]
+    fn low_budget_goes_to_heaviest_partitions() {
+        let link = cloudlab_link();
+        let mut e = engine_for("mixed", &link);
+        e.set_num_channels(1);
+        assert_eq!(e.num_channels(), 1);
+        // The single channel must serve the partition with the most data.
+        let heaviest = e
+            .partitions()
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.remaining.partial_cmp(&b.1.remaining).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(e.channels()[0].partition, heaviest);
+    }
+
+    #[test]
+    fn every_unfinished_partition_gets_a_channel() {
+        let link = cloudlab_link();
+        let mut e = engine_for("mixed", &link);
+        e.set_num_channels(3);
+        for p in e.partitions() {
+            if !p.done() {
+                assert!(p.cc_level >= 1, "partition {} starved", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn moving_bytes_decreases_remaining() {
+        let link = cloudlab_link();
+        let mut e = engine_for("medium", &link);
+        e.set_num_channels(4);
+        let before = e.remaining();
+        let out = e.tick(&link, SimDuration::from_millis(100.0), f64::INFINITY);
+        assert!(out.moved.as_f64() > 0.0);
+        let after = e.remaining() + out.moved;
+        assert!(
+            (after.as_f64() - before.as_f64()).abs() < 1.0,
+            "conservation: {} vs {}",
+            after,
+            before
+        );
+    }
+
+    #[test]
+    fn transfer_completes() {
+        let link = cloudlab_link();
+        let ds = standard::large_dataset(3);
+        // Shrink for test speed: keep 4 files.
+        let small = crate::dataset::Dataset::new("t", ds.files[..4].to_vec());
+        let parts = partition_files(&small, link.params.bdp());
+        let mut e = TransferEngine::new(&parts, link.params.avg_win);
+        e.set_num_channels(4);
+        let dt = SimDuration::from_millis(100.0);
+        let mut ticks = 0;
+        while !e.is_done() && ticks < 200_000 {
+            e.tick(&link, dt, f64::INFINITY);
+            ticks += 1;
+        }
+        assert!(e.is_done(), "transfer should finish, remaining {}", e.remaining());
+        assert_eq!(e.num_channels(), 0, "channels released on completion");
+    }
+
+    #[test]
+    fn goodput_bounded_by_capacity() {
+        let link = cloudlab_link();
+        let mut e = engine_for("large", &link);
+        e.set_num_channels(8);
+        // Warm up.
+        let dt = SimDuration::from_millis(100.0);
+        let mut peak: f64 = 0.0;
+        for _ in 0..100 {
+            let out = e.tick(&link, dt, f64::INFINITY);
+            peak = peak.max(out.goodput.as_gbps());
+        }
+        assert!(peak <= 1.0 + 1e-6, "goodput {peak} Gbps over 1 Gbps link");
+        assert!(peak > 0.8, "large files should nearly saturate, got {peak}");
+    }
+
+    #[test]
+    fn cpu_cap_limits_goodput() {
+        let link = cloudlab_link();
+        let mut e = engine_for("large", &link);
+        e.set_num_channels(8);
+        let dt = SimDuration::from_millis(100.0);
+        for _ in 0..50 {
+            e.tick(&link, dt, f64::INFINITY);
+        }
+        let capped = e.tick(&link, dt, 10e6); // 10 MB/s cap
+        assert!(capped.goodput.as_bytes_per_sec() <= 10e6 * 1.001);
+    }
+
+    #[test]
+    fn pipelining_hurts_small_files_when_disabled() {
+        let link = cloudlab_link();
+        let mut e1 = engine_for("small", &link);
+        let mut e2 = engine_for("small", &link);
+        // Force pp=1 on e2.
+        for i in 0..e2.partitions().len() {
+            e2.set_pp_level(i, 1);
+        }
+        e1.set_num_channels(4);
+        e2.set_num_channels(4);
+        let dt = SimDuration::from_millis(100.0);
+        let (mut g1, mut g2) = (0.0, 0.0);
+        for _ in 0..100 {
+            g1 += e1.tick(&link, dt, f64::INFINITY).moved.as_f64();
+            g2 += e2.tick(&link, dt, f64::INFINITY).moved.as_f64();
+        }
+        assert!(g1 > 2.0 * g2, "pipelining should speed small files: {g1} vs {g2}");
+    }
+
+    #[test]
+    fn shrinking_channels_closes_streams() {
+        let link = cloudlab_link();
+        let mut e = engine_for("medium", &link);
+        e.set_num_channels(10);
+        let s10 = e.open_streams();
+        e.set_num_channels(2);
+        let s2 = e.open_streams();
+        assert!(s2 < s10);
+        assert_eq!(e.num_channels(), 2);
+    }
+
+    #[test]
+    fn empty_engine_is_done() {
+        let e = TransferEngine::new(&[], Bytes::from_mb(1.0));
+        assert!(e.is_done());
+        assert_eq!(e.remaining(), Bytes::ZERO);
+    }
+}

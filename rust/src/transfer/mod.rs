@@ -1,0 +1,16 @@
+//! The transfer engine: datasets bound to channels.
+//!
+//! Implements the application semantics of §II: a session moves a set of
+//! file *partitions* over a set of *channels* (concurrency), each channel
+//! carrying `parallelism` TCP streams and issuing up to `pipelining`
+//! requests back-to-back. The engine tracks remaining data per partition,
+//! converts network stream allocations into application goodput (charging
+//! the per-file RTT overhead that pipelining amortizes), and exposes the
+//! channel-redistribution primitive (`weight_i × numCh`, Alg. 2/4/5/6
+//! line "updateChannels") that all tuning algorithms share.
+
+mod engine;
+mod channel;
+
+pub use channel::Channel;
+pub use engine::{PartitionProgress, TickOutput, TransferEngine};

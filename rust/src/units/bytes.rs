@@ -1,0 +1,191 @@
+//! Data volume newtype.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub, SubAssign};
+
+/// A data volume in bytes.
+///
+/// Backed by `f64`: the simulator moves fractional bytes per tick and the
+/// largest dataset (27.85 GB, Table II) is far below the 2^53 exact-integer
+/// limit.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Bytes(f64);
+
+impl Bytes {
+    pub const ZERO: Bytes = Bytes(0.0);
+
+    /// Construct from a raw byte count. Negative inputs clamp to zero.
+    pub fn new(bytes: f64) -> Self {
+        Bytes(if bytes > 0.0 { bytes } else { 0.0 })
+    }
+
+    pub fn from_kb(kb: f64) -> Self {
+        Bytes::new(kb * 1e3)
+    }
+
+    pub fn from_mb(mb: f64) -> Self {
+        Bytes::new(mb * 1e6)
+    }
+
+    pub fn from_gb(gb: f64) -> Self {
+        Bytes::new(gb * 1e9)
+    }
+
+    pub fn as_f64(self) -> f64 {
+        self.0
+    }
+
+    pub fn as_kb(self) -> f64 {
+        self.0 / 1e3
+    }
+
+    pub fn as_mb(self) -> f64 {
+        self.0 / 1e6
+    }
+
+    pub fn as_gb(self) -> f64 {
+        self.0 / 1e9
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.0 <= 0.0
+    }
+
+    pub fn min(self, other: Bytes) -> Bytes {
+        Bytes(self.0.min(other.0))
+    }
+
+    pub fn max(self, other: Bytes) -> Bytes {
+        Bytes(self.0.max(other.0))
+    }
+
+    /// Saturating subtraction (never negative).
+    pub fn saturating_sub(self, other: Bytes) -> Bytes {
+        Bytes((self.0 - other.0).max(0.0))
+    }
+
+    /// Fraction `self / total`, 0 when total is zero.
+    pub fn fraction_of(self, total: Bytes) -> f64 {
+        if total.0 <= 0.0 {
+            0.0
+        } else {
+            self.0 / total.0
+        }
+    }
+}
+
+impl Add for Bytes {
+    type Output = Bytes;
+    fn add(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Bytes {
+    fn add_assign(&mut self, rhs: Bytes) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Bytes {
+    type Output = Bytes;
+    fn sub(self, rhs: Bytes) -> Bytes {
+        Bytes::new(self.0 - rhs.0)
+    }
+}
+
+impl SubAssign for Bytes {
+    fn sub_assign(&mut self, rhs: Bytes) {
+        *self = *self - rhs;
+    }
+}
+
+impl Mul<f64> for Bytes {
+    type Output = Bytes;
+    fn mul(self, rhs: f64) -> Bytes {
+        Bytes::new(self.0 * rhs)
+    }
+}
+
+impl Div<f64> for Bytes {
+    type Output = Bytes;
+    fn div(self, rhs: f64) -> Bytes {
+        Bytes::new(self.0 / rhs)
+    }
+}
+
+impl Div for Bytes {
+    /// Ratio of two volumes (dimensionless).
+    type Output = f64;
+    fn div(self, rhs: Bytes) -> f64 {
+        if rhs.0 == 0.0 {
+            0.0
+        } else {
+            self.0 / rhs.0
+        }
+    }
+}
+
+impl Sum for Bytes {
+    fn sum<I: Iterator<Item = Bytes>>(iter: I) -> Bytes {
+        iter.fold(Bytes::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1e9 {
+            write!(f, "{:.2} GB", self.as_gb())
+        } else if self.0 >= 1e6 {
+            write!(f, "{:.2} MB", self.as_mb())
+        } else if self.0 >= 1e3 {
+            write!(f, "{:.2} KB", self.as_kb())
+        } else {
+            write!(f, "{:.0} B", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_round_trip() {
+        assert_eq!(Bytes::from_mb(2.5).as_kb(), 2500.0);
+        assert_eq!(Bytes::from_gb(1.0).as_mb(), 1000.0);
+    }
+
+    #[test]
+    fn negative_clamps_to_zero() {
+        assert_eq!(Bytes::new(-5.0), Bytes::ZERO);
+        assert_eq!(Bytes::new(3.0) - Bytes::new(10.0), Bytes::ZERO);
+    }
+
+    #[test]
+    fn saturating_sub_never_negative() {
+        let a = Bytes::new(1.0);
+        let b = Bytes::new(2.0);
+        assert_eq!(a.saturating_sub(b), Bytes::ZERO);
+        assert_eq!(b.saturating_sub(a), Bytes::new(1.0));
+    }
+
+    #[test]
+    fn fraction_of_zero_total_is_zero() {
+        assert_eq!(Bytes::new(5.0).fraction_of(Bytes::ZERO), 0.0);
+        assert_eq!(Bytes::new(5.0).fraction_of(Bytes::new(10.0)), 0.5);
+    }
+
+    #[test]
+    fn display_picks_unit() {
+        assert_eq!(format!("{}", Bytes::from_gb(2.0)), "2.00 GB");
+        assert_eq!(format!("{}", Bytes::new(512.0)), "512 B");
+    }
+
+    #[test]
+    fn sum_over_iter() {
+        let total: Bytes = (0..4).map(|i| Bytes::new(i as f64)).sum();
+        assert_eq!(total, Bytes::new(6.0));
+    }
+}

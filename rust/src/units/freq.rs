@@ -1,0 +1,111 @@
+//! CPU frequency newtype.
+
+use std::fmt;
+use std::ops::{Add, Div, Mul, Sub};
+
+/// A CPU core frequency in Hz.
+///
+/// The DVFS ladders in [`crate::cpusim`] are expressed as lists of `Freq`
+/// P-states; Algorithm 3 walks them one step at a time.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Freq(f64);
+
+impl Freq {
+    pub const ZERO: Freq = Freq(0.0);
+
+    pub fn from_hz(hz: f64) -> Self {
+        Freq(if hz > 0.0 { hz } else { 0.0 })
+    }
+
+    pub fn from_mhz(mhz: f64) -> Self {
+        Freq::from_hz(mhz * 1e6)
+    }
+
+    pub fn from_ghz(ghz: f64) -> Self {
+        Freq::from_hz(ghz * 1e9)
+    }
+
+    pub fn as_hz(self) -> f64 {
+        self.0
+    }
+
+    pub fn as_mhz(self) -> f64 {
+        self.0 / 1e6
+    }
+
+    pub fn as_ghz(self) -> f64 {
+        self.0 / 1e9
+    }
+
+    pub fn min(self, other: Freq) -> Freq {
+        Freq(self.0.min(other.0))
+    }
+
+    pub fn max(self, other: Freq) -> Freq {
+        Freq(self.0.max(other.0))
+    }
+
+    /// Cycles executed over `secs` seconds at this frequency.
+    pub fn cycles_over(self, secs: f64) -> f64 {
+        self.0 * secs
+    }
+}
+
+impl Add for Freq {
+    type Output = Freq;
+    fn add(self, rhs: Freq) -> Freq {
+        Freq(self.0 + rhs.0)
+    }
+}
+
+impl Sub for Freq {
+    type Output = Freq;
+    fn sub(self, rhs: Freq) -> Freq {
+        Freq::from_hz(self.0 - rhs.0)
+    }
+}
+
+impl Mul<f64> for Freq {
+    type Output = Freq;
+    fn mul(self, rhs: f64) -> Freq {
+        Freq::from_hz(self.0 * rhs)
+    }
+}
+
+impl Div for Freq {
+    type Output = f64;
+    fn div(self, rhs: Freq) -> f64 {
+        if rhs.0 == 0.0 {
+            0.0
+        } else {
+            self.0 / rhs.0
+        }
+    }
+}
+
+impl fmt::Display for Freq {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.2} GHz", self.as_ghz())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(Freq::from_ghz(2.5).as_mhz(), 2500.0);
+        assert_eq!(Freq::from_mhz(1200.0).as_ghz(), 1.2);
+    }
+
+    #[test]
+    fn cycles_over_seconds() {
+        assert_eq!(Freq::from_ghz(2.0).cycles_over(0.5), 1e9);
+    }
+
+    #[test]
+    fn ordering_works() {
+        assert!(Freq::from_ghz(1.2) < Freq::from_ghz(3.5));
+    }
+}

@@ -1,0 +1,62 @@
+//! Typed physical units used throughout the simulator and coordinator.
+//!
+//! Every quantity the paper's algorithms reason about — data sizes, rates,
+//! power, energy, CPU frequency, time — gets a newtype here so that unit
+//! mistakes (bits vs bytes, MHz vs GHz, J vs Wh) are compile errors instead
+//! of silent mis-tunings.
+//!
+//! Conventions:
+//! * [`Bytes`] — data volume in bytes (f64; datasets reach tens of GB).
+//! * [`Rate`] — network/application throughput in **bits per second**.
+//! * [`Freq`] — CPU core frequency in Hz.
+//! * [`Power`] — watts; [`Energy`] — joules.
+//! * [`SimTime`] / [`SimDuration`] — simulation clock, seconds.
+
+mod bytes;
+mod rate;
+mod freq;
+mod power;
+mod time;
+
+pub use bytes::Bytes;
+pub use rate::Rate;
+pub use freq::Freq;
+pub use power::{Energy, Power};
+pub use time::{SimDuration, SimTime};
+
+/// Round-trip time, stored as a [`SimDuration`].
+pub type Rtt = SimDuration;
+
+/// Bandwidth-delay product helper: `bandwidth * rtt`, in bytes.
+///
+/// This is the quantity Algorithm 1 uses both as the chunk size for large
+/// files and to decide whether a file needs splitting.
+pub fn bdp(bandwidth: Rate, rtt: Rtt) -> Bytes {
+    Bytes::new(bandwidth.as_bits_per_sec() / 8.0 * rtt.as_secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bdp_matches_table1_chameleon() {
+        // Table I: 10 Gbps, 32 ms -> 40 MB.
+        let b = bdp(Rate::from_gbps(10.0), SimDuration::from_millis(32.0));
+        assert!((b.as_mb() - 40.0).abs() < 0.1, "got {} MB", b.as_mb());
+    }
+
+    #[test]
+    fn bdp_matches_table1_cloudlab() {
+        // Table I: 1 Gbps, 36 ms -> 4.5 MB.
+        let b = bdp(Rate::from_gbps(1.0), SimDuration::from_millis(36.0));
+        assert!((b.as_mb() - 4.5).abs() < 0.05, "got {} MB", b.as_mb());
+    }
+
+    #[test]
+    fn bdp_matches_table1_didclab() {
+        // Table I: 1 Gbps, 44 ms -> 5.5 MB.
+        let b = bdp(Rate::from_gbps(1.0), SimDuration::from_millis(44.0));
+        assert!((b.as_mb() - 5.5).abs() < 0.05, "got {} MB", b.as_mb());
+    }
+}

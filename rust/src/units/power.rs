@@ -1,0 +1,205 @@
+//! Power and energy newtypes.
+
+use super::SimDuration;
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub};
+
+/// Instantaneous power draw in watts.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Power(f64);
+
+impl Power {
+    pub const ZERO: Power = Power(0.0);
+
+    pub fn from_watts(w: f64) -> Self {
+        Power(if w > 0.0 { w } else { 0.0 })
+    }
+
+    pub fn as_watts(self) -> f64 {
+        self.0
+    }
+
+    /// Energy accumulated over an interval at this constant power.
+    pub fn over(self, dt: SimDuration) -> Energy {
+        Energy::from_joules(self.0 * dt.as_secs())
+    }
+
+    pub fn min(self, other: Power) -> Power {
+        Power(self.0.min(other.0))
+    }
+
+    pub fn max(self, other: Power) -> Power {
+        Power(self.0.max(other.0))
+    }
+}
+
+impl Add for Power {
+    type Output = Power;
+    fn add(self, rhs: Power) -> Power {
+        Power(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Power {
+    fn add_assign(&mut self, rhs: Power) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Power {
+    type Output = Power;
+    fn sub(self, rhs: Power) -> Power {
+        Power::from_watts(self.0 - rhs.0)
+    }
+}
+
+impl Mul<f64> for Power {
+    type Output = Power;
+    fn mul(self, rhs: f64) -> Power {
+        Power::from_watts(self.0 * rhs)
+    }
+}
+
+impl Sum for Power {
+    fn sum<I: Iterator<Item = Power>>(iter: I) -> Power {
+        iter.fold(Power::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for Power {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.1} W", self.0)
+    }
+}
+
+/// Accumulated energy in joules.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Energy(f64);
+
+impl Energy {
+    pub const ZERO: Energy = Energy(0.0);
+
+    pub fn from_joules(j: f64) -> Self {
+        Energy(if j > 0.0 { j } else { 0.0 })
+    }
+
+    pub fn from_kilojoules(kj: f64) -> Self {
+        Energy::from_joules(kj * 1e3)
+    }
+
+    pub fn as_joules(self) -> f64 {
+        self.0
+    }
+
+    pub fn as_kilojoules(self) -> f64 {
+        self.0 / 1e3
+    }
+
+    pub fn as_watt_hours(self) -> f64 {
+        self.0 / 3600.0
+    }
+
+    /// Average power if this energy was spent over `dt`.
+    pub fn average_power(self, dt: SimDuration) -> Power {
+        if dt.as_secs() <= 0.0 {
+            Power::ZERO
+        } else {
+            Power::from_watts(self.0 / dt.as_secs())
+        }
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.0 <= 0.0
+    }
+
+    /// Saturating subtraction.
+    pub fn saturating_sub(self, other: Energy) -> Energy {
+        Energy::from_joules(self.0 - other.0)
+    }
+}
+
+impl Add for Energy {
+    type Output = Energy;
+    fn add(self, rhs: Energy) -> Energy {
+        Energy(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Energy {
+    fn add_assign(&mut self, rhs: Energy) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Energy {
+    type Output = Energy;
+    fn sub(self, rhs: Energy) -> Energy {
+        Energy::from_joules(self.0 - rhs.0)
+    }
+}
+
+impl Mul<f64> for Energy {
+    type Output = Energy;
+    fn mul(self, rhs: f64) -> Energy {
+        Energy::from_joules(self.0 * rhs)
+    }
+}
+
+impl Div for Energy {
+    type Output = f64;
+    fn div(self, rhs: Energy) -> f64 {
+        if rhs.0 == 0.0 {
+            0.0
+        } else {
+            self.0 / rhs.0
+        }
+    }
+}
+
+impl Sum for Energy {
+    fn sum<I: Iterator<Item = Energy>>(iter: I) -> Energy {
+        iter.fold(Energy::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for Energy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1e3 {
+            write!(f, "{:.2} kJ", self.as_kilojoules())
+        } else {
+            write!(f, "{:.1} J", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_over_time_is_energy() {
+        let e = Power::from_watts(50.0).over(SimDuration::from_secs(10.0));
+        assert_eq!(e.as_joules(), 500.0);
+    }
+
+    #[test]
+    fn average_power_round_trip() {
+        let e = Energy::from_joules(500.0);
+        let p = e.average_power(SimDuration::from_secs(10.0));
+        assert_eq!(p.as_watts(), 50.0);
+        assert_eq!(Energy::from_joules(1.0).average_power(SimDuration::ZERO), Power::ZERO);
+    }
+
+    #[test]
+    fn watt_hours() {
+        assert_eq!(Energy::from_joules(3600.0).as_watt_hours(), 1.0);
+    }
+
+    #[test]
+    fn energy_ratio() {
+        let a = Energy::from_joules(52.0);
+        let b = Energy::from_joules(100.0);
+        assert!((a / b - 0.52).abs() < 1e-12);
+    }
+}

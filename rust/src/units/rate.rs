@@ -1,0 +1,175 @@
+//! Throughput / bandwidth newtype.
+
+use super::{Bytes, SimDuration};
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub};
+
+/// A data rate in **bits per second** (the unit the paper reports:
+/// Gbps testbed bandwidths, Mbps targets).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Rate(f64);
+
+impl Rate {
+    pub const ZERO: Rate = Rate(0.0);
+
+    /// From raw bits per second; negative clamps to zero.
+    pub fn from_bits_per_sec(bps: f64) -> Self {
+        Rate(if bps > 0.0 { bps } else { 0.0 })
+    }
+
+    pub fn from_mbps(mbps: f64) -> Self {
+        Rate::from_bits_per_sec(mbps * 1e6)
+    }
+
+    pub fn from_gbps(gbps: f64) -> Self {
+        Rate::from_bits_per_sec(gbps * 1e9)
+    }
+
+    /// From bytes per second.
+    pub fn from_bytes_per_sec(bytes: f64) -> Self {
+        Rate::from_bits_per_sec(bytes * 8.0)
+    }
+
+    pub fn as_bits_per_sec(self) -> f64 {
+        self.0
+    }
+
+    pub fn as_mbps(self) -> f64 {
+        self.0 / 1e6
+    }
+
+    pub fn as_gbps(self) -> f64 {
+        self.0 / 1e9
+    }
+
+    pub fn as_bytes_per_sec(self) -> f64 {
+        self.0 / 8.0
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.0 <= 0.0
+    }
+
+    pub fn min(self, other: Rate) -> Rate {
+        Rate(self.0.min(other.0))
+    }
+
+    pub fn max(self, other: Rate) -> Rate {
+        Rate(self.0.max(other.0))
+    }
+
+    /// Volume moved over a duration at this rate.
+    pub fn volume_over(self, dt: SimDuration) -> Bytes {
+        Bytes::new(self.as_bytes_per_sec() * dt.as_secs())
+    }
+
+    /// Average rate that moves `volume` in `dt`.
+    pub fn average(volume: Bytes, dt: SimDuration) -> Rate {
+        if dt.as_secs() <= 0.0 {
+            Rate::ZERO
+        } else {
+            Rate::from_bytes_per_sec(volume.as_f64() / dt.as_secs())
+        }
+    }
+}
+
+impl Add for Rate {
+    type Output = Rate;
+    fn add(self, rhs: Rate) -> Rate {
+        Rate(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Rate {
+    fn add_assign(&mut self, rhs: Rate) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Rate {
+    type Output = Rate;
+    fn sub(self, rhs: Rate) -> Rate {
+        Rate::from_bits_per_sec(self.0 - rhs.0)
+    }
+}
+
+impl Mul<f64> for Rate {
+    type Output = Rate;
+    fn mul(self, rhs: f64) -> Rate {
+        Rate::from_bits_per_sec(self.0 * rhs)
+    }
+}
+
+impl Div<f64> for Rate {
+    type Output = Rate;
+    fn div(self, rhs: f64) -> Rate {
+        Rate::from_bits_per_sec(self.0 / rhs)
+    }
+}
+
+impl Div for Rate {
+    /// Ratio of two rates (dimensionless); 0 when the divisor is 0.
+    type Output = f64;
+    fn div(self, rhs: Rate) -> f64 {
+        if rhs.0 == 0.0 {
+            0.0
+        } else {
+            self.0 / rhs.0
+        }
+    }
+}
+
+impl Sum for Rate {
+    fn sum<I: Iterator<Item = Rate>>(iter: I) -> Rate {
+        iter.fold(Rate::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for Rate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1e9 {
+            write!(f, "{:.2} Gbps", self.as_gbps())
+        } else if self.0 >= 1e6 {
+            write!(f, "{:.1} Mbps", self.as_mbps())
+        } else {
+            write!(f, "{:.0} bps", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_bytes_conversion() {
+        assert_eq!(Rate::from_bytes_per_sec(125e6).as_gbps(), 1.0);
+        assert_eq!(Rate::from_gbps(1.0).as_bytes_per_sec(), 125e6);
+    }
+
+    #[test]
+    fn volume_over_duration() {
+        let v = Rate::from_gbps(1.0).volume_over(SimDuration::from_secs(8.0));
+        assert_eq!(v.as_gb(), 1.0);
+    }
+
+    #[test]
+    fn average_rate() {
+        let r = Rate::average(Bytes::from_gb(1.0), SimDuration::from_secs(8.0));
+        assert!((r.as_gbps() - 1.0).abs() < 1e-12);
+        assert_eq!(Rate::average(Bytes::from_gb(1.0), SimDuration::ZERO), Rate::ZERO);
+    }
+
+    #[test]
+    fn ratio_handles_zero() {
+        assert_eq!(Rate::from_mbps(5.0) / Rate::ZERO, 0.0);
+        assert_eq!(Rate::from_mbps(5.0) / Rate::from_mbps(10.0), 0.5);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(format!("{}", Rate::from_gbps(10.0)), "10.00 Gbps");
+        assert_eq!(format!("{}", Rate::from_mbps(400.0)), "400.0 Mbps");
+    }
+}

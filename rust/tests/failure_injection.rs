@@ -1,0 +1,134 @@
+//! Failure injection: scripted bandwidth collapses mid-transfer.
+//!
+//! The FSM (Figure 1) exists precisely for these events: Warning/Recovery
+//! must distinguish "too many channels" from "the path lost capacity",
+//! and the algorithms must neither stall nor spiral.
+
+use greendt::config::testbeds;
+use greendt::coordinator::AlgorithmKind;
+use greendt::dataset::standard;
+use greendt::netsim::BandwidthEvent;
+use greendt::sim::session::{run_session, SessionConfig};
+use greendt::units::{Rate, SimTime};
+
+fn drop_events(at: f64, until: f64, severity: f64) -> Vec<BandwidthEvent> {
+    vec![
+        BandwidthEvent { at: SimTime::from_secs(at), mean_fraction: severity },
+        BandwidthEvent { at: SimTime::from_secs(until), mean_fraction: 0.08 },
+    ]
+}
+
+#[test]
+fn eemt_survives_a_half_capacity_dip() {
+    let cfg = SessionConfig::new(
+        testbeds::cloudlab(),
+        standard::large_dataset(42),
+        AlgorithmKind::MaxThroughput,
+    )
+    .with_bandwidth_events(drop_events(30.0, 90.0, 0.55))
+    .recording();
+    let out = run_session(&cfg);
+    assert!(out.completed, "must finish despite the dip");
+
+    // Throughput must visibly fall inside the window and recover after.
+    let during: Vec<f64> = out
+        .timeline
+        .iter()
+        .filter(|p| p.t_secs > 35.0 && p.t_secs < 85.0)
+        .map(|p| p.throughput.as_mbps())
+        .collect();
+    let after: Vec<f64> = out
+        .timeline
+        .iter()
+        .filter(|p| p.t_secs > 100.0)
+        .map(|p| p.throughput.as_mbps())
+        .collect();
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    assert!(mean(&during) < 550.0, "congested mean {}", mean(&during));
+    if !after.is_empty() {
+        assert!(mean(&after) > 750.0, "recovered mean {}", mean(&after));
+    }
+}
+
+#[test]
+fn eett_reacquires_target_after_event_clears() {
+    let target = Rate::from_mbps(400.0);
+    let cfg = SessionConfig::new(
+        testbeds::cloudlab(),
+        standard::mixed_dataset(42),
+        AlgorithmKind::TargetThroughput(target),
+    )
+    .with_bandwidth_events(drop_events(40.0, 80.0, 0.7))
+    .recording();
+    let out = run_session(&cfg);
+    assert!(out.completed);
+    // After the event clears, tracking must return to the band.
+    let tail: Vec<f64> = out
+        .timeline
+        .iter()
+        .filter(|p| p.t_secs > 110.0)
+        .map(|p| p.throughput.as_mbps())
+        .collect();
+    if tail.len() >= 5 {
+        let mean = tail.iter().sum::<f64>() / tail.len() as f64;
+        assert!(
+            (mean - 400.0).abs() / 400.0 < 0.3,
+            "post-event tracking mean {mean} vs target 400"
+        );
+    }
+}
+
+#[test]
+fn me_does_not_stall_under_repeated_dips() {
+    let events: Vec<BandwidthEvent> = (0..5)
+        .flat_map(|k| {
+            let base = 20.0 + 40.0 * k as f64;
+            drop_events(base, base + 20.0, 0.6)
+        })
+        .collect();
+    let cfg = SessionConfig::new(
+        testbeds::cloudlab(),
+        standard::large_dataset(42),
+        AlgorithmKind::MinEnergy,
+    )
+    .with_bandwidth_events(events);
+    let out = run_session(&cfg);
+    assert!(out.completed, "repeated dips must not stall ME");
+    assert!(out.avg_throughput.as_mbps() > 300.0, "tput {}", out.avg_throughput);
+}
+
+#[test]
+fn total_blackoutish_event_only_delays_completion() {
+    // 95% of capacity vanishes for a minute; the floor keeps a trickle.
+    let cfg = SessionConfig::new(
+        testbeds::cloudlab(),
+        standard::medium_dataset(42),
+        AlgorithmKind::MaxThroughput,
+    )
+    .with_bandwidth_events(drop_events(20.0, 80.0, 0.85));
+    let out = run_session(&cfg);
+    assert!(out.completed);
+    // Clean run takes ~105 s; with the event it must take noticeably more.
+    assert!(out.duration.as_secs() > 130.0, "duration {}", out.duration);
+}
+
+#[test]
+fn fsm_visits_warning_or_recovery_during_the_dip() {
+    // The FSM trace must show the algorithm actually *reacting*: at least
+    // one Warning or Recovery occupancy while the path is congested.
+    let cfg = SessionConfig::new(
+        testbeds::cloudlab(),
+        standard::large_dataset(42),
+        AlgorithmKind::MaxThroughput,
+    )
+    .with_bandwidth_events(drop_events(30.0, 120.0, 0.6))
+    .recording();
+    let out = run_session(&cfg);
+    assert!(out.completed);
+    let reacted = out
+        .timeline
+        .iter()
+        .any(|p| p.fsm == "warning" || p.fsm == "recovery");
+    assert!(reacted, "FSM never left increase: {:?}",
+        out.timeline.iter().map(|p| p.fsm).collect::<Vec<_>>());
+}

@@ -1,0 +1,100 @@
+//! Figure-level shape assertions: the paper's qualitative claims must
+//! hold on every regeneration (who wins, and by roughly what factor).
+
+use greendt::experiments::{fig2, fig3, fig4, validate};
+use greendt::units::Rate;
+
+#[test]
+fn tables_match_paper() {
+    assert!(validate::check(42).is_empty());
+}
+
+#[test]
+fn fig2_shapes_hold() {
+    let r = fig2::run(42);
+
+    for tb in fig2::TESTBEDS {
+        for ds in fig2::DATASETS {
+            // wget is always the slowest tool; our EEMT is never beaten.
+            let wget = r.outcome(tb, ds, "wget").avg_throughput.as_bits_per_sec();
+            let eemt = r.outcome(tb, ds, "EEMT").avg_throughput.as_bits_per_sec();
+            for tool in ["curl", "http2", "Ismail-ME", "Ismail-MT", "ME"] {
+                let t = r.outcome(tb, ds, tool).avg_throughput.as_bits_per_sec();
+                assert!(t >= wget * 0.99, "{tool} slower than wget on {tb}/{ds}");
+                assert!(eemt >= t * 0.93, "EEMT beaten by {tool} on {tb}/{ds}");
+            }
+            // ME never uses more energy than the simple tools.
+            let me = r.outcome(tb, ds, "ME").client_energy.as_joules();
+            for tool in ["wget", "curl", "http2"] {
+                let e = r.outcome(tb, ds, tool).client_energy.as_joules();
+                assert!(me < e, "ME not cheaper than {tool} on {tb}/{ds}");
+            }
+        }
+    }
+
+    // §V-A headline factors on Chameleon/mixed (direction + rough size).
+    let h = r.headlines();
+    assert!(h.me_energy_reduction > 0.35, "ME saving {:.2} (paper 0.48)", h.me_energy_reduction);
+    assert!(h.eemt_tput_gain > 0.50, "EEMT gain {:.2} (paper 0.80)", h.eemt_tput_gain);
+    assert!(
+        h.eemt_energy_reduction > 0.25,
+        "EEMT saving {:.2} (paper 0.43)",
+        h.eemt_energy_reduction
+    );
+
+    // http2 beats curl on small files; on the WAN it is window-limited.
+    let h2 = r.outcome("chameleon", "small", "http2").avg_throughput;
+    let curl = r.outcome("chameleon", "small", "curl").avg_throughput;
+    assert!(h2.as_bits_per_sec() > 5.0 * curl.as_bits_per_sec());
+    let h2_large = r.outcome("chameleon", "large", "http2").avg_throughput;
+    assert!(h2_large.as_gbps() < 1.5, "http2 must stay window-limited");
+}
+
+#[test]
+fn fig3_shapes_hold() {
+    let r = fig3::run(42);
+    for (tb, bw) in fig3::PANELS {
+        for frac in fig3::FRACTIONS {
+            let target = Rate::from_mbps(bw * frac);
+            let eett = r.outcome(tb, target, "EETT");
+            let ismail = r.outcome(tb, target, "Ismail-TT");
+            let err = (eett.avg_throughput.as_mbps() - target.as_mbps()).abs()
+                / target.as_mbps();
+            assert!(err < 0.15, "EETT err {:.2} on {tb} @ {target}", err);
+            // EETT never uses more energy when achieving a comparable rate.
+            if (ismail.avg_throughput.as_mbps() - target.as_mbps()).abs() / target.as_mbps()
+                < 0.25
+            {
+                assert!(
+                    eett.client_energy.as_joules() < ismail.client_energy.as_joules() * 1.05,
+                    "EETT energy {} vs Ismail {} on {tb} @ {target}",
+                    eett.client_energy,
+                    ismail.client_energy
+                );
+            }
+        }
+    }
+    // The slow-ramp complaint: Ismail-TT misses high targets badly.
+    let high = Rate::from_mbps(10_000.0 * 0.8);
+    let ismail_high = r.outcome("chameleon", high, "Ismail-TT");
+    assert!(ismail_high.avg_throughput.as_gbps() < 0.8 * 8.0);
+}
+
+#[test]
+fn fig4_shapes_hold() {
+    let r = fig4::run(42);
+    for tb in fig4::TESTBEDS {
+        // Scaling always helps, on every testbed.
+        let me_gain = r.reduction(tb, "ME", "ME w/o scaling");
+        let eemt_gain = r.reduction(tb, "EEMT", "EEMT w/o scaling");
+        assert!(me_gain > 0.05, "ME scaling gain {me_gain:.2} on {tb}");
+        assert!(eemt_gain > 0.05, "EEMT scaling gain {eemt_gain:.2} on {tb}");
+        // And the full systems beat Alan et al.
+        assert!(r.reduction(tb, "ME", "Alan-ME") > 0.10, "{tb}");
+        assert!(r.reduction(tb, "EEMT", "Alan-MT") > 0.10, "{tb}");
+    }
+    // On the big-BDP testbed, tuning alone (w/o scaling) already wins
+    // substantially (paper: −42 % / −30 %).
+    assert!(r.reduction("chameleon", "ME w/o scaling", "Alan-ME") > 0.15);
+    assert!(r.reduction("chameleon", "EEMT w/o scaling", "Alan-MT") > 0.15);
+}

@@ -1,0 +1,87 @@
+//! Integration test: the AOT-compiled JAX/Pallas predictor executed
+//! through PJRT must agree with the pure-Rust oracle.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target guarantees it).
+
+use greendt::cpusim::standard::{bloomfield_client, broadwell_client, haswell_server};
+use greendt::predictor::{cpu_grid, demo_state_for_tests, Candidate, Predictor};
+
+fn artifact_available() -> Option<Predictor> {
+    match Predictor::from_artifact(&greendt::runtime::default_predictor_path()) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            eprintln!("SKIP: predictor artifact not built ({e:#}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn assert_parity(cands: &[Candidate], state: &[f32], pjrt: &Predictor) {
+    let oracle = Predictor::oracle();
+    let a = pjrt.predict(cands, state).expect("pjrt predict");
+    let b = oracle.predict(cands, state).expect("oracle predict");
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        let close = |u: f64, v: f64, what: &str| {
+            let denom = u.abs().max(v.abs()).max(1.0);
+            assert!(
+                (u - v).abs() / denom < 2e-4,
+                "candidate {i} {what}: pjrt {u} vs oracle {v} (cand {:?})",
+                cands[i]
+            );
+        };
+        close(x.tput_bps, y.tput_bps, "tput");
+        close(x.power_w, y.power_w, "power");
+        close(x.energy_j, y.energy_j, "energy");
+    }
+}
+
+#[test]
+fn pjrt_matches_oracle_on_demo_state() {
+    let Some(pjrt) = artifact_available() else { return };
+    assert!(pjrt.is_pjrt());
+    let cands = cpu_grid(&broadwell_client(), 6);
+    assert_parity(&cands, &demo_state_for_tests(), &pjrt);
+}
+
+#[test]
+fn pjrt_matches_oracle_across_cpus_and_channels() {
+    let Some(pjrt) = artifact_available() else { return };
+    for spec in [haswell_server(), bloomfield_client()] {
+        for channels in [1u32, 4, 16, 48] {
+            let cands = cpu_grid(&spec, channels);
+            assert_parity(&cands, &demo_state_for_tests(), &pjrt);
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_oracle_on_perturbed_states() {
+    use greendt::predictor::layout as l;
+    let Some(pjrt) = artifact_available() else { return };
+    let cands = cpu_grid(&broadwell_client(), 8);
+    // Sweep a few axes of the state space deterministically.
+    for (slot, values) in [
+        (l::S_CAPACITY_BPS, vec![12.5e6f32, 125e6, 1.25e9]),
+        (l::S_RTT_S, vec![0.004, 0.044, 0.2]),
+        (l::S_AVG_FILE_BYTES, vec![1e5, 2.4e6, 2.2e8]),
+        (l::S_PP_LEVEL, vec![1.0, 8.0, 32.0]),
+        (l::S_PARALLELISM, vec![1.0, 4.0]),
+    ] {
+        for v in values {
+            let mut state = demo_state_for_tests();
+            state[slot] = v;
+            assert_parity(&cands, &state, &pjrt);
+        }
+    }
+}
+
+#[test]
+fn infeasible_padding_agrees() {
+    let Some(pjrt) = artifact_available() else { return };
+    let cands =
+        vec![Candidate { channels: 0.0, cores: 0.0, freq_ghz: 0.0 }];
+    let a = pjrt.predict(&cands, &demo_state_for_tests()).unwrap();
+    assert_eq!(a[0].tput_bps, 0.0);
+    assert!(a[0].energy_j > 1e29);
+}

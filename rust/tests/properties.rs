@@ -1,0 +1,197 @@
+//! Property tests (testutil::property) on coordinator + substrate
+//! invariants: channel routing conservation, weight normalization, FSM
+//! legality, model monotonicity, byte conservation under random traffic.
+
+use greendt::config::testbeds;
+use greendt::coordinator::fsm::{self, Feedback, FsmState};
+use greendt::dataset::{partition_files_capped, standard, Dataset, FileSpec};
+use greendt::netsim::{share_goodput, StreamState};
+use greendt::power::standard_power;
+use greendt::predictor::{reference, Candidate};
+use greendt::testutil::property;
+use greendt::transfer::TransferEngine;
+use greendt::units::{Bytes, Freq, SimDuration};
+
+fn random_dataset(g: &mut greendt::testutil::Gen) -> Dataset {
+    let n = g.usize_in(1, 200);
+    let files = (0..n)
+        .map(|i| FileSpec::new(i as u32, Bytes::new(g.f64_in(1e3, 5e8))))
+        .collect();
+    Dataset::new("prop", files)
+}
+
+#[test]
+fn partitions_always_cover_the_dataset() {
+    property("partition coverage", 200, |g| {
+        let ds = random_dataset(g);
+        let bdp = Bytes::new(g.f64_in(1e5, 1e8));
+        let cap = g.u32_in(1, 16);
+        let parts = partition_files_capped(&ds, bdp, cap);
+        let covered: usize = parts.iter().map(|p| p.files.len()).sum();
+        assert_eq!(covered, ds.num_files());
+        let total: f64 = parts.iter().map(|p| p.total_size().as_f64()).sum();
+        assert!((total - ds.total_size().as_f64()).abs() < 1.0);
+        for p in &parts {
+            assert!(p.pp_level >= 1 && p.parallelism >= 1 && p.parallelism <= 16);
+        }
+    });
+}
+
+#[test]
+fn channel_allocation_conserves_and_respects_weights() {
+    property("channel conservation", 150, |g| {
+        let ds = random_dataset(g);
+        let tb = testbeds::cloudlab();
+        let parts = partition_files_capped(&ds, tb.bdp(), 5);
+        let mut engine = TransferEngine::with_knee(&parts, tb.link.avg_win, tb.link.knee_streams());
+        let n = g.u32_in(1, 64);
+        engine.update_weights();
+        engine.set_num_channels(n);
+        // Conservation: exactly n channels; cc_levels sum to n.
+        assert_eq!(engine.num_channels(), n);
+        let cc: u32 = engine.partitions().iter().map(|p| p.cc_level).sum();
+        assert_eq!(cc, n);
+        // Weights are a probability vector.
+        let w: f64 = engine.partitions().iter().map(|p| p.weight).sum();
+        assert!((w - 1.0).abs() < 1e-9);
+        // With budget >= #partitions, no unfinished partition starves.
+        if n as usize >= engine.partitions().len() {
+            for p in engine.partitions() {
+                assert!(p.done() || p.cc_level >= 1);
+            }
+        }
+    });
+}
+
+#[test]
+fn bytes_are_conserved_under_random_traffic() {
+    property("byte conservation", 60, |g| {
+        let ds = random_dataset(g);
+        let tb = testbeds::cloudlab();
+        let link = tb.make_link_constant_bg();
+        let parts = partition_files_capped(&ds, tb.bdp(), 5);
+        let mut engine = TransferEngine::with_knee(&parts, tb.link.avg_win, tb.link.knee_streams());
+        engine.set_num_channels(g.u32_in(1, 12));
+        let total = engine.total();
+        let mut moved = Bytes::ZERO;
+        for _ in 0..g.usize_in(1, 400) {
+            let cap = g.f64_in(1e5, 1e10);
+            moved += engine.tick(&link, SimDuration::from_millis(100.0), cap).moved;
+            if engine.is_done() {
+                break;
+            }
+        }
+        let accounted = moved + engine.remaining();
+        assert!(
+            (accounted.as_f64() - total.as_f64()).abs() < total.as_f64() * 1e-9 + 16.0,
+            "moved {} + remaining {} vs total {}",
+            moved,
+            engine.remaining(),
+            total
+        );
+    });
+}
+
+#[test]
+fn goodput_allocation_is_bounded_and_fair() {
+    property("goodput bounds", 200, |g| {
+        let tb = testbeds::by_name(*g.choose(&["chameleon", "cloudlab", "didclab"])).unwrap();
+        let link = tb.make_link_constant_bg();
+        let n = g.usize_in(1, 128);
+        let streams: Vec<StreamState> = (0..n)
+            .map(|_| {
+                if g.bool() {
+                    StreamState::warm(tb.link.avg_win)
+                } else {
+                    StreamState::new(tb.link.avg_win)
+                }
+            })
+            .collect();
+        let rates = share_goodput(&link, &streams);
+        let total: f64 = rates.iter().map(|r| r.as_bytes_per_sec()).sum();
+        assert!(total <= link.available().as_bytes_per_sec() * (1.0 + 1e-9));
+        for (s, r) in streams.iter().zip(&rates) {
+            let cap = s.window_rate(tb.link.rtt).as_bytes_per_sec();
+            assert!(r.as_bytes_per_sec() <= cap * (1.0 + 1e-9), "window cap violated");
+            assert!(r.as_bytes_per_sec() >= 0.0);
+        }
+    });
+}
+
+#[test]
+fn fsm_never_reenters_slow_start_and_only_shrinks_from_warning() {
+    property("fsm legality", 300, |g| {
+        let mut state = FsmState::Increase;
+        for _ in 0..g.usize_in(1, 64) {
+            let fb = *g.choose(&[Feedback::Positive, Feedback::Neutral, Feedback::Negative]);
+            let (next, action) = fsm::step(state, fb);
+            assert_ne!(next, FsmState::SlowStart);
+            if action == fsm::Action::Shrink {
+                assert_eq!(state, FsmState::Warning, "shrink only out of Warning");
+                assert_eq!(fb, Feedback::Negative);
+            }
+            if action == fsm::Action::Restore {
+                assert_eq!(state, FsmState::Recovery);
+            }
+            state = next;
+        }
+    });
+}
+
+#[test]
+fn power_model_is_monotone_everywhere() {
+    property("power monotonicity", 200, |g| {
+        let spec = greendt::cpusim::standard::haswell_server();
+        let pm = standard_power(&spec);
+        let cores = g.u32_in(1, 7);
+        let f = Freq::from_ghz(g.f64_in(1.2, 3.2));
+        let util = g.f64_in(0.0, 0.9);
+        let bytes = g.f64_in(0.0, 1e9);
+        let base = pm.package_power(cores, f, util, bytes).as_watts();
+        assert!(pm.package_power(cores + 1, f, util, bytes).as_watts() > base);
+        assert!(pm.package_power(cores, Freq::from_ghz(f.as_ghz() + 0.2), util, bytes).as_watts() > base);
+        assert!(pm.package_power(cores, f, util + 0.1, bytes).as_watts() > base);
+        assert!(pm.package_power(cores, f, util, bytes + 1e9).as_watts() > base);
+    });
+}
+
+#[test]
+fn predictor_oracle_is_sane_across_state_space() {
+    property("predictor sanity", 200, |g| {
+        let mut state = greendt::predictor::demo_state_for_tests();
+        use greendt::predictor::layout as l;
+        state[l::S_CAPACITY_BPS] = g.f64_in(1e6, 2e9) as f32;
+        state[l::S_RTT_S] = g.f64_in(0.001, 0.2) as f32;
+        state[l::S_AVG_FILE_BYTES] = g.f64_in(1e4, 3e8) as f32;
+        state[l::S_PP_LEVEL] = g.f64_in(1.0, 32.0) as f32;
+        state[l::S_REMAINING_BYTES] = g.f64_in(1e6, 1e11) as f32;
+        let cand = Candidate {
+            channels: g.f64_in(1.0, 48.0) as f32,
+            cores: g.f64_in(1.0, 16.0).floor() as f32,
+            freq_ghz: g.f64_in(1.0, 4.0) as f32,
+        };
+        let p = reference::predict_one(&cand, &state);
+        assert!(p.tput_bps >= 0.0 && p.tput_bps.is_finite());
+        assert!(p.power_w > 0.0 && p.power_w < 1000.0, "power {}", p.power_w);
+        assert!(p.energy_j > 0.0);
+        // Throughput cannot exceed the offered capacity.
+        assert!(p.tput_bps <= state[l::S_CAPACITY_BPS] as f64 * (1.0 + 1e-6));
+    });
+}
+
+#[test]
+fn session_outcomes_are_physical() {
+    property("session physicality", 12, |g| {
+        use greendt::coordinator::AlgorithmKind;
+        use greendt::sim::session::{run_session, SessionConfig};
+        let tb = testbeds::by_name(*g.choose(&["cloudlab", "didclab"])).unwrap();
+        let kind = *g.choose(&[AlgorithmKind::MinEnergy, AlgorithmKind::MaxThroughput]);
+        let cap_bps = tb.link.capacity.as_bits_per_sec();
+        let cfg = SessionConfig::new(tb, standard::large_dataset(g.usize_in(0, 1000) as u64), kind);
+        let out = run_session(&cfg);
+        assert!(out.completed);
+        assert!(out.avg_throughput.as_bits_per_sec() <= cap_bps);
+        assert!(out.client_energy.as_joules() > 0.0);
+        assert!(out.duration.as_secs() >= out.moved.as_f64() * 8.0 / cap_bps);
+    });
+}

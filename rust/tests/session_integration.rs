@@ -1,0 +1,156 @@
+//! Cross-module integration: whole sessions on real testbed + dataset
+//! combinations, exercising coordinator + transfer + netsim + cpusim +
+//! power together.
+
+use greendt::config::testbeds;
+use greendt::coordinator::AlgorithmKind;
+use greendt::dataset::standard;
+use greendt::sim::session::{run_session, SessionConfig};
+use greendt::units::Rate;
+
+fn run(tb: &str, ds: &str, kind: AlgorithmKind) -> greendt::sim::session::SessionOutcome {
+    let cfg = SessionConfig::new(
+        testbeds::by_name(tb).unwrap(),
+        standard::by_name(ds, 42).unwrap(),
+        kind,
+    );
+    run_session(&cfg)
+}
+
+#[test]
+fn every_algorithm_completes_on_every_testbed() {
+    // wget/curl excluded here only for wall-time (they are covered by the
+    // fig2 grid test); everything else must finish on every testbed.
+    let kinds = [
+        AlgorithmKind::MinEnergy,
+        AlgorithmKind::MaxThroughput,
+        AlgorithmKind::TargetThroughput(Rate::from_mbps(400.0)),
+        AlgorithmKind::Http2,
+        AlgorithmKind::IsmailMinEnergy,
+        AlgorithmKind::IsmailMaxThroughput,
+        AlgorithmKind::IsmailTarget(Rate::from_mbps(400.0)),
+        AlgorithmKind::AlanMinEnergy,
+        AlgorithmKind::AlanMaxThroughput,
+    ];
+    for tb in ["chameleon", "cloudlab", "didclab"] {
+        for kind in kinds {
+            let out = run(tb, "large", kind);
+            assert!(out.completed, "{} on {tb} did not complete", out.algorithm);
+            assert!(out.moved.as_gb() > 27.0, "{} moved {}", out.algorithm, out.moved);
+            assert!(out.client_energy.as_joules() > 0.0);
+            assert!(out.server_energy.as_joules() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn energy_is_power_integral() {
+    // client energy ≈ duration × average power, where average power must
+    // lie inside the model's physical envelope for that CPU.
+    let out = run("cloudlab", "medium", AlgorithmKind::MaxThroughput);
+    let avg_w = out.client_package_energy.as_joules() / out.duration.as_secs();
+    let pm = greendt::power::standard_power(&testbeds::cloudlab().client_cpu);
+    assert!(avg_w >= pm.floor_power().as_watts() * 0.99, "avg {avg_w} W below floor");
+    assert!(avg_w <= pm.max_power().as_watts() * 1.01, "avg {avg_w} W above max");
+}
+
+#[test]
+fn eemt_is_fastest_me_is_cheapest_on_chameleon() {
+    let me = run("chameleon", "mixed", AlgorithmKind::MinEnergy);
+    let eemt = run("chameleon", "mixed", AlgorithmKind::MaxThroughput);
+    let h2 = run("chameleon", "mixed", AlgorithmKind::Http2);
+    assert!(eemt.avg_throughput.as_gbps() >= me.avg_throughput.as_gbps() * 0.95);
+    assert!(eemt.avg_throughput.as_gbps() > 4.0 * h2.avg_throughput.as_gbps());
+    assert!(me.client_energy.as_joules() <= eemt.client_energy.as_joules() * 1.05);
+    assert!(me.client_energy.as_joules() < 0.2 * h2.client_energy.as_joules());
+}
+
+#[test]
+fn eett_energy_scales_inversely_with_target() {
+    // Slower targets take longer => more client energy (the race-to-idle
+    // regime of this workload), while higher targets finish cheaper.
+    let lo = run("cloudlab", "large", AlgorithmKind::TargetThroughput(Rate::from_mbps(200.0)));
+    let hi = run("cloudlab", "large", AlgorithmKind::TargetThroughput(Rate::from_mbps(800.0)));
+    assert!(lo.completed && hi.completed);
+    assert!(lo.duration.as_secs() > 2.0 * hi.duration.as_secs());
+    assert!(lo.client_energy.as_joules() > hi.client_energy.as_joules());
+}
+
+#[test]
+fn dvfs_lowers_energy_vs_os_governor() {
+    use greendt::config::experiment::TunerParams;
+    let base = SessionConfig::new(
+        testbeds::cloudlab(),
+        standard::mixed_dataset(42),
+        AlgorithmKind::MaxThroughput,
+    );
+    let with_scaling = run_session(&base.clone());
+    let without = run_session(&base.with_params(TunerParams::default().without_scaling()));
+    assert!(with_scaling.completed && without.completed);
+    assert!(
+        with_scaling.client_energy.as_joules() < 0.8 * without.client_energy.as_joules(),
+        "scaling {} vs os {}",
+        with_scaling.client_energy,
+        without.client_energy
+    );
+    // …without giving up meaningful throughput.
+    assert!(
+        with_scaling.avg_throughput.as_bits_per_sec()
+            > 0.93 * without.avg_throughput.as_bits_per_sec()
+    );
+}
+
+#[test]
+fn predictive_governor_session_works_with_oracle_fallback() {
+    use greendt::config::experiment::TunerParams;
+    // Point the artifact path somewhere invalid: the governor must fall
+    // back to the Rust oracle and the session must still complete.
+    std::env::set_var("GREENDT_PREDICTOR", "/nonexistent/predictor.hlo.txt");
+    let cfg = SessionConfig::new(
+        testbeds::cloudlab(),
+        standard::large_dataset(42),
+        AlgorithmKind::MinEnergy,
+    )
+    .with_params(TunerParams::default().predictive());
+    let out = run_session(&cfg);
+    std::env::remove_var("GREENDT_PREDICTOR");
+    assert!(out.completed);
+    assert!(out.final_active_cores <= 3, "predictive ME should downscale");
+}
+
+#[test]
+fn wall_meter_exceeds_rapl_on_didclab_only() {
+    let d = run("didclab", "large", AlgorithmKind::MaxThroughput);
+    assert!(d.client_energy.as_joules() > d.client_package_energy.as_joules());
+    let c = run("cloudlab", "large", AlgorithmKind::MaxThroughput);
+    assert_eq!(c.client_energy.as_joules(), c.client_package_energy.as_joules());
+}
+
+#[test]
+fn server_scaling_extension_cuts_server_energy() {
+    // GreenDT extension: Algorithm 3 applied to the server as well. On a
+    // 1 Gbps path the 8-core Haswell server is mostly idle at max
+    // frequency; scaling it must cut server energy substantially without
+    // hurting throughput.
+    let base = SessionConfig::new(
+        testbeds::cloudlab(),
+        standard::large_dataset(42),
+        AlgorithmKind::MaxThroughput,
+    );
+    let plain = run_session(&base.clone());
+    let scaled = run_session(&base.with_server_scaling());
+    assert!(plain.completed && scaled.completed);
+    assert!(
+        scaled.server_energy.as_joules() < 0.75 * plain.server_energy.as_joules(),
+        "server scaling: {} vs {}",
+        scaled.server_energy,
+        plain.server_energy
+    );
+    assert!(
+        scaled.avg_throughput.as_bits_per_sec()
+            > 0.95 * plain.avg_throughput.as_bits_per_sec(),
+        "throughput preserved: {} vs {}",
+        scaled.avg_throughput,
+        plain.avg_throughput
+    );
+}
