@@ -1,0 +1,98 @@
+//! Fleet hot-path bench: per-tick cost of a multi-tenant world, plus an
+//! allocation audit proving the step path stays allocation-free.
+//!
+//!     cargo bench --bench bench_fleet
+//!
+//! A counting global allocator wraps the system allocator; after a warmup
+//! that sizes every scratch buffer, N steps must perform zero heap
+//! allocations — the invariant the scratch-buffer design exists for.
+
+use greendt::benchkit::bench;
+use greendt::config::testbeds;
+use greendt::cpusim::CpuState;
+use greendt::dataset::{partition_files_capped, standard};
+use greendt::sim::Simulation;
+use greendt::transfer::TransferEngine;
+use greendt::units::SimDuration;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to the system allocator unchanged;
+// the counter is a relaxed atomic with no other side effects.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// A world with `tenants` active large-dataset sessions (large files so no
+/// partition completes mid-audit, which would legitimately reopen
+/// channels).
+fn fleet_sim(tenants: usize, channels_each: u32) -> Simulation {
+    let tb = testbeds::cloudlab();
+    let mut sim = Simulation::empty(
+        &tb,
+        CpuState::performance(tb.client_cpu.clone()),
+        SimDuration::from_millis(100.0),
+        9,
+        Vec::new(),
+    );
+    for i in 0..tenants {
+        let ds = standard::large_dataset(20 + i as u64);
+        let parts = partition_files_capped(&ds, tb.bdp(), 5);
+        let mut engine =
+            TransferEngine::with_knee(&parts, tb.link.avg_win, tb.link.knee_streams());
+        engine.set_num_channels(channels_each);
+        let slot = sim.add_slot(engine);
+        sim.activate_slot(slot);
+    }
+    sim
+}
+
+fn main() {
+    println!("== bench_fleet: multi-tenant step hot path ==\n");
+
+    // Timing across fleet sizes.
+    for tenants in [1usize, 4, 16] {
+        let mut sim = fleet_sim(tenants, 4);
+        bench(&format!("fleet step/{tenants} tenants"), 200, 5000, || sim.step());
+    }
+    println!();
+
+    // Allocation audit: warm up (scratch buffers grow to steady-state
+    // capacity, TCP windows leave slow start), then count.
+    let mut sim = fleet_sim(4, 4);
+    for _ in 0..500 {
+        sim.step();
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let steps = 2000u64;
+    for _ in 0..steps {
+        sim.step();
+    }
+    let allocs = ALLOCS.load(Ordering::Relaxed) - before;
+    println!("allocation audit: {allocs} allocations across {steps} steps (4 tenants)");
+    assert_eq!(
+        allocs, 0,
+        "the fleet step path must stay allocation-free per tick"
+    );
+    println!("allocation audit passed: step is allocation-free\n");
+}

@@ -18,7 +18,7 @@ use crate::coordinator::algorithm::{Algorithm, InitPlan};
 use crate::coordinator::load_control::{Governor, OndemandGovernor};
 use crate::cpusim::CpuState;
 use crate::dataset::{partition_files, Dataset};
-use crate::sim::{Simulation, Telemetry};
+use crate::sim::{Telemetry, TuneCtx};
 use crate::units::SimDuration;
 
 /// Candidate concurrency levels their offline search probes.
@@ -100,9 +100,9 @@ impl Algorithm for Alan {
         )
     }
 
-    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) {
+    fn on_timeout(&mut self, telemetry: &Telemetry, ctx: &mut TuneCtx) {
         // Static after the offline search; only the OS governor acts.
-        self.governor.control(telemetry, &mut sim.client);
+        self.governor.control(telemetry, ctx.client);
     }
 }
 

@@ -23,7 +23,7 @@ use crate::coordinator::algorithm::{Algorithm, InitPlan};
 use crate::coordinator::load_control::{Governor, OndemandGovernor};
 use crate::cpusim::CpuState;
 use crate::dataset::{partition_files, Dataset};
-use crate::sim::{Simulation, Telemetry};
+use crate::sim::{Telemetry, TuneCtx};
 use crate::units::{Rate, SimDuration};
 
 /// Static channel budget used by their max-throughput heuristic (chosen
@@ -76,9 +76,9 @@ impl Algorithm for Ismail {
         )
     }
 
-    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) {
+    fn on_timeout(&mut self, telemetry: &Telemetry, ctx: &mut TuneCtx) {
         // Static: no runtime adaptation; only the OS governor acts.
-        self.governor.control(telemetry, &mut sim.client);
+        self.governor.control(telemetry, ctx.client);
     }
 }
 
@@ -118,12 +118,12 @@ impl Algorithm for IsmailTarget {
         InitPlan::new(partitions, 1, CpuState::performance(testbed.client_cpu.clone()))
     }
 
-    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) {
+    fn on_timeout(&mut self, telemetry: &Telemetry, ctx: &mut TuneCtx) {
         // Additive ±1 step toward the target; no weight redistribution
         // (channels keep their initial partition assignment proportions —
         // we redistribute by the *static initial* weights, i.e. never call
         // update_weights()).
-        self.governor.control(telemetry, &mut sim.client);
+        self.governor.control(telemetry, ctx.client);
         let avg = telemetry.avg_throughput.as_bits_per_sec();
         let t = self.target.as_bits_per_sec();
         if avg < 0.95 * t {
@@ -131,7 +131,7 @@ impl Algorithm for IsmailTarget {
         } else if avg > 1.05 * t && self.num_ch > 1 {
             self.num_ch -= 1;
         }
-        sim.engine.set_num_channels(self.num_ch);
+        ctx.engine.set_num_channels(self.num_ch);
     }
 }
 

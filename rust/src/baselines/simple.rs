@@ -12,7 +12,7 @@ use crate::coordinator::algorithm::{Algorithm, InitPlan};
 use crate::coordinator::load_control::{Governor, OndemandGovernor};
 use crate::cpusim::CpuState;
 use crate::dataset::{Dataset, Partition};
-use crate::sim::{Simulation, Telemetry};
+use crate::sim::{Telemetry, TuneCtx};
 use crate::units::{Bytes, SimDuration};
 
 /// Effectively infinite pipelining: HTTP/2 multiplexes all requests on one
@@ -80,9 +80,9 @@ impl Algorithm for SimpleTool {
         }
     }
 
-    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) {
+    fn on_timeout(&mut self, telemetry: &Telemetry, ctx: &mut TuneCtx) {
         // No runtime tuning — only the OS frequency governor acts.
-        self.governor.control(telemetry, &mut sim.client);
+        self.governor.control(telemetry, ctx.client);
     }
 }
 

@@ -73,6 +73,15 @@ impl ParsedArgs {
             .transpose()
     }
 
+    pub fn get_u32(&self, name: &str) -> Result<Option<u32>, ArgError> {
+        match self.get_u64(name)? {
+            Some(v) => u32::try_from(v)
+                .map(Some)
+                .map_err(|_| ArgError(format!("--{name}: value '{v}' out of range"))),
+            None => Ok(None),
+        }
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.contains(switch)
     }
@@ -94,6 +103,7 @@ mod tests {
         assert_eq!(a.get("testbed"), Some("didclab"));
         assert!(a.has("trace"));
         assert_eq!(a.get_u64("seed").unwrap(), Some(7));
+        assert_eq!(a.get_u32("seed").unwrap(), Some(7));
     }
 
     #[test]

@@ -26,12 +26,21 @@ COMMANDS:
              --algo me|eemt|eett|wget|curl|http2|ismail-me|ismail-mt|
                     ismail-tt|alan-me|alan-mt       (default eemt)
              --target-mbps <N>     target for eett / ismail-tt
-             --governor threshold|predictive|os     (default threshold)
+             --governor threshold|predictive|os|none  (default threshold;
+                    'none' pins the CPU at the algorithm's initial setting)
              --seed <N>            RNG seed (default 42)
              --trace               print the per-timeout timeline
              --server-scaling      extension: Algorithm 3 on the server too
   sweep      Ablations: static-concurrency sweep + tuner sensitivity
              --testbed <T> --dataset <D>  (sweep panel; default cloudlab/large)
+  fleet      Multi-tenant shared host: N sessions under one arbitration policy
+             --testbed <T>         (default cloudlab)
+             --dataset <D>         per-tenant dataset family (default medium)
+             --tenants <N>         number of sessions (default 4)
+             --algo <A>            per-tenant algorithm (default eemt)
+             --policy fairshare|minenergy   host arbitration (default minenergy)
+             --spacing <SECS>      arrival spacing between tenants (default 30)
+             --seed <N>            RNG seed (default 42)
   fig2       Reproduce Figure 2 (all tools × datasets × testbeds)
   fig3       Reproduce Figure 3 (target-throughput comparison)
   fig4       Reproduce Figure 4 (frequency/core-scaling ablation)
@@ -50,6 +59,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
+        "fleet" => cmd_fleet(&args),
         "sweep" => cmd_sweep(&args),
         "fig2" => cmd_fig2(&args),
         "fig3" => cmd_fig3(&args),
@@ -82,7 +92,10 @@ fn parse_params(args: &ParsedArgs) -> Result<TunerParams> {
     p.governor = match args.get_or("governor", "threshold") {
         "threshold" => GovernorKind::Threshold,
         "predictive" => GovernorKind::Predictive,
-        "none" | "os" => GovernorKind::Os,
+        "os" => GovernorKind::Os,
+        // `none` means no governor at all — not even the OS default —
+        // now that the fleet refactor gave that a first-class variant.
+        "none" => GovernorKind::None,
         other => bail!("unknown governor '{other}'"),
     };
     Ok(p)
@@ -146,6 +159,77 @@ fn cmd_run(args: &ParsedArgs) -> Result<i32> {
         crate::metrics::timeseries::save_timeline(&out, path)?;
         println!("\ntimeline written to {path}");
     }
+    Ok(if out.completed { 0 } else { 1 })
+}
+
+fn cmd_fleet(args: &ParsedArgs) -> Result<i32> {
+    use crate::coordinator::FleetPolicyKind;
+    use crate::sim::fleet::{run_fleet, FleetConfig, TenantSpec};
+    use crate::units::SimTime;
+
+    let tb_name = args.get_or("testbed", "cloudlab");
+    let ds_name = args.get_or("dataset", "medium");
+    let seed = seed_of(args)?;
+    let tenants = args
+        .get_u32("tenants")
+        .map_err(|e: ArgError| anyhow::anyhow!(e))?
+        .unwrap_or(4)
+        .max(1);
+    let spacing = args
+        .get_f64("spacing")
+        .map_err(|e: ArgError| anyhow::anyhow!(e))?
+        .unwrap_or(30.0)
+        .max(0.0);
+    let policy_id = args.get_or("policy", "minenergy");
+    let policy = FleetPolicyKind::parse(policy_id)
+        .with_context(|| format!("unknown fleet policy '{policy_id}'"))?;
+    let kind = parse_algo(args)?;
+    let testbed =
+        testbeds::by_name(tb_name).with_context(|| format!("unknown testbed '{tb_name}'"))?;
+
+    let mut cfg = FleetConfig::new(testbed, Some(policy)).with_seed(seed);
+    for i in 0..tenants {
+        let ds = standard::by_name(ds_name, seed + i as u64)
+            .with_context(|| format!("unknown dataset '{ds_name}'"))?;
+        cfg.tenants.push(
+            TenantSpec::new(format!("tenant-{i}"), ds, kind)
+                .arriving_at(SimTime::from_secs(spacing * i as f64)),
+        );
+    }
+    let out = run_fleet(&cfg);
+
+    println!(
+        "fleet: {} tenants ({}) on {} under {}",
+        tenants,
+        kind.id(),
+        tb_name,
+        out.policy
+    );
+    let mut t = crate::metrics::Table::new(
+        "per-tenant outcomes",
+        &["tenant", "arrive", "finish", "moved", "throughput", "energy share", "peak ch"],
+    );
+    for tn in &out.tenants {
+        t.push_row(vec![
+            tn.name.clone(),
+            format!("{:.0} s", tn.arrived_at.as_secs()),
+            match tn.finished_at {
+                Some(at) => format!("{:.0} s", at.as_secs()),
+                None => "-".to_string(),
+            },
+            format!("{}", tn.moved),
+            format!("{}", tn.avg_throughput),
+            format!("{}", tn.attributed_energy),
+            tn.peak_channels.to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!("  completed        : {}", out.completed);
+    println!("  makespan         : {}", out.duration);
+    println!("  host energy      : {}", out.client_energy);
+    println!("  energy / tenant  : {}", out.energy_per_tenant());
+    println!("  server energy    : {}", out.server_energy);
+    println!("  final host CPU   : {} cores @ {}", out.final_active_cores, out.final_freq);
     Ok(if out.completed { 0 } else { 1 })
 }
 
@@ -262,5 +346,17 @@ mod tests {
     #[test]
     fn bad_governor_rejected() {
         assert!(run(&argv("run --governor warp")).is_err());
+    }
+
+    #[test]
+    fn fleet_quick_run() {
+        let code =
+            run(&argv("fleet --tenants 2 --dataset small --spacing 5 --seed 3")).unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn fleet_bad_policy_rejected() {
+        assert!(run(&argv("fleet --policy warp")).is_err());
     }
 }

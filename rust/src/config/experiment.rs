@@ -14,6 +14,10 @@ pub enum GovernorKind {
     /// Candidate-grid energy model compiled from JAX/Pallas, executed via
     /// PJRT (GreenDT extension; see `predictor`).
     Predictive,
+    /// No governor at all — not even the OS default. Used by the fleet
+    /// driver, where a [`crate::coordinator::fleet::FleetPolicy`] owns the
+    /// host CPU knobs and per-session governors must not fight it.
+    None,
 }
 
 /// Knobs shared by the three tuning algorithms (Algorithms 4–6).

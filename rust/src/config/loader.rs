@@ -124,7 +124,8 @@ pub fn load_str(input: &str) -> Result<LoadedConfig> {
         tuner.governor = match g {
             "threshold" => GovernorKind::Threshold,
             "predictive" => GovernorKind::Predictive,
-            "os" | "none" => GovernorKind::Os,
+            "os" => GovernorKind::Os,
+            "none" => GovernorKind::None,
             other => bail!("unknown governor '{other}'"),
         };
     }

@@ -1,12 +1,12 @@
 //! The common tuning-algorithm interface and factory.
 
-use super::load_control::{Governor, OndemandGovernor, ThresholdGovernor};
+use super::load_control::{Governor, NullGovernor, OndemandGovernor, ThresholdGovernor};
 use super::sla::SlaPolicy;
 use crate::config::experiment::{GovernorKind, TunerParams};
 use crate::config::Testbed;
 use crate::cpusim::CpuState;
 use crate::dataset::{Dataset, Partition};
-use crate::sim::{Simulation, Telemetry};
+use crate::sim::{Telemetry, TuneCtx};
 use crate::units::{Rate, SimDuration};
 
 /// Everything a session needs to start: Algorithm 1's output (or a
@@ -39,8 +39,9 @@ pub trait Algorithm: std::fmt::Debug {
     /// static heuristics for baselines).
     fn init(&mut self, testbed: &Testbed, dataset: &Dataset) -> InitPlan;
 
-    /// One tuning step: read telemetry, adjust channels / CPU setting.
-    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation);
+    /// One tuning step: read telemetry, adjust this session's channels
+    /// and (when the session owns the host knobs) the client CPU setting.
+    fn on_timeout(&mut self, telemetry: &Telemetry, ctx: &mut TuneCtx);
 
     /// Current FSM state label (observability: traces, the `--trace` CLI
     /// output, failure-injection assertions). Baselines have no FSM.
@@ -62,6 +63,7 @@ pub fn make_governor(
         GovernorKind::Predictive => {
             Box::new(crate::predictor::PredictiveGovernor::from_env(mode))
         }
+        GovernorKind::None => Box::new(NullGovernor),
     }
 }
 
@@ -91,6 +93,10 @@ pub enum AlgorithmKind {
     AlanMinEnergy,
     /// Alan et al. Maximum Throughput (Figure 4 comparison).
     AlanMaxThroughput,
+    /// No tuning at all: a fixed channel count under the performance
+    /// governor (the static baseline the sweep harness measures, and a
+    /// simple tenant workload for fleet scenarios).
+    NoTune(u32),
 }
 
 impl AlgorithmKind {
@@ -108,6 +114,7 @@ impl AlgorithmKind {
             AlgorithmKind::IsmailTarget(_) => "ismail-tt",
             AlgorithmKind::AlanMinEnergy => "alan-me",
             AlgorithmKind::AlanMaxThroughput => "alan-mt",
+            AlgorithmKind::NoTune(_) => "notune",
         }
     }
 
@@ -158,6 +165,9 @@ impl AlgorithmKind {
             }
             AlgorithmKind::AlanMaxThroughput => {
                 Box::new(crate::baselines::alan::Alan::max_throughput())
+            }
+            AlgorithmKind::NoTune(channels) => {
+                Box::new(super::no_tune::NoTune::new(channels))
             }
         }
     }
@@ -224,10 +234,19 @@ mod tests {
             AlgorithmKind::IsmailTarget(Rate::from_gbps(1.0)),
             AlgorithmKind::AlanMinEnergy,
             AlgorithmKind::AlanMaxThroughput,
+            AlgorithmKind::NoTune(4),
         ] {
             let a = kind.build(p);
             assert!(!a.name().is_empty());
             assert!(a.timeout().as_secs() > 0.0);
         }
+    }
+
+    #[test]
+    fn notune_is_not_cli_parseable() {
+        // Deliberate: the channel count cannot be carried through the
+        // id/parse round trip, so `notune` stays a programmatic kind.
+        assert_eq!(AlgorithmKind::NoTune(8).id(), "notune");
+        assert!(AlgorithmKind::parse("notune", None).is_none());
     }
 }

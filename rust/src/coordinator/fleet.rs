@@ -1,0 +1,225 @@
+//! Fleet policies: cross-session arbitration of the *host-level* knobs.
+//!
+//! On a multi-tenant host (see [`crate::sim::Simulation`] and the fleet
+//! driver in [`crate::sim::fleet`]), individual sessions keep tuning their
+//! own channel counts, but the shared knobs — active cores, CPU frequency
+//! and the per-session channel budget — belong to one [`FleetPolicy`]
+//! arbitrating on aggregate telemetry. Per-session governors are disabled
+//! in fleet mode so tenants cannot fight over the package
+//! ([`crate::config::experiment::GovernorKind::None`]).
+//!
+//! Two policies ship:
+//!
+//! * [`FairShare`] — the static reference: performance governor, equal
+//!   channel budget per active session;
+//! * [`MinEnergyFleet`] — Algorithm 3 generalized from one session's load
+//!   to the host's *aggregate* load, so capacity follows the sum of all
+//!   tenants' demand instead of any single transfer.
+
+use super::load_control::LoadThresholds;
+use crate::config::experiment::TunerParams;
+use crate::cpusim::{CpuSpec, CpuState};
+use crate::sim::FleetView;
+
+/// Host-level actuation a policy hands back to the fleet driver.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetDirective {
+    /// Cap each active session's channel count (None = leave tenants
+    /// alone). Enforced after every tenant tuning step.
+    pub per_session_channel_cap: Option<u32>,
+}
+
+/// A cross-session arbitration policy, invoked once per fleet interval.
+pub trait FleetPolicy: std::fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    /// The host CPU setting the fleet starts at.
+    fn initial_cpu(&self, spec: &CpuSpec) -> CpuState;
+
+    /// Inspect aggregate host telemetry, actuate the shared client CPU
+    /// setting, and return per-session constraints.
+    fn arbitrate(&mut self, view: &FleetView, client: &mut CpuState) -> FleetDirective;
+}
+
+/// Equal split of a total channel budget over the active sessions.
+fn fair_cap(max_total_channels: u32, active_sessions: u32) -> u32 {
+    (max_total_channels / active_sessions.max(1)).max(1)
+}
+
+/// Static reference policy: the host runs the performance governor and
+/// every tenant gets an equal slice of the channel budget.
+#[derive(Debug, Clone)]
+pub struct FairShare {
+    pub max_total_channels: u32,
+}
+
+impl FleetPolicy for FairShare {
+    fn name(&self) -> &'static str {
+        "fair-share"
+    }
+
+    fn initial_cpu(&self, spec: &CpuSpec) -> CpuState {
+        CpuState::performance(spec.clone())
+    }
+
+    fn arbitrate(&mut self, view: &FleetView, _client: &mut CpuState) -> FleetDirective {
+        FleetDirective {
+            per_session_channel_cap: Some(fair_cap(
+                self.max_total_channels,
+                view.active_sessions,
+            )),
+        }
+    }
+}
+
+/// Algorithm 3 lifted to the host: threshold-based core/frequency scaling
+/// driven by the *aggregate* CPU load of all tenants, plus the same fair
+/// channel split. Starts from the minimum-energy operating point and lets
+/// demand pull capacity up.
+#[derive(Debug, Clone)]
+pub struct MinEnergyFleet {
+    pub thresholds: LoadThresholds,
+    pub max_total_channels: u32,
+}
+
+impl FleetPolicy for MinEnergyFleet {
+    fn name(&self) -> &'static str {
+        "min-energy-fleet"
+    }
+
+    fn initial_cpu(&self, spec: &CpuSpec) -> CpuState {
+        CpuState::min_energy_start(spec.clone())
+    }
+
+    fn arbitrate(&mut self, view: &FleetView, client: &mut CpuState) -> FleetDirective {
+        // Lines 2–13 of Algorithm 3, with `cpuLoad` replaced by the mean
+        // host load over the interval: cores first on the way up (an extra
+        // core at low frequency is cheaper than a voltage bump on all
+        // active cores), frequency first on the way down.
+        if view.avg_load > self.thresholds.max_load {
+            if !client.increase_cores() {
+                client.increase_freq();
+            }
+        } else if view.avg_load < self.thresholds.min_load {
+            if !client.decrease_freq() {
+                client.decrease_cores();
+            }
+        }
+        FleetDirective {
+            per_session_channel_cap: Some(fair_cap(
+                self.max_total_channels,
+                view.active_sessions,
+            )),
+        }
+    }
+}
+
+/// Every fleet policy the driver and the CLI can construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetPolicyKind {
+    FairShare,
+    MinEnergyFleet,
+}
+
+impl FleetPolicyKind {
+    /// Stable identifier used by the CLI.
+    pub fn id(&self) -> &'static str {
+        match self {
+            FleetPolicyKind::FairShare => "fairshare",
+            FleetPolicyKind::MinEnergyFleet => "minenergy",
+        }
+    }
+
+    pub fn parse(id: &str) -> Option<FleetPolicyKind> {
+        Some(match id {
+            "fairshare" | "fair-share" => FleetPolicyKind::FairShare,
+            "minenergy" | "min-energy" | "min-energy-fleet" => {
+                FleetPolicyKind::MinEnergyFleet
+            }
+            _ => return None,
+        })
+    }
+
+    /// Instantiate the policy; the tenant tuner params supply the shared
+    /// channel budget and thresholds.
+    pub fn build(&self, params: &TunerParams) -> Box<dyn FleetPolicy> {
+        match self {
+            FleetPolicyKind::FairShare => {
+                Box::new(FairShare { max_total_channels: params.max_ch })
+            }
+            FleetPolicyKind::MinEnergyFleet => Box::new(MinEnergyFleet {
+                thresholds: params.thresholds,
+                max_total_channels: params.max_ch,
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpusim::standard::broadwell_client;
+    use crate::units::{Power, Rate, SimTime};
+
+    fn view(load: f64, sessions: u32) -> FleetView {
+        FleetView {
+            now: SimTime::from_secs(10.0),
+            active_sessions: sessions,
+            avg_load: load,
+            avg_server_load: 0.3,
+            avg_throughput: Rate::from_mbps(800.0),
+            avg_power: Power::from_watts(40.0),
+        }
+    }
+
+    #[test]
+    fn ids_round_trip() {
+        for kind in [FleetPolicyKind::FairShare, FleetPolicyKind::MinEnergyFleet] {
+            assert_eq!(FleetPolicyKind::parse(kind.id()), Some(kind));
+        }
+        assert!(FleetPolicyKind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn fair_share_pins_performance_and_splits_evenly() {
+        let mut p = FairShare { max_total_channels: 48 };
+        let cpu0 = p.initial_cpu(&broadwell_client());
+        assert!(cpu0.at_max_cores() && cpu0.at_max_freq());
+        let mut cpu = cpu0.clone();
+        let d = p.arbitrate(&view(0.9, 4), &mut cpu);
+        assert_eq!(d.per_session_channel_cap, Some(12));
+        assert!(cpu.at_max_cores() && cpu.at_max_freq(), "never touches the CPU");
+    }
+
+    #[test]
+    fn min_energy_fleet_tracks_aggregate_load() {
+        let params = TunerParams::default();
+        let mut p = MinEnergyFleet {
+            thresholds: params.thresholds,
+            max_total_channels: params.max_ch,
+        };
+        let mut cpu = p.initial_cpu(&broadwell_client());
+        assert_eq!(cpu.active_cores(), 1);
+        assert!(cpu.at_min_freq());
+        // High aggregate load grows cores first.
+        p.arbitrate(&view(0.95, 4), &mut cpu);
+        assert_eq!(cpu.active_cores(), 2);
+        assert!(cpu.at_min_freq());
+        // Sustained pressure walks all the way up.
+        for _ in 0..40 {
+            p.arbitrate(&view(0.95, 4), &mut cpu);
+        }
+        assert!(cpu.at_max_cores() && cpu.at_max_freq());
+        // Low aggregate load sheds frequency first.
+        p.arbitrate(&view(0.1, 4), &mut cpu);
+        assert!(cpu.at_max_cores() && !cpu.at_max_freq());
+    }
+
+    #[test]
+    fn cap_floors_at_one_channel_per_session() {
+        let mut p = FairShare { max_total_channels: 4 };
+        let mut cpu = p.initial_cpu(&broadwell_client());
+        let d = p.arbitrate(&view(0.5, 9), &mut cpu);
+        assert_eq!(d.per_session_channel_cap, Some(1));
+    }
+}

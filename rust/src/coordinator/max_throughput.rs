@@ -14,7 +14,8 @@ use super::slow_start::SlowStart;
 use crate::config::experiment::TunerParams;
 use crate::config::Testbed;
 use crate::dataset::Dataset;
-use crate::sim::{Simulation, Telemetry};
+use crate::sim::{Telemetry, TuneCtx};
+use crate::transfer::TransferEngine;
 use crate::units::SimDuration;
 
 #[derive(Debug)]
@@ -56,9 +57,9 @@ impl MaxThroughput {
         self.ref_tput
     }
 
-    fn apply_channels(&mut self, sim: &mut Simulation) {
-        sim.engine.update_weights();
-        sim.engine.set_num_channels(self.num_ch);
+    fn apply_channels(&mut self, engine: &mut TransferEngine) {
+        engine.update_weights();
+        engine.set_num_channels(self.num_ch);
     }
 }
 
@@ -94,13 +95,13 @@ impl Algorithm for MaxThroughput {
         self.state.label()
     }
 
-    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) {
+    fn on_timeout(&mut self, telemetry: &Telemetry, ctx: &mut TuneCtx) {
         // Algorithm 3 at every timeout.
-        self.governor.control(telemetry, &mut sim.client);
+        self.governor.control(telemetry, ctx.client);
 
         if let Some(ss) = &mut self.slow_start {
-            let done = ss.on_timeout(telemetry, sim);
-            self.num_ch = sim.engine.num_channels().max(1);
+            let done = ss.on_timeout(telemetry, ctx.engine);
+            self.num_ch = ctx.engine.num_channels().max(1);
             if done {
                 self.slow_start = None;
                 self.state = FsmState::Increase;
@@ -134,7 +135,7 @@ impl Algorithm for MaxThroughput {
             _ => {}
         }
         self.state = next;
-        self.apply_channels(sim);
+        self.apply_channels(ctx.engine);
     }
 }
 

@@ -17,7 +17,8 @@ use super::slow_start::SlowStart;
 use crate::config::experiment::TunerParams;
 use crate::config::Testbed;
 use crate::dataset::Dataset;
-use crate::sim::{Simulation, Telemetry};
+use crate::sim::{Telemetry, TuneCtx};
+use crate::transfer::TransferEngine;
 use crate::units::SimDuration;
 
 #[derive(Debug)]
@@ -48,12 +49,12 @@ impl MinEnergy {
         }
     }
 
-    fn apply_channels(&mut self, sim: &mut Simulation) {
+    fn apply_channels(&mut self, engine: &mut TransferEngine) {
         // Lines 28–32: updateWeights; ccLevel_i = weight_i * numCh;
         // updateChannels — every timeout, so finishing partitions donate
         // their channels to slower ones.
-        sim.engine.update_weights();
-        sim.engine.set_num_channels(self.num_ch);
+        engine.update_weights();
+        engine.set_num_channels(self.num_ch);
     }
 }
 
@@ -89,14 +90,14 @@ impl Algorithm for MinEnergy {
         self.state.label()
     }
 
-    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) {
+    fn on_timeout(&mut self, telemetry: &Telemetry, ctx: &mut TuneCtx) {
         // Algorithm 3 runs at every timeout regardless of FSM state.
-        self.governor.control(telemetry, &mut sim.client);
+        self.governor.control(telemetry, ctx.client);
 
         // Slow Start phase (line 1).
         if let Some(ss) = &mut self.slow_start {
-            let done = ss.on_timeout(telemetry, sim);
-            self.num_ch = sim.engine.num_channels().max(1);
+            let done = ss.on_timeout(telemetry, ctx.engine);
+            self.num_ch = ctx.engine.num_channels().max(1);
             if done {
                 self.slow_start = None;
                 self.state = FsmState::Increase;
@@ -130,7 +131,7 @@ impl Algorithm for MinEnergy {
         // latest estimate so the comparison stays local in time.
         self.e_past = Some(e_total);
 
-        self.apply_channels(sim);
+        self.apply_channels(ctx.engine);
     }
 }
 
@@ -252,17 +253,17 @@ mod tests {
         let parts = plan.partitions.clone();
         let mut engine = crate::transfer::TransferEngine::new(&parts, tb.link.avg_win);
         engine.set_num_channels(plan.num_channels);
-        let mut sim = Simulation::new(
+        let mut sim = crate::sim::Simulation::new(
             &tb,
             engine,
             plan.client_cpu,
             SimDuration::from_millis(100.0),
             1,
         );
-        let cores0 = sim.client.active_cores();
+        let cores0 = sim.host.client.active_cores();
         me.slow_start = None; // jump straight to Increase for this test
         me.state = FsmState::Increase;
-        me.on_timeout(&tel(100.0, 30.0, 900.0, 0.97), &mut sim);
-        assert!(sim.client.active_cores() > cores0, "high load must add capacity");
+        me.on_timeout(&tel(100.0, 30.0, 900.0, 0.97), &mut sim.tune_ctx(0));
+        assert!(sim.host.client.active_cores() > cores0, "high load must add capacity");
     }
 }

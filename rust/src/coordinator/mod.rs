@@ -10,19 +10,26 @@
 //!   extension.
 //! * [`min_energy`] / [`max_throughput`] / [`target_throughput`] —
 //!   Algorithms 4, 5, 6.
+//! * [`no_tune`] — the static fixed-channel baseline (sweeps, fleet
+//!   tenants).
 //! * [`algorithm`] — the common [`algorithm::Algorithm`] trait and the
 //!   factory used by sessions, experiments and the CLI.
+//! * [`fleet`] — cross-session arbitration of the shared host's
+//!   cores/frequency/channel budget (multi-tenant extension).
 
 pub mod algorithm;
+pub mod fleet;
 pub mod fsm;
 pub mod heuristic;
 pub mod load_control;
 pub mod max_throughput;
 pub mod min_energy;
+pub mod no_tune;
 pub mod sla;
 pub mod slow_start;
 pub mod target_throughput;
 
 pub use algorithm::{Algorithm, AlgorithmKind, InitPlan};
+pub use fleet::{FleetDirective, FleetPolicy, FleetPolicyKind};
 pub use fsm::{Feedback, FsmState};
 pub use sla::SlaPolicy;

@@ -1,0 +1,101 @@
+//! A deliberately static "algorithm": fixed channel count, parallelism
+//! pinned to 1, performance CPU governor, no feedback of any kind.
+//!
+//! This is the baseline the concurrency sweep measures (the landscape the
+//! paper's FSM algorithms navigate online), expressed through the same
+//! session driver as every other algorithm so the codebase has exactly
+//! one stepping loop. It also serves as a simple tenant workload for
+//! fleet scenarios.
+
+use super::algorithm::{Algorithm, InitPlan};
+use crate::config::Testbed;
+use crate::cpusim::CpuState;
+use crate::dataset::{partition_files_capped, Dataset};
+use crate::sim::{Telemetry, TuneCtx};
+use crate::units::SimDuration;
+
+/// Fixed-channel, no-feedback transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct NoTune {
+    channels: u32,
+}
+
+impl NoTune {
+    pub fn new(channels: u32) -> Self {
+        NoTune { channels: channels.max(1) }
+    }
+
+    pub fn channels(&self) -> u32 {
+        self.channels
+    }
+}
+
+impl Algorithm for NoTune {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn timeout(&self) -> SimDuration {
+        // No tuning happens; the timeout only paces telemetry draining and
+        // the channel re-pin below.
+        SimDuration::from_secs(1.0)
+    }
+
+    fn init(&mut self, testbed: &Testbed, dataset: &Dataset) -> InitPlan {
+        // Parallelism pinned to 1 so the channel count is the only
+        // concurrency knob (what the sweep isolates).
+        let partitions = partition_files_capped(dataset, testbed.bdp(), 1);
+        InitPlan::new(
+            partitions,
+            self.channels,
+            CpuState::performance(testbed.client_cpu.clone()),
+        )
+    }
+
+    fn on_timeout(&mut self, _telemetry: &Telemetry, ctx: &mut TuneCtx) {
+        // Keep the static channel count pinned as partitions finish; the
+        // CPU is never touched (performance governor).
+        if ctx.engine.num_channels() < self.channels && !ctx.engine.is_done() {
+            ctx.engine.update_weights();
+            ctx.engine.set_num_channels(self.channels);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::coordinator::AlgorithmKind;
+    use crate::dataset::standard;
+    use crate::sim::session::{run_session, SessionConfig};
+
+    #[test]
+    fn init_pins_everything_static() {
+        let mut a = NoTune::new(6);
+        let plan = a.init(&testbeds::cloudlab(), &standard::medium_dataset(1));
+        assert_eq!(plan.num_channels, 6);
+        assert!(plan.client_cpu.at_max_cores() && plan.client_cpu.at_max_freq());
+        for p in &plan.partitions {
+            assert_eq!(p.parallelism, 1);
+        }
+    }
+
+    #[test]
+    fn session_holds_the_channel_count() {
+        let cfg = SessionConfig::new(
+            testbeds::cloudlab(),
+            standard::medium_dataset(3),
+            AlgorithmKind::NoTune(4),
+        );
+        let out = run_session(&cfg);
+        assert!(out.completed);
+        assert_eq!(out.peak_channels, 4, "static count must never grow");
+        assert!(out.final_active_cores == testbeds::cloudlab().client_cpu.num_cores);
+    }
+
+    #[test]
+    fn floors_at_one_channel() {
+        assert_eq!(NoTune::new(0).channels(), 1);
+    }
+}

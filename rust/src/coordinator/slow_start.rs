@@ -6,7 +6,8 @@
 //! rescales the channel count by `bandwidth / lastThroughput`, then
 //! redistributes channels over datasets by weight.
 
-use crate::sim::{Simulation, Telemetry};
+use crate::sim::Telemetry;
+use crate::transfer::TransferEngine;
 use crate::units::Rate;
 
 /// Slow-start controller state.
@@ -33,7 +34,7 @@ impl SlowStart {
 
     /// One Slow Start timeout (Alg. 2 body). Returns `true` if the phase
     /// is finished after this call.
-    pub fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) -> bool {
+    pub fn on_timeout(&mut self, telemetry: &Telemetry, engine: &mut TransferEngine) -> bool {
         if self.rounds_left == 0 {
             return true;
         }
@@ -46,12 +47,12 @@ impl SlowStart {
             // Keep the correction sane: the first interval still contains
             // TCP slow-start ramp, which understates steady throughput.
             let factor = factor.clamp(0.25, 8.0);
-            let current = sim.engine.num_channels().max(1);
+            let current = engine.num_channels().max(1);
             let target =
                 ((current as f64 * factor).round() as u32).clamp(1, self.max_channels);
             // updateWeights + redistribute (lines 4–8).
-            sim.engine.update_weights();
-            sim.engine.set_num_channels(target);
+            engine.update_weights();
+            engine.set_num_channels(target);
         }
         // Early exit: measured throughput already close to the bandwidth.
         if measured.as_bits_per_sec() >= 0.85 * self.bandwidth.as_bits_per_sec() {
@@ -95,11 +96,11 @@ mod tests {
         }
         let tel = sim.drain_telemetry();
         let mut ss = SlowStart::new(Rate::from_gbps(1.0), 32, 2);
-        ss.on_timeout(&tel, &mut sim);
+        ss.on_timeout(&tel, sim.engine_mut());
         assert!(
-            sim.engine.num_channels() >= 3,
+            sim.engine().num_channels() >= 3,
             "should scale up from 1, got {}",
-            sim.engine.num_channels()
+            sim.engine().num_channels()
         );
     }
 
@@ -111,7 +112,7 @@ mod tests {
         }
         let tel = sim.drain_telemetry();
         let mut ss = SlowStart::new(Rate::from_gbps(1.0), 32, 3);
-        let done = ss.on_timeout(&tel, &mut sim);
+        let done = ss.on_timeout(&tel, sim.engine_mut());
         assert!(done, "already ≥85% of bandwidth → phase over");
     }
 
@@ -125,7 +126,7 @@ mod tests {
                 sim.step();
             }
             let tel = sim.drain_telemetry();
-            if ss.on_timeout(&tel, &mut sim) {
+            if ss.on_timeout(&tel, sim.engine_mut()) {
                 finished = true;
                 break;
             }
@@ -137,9 +138,9 @@ mod tests {
     fn zero_throughput_does_not_panic_or_change() {
         let mut sim = sim_with_channels(4);
         let tel = sim.drain_telemetry(); // empty interval, zero throughput
-        let before = sim.engine.num_channels();
+        let before = sim.engine().num_channels();
         let mut ss = SlowStart::new(Rate::from_gbps(1.0), 32, 1);
-        ss.on_timeout(&tel, &mut sim);
-        assert_eq!(sim.engine.num_channels(), before);
+        ss.on_timeout(&tel, sim.engine_mut());
+        assert_eq!(sim.engine().num_channels(), before);
     }
 }

@@ -14,7 +14,8 @@ use super::slow_start::SlowStart;
 use crate::config::experiment::TunerParams;
 use crate::config::Testbed;
 use crate::dataset::Dataset;
-use crate::sim::{Simulation, Telemetry};
+use crate::sim::{Telemetry, TuneCtx};
+use crate::transfer::TransferEngine;
 use crate::units::{Rate, SimDuration};
 
 /// EETT's reduced state machine.
@@ -71,9 +72,9 @@ impl TargetThroughput {
         avg_bps < (1.0 - self.params.alpha) * self.target.as_bits_per_sec()
     }
 
-    fn apply_channels(&mut self, sim: &mut Simulation) {
-        sim.engine.update_weights();
-        sim.engine.set_num_channels(self.num_ch);
+    fn apply_channels(&mut self, engine: &mut TransferEngine) {
+        engine.update_weights();
+        engine.set_num_channels(self.num_ch);
     }
 }
 
@@ -117,12 +118,12 @@ impl Algorithm for TargetThroughput {
         }
     }
 
-    fn on_timeout(&mut self, telemetry: &Telemetry, sim: &mut Simulation) {
-        self.governor.control(telemetry, &mut sim.client);
+    fn on_timeout(&mut self, telemetry: &Telemetry, ctx: &mut TuneCtx) {
+        self.governor.control(telemetry, ctx.client);
 
         if let Some(ss) = &mut self.slow_start {
-            let done = ss.on_timeout(telemetry, sim);
-            self.num_ch = sim.engine.num_channels().max(1);
+            let done = ss.on_timeout(telemetry, ctx.engine);
+            self.num_ch = ctx.engine.num_channels().max(1);
             if done {
                 self.slow_start = None;
                 self.state = TargetState::Increase;
@@ -151,7 +152,7 @@ impl Algorithm for TargetThroughput {
                 self.state = TargetState::Increase;
             }
         }
-        self.apply_channels(sim);
+        self.apply_channels(ctx.engine);
     }
 }
 

@@ -15,11 +15,9 @@ use super::common::{run_cell, Cell};
 use crate::config::experiment::TunerParams;
 use crate::config::testbeds;
 use crate::coordinator::AlgorithmKind;
-use crate::cpusim::CpuState;
-use crate::dataset::{partition_files_capped, standard};
+use crate::dataset::standard;
 use crate::metrics::Table;
-use crate::sim::Simulation;
-use crate::transfer::TransferEngine;
+use crate::sim::session::{run_session, SessionConfig};
 use crate::units::SimDuration;
 
 /// One point of the concurrency sweep.
@@ -31,44 +29,30 @@ pub struct SweepPoint {
     pub duration_s: f64,
 }
 
-/// Fixed-channel transfers (no tuning at all — OS governor, static cc,
-/// parallelism pinned to 1 so the channel count is the only concurrency
-/// knob) across a channel grid. This is the landscape the paper's
-/// algorithms navigate online.
+/// Fixed-channel transfers (no tuning at all — performance governor,
+/// static cc, parallelism pinned to 1 so the channel count is the only
+/// concurrency knob) across a channel grid. This is the landscape the
+/// paper's algorithms navigate online.
+///
+/// Each point runs through the regular session driver under the
+/// [`crate::coordinator::no_tune::NoTune`] policy, so the codebase has a
+/// single stepping loop.
 pub fn concurrency_sweep(testbed_name: &str, dataset_name: &str, seed: u64) -> Vec<SweepPoint> {
     let tb = testbeds::by_name(testbed_name).expect("testbed");
     let channel_grid = [1u32, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48];
     let mut points = Vec::new();
     for &channels in &channel_grid {
         let ds = standard::by_name(dataset_name, seed).expect("dataset");
-        let parts = partition_files_capped(&ds, tb.bdp(), 1);
-        let mut engine =
-            TransferEngine::with_knee(&parts, tb.link.avg_win, tb.link.knee_streams());
-        engine.update_weights();
-        engine.set_num_channels(channels);
-        let mut sim = Simulation::new(
-            &tb,
-            engine,
-            CpuState::performance(tb.client_cpu.clone()),
-            SimDuration::from_millis(100.0),
-            seed,
-        );
-        let cap_s = 36_000.0;
-        while !sim.is_done() && sim.now.as_secs() < cap_s {
-            sim.step();
-            // Keep the static channel count pinned as partitions finish.
-            if sim.engine.num_channels() < channels && !sim.is_done() {
-                sim.engine.update_weights();
-                sim.engine.set_num_channels(channels);
-            }
-        }
-        let moved = sim.engine.total().saturating_sub(sim.engine.remaining());
-        let dur = sim.now.as_secs().max(1e-9);
+        let mut cfg =
+            SessionConfig::new(tb.clone(), ds, AlgorithmKind::NoTune(channels)).with_seed(seed);
+        // Single-channel points on slow paths outlast the default cap.
+        cfg.max_sim_time = SimDuration::from_secs(36_000.0);
+        let out = run_session(&cfg);
         points.push(SweepPoint {
             channels,
-            throughput_gbps: moved.as_f64() * 8.0 / dur / 1e9,
-            client_energy_kj: sim.client_energy().as_joules() / 1e3,
-            duration_s: dur,
+            throughput_gbps: out.avg_throughput.as_gbps(),
+            client_energy_kj: out.client_energy.as_joules() / 1e3,
+            duration_s: out.duration.as_secs(),
         });
     }
     points

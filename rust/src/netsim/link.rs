@@ -112,40 +112,40 @@ pub fn share_goodput_into(link: &Link, streams: &[StreamState], out: &mut Vec<f6
     // Max-min fair allocation among window-capped streams:
     // iterate: give every unfrozen stream an equal share; freeze streams
     // whose window cap is below their share; redistribute the surplus.
-    // `out` doubles as the allocation buffer; caps are computed on the fly
-    // in the freeze scan (window_rate is two flops).
-    out.resize(n, 0.0);
-    let caps: Vec<f64> = streams.iter().map(|s| s.window_rate(rtt).as_bytes_per_sec()).collect();
+    // `out` doubles as the allocation buffer; a negative entry marks a
+    // still-unfrozen stream, so no side vectors are needed and the hot
+    // path stays allocation-free (caps are recomputed in the freeze scan —
+    // window_rate is two flops, and rounds are typically 1-2).
+    out.resize(n, -1.0);
     let alloc = out;
-    let mut frozen = vec![false; n];
     let mut remaining = budget;
     let mut active = n;
-    // At most n rounds; typically 1-2. `remaining`/`active` are maintained
-    // incrementally so each round is a single O(n) scan (the naive
-    // re-summation made the allocator O(n²) at high stream counts).
+    // At most n rounds. `remaining`/`active` are maintained incrementally
+    // so each round is a single O(n) scan (the naive re-summation made the
+    // allocator O(n²) at high stream counts).
     for _ in 0..n {
         if active == 0 || remaining <= 1e-9 {
             break;
         }
         let share = remaining / active as f64;
         let mut newly_frozen = 0;
-        for i in 0..n {
-            if frozen[i] {
-                continue;
+        for (s, a) in streams.iter().zip(alloc.iter_mut()) {
+            if *a >= 0.0 {
+                continue; // frozen
             }
-            if caps[i] <= share {
-                alloc[i] = caps[i];
-                frozen[i] = true;
+            let cap = s.window_rate(rtt).as_bytes_per_sec();
+            if cap <= share {
+                *a = cap;
                 newly_frozen += 1;
-                remaining -= caps[i];
+                remaining -= cap;
                 active -= 1;
             }
         }
         if newly_frozen == 0 {
             // Everyone can absorb the equal share.
-            for i in 0..n {
-                if !frozen[i] {
-                    alloc[i] = share;
+            for a in alloc.iter_mut() {
+                if *a < 0.0 {
+                    *a = share;
                 }
             }
             break;
@@ -154,7 +154,12 @@ pub fn share_goodput_into(link: &Link, streams: &[StreamState], out: &mut Vec<f6
             remaining = 0.0;
         }
     }
-
+    // Streams never reached (budget exhausted) get nothing.
+    for a in alloc.iter_mut() {
+        if *a < 0.0 {
+            *a = 0.0;
+        }
+    }
 }
 
 #[cfg(test)]

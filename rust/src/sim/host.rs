@@ -1,0 +1,422 @@
+//! The shared client end system: CPU settings, power models and meters.
+//!
+//! A [`Host`] is the machine every transfer session on a node contends
+//! for. It owns both end-system CPU settings (the tunable client and the
+//! performance-pinned server), the power models that map operating points
+//! to watts, and the energy instruments (RAPL package meters plus the
+//! wall-socket node meter). A single-session world holds one `Host` and
+//! one slot; a fleet world holds one `Host` and N slots that split its
+//! capacity — see [`super::Simulation`].
+
+use crate::config::Testbed;
+use crate::coordinator::load_control::LoadThresholds;
+use crate::cpusim::{CpuDemand, CpuState};
+use crate::power::{standard_power, NodeMeter, PowerModel, RaplMeter};
+use crate::units::{Bytes, Energy, Power, Rate, SimDuration, SimTime};
+
+/// Fraction of CPU capacity the transfer application can actually use
+/// (kernel, interrupts and the tuner itself take the rest). Re-exported
+/// as `crate::sim::MAX_APP_UTILIZATION`.
+pub const MAX_APP_UTILIZATION: f64 = 0.92;
+
+/// Everything one tick of host accounting produced.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HostTick {
+    /// Client CPU load implied by the aggregate demand (0..∞).
+    pub client_load: f64,
+    pub server_load: f64,
+    pub client_power: Power,
+    pub server_power: Power,
+    /// Energy this tick on the testbed's client instrument (wall meter on
+    /// DIDCLab, RAPL elsewhere), in joules.
+    pub instrument_energy_j: f64,
+    /// Client package (RAPL) energy this tick, in joules.
+    pub package_energy_j: f64,
+}
+
+/// Aggregate host-level observations over one fleet arbitration interval —
+/// what a [`crate::coordinator::fleet::FleetPolicy`] reads.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetView {
+    pub now: SimTime,
+    /// Sessions currently admitted and unfinished.
+    pub active_sessions: u32,
+    /// Mean client CPU load over the interval.
+    pub avg_load: f64,
+    /// Mean server CPU load over the interval.
+    pub avg_server_load: f64,
+    /// Aggregate application throughput over the interval.
+    pub avg_throughput: Rate,
+    /// Mean client power (instrument) over the interval.
+    pub avg_power: Power,
+}
+
+/// The shared client machine (plus its peer server) that all sessions of
+/// one simulated world run on.
+#[derive(Debug, Clone)]
+pub struct Host {
+    /// Client CPU setting — the knob tuning algorithms / fleet policies
+    /// actuate.
+    pub client: CpuState,
+    /// Server CPU setting — pinned to the performance governor (the paper:
+    /// "there is no frequency scaling on the server") unless
+    /// [`Self::server_autoscale`] is enabled.
+    pub server: CpuState,
+    client_power: PowerModel,
+    server_power: PowerModel,
+    /// RAPL package meter on the client.
+    pub client_rapl: RaplMeter,
+    /// Wall meter on the client (package + platform base).
+    pub client_node: NodeMeter,
+    /// RAPL package meter on the server.
+    pub server_rapl: RaplMeter,
+    /// Whether this testbed reports client energy from the wall meter.
+    wall_meter: bool,
+    /// GreenDT extension (the paper leaves the server unscaled): when
+    /// enabled, an Algorithm-3 threshold policy also drives the server's
+    /// cores/frequency at every telemetry drain.
+    pub server_autoscale: bool,
+    /// When the server policy last stepped — on a multi-tenant host the
+    /// per-slot drains would otherwise step it N× per interval.
+    last_server_autoscale: SimTime,
+    // Fleet-interval accumulators (reset by `drain_fleet_interval`; unused
+    // and unbounded-but-cheap in single-session worlds).
+    fleet_moved: Bytes,
+    fleet_time: SimDuration,
+    fleet_load: f64,
+    fleet_server_load: f64,
+    fleet_ticks: u32,
+    fleet_energy_start: Energy,
+}
+
+impl Host {
+    /// Assemble the host for a testbed. `client` is the initial client CPU
+    /// setting (Alg. 1 lines 14–20, or a fleet policy's choice).
+    pub fn new(testbed: &Testbed, client: CpuState) -> Self {
+        Host {
+            client,
+            server: CpuState::performance(testbed.server_cpu.clone()),
+            client_power: standard_power(&testbed.client_cpu),
+            server_power: standard_power(&testbed.server_cpu),
+            client_rapl: RaplMeter::new(),
+            client_node: NodeMeter::new(testbed.client_base_power),
+            server_rapl: RaplMeter::new(),
+            wall_meter: testbed.wall_meter,
+            server_autoscale: false,
+            last_server_autoscale: SimTime::ZERO,
+            fleet_moved: Bytes::ZERO,
+            fleet_time: SimDuration::ZERO,
+            fleet_load: 0.0,
+            fleet_server_load: 0.0,
+            fleet_ticks: 0,
+            fleet_energy_start: Energy::ZERO,
+        }
+    }
+
+    /// Client energy according to the testbed's instrument (RAPL package
+    /// or wall meter).
+    pub fn client_energy(&self) -> Energy {
+        if self.wall_meter {
+            self.client_node.total()
+        } else {
+            self.client_rapl.total()
+        }
+    }
+
+    pub fn server_energy(&self) -> Energy {
+        self.server_rapl.total()
+    }
+
+    pub fn wall_meter(&self) -> bool {
+        self.wall_meter
+    }
+
+    /// Average power of the client at an arbitrary hypothetical setting —
+    /// exposed for the predictive governor's candidate evaluation.
+    pub fn client_power_model(&self) -> &PowerModel {
+        &self.client_power
+    }
+
+    /// End-system throughput ceiling (bytes/s) at the current CPU
+    /// settings, given the aggregate request rate and open-stream count of
+    /// every session on the host.
+    pub fn capacity_bytes_per_sec(&self, requests_per_sec: f64, open_streams: f64) -> f64 {
+        let client = self.client.spec().achievable_bytes_per_sec(
+            self.client.active_cores(),
+            self.client.freq(),
+            requests_per_sec,
+            open_streams,
+            MAX_APP_UTILIZATION,
+        );
+        let server = self.server.spec().achievable_bytes_per_sec(
+            self.server.active_cores(),
+            self.server.freq(),
+            requests_per_sec,
+            open_streams,
+            MAX_APP_UTILIZATION,
+        );
+        client.min(server)
+    }
+
+    /// One tick of load/power/meter accounting for the aggregate demand of
+    /// every session on the host.
+    pub fn record_tick(
+        &mut self,
+        now: SimTime,
+        demand: &CpuDemand,
+        moved: Bytes,
+        dt: SimDuration,
+    ) -> HostTick {
+        let client_load =
+            self.client.spec().load(demand, self.client.active_cores(), self.client.freq());
+        let server_load =
+            self.server.spec().load(demand, self.server.active_cores(), self.server.freq());
+
+        let client_power = self.client_power.package_power(
+            self.client.active_cores(),
+            self.client.freq(),
+            client_load,
+            demand.bytes_per_sec,
+        );
+        let server_power = self.server_power.package_power(
+            self.server.active_cores(),
+            self.server.freq(),
+            server_load,
+            demand.bytes_per_sec,
+        );
+        self.client_rapl.record(now, client_power, dt);
+        self.client_node.record(now, client_power, dt);
+        self.server_rapl.record(now, server_power, dt);
+
+        let package_energy_j = client_power.over(dt).as_joules();
+        let instrument_energy_j = if self.wall_meter {
+            (client_power + self.client_node.base()).over(dt).as_joules()
+        } else {
+            package_energy_j
+        };
+
+        self.fleet_moved += moved;
+        self.fleet_time += dt;
+        self.fleet_load += client_load.min(4.0);
+        self.fleet_server_load += server_load.min(4.0);
+        self.fleet_ticks += 1;
+
+        HostTick {
+            client_load,
+            server_load,
+            client_power,
+            server_power,
+            instrument_energy_j,
+            package_energy_j,
+        }
+    }
+
+    /// Rate-limited server scaling: steps at most once per `interval`, so
+    /// N tenants draining telemetry independently still walk the server
+    /// at the single-session cadence.
+    pub fn maybe_autoscale_server(
+        &mut self,
+        now: SimTime,
+        interval: SimDuration,
+        avg_load: f64,
+    ) {
+        if now.since(self.last_server_autoscale).as_secs() + 1e-9 >= interval.as_secs() {
+            self.autoscale_server(avg_load);
+            self.last_server_autoscale = now;
+        }
+    }
+
+    /// One Algorithm-3 threshold step on the *server* CPU, driven by the
+    /// interval-average server load (the `server_autoscale` extension).
+    pub fn autoscale_server(&mut self, avg_load: f64) {
+        let th = LoadThresholds::default();
+        if avg_load > th.max_load {
+            if !self.server.increase_cores() {
+                self.server.increase_freq();
+            }
+        } else if avg_load < th.min_load {
+            if !self.server.decrease_freq() {
+                self.server.decrease_cores();
+            }
+        }
+    }
+
+    /// Read and reset the fleet-interval accumulators — called by the
+    /// fleet driver at each arbitration timeout.
+    pub fn drain_fleet_interval(&mut self, now: SimTime, active_sessions: u32) -> FleetView {
+        let interval_energy = self.client_energy().saturating_sub(self.fleet_energy_start);
+        let view = FleetView {
+            now,
+            active_sessions,
+            avg_load: if self.fleet_ticks == 0 {
+                0.0
+            } else {
+                self.fleet_load / self.fleet_ticks as f64
+            },
+            avg_server_load: if self.fleet_ticks == 0 {
+                0.0
+            } else {
+                self.fleet_server_load / self.fleet_ticks as f64
+            },
+            avg_throughput: Rate::average(self.fleet_moved, self.fleet_time),
+            avg_power: interval_energy.average_power(self.fleet_time),
+        };
+        self.fleet_moved = Bytes::ZERO;
+        self.fleet_time = SimDuration::ZERO;
+        self.fleet_load = 0.0;
+        self.fleet_server_load = 0.0;
+        self.fleet_ticks = 0;
+        self.fleet_energy_start = self.client_energy();
+        view
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::units::Freq;
+
+    fn host(testbed: &str) -> Host {
+        let tb = testbeds::by_name(testbed).unwrap();
+        let client = CpuState::performance(tb.client_cpu.clone());
+        Host::new(&tb, client)
+    }
+
+    #[test]
+    fn wall_meter_host_reports_node_energy() {
+        let mut h = host("didclab");
+        let demand =
+            CpuDemand { bytes_per_sec: 50e6, requests_per_sec: 10.0, open_streams: 4.0 };
+        let dt = SimDuration::from_millis(100.0);
+        let mut t = SimTime::ZERO;
+        for _ in 0..50 {
+            h.record_tick(t, &demand, Bytes::from_mb(5.0), dt);
+            t += dt;
+        }
+        assert!(h.client_energy() > h.client_rapl.total(), "wall > package");
+        // The per-tick instrument energy matches the meter's integral.
+        let ht = h.record_tick(t, &demand, Bytes::from_mb(5.0), dt);
+        assert!(ht.instrument_energy_j > ht.package_energy_j);
+    }
+
+    #[test]
+    fn rapl_host_instrument_is_package() {
+        let mut h = host("cloudlab");
+        let demand =
+            CpuDemand { bytes_per_sec: 50e6, requests_per_sec: 10.0, open_streams: 4.0 };
+        let ht = h.record_tick(
+            SimTime::ZERO,
+            &demand,
+            Bytes::from_mb(5.0),
+            SimDuration::from_millis(100.0),
+        );
+        assert_eq!(ht.instrument_energy_j, ht.package_energy_j);
+        assert_eq!(h.client_energy(), h.client_rapl.total());
+    }
+
+    #[test]
+    fn capacity_is_min_of_both_ends() {
+        let h = host("cloudlab");
+        let cap = h.capacity_bytes_per_sec(10.0, 8.0);
+        let client = h.client.spec().achievable_bytes_per_sec(
+            h.client.active_cores(),
+            h.client.freq(),
+            10.0,
+            8.0,
+            MAX_APP_UTILIZATION,
+        );
+        let server = h.server.spec().achievable_bytes_per_sec(
+            h.server.active_cores(),
+            h.server.freq(),
+            10.0,
+            8.0,
+            MAX_APP_UTILIZATION,
+        );
+        assert_eq!(cap, client.min(server));
+        assert!(cap > 0.0);
+    }
+
+    #[test]
+    fn autoscale_server_walks_thresholds() {
+        let tb = testbeds::cloudlab();
+        let mut h = Host::new(&tb, CpuState::performance(tb.client_cpu.clone()));
+        // Server starts at the performance setting: max cores, max freq.
+        assert!(h.server.at_max_cores() && h.server.at_max_freq());
+        // Low aggregate load sheds frequency first, then cores.
+        h.autoscale_server(0.1);
+        assert!(!h.server.at_max_freq(), "frequency drops first");
+        let cores0 = h.server.active_cores();
+        while !h.server.at_min_freq() {
+            h.autoscale_server(0.1);
+        }
+        assert_eq!(h.server.active_cores(), cores0, "cores held while freq can drop");
+        h.autoscale_server(0.1);
+        assert_eq!(h.server.active_cores(), cores0 - 1, "cores drop at min freq");
+        // High load grows cores first, then frequency.
+        while !h.server.at_max_cores() {
+            h.autoscale_server(0.95);
+        }
+        assert!(h.server.at_min_freq(), "freq untouched while cores remain");
+        h.autoscale_server(0.95);
+        assert!(h.server.freq() > h.server.spec().min_freq());
+        // Mid-band load holds steady.
+        let setting = (h.server.active_cores(), h.server.freq());
+        h.autoscale_server(0.6);
+        assert_eq!((h.server.active_cores(), h.server.freq()), setting);
+    }
+
+    #[test]
+    fn maybe_autoscale_is_rate_limited_per_interval() {
+        let tb = testbeds::cloudlab();
+        let mut h = Host::new(&tb, CpuState::performance(tb.client_cpu.clone()));
+        let interval = SimDuration::from_secs(3.0);
+        let f0 = h.server.freq();
+        // First drain of the interval steps the server…
+        h.maybe_autoscale_server(SimTime::from_secs(3.0), interval, 0.1);
+        let f1 = h.server.freq();
+        assert!(f1 < f0);
+        // …but other tenants draining inside the same window do not.
+        h.maybe_autoscale_server(SimTime::from_secs(4.0), interval, 0.1);
+        h.maybe_autoscale_server(SimTime::from_secs(5.0), interval, 0.1);
+        assert_eq!(h.server.freq(), f1, "at most one step per interval");
+        // The next window steps again.
+        h.maybe_autoscale_server(SimTime::from_secs(6.0), interval, 0.1);
+        assert!(h.server.freq() < f1);
+    }
+
+    #[test]
+    fn fleet_interval_drains_and_resets() {
+        let mut h = host("cloudlab");
+        let demand =
+            CpuDemand { bytes_per_sec: 100e6, requests_per_sec: 20.0, open_streams: 8.0 };
+        let dt = SimDuration::from_millis(100.0);
+        let mut t = SimTime::ZERO;
+        for _ in 0..30 {
+            h.record_tick(t, &demand, Bytes::from_mb(10.0), dt);
+            t += dt;
+        }
+        let view = h.drain_fleet_interval(t, 3);
+        assert_eq!(view.active_sessions, 3);
+        assert!(view.avg_load > 0.0);
+        assert!(view.avg_power.as_watts() > 0.0);
+        assert!((view.avg_throughput.as_bytes_per_sec() - 100e6).abs() / 100e6 < 1e-9);
+        // Second drain covers an empty interval.
+        let empty = h.drain_fleet_interval(t, 3);
+        assert_eq!(empty.avg_load, 0.0);
+        assert_eq!(empty.avg_throughput, Rate::ZERO);
+    }
+
+    #[test]
+    fn eco_setting_draws_less_power_than_performance() {
+        let tb = testbeds::cloudlab();
+        let mut perf = Host::new(&tb, CpuState::performance(tb.client_cpu.clone()));
+        let mut eco = Host::new(&tb, CpuState::new(tb.client_cpu.clone(), 1, Freq::from_ghz(1.2)));
+        let demand =
+            CpuDemand { bytes_per_sec: 10e6, requests_per_sec: 5.0, open_streams: 2.0 };
+        let dt = SimDuration::from_millis(100.0);
+        let a = perf.record_tick(SimTime::ZERO, &demand, Bytes::from_mb(1.0), dt);
+        let b = eco.record_tick(SimTime::ZERO, &demand, Bytes::from_mb(1.0), dt);
+        assert!(a.client_power.as_watts() > 1.5 * b.client_power.as_watts());
+    }
+}

@@ -1,13 +1,19 @@
-//! The end-to-end simulation: WAN + two end systems + transfer engine.
+//! The end-to-end simulation: WAN + two end systems + transfer engines.
 //!
-//! [`Simulation`] advances the whole world one tick at a time;
-//! [`session`] runs a complete transfer under a tuning algorithm and
-//! produces a [`session::SessionOutcome`] (the numbers the paper's figures
-//! plot).
+//! [`Simulation`] advances the whole world — one shared client [`Host`]
+//! running N tenant [`SessionSlot`]s — one tick at a time; [`session`]
+//! runs a single complete transfer under a tuning algorithm and produces
+//! a [`session::SessionOutcome`] (the numbers the paper's figures plot);
+//! [`fleet`] drives N concurrent sessions with cross-session arbitration
+//! and per-tenant accounting. The session driver is the N=1 special case
+//! of the fleet driver.
 
 mod engine;
+mod host;
 mod telemetry;
+pub mod fleet;
 pub mod session;
 
-pub use engine::{Simulation, MAX_APP_UTILIZATION};
+pub use engine::{SessionSlot, Simulation, TuneCtx};
+pub use host::{FleetView, Host, HostTick, MAX_APP_UTILIZATION};
 pub use telemetry::{NetView, Telemetry, TickStats};

@@ -1,11 +1,15 @@
 //! Session driver: one complete transfer under one tuning algorithm.
+//!
+//! Since the multi-tenant refactor this is the N=1 special case of the
+//! fleet driver ([`super::fleet::run_fleet`]): one tenant, no fleet
+//! policy (so the session's own governor keeps the host CPU knobs), and
+//! the outcome read from the host meters exactly as before.
 
 use crate::config::experiment::TunerParams;
 use crate::config::Testbed;
 use crate::coordinator::AlgorithmKind;
 use crate::dataset::Dataset;
-use crate::sim::Simulation;
-use crate::transfer::TransferEngine;
+use crate::sim::fleet::{run_fleet, FleetConfig, TenantSpec};
 use crate::units::{Bytes, Energy, Freq, Rate, SimDuration};
 
 /// Everything needed to run one session.
@@ -116,81 +120,39 @@ impl SessionOutcome {
     }
 }
 
-/// Run a session to completion (or the time cap).
+/// Run a session to completion (or the time cap) — the N=1 fleet.
 pub fn run_session(cfg: &SessionConfig) -> SessionOutcome {
-    let mut algo = cfg.algorithm.build(cfg.params);
-    let plan = algo.init(&cfg.testbed, &cfg.dataset);
-
-    let mut engine = TransferEngine::with_knee(
-        &plan.partitions,
-        cfg.testbed.link.avg_win,
-        cfg.testbed.link.knee_streams(),
-    );
-    if plan.handshake_rtts > 0.0 {
-        for i in 0..plan.partitions.len() {
-            engine.set_handshake_rtts(i, plan.handshake_rtts);
-        }
-    }
-    engine.update_weights();
-    engine.set_num_channels(plan.num_channels);
-
-    let mut sim = Simulation::with_bandwidth_events(
-        &cfg.testbed,
-        engine,
-        plan.client_cpu,
-        cfg.tick,
-        cfg.seed,
-        cfg.bandwidth_events.clone(),
-    );
-    sim.server_autoscale = cfg.server_scaling;
-
-    let total = sim.engine.total();
-    let timeout = algo.timeout();
-    let mut next_timeout = timeout;
-    let mut peak_channels = sim.engine.num_channels();
-    let mut timeline = Vec::new();
-
-    while !sim.is_done() && sim.now.as_secs() < cfg.max_sim_time.as_secs() {
-        sim.step();
-        peak_channels = peak_channels.max(sim.engine.num_channels());
-        if sim.now.as_secs() + 1e-9 >= next_timeout.as_secs() {
-            let tel = sim.drain_telemetry();
-            if cfg.record_timeline {
-                timeline.push(TimelinePoint {
-                    t_secs: tel.now.as_secs(),
-                    fsm: algo.fsm_label(),
-                    throughput: tel.avg_throughput,
-                    channels: tel.num_channels,
-                    active_cores: sim.client.active_cores(),
-                    freq: sim.client.freq(),
-                    cpu_load: tel.cpu_load,
-                    power_w: tel.avg_power.as_watts(),
-                });
-            }
-            algo.on_timeout(&tel, &mut sim);
-            next_timeout = next_timeout + timeout;
-        }
-    }
-
-    let completed = sim.is_done();
-    let duration = sim.now.since(crate::units::SimTime::ZERO);
-    let moved = total.saturating_sub(sim.engine.remaining());
+    let fleet = FleetConfig {
+        testbed: cfg.testbed.clone(),
+        tenants: vec![TenantSpec::new("session", cfg.dataset.clone(), cfg.algorithm)],
+        policy: None,
+        params: cfg.params,
+        fleet_interval: cfg.params.timeout,
+        seed: cfg.seed,
+        tick: cfg.tick,
+        max_sim_time: cfg.max_sim_time,
+        record_timeline: cfg.record_timeline,
+        bandwidth_events: cfg.bandwidth_events.clone(),
+        server_scaling: cfg.server_scaling,
+    };
+    let mut out = run_fleet(&fleet);
+    let tenant = out.tenants.remove(0);
 
     SessionOutcome {
-        algorithm: algo.name().to_string(),
+        algorithm: tenant.algorithm,
         testbed: cfg.testbed.name.to_string(),
         dataset: cfg.dataset.name.clone(),
-        completed,
-        duration,
-        moved,
-        avg_throughput: Rate::average(moved, duration),
-        client_energy: sim.client_energy(),
-        client_package_energy: sim.client_rapl.total(),
-        server_energy: sim.server_energy(),
-        final_active_cores: sim.client.active_cores(),
-        final_freq: sim.client.freq(),
-        peak_channels,
-        timeline,
+        completed: out.completed,
+        duration: out.duration,
+        moved: tenant.moved,
+        avg_throughput: Rate::average(tenant.moved, out.duration),
+        client_energy: out.client_energy,
+        client_package_energy: out.client_package_energy,
+        server_energy: out.server_energy,
+        final_active_cores: out.final_active_cores,
+        final_freq: out.final_freq,
+        peak_channels: tenant.peak_channels,
+        timeline: tenant.timeline,
     }
 }
 
@@ -261,6 +223,71 @@ mod tests {
             a.client_energy.as_joules(),
             b.client_energy.as_joules(),
             "background noise must differ across seeds"
+        );
+    }
+
+    #[test]
+    fn long_ticks_do_not_skew_tuning_cadence() {
+        // A tick that spans several tuning timeouts (10 s tick, 3 s
+        // timeout) must drain telemetry once per tick and advance the
+        // deadline past the clock — not slide it one timeout at a time.
+        let mut cfg = SessionConfig::new(
+            testbeds::cloudlab(),
+            standard::large_dataset(4),
+            AlgorithmKind::MaxThroughput,
+        )
+        .recording();
+        cfg.tick = SimDuration::from_secs(10.0);
+        let out = run_session(&cfg);
+        assert!(out.completed);
+        assert!(out.timeline.len() >= 2);
+        for w in out.timeline.windows(2) {
+            let dt = w[1].t_secs - w[0].t_secs;
+            assert!(
+                (dt - 10.0).abs() < 1e-6,
+                "tuning cadence must follow the long tick, got {dt}"
+            );
+        }
+    }
+
+    #[test]
+    fn n1_fleet_reproduces_run_session() {
+        // The acceptance check for the refactor: driving the same single
+        // session through the fleet API yields the same energy/duration.
+        use crate::sim::fleet::{run_fleet, FleetConfig, TenantSpec};
+        let cfg = SessionConfig::new(
+            testbeds::didclab(),
+            standard::medium_dataset(6),
+            AlgorithmKind::MinEnergy,
+        )
+        .with_seed(77);
+        let session = run_session(&cfg);
+        let fleet = run_fleet(&FleetConfig {
+            testbed: testbeds::didclab(),
+            tenants: vec![TenantSpec::new(
+                "only",
+                standard::medium_dataset(6),
+                AlgorithmKind::MinEnergy,
+            )],
+            policy: None,
+            params: cfg.params,
+            fleet_interval: cfg.params.timeout,
+            seed: 77,
+            tick: cfg.tick,
+            max_sim_time: cfg.max_sim_time,
+            record_timeline: false,
+            bandwidth_events: Vec::new(),
+            server_scaling: false,
+        });
+        assert_eq!(session.duration.as_secs(), fleet.duration.as_secs());
+        assert_eq!(
+            session.client_energy.as_joules(),
+            fleet.client_energy.as_joules()
+        );
+        assert_eq!(
+            session.client_energy.as_joules(),
+            fleet.tenants[0].attributed_energy.as_joules(),
+            "a lone tenant is attributed the whole host bill"
         );
     }
 

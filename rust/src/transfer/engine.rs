@@ -3,7 +3,7 @@
 use super::Channel;
 use crate::dataset::Partition;
 use crate::netsim::{Link, StreamState};
-use crate::units::{Bytes, Rate, SimDuration};
+use crate::units::{Bytes, Rate, Rtt, SimDuration};
 
 /// Per-partition progress the tuning algorithms observe.
 #[derive(Debug, Clone)]
@@ -56,10 +56,14 @@ pub struct TransferEngine {
     /// Streams that fill the pipe (`LinkParams::knee_streams`); used to
     /// derate per-channel parallelism as the channel count grows.
     knee_streams: f64,
-    /// Tick-loop scratch (stream snapshot + per-stream rates), reused
-    /// across ticks to keep the hot path allocation-free.
+    /// Hard ceiling on the channel count (a fleet policy's per-session
+    /// budget). `None` in single-session worlds.
+    channel_cap: Option<u32>,
+    /// Tick-loop scratch (stream snapshot + per-stream and per-channel
+    /// rates), reused across ticks to keep the hot path allocation-free.
     scratch_streams: Vec<StreamState>,
     scratch_rates: Vec<f64>,
+    scratch_channel_rates: Vec<f64>,
 }
 
 impl TransferEngine {
@@ -96,8 +100,10 @@ impl TransferEngine {
             channels: Vec::new(),
             avg_win,
             knee_streams,
+            channel_cap: None,
             scratch_streams: Vec::new(),
             scratch_rates: Vec::new(),
+            scratch_channel_rates: Vec::new(),
         };
         engine.update_weights();
         engine
@@ -158,6 +164,18 @@ impl TransferEngine {
         self.partitions[partition].handshake_rtts = rtts.max(0.0);
     }
 
+    /// Cap the total channel count (a fleet policy's per-session budget).
+    /// Every later [`Self::set_num_channels`] clamps to this ceiling, so a
+    /// tuning algorithm asking for more does not churn channels open and
+    /// closed. Does not shrink already-open channels by itself.
+    pub fn set_channel_cap(&mut self, cap: Option<u32>) {
+        self.channel_cap = cap.map(|c| c.max(1));
+    }
+
+    pub fn channel_cap(&self) -> Option<u32> {
+        self.channel_cap
+    }
+
     /// `updateWeights()` (Algs. 2/4/5/6): weight_i = remaining_i / Σ remaining.
     ///
     /// Slower (larger-remainder) partitions get more channels so all
@@ -193,7 +211,10 @@ impl TransferEngine {
             }
             return;
         }
-        let n = num_channels.max(1);
+        let n = match self.channel_cap {
+            Some(cap) => num_channels.max(1).min(cap),
+            None => num_channels.max(1),
+        };
 
         let weights: Vec<f64> = unfinished.iter().map(|&i| self.partitions[i].weight).collect();
         let wsum: f64 = weights.iter().sum();
@@ -281,6 +302,11 @@ impl TransferEngine {
     ///
     /// `cpu_cap_bytes_per_sec` is the end-system ceiling (min of client and
     /// server achievable throughput); pass `f64::INFINITY` to disable.
+    ///
+    /// This is the single-engine path; a multi-tenant world instead calls
+    /// [`Self::stage_streams`] on every engine, allocates the bottleneck
+    /// over the pooled streams once, and hands each engine its slice via
+    /// [`Self::apply_shared_rates`].
     pub fn tick(
         &mut self,
         link: &Link,
@@ -290,26 +316,54 @@ impl TransferEngine {
         if self.channels.is_empty() || dt.is_zero() {
             return TickOutput::default();
         }
-        let rtt = link.params.rtt;
 
         // 1. Advance stream windows, then allocate the bottleneck
         //    (scratch buffers reused across ticks; no allocation here).
         let mut flat = std::mem::take(&mut self.scratch_streams);
         flat.clear();
+        self.stage_streams(dt, link.params.rtt, &mut flat);
+        let mut rates = std::mem::take(&mut self.scratch_rates);
+        crate::netsim::share_goodput_into(link, &flat, &mut rates);
+
+        let out = self.apply_shared_rates(&rates, link, dt, cpu_cap_bytes_per_sec);
+        self.scratch_streams = flat;
+        self.scratch_rates = rates;
+        out
+    }
+
+    /// Stage one of a tick: advance every stream's congestion window by
+    /// `dt` and append snapshots to `flat` (a buffer that may already hold
+    /// other tenants' streams).
+    pub fn stage_streams(&mut self, dt: SimDuration, rtt: Rtt, flat: &mut Vec<StreamState>) {
         for c in &mut self.channels {
             for s in &mut c.streams {
                 s.tick(dt, rtt);
                 flat.push(*s);
             }
         }
-        let mut rates = std::mem::take(&mut self.scratch_rates);
-        crate::netsim::share_goodput_into(link, &flat, &mut rates);
+    }
+
+    /// Stage two of a tick: consume this engine's per-stream goodput rates
+    /// (bytes/s, in [`Self::stage_streams`] order), charge pipelining
+    /// overhead, cap by the CPU budget, and move bytes.
+    pub fn apply_shared_rates(
+        &mut self,
+        rates: &[f64],
+        link: &Link,
+        dt: SimDuration,
+        cpu_cap_bytes_per_sec: f64,
+    ) -> TickOutput {
+        if self.channels.is_empty() || dt.is_zero() {
+            return TickOutput::default();
+        }
+        let rtt = link.params.rtt;
 
         // 2. Per-channel raw rate, then pipelining efficiency:
         //    long-run goodput of a channel moving files of size S at raw
         //    rate r with pipelining pp is r * S / (S + r*RTT/pp).
         let mut idx = 0;
-        let mut channel_rates: Vec<f64> = Vec::with_capacity(self.channels.len());
+        let mut channel_rates = std::mem::take(&mut self.scratch_channel_rates);
+        channel_rates.clear();
         let mut total_raw = 0.0;
         for c in &self.channels {
             let mut r = 0.0;
@@ -359,9 +413,8 @@ impl TransferEngine {
             requests_per_sec += rate / p.avg_file_size.as_f64().max(1.0);
         }
 
-        let open_streams = flat.len();
-        self.scratch_streams = flat;
-        self.scratch_rates = rates;
+        let open_streams = rates.len();
+        self.scratch_channel_rates = channel_rates;
         // 5. Reassign channels of partitions that just finished to the
         //    unfinished partition with the most remaining data (a real
         //    tool's worker simply dequeues the next file). Streams stay
@@ -452,6 +505,18 @@ mod tests {
             let cc_sum: u32 = e.partitions().iter().map(|p| p.cc_level).sum();
             assert_eq!(cc_sum, n);
         }
+    }
+
+    #[test]
+    fn channel_cap_clamps_requests() {
+        let link = cloudlab_link();
+        let mut e = engine_for("mixed", &link);
+        e.set_channel_cap(Some(6));
+        e.set_num_channels(20);
+        assert_eq!(e.num_channels(), 6, "cap must bound the request");
+        e.set_channel_cap(None);
+        e.set_num_channels(20);
+        assert_eq!(e.num_channels(), 20, "uncapped again");
     }
 
     #[test]
