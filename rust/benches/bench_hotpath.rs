@@ -1,78 +1,24 @@
-//! L3 hot-path micro-benchmarks: the per-tick simulation loop.
+//! L3 hot-path benchmarks: the per-tick simulation loop.
 //!
 //!     cargo bench --bench bench_hotpath
 //!
-//! These are the quantities the §Perf pass optimizes: goodput allocation
-//! (`share_goodput`), whole-world tick cost at realistic stream counts,
-//! channel redistribution, and end-to-end session rate (simulated
-//! seconds per wall second).
+//! Thin wrapper over [`greendt::benchkit::hotpath`] (shared with the
+//! `greendt bench` subcommand): goodput allocation (`share_goodput`),
+//! whole-world tick cost at realistic stream counts for both the naive
+//! reference stepper and the epoch-cached fast path, channel
+//! redistribution, and the headline end-to-end rate — simulated seconds
+//! per wall second — for both steppers.
+//!
+//! Set `GREENDT_BENCH_JSON=<path>` to also write the machine-readable
+//! report (the same file `greendt bench --json <path>` produces).
 
-use greendt::benchkit::{bench, time_once};
-use greendt::config::testbeds;
-use greendt::coordinator::AlgorithmKind;
-use greendt::cpusim::CpuState;
-use greendt::dataset::{partition_files_capped, standard};
-use greendt::netsim::{share_goodput, StreamState};
-use greendt::sim::session::{run_session, SessionConfig};
-use greendt::sim::Simulation;
-use greendt::transfer::TransferEngine;
-use greendt::units::SimDuration;
+use greendt::benchkit::hotpath;
 
 fn main() {
     println!("== bench_hotpath: simulation hot loop ==\n");
-
-    // share_goodput at various stream counts.
-    let tb = testbeds::cloudlab();
-    for n in [4usize, 16, 64, 256] {
-        let link = tb.make_link_constant_bg();
-        let streams: Vec<StreamState> =
-            (0..n).map(|_| StreamState::warm(tb.link.avg_win)).collect();
-        bench(&format!("share_goodput/{n} streams"), 100, 2000, || {
-            share_goodput(&link, &streams)
-        });
+    let report = hotpath::run(false);
+    if let Ok(path) = std::env::var("GREENDT_BENCH_JSON") {
+        report.write_json(&path).expect("writing bench JSON");
+        println!("\nbench report written to {path}");
     }
-    println!();
-
-    // Whole-world step at mixed-dataset scale.
-    for channels in [4u32, 16, 48] {
-        let ds = standard::mixed_dataset(7);
-        let parts = partition_files_capped(&ds, tb.bdp(), 5);
-        let mut engine = TransferEngine::with_knee(&parts, tb.link.avg_win, tb.link.knee_streams());
-        engine.set_num_channels(channels);
-        let mut sim = Simulation::new(
-            &tb,
-            engine,
-            CpuState::performance(tb.client_cpu.clone()),
-            SimDuration::from_millis(100.0),
-            9,
-        );
-        bench(&format!("simulation step/{channels} channels"), 200, 5000, || sim.step());
-    }
-    println!();
-
-    // Channel redistribution.
-    let ds = standard::mixed_dataset(7);
-    let parts = partition_files_capped(&ds, tb.bdp(), 5);
-    let mut engine = TransferEngine::with_knee(&parts, tb.link.avg_win, tb.link.knee_streams());
-    let mut n = 4u32;
-    bench("set_num_channels (4<->24)", 100, 2000, || {
-        n = if n == 4 { 24 } else { 4 };
-        engine.update_weights();
-        engine.set_num_channels(n);
-    });
-    println!();
-
-    // End-to-end session rate.
-    let cfg = SessionConfig::new(
-        testbeds::chameleon(),
-        standard::mixed_dataset(42),
-        AlgorithmKind::MaxThroughput,
-    );
-    let (out, secs) = time_once("EEMT session chameleon/mixed", || run_session(&cfg));
-    println!(
-        "  simulated {:.0}s in {:.3}s wall => {:.0}x real time",
-        out.duration.as_secs(),
-        secs,
-        out.duration.as_secs() / secs.max(1e-9)
-    );
 }

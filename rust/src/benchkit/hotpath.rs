@@ -1,0 +1,233 @@
+//! The hot-path benchmark suite, shared by `cargo bench --bench
+//! bench_hotpath` and `greendt bench`.
+//!
+//! The headline number is end-to-end simulated-time throughput —
+//! sim-seconds per wall-second of the "EEMT session chameleon/mixed"
+//! case — measured for **both** steppers in one run: the naive per-tick
+//! reference (`Simulation::step_reference`, the pre-epoch semantics) and
+//! the epoch-cached fast path. Recording both in `BENCH_hotpath.json`
+//! keeps the speedup claim reproducible on any machine, independent of
+//! the hardware the baseline was first taken on.
+//!
+//! Note the reference run still goes through the event-horizon driver
+//! (only the *stepper* is naive), so it is a touch faster than the true
+//! pre-PR per-tick-scanning driver — the recorded speedup is therefore a
+//! conservative lower bound on the improvement over the pre-PR code.
+
+use super::{bench, json_escape, json_f64, time_once, BenchReport};
+use crate::config::testbeds;
+use crate::coordinator::AlgorithmKind;
+use crate::cpusim::CpuState;
+use crate::dataset::{partition_files_capped, standard};
+use crate::netsim::{share_goodput, StreamState};
+use crate::sim::session::{run_session, SessionConfig};
+use crate::sim::Simulation;
+use crate::transfer::TransferEngine;
+use crate::units::SimDuration;
+
+/// The end-to-end case the acceptance criteria track.
+pub const HEADLINE_CASE: &str = "EEMT session chameleon/mixed";
+
+/// One stepper's end-to-end measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionRate {
+    pub sim_seconds: f64,
+    pub wall_seconds: f64,
+}
+
+impl SessionRate {
+    /// Simulated-time throughput: how many simulated seconds one wall
+    /// second buys.
+    pub fn sim_seconds_per_wall_second(&self) -> f64 {
+        self.sim_seconds / self.wall_seconds.max(1e-12)
+    }
+
+    fn to_json(self) -> String {
+        format!(
+            "{{\"sim_seconds\":{},\"wall_seconds\":{},\"sim_seconds_per_wall_second\":{}}}",
+            json_f64(self.sim_seconds),
+            json_f64(self.wall_seconds),
+            json_f64(self.sim_seconds_per_wall_second())
+        )
+    }
+}
+
+/// Everything one hotpath run produced.
+#[derive(Debug, Clone)]
+pub struct HotpathReport {
+    pub micro: Vec<BenchReport>,
+    /// Naive per-tick stepper (pre-epoch semantics baseline).
+    pub reference: SessionRate,
+    /// Epoch-cached stepper.
+    pub epoch: SessionRate,
+}
+
+impl HotpathReport {
+    /// End-to-end speedup of the epoch-cached stepper over the reference.
+    pub fn speedup(&self) -> f64 {
+        self.epoch.sim_seconds_per_wall_second()
+            / self.reference.sim_seconds_per_wall_second().max(1e-12)
+    }
+
+    pub fn to_json(&self) -> String {
+        let micro: Vec<String> = self.micro.iter().map(|r| r.to_json()).collect();
+        format!(
+            "{{\n  \"bench\": \"hotpath\",\n  \"case\": \"{}\",\n  \"measured\": true,\n  \
+             \"reference\": {},\n  \"epoch\": {},\n  \"speedup\": {},\n  \"micro\": [{}]\n}}\n",
+            json_escape(HEADLINE_CASE),
+            self.reference.to_json(),
+            self.epoch.to_json(),
+            json_f64(self.speedup()),
+            micro.join(", ")
+        )
+    }
+
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn headline_config(reference: bool) -> SessionConfig {
+    let mut cfg = SessionConfig::new(
+        testbeds::chameleon(),
+        standard::mixed_dataset(42),
+        AlgorithmKind::MaxThroughput,
+    );
+    cfg.reference_stepper = reference;
+    cfg
+}
+
+/// Run the suite. `smoke` trims micro-benchmark iteration counts for CI;
+/// the end-to-end case always runs in full (it is a single session and
+/// the number the acceptance criteria track).
+pub fn run(smoke: bool) -> HotpathReport {
+    let (warmup, iters) = if smoke { (5u32, 50u32) } else { (100, 2000) };
+    let (step_warmup, step_iters) = if smoke { (10u32, 100u32) } else { (200, 5000) };
+    let mut micro = Vec::new();
+
+    // share_goodput at various stream counts.
+    let tb = testbeds::cloudlab();
+    for n in [4usize, 16, 64, 256] {
+        let link = tb.make_link_constant_bg();
+        let streams: Vec<StreamState> =
+            (0..n).map(|_| StreamState::warm(tb.link.avg_win)).collect();
+        micro.push(bench(&format!("share_goodput/{n} streams"), warmup, iters, || {
+            share_goodput(&link, &streams)
+        }));
+    }
+    println!();
+
+    // Whole-world step at mixed-dataset scale, both steppers, so the
+    // per-tick win is visible next to the end-to-end one.
+    for channels in [4u32, 16, 48] {
+        for reference in [true, false] {
+            let ds = standard::mixed_dataset(7);
+            let parts = partition_files_capped(&ds, tb.bdp(), 5);
+            let mut engine =
+                TransferEngine::with_knee(&parts, tb.link.avg_win, tb.link.knee_streams());
+            engine.set_num_channels(channels);
+            let mut sim = Simulation::new(
+                &tb,
+                engine,
+                CpuState::performance(tb.client_cpu.clone()),
+                SimDuration::from_millis(100.0),
+                9,
+            );
+            let label = if reference { "reference" } else { "epoch" };
+            micro.push(bench(
+                &format!("simulation step/{channels} channels/{label}"),
+                step_warmup,
+                step_iters,
+                || if reference { sim.step_reference() } else { sim.step() },
+            ));
+        }
+    }
+    println!();
+
+    // Channel redistribution.
+    let ds = standard::mixed_dataset(7);
+    let parts = partition_files_capped(&ds, tb.bdp(), 5);
+    let mut engine = TransferEngine::with_knee(&parts, tb.link.avg_win, tb.link.knee_streams());
+    let mut n = 4u32;
+    micro.push(bench("set_num_channels (4<->24)", warmup, iters, || {
+        n = if n == 4 { 24 } else { 4 };
+        engine.update_weights();
+        engine.set_num_channels(n);
+    }));
+    println!();
+
+    // End-to-end session rate: reference first (the pre-epoch baseline),
+    // then the epoch-cached path, on the identical workload.
+    let (ref_out, ref_secs) =
+        time_once(&format!("{HEADLINE_CASE} [reference]"), || {
+            run_session(&headline_config(true))
+        });
+    let (fast_out, fast_secs) =
+        time_once(&format!("{HEADLINE_CASE} [epoch]"), || {
+            run_session(&headline_config(false))
+        });
+    assert_eq!(
+        ref_out.duration.as_secs().to_bits(),
+        fast_out.duration.as_secs().to_bits(),
+        "steppers must agree on the simulated outcome"
+    );
+    assert_eq!(
+        ref_out.client_energy.as_joules().to_bits(),
+        fast_out.client_energy.as_joules().to_bits(),
+        "steppers must agree on the energy bill"
+    );
+
+    let report = HotpathReport {
+        micro,
+        reference: SessionRate {
+            sim_seconds: ref_out.duration.as_secs(),
+            wall_seconds: ref_secs,
+        },
+        epoch: SessionRate {
+            sim_seconds: fast_out.duration.as_secs(),
+            wall_seconds: fast_secs,
+        },
+    };
+    println!(
+        "  reference: {:.0} sim-s in {:.3} s wall => {:.0}x real time",
+        report.reference.sim_seconds,
+        report.reference.wall_seconds,
+        report.reference.sim_seconds_per_wall_second()
+    );
+    println!(
+        "  epoch    : {:.0} sim-s in {:.3} s wall => {:.0}x real time",
+        report.epoch.sim_seconds,
+        report.epoch.wall_seconds,
+        report.epoch.sim_seconds_per_wall_second()
+    );
+    println!("  speedup  : {:.2}x", report.speedup());
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_rate_math() {
+        let r = SessionRate { sim_seconds: 100.0, wall_seconds: 0.5 };
+        assert!((r.sim_seconds_per_wall_second() - 200.0).abs() < 1e-9);
+        let j = r.to_json();
+        assert!(j.contains("\"sim_seconds\":100"));
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let rate = SessionRate { sim_seconds: 10.0, wall_seconds: 1.0 };
+        let report = HotpathReport {
+            micro: Vec::new(),
+            reference: rate,
+            epoch: SessionRate { sim_seconds: 10.0, wall_seconds: 0.25 },
+        };
+        assert!((report.speedup() - 4.0).abs() < 1e-9);
+        let j = report.to_json();
+        assert!(j.contains("\"bench\": \"hotpath\""));
+        assert!(j.contains("\"speedup\": 4"));
+        assert!(j.contains("\"micro\": []"));
+    }
+}

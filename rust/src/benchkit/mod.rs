@@ -5,6 +5,8 @@
 //! p50/p99) plus a stopwatch for macro benchmarks that run whole simulated
 //! sessions.
 
+pub mod hotpath;
+
 use crate::metrics::Summary;
 use std::time::Instant;
 
@@ -27,6 +29,48 @@ impl BenchReport {
             fmt_duration(s.p99),
             s.n
         );
+    }
+
+    /// Machine-readable form (seconds), one JSON object per report — the
+    /// perf trajectory in `BENCH_hotpath.json` is built from these.
+    pub fn to_json(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{{\"name\":\"{}\",\"n\":{},\"mean_s\":{},\"std_s\":{},\"p50_s\":{},\"p99_s\":{}}}",
+            json_escape(&self.name),
+            s.n,
+            json_f64(s.mean),
+            json_f64(s.std),
+            json_f64(s.p50),
+            json_f64(s.p99)
+        )
+    }
+}
+
+/// Minimal JSON string escaping (bench names are code-controlled ASCII,
+/// but keep the output valid for any input).
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON-safe float rendering (JSON has no NaN/Infinity literals).
+pub(crate) fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
     }
 }
 
@@ -93,5 +137,22 @@ mod tests {
         assert!(fmt_duration(2e-3).ends_with(" ms"));
         assert!(fmt_duration(2e-6).contains("µs"));
         assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn report_json_is_wellformed() {
+        let r = bench("quo\"ted", 0, 4, || 1 + 1);
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"name\":\"quo\\\"ted\""));
+        assert!(j.contains("\"n\":4"));
+        assert!(j.contains("\"mean_s\":"));
+    }
+
+    #[test]
+    fn json_f64_handles_non_finite() {
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_f64(1.5), "1.5");
     }
 }

@@ -41,6 +41,12 @@ COMMANDS:
              --policy fairshare|minenergy   host arbitration (default minenergy)
              --spacing <SECS>      arrival spacing between tenants (default 30)
              --seed <N>            RNG seed (default 42)
+  bench      Hot-path benchmark: sim-seconds/wall-second of the naive
+             reference stepper vs the epoch-cached stepper (plus micro
+             benches of the per-tick pipeline)
+             --json <FILE>         write the machine-readable report
+                                   (e.g. BENCH_hotpath.json)
+             --smoke               trimmed iteration counts (CI)
   fig2       Reproduce Figure 2 (all tools × datasets × testbeds)
   fig3       Reproduce Figure 3 (target-throughput comparison)
   fig4       Reproduce Figure 4 (frequency/core-scaling ablation)
@@ -55,12 +61,14 @@ ENVIRONMENT:
 
 /// Entry point used by `main` (and by CLI tests). Returns the exit code.
 pub fn run(argv: &[String]) -> Result<i32> {
-    let args = ParsedArgs::parse(argv, &["trace", "no-csv", "server-scaling"]).map_err(|e| anyhow::anyhow!(e))?;
+    let args = ParsedArgs::parse(argv, &["trace", "no-csv", "server-scaling", "smoke"])
+        .map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
         "fleet" => cmd_fleet(&args),
         "sweep" => cmd_sweep(&args),
+        "bench" => cmd_bench(&args),
         "fig2" => cmd_fig2(&args),
         "fig3" => cmd_fig3(&args),
         "fig4" => cmd_fig4(&args),
@@ -243,6 +251,22 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<i32> {
     println!("{}", sweep::band_sensitivity(seed).to_markdown());
     println!("{}", sweep::timeout_sensitivity(seed).to_markdown());
     println!("{}", sweep::slow_start_ablation(seed).to_markdown());
+    Ok(0)
+}
+
+fn cmd_bench(args: &ParsedArgs) -> Result<i32> {
+    let smoke = args.has("smoke");
+    println!(
+        "== greendt bench: simulation hot loop{} ==\n",
+        if smoke { " (smoke)" } else { "" }
+    );
+    let report = crate::benchkit::hotpath::run(smoke);
+    if let Some(path) = args.get("json") {
+        report
+            .write_json(path)
+            .with_context(|| format!("writing bench report to {path}"))?;
+        println!("\nbench report written to {path}");
+    }
     Ok(0)
 }
 

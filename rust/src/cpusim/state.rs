@@ -59,6 +59,13 @@ impl CpuState {
         self.spec.freq_levels[self.freq_index]
     }
 
+    /// Index into the P-state ladder. Together with [`Self::active_cores`]
+    /// this is a cheap equality key for operating-point caches (two
+    /// integer compares instead of hashing the frequency).
+    pub fn freq_index(&self) -> usize {
+        self.freq_index
+    }
+
     pub fn at_max_freq(&self) -> bool {
         self.freq_index + 1 == self.spec.freq_levels.len()
     }

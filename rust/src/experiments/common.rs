@@ -6,20 +6,34 @@ use crate::config::testbeds;
 use crate::coordinator::AlgorithmKind;
 use crate::dataset::standard;
 use crate::sim::session::{run_session, SessionConfig, SessionOutcome};
+use crate::units::SimDuration;
 
 /// One experiment cell.
 #[derive(Debug, Clone)]
 pub struct Cell {
-    pub testbed: &'static str,
-    pub dataset: &'static str,
+    pub testbed: String,
+    pub dataset: String,
     pub kind: AlgorithmKind,
     pub params: TunerParams,
     pub seed: u64,
+    /// Session time cap (slow sweep points need more than the default).
+    pub max_sim_time: SimDuration,
 }
 
 impl Cell {
-    pub fn new(testbed: &'static str, dataset: &'static str, kind: AlgorithmKind) -> Cell {
-        Cell { testbed, dataset, kind, params: TunerParams::default(), seed: 42 }
+    pub fn new(
+        testbed: impl Into<String>,
+        dataset: impl Into<String>,
+        kind: AlgorithmKind,
+    ) -> Cell {
+        Cell {
+            testbed: testbed.into(),
+            dataset: dataset.into(),
+            kind,
+            params: TunerParams::default(),
+            seed: 42,
+            max_sim_time: SimDuration::from_secs(14_400.0),
+        }
     }
 
     pub fn with_params(mut self, params: TunerParams) -> Cell {
@@ -31,15 +45,21 @@ impl Cell {
         self.seed = seed;
         self
     }
+
+    pub fn with_max_sim_time(mut self, cap: SimDuration) -> Cell {
+        self.max_sim_time = cap;
+        self
+    }
 }
 
 /// Run one cell to completion.
 pub fn run_cell(cell: &Cell) -> SessionOutcome {
-    let testbed = testbeds::by_name(cell.testbed).expect("unknown testbed");
-    let dataset = standard::by_name(cell.dataset, cell.seed).expect("unknown dataset");
-    let cfg = SessionConfig::new(testbed, dataset, cell.kind)
+    let testbed = testbeds::by_name(&cell.testbed).expect("unknown testbed");
+    let dataset = standard::by_name(&cell.dataset, cell.seed).expect("unknown dataset");
+    let mut cfg = SessionConfig::new(testbed, dataset, cell.kind)
         .with_params(cell.params)
         .with_seed(cell.seed);
+    cfg.max_sim_time = cell.max_sim_time;
     run_session(&cfg)
 }
 

@@ -11,13 +11,12 @@
 //! * [`timeout_sensitivity`] — tuning-interval length vs outcome;
 //! * [`slow_start_ablation`] — Algorithm 2 on/off.
 
-use super::common::{run_cell, Cell};
+use super::common::{run_cell, run_cells, Cell};
 use crate::config::experiment::TunerParams;
 use crate::config::testbeds;
 use crate::coordinator::AlgorithmKind;
 use crate::dataset::standard;
 use crate::metrics::Table;
-use crate::sim::session::{run_session, SessionConfig};
 use crate::units::SimDuration;
 
 /// One point of the concurrency sweep.
@@ -38,24 +37,31 @@ pub struct SweepPoint {
 /// [`crate::coordinator::no_tune::NoTune`] policy, so the codebase has a
 /// single stepping loop.
 pub fn concurrency_sweep(testbed_name: &str, dataset_name: &str, seed: u64) -> Vec<SweepPoint> {
-    let tb = testbeds::by_name(testbed_name).expect("testbed");
+    testbeds::by_name(testbed_name).expect("testbed");
+    standard::by_name(dataset_name, seed).expect("dataset");
     let channel_grid = [1u32, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48];
-    let mut points = Vec::new();
-    for &channels in &channel_grid {
-        let ds = standard::by_name(dataset_name, seed).expect("dataset");
-        let mut cfg =
-            SessionConfig::new(tb.clone(), ds, AlgorithmKind::NoTune(channels)).with_seed(seed);
-        // Single-channel points on slow paths outlast the default cap.
-        cfg.max_sim_time = SimDuration::from_secs(36_000.0);
-        let out = run_session(&cfg);
-        points.push(SweepPoint {
+    // The 11 points are independent sessions (a slow-path single-channel
+    // point simulates up to 36,000 s), so fan them out across the shared
+    // worker pool instead of running them serially.
+    let cells: Vec<Cell> = channel_grid
+        .iter()
+        .map(|&channels| {
+            Cell::new(testbed_name, dataset_name, AlgorithmKind::NoTune(channels))
+                .with_seed(seed)
+                // Single-channel points on slow paths outlast the default cap.
+                .with_max_sim_time(SimDuration::from_secs(36_000.0))
+        })
+        .collect();
+    channel_grid
+        .iter()
+        .zip(run_cells(&cells))
+        .map(|(&channels, out)| SweepPoint {
             channels,
             throughput_gbps: out.avg_throughput.as_gbps(),
             client_energy_kj: out.client_energy.as_joules() / 1e3,
             duration_s: out.duration.as_secs(),
-        });
-    }
-    points
+        })
+        .collect()
 }
 
 /// Render a sweep as a table.

@@ -40,6 +40,17 @@ impl LinkParams {
     pub fn bdp(&self) -> Bytes {
         crate::units::bdp(self.capacity, self.rtt)
     }
+
+    /// Aggregate overload penalty for `n` open streams (step 3 of
+    /// [`share_goodput`]'s model): past the knee, every extra stream adds
+    /// retransmission + contention losses, linear in the over-subscription
+    /// ratio and floored. Constant while the stream count is constant, so
+    /// epoch caches compute it once.
+    pub fn overload_penalty(&self, n: usize) -> f64 {
+        let knee = self.knee_streams();
+        let over = (n as f64 - knee).max(0.0) / knee;
+        (1.0 / (1.0 + self.overload_gamma * over)).max(self.overload_floor)
+    }
 }
 
 /// A bottleneck link with time-varying residual capacity.
@@ -100,13 +111,9 @@ pub fn share_goodput_into(link: &Link, streams: &[StreamState], out: &mut Vec<f6
     let rtt = link.params.rtt;
     let avail = link.available().as_bytes_per_sec();
 
-    // Overload penalty on the aggregate: past the knee, every extra
-    // stream adds retransmission + contention losses. Linear in the
-    // over-subscription ratio (TCP degrades gracefully), floored.
-    let knee = link.params.knee_streams();
-    let over = (n as f64 - knee).max(0.0) / knee;
-    let penalty =
-        (1.0 / (1.0 + link.params.overload_gamma * over)).max(link.params.overload_floor);
+    // Overload penalty on the aggregate (TCP degrades gracefully past the
+    // knee; see `LinkParams::overload_penalty`).
+    let penalty = link.params.overload_penalty(n);
     let budget = avail * penalty;
 
     // Max-min fair allocation among window-capped streams:
@@ -158,6 +165,112 @@ pub fn share_goodput_into(link: &Link, streams: &[StreamState], out: &mut Vec<f6
     for a in alloc.iter_mut() {
         if *a < 0.0 {
             *a = 0.0;
+        }
+    }
+}
+
+/// Epoch cache for [`share_goodput_into`].
+///
+/// Within an epoch — no channel churn and every window warm — the stream
+/// set is frozen, so the per-stream window caps and the overload penalty
+/// are constants; the only per-tick input is the scalar link budget
+/// (available capacity × penalty) that moves with background traffic.
+/// [`Self::alloc_into`] reproduces the reference allocation **bit-for-bit**:
+/// cached values carry the same bits the reference recomputes (window
+/// caps and penalty are pure functions of frozen inputs), and the
+/// uniform-cap fast path takes exactly the single round the reference
+/// freeze loop executes when every cap is equal. The property tests in
+/// `rust/tests/stepper_equivalence.rs` pin this.
+#[derive(Debug, Clone, Default)]
+pub struct AllocCache {
+    /// Per-stream window cap (`win / RTT`), bytes/s, in staged order.
+    caps: Vec<f64>,
+    /// `Some(cap)` when every cap carries the same bits — the warm-epoch
+    /// common case (all streams at `avg_win`).
+    uniform_cap: Option<f64>,
+    /// `LinkParams::overload_penalty` at the cached stream count.
+    penalty: f64,
+}
+
+impl AllocCache {
+    /// Re-derive the cache from a freshly staged stream snapshot.
+    pub fn rebuild(&mut self, link: &Link, streams: &[StreamState]) {
+        let rtt = link.params.rtt;
+        self.caps.clear();
+        self.caps
+            .extend(streams.iter().map(|s| s.window_rate(rtt).as_bytes_per_sec()));
+        self.uniform_cap = match self.caps.split_first() {
+            Some((&first, rest)) if rest.iter().all(|&c| c == first) => Some(first),
+            _ => None,
+        };
+        self.penalty = link.params.overload_penalty(streams.len());
+    }
+
+    /// Allocate one tick's goodput at the current link budget — the cached
+    /// equivalent of [`share_goodput_into`] over the streams this cache was
+    /// rebuilt from.
+    pub fn alloc_into(&self, link: &Link, out: &mut Vec<f64>) {
+        out.clear();
+        let n = self.caps.len();
+        if n == 0 {
+            return;
+        }
+        let avail = link.available().as_bytes_per_sec();
+        let budget = avail * self.penalty;
+
+        if let Some(cap) = self.uniform_cap {
+            // Reference loop, round 1: share = budget / n. With equal caps
+            // either every stream freezes at its cap (`cap <= share`) or
+            // nobody freezes and everyone absorbs the equal share; a
+            // sub-epsilon budget zero-fills before the first round.
+            if budget <= 1e-9 {
+                out.resize(n, 0.0);
+            } else {
+                let share = budget / n as f64;
+                out.resize(n, if cap <= share { cap } else { share });
+            }
+            return;
+        }
+
+        // Mixed caps (slow-start transients): the reference freeze loop,
+        // verbatim, reading cached caps instead of recomputing them.
+        out.resize(n, -1.0);
+        let alloc = out;
+        let mut remaining = budget;
+        let mut active = n;
+        for _ in 0..n {
+            if active == 0 || remaining <= 1e-9 {
+                break;
+            }
+            let share = remaining / active as f64;
+            let mut newly_frozen = 0;
+            for (&cap, a) in self.caps.iter().zip(alloc.iter_mut()) {
+                if *a >= 0.0 {
+                    continue; // frozen
+                }
+                if cap <= share {
+                    *a = cap;
+                    newly_frozen += 1;
+                    remaining -= cap;
+                    active -= 1;
+                }
+            }
+            if newly_frozen == 0 {
+                for a in alloc.iter_mut() {
+                    if *a < 0.0 {
+                        *a = share;
+                    }
+                }
+                break;
+            }
+            if remaining < 0.0 {
+                remaining = 0.0;
+            }
+        }
+        for a in alloc.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
         }
     }
 }
@@ -256,6 +369,64 @@ mod tests {
         for (s, r) in streams.iter().zip(&rates) {
             let cap = s.window_rate(l.params.rtt);
             assert!(r.as_bits_per_sec() <= cap.as_bits_per_sec() * (1.0 + 1e-9));
+        }
+    }
+
+    fn assert_alloc_cache_matches(link: &Link, streams: &[StreamState]) {
+        let mut reference = Vec::new();
+        share_goodput_into(link, streams, &mut reference);
+        let mut cache = AllocCache::default();
+        cache.rebuild(link, streams);
+        let mut cached = Vec::new();
+        cache.alloc_into(link, &mut cached);
+        assert_eq!(reference.len(), cached.len());
+        for (i, (r, c)) in reference.iter().zip(&cached).enumerate() {
+            assert_eq!(
+                r.to_bits(),
+                c.to_bits(),
+                "stream {i}: reference {r} vs cached {c} ({} streams)",
+                streams.len()
+            );
+        }
+    }
+
+    #[test]
+    fn alloc_cache_matches_reference_on_uniform_caps() {
+        let base = link();
+        for n in [1usize, 2, 4, 5, 9, 64, 200] {
+            for bg in [0.0, 0.08, 0.5, 0.95, 1.0] {
+                let mut l = base.clone();
+                l.bg = BackgroundTraffic::constant(bg.min(0.95));
+                assert_alloc_cache_matches(&l, &warm_streams(&l, n));
+            }
+        }
+        assert_alloc_cache_matches(&base, &[]);
+    }
+
+    #[test]
+    fn alloc_cache_matches_reference_on_mixed_caps() {
+        // Slow-start transients: a pseudo-random mix of cold, part-ramped
+        // and warm windows across budgets, including budget-exhausted and
+        // multi-round freeze cases.
+        let base = link();
+        let mut rng = crate::rng::Xoshiro256::seeded(0x5eed);
+        for trial in 0..200 {
+            let n = 1 + (rng.next_u64() % 40) as usize;
+            let mut streams = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut s = StreamState::new(base.params.avg_win);
+                // Ramp a pseudo-random number of RTTs (0 → cold, many → warm).
+                for _ in 0..(rng.next_u64() % 12) {
+                    s.tick(base.params.rtt, base.params.rtt);
+                }
+                streams.push(s);
+            }
+            let mut l = base.clone();
+            l.bg = BackgroundTraffic::constant(0.95 * rng.next_f64());
+            assert_alloc_cache_matches(&l, &streams);
+            if trial == 0 {
+                assert!(streams.iter().any(|s| s.in_slow_start()));
+            }
         }
     }
 

@@ -21,5 +21,5 @@ mod link;
 mod stream;
 
 pub use background::{BackgroundTraffic, BandwidthEvent};
-pub use link::{share_goodput, share_goodput_into, Link, LinkParams};
+pub use link::{share_goodput, share_goodput_into, AllocCache, Link, LinkParams};
 pub use stream::StreamState;

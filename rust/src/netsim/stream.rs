@@ -54,17 +54,43 @@ impl StreamState {
         Rate::from_bytes_per_sec(self.window.as_f64() / rtt.as_secs())
     }
 
+    /// The per-tick slow-start multiplier `2^(min(dt/rtt, 32))` — a pure
+    /// function of the (tick, RTT) pair, so epoch-cached steppers compute
+    /// it once per tick instead of calling `powf` per stream. `None` when
+    /// `rtt` is zero (windows hold still, exactly as [`Self::tick`] does).
+    ///
+    /// The `min(32)` clamp sits *inside* the cached exponent: a cached
+    /// factor therefore reproduces [`Self::tick`] bit-for-bit, including
+    /// the tick on which a stream lands on `avg_win` and leaves slow start.
+    pub fn growth_factor(dt: SimDuration, rtt: Rtt) -> Option<f64> {
+        if rtt.is_zero() {
+            return None;
+        }
+        let growth = (dt.as_secs() / rtt.as_secs()).min(32.0); // avoid inf pow
+        Some(2f64.powf(growth))
+    }
+
     /// Advance the window by `dt`: during slow start the window doubles
     /// once per RTT (continuous-time equivalent: `w *= 2^(dt/rtt)`), capped
     /// at `avg_win`, after which the stream holds steady (the paper's
     /// testbeds are loss-managed by the overload penalty at the link level,
     /// not per-stream AIMD).
     pub fn tick(&mut self, dt: SimDuration, rtt: Rtt) {
-        if !self.slow_start || rtt.is_zero() {
+        if let Some(factor) = Self::growth_factor(dt, rtt) {
+            self.tick_cached(factor);
+        }
+    }
+
+    /// [`Self::tick`] with the growth factor precomputed by
+    /// [`Self::growth_factor`]. Exiting slow start lands exactly on
+    /// `avg_win` and flips `slow_start` on the same tick as the uncached
+    /// path: both compare the identical product `window * factor` against
+    /// `avg_win`.
+    pub fn tick_cached(&mut self, growth_factor: f64) {
+        if !self.slow_start {
             return;
         }
-        let growth = (dt.as_secs() / rtt.as_secs()).min(32.0); // avoid inf pow
-        let w = self.window.as_f64() * 2f64.powf(growth);
+        let w = self.window.as_f64() * growth_factor;
         if w >= self.avg_win.as_f64() {
             self.window = self.avg_win;
             self.slow_start = false;
@@ -151,5 +177,66 @@ mod tests {
         let mut s = StreamState::warm(Bytes::from_mb(4.0));
         s.tick(SimDuration::from_secs(1.0), rtt());
         assert_eq!(s.window(), Bytes::from_mb(4.0));
+    }
+
+    #[test]
+    fn cached_growth_matches_tick_bit_for_bit() {
+        // Every (dt, rtt) pair — including dt/rtt > 32 where the clamp
+        // engages — must evolve identically through the cached factor,
+        // window bits and slow-start flag alike, on every tick.
+        for dt_ms in [1.0, 10.0, 100.0, 1000.0, 5000.0] {
+            for rtt_ms in [1.0, 32.0, 44.0, 100.0] {
+                let dt = SimDuration::from_millis(dt_ms);
+                let rtt = SimDuration::from_millis(rtt_ms);
+                let mut naive = StreamState::new(Bytes::from_mb(4.0));
+                let mut cached = StreamState::new(Bytes::from_mb(4.0));
+                let factor = StreamState::growth_factor(dt, rtt).unwrap();
+                // The ramp is ~8.2 RTTs (log2 of 4 MB / INIT_WINDOW); run
+                // comfortably past it for the slowest (dt ≪ rtt) pairs.
+                let ticks = (10.0 * rtt_ms / dt_ms).ceil() as usize + 4;
+                for step in 0..ticks {
+                    naive.tick(dt, rtt);
+                    cached.tick_cached(factor);
+                    assert_eq!(
+                        naive.window().as_f64().to_bits(),
+                        cached.window().as_f64().to_bits(),
+                        "window diverged at step {step} (dt {dt_ms} ms, rtt {rtt_ms} ms)"
+                    );
+                    assert_eq!(
+                        naive.in_slow_start(),
+                        cached.in_slow_start(),
+                        "slow-start flag diverged at step {step} (dt {dt_ms} ms, rtt {rtt_ms} ms)"
+                    );
+                }
+                assert!(!naive.in_slow_start(), "{ticks} ticks must finish the ramp");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_growth_lands_exactly_on_avg_win() {
+        // avg_win = 8 × INIT_WINDOW and dt = rtt (factor exactly 2.0):
+        // after three doublings the product equals avg_win exactly, so the
+        // `>=` branch fires and both paths exit slow start that tick.
+        let avg = Bytes::new(8.0 * INIT_WINDOW);
+        let mut s = StreamState::new(avg);
+        let factor = StreamState::growth_factor(rtt(), rtt()).unwrap();
+        assert_eq!(factor, 2.0);
+        s.tick_cached(factor);
+        s.tick_cached(factor);
+        assert!(s.in_slow_start());
+        s.tick_cached(factor);
+        assert!(!s.in_slow_start(), "must exit on the exact-landing tick");
+        assert_eq!(s.window(), avg);
+    }
+
+    #[test]
+    fn zero_rtt_has_no_growth_factor() {
+        assert!(StreamState::growth_factor(rtt(), SimDuration::ZERO).is_none());
+        let mut s = StreamState::new(Bytes::from_mb(4.0));
+        let w0 = s.window();
+        s.tick(rtt(), SimDuration::ZERO);
+        assert_eq!(s.window(), w0);
+        assert!(s.in_slow_start());
     }
 }

@@ -19,4 +19,4 @@ mod model;
 mod meter;
 
 pub use meter::{EnergySample, NodeMeter, RaplMeter};
-pub use model::{standard_power, PowerModel, PowerParams};
+pub use model::{standard_power, OpPointPower, PowerModel, PowerParams};

@@ -67,6 +67,24 @@ impl PowerModel {
         )
     }
 
+    /// Freeze the power computation at one (cores, frequency) operating
+    /// point — the per-tick inputs reduce to `utilization` and traffic.
+    /// Settings move only at tuning/arbitration timeouts (thousands of
+    /// ticks apart), so the epoch-cached stepper rebuilds this once per
+    /// setting instead of re-deriving voltage and idle draw every tick.
+    pub fn at(&self, active_cores: u32, f: Freq) -> OpPointPower {
+        OpPointPower {
+            cores: active_cores as f64,
+            f_ghz: f.as_ghz(),
+            v: self.voltage(f),
+            per_core_idle: self.params.core_idle_base_w
+                + self.params.core_idle_per_ghz_w * f.as_ghz(),
+            kappa: self.params.dyn_kappa,
+            static_w: self.params.pkg_static_w,
+            dram_w_per_gbs: self.params.dram_w_per_gbs,
+        }
+    }
+
     /// Power with every core active at max frequency and full load —
     /// the worst case (and roughly the TDP this model implies).
     pub fn max_power(&self) -> Power {
@@ -76,6 +94,38 @@ impl PowerModel {
     /// Idle package power at the lowest setting.
     pub fn floor_power(&self) -> Power {
         self.package_power(1, self.spec.min_freq(), 0.0, 0.0)
+    }
+}
+
+/// Package-power coefficients frozen at one (active cores, frequency)
+/// operating point; see [`PowerModel::at`].
+///
+/// [`Self::power`] replays [`PowerModel::package_power`]'s arithmetic in
+/// the identical order with the per-op-point subexpressions (voltage,
+/// per-core idle draw) cached, so results are **bit-identical** — pinned
+/// by `cached_op_point_matches_package_power` below. Keep the two bodies
+/// in lockstep when editing either.
+#[derive(Debug, Clone, Copy)]
+pub struct OpPointPower {
+    cores: f64,
+    f_ghz: f64,
+    v: f64,
+    per_core_idle: f64,
+    kappa: f64,
+    static_w: f64,
+    dram_w_per_gbs: f64,
+}
+
+impl OpPointPower {
+    /// Package power at the frozen operating point for this tick's
+    /// utilization and traffic.
+    pub fn power(&self, utilization: f64, bytes_per_sec: f64) -> Power {
+        let util = utilization.clamp(0.0, 1.0);
+        let per_core_dyn = util * self.kappa * self.v * self.v * self.f_ghz;
+        let dram = self.dram_w_per_gbs * (bytes_per_sec / 1e9);
+        Power::from_watts(
+            self.static_w + self.cores * (self.per_core_idle + per_core_dyn) + dram,
+        )
     }
 }
 
@@ -178,6 +228,32 @@ mod tests {
         let m = standard_power(&haswell_server());
         assert_eq!(m.voltage(Freq::from_ghz(0.1)), m.params.v_min);
         assert_eq!(m.voltage(Freq::from_ghz(9.9)), m.params.v_max);
+    }
+
+    #[test]
+    fn cached_op_point_matches_package_power() {
+        // The epoch-cached coefficients must reproduce `package_power`
+        // bit-for-bit across the whole operating envelope.
+        for spec in [haswell_server(), broadwell_client(), bloomfield_client()] {
+            let m = standard_power(&spec);
+            for cores in 1..=spec.num_cores {
+                for &f in &spec.freq_levels.clone() {
+                    let op = m.at(cores, f);
+                    for util in [0.0, 0.13, 0.5, 0.97, 1.0, 3.7] {
+                        for bps in [0.0, 12.5e6, 1.1e9] {
+                            let fresh = m.package_power(cores, f, util, bps);
+                            let cached = op.power(util, bps);
+                            assert_eq!(
+                                fresh.as_watts().to_bits(),
+                                cached.as_watts().to_bits(),
+                                "{} {cores} cores @ {f} util {util} bps {bps}",
+                                spec.name
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,9 +8,15 @@
 //! HLO text — not a serialized `HloModuleProto` — is the interchange
 //! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! The PJRT client itself needs the external `xla` crate, which the
+//! offline build does not vendor, so it is gated behind the **`pjrt`**
+//! feature (see `Cargo.toml`). Without it, [`Executable::load_hlo_text`]
+//! returns an error and every consumer falls back to the bit-compatible
+//! Rust oracle ([`crate::predictor::Backend::Oracle`]) — the default
+//! build stays fully functional.
 
-use anyhow::{Context, Result};
-use std::path::Path;
+use anyhow::Result;
 
 /// A dense f32 tensor with row-major shape, the runtime's argument type.
 #[derive(Debug, Clone, PartialEq)]
@@ -45,80 +51,124 @@ impl ArrayF32 {
     }
 }
 
-/// Thread-local PJRT CPU client: the `xla` crate's client is `Rc`-based
-/// (not `Send`), so each session thread owns one. Creation is cheap next
-/// to compilation, and executables are compiled once per [`Executable`].
-fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
-    thread_local! {
-        static CLIENT: once_cell::unsync::OnceCell<xla::PjRtClient> =
-            const { once_cell::unsync::OnceCell::new() };
-    }
-    CLIENT.with(|cell| {
-        let client = cell.get_or_try_init(|| {
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")
-        })?;
-        f(client)
-    })
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::ArrayF32;
+    use anyhow::{Context, Result};
+    use std::path::Path;
 
-/// A compiled XLA executable loaded from an HLO-text artifact.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    path: String,
-}
-
-impl std::fmt::Debug for Executable {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Executable").field("path", &self.path).finish()
-    }
-}
-
-impl Executable {
-    /// Load HLO text from `path` and compile it on the CPU client.
-    pub fn load_hlo_text(path: impl AsRef<Path>) -> Result<Self> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-UTF8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text at {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = with_client(|client| {
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))
-        })?;
-        Ok(Executable { exe, path: path.display().to_string() })
-    }
-
-    /// Execute with f32 inputs; returns the elements of the output tuple
-    /// as flat f32 buffers (jax lowers with `return_tuple=True`).
-    pub fn run_f32(&self, inputs: &[ArrayF32]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for a in inputs {
-            let shape: Vec<i64> = a.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(&a.data)
-                .reshape(&shape)
-                .with_context(|| format!("reshaping input to {:?}", a.shape))?;
-            literals.push(lit);
+    /// Thread-local PJRT CPU client: the `xla` crate's client is `Rc`-based
+    /// (not `Send`), so each session thread owns one. Creation is cheap next
+    /// to compilation, and executables are compiled once per [`Executable`].
+    fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+        thread_local! {
+            static CLIENT: once_cell::unsync::OnceCell<xla::PjRtClient> =
+                const { once_cell::unsync::OnceCell::new() };
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.path))?;
-        let out = result[0][0].to_literal_sync().context("fetching result buffer")?;
-        // Unpack the tuple: jax's return_tuple=True wraps outputs.
-        let elements = out.to_tuple().context("untupling result")?;
-        let mut vecs = Vec::with_capacity(elements.len());
-        for e in elements {
-            vecs.push(e.to_vec::<f32>().context("reading f32 output")?);
-        }
-        Ok(vecs)
+        CLIENT.with(|cell| {
+            let client = cell.get_or_try_init(|| {
+                xla::PjRtClient::cpu().context("creating PJRT CPU client")
+            })?;
+            f(client)
+        })
     }
 
-    pub fn path(&self) -> &str {
-        &self.path
+    /// A compiled XLA executable loaded from an HLO-text artifact.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        path: String,
+    }
+
+    impl std::fmt::Debug for Executable {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Executable").field("path", &self.path).finish()
+        }
+    }
+
+    impl Executable {
+        /// Load HLO text from `path` and compile it on the CPU client.
+        pub fn load_hlo_text(path: impl AsRef<Path>) -> Result<Self> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-UTF8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text at {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = with_client(|client| {
+                client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", path.display()))
+            })?;
+            Ok(Executable { exe, path: path.display().to_string() })
+        }
+
+        /// Execute with f32 inputs; returns the elements of the output tuple
+        /// as flat f32 buffers (jax lowers with `return_tuple=True`).
+        pub fn run_f32(&self, inputs: &[ArrayF32]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for a in inputs {
+                let shape: Vec<i64> = a.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(&a.data)
+                    .reshape(&shape)
+                    .with_context(|| format!("reshaping input to {:?}", a.shape))?;
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.path))?;
+            let out = result[0][0].to_literal_sync().context("fetching result buffer")?;
+            // Unpack the tuple: jax's return_tuple=True wraps outputs.
+            let elements = out.to_tuple().context("untupling result")?;
+            let mut vecs = Vec::with_capacity(elements.len());
+            for e in elements {
+                vecs.push(e.to_vec::<f32>().context("reading f32 output")?);
+            }
+            Ok(vecs)
+        }
+
+        pub fn path(&self) -> &str {
+            &self.path
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::ArrayF32;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// Stub standing in for the PJRT executable when the `pjrt` feature is
+    /// off. Loading always fails, so no instance can exist; consumers take
+    /// their oracle fallback path.
+    #[derive(Debug)]
+    pub struct Executable {
+        path: String,
+        /// Uninhabited so the stub can never be constructed.
+        never: std::convert::Infallible,
+    }
+
+    impl Executable {
+        pub fn load_hlo_text(path: impl AsRef<Path>) -> Result<Self> {
+            bail!(
+                "built without the `pjrt` feature: cannot load {} (the \
+                 predictor falls back to the pure-Rust oracle)",
+                path.as_ref().display()
+            )
+        }
+
+        pub fn run_f32(&self, _inputs: &[ArrayF32]) -> Result<Vec<Vec<f32>>> {
+            match self.never {}
+        }
+
+        pub fn path(&self) -> &str {
+            &self.path
+        }
+    }
+}
+
+pub use backend::Executable;
 
 /// Default artifact location, overridable with `GREENDT_PREDICTOR`.
 pub fn default_predictor_path() -> String {
@@ -145,5 +195,6 @@ mod tests {
     }
 
     // Artifact-backed execution is covered by the integration test
-    // `rust/tests/predictor_parity.rs` (requires `make artifacts`).
+    // `rust/tests/predictor_parity.rs` (requires `make artifacts` and a
+    // build with `--features pjrt`).
 }

@@ -13,10 +13,28 @@ use super::host::{Host, HostTick};
 use super::{Telemetry, TickStats};
 use crate::config::Testbed;
 use crate::cpusim::{CpuDemand, CpuState};
-use crate::netsim::{Link, StreamState};
+use crate::netsim::{AllocCache, Link, StreamState};
 use crate::rng::{self, Xoshiro256};
 use crate::transfer::{TickOutput, TransferEngine};
 use crate::units::{Bytes, Energy, Rate, SimDuration, SimTime};
+
+/// The stepper's epoch state: between structural events (channel churn,
+/// tuning-knob changes, admissions/departures, slot completions,
+/// slow-start transitions) the staged stream snapshot in the simulation's
+/// scratch buffer — and the allocation cache derived from it — are
+/// constant, so ticks can skip restaging and re-deriving them entirely.
+/// See ARCHITECTURE.md §Perf for the invalidation rules.
+#[derive(Debug, Clone, Default)]
+struct EpochCache {
+    /// The staged snapshot (slot spans + [`AllocCache`]) is current and
+    /// every staged window is warm.
+    valid: bool,
+    /// Per-slot (active, engine generation) at the last staging; any
+    /// mismatch — a knob change, channel churn, admission or departure —
+    /// ends the epoch.
+    stamps: Vec<(bool, u64)>,
+    alloc: AllocCache,
+}
 
 /// One tenant session on the host: its transfer engine plus per-session
 /// telemetry accumulators and the energy attributed to it.
@@ -113,6 +131,7 @@ pub struct Simulation {
     scratch_streams: Vec<StreamState>,
     scratch_rates: Vec<f64>,
     last_world_stats: TickStats,
+    epoch: EpochCache,
 }
 
 impl Simulation {
@@ -163,6 +182,7 @@ impl Simulation {
             scratch_streams: Vec::new(),
             scratch_rates: Vec::new(),
             last_world_stats: TickStats::default(),
+            epoch: EpochCache::default(),
         }
     }
 
@@ -245,41 +265,101 @@ impl Simulation {
         self.last_world_stats
     }
 
+    /// True when the staged snapshot from the last tick is still exactly
+    /// what restaging would produce: the epoch is warm (no slow-start
+    /// windows) and no slot changed activity or structure since.
+    fn epoch_stamps_match(&self) -> bool {
+        self.epoch.stamps.len() == self.slots.len()
+            && self
+                .slots
+                .iter()
+                .zip(&self.epoch.stamps)
+                .all(|(s, st)| s.active == st.0 && s.engine.generation() == st.1)
+    }
+
+    fn record_epoch_stamps(&mut self) {
+        self.epoch.stamps.clear();
+        self.epoch
+            .stamps
+            .extend(self.slots.iter().map(|s| (s.active, s.engine.generation())));
+    }
+
     /// Advance the world by one tick. Returns aggregate (host-level)
     /// statistics; per-session stats are on each [`SessionSlot`].
+    ///
+    /// This is the epoch-cached fast path: within an epoch (all windows
+    /// warm, no structural change) it reuses the staged stream snapshot
+    /// and the cached allocation instead of re-deriving them. Outcomes
+    /// are bit-identical to [`Self::step_reference`] — pinned by the
+    /// stepper-equivalence property tests.
     pub fn step(&mut self) -> TickStats {
+        self.step_inner(false)
+    }
+
+    /// The pre-epoch naive stepper: restages every tenant's streams and
+    /// re-runs the full max-min allocation every tick. Kept as the oracle
+    /// the epoch-cached fast path is validated (and benchmarked) against.
+    pub fn step_reference(&mut self) -> TickStats {
+        self.step_inner(true)
+    }
+
+    fn step_inner(&mut self, force_naive: bool) -> TickStats {
         let dt = self.tick;
         self.link.tick(self.now, dt, &mut self.rng);
+
+        let reuse = !force_naive && self.epoch.valid && self.epoch_stamps_match();
 
         // End-system achievable throughput at current settings, using the
         // previous tick's aggregate request rate and the current total
         // stream count as the overhead estimate (one-step fixed point;
-        // error is O(tick)).
+        // error is O(tick)). Within an epoch the staged spans carry the
+        // same stream counts the engines would report.
         let mut requests = 0.0;
         let mut total_streams = 0usize;
         for s in &self.slots {
             if s.active {
                 requests += s.last_requests_per_sec;
-                total_streams += s.engine.open_streams();
+                total_streams += if reuse {
+                    s.stream_end - s.stream_start
+                } else {
+                    s.engine.open_streams()
+                };
             }
         }
         let cap = self.host.capacity_bytes_per_sec(requests, total_streams as f64);
 
         // Pool every active tenant's streams and run one global bottleneck
         // allocation, so cross-session contention and the overload knee
-        // act on the true total (scratch reused; no allocation here).
+        // act on the true total (scratch reused; no allocation here). An
+        // unbroken epoch skips the restage: the snapshot is unchanged.
         let rtt = self.link.params.rtt;
         let mut flat = std::mem::take(&mut self.scratch_streams);
-        flat.clear();
-        for s in &mut self.slots {
-            if s.active {
-                s.stream_start = flat.len();
-                s.engine.stage_streams(dt, rtt, &mut flat);
-                s.stream_end = flat.len();
+        if !reuse {
+            flat.clear();
+            let mut slow_start_streams = 0usize;
+            for s in &mut self.slots {
+                if s.active {
+                    s.stream_start = flat.len();
+                    slow_start_streams += s.engine.stage_streams(dt, rtt, &mut flat);
+                    s.stream_end = flat.len();
+                }
+            }
+            if force_naive {
+                self.epoch.valid = false;
+            } else {
+                self.epoch.alloc.rebuild(&self.link, &flat);
+                // A warm epoch begins once every staged window sits at
+                // steady state; it survives until a structural change.
+                self.epoch.valid = slow_start_streams == 0;
+                self.record_epoch_stamps();
             }
         }
         let mut rates = std::mem::take(&mut self.scratch_rates);
-        crate::netsim::share_goodput_into(&self.link, &flat, &mut rates);
+        if force_naive {
+            crate::netsim::share_goodput_into(&self.link, &flat, &mut rates);
+        } else {
+            self.epoch.alloc.alloc_into(&self.link, &mut rates);
+        }
         let staged = flat.len();
 
         // Hand each tenant its rate slice and its stream-proportional
@@ -289,6 +369,7 @@ impl Simulation {
         let mut requests_out = 0.0;
         let mut open_streams = 0usize;
         let mut active_count = 0u32;
+        let mut session_completed = false;
         for s in &mut self.slots {
             if !s.active {
                 continue;
@@ -311,9 +392,17 @@ impl Simulation {
             goodput_bps += out.goodput.as_bytes_per_sec();
             requests_out += out.requests_per_sec;
             open_streams += out.open_streams;
+            if s.engine.is_done() {
+                session_completed = true;
+            }
         }
         self.scratch_streams = flat;
         self.scratch_rates = rates;
+        // Moving bytes can retire partitions, which reassigns or clears
+        // channels (a generation bump) — that ends the epoch.
+        if self.epoch.valid && !self.epoch_stamps_match() {
+            self.epoch.valid = false;
+        }
 
         // CPU loads and power implied by the aggregate goodput.
         let demand = CpuDemand {
@@ -354,6 +443,7 @@ impl Simulation {
             client_power: ht.client_power,
             server_power: ht.server_power,
             open_streams,
+            session_completed,
         };
         self.last_world_stats = stats;
         stats
@@ -619,6 +709,84 @@ mod tests {
         assert_eq!(sim.slot(slot).engine.remaining(), sim.slot(slot).engine.total());
         assert_eq!(sim.slot(slot).attributed_energy(), Energy::ZERO);
         assert!(!sim.is_done(), "a pending session keeps the world unfinished");
+    }
+
+    fn assert_stats_bits_eq(a: &TickStats, b: &TickStats, tick: usize) {
+        assert_eq!(a.moved.as_f64().to_bits(), b.moved.as_f64().to_bits(), "moved @ {tick}");
+        assert_eq!(
+            a.goodput.as_bytes_per_sec().to_bits(),
+            b.goodput.as_bytes_per_sec().to_bits(),
+            "goodput @ {tick}"
+        );
+        assert_eq!(a.client_load.to_bits(), b.client_load.to_bits(), "load @ {tick}");
+        assert_eq!(
+            a.client_power.as_watts().to_bits(),
+            b.client_power.as_watts().to_bits(),
+            "power @ {tick}"
+        );
+        assert_eq!(a.open_streams, b.open_streams, "streams @ {tick}");
+        assert_eq!(a.session_completed, b.session_completed, "completed @ {tick}");
+    }
+
+    #[test]
+    fn epoch_stepper_matches_reference_bit_for_bit() {
+        // Same world, one copy driven by the epoch-cached stepper and one
+        // by the naive reference; every tick's stats and the final energy
+        // books must carry identical bits, across slow-start ramps and a
+        // mid-run redistribution that breaks the epoch.
+        let mut fast = make_sim("chameleon", "mixed", 8);
+        let mut naive = fast.clone();
+        for tick in 0..400 {
+            if tick == 150 {
+                for sim in [&mut fast, &mut naive] {
+                    sim.engine_mut().update_weights();
+                    sim.engine_mut().set_num_channels(12);
+                }
+            }
+            let a = fast.step();
+            let b = naive.step_reference();
+            assert_stats_bits_eq(&a, &b, tick);
+        }
+        assert_eq!(
+            fast.client_energy().as_joules().to_bits(),
+            naive.client_energy().as_joules().to_bits()
+        );
+        assert_eq!(
+            fast.server_energy().as_joules().to_bits(),
+            naive.server_energy().as_joules().to_bits()
+        );
+        assert_eq!(fast.engine().remaining(), naive.engine().remaining());
+    }
+
+    #[test]
+    fn epoch_stepper_matches_reference_across_admissions() {
+        // Fleet worlds: staggered admissions and a mid-run departure are
+        // epoch boundaries; outcomes must stay bit-identical through them.
+        let mut fast = make_fleet_sim(3, 4);
+        let mut naive = fast.clone();
+        // Park tenant 2 and re-admit it later to exercise (de)activation.
+        fast.deactivate_slot(2);
+        naive.deactivate_slot(2);
+        for tick in 0..300 {
+            if tick == 120 {
+                fast.activate_slot(2);
+                naive.activate_slot(2);
+            }
+            if tick == 220 {
+                fast.deactivate_slot(1);
+                naive.deactivate_slot(1);
+            }
+            let a = fast.step();
+            let b = naive.step_reference();
+            assert_stats_bits_eq(&a, &b, tick);
+        }
+        for i in 0..3 {
+            assert_eq!(
+                fast.slot(i).attributed_energy().as_joules().to_bits(),
+                naive.slot(i).attributed_energy().as_joules().to_bits(),
+                "tenant {i} energy attribution"
+            );
+        }
     }
 
     #[test]

@@ -68,6 +68,11 @@ pub struct FleetConfig {
     pub bandwidth_events: Vec<BandwidthEvent>,
     /// GreenDT extension: Algorithm-3 scaling on the *server* too.
     pub server_scaling: bool,
+    /// Drive the world with the naive per-tick reference stepper
+    /// ([`Simulation::step_reference`]) instead of the epoch-cached fast
+    /// path — the oracle the stepper-equivalence tests pin against, and
+    /// the baseline `bench_hotpath` reports speedup over.
+    pub reference_stepper: bool,
 }
 
 impl FleetConfig {
@@ -84,6 +89,7 @@ impl FleetConfig {
             record_timeline: false,
             bandwidth_events: Vec::new(),
             server_scaling: false,
+            reference_stepper: false,
         }
     }
 
@@ -279,12 +285,44 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetOutcome {
             }
         }
 
-        sim.step();
-
+        // Channel counts only move at the driver-level events that bound
+        // this segment (tuning, arbitration, admission) or drop to zero on
+        // completion, so sampling the peak once per segment equals the
+        // old per-tick max.
         for t in tenants.iter_mut() {
             if t.admitted && t.finished_at.is_none() {
                 t.peak_channels =
                     t.peak_channels.max(sim.slot(t.slot).engine.num_channels());
+            }
+        }
+
+        // Event horizon: the earliest instant any driver-level event can
+        // fire. Between now and then every tick is pure stepping, so run
+        // a tight inner loop that skips the per-tick deadline re-checks
+        // the old driver made. Completions end a segment early (the
+        // departure scan must run on exactly the tick a tenant finishes,
+        // as it would per-tick). The break comparison is the identical
+        // `now + 1e-9 >= deadline` the per-tick scans below make, so no
+        // event fires earlier or later than it did pre-horizon.
+        let mut horizon = cfg.max_sim_time.as_secs();
+        for (t, spec) in tenants.iter().zip(&cfg.tenants) {
+            if !t.admitted {
+                horizon = horizon.min(spec.arrive_at.as_secs());
+            } else if t.finished_at.is_none() {
+                horizon = horizon.min(t.next_timeout);
+            }
+        }
+        if policy.is_some() {
+            horizon = horizon.min(next_fleet);
+        }
+        loop {
+            let stats =
+                if cfg.reference_stepper { sim.step_reference() } else { sim.step() };
+            if stats.session_completed
+                || sim.now.as_secs() + 1e-9 >= horizon
+                || sim.now.as_secs() >= cfg.max_sim_time.as_secs()
+            {
+                break;
             }
         }
 

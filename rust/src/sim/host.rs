@@ -11,7 +11,7 @@
 use crate::config::Testbed;
 use crate::coordinator::load_control::LoadThresholds;
 use crate::cpusim::{CpuDemand, CpuState};
-use crate::power::{standard_power, NodeMeter, PowerModel, RaplMeter};
+use crate::power::{standard_power, NodeMeter, OpPointPower, PowerModel, RaplMeter};
 use crate::units::{Bytes, Energy, Power, Rate, SimDuration, SimTime};
 
 /// Fraction of CPU capacity the transfer application can actually use
@@ -51,6 +51,56 @@ pub struct FleetView {
     pub avg_power: Power,
 }
 
+/// Per-tick quantities that depend only on a CPU's (cores, frequency)
+/// operating point. Settings move at tuning/arbitration timeouts —
+/// thousands of ticks apart — while these subexpressions were being
+/// re-derived every tick; the cache is keyed by (cores, P-state index)
+/// and rebuilt lazily when the setting moves. All cached values are the
+/// identical subexpressions the uncached formulas compute, so results
+/// are bit-for-bit unchanged (pinned by `op_point_cache_matches_fresh_
+/// computation` below).
+#[derive(Debug, Clone)]
+struct OpPointCache {
+    key: (u32, usize),
+    /// `CpuSpec::cycles_capacity(cores, freq)` — `load`'s denominator.
+    cap_cycles: f64,
+    /// `cycles_capacity × MAX_APP_UTILIZATION` — the budget inside
+    /// `CpuSpec::achievable_bytes_per_sec`.
+    cap_cycles_util: f64,
+    power: OpPointPower,
+}
+
+impl OpPointCache {
+    fn build(state: &CpuState, model: &PowerModel) -> OpPointCache {
+        let cores = state.active_cores();
+        let f = state.freq();
+        let cap = state.spec().cycles_capacity(cores, f);
+        OpPointCache {
+            key: (cores, state.freq_index()),
+            cap_cycles: cap,
+            cap_cycles_util: cap * MAX_APP_UTILIZATION,
+            power: model.at(cores, f),
+        }
+    }
+
+    /// `CpuSpec::load` with the capacity denominator cached.
+    fn load(&self, state: &CpuState, demand: &CpuDemand) -> f64 {
+        if self.cap_cycles <= 0.0 {
+            return f64::INFINITY;
+        }
+        state.spec().cycles_demanded(demand) / self.cap_cycles
+    }
+
+    /// `CpuSpec::achievable_bytes_per_sec` at `MAX_APP_UTILIZATION` with
+    /// the derated cycle budget cached.
+    fn achievable(&self, state: &CpuState, requests_per_sec: f64, open_streams: f64) -> f64 {
+        let spec = state.spec();
+        let overhead = requests_per_sec * spec.cycles_per_request
+            + open_streams * spec.cycles_per_stream_sec;
+        ((self.cap_cycles_util - overhead) / spec.cycles_per_byte).max(0.0)
+    }
+}
+
 /// The shared client machine (plus its peer server) that all sessions of
 /// one simulated world run on.
 #[derive(Debug, Clone)]
@@ -79,6 +129,11 @@ pub struct Host {
     /// When the server policy last stepped — on a multi-tenant host the
     /// per-slot drains would otherwise step it N× per interval.
     last_server_autoscale: SimTime,
+    // Lazily refreshed (cores, P-state) operating-point caches; `None`
+    // until first use, rebuilt whenever the public `client`/`server`
+    // settings move (checked by key every tick — two integer compares).
+    client_op: Option<OpPointCache>,
+    server_op: Option<OpPointCache>,
     // Fleet-interval accumulators (reset by `drain_fleet_interval`; unused
     // and unbounded-but-cheap in single-session worlds).
     fleet_moved: Bytes,
@@ -104,6 +159,8 @@ impl Host {
             wall_meter: testbed.wall_meter,
             server_autoscale: false,
             last_server_autoscale: SimTime::ZERO,
+            client_op: None,
+            server_op: None,
             fleet_moved: Bytes::ZERO,
             fleet_time: SimDuration::ZERO,
             fleet_load: 0.0,
@@ -137,23 +194,35 @@ impl Host {
         &self.client_power
     }
 
+    /// Rebuild the operating-point caches if either CPU setting moved
+    /// since the last tick (tuning algorithms and fleet policies mutate
+    /// the public `client`/`server` fields directly, so the caches key on
+    /// the setting rather than relying on invalidation hooks).
+    fn refresh_op_caches(&mut self) {
+        let ckey = (self.client.active_cores(), self.client.freq_index());
+        if self.client_op.as_ref().map(|c| c.key) != Some(ckey) {
+            self.client_op = Some(OpPointCache::build(&self.client, &self.client_power));
+        }
+        let skey = (self.server.active_cores(), self.server.freq_index());
+        if self.server_op.as_ref().map(|c| c.key) != Some(skey) {
+            self.server_op = Some(OpPointCache::build(&self.server, &self.server_power));
+        }
+    }
+
     /// End-system throughput ceiling (bytes/s) at the current CPU
     /// settings, given the aggregate request rate and open-stream count of
     /// every session on the host.
-    pub fn capacity_bytes_per_sec(&self, requests_per_sec: f64, open_streams: f64) -> f64 {
-        let client = self.client.spec().achievable_bytes_per_sec(
-            self.client.active_cores(),
-            self.client.freq(),
+    pub fn capacity_bytes_per_sec(&mut self, requests_per_sec: f64, open_streams: f64) -> f64 {
+        self.refresh_op_caches();
+        let client = self.client_op.as_ref().unwrap().achievable(
+            &self.client,
             requests_per_sec,
             open_streams,
-            MAX_APP_UTILIZATION,
         );
-        let server = self.server.spec().achievable_bytes_per_sec(
-            self.server.active_cores(),
-            self.server.freq(),
+        let server = self.server_op.as_ref().unwrap().achievable(
+            &self.server,
             requests_per_sec,
             open_streams,
-            MAX_APP_UTILIZATION,
         );
         client.min(server)
     }
@@ -167,23 +236,14 @@ impl Host {
         moved: Bytes,
         dt: SimDuration,
     ) -> HostTick {
-        let client_load =
-            self.client.spec().load(demand, self.client.active_cores(), self.client.freq());
-        let server_load =
-            self.server.spec().load(demand, self.server.active_cores(), self.server.freq());
+        self.refresh_op_caches();
+        let client_op = self.client_op.as_ref().unwrap();
+        let server_op = self.server_op.as_ref().unwrap();
+        let client_load = client_op.load(&self.client, demand);
+        let server_load = server_op.load(&self.server, demand);
 
-        let client_power = self.client_power.package_power(
-            self.client.active_cores(),
-            self.client.freq(),
-            client_load,
-            demand.bytes_per_sec,
-        );
-        let server_power = self.server_power.package_power(
-            self.server.active_cores(),
-            self.server.freq(),
-            server_load,
-            demand.bytes_per_sec,
-        );
+        let client_power = client_op.power.power(client_load, demand.bytes_per_sec);
+        let server_power = server_op.power.power(server_load, demand.bytes_per_sec);
         self.client_rapl.record(now, client_power, dt);
         self.client_node.record(now, client_power, dt);
         self.server_rapl.record(now, server_power, dt);
@@ -317,7 +377,7 @@ mod tests {
 
     #[test]
     fn capacity_is_min_of_both_ends() {
-        let h = host("cloudlab");
+        let mut h = host("cloudlab");
         let cap = h.capacity_bytes_per_sec(10.0, 8.0);
         let client = h.client.spec().achievable_bytes_per_sec(
             h.client.active_cores(),
@@ -335,6 +395,61 @@ mod tests {
         );
         assert_eq!(cap, client.min(server));
         assert!(cap > 0.0);
+    }
+
+    #[test]
+    fn op_point_cache_matches_fresh_computation() {
+        // The lazily cached loads/powers/capacities must equal the direct
+        // spec/model computations bit-for-bit, across setting changes
+        // (which exercise the rebuild-on-key-change path).
+        let mut h = host("didclab");
+        let demand =
+            CpuDemand { bytes_per_sec: 80e6, requests_per_sec: 15.0, open_streams: 6.0 };
+        let dt = SimDuration::from_millis(100.0);
+        let mut t = SimTime::ZERO;
+        for step in 0..6 {
+            let expect_client_load =
+                h.client.spec().load(&demand, h.client.active_cores(), h.client.freq());
+            let expect_client_power = h.client_power_model().package_power(
+                h.client.active_cores(),
+                h.client.freq(),
+                expect_client_load,
+                demand.bytes_per_sec,
+            );
+            let expect_cap = {
+                let client = h.client.spec().achievable_bytes_per_sec(
+                    h.client.active_cores(),
+                    h.client.freq(),
+                    demand.requests_per_sec,
+                    demand.open_streams,
+                    MAX_APP_UTILIZATION,
+                );
+                let server = h.server.spec().achievable_bytes_per_sec(
+                    h.server.active_cores(),
+                    h.server.freq(),
+                    demand.requests_per_sec,
+                    demand.open_streams,
+                    MAX_APP_UTILIZATION,
+                );
+                client.min(server)
+            };
+            let cap = h.capacity_bytes_per_sec(demand.requests_per_sec, demand.open_streams);
+            assert_eq!(cap.to_bits(), expect_cap.to_bits(), "capacity at step {step}");
+            let ht = h.record_tick(t, &demand, Bytes::from_mb(8.0), dt);
+            assert_eq!(ht.client_load.to_bits(), expect_client_load.to_bits());
+            assert_eq!(
+                ht.client_power.as_watts().to_bits(),
+                expect_client_power.as_watts().to_bits()
+            );
+            t += dt;
+            // Walk the settings so the cache must rebuild mid-test.
+            if step % 2 == 0 {
+                h.client.decrease_freq();
+            } else {
+                h.client.decrease_cores();
+                h.server.decrease_freq();
+            }
+        }
     }
 
     #[test]

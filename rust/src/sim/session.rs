@@ -31,6 +31,10 @@ pub struct SessionConfig {
     /// GreenDT extension: Algorithm-3 scaling on the *server* too (the
     /// paper's testbeds scale only the client).
     pub server_scaling: bool,
+    /// Drive the session with the naive per-tick reference stepper
+    /// instead of the epoch-cached fast path (tests and benchmarks; see
+    /// [`crate::sim::fleet::FleetConfig::reference_stepper`]).
+    pub reference_stepper: bool,
 }
 
 impl SessionConfig {
@@ -46,6 +50,7 @@ impl SessionConfig {
             record_timeline: false,
             bandwidth_events: Vec::new(),
             server_scaling: false,
+            reference_stepper: false,
         }
     }
 
@@ -134,6 +139,7 @@ pub fn run_session(cfg: &SessionConfig) -> SessionOutcome {
         record_timeline: cfg.record_timeline,
         bandwidth_events: cfg.bandwidth_events.clone(),
         server_scaling: cfg.server_scaling,
+        reference_stepper: cfg.reference_stepper,
     };
     let mut out = run_fleet(&fleet);
     let tenant = out.tenants.remove(0);
@@ -278,6 +284,7 @@ mod tests {
             record_timeline: false,
             bandwidth_events: Vec::new(),
             server_scaling: false,
+            reference_stepper: false,
         });
         assert_eq!(session.duration.as_secs(), fleet.duration.as_secs());
         assert_eq!(

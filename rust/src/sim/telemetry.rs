@@ -12,6 +12,10 @@ pub struct TickStats {
     pub client_power: Power,
     pub server_power: Power,
     pub open_streams: usize,
+    /// True when an active session's transfer finished on this tick — the
+    /// event-horizon drivers end their inner tick loop here so departures
+    /// are handled on exactly the tick the reference driver would.
+    pub session_completed: bool,
 }
 
 /// Network-side view exposed to the predictive governor: the path model

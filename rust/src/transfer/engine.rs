@@ -64,6 +64,11 @@ pub struct TransferEngine {
     scratch_streams: Vec<StreamState>,
     scratch_rates: Vec<f64>,
     scratch_channel_rates: Vec<f64>,
+    /// Monotone counter bumped on every structural mutation — channel
+    /// open/close/reassignment and per-partition knob changes (pp,
+    /// parallelism, handshake RTTs). The epoch cache in [`crate::sim`]
+    /// watches it to learn when a staged stream snapshot goes stale.
+    generation: u64,
 }
 
 impl TransferEngine {
@@ -104,9 +109,19 @@ impl TransferEngine {
             scratch_streams: Vec::new(),
             scratch_rates: Vec::new(),
             scratch_channel_rates: Vec::new(),
+            generation: 0,
         };
         engine.update_weights();
         engine
+    }
+
+    /// Structural-mutation counter (see the field doc). Equal generations
+    /// guarantee the channel/stream structure and per-partition transfer
+    /// knobs are unchanged; window state is tracked separately by the
+    /// stager because slow-start growth mutates windows without touching
+    /// structure.
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// Streams a freshly opened channel for partition `i` should carry,
@@ -152,16 +167,19 @@ impl TransferEngine {
     /// tune statically).
     pub fn set_pp_level(&mut self, partition: usize, pp: u32) {
         self.partitions[partition].pp_level = pp.max(1);
+        self.generation += 1;
     }
 
     /// Override a partition's parallelism (affects newly opened channels).
     pub fn set_parallelism(&mut self, partition: usize, p: u32) {
         self.partitions[partition].parallelism = p.max(1);
+        self.generation += 1;
     }
 
     /// Charge `rtts` extra round-trips per file (non-persistent tools).
     pub fn set_handshake_rtts(&mut self, partition: usize, rtts: f64) {
         self.partitions[partition].handshake_rtts = rtts.max(0.0);
+        self.generation += 1;
     }
 
     /// Cap the total channel count (a fleet policy's per-session budget).
@@ -202,6 +220,10 @@ impl TransferEngine {
     /// close newest-first (preserving warm streams), deficits open cold
     /// channels (slow start — this is why over-eager growth costs).
     pub fn set_num_channels(&mut self, num_channels: u32) {
+        // A redistribution may open, close or retarget channels; treat
+        // every call as structural (a spurious bump only costs one
+        // restage, and calls happen at tuning timeouts, not per tick).
+        self.generation += 1;
         let unfinished: Vec<usize> =
             (0..self.partitions.len()).filter(|&i| !self.partitions[i].done()).collect();
         if unfinished.is_empty() {
@@ -333,14 +355,34 @@ impl TransferEngine {
 
     /// Stage one of a tick: advance every stream's congestion window by
     /// `dt` and append snapshots to `flat` (a buffer that may already hold
-    /// other tenants' streams).
-    pub fn stage_streams(&mut self, dt: SimDuration, rtt: Rtt, flat: &mut Vec<StreamState>) {
+    /// other tenants' streams). Returns how many staged streams are still
+    /// in slow start — zero means the snapshot stays valid until the next
+    /// structural mutation (see [`Self::generation`]), which is what lets
+    /// the epoch-cached stepper skip restaging entirely.
+    ///
+    /// The slow-start growth factor is computed once per call
+    /// ([`StreamState::growth_factor`]) instead of one `powf` per stream;
+    /// `StreamState::tick_cached` is bit-identical to `StreamState::tick`.
+    pub fn stage_streams(
+        &mut self,
+        dt: SimDuration,
+        rtt: Rtt,
+        flat: &mut Vec<StreamState>,
+    ) -> usize {
+        let growth = StreamState::growth_factor(dt, rtt);
+        let mut in_slow_start = 0;
         for c in &mut self.channels {
             for s in &mut c.streams {
-                s.tick(dt, rtt);
+                if let Some(g) = growth {
+                    s.tick_cached(g);
+                }
+                if s.in_slow_start() {
+                    in_slow_start += 1;
+                }
                 flat.push(*s);
             }
         }
+        in_slow_start
     }
 
     /// Stage two of a tick: consume this engine's per-stream goodput rates
@@ -428,6 +470,7 @@ impl TransferEngine {
                         .partial_cmp(&self.partitions[b].remaining)
                         .unwrap()
                 });
+            let mut restructured = false;
             match target {
                 Some(t) => {
                     let parallelism =
@@ -436,10 +479,17 @@ impl TransferEngine {
                     for c in &mut self.channels {
                         if self.partitions[c.partition].done() {
                             *c = Channel::open_warm(t, parallelism, avg_win);
+                            restructured = true;
                         }
                     }
                 }
-                None => self.channels.clear(),
+                None => {
+                    restructured = !self.channels.is_empty();
+                    self.channels.clear();
+                }
+            }
+            if restructured {
+                self.generation += 1;
             }
             // Refresh cc_level bookkeeping.
             for i in 0..self.partitions.len() {
@@ -650,5 +700,48 @@ mod tests {
         let e = TransferEngine::new(&[], Bytes::from_mb(1.0));
         assert!(e.is_done());
         assert_eq!(e.remaining(), Bytes::ZERO);
+    }
+
+    #[test]
+    fn generation_tracks_structure_not_plain_ticks() {
+        let link = cloudlab_link();
+        let mut e = engine_for("large", &link);
+        let g0 = e.generation();
+        e.set_num_channels(4);
+        assert!(e.generation() > g0, "redistribution is structural");
+        let g1 = e.generation();
+        e.set_pp_level(0, 8);
+        e.set_parallelism(0, 2);
+        e.set_handshake_rtts(0, 1.0);
+        assert!(e.generation() > g1, "knob changes are structural");
+
+        // Mid-transfer ticks (slow-start growth, byte movement) must NOT
+        // bump the generation — that is what lets warm epochs persist.
+        let g2 = e.generation();
+        let dt = SimDuration::from_millis(100.0);
+        for _ in 0..20 {
+            e.tick(&link, dt, f64::INFINITY);
+        }
+        assert!(!e.is_done(), "large dataset cannot finish in 2 s");
+        assert_eq!(e.generation(), g2, "plain ticks are not structural");
+    }
+
+    #[test]
+    fn stage_streams_counts_slow_start() {
+        let link = cloudlab_link();
+        let mut e = engine_for("medium", &link);
+        e.set_num_channels(4);
+        let dt = SimDuration::from_millis(100.0);
+        let mut flat = Vec::new();
+        let cold = e.stage_streams(dt, link.params.rtt, &mut flat);
+        assert!(cold > 0, "fresh channels start cold");
+        assert_eq!(flat.len(), e.open_streams());
+        // Ramp to steady state: the count must hit zero and stay there.
+        for _ in 0..100 {
+            flat.clear();
+            e.stage_streams(dt, link.params.rtt, &mut flat);
+        }
+        flat.clear();
+        assert_eq!(e.stage_streams(dt, link.params.rtt, &mut flat), 0);
     }
 }

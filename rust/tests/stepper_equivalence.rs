@@ -1,0 +1,195 @@
+//! The epoch-cached stepper must be indistinguishable — bit-for-bit —
+//! from the naive per-tick reference stepper it replaced.
+//!
+//! Every figure, sweep and fleet number flows through `Simulation::step`,
+//! so the fast path is only admissible if duration, moved bytes and the
+//! client/server energy books come out with identical bits across
+//! testbeds, algorithms, seeds, fleet arrivals/departures and scripted
+//! bandwidth events. These tests drive whole sessions through both
+//! steppers (`reference_stepper` flag) and compare outcomes exactly.
+
+use greendt::config::testbeds;
+use greendt::coordinator::{AlgorithmKind, FleetPolicyKind};
+use greendt::dataset::standard;
+use greendt::netsim::BandwidthEvent;
+use greendt::sim::fleet::{run_fleet, FleetConfig, FleetOutcome, TenantSpec};
+use greendt::sim::session::{run_session, SessionConfig};
+use greendt::units::{Rate, SimTime};
+
+fn assert_f64_bits(a: f64, b: f64, what: &str) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{what}: epoch {a} vs reference {b}");
+}
+
+fn assert_fleet_outcomes_identical(fast: &FleetOutcome, naive: &FleetOutcome, label: &str) {
+    assert_eq!(fast.completed, naive.completed, "{label}: completed");
+    assert_f64_bits(
+        fast.duration.as_secs(),
+        naive.duration.as_secs(),
+        &format!("{label}: duration"),
+    );
+    assert_f64_bits(fast.moved.as_f64(), naive.moved.as_f64(), &format!("{label}: moved"));
+    assert_f64_bits(
+        fast.client_energy.as_joules(),
+        naive.client_energy.as_joules(),
+        &format!("{label}: client energy"),
+    );
+    assert_f64_bits(
+        fast.client_package_energy.as_joules(),
+        naive.client_package_energy.as_joules(),
+        &format!("{label}: client package energy"),
+    );
+    assert_f64_bits(
+        fast.server_energy.as_joules(),
+        naive.server_energy.as_joules(),
+        &format!("{label}: server energy"),
+    );
+    assert_eq!(fast.final_active_cores, naive.final_active_cores, "{label}: cores");
+    assert_eq!(fast.tenants.len(), naive.tenants.len());
+    for (f, n) in fast.tenants.iter().zip(&naive.tenants) {
+        let t = format!("{label}/{}", f.name);
+        assert_f64_bits(f.moved.as_f64(), n.moved.as_f64(), &format!("{t}: moved"));
+        assert_f64_bits(
+            f.attributed_energy.as_joules(),
+            n.attributed_energy.as_joules(),
+            &format!("{t}: attributed energy"),
+        );
+        assert_f64_bits(
+            f.attributed_package_energy.as_joules(),
+            n.attributed_package_energy.as_joules(),
+            &format!("{t}: attributed package energy"),
+        );
+        assert_eq!(
+            f.finished_at.map(|x| x.as_secs().to_bits()),
+            n.finished_at.map(|x| x.as_secs().to_bits()),
+            "{t}: finish time"
+        );
+        assert_eq!(f.peak_channels, n.peak_channels, "{t}: peak channels");
+    }
+}
+
+#[test]
+fn single_sessions_bit_identical_across_grid() {
+    // Testbeds × algorithms × seeds: the threshold-FSM tuners (whose
+    // timeouts bound epochs), a static baseline (whose epochs span nearly
+    // the whole run) and different path/CPU models.
+    let algos = [
+        AlgorithmKind::MaxThroughput,
+        AlgorithmKind::MinEnergy,
+        AlgorithmKind::NoTune(8),
+        AlgorithmKind::TargetThroughput(Rate::from_mbps(300.0)),
+    ];
+    for testbed in ["chameleon", "cloudlab", "didclab"] {
+        for algo in algos {
+            for seed in [3u64, 11] {
+                let mk = |reference: bool| {
+                    let mut cfg = SessionConfig::new(
+                        testbeds::by_name(testbed).unwrap(),
+                        standard::medium_dataset(seed),
+                        algo,
+                    )
+                    .with_seed(seed);
+                    cfg.reference_stepper = reference;
+                    cfg
+                };
+                let fast = run_session(&mk(false));
+                let naive = run_session(&mk(true));
+                let label = format!("{testbed}/{}/seed{seed}", algo.id());
+                assert!(naive.completed, "{label}: reference run must finish");
+                assert_f64_bits(
+                    fast.duration.as_secs(),
+                    naive.duration.as_secs(),
+                    &format!("{label}: duration"),
+                );
+                assert_f64_bits(
+                    fast.moved.as_f64(),
+                    naive.moved.as_f64(),
+                    &format!("{label}: moved"),
+                );
+                assert_f64_bits(
+                    fast.client_energy.as_joules(),
+                    naive.client_energy.as_joules(),
+                    &format!("{label}: client energy"),
+                );
+                assert_f64_bits(
+                    fast.server_energy.as_joules(),
+                    naive.server_energy.as_joules(),
+                    &format!("{label}: server energy"),
+                );
+                assert_eq!(fast.peak_channels, naive.peak_channels, "{label}: peak ch");
+            }
+        }
+    }
+}
+
+fn fleet_cfg(
+    policy: FleetPolicyKind,
+    seed: u64,
+    server_scaling: bool,
+    reference: bool,
+) -> FleetConfig {
+    let mut cfg = FleetConfig::new(testbeds::cloudlab(), Some(policy)).with_seed(seed);
+    for i in 0..4u64 {
+        cfg.tenants.push(
+            TenantSpec::new(
+                format!("tenant-{i}"),
+                standard::medium_dataset(seed + i),
+                if i % 2 == 0 { AlgorithmKind::MaxThroughput } else { AlgorithmKind::MinEnergy },
+            )
+            .arriving_at(SimTime::from_secs(25.0 * i as f64)),
+        );
+    }
+    // A mid-run bandwidth drop (and later recovery) lands inside warm
+    // epochs: the budget moves every tick while the stream caches hold.
+    cfg.bandwidth_events = vec![
+        BandwidthEvent { at: SimTime::from_secs(40.0), mean_fraction: 0.5 },
+        BandwidthEvent { at: SimTime::from_secs(120.0), mean_fraction: 0.1 },
+    ];
+    cfg.server_scaling = server_scaling;
+    cfg.reference_stepper = reference;
+    cfg
+}
+
+#[test]
+fn fleet_with_arrivals_and_bandwidth_events_bit_identical() {
+    for (policy, server_scaling, seed) in [
+        (FleetPolicyKind::MinEnergyFleet, false, 5u64),
+        (FleetPolicyKind::FairShare, true, 9),
+    ] {
+        let fast = run_fleet(&fleet_cfg(policy, seed, server_scaling, false));
+        let naive = run_fleet(&fleet_cfg(policy, seed, server_scaling, true));
+        assert!(naive.completed, "reference fleet must finish");
+        assert_fleet_outcomes_identical(
+            &fast,
+            &naive,
+            &format!("{}/seed{seed}", naive.policy),
+        );
+    }
+}
+
+#[test]
+fn empty_dataset_tenant_departs_identically() {
+    // A zero-byte tenant is done on arrival: the event-horizon driver
+    // must retire it on the same tick the per-tick reference does.
+    let mk = |reference: bool| {
+        let mut cfg = FleetConfig::new(testbeds::cloudlab(), Some(FleetPolicyKind::FairShare))
+            .with_seed(2);
+        cfg.tenants.push(TenantSpec::new(
+            "real",
+            standard::medium_dataset(2),
+            AlgorithmKind::MaxThroughput,
+        ));
+        cfg.tenants.push(
+            TenantSpec::new(
+                "empty",
+                greendt::dataset::Dataset::new("empty", Vec::new()),
+                AlgorithmKind::NoTune(2),
+            )
+            .arriving_at(SimTime::from_secs(10.0)),
+        );
+        cfg.reference_stepper = reference;
+        cfg
+    };
+    let fast = run_fleet(&mk(false));
+    let naive = run_fleet(&mk(true));
+    assert_fleet_outcomes_identical(&fast, &naive, "empty-tenant");
+}
