@@ -1,0 +1,87 @@
+//! Multi-host dispatcher: a heterogeneous two-host fleet serving an open
+//! Poisson workload under the three placement policies.
+//!
+//!     cargo run --release --example multi_host
+//!
+//! An efficient Broadwell client (CloudLab) sits next to a legacy
+//! Bloomfield one (DIDCLab). `roundrobin` ignores the difference,
+//! `leastloaded` balances occupancy, and `marginalenergy` scores each
+//! candidate host by the predicted delta in whole-host power per byte of
+//! expected goodput (GreenDataFlow, arXiv:1810.05892) — routing work to
+//! the machine that moves it cheapest. The figures of merit are fleet
+//! energy, aggregate goodput and the Jain fairness index.
+
+use greendt::config::testbeds;
+use greendt::coordinator::{AlgorithmKind, PlacementKind};
+use greendt::metrics::Table;
+use greendt::sim::dispatcher::{
+    run_dispatcher, DispatchOutcome, DispatcherConfig, HostSpec, PoissonArrivals,
+};
+
+fn run_placement(placement: PlacementKind) -> DispatchOutcome {
+    let hosts = vec![
+        HostSpec::new("efficient", testbeds::cloudlab()),
+        HostSpec::new("legacy", testbeds::didclab()),
+    ];
+    // ~1 session every 2 minutes, 6 sessions — light enough that the
+    // efficient host could serve everything, heavy enough to overlap.
+    let sessions = PoissonArrivals::new(1.0 / 120.0, 6, 42)
+        .sessions("medium", AlgorithmKind::MaxThroughput)
+        .expect("medium is a standard family");
+    let cfg = DispatcherConfig::new(hosts, placement)
+        .with_sessions(sessions)
+        .with_seed(42);
+    run_dispatcher(&cfg)
+}
+
+fn main() {
+    println!("== multi_host: 2 heterogeneous hosts, 6 Poisson sessions ==\n");
+
+    let mut table = Table::new(
+        "placement policies compared",
+        &["placement", "fleet energy", "makespan", "agg goodput", "jain", "on legacy"],
+    );
+    for placement in [
+        PlacementKind::RoundRobin,
+        PlacementKind::LeastLoaded,
+        PlacementKind::MarginalEnergy,
+    ] {
+        let out = run_placement(placement);
+        let fleet = &out.fleet;
+        assert!(fleet.completed, "{} run did not finish", placement.id());
+        let legacy = fleet.tenants.iter().filter(|t| t.host == "legacy").count();
+        let goodput = greendt::units::Rate::average(fleet.moved, fleet.duration);
+        table.push_row(vec![
+            placement.id().to_string(),
+            format!("{}", fleet.client_energy),
+            format!("{}", fleet.duration),
+            format!("{}", goodput),
+            format!("{:.3}", fleet.jain_fairness()),
+            format!("{legacy}/6"),
+        ]);
+
+        if placement == PlacementKind::MarginalEnergy {
+            println!("marginal-energy decisions:");
+            for d in &out.decisions {
+                let host = d.host.clone().unwrap_or_else(|| "queued".into());
+                let best = d
+                    .scores
+                    .iter()
+                    .map(|s| format!("{}: {:.2e} J/B", s.host, s.marginal_j_per_byte))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                println!(
+                    "  t={:>6.1}s  {} -> {}  ({}; fleet projection {:.1} W)",
+                    d.t_secs, d.session, host, best, d.projected_fleet_power_w
+                );
+            }
+            println!();
+        }
+    }
+    println!("{}", table.to_markdown());
+    println!(
+        "marginal-energy placement routes sessions to the host whose operating\n\
+         point moves their bytes for the fewest joules; with headroom on the\n\
+         efficient machine the legacy host only ever burns idle power."
+    );
+}

@@ -1,5 +1,6 @@
-//! Fleet hot-path bench: per-tick cost of a multi-tenant world, plus an
-//! allocation audit proving the step path stays allocation-free.
+//! Fleet hot-path bench: per-tick cost of a multi-tenant world, an
+//! allocation audit proving the step path stays allocation-free, and the
+//! multi-host dispatcher's decision + end-to-end costs.
 //!
 //!     cargo bench --bench bench_fleet
 //!
@@ -9,11 +10,15 @@
 
 use greendt::benchkit::bench;
 use greendt::config::testbeds;
+use greendt::coordinator::{AlgorithmKind, PlacementKind};
 use greendt::cpusim::CpuState;
 use greendt::dataset::{partition_files_capped, standard};
+use greendt::sim::dispatcher::{
+    run_dispatcher, Dispatcher, DispatcherConfig, HostCandidate, HostSpec, SessionSpec,
+};
 use greendt::sim::Simulation;
 use greendt::transfer::TransferEngine;
-use greendt::units::SimDuration;
+use greendt::units::{SimDuration, SimTime};
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -95,4 +100,55 @@ fn main() {
         "the fleet step path must stay allocation-free per tick"
     );
     println!("allocation audit passed: step is allocation-free\n");
+
+    // Dispatcher decision cost: pure placement over a synthetic 16-host
+    // candidate snapshot (what every arrival pays at dispatch time).
+    let candidates: Vec<HostCandidate> = (0..16)
+        .map(|i| HostCandidate {
+            host: i,
+            active_sessions: (i % 5) as u32,
+            free_slots: 8 - (i % 5) as u32,
+            current_power_w: 20.0 + i as f64,
+            projected_power_w: 30.0 + ((i * 7) % 13) as f64,
+            projected_session_bps: 40e6 + (i as f64) * 5e6,
+            projected_fleet_power_w: 400.0 + i as f64,
+        })
+        .collect();
+    for placement in [
+        PlacementKind::RoundRobin,
+        PlacementKind::LeastLoaded,
+        PlacementKind::MarginalEnergy,
+    ] {
+        let mut d = Dispatcher::new(placement, None);
+        bench(&format!("dispatcher place/{}/16 hosts", placement.id()), 1000, 200_000, || {
+            d.place(&candidates)
+        });
+    }
+    println!();
+
+    // End-to-end dispatcher macro bench: 2 heterogeneous hosts × 4
+    // spaced sessions through the cross-host event-horizon loop.
+    let mk_cfg = |placement| {
+        let hosts = vec![
+            HostSpec::new("efficient", testbeds::cloudlab()),
+            HostSpec::new("legacy", testbeds::didclab()),
+        ];
+        let sessions: Vec<SessionSpec> = (0..4u64)
+            .map(|i| {
+                SessionSpec::new(
+                    format!("s{i}"),
+                    standard::medium_dataset(50 + i),
+                    AlgorithmKind::MaxThroughput,
+                )
+                .arriving_at(SimTime::from_secs(120.0 * i as f64))
+            })
+            .collect();
+        DispatcherConfig::new(hosts, placement).with_sessions(sessions).with_seed(7)
+    };
+    for placement in [PlacementKind::RoundRobin, PlacementKind::MarginalEnergy] {
+        let cfg = mk_cfg(placement);
+        bench(&format!("run_dispatcher/2 hosts/4 sessions/{}", placement.id()), 0, 3, || {
+            run_dispatcher(&cfg)
+        });
+    }
 }

@@ -39,10 +39,12 @@ pub struct Alan {
 }
 
 impl Alan {
+    /// Alan et al. tuned for minimum energy.
     pub fn min_energy() -> Self {
         Alan { goal: Goal::MinEnergy, chosen: 1, governor: OndemandGovernor::default() }
     }
 
+    /// Alan et al. tuned for maximum throughput.
     pub fn max_throughput() -> Self {
         Alan { goal: Goal::MaxThroughput, chosen: 1, governor: OndemandGovernor::default() }
     }

@@ -43,10 +43,12 @@ pub struct Ismail {
 }
 
 impl Ismail {
+    /// Ismail et al. static minimum-energy tuning.
     pub fn min_energy() -> Self {
         Ismail { name: "Ismail-ME", channels: ISMAIL_ME_CHANNELS, governor: OndemandGovernor::default() }
     }
 
+    /// Ismail et al. static maximum-throughput tuning.
     pub fn max_throughput() -> Self {
         Ismail { name: "Ismail-MT", channels: ISMAIL_MT_CHANNELS, governor: OndemandGovernor::default() }
     }
@@ -91,10 +93,12 @@ pub struct IsmailTarget {
 }
 
 impl IsmailTarget {
+    /// Ismail et al. target-throughput ramp toward `target`.
     pub fn new(target: Rate) -> Self {
         IsmailTarget { target, num_ch: 1, governor: OndemandGovernor::default() }
     }
 
+    /// The target rate.
     pub fn target(&self) -> Rate {
         self.target
     }

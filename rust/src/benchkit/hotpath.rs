@@ -31,7 +31,9 @@ pub const HEADLINE_CASE: &str = "EEMT session chameleon/mixed";
 /// One stepper's end-to-end measurement.
 #[derive(Debug, Clone, Copy)]
 pub struct SessionRate {
+    /// Simulated seconds covered by the run.
     pub sim_seconds: f64,
+    /// Wall-clock seconds the run took.
     pub wall_seconds: f64,
 }
 
@@ -55,6 +57,7 @@ impl SessionRate {
 /// Everything one hotpath run produced.
 #[derive(Debug, Clone)]
 pub struct HotpathReport {
+    /// Micro benches of the per-tick pipeline.
     pub micro: Vec<BenchReport>,
     /// Naive per-tick stepper (pre-epoch semantics baseline).
     pub reference: SessionRate,
@@ -69,6 +72,7 @@ impl HotpathReport {
             / self.reference.sim_seconds_per_wall_second().max(1e-12)
     }
 
+    /// The machine-readable report (the `BENCH_hotpath.json` schema).
     pub fn to_json(&self) -> String {
         let micro: Vec<String> = self.micro.iter().map(|r| r.to_json()).collect();
         format!(
@@ -82,6 +86,7 @@ impl HotpathReport {
         )
     }
 
+    /// Write [`Self::to_json`] to `path`.
     pub fn write_json(&self, path: &str) -> std::io::Result<()> {
         std::fs::write(path, self.to_json())
     }

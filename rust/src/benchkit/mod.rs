@@ -13,11 +13,14 @@ use std::time::Instant;
 /// One benchmark result.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
+    /// Benchmark name.
     pub name: String,
+    /// Timing summary over the samples.
     pub summary: Summary,
 }
 
 impl BenchReport {
+    /// Print the criterion-style one-line report.
     pub fn print(&self) {
         let s = &self.summary;
         println!(

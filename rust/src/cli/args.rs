@@ -4,6 +4,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A command-line parsing/validation error.
 pub struct ArgError(pub String);
 
 impl fmt::Display for ArgError {
@@ -17,6 +18,7 @@ impl std::error::Error for ArgError {}
 /// Parsed command-line arguments.
 #[derive(Debug, Clone, Default)]
 pub struct ParsedArgs {
+    /// Positional (non-flag) arguments, in order.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     switches: BTreeSet<String>,
@@ -53,26 +55,31 @@ impl ParsedArgs {
         Ok(out)
     }
 
+    /// The value of flag `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// The value of flag `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Parse flag `--name` as a float.
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, ArgError> {
         self.get(name)
             .map(|v| v.parse::<f64>().map_err(|_| ArgError(format!("--{name}: bad number '{v}'"))))
             .transpose()
     }
 
+    /// Parse flag `--name` as an unsigned integer.
     pub fn get_u64(&self, name: &str) -> Result<Option<u64>, ArgError> {
         self.get(name)
             .map(|v| v.parse::<u64>().map_err(|_| ArgError(format!("--{name}: bad integer '{v}'"))))
             .transpose()
     }
 
+    /// Parse flag `--name` as a `u32`.
     pub fn get_u32(&self, name: &str) -> Result<Option<u32>, ArgError> {
         match self.get_u64(name)? {
             Some(v) => u32::try_from(v)
@@ -82,6 +89,7 @@ impl ParsedArgs {
         }
     }
 
+    /// True when the switch was given.
     pub fn has(&self, switch: &str) -> bool {
         self.switches.contains(switch)
     }

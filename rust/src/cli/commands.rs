@@ -10,6 +10,7 @@ use crate::sim::session::{run_session, SessionConfig};
 use crate::units::Rate;
 use anyhow::{bail, Context, Result};
 
+/// The `greendt help` text.
 pub const USAGE: &str = "\
 GreenDT — energy-efficient high-throughput data transfers
 (reproduction of Di Tacchio et al., CS.DC 2019)
@@ -18,7 +19,7 @@ USAGE:
   greendt <COMMAND> [OPTIONS]
 
 COMMANDS:
-  run        Run one transfer session
+  session    Run one transfer session (alias: run)
              --config <FILE>       load session/tuner/testbed from TOML
              --csv <FILE>          write the per-timeout timeline as CSV
              --testbed chameleon|cloudlab|didclab   (default cloudlab)
@@ -33,14 +34,23 @@ COMMANDS:
              --server-scaling      extension: Algorithm 3 on the server too
   sweep      Ablations: static-concurrency sweep + tuner sensitivity
              --testbed <T> --dataset <D>  (sweep panel; default cloudlab/large)
-  fleet      Multi-tenant shared host: N sessions under one arbitration policy
-             --testbed <T>         (default cloudlab)
+  fleet      Multi-tenant fleet: N sessions under one arbitration policy,
+             on one shared host or on several hosts behind a dispatcher
+             --testbed <T[,T2,..]> testbed per host, cycled (default cloudlab)
              --dataset <D>         per-tenant dataset family (default medium)
              --tenants <N>         number of sessions (default 4)
              --algo <A>            per-tenant algorithm (default eemt)
              --policy fairshare|minenergy   host arbitration (default minenergy)
              --spacing <SECS>      arrival spacing between tenants (default 30)
              --seed <N>            RNG seed (default 42)
+             multi-host dispatcher (any of these flags selects it):
+             --hosts <N>           number of hosts (default 2)
+             --placement rr|leastloaded|marginal    session placement
+                                   (default marginal = marginal energy)
+             --arrivals poisson:<per-min>:<count>   open workload: Poisson
+                                   arrivals instead of --tenants/--spacing
+             --power-cap <WATTS>   fleet admission cap on projected power
+             --max-sessions <N>    per-host session-slot pool (default 8)
   bench      Hot-path benchmark: sim-seconds/wall-second of the naive
              reference stepper vs the epoch-cached stepper (plus micro
              benches of the per-tick pipeline)
@@ -65,7 +75,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         .map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
-        "run" => cmd_run(&args),
+        "run" | "session" => cmd_run(&args),
         "fleet" => cmd_fleet(&args),
         "sweep" => cmd_sweep(&args),
         "bench" => cmd_bench(&args),
@@ -175,6 +185,16 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<i32> {
     use crate::sim::fleet::{run_fleet, FleetConfig, TenantSpec};
     use crate::units::SimTime;
 
+    // Any dispatcher-only flag selects the multi-host path.
+    if args.get("hosts").is_some()
+        || args.get("placement").is_some()
+        || args.get("arrivals").is_some()
+        || args.get("power-cap").is_some()
+        || args.get("max-sessions").is_some()
+    {
+        return cmd_fleet_dispatch(args);
+    }
+
     let tb_name = args.get_or("testbed", "cloudlab");
     let ds_name = args.get_or("dataset", "medium");
     let seed = seed_of(args)?;
@@ -197,7 +217,7 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<i32> {
 
     let mut cfg = FleetConfig::new(testbed, Some(policy)).with_seed(seed);
     for i in 0..tenants {
-        let ds = standard::by_name(ds_name, seed + i as u64)
+        let ds = standard::by_name(ds_name, seed.wrapping_add(i as u64))
             .with_context(|| format!("unknown dataset '{ds_name}'"))?;
         cfg.tenants.push(
             TenantSpec::new(format!("tenant-{i}"), ds, kind)
@@ -236,9 +256,178 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<i32> {
     println!("  makespan         : {}", out.duration);
     println!("  host energy      : {}", out.client_energy);
     println!("  energy / tenant  : {}", out.energy_per_tenant());
+    println!("  jain fairness    : {:.3}", out.jain_fairness());
     println!("  server energy    : {}", out.server_energy);
     println!("  final host CPU   : {} cores @ {}", out.final_active_cores, out.final_freq);
     Ok(if out.completed { 0 } else { 1 })
+}
+
+/// The multi-host dispatcher path of `greendt fleet`: several hosts
+/// behind a placement policy, optionally with Poisson arrivals and a
+/// fleet power cap.
+fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
+    use crate::coordinator::{FleetPolicyKind, PlacementKind};
+    use crate::sim::dispatcher::{
+        run_dispatcher, DispatcherConfig, HostSpec, PoissonArrivals, SessionSpec,
+    };
+    use crate::units::{Power, SimTime};
+
+    let seed = seed_of(args)?;
+    let ds_name = args.get_or("dataset", "medium");
+    let kind = parse_algo(args)?;
+
+    // Hosts: `--hosts N` machines, testbeds cycled from the (comma-
+    // separated) `--testbed` list — `--testbed cloudlab,didclab` builds a
+    // heterogeneous fleet.
+    let hosts_n = args
+        .get_u32("hosts")
+        .map_err(|e: ArgError| anyhow::anyhow!(e))?
+        .unwrap_or(2)
+        .max(1);
+    let max_sessions = args
+        .get_u32("max-sessions")
+        .map_err(|e: ArgError| anyhow::anyhow!(e))?
+        .unwrap_or(8)
+        .max(1);
+    let tb_names: Vec<&str> = args.get_or("testbed", "cloudlab").split(',').collect();
+    let mut hosts = Vec::with_capacity(hosts_n as usize);
+    for i in 0..hosts_n {
+        let tb_name = tb_names[i as usize % tb_names.len()].trim();
+        let testbed = testbeds::by_name(tb_name)
+            .with_context(|| format!("unknown testbed '{tb_name}'"))?;
+        hosts.push(
+            HostSpec::new(format!("host{i}-{}", testbed.name), testbed)
+                .with_max_sessions(max_sessions),
+        );
+    }
+
+    let placement_id = args.get_or("placement", "marginal");
+    let placement = PlacementKind::parse(placement_id)
+        .with_context(|| format!("unknown placement policy '{placement_id}'"))?;
+    let policy_id = args.get_or("policy", "minenergy");
+    let policy = FleetPolicyKind::parse(policy_id)
+        .with_context(|| format!("unknown fleet policy '{policy_id}'"))?;
+    let power_cap = args
+        .get_f64("power-cap")
+        .map_err(|e: ArgError| anyhow::anyhow!(e))?
+        .map(Power::from_watts);
+
+    // Workload: an open Poisson process, or the scripted
+    // --tenants/--spacing schedule the single-host mode uses.
+    let sessions: Vec<SessionSpec> = if let Some(spec) = args.get("arrivals") {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let (per_min, count) = match parts.as_slice() {
+            ["poisson", rate, count] => (
+                rate.parse::<f64>().ok().filter(|r| *r > 0.0),
+                count.parse::<u32>().ok().filter(|c| *c > 0),
+            ),
+            _ => (None, None),
+        };
+        let (Some(per_min), Some(count)) = (per_min, count) else {
+            bail!("--arrivals expects poisson:<per-min>:<count>, got '{spec}'");
+        };
+        PoissonArrivals::new(per_min / 60.0, count, seed)
+            .sessions(ds_name, kind)
+            .with_context(|| format!("unknown dataset '{ds_name}'"))?
+    } else {
+        let tenants = args
+            .get_u32("tenants")
+            .map_err(|e: ArgError| anyhow::anyhow!(e))?
+            .unwrap_or(4)
+            .max(1);
+        let spacing = args
+            .get_f64("spacing")
+            .map_err(|e: ArgError| anyhow::anyhow!(e))?
+            .unwrap_or(30.0)
+            .max(0.0);
+        let mut sessions = Vec::with_capacity(tenants as usize);
+        for i in 0..tenants {
+            let ds = standard::by_name(ds_name, seed.wrapping_add(i as u64))
+                .with_context(|| format!("unknown dataset '{ds_name}'"))?;
+            sessions.push(
+                SessionSpec::new(format!("session-{i}"), ds, kind)
+                    .arriving_at(SimTime::from_secs(spacing * i as f64)),
+            );
+        }
+        sessions
+    };
+    let n_sessions = sessions.len();
+
+    let mut cfg = DispatcherConfig::new(hosts, placement).with_seed(seed);
+    cfg.sessions = sessions;
+    cfg.policy = policy;
+    cfg.power_cap = power_cap;
+    let out = run_dispatcher(&cfg);
+    let fleet = &out.fleet;
+
+    println!(
+        "dispatcher: {} sessions ({}) on {} hosts under {}",
+        n_sessions,
+        kind.id(),
+        fleet.hosts.len(),
+        fleet.policy
+    );
+    let mut ht = crate::metrics::Table::new(
+        "per-host breakdown",
+        &["host", "testbed", "served", "moved", "energy", "final CPU"],
+    );
+    for h in &fleet.hosts {
+        ht.push_row(vec![
+            h.host.clone(),
+            h.testbed.clone(),
+            h.tenants_served.to_string(),
+            format!("{}", h.moved),
+            format!("{}", h.client_energy),
+            format!("{} cores @ {}", h.final_active_cores, h.final_freq),
+        ]);
+    }
+    println!("{}", ht.to_markdown());
+    let mut tt = crate::metrics::Table::new(
+        "per-session outcomes",
+        &["session", "host", "admit", "finish", "moved", "throughput", "energy share"],
+    );
+    for tn in &fleet.tenants {
+        tt.push_row(vec![
+            tn.name.clone(),
+            tn.host.clone(),
+            format!("{:.0} s", tn.arrived_at.as_secs()),
+            match tn.finished_at {
+                Some(at) => format!("{:.0} s", at.as_secs()),
+                None => "-".to_string(),
+            },
+            format!("{}", tn.moved),
+            format!("{}", tn.avg_throughput),
+            format!("{}", tn.attributed_energy),
+        ]);
+    }
+    println!("{}", tt.to_markdown());
+    let queued = out.decisions.iter().filter(|d| d.queued()).count();
+    println!("  completed        : {}", fleet.completed);
+    println!("  makespan         : {}", fleet.duration);
+    println!("  fleet energy     : {}", fleet.client_energy);
+    println!("  energy / session : {}", fleet.energy_per_tenant());
+    println!("  jain fairness    : {:.3}", fleet.jain_fairness());
+    println!(
+        "  admissions       : {} decisions, {} queued by admission control",
+        out.decisions.len(),
+        queued
+    );
+    if let Some(cap) = cfg.power_cap {
+        let peak = out
+            .decisions
+            .iter()
+            .filter(|d| !d.queued())
+            .map(|d| d.projected_fleet_power_w)
+            .fold(0.0, f64::max);
+        println!(
+            "  power cap        : {} (peak admitted projection {:.1} W)",
+            cap, peak
+        );
+    }
+    if !out.unplaced.is_empty() {
+        println!("  never admitted   : {}", out.unplaced.join(", "));
+    }
+    Ok(if fleet.completed { 0 } else { 1 })
 }
 
 fn cmd_sweep(args: &ParsedArgs) -> Result<i32> {
@@ -382,5 +571,31 @@ mod tests {
     #[test]
     fn fleet_bad_policy_rejected() {
         assert!(run(&argv("fleet --policy warp")).is_err());
+    }
+
+    #[test]
+    fn session_alias_runs_a_session() {
+        let code = run(&argv(
+            "session --testbed cloudlab --dataset large --algo eemt --seed 3",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn fleet_dispatcher_quick_run() {
+        let code = run(&argv(
+            "fleet --hosts 2 --placement leastloaded --tenants 2 --dataset small \
+             --spacing 5 --seed 3",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn fleet_dispatcher_bad_flags_rejected() {
+        assert!(run(&argv("fleet --placement warp")).is_err());
+        assert!(run(&argv("fleet --arrivals uniform:1:3")).is_err());
+        assert!(run(&argv("fleet --hosts 2 --testbed cloudlab,atlantis")).is_err());
     }
 }

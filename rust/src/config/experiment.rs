@@ -81,16 +81,21 @@ impl TunerParams {
 /// A fully specified experiment run (one session).
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
+    /// Testbed name (see [`crate::config::testbeds::by_name`]).
     pub testbed: String,
+    /// Dataset family name (see [`crate::dataset::standard::by_name`]).
     pub dataset: String,
+    /// Algorithm identifier (see [`crate::coordinator::AlgorithmKind::parse`]).
     pub algorithm: String,
     /// Optional target rate in Mbps (EETT / Ismail-TT).
     pub target_mbps: Option<f64>,
+    /// RNG seed.
     pub seed: u64,
     /// Simulation tick.
     pub tick: SimDuration,
     /// Give up after this much simulated time.
     pub max_sim_time: SimDuration,
+    /// Tuner knobs.
     pub tuner: TunerParams,
 }
 

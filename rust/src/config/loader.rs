@@ -48,10 +48,15 @@ use anyhow::{bail, Context, Result};
 /// Everything parsed from a config file.
 #[derive(Debug, Clone)]
 pub struct LoadedConfig {
+    /// The resolved testbed.
     pub testbed: Testbed,
+    /// The resolved (generated or manifest-loaded) dataset.
     pub dataset: Dataset,
+    /// The tuning algorithm to run.
     pub algorithm: AlgorithmKind,
+    /// Tuner knobs.
     pub tuner: TunerParams,
+    /// RNG seed.
     pub seed: u64,
 }
 

@@ -13,11 +13,15 @@ use crate::units::{Bytes, Power, Rate, SimDuration};
 /// A complete evaluation environment: WAN path + the two end systems.
 #[derive(Debug, Clone)]
 pub struct Testbed {
+    /// Testbed name as the paper spells it.
     pub name: &'static str,
+    /// Bottleneck WAN path parameters.
     pub link: LinkParams,
     /// Mean background cross-traffic fraction on the bottleneck.
     pub bg_mean: f64,
+    /// Client (tunable) CPU model.
     pub client_cpu: CpuSpec,
+    /// Server CPU model.
     pub server_cpu: CpuSpec,
     /// Platform base power (wall meter minus package) on the client.
     pub client_base_power: Power,
@@ -49,6 +53,7 @@ impl Testbed {
         )
     }
 
+    /// Bandwidth-delay product of the path.
     pub fn bdp(&self) -> Bytes {
         self.link.bdp()
     }

@@ -18,14 +18,20 @@ use std::fmt;
 /// A parsed TOML value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// String value.
     Str(String),
+    /// Integer value.
     Int(i64),
+    /// Float value.
     Float(f64),
+    /// Boolean value.
     Bool(bool),
+    /// Homogeneous array of values.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -33,6 +39,7 @@ impl Value {
         }
     }
 
+    /// The integer payload, if this is an integer.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -49,6 +56,7 @@ impl Value {
         }
     }
 
+    /// The boolean payload, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -56,6 +64,7 @@ impl Value {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(v) => Some(v),
@@ -67,7 +76,9 @@ impl Value {
 /// Parse error with line information.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
+    /// 1-based line the error was detected on.
     pub line: usize,
+    /// What went wrong.
     pub message: String,
 }
 
@@ -86,6 +97,7 @@ pub struct Document {
 }
 
 impl Document {
+    /// Parse a TOML document from source text.
     pub fn parse(input: &str) -> Result<Document, ParseError> {
         let mut values = BTreeMap::new();
         let mut prefix = String::new();
@@ -128,22 +140,27 @@ impl Document {
         Ok(Document { values })
     }
 
+    /// Look a value up by dotted path (`table.key`).
     pub fn get(&self, path: &str) -> Option<&Value> {
         self.values.get(path)
     }
 
+    /// Typed lookup: string at `path`.
     pub fn get_str(&self, path: &str) -> Option<&str> {
         self.get(path).and_then(Value::as_str)
     }
 
+    /// Typed lookup: integer at `path`.
     pub fn get_int(&self, path: &str) -> Option<i64> {
         self.get(path).and_then(Value::as_int)
     }
 
+    /// Typed lookup: float at `path`.
     pub fn get_float(&self, path: &str) -> Option<f64> {
         self.get(path).and_then(Value::as_float)
     }
 
+    /// Typed lookup: boolean at `path`.
     pub fn get_bool(&self, path: &str) -> Option<bool> {
         self.get(path).and_then(Value::as_bool)
     }
@@ -153,10 +170,12 @@ impl Document {
         self.values.iter()
     }
 
+    /// Number of keys in the document.
     pub fn len(&self) -> usize {
         self.values.len()
     }
 
+    /// True when the document has no keys.
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }

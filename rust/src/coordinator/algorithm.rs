@@ -13,8 +13,11 @@ use crate::units::{Rate, SimDuration};
 /// baseline's static choice).
 #[derive(Debug, Clone)]
 pub struct InitPlan {
+    /// Partitioned dataset (Algorithm 1 lines 1–8).
     pub partitions: Vec<Partition>,
+    /// Initial channel count.
     pub num_channels: u32,
+    /// Initial client CPU setting.
     pub client_cpu: CpuState,
     /// Extra per-file round-trips applied to every partition (0 for
     /// persistent-connection tools; wget pays handshakes per file).
@@ -22,6 +25,7 @@ pub struct InitPlan {
 }
 
 impl InitPlan {
+    /// Bundle an init plan.
     pub fn new(partitions: Vec<Partition>, num_channels: u32, client_cpu: CpuState) -> Self {
         InitPlan { partitions, num_channels, client_cpu, handshake_rtts: 0.0 }
     }
@@ -29,6 +33,7 @@ impl InitPlan {
 
 /// A runtime tuning algorithm driving one transfer session.
 pub trait Algorithm: std::fmt::Debug {
+    /// Algorithm name as the paper's figures label it.
     fn name(&self) -> &'static str;
 
     /// Tuning interval: the session driver calls [`Self::on_timeout`]

@@ -31,6 +31,7 @@ pub struct FleetDirective {
 
 /// A cross-session arbitration policy, invoked once per fleet interval.
 pub trait FleetPolicy: std::fmt::Debug {
+    /// Policy name for outcomes and telemetry.
     fn name(&self) -> &'static str;
 
     /// The host CPU setting the fleet starts at.
@@ -50,6 +51,7 @@ fn fair_cap(max_total_channels: u32, active_sessions: u32) -> u32 {
 /// every tenant gets an equal slice of the channel budget.
 #[derive(Debug, Clone)]
 pub struct FairShare {
+    /// Total channel budget split across active sessions.
     pub max_total_channels: u32,
 }
 
@@ -78,7 +80,9 @@ impl FleetPolicy for FairShare {
 /// demand pull capacity up.
 #[derive(Debug, Clone)]
 pub struct MinEnergyFleet {
+    /// Algorithm 3 load thresholds.
     pub thresholds: LoadThresholds,
+    /// Total channel budget split across active sessions.
     pub max_total_channels: u32,
 }
 
@@ -117,7 +121,9 @@ impl FleetPolicy for MinEnergyFleet {
 /// Every fleet policy the driver and the CLI can construct.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FleetPolicyKind {
+    /// Static performance governor + equal channel split.
     FairShare,
+    /// Aggregate-load Algorithm 3 + equal channel split.
     MinEnergyFleet,
 }
 
@@ -130,6 +136,7 @@ impl FleetPolicyKind {
         }
     }
 
+    /// Parse a CLI identifier (accepts common spellings).
     pub fn parse(id: &str) -> Option<FleetPolicyKind> {
         Some(match id {
             "fairshare" | "fair-share" => FleetPolicyKind::FairShare,
@@ -152,6 +159,51 @@ impl FleetPolicyKind {
                 max_total_channels: params.max_ch,
             }),
         }
+    }
+}
+
+/// Session-placement policies for the multi-host dispatcher
+/// ([`crate::sim::dispatcher`]): given the per-host candidate snapshots
+/// the dispatcher builds, decide which host an arriving session lands on.
+/// The selection itself lives in
+/// [`Dispatcher::place`](crate::sim::dispatcher::Dispatcher::place); this
+/// enum is the policy identity shared by the CLI, configs and telemetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Cycle through hosts in order, skipping full ones — the classic
+    /// load-oblivious baseline.
+    RoundRobin,
+    /// The host with the fewest active sessions wins (ties go to the
+    /// lowest host index).
+    LeastLoaded,
+    /// GreenDataFlow-style scoring (arXiv:1810.05892): the host with the
+    /// lowest predicted *marginal energy per byte* wins — the delta in
+    /// whole-host power between its post-placement and current operating
+    /// points (both priced by [`crate::power::PowerModel::at`]), divided
+    /// by the new session's expected goodput there.
+    MarginalEnergy,
+}
+
+impl PlacementKind {
+    /// Stable identifier used by the CLI and in telemetry.
+    pub fn id(&self) -> &'static str {
+        match self {
+            PlacementKind::RoundRobin => "roundrobin",
+            PlacementKind::LeastLoaded => "leastloaded",
+            PlacementKind::MarginalEnergy => "marginalenergy",
+        }
+    }
+
+    /// Parse a CLI identifier (accepts common spellings).
+    pub fn parse(id: &str) -> Option<PlacementKind> {
+        Some(match id {
+            "roundrobin" | "round-robin" | "rr" => PlacementKind::RoundRobin,
+            "leastloaded" | "least-loaded" | "least" => PlacementKind::LeastLoaded,
+            "marginalenergy" | "marginal-energy" | "marginal" | "me" => {
+                PlacementKind::MarginalEnergy
+            }
+            _ => return None,
+        })
     }
 }
 
@@ -178,6 +230,20 @@ mod tests {
             assert_eq!(FleetPolicyKind::parse(kind.id()), Some(kind));
         }
         assert!(FleetPolicyKind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn placement_ids_round_trip() {
+        for kind in [
+            PlacementKind::RoundRobin,
+            PlacementKind::LeastLoaded,
+            PlacementKind::MarginalEnergy,
+        ] {
+            assert_eq!(PlacementKind::parse(kind.id()), Some(kind));
+        }
+        assert_eq!(PlacementKind::parse("rr"), Some(PlacementKind::RoundRobin));
+        assert_eq!(PlacementKind::parse("marginal"), Some(PlacementKind::MarginalEnergy));
+        assert!(PlacementKind::parse("bogus").is_none());
     }
 
     #[test]

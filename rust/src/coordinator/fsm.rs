@@ -21,6 +21,7 @@ pub enum FsmState {
 }
 
 impl FsmState {
+    /// Short state label for traces and telemetry.
     pub fn label(self) -> &'static str {
         match self {
             FsmState::SlowStart => "slow-start",
@@ -34,8 +35,11 @@ impl FsmState {
 /// Channel feedback classification.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Feedback {
+    /// Feedback improved beyond the tolerance band.
     Positive,
+    /// Feedback within the tolerance band.
     Neutral,
+    /// Feedback regressed beyond the tolerance band.
     Negative,
 }
 

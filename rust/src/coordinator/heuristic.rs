@@ -20,6 +20,7 @@ use crate::dataset::{partition_files_capped, Dataset, Partition};
 /// Result of Algorithm 1.
 #[derive(Debug, Clone)]
 pub struct HeuristicInit {
+    /// Partitioned dataset (lines 1–8).
     pub partitions: Vec<Partition>,
     /// Total channels to open (`numChannels`, line 9).
     pub num_channels: u32,

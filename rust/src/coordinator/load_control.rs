@@ -36,16 +36,19 @@ impl Default for LoadThresholds {
 pub trait Governor: std::fmt::Debug {
     /// Inspect the interval telemetry and adjust the client CPU setting.
     fn control(&mut self, telemetry: &Telemetry, cpu: &mut CpuState);
+    /// Governor name for traces.
     fn name(&self) -> &'static str;
 }
 
 /// Algorithm 3 verbatim.
 #[derive(Debug, Clone, Default)]
 pub struct ThresholdGovernor {
+    /// Algorithm 3 load thresholds.
     pub thresholds: LoadThresholds,
 }
 
 impl ThresholdGovernor {
+    /// A threshold governor with the given thresholds.
     pub fn new(thresholds: LoadThresholds) -> Self {
         ThresholdGovernor { thresholds }
     }
@@ -95,6 +98,7 @@ impl Governor for NullGovernor {
 /// "w/o scaling" ablation run under this governor.
 #[derive(Debug, Clone)]
 pub struct OndemandGovernor {
+    /// Utilization level ondemand steers the CPU toward.
     pub target_util: f64,
 }
 

@@ -19,6 +19,7 @@ use crate::transfer::TransferEngine;
 use crate::units::SimDuration;
 
 #[derive(Debug)]
+/// Algorithm 5 — Energy-Efficient Maximum Throughput (EEMT).
 pub struct MaxThroughput {
     params: TunerParams,
     governor: Box<dyn Governor>,
@@ -30,6 +31,7 @@ pub struct MaxThroughput {
 }
 
 impl MaxThroughput {
+    /// Fresh EEMT instance with the given tuner knobs.
     pub fn new(params: TunerParams) -> Self {
         MaxThroughput {
             governor: make_governor(
@@ -45,14 +47,17 @@ impl MaxThroughput {
         }
     }
 
+    /// Current FSM state.
     pub fn fsm_state(&self) -> FsmState {
         self.state
     }
 
+    /// Channel count the algorithm currently wants.
     pub fn num_channels(&self) -> u32 {
         self.num_ch
     }
 
+    /// Reference throughput (`refTput`), bits/s.
     pub fn ref_tput_bps(&self) -> f64 {
         self.ref_tput
     }

@@ -22,6 +22,7 @@ use crate::transfer::TransferEngine;
 use crate::units::SimDuration;
 
 #[derive(Debug)]
+/// Algorithm 4 — Minimum Energy (ME).
 pub struct MinEnergy {
     params: TunerParams,
     governor: Box<dyn Governor>,
@@ -34,6 +35,7 @@ pub struct MinEnergy {
 }
 
 impl MinEnergy {
+    /// Fresh ME instance with the given tuner knobs.
     pub fn new(params: TunerParams) -> Self {
         MinEnergy {
             governor: make_governor(
@@ -141,6 +143,7 @@ impl MinEnergy {
         self.state
     }
 
+    /// Channel count the algorithm currently wants.
     pub fn num_channels(&self) -> u32 {
         self.num_ch
     }

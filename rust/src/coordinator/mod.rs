@@ -15,7 +15,9 @@
 //! * [`algorithm`] — the common [`algorithm::Algorithm`] trait and the
 //!   factory used by sessions, experiments and the CLI.
 //! * [`fleet`] — cross-session arbitration of the shared host's
-//!   cores/frequency/channel budget (multi-tenant extension).
+//!   cores/frequency/channel budget (multi-tenant extension), plus the
+//!   [`PlacementKind`] policies the multi-host dispatcher ranks
+//!   candidate hosts by (multi-host extension).
 
 pub mod algorithm;
 pub mod fleet;
@@ -30,6 +32,6 @@ pub mod slow_start;
 pub mod target_throughput;
 
 pub use algorithm::{Algorithm, AlgorithmKind, InitPlan};
-pub use fleet::{FleetDirective, FleetPolicy, FleetPolicyKind};
+pub use fleet::{FleetDirective, FleetPolicy, FleetPolicyKind, PlacementKind};
 pub use fsm::{Feedback, FsmState};
 pub use sla::SlaPolicy;

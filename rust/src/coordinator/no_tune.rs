@@ -21,10 +21,12 @@ pub struct NoTune {
 }
 
 impl NoTune {
+    /// A static transfer pinned at `channels` channels.
     pub fn new(channels: u32) -> Self {
         NoTune { channels: channels.max(1) }
     }
 
+    /// The fixed channel count.
     pub fn channels(&self) -> u32 {
         self.channels
     }

@@ -15,10 +15,12 @@ pub enum SlaPolicy {
 }
 
 impl SlaPolicy {
+    /// True for the energy-minimizing SLA.
     pub fn is_energy(&self) -> bool {
         matches!(self, SlaPolicy::Energy)
     }
 
+    /// The target rate, for the target-throughput SLA.
     pub fn target(&self) -> Option<Rate> {
         match self {
             SlaPolicy::TargetThroughput(r) => Some(*r),
@@ -26,6 +28,7 @@ impl SlaPolicy {
         }
     }
 
+    /// SLA name for tables and traces.
     pub fn name(&self) -> &'static str {
         match self {
             SlaPolicy::Energy => "energy",

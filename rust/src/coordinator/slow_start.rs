@@ -28,6 +28,7 @@ impl SlowStart {
         SlowStart { bandwidth, max_channels, rounds_left: rounds.max(1) }
     }
 
+    /// True once every correction round has run.
     pub fn done(&self) -> bool {
         self.rounds_left == 0
     }

@@ -21,12 +21,16 @@ use crate::units::{Rate, SimDuration};
 /// EETT's reduced state machine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TargetState {
+    /// Initial correction phase.
     SlowStart,
+    /// Below target: adding channels.
     Increase,
+    /// Above target: shedding channels.
     Recovery,
 }
 
 #[derive(Debug)]
+/// Algorithm 6 — Energy-Efficient Target Throughput (EETT).
 pub struct TargetThroughput {
     params: TunerParams,
     governor: Box<dyn Governor>,
@@ -37,6 +41,7 @@ pub struct TargetThroughput {
 }
 
 impl TargetThroughput {
+    /// Fresh EETT instance for `target`.
     pub fn new(params: TunerParams, target: Rate) -> Self {
         TargetThroughput {
             governor: make_governor(
@@ -52,14 +57,17 @@ impl TargetThroughput {
         }
     }
 
+    /// Current reduced-FSM state.
     pub fn state(&self) -> TargetState {
         self.state
     }
 
+    /// Channel count the algorithm currently wants.
     pub fn num_channels(&self) -> u32 {
         self.num_ch
     }
 
+    /// The SLA target rate.
     pub fn target(&self) -> Rate {
         self.target
     }

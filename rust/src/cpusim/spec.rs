@@ -36,10 +36,12 @@ pub struct CpuSpec {
 }
 
 impl CpuSpec {
+    /// Bottom of the P-state ladder.
     pub fn min_freq(&self) -> Freq {
         *self.freq_levels.first().expect("non-empty ladder")
     }
 
+    /// Top of the P-state ladder.
     pub fn max_freq(&self) -> Freq {
         *self.freq_levels.last().expect("non-empty ladder")
     }

@@ -47,14 +47,17 @@ impl CpuState {
         }
     }
 
+    /// The CPU model this setting runs on.
     pub fn spec(&self) -> &CpuSpec {
         &self.spec
     }
 
+    /// Cores currently online.
     pub fn active_cores(&self) -> u32 {
         self.active_cores
     }
 
+    /// Current core frequency.
     pub fn freq(&self) -> Freq {
         self.spec.freq_levels[self.freq_index]
     }
@@ -66,18 +69,22 @@ impl CpuState {
         self.freq_index
     }
 
+    /// True at the top P-state.
     pub fn at_max_freq(&self) -> bool {
         self.freq_index + 1 == self.spec.freq_levels.len()
     }
 
+    /// True at the bottom P-state.
     pub fn at_min_freq(&self) -> bool {
         self.freq_index == 0
     }
 
+    /// True with every core online.
     pub fn at_max_cores(&self) -> bool {
         self.active_cores == self.spec.num_cores
     }
 
+    /// True with a single core online.
     pub fn at_min_cores(&self) -> bool {
         self.active_cores == 1
     }

@@ -9,11 +9,14 @@ pub struct FileId(pub u32);
 /// A single file in a dataset.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FileSpec {
+    /// Stable identifier within the dataset.
     pub id: FileId,
+    /// File size.
     pub size: Bytes,
 }
 
 impl FileSpec {
+    /// A file with the given id and size.
     pub fn new(id: u32, size: Bytes) -> Self {
         FileSpec { id: FileId(id), size }
     }
@@ -22,23 +25,29 @@ impl FileSpec {
 /// A named collection of files — the unit a transfer session moves.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Dataset family name (e.g. `"medium"`).
     pub name: String,
+    /// Every file to transfer.
     pub files: Vec<FileSpec>,
 }
 
 impl Dataset {
+    /// A dataset from an explicit file list.
     pub fn new(name: impl Into<String>, files: Vec<FileSpec>) -> Self {
         Dataset { name: name.into(), files }
     }
 
+    /// Number of files.
     pub fn num_files(&self) -> usize {
         self.files.len()
     }
 
+    /// Sum of all file sizes.
     pub fn total_size(&self) -> Bytes {
         self.files.iter().map(|f| f.size).sum()
     }
 
+    /// Mean file size (zero for an empty dataset).
     pub fn avg_file_size(&self) -> Bytes {
         if self.files.is_empty() {
             Bytes::ZERO

@@ -12,13 +12,18 @@ use crate::units::Bytes;
 /// Recipe for a synthetic dataset.
 #[derive(Debug, Clone)]
 pub struct DatasetSpec {
+    /// Name of the generated dataset.
     pub name: String,
+    /// How many files to draw.
     pub num_files: usize,
+    /// Target mean file size.
     pub avg_size: Bytes,
+    /// Target standard deviation of file sizes.
     pub std_size: Bytes,
 }
 
 impl DatasetSpec {
+    /// A spec with the given shape parameters.
     pub fn new(name: impl Into<String>, num_files: usize, avg_size: Bytes, std_size: Bytes) -> Self {
         DatasetSpec { name: name.into(), num_files, avg_size, std_size }
     }

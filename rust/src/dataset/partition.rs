@@ -29,8 +29,11 @@ const BAND_NAMES: [&str; 3] = ["small", "medium", "large"];
 /// Aggregate statistics of one partition.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PartitionStats {
+    /// Files in the partition.
     pub num_files: usize,
+    /// Sum of the partition's file sizes.
     pub total_size: Bytes,
+    /// Mean file size in the partition.
     pub avg_file_size: Bytes,
 }
 
@@ -52,6 +55,7 @@ pub struct Partition {
 }
 
 impl Partition {
+    /// Aggregate statistics over the partition's current file list.
     pub fn stats(&self) -> PartitionStats {
         let total: Bytes = self.files.iter().map(|f| f.size).sum();
         let n = self.files.len();
@@ -62,6 +66,7 @@ impl Partition {
         }
     }
 
+    /// Sum of the partition's file sizes.
     pub fn total_size(&self) -> Bytes {
         self.files.iter().map(|f| f.size).sum()
     }

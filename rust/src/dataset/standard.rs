@@ -25,14 +25,17 @@ pub fn large_spec() -> DatasetSpec {
     DatasetSpec::new("large", 128, Bytes::from_mb(222.78), Bytes::from_mb(15.19))
 }
 
+/// Generate the Table II small-file dataset.
 pub fn small_dataset(seed: u64) -> Dataset {
     generate(&small_spec(), seed)
 }
 
+/// Generate the Table II medium-file dataset.
 pub fn medium_dataset(seed: u64) -> Dataset {
     generate(&medium_spec(), seed)
 }
 
+/// Generate the Table II large-file dataset.
 pub fn large_dataset(seed: u64) -> Dataset {
     generate(&large_spec(), seed)
 }

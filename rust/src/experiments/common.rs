@@ -11,16 +11,22 @@ use crate::units::SimDuration;
 /// One experiment cell.
 #[derive(Debug, Clone)]
 pub struct Cell {
+    /// Testbed name.
     pub testbed: String,
+    /// Dataset family name.
     pub dataset: String,
+    /// Algorithm to run.
     pub kind: AlgorithmKind,
+    /// Tuner knobs.
     pub params: TunerParams,
+    /// RNG seed.
     pub seed: u64,
     /// Session time cap (slow sweep points need more than the default).
     pub max_sim_time: SimDuration,
 }
 
 impl Cell {
+    /// A cell with default knobs.
     pub fn new(
         testbed: impl Into<String>,
         dataset: impl Into<String>,
@@ -36,16 +42,19 @@ impl Cell {
         }
     }
 
+    /// Replace the tuner parameters.
     pub fn with_params(mut self, params: TunerParams) -> Cell {
         self.params = params;
         self
     }
 
+    /// Set the RNG seed.
     pub fn with_seed(mut self, seed: u64) -> Cell {
         self.seed = seed;
         self
     }
 
+    /// Raise the session time cap.
     pub fn with_max_sim_time(mut self, cap: SimDuration) -> Cell {
         self.max_sim_time = cap;
         self
@@ -95,6 +104,7 @@ pub fn fmt_tput(out: &SessionOutcome) -> String {
     }
 }
 
+/// Format joules as a kJ string for tables.
 pub fn fmt_energy_kj(joules: f64) -> String {
     format!("{:.2} kJ", joules / 1e3)
 }

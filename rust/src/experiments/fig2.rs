@@ -16,9 +16,12 @@ use crate::metrics::Table;
 use crate::sim::session::SessionOutcome;
 use std::path::Path;
 
+/// Testbeds of the Figure 2 grid, paper order.
 pub const TESTBEDS: [&str; 3] = ["chameleon", "cloudlab", "didclab"];
+/// Datasets of the Figure 2 grid, paper order.
 pub const DATASETS: [&str; 4] = ["small", "medium", "large", "mixed"];
 
+/// The tools compared in Figure 2 (label, algorithm).
 pub fn tools() -> Vec<(&'static str, AlgorithmKind)> {
     vec![
         ("wget", AlgorithmKind::Wget),
@@ -33,7 +36,9 @@ pub fn tools() -> Vec<(&'static str, AlgorithmKind)> {
 
 /// All outcomes of the Figure 2 grid, in (testbed, dataset, tool) order.
 pub struct Fig2Results {
+    /// (testbed, dataset, tool, outcome) in grid order.
     pub outcomes: Vec<(String, String, String, SessionOutcome)>,
+    /// Rendered throughput / energy tables.
     pub tables: Vec<Table>,
 }
 
@@ -85,6 +90,7 @@ pub fn run(seed: u64) -> Fig2Results {
 }
 
 impl Fig2Results {
+    /// Look one grid cell up by its labels.
     pub fn outcome(&self, testbed: &str, dataset: &str, tool: &str) -> &SessionOutcome {
         &self
             .outcomes
@@ -111,6 +117,7 @@ impl Fig2Results {
         }
     }
 
+    /// Write the per-panel CSV files into `dir`.
     pub fn save_csvs(&self, dir: impl AsRef<Path>) -> anyhow::Result<()> {
         let dir = dir.as_ref();
         for (i, t) in self.tables.iter().enumerate() {
@@ -134,6 +141,7 @@ pub struct Fig2Headlines {
 }
 
 impl Fig2Headlines {
+    /// Print the headline comparisons.
     pub fn print(&self) {
         println!("Fig2 headlines (Chameleon, mixed dataset):");
         println!(

@@ -21,12 +21,15 @@ pub const PANELS: [(&str, f64); 2] = [("chameleon", 10_000.0), ("cloudlab", 1_00
 /// Target fractions of the nominal bandwidth.
 pub const FRACTIONS: [f64; 4] = [0.8, 0.6, 0.4, 0.2];
 
+/// All outcomes of the Figure 3 target-throughput comparison.
 pub struct Fig3Results {
     /// (testbed, target, tool, outcome)
     pub outcomes: Vec<(String, Rate, String, SessionOutcome)>,
+    /// Rendered tables.
     pub tables: Vec<Table>,
 }
 
+/// Run the Figure 3 panels at `seed`.
 pub fn run(seed: u64) -> Fig3Results {
     let mut cells = Vec::new();
     let mut keys = Vec::new();
@@ -92,10 +95,12 @@ fn lookup<'a>(
 }
 
 impl Fig3Results {
+    /// Look one cell up by testbed, target and tool.
     pub fn outcome(&self, tb: &str, target: Rate, tool: &str) -> &SessionOutcome {
         lookup(&self.outcomes, tb, target, tool)
     }
 
+    /// Write the per-panel CSV files into `dir`.
     pub fn save_csvs(&self, dir: impl AsRef<Path>) -> anyhow::Result<()> {
         let dir = dir.as_ref();
         for (t, (tb, _)) in self.tables.iter().zip(PANELS) {

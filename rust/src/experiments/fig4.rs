@@ -17,6 +17,7 @@ use crate::metrics::Table;
 use crate::sim::session::SessionOutcome;
 use std::path::Path;
 
+/// Testbeds of the Figure 4 ablation, paper order.
 pub const TESTBEDS: [&str; 3] = ["chameleon", "cloudlab", "didclab"];
 
 /// The six bars of each Figure 4 panel.
@@ -32,12 +33,15 @@ pub fn variants() -> Vec<(&'static str, AlgorithmKind, TunerParams)> {
     ]
 }
 
+/// All outcomes of the Figure 4 scaling ablation.
 pub struct Fig4Results {
     /// (testbed, variant, outcome)
     pub outcomes: Vec<(String, String, SessionOutcome)>,
+    /// Rendered tables.
     pub tables: Vec<Table>,
 }
 
+/// Run the Figure 4 ablation at `seed`.
 pub fn run(seed: u64) -> Fig4Results {
     let vars = variants();
     let mut cells = Vec::new();
@@ -74,6 +78,7 @@ pub fn run(seed: u64) -> Fig4Results {
 }
 
 impl Fig4Results {
+    /// Look one cell up by testbed and variant.
     pub fn outcome(&self, tb: &str, variant: &str) -> &SessionOutcome {
         &self
             .outcomes
@@ -90,6 +95,7 @@ impl Fig4Results {
         1.0 - v / r
     }
 
+    /// Print the headline savings.
     pub fn print_headlines(&self) {
         for tb in TESTBEDS {
             println!("Fig4 on {tb} (vs Alan et al., client energy):");
@@ -106,6 +112,7 @@ impl Fig4Results {
         }
     }
 
+    /// Write the per-panel CSV files into `dir`.
     pub fn save_csvs(&self, dir: impl AsRef<Path>) -> anyhow::Result<()> {
         let dir = dir.as_ref();
         for (t, tb) in self.tables.iter().zip(TESTBEDS) {

@@ -22,9 +22,13 @@ use crate::units::SimDuration;
 /// One point of the concurrency sweep.
 #[derive(Debug, Clone, Copy)]
 pub struct SweepPoint {
+    /// Static channel count of the point.
     pub channels: u32,
+    /// Whole-session throughput, Gbps.
     pub throughput_gbps: f64,
+    /// Client energy, kJ.
     pub client_energy_kj: f64,
+    /// Session duration, seconds.
     pub duration_s: f64,
 }
 

@@ -19,6 +19,11 @@
 //! The compiled predictor is executed from Rust through
 //! [`runtime`] (PJRT CPU client); Python never runs on the decision path.
 
+// Documentation is a first-class surface: every public item must carry a
+// doc comment, and CI runs `cargo doc --no-deps` with warnings denied so
+// drift fails the build.
+#![warn(missing_docs)]
+
 pub mod units;
 pub mod rng;
 pub mod testutil;

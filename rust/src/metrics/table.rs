@@ -7,12 +7,16 @@ use std::path::Path;
 /// A simple column-aligned result table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Row cells (outer = rows).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given caption and headers.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
         Table {
             title: title.into(),
@@ -21,6 +25,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header count).
     pub fn push_row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);

@@ -49,6 +49,7 @@ impl BackgroundTraffic {
         Self::new(fraction, 0.0, 0.0, 0.95)
     }
 
+    /// A process with explicit OU parameters (mean level, reversion rate `theta`, noise `sigma`, hard ceiling).
     pub fn new(mean: f64, theta: f64, sigma: f64, max_fraction: f64) -> Self {
         assert!((0.0..1.0).contains(&mean), "mean fraction must be in [0,1)");
         BackgroundTraffic {

@@ -56,11 +56,13 @@ impl LinkParams {
 /// A bottleneck link with time-varying residual capacity.
 #[derive(Debug, Clone)]
 pub struct Link {
+    /// Static path parameters (capacity, RTT, window/knee model).
     pub params: LinkParams,
     bg: BackgroundTraffic,
 }
 
 impl Link {
+    /// A link with the given parameters and background process.
     pub fn new(params: LinkParams, bg: BackgroundTraffic) -> Self {
         Link { params, bg }
     }

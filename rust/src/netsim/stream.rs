@@ -38,10 +38,12 @@ impl StreamState {
         StreamState { window: avg_win, avg_win, slow_start: false }
     }
 
+    /// Current congestion window.
     pub fn window(&self) -> Bytes {
         self.window
     }
 
+    /// True while the window is still ramping.
     pub fn in_slow_start(&self) -> bool {
         self.slow_start
     }

@@ -5,7 +5,9 @@ use crate::units::{Energy, Power, SimDuration, SimTime};
 /// One power sample (kept for time-series plots and debugging).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EnergySample {
+    /// When the sample was taken.
     pub at: SimTime,
+    /// Instantaneous power at that instant.
     pub power: Power,
 }
 
@@ -20,6 +22,7 @@ pub struct RaplMeter {
 }
 
 impl RaplMeter {
+    /// A meter with cumulative counters only (no sample series).
     pub fn new() -> Self {
         RaplMeter { total: Energy::ZERO, samples: Vec::new(), keep_samples: false }
     }
@@ -47,6 +50,7 @@ impl RaplMeter {
         self.total.saturating_sub(earlier)
     }
 
+    /// The retained sample series (empty unless recording).
     pub fn samples(&self) -> &[EnergySample] {
         &self.samples
     }
@@ -61,6 +65,7 @@ pub struct NodeMeter {
 }
 
 impl NodeMeter {
+    /// A wall meter with the given always-on platform base.
     pub fn new(base: Power) -> Self {
         NodeMeter { rapl: RaplMeter::new(), base }
     }
@@ -70,14 +75,17 @@ impl NodeMeter {
         NodeMeter::new(Power::from_watts(45.0))
     }
 
+    /// Integrate one tick: package power plus the platform base.
     pub fn record(&mut self, at: SimTime, package: Power, dt: SimDuration) {
         self.rapl.record(at, package + self.base, dt);
     }
 
+    /// Cumulative wall energy.
     pub fn total(&self) -> Energy {
         self.rapl.total()
     }
 
+    /// The always-on platform base power.
     pub fn base(&self) -> Power {
         self.base
     }

@@ -16,6 +16,7 @@ pub struct PowerParams {
     pub dyn_kappa: f64,
     /// Core voltage at the bottom / top of the P-state ladder, V.
     pub v_min: f64,
+    /// Core voltage at the top of the P-state ladder, V.
     pub v_max: f64,
     /// DRAM power per GB/s of moved data, W (RAPL DRAM domain).
     pub dram_w_per_gbs: f64,
@@ -25,11 +26,14 @@ pub struct PowerParams {
 /// (cores, freq, utilization, traffic) operating point to watts.
 #[derive(Debug, Clone)]
 pub struct PowerModel {
+    /// CPU topology / P-state ladder the model covers.
     pub spec: CpuSpec,
+    /// The model's power parameters.
     pub params: PowerParams,
 }
 
 impl PowerModel {
+    /// Pair a CPU spec with its power parameters.
     pub fn new(spec: CpuSpec, params: PowerParams) -> Self {
         PowerModel { spec, params }
     }
@@ -72,6 +76,27 @@ impl PowerModel {
     /// Settings move only at tuning/arbitration timeouts (thousands of
     /// ticks apart), so the epoch-cached stepper rebuilds this once per
     /// setting instead of re-deriving voltage and idle draw every tick.
+    /// The multi-host dispatcher prices candidate operating points
+    /// through the same coefficients, so placement projections agree
+    /// with what the meters will record.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use greendt::cpusim::standard::haswell_server;
+    /// use greendt::power::standard_power;
+    /// use greendt::units::Freq;
+    ///
+    /// let model = standard_power(&haswell_server());
+    /// let op = model.at(4, Freq::from_ghz(2.0));
+    /// // The frozen coefficients reproduce the full model bit-for-bit.
+    /// assert_eq!(
+    ///     op.power(0.5, 1e9),
+    ///     model.package_power(4, Freq::from_ghz(2.0), 0.5, 1e9),
+    /// );
+    /// // More utilization at the same point always costs more watts.
+    /// assert!(op.power(0.9, 1e9) > op.power(0.1, 1e9));
+    /// ```
     pub fn at(&self, active_cores: u32, f: Freq) -> OpPointPower {
         OpPointPower {
             cores: active_cores as f64,

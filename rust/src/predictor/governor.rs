@@ -27,12 +27,14 @@ pub enum PredictMode {
 }
 
 #[derive(Debug)]
+/// Governor that jumps to the predictor's best operating point.
 pub struct PredictiveGovernor {
     predictor: Predictor,
     mode: PredictMode,
 }
 
 impl PredictiveGovernor {
+    /// A governor over an explicit predictor backend.
     pub fn new(predictor: Predictor, mode: PredictMode) -> Self {
         PredictiveGovernor { predictor, mode }
     }
@@ -43,10 +45,12 @@ impl PredictiveGovernor {
         PredictiveGovernor { predictor: Predictor::load_or_oracle(), mode }
     }
 
+    /// True when the compiled PJRT backend is live.
     pub fn is_pjrt(&self) -> bool {
         self.predictor.is_pjrt()
     }
 
+    /// The SLA objective being served.
     pub fn mode(&self) -> PredictMode {
         self.mode
     }

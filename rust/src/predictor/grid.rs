@@ -8,8 +8,11 @@ use crate::sim::Telemetry;
 /// One operating point to evaluate.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Candidate {
+    /// Channel count of the candidate.
     pub channels: f32,
+    /// Active cores of the candidate.
     pub cores: f32,
+    /// Core frequency of the candidate, GHz.
     pub freq_ghz: f32,
 }
 

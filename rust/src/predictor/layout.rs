@@ -4,43 +4,78 @@
 //! `predictor_parity` integration test executes the compiled artifact
 //! against [`super::reference`] and fails on drift.
 
+/// Rows in the candidate matrix.
 pub const NUM_CANDIDATES: usize = 128;
+/// Pallas tile size along the candidate axis.
 pub const TILE: usize = 32;
 
+/// Columns per candidate row.
 pub const CAND_WIDTH: usize = 3;
+/// Candidate column: channel count.
 pub const CAND_CHANNELS: usize = 0;
+/// Candidate column: active cores.
 pub const CAND_CORES: usize = 1;
+/// Candidate column: frequency, GHz.
 pub const CAND_FREQ_GHZ: usize = 2;
 
+/// Length of the state vector.
 pub const STATE_WIDTH: usize = 24;
+/// State slot: available path capacity, bytes/s.
 pub const S_CAPACITY_BPS: usize = 0;
+/// State slot: round-trip time, s.
 pub const S_RTT_S: usize = 1;
+/// State slot: mean TCP window, bytes.
 pub const S_AVG_WIN_BYTES: usize = 2;
+/// State slot: overload-knee stream count.
 pub const S_KNEE_STREAMS: usize = 3;
+/// State slot: overload penalty slope.
 pub const S_OVERLOAD_GAMMA: usize = 4;
+/// State slot: overload penalty floor.
 pub const S_OVERLOAD_FLOOR: usize = 5;
+/// State slot: streams per channel.
 pub const S_PARALLELISM: usize = 6;
+/// State slot: bytes still to move.
 pub const S_REMAINING_BYTES: usize = 7;
+/// State slot: mean file size, bytes.
 pub const S_AVG_FILE_BYTES: usize = 8;
+/// State slot: pipelining level.
 pub const S_PP_LEVEL: usize = 9;
+/// State slot: CPU cycles per byte moved.
 pub const S_CYCLES_PER_BYTE: usize = 10;
+/// State slot: CPU cycles per request.
 pub const S_CYCLES_PER_REQ: usize = 11;
+/// State slot: CPU cycles per stream-second.
 pub const S_CYCLES_PER_STREAM: usize = 12;
+/// State slot: usable CPU fraction.
 pub const S_MAX_APP_UTIL: usize = 13;
+/// State slot: package static power, W.
 pub const S_PKG_STATIC_W: usize = 14;
+/// State slot: per-core idle power, W.
 pub const S_CORE_IDLE_BASE_W: usize = 15;
+/// State slot: per-core idle power per GHz, W.
 pub const S_CORE_IDLE_PER_GHZ_W: usize = 16;
+/// State slot: dynamic power coefficient κ.
 pub const S_DYN_KAPPA: usize = 17;
+/// State slot: voltage at the bottom P-state, V.
 pub const S_V_MIN: usize = 18;
+/// State slot: voltage at the top P-state, V.
 pub const S_V_MAX: usize = 19;
+/// State slot: bottom of the P-state ladder, GHz.
 pub const S_F_MIN_GHZ: usize = 20;
+/// State slot: top of the P-state ladder, GHz.
 pub const S_F_MAX_GHZ: usize = 21;
+/// State slot: DRAM power per GB/s, W.
 pub const S_DRAM_W_PER_GBS: usize = 22;
+/// State slot: reserved / padding.
 pub const S_RESERVED: usize = 23;
 
+/// Columns per output row.
 pub const OUT_WIDTH: usize = 3;
+/// Output column: predicted throughput, bytes/s.
 pub const OUT_TPUT_BPS: usize = 0;
+/// Output column: predicted package power, W.
 pub const OUT_POWER_W: usize = 1;
+/// Output column: predicted energy to completion, J.
 pub const OUT_ENERGY_J: usize = 2;
 
 /// Energy assigned to infeasible candidates (mirrors the Python constant).

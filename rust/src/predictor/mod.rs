@@ -61,14 +61,17 @@ impl Predictor {
         }
     }
 
+    /// A predictor pinned to the pure-Rust oracle backend.
     pub fn oracle() -> Predictor {
         Predictor { backend: Backend::Oracle }
     }
 
+    /// Load a compiled HLO artifact from `path` (requires the `pjrt` feature).
     pub fn from_artifact(path: &str) -> Result<Predictor> {
         Ok(Predictor { backend: Backend::Pjrt(Executable::load_hlo_text(path)?) })
     }
 
+    /// True when the compiled PJRT backend is live.
     pub fn is_pjrt(&self) -> bool {
         matches!(self.backend, Backend::Pjrt(_))
     }

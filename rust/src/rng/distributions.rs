@@ -4,17 +4,21 @@ use super::Xoshiro256;
 
 /// A samplable distribution over `f64`.
 pub trait Distribution {
+    /// Draw one sample.
     fn sample(&self, rng: &mut Xoshiro256) -> f64;
 }
 
 /// Uniform over [lo, hi).
 #[derive(Debug, Clone, Copy)]
 pub struct Uniform {
+    /// Inclusive lower bound.
     pub lo: f64,
+    /// Exclusive upper bound.
     pub hi: f64,
 }
 
 impl Uniform {
+    /// Uniform over `[lo, hi)`.
     pub fn new(lo: f64, hi: f64) -> Self {
         assert!(hi >= lo, "Uniform requires hi >= lo");
         Uniform { lo, hi }
@@ -30,11 +34,14 @@ impl Distribution for Uniform {
 /// Normal(mean, std) via Marsaglia's polar method.
 #[derive(Debug, Clone, Copy)]
 pub struct Normal {
+    /// Mean of the distribution.
     pub mean: f64,
+    /// Standard deviation.
     pub std: f64,
 }
 
 impl Normal {
+    /// Normal with the given mean and standard deviation.
     pub fn new(mean: f64, std: f64) -> Self {
         assert!(std >= 0.0, "Normal requires std >= 0");
         Normal { mean, std }
@@ -75,10 +82,12 @@ impl LogNormal {
         LogNormal { mu, sigma: sigma2.sqrt() }
     }
 
+    /// µ of the underlying normal.
     pub fn mu(&self) -> f64 {
         self.mu
     }
 
+    /// σ of the underlying normal.
     pub fn sigma(&self) -> f64 {
         self.sigma
     }
@@ -95,10 +104,12 @@ impl Distribution for LogNormal {
 /// inter-arrival times in the background-traffic process.
 #[derive(Debug, Clone, Copy)]
 pub struct Exponential {
+    /// Rate parameter (mean `1/lambda`).
     pub lambda: f64,
 }
 
 impl Exponential {
+    /// Exponential with rate `lambda`.
     pub fn new(lambda: f64) -> Self {
         assert!(lambda > 0.0, "Exponential requires lambda > 0");
         Exponential { lambda }

@@ -27,6 +27,7 @@ impl Xoshiro256 {
     }
 
     #[inline]
+    /// The next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;

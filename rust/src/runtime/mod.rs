@@ -21,11 +21,14 @@ use anyhow::Result;
 /// A dense f32 tensor with row-major shape, the runtime's argument type.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArrayF32 {
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
+    /// The flattened elements.
     pub data: Vec<f32>,
 }
 
 impl ArrayF32 {
+    /// A tensor with the given shape; checks the element count.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
         let expect: usize = shape.iter().product();
         anyhow::ensure!(
@@ -38,14 +41,17 @@ impl ArrayF32 {
         Ok(ArrayF32 { shape, data })
     }
 
+    /// A rank-1 tensor.
     pub fn vector(data: Vec<f32>) -> Self {
         ArrayF32 { shape: vec![data.len()], data }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True for an empty tensor.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -127,6 +133,7 @@ mod backend {
             Ok(vecs)
         }
 
+        /// Path the executable was loaded from.
         pub fn path(&self) -> &str {
             &self.path
         }
@@ -150,6 +157,7 @@ mod backend {
     }
 
     impl Executable {
+        /// Always fails without the `pjrt` feature.
         pub fn load_hlo_text(path: impl AsRef<Path>) -> Result<Self> {
             bail!(
                 "built without the `pjrt` feature: cannot load {} (the \
@@ -158,10 +166,12 @@ mod backend {
             )
         }
 
+        /// Unreachable: the stub cannot be constructed.
         pub fn run_f32(&self, _inputs: &[ArrayF32]) -> Result<Vec<Vec<f32>>> {
             match self.never {}
         }
 
+        /// Path the executable would have been loaded from.
         pub fn path(&self) -> &str {
             &self.path
         }

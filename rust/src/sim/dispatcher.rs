@@ -1,0 +1,848 @@
+//! Multi-host fleet dispatcher: place each arriving session on the host
+//! that serves it cheapest.
+//!
+//! The paper tunes *how* a transfer runs on one end system; GreenDataFlow
+//! (arXiv:1810.05892) shows the larger fleet-level win comes from *where*
+//! it runs: on a heterogeneous fleet, the host whose operating point
+//! yields the lowest marginal energy should take the next session. This
+//! module owns that layer:
+//!
+//! * [`HostSpec`] / [`run_dispatcher`] — several independent hosts (each
+//!   with its own link, power model and session-slot pool) driven in
+//!   lockstep behind one [`Dispatcher`];
+//! * [`PlacementKind`] policies — `RoundRobin`, `LeastLoaded` and
+//!   `MarginalEnergy`, the last scoring candidates by predicted
+//!   joules-per-byte deltas priced through the same
+//!   [`PowerModel::at`](crate::power::PowerModel::at) /
+//!   [`OpPointPower`](crate::power::OpPointPower) coefficients the
+//!   epoch-cached stepper runs on;
+//! * open workloads — a seeded [`PoissonArrivals`] process generating
+//!   [`SessionSpec`]s, instead of PR 1's scripted schedules;
+//! * admission control — a fleet-wide cap on *projected* aggregate host
+//!   power: arrivals that would push the projection past the cap wait in
+//!   a FIFO queue and retry as sessions depart;
+//! * decision telemetry — every placement emits a
+//!   [`DispatchRecord`](crate::sim::DispatchRecord) with the per-host
+//!   scores, so the dispatcher's behavior can be mined offline
+//!   (historical-log-driven tuning, arXiv:2104.01192).
+//!
+//! The driver extends the PR 2 event-horizon loop across hosts: each
+//! segment computes the earliest driver-level event over *all* hosts
+//! (arrivals, tuning timeouts, arbitrations, the time cap) and then runs
+//! a tight lockstep inner loop of bare `step()` calls, so ticks between
+//! cross-host deadlines stay as cheap as in the single-host fleet.
+
+use std::collections::VecDeque;
+
+use super::fleet::{FleetOutcome, HostWorld, TenantSpec};
+use super::telemetry::{DispatchRecord, PlacementScore};
+use crate::config::experiment::TunerParams;
+use crate::config::Testbed;
+use crate::coordinator::fleet::{FleetPolicyKind, PlacementKind};
+use crate::coordinator::AlgorithmKind;
+use crate::rng::{self, Distribution, Exponential};
+use crate::units::{Bytes, Energy, Power, SimDuration, SimTime};
+
+/// An open-workload session request. Exactly a [`TenantSpec`] — the
+/// dispatcher decides *which host* becomes the session's tenant world,
+/// then hands the spec to that host's fleet driver unchanged.
+pub type SessionSpec = TenantSpec;
+
+/// One host in the dispatcher's fleet: a named testbed (its own WAN
+/// path, CPUs, power models and meters) plus a bound on how many
+/// concurrent sessions its slot pool accepts.
+#[derive(Debug, Clone)]
+pub struct HostSpec {
+    /// Display name, unique within the fleet (used in telemetry and
+    /// outcomes).
+    pub name: String,
+    /// The end system + path this host models.
+    pub testbed: Testbed,
+    /// Hard cap on concurrently admitted sessions (the slot pool size).
+    pub max_sessions: u32,
+}
+
+impl HostSpec {
+    /// A host with the default 8-session slot pool.
+    pub fn new(name: impl Into<String>, testbed: Testbed) -> Self {
+        HostSpec { name: name.into(), testbed, max_sessions: 8 }
+    }
+
+    /// Override the slot-pool size.
+    pub fn with_max_sessions(mut self, max_sessions: u32) -> Self {
+        self.max_sessions = max_sessions.max(1);
+        self
+    }
+}
+
+/// A seeded Poisson arrival process: `count` sessions whose inter-arrival
+/// times are exponential with rate `rate_per_sec`. Fully deterministic
+/// under a fixed seed (the generator draws from its own
+/// [`rng::stream`]), so open-workload experiments are reproducible.
+#[derive(Debug, Clone, Copy)]
+pub struct PoissonArrivals {
+    /// Mean arrival rate, sessions per simulated second.
+    pub rate_per_sec: f64,
+    /// How many sessions to generate.
+    pub count: u32,
+    /// RNG seed for the inter-arrival draws (and derived dataset seeds).
+    pub seed: u64,
+}
+
+impl PoissonArrivals {
+    /// A process with `rate_per_sec` mean arrivals per second.
+    pub fn new(rate_per_sec: f64, count: u32, seed: u64) -> Self {
+        assert!(rate_per_sec > 0.0, "Poisson arrivals need a positive rate");
+        PoissonArrivals { rate_per_sec, count, seed }
+    }
+
+    /// The arrival instants: a strictly increasing sequence of `count`
+    /// times starting after t = 0.
+    pub fn times(&self) -> Vec<SimTime> {
+        let mut rng = rng::stream(self.seed, "poisson-arrivals");
+        let exp = Exponential::new(self.rate_per_sec);
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(self.count as usize);
+        for _ in 0..self.count {
+            t += exp.sample(&mut rng);
+            out.push(SimTime::from_secs(t));
+        }
+        out
+    }
+
+    /// Generate the session specs: one dataset per session drawn from the
+    /// standard family `dataset_family` (`"small"`, `"medium"`, `"large"`,
+    /// `"mixed"`) with per-session derived seeds, all tuned by
+    /// `algorithm`. Returns `None` for an unknown family name.
+    pub fn sessions(
+        &self,
+        dataset_family: &str,
+        algorithm: AlgorithmKind,
+    ) -> Option<Vec<SessionSpec>> {
+        self.times()
+            .into_iter()
+            .enumerate()
+            .map(|(i, at)| {
+                let ds = crate::dataset::standard::by_name(
+                    dataset_family,
+                    self.seed.wrapping_add(1 + i as u64),
+                )?;
+                Some(TenantSpec::new(format!("session-{i}"), ds, algorithm).arriving_at(at))
+            })
+            .collect()
+    }
+}
+
+/// A candidate host as [`Dispatcher::place`] sees it: a snapshot of the
+/// host's occupancy plus the power projections the dispatcher computed
+/// for it. `projected_*` quantities assume the new session is placed on
+/// this host; `current_power_w` assumes it is not.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostCandidate {
+    /// Index of the host in the dispatcher's host list.
+    pub host: usize,
+    /// Sessions currently admitted and unfinished on this host.
+    pub active_sessions: u32,
+    /// Session slots still free (0 = the host cannot take the session).
+    pub free_slots: u32,
+    /// Predicted whole-host instrument power at the current session
+    /// count, W.
+    pub current_power_w: f64,
+    /// Predicted whole-host instrument power with the new session
+    /// placed here, W.
+    pub projected_power_w: f64,
+    /// Expected goodput of the new session if placed here, bytes/s.
+    pub projected_session_bps: f64,
+    /// Projected aggregate fleet power if placed here (every other host
+    /// at its current projection), W — what admission control compares
+    /// against the power cap.
+    pub projected_fleet_power_w: f64,
+}
+
+impl HostCandidate {
+    /// The `MarginalEnergy` score: predicted extra watts divided by the
+    /// new session's expected goodput — joules per byte moved. Infinite
+    /// when the host could not move any bytes for the session.
+    pub fn marginal_j_per_byte(&self) -> f64 {
+        if self.projected_session_bps <= 0.0 {
+            f64::INFINITY
+        } else {
+            (self.projected_power_w - self.current_power_w).max(0.0)
+                / self.projected_session_bps
+        }
+    }
+}
+
+/// What [`Dispatcher::place`] decided for one arriving session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlaceDecision {
+    /// Admit on this host (a [`HostCandidate::host`] index).
+    Admit(usize),
+    /// Some host has a free slot, but every placement would push the
+    /// projected fleet power past the cap — the session must wait.
+    QueuePowerCap,
+    /// No host has a free session slot.
+    QueueNoSlot,
+}
+
+/// The placement + admission state machine: ranks candidate hosts by the
+/// configured [`PlacementKind`] and enforces the fleet power cap. Pure
+/// over the candidate snapshots (no simulation access), so decisions are
+/// easy to test, replay and mine offline.
+#[derive(Debug, Clone)]
+pub struct Dispatcher {
+    placement: PlacementKind,
+    power_cap: Option<Power>,
+    /// Round-robin cursor (next host index to try first).
+    rr_cursor: usize,
+}
+
+impl Dispatcher {
+    /// A dispatcher using `placement`, admitting only while the projected
+    /// aggregate fleet power stays within `power_cap` (if set).
+    pub fn new(placement: PlacementKind, power_cap: Option<Power>) -> Self {
+        Dispatcher { placement, power_cap, rr_cursor: 0 }
+    }
+
+    /// Which placement policy this dispatcher ranks hosts by.
+    pub fn placement(&self) -> PlacementKind {
+        self.placement
+    }
+
+    /// Choose a host for one arriving session.
+    ///
+    /// Candidates are ranked by the placement policy; the best-ranked
+    /// host with a free slot whose projected fleet power fits the cap
+    /// wins. With a cap set, a worse-ranked host that fits is preferred
+    /// over queueing behind a better-ranked host that does not.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use greendt::coordinator::fleet::PlacementKind;
+    /// use greendt::sim::dispatcher::{Dispatcher, HostCandidate, PlaceDecision};
+    ///
+    /// let mut d = Dispatcher::new(PlacementKind::MarginalEnergy, None);
+    /// let candidates = [
+    ///     HostCandidate {
+    ///         host: 0,
+    ///         active_sessions: 1,
+    ///         free_slots: 3,
+    ///         current_power_w: 30.0,
+    ///         projected_power_w: 55.0,   // +25 W …
+    ///         projected_session_bps: 50e6, // … for 50 MB/s → 0.5 µJ/B
+    ///         projected_fleet_power_w: 75.0,
+    ///     },
+    ///     HostCandidate {
+    ///         host: 1,
+    ///         active_sessions: 0,
+    ///         free_slots: 4,
+    ///         current_power_w: 20.0,
+    ///         projected_power_w: 35.0,   // +15 W …
+    ///         projected_session_bps: 100e6, // … for 100 MB/s → 0.15 µJ/B
+    ///         projected_fleet_power_w: 65.0,
+    ///     },
+    /// ];
+    /// // Host 1 moves the session's bytes for fewer joules each: admit it.
+    /// assert_eq!(d.place(&candidates), PlaceDecision::Admit(1));
+    /// ```
+    pub fn place(&mut self, candidates: &[HostCandidate]) -> PlaceDecision {
+        if candidates.is_empty() {
+            return PlaceDecision::QueueNoSlot;
+        }
+        // Preference order over candidate positions.
+        let mut order: Vec<usize> = (0..candidates.len()).collect();
+        match self.placement {
+            PlacementKind::RoundRobin => {
+                order = (0..candidates.len())
+                    .map(|k| (self.rr_cursor + k) % candidates.len())
+                    .collect();
+            }
+            PlacementKind::LeastLoaded => {
+                order.sort_by_key(|&i| (candidates[i].active_sessions, candidates[i].host));
+            }
+            PlacementKind::MarginalEnergy => {
+                order.sort_by(|&a, &b| {
+                    candidates[a]
+                        .marginal_j_per_byte()
+                        .total_cmp(&candidates[b].marginal_j_per_byte())
+                        .then_with(|| candidates[a].host.cmp(&candidates[b].host))
+                });
+            }
+        }
+        let mut any_free = false;
+        for idx in order {
+            let c = &candidates[idx];
+            if c.free_slots == 0 {
+                continue;
+            }
+            any_free = true;
+            if let Some(cap) = self.power_cap {
+                if c.projected_fleet_power_w > cap.as_watts() + 1e-9 {
+                    continue;
+                }
+            }
+            if self.placement == PlacementKind::RoundRobin {
+                self.rr_cursor = (idx + 1) % candidates.len();
+            }
+            return PlaceDecision::Admit(c.host);
+        }
+        if any_free {
+            PlaceDecision::QueuePowerCap
+        } else {
+            PlaceDecision::QueueNoSlot
+        }
+    }
+}
+
+/// Everything needed to run a multi-host world.
+#[derive(Debug, Clone)]
+pub struct DispatcherConfig {
+    /// The fleet's hosts, in placement-index order.
+    pub hosts: Vec<HostSpec>,
+    /// The workload: scripted [`SessionSpec`]s or a generated
+    /// [`PoissonArrivals`] batch (see [`PoissonArrivals::sessions`]).
+    pub sessions: Vec<SessionSpec>,
+    /// How arriving sessions are placed on hosts.
+    pub placement: PlacementKind,
+    /// Per-host arbitration policy (always active in dispatcher mode —
+    /// each host needs an owner for its CPU knobs).
+    pub policy: FleetPolicyKind,
+    /// Fleet-wide admission cap on *projected* aggregate host power.
+    /// Admission control never admits a session whose projection exceeds
+    /// it; `None` admits freely. This bounds the steady-state projection,
+    /// not the instantaneous meters.
+    pub power_cap: Option<Power>,
+    /// Tuner knobs shared by every session's algorithm.
+    pub params: TunerParams,
+    /// Arbitration cadence of each host's fleet policy.
+    pub fleet_interval: SimDuration,
+    /// Base RNG seed; each host derives its own background-traffic seed.
+    pub seed: u64,
+    /// Simulation tick length (shared by every host).
+    pub tick: SimDuration,
+    /// Abort the run after this much simulated time.
+    pub max_sim_time: SimDuration,
+    /// Record per-timeout timelines for every session (costs memory).
+    pub record_timeline: bool,
+    /// Drive every host with the naive reference stepper instead of the
+    /// epoch-cached fast path (tests and benchmarks).
+    pub reference_stepper: bool,
+}
+
+impl DispatcherConfig {
+    /// A dispatcher fleet with default knobs (min-energy host policy, no
+    /// power cap) and no sessions yet.
+    pub fn new(hosts: Vec<HostSpec>, placement: PlacementKind) -> Self {
+        DispatcherConfig {
+            hosts,
+            sessions: Vec::new(),
+            placement,
+            policy: FleetPolicyKind::MinEnergyFleet,
+            power_cap: None,
+            params: TunerParams::default(),
+            fleet_interval: SimDuration::from_secs(3.0),
+            seed: 42,
+            tick: SimDuration::from_millis(100.0),
+            max_sim_time: SimDuration::from_secs(14_400.0),
+            record_timeline: false,
+            reference_stepper: false,
+        }
+    }
+
+    /// Replace the workload.
+    pub fn with_sessions(mut self, sessions: Vec<SessionSpec>) -> Self {
+        self.sessions = sessions;
+        self
+    }
+
+    /// Set the fleet-wide power cap.
+    pub fn with_power_cap(mut self, cap: Power) -> Self {
+        self.power_cap = Some(cap);
+        self
+    }
+
+    /// Set the RNG seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// What a dispatcher run produced: the fleet outcome (tenants flattened
+/// across hosts, per-host breakdowns in [`FleetOutcome::hosts`]) plus the
+/// dispatcher's own telemetry.
+#[derive(Debug, Clone)]
+pub struct DispatchOutcome {
+    /// Aggregate + per-tenant + per-host results.
+    pub fleet: FleetOutcome,
+    /// One record per placement decision, in decision order.
+    pub decisions: Vec<DispatchRecord>,
+    /// Sessions never admitted before the run ended (still queued or
+    /// still pending arrival at the time cap).
+    pub unplaced: Vec<String>,
+}
+
+/// Derive one host's RNG seed from the fleet seed (distinct background
+/// noise per host, reproducible from the pair).
+fn host_seed(seed: u64, host: usize) -> u64 {
+    seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(host as u64 + 1))
+}
+
+/// Snapshot every host into placement candidates (see [`HostCandidate`]).
+fn build_candidates(worlds: &[HostWorld], hosts: &[HostSpec]) -> Vec<HostCandidate> {
+    let current: Vec<(u32, f64)> = worlds
+        .iter()
+        .map(|w| {
+            // Occupancy, not activation: sessions registered this segment
+            // activate on the next tick but already claim their slot and
+            // their share of the projection, otherwise two simultaneous
+            // arrivals would both see an empty host.
+            let active = w.occupancy();
+            (active, w.projected_power_w(active))
+        })
+        .collect();
+    let fleet_base: f64 = current.iter().map(|(_, w)| w).sum();
+    worlds
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            let (active, cur_w) = current[i];
+            let proj_w = w.projected_power_w(active + 1);
+            HostCandidate {
+                host: i,
+                active_sessions: active,
+                free_slots: hosts[i].max_sessions.saturating_sub(active),
+                current_power_w: cur_w,
+                projected_power_w: proj_w,
+                projected_session_bps: w.projected_session_bps(active + 1),
+                projected_fleet_power_w: fleet_base - cur_w + proj_w,
+            }
+        })
+        .collect()
+}
+
+/// Turn one decision into its telemetry record.
+fn make_record(
+    now: f64,
+    session: &str,
+    requested_at: f64,
+    admitted: Option<usize>,
+    candidates: &[HostCandidate],
+    hosts: &[HostSpec],
+) -> DispatchRecord {
+    let scores = candidates
+        .iter()
+        .map(|c| PlacementScore {
+            host: hosts[c.host].name.clone(),
+            active_sessions: c.active_sessions,
+            current_power_w: c.current_power_w,
+            projected_power_w: c.projected_power_w,
+            projected_session_bps: c.projected_session_bps,
+            marginal_j_per_byte: c.marginal_j_per_byte(),
+        })
+        .collect();
+    let projected_fleet_power_w = match admitted {
+        Some(h) => candidates
+            .iter()
+            .find(|c| c.host == h)
+            .map(|c| c.projected_fleet_power_w)
+            .unwrap_or(0.0),
+        // Queued: report the best projection among hosts that had a free
+        // slot — the one that still broke the cap (or the fleet's current
+        // draw when no slot was free at all).
+        None => {
+            let best = candidates
+                .iter()
+                .filter(|c| c.free_slots > 0)
+                .map(|c| c.projected_fleet_power_w)
+                .fold(f64::INFINITY, f64::min);
+            if best.is_finite() {
+                best
+            } else {
+                candidates.iter().map(|c| c.current_power_w).sum()
+            }
+        }
+    };
+    DispatchRecord {
+        t_secs: now,
+        session: session.to_string(),
+        requested_at_secs: requested_at,
+        admitted_host: admitted,
+        host: admitted.map(|h| hosts[h].name.clone()),
+        projected_fleet_power_w,
+        scores,
+    }
+}
+
+/// Run a multi-host fleet to completion (or the time cap): sessions
+/// arrive on their [`TenantSpec::arrive_at`] schedule, the
+/// [`Dispatcher`] places each one, and every host runs the shared
+/// [`super::fleet`] driver. See the module docs for the semantics of
+/// placement, admission control and the cross-host event horizon.
+pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
+    assert!(!cfg.hosts.is_empty(), "a dispatcher needs at least one host");
+
+    let mut worlds: Vec<HostWorld> = cfg
+        .hosts
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            HostWorld::build(
+                h.name.clone(),
+                &h.testbed,
+                &[],
+                Some(cfg.policy),
+                cfg.params,
+                cfg.fleet_interval,
+                cfg.tick,
+                host_seed(cfg.seed, i),
+                Vec::new(),
+                false,
+                cfg.record_timeline,
+                cfg.reference_stepper,
+            )
+        })
+        .collect();
+
+    // Arrivals ordered by request time (stable for equal instants, so
+    // spec order breaks ties deterministically).
+    let mut pending: Vec<SessionSpec> = cfg.sessions.clone();
+    pending.sort_by(|a, b| a.arrive_at.as_secs().total_cmp(&b.arrive_at.as_secs()));
+    let mut pending: VecDeque<SessionSpec> = pending.into();
+    // Sessions admission control is holding back, FIFO: the head blocks
+    // the rest so a power-hungry host cannot starve early requesters.
+    let mut queue: VecDeque<(SessionSpec, f64)> = VecDeque::new();
+    let mut dispatcher = Dispatcher::new(cfg.placement, cfg.power_cap);
+    let mut decisions: Vec<DispatchRecord> = Vec::new();
+
+    let max = cfg.max_sim_time.as_secs();
+    loop {
+        let now = worlds[0].now_secs();
+
+        // Queued sessions retry first (FIFO: stop at the first that still
+        // does not fit), then arrivals due now. A newcomer never jumps an
+        // occupied queue.
+        while !queue.is_empty() {
+            let candidates = build_candidates(&worlds, &cfg.hosts);
+            match dispatcher.place(&candidates) {
+                PlaceDecision::Admit(h) => {
+                    let (spec, requested) = queue.pop_front().expect("non-empty");
+                    decisions.push(make_record(
+                        now,
+                        &spec.name,
+                        requested,
+                        Some(h),
+                        &candidates,
+                        &cfg.hosts,
+                    ));
+                    worlds[h].register_arrival(spec);
+                }
+                _ => break,
+            }
+        }
+        while pending
+            .front()
+            .is_some_and(|s| s.arrive_at.as_secs() <= now + 1e-9)
+        {
+            let spec = pending.pop_front().expect("non-empty");
+            let requested = spec.arrive_at.as_secs();
+            let candidates = build_candidates(&worlds, &cfg.hosts);
+            let decision = if queue.is_empty() {
+                dispatcher.place(&candidates)
+            } else {
+                PlaceDecision::QueuePowerCap // FIFO: wait behind the queue head
+            };
+            match decision {
+                PlaceDecision::Admit(h) => {
+                    decisions.push(make_record(
+                        now,
+                        &spec.name,
+                        requested,
+                        Some(h),
+                        &candidates,
+                        &cfg.hosts,
+                    ));
+                    worlds[h].register_arrival(spec);
+                }
+                _ => {
+                    decisions.push(make_record(
+                        now,
+                        &spec.name,
+                        requested,
+                        None,
+                        &candidates,
+                        &cfg.hosts,
+                    ));
+                    queue.push_back((spec, requested));
+                }
+            }
+        }
+
+        let all_done = worlds.iter().all(|w| w.all_done());
+        if (pending.is_empty() && queue.is_empty() && all_done) || now >= max {
+            break;
+        }
+        // Stuck queue: nothing is running or pending, yet the head still
+        // does not fit. Occupancy — and therefore every projection the
+        // cap is checked against — can never change again, so simulating
+        // idle hosts until the time cap would be pure waste: end the run
+        // now and report the queue as unplaced.
+        if pending.is_empty() && all_done && !queue.is_empty() {
+            break;
+        }
+
+        for w in worlds.iter_mut() {
+            w.admissions_due();
+            w.sample_peaks();
+        }
+
+        // Cross-host event horizon: the earliest driver-level event on
+        // any host, or the next arrival, or the time cap. Between now and
+        // then every tick on every host is pure stepping.
+        let mut horizon = max;
+        if let Some(s) = pending.front() {
+            horizon = horizon.min(s.arrive_at.as_secs());
+        }
+        for w in worlds.iter() {
+            horizon = horizon.min(w.internal_horizon(max));
+        }
+
+        // Lockstep inner loop: one tick on every host per iteration. A
+        // completion on any host ends the segment (its departure — and
+        // any queued admission it unblocks — must be handled on exactly
+        // that tick).
+        loop {
+            let mut completed = false;
+            for w in worlds.iter_mut() {
+                completed |= w.step_once().session_completed;
+            }
+            let t = worlds[0].now_secs();
+            if completed || t + 1e-9 >= horizon || t >= max {
+                break;
+            }
+        }
+
+        for w in worlds.iter_mut() {
+            w.post_segment();
+        }
+    }
+
+    let completed =
+        pending.is_empty() && queue.is_empty() && worlds.iter().all(|w| w.all_done());
+    let duration = worlds[0].sim.now.since(SimTime::ZERO);
+    let unplaced: Vec<String> = queue
+        .iter()
+        .map(|(s, _)| s.name.clone())
+        .chain(pending.iter().map(|s| s.name.clone()))
+        .collect();
+    let policy = format!("{}+{}", cfg.placement.id(), worlds[0].policy_name());
+
+    let mut tenants = Vec::new();
+    let mut hosts = Vec::new();
+    let mut moved = Bytes::ZERO;
+    let mut client_energy = Energy::ZERO;
+    let mut client_package_energy = Energy::ZERO;
+    let mut server_energy = Energy::ZERO;
+    for w in worlds {
+        let (t, b) = w.finish();
+        tenants.extend(t);
+        moved += b.moved;
+        client_energy = client_energy + b.client_energy;
+        client_package_energy = client_package_energy + b.client_package_energy;
+        server_energy = server_energy + b.server_energy;
+        hosts.push(b);
+    }
+    tenants.sort_by(|a, b| {
+        a.arrived_at
+            .as_secs()
+            .total_cmp(&b.arrived_at.as_secs())
+            .then_with(|| a.name.cmp(&b.name))
+    });
+
+    DispatchOutcome {
+        fleet: FleetOutcome {
+            policy,
+            tenants,
+            completed,
+            duration,
+            moved,
+            client_energy,
+            client_package_energy,
+            server_energy,
+            final_active_cores: hosts[0].final_active_cores,
+            final_freq: hosts[0].final_freq,
+            hosts,
+        },
+        decisions,
+        unplaced,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+
+    fn cand(
+        host: usize,
+        active: u32,
+        free: u32,
+        cur_w: f64,
+        proj_w: f64,
+        bps: f64,
+        fleet_w: f64,
+    ) -> HostCandidate {
+        HostCandidate {
+            host,
+            active_sessions: active,
+            free_slots: free,
+            current_power_w: cur_w,
+            projected_power_w: proj_w,
+            projected_session_bps: bps,
+            projected_fleet_power_w: fleet_w,
+        }
+    }
+
+    #[test]
+    fn poisson_times_are_deterministic_and_hit_the_rate() {
+        let a = PoissonArrivals::new(0.5, 4000, 7).times();
+        let b = PoissonArrivals::new(0.5, 4000, 7).times();
+        assert_eq!(a.len(), 4000);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.as_secs().to_bits(), y.as_secs().to_bits());
+        }
+        for w in a.windows(2) {
+            assert!(w[1] > w[0], "arrival times must strictly increase");
+        }
+        // Empirical rate: mean inter-arrival ≈ 1/λ = 2 s within 5%.
+        let mean = a.last().unwrap().as_secs() / 4000.0;
+        assert!((mean - 2.0).abs() < 0.1, "mean inter-arrival {mean}");
+        // A different seed perturbs the process.
+        let c = PoissonArrivals::new(0.5, 4000, 8).times();
+        assert_ne!(a[0].as_secs(), c[0].as_secs());
+    }
+
+    #[test]
+    fn poisson_sessions_carry_arrival_times_and_distinct_datasets() {
+        let specs = PoissonArrivals::new(0.1, 5, 3)
+            .sessions("medium", AlgorithmKind::MaxThroughput)
+            .expect("known family");
+        assert_eq!(specs.len(), 5);
+        for w in specs.windows(2) {
+            assert!(w[1].arrive_at > w[0].arrive_at);
+        }
+        // Per-session seeds differ, so file layouts differ.
+        assert_ne!(
+            specs[0].dataset.files[0].size.as_f64(),
+            specs[1].dataset.files[0].size.as_f64()
+        );
+        assert!(PoissonArrivals::new(0.1, 5, 3)
+            .sessions("no-such-family", AlgorithmKind::MaxThroughput)
+            .is_none());
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_full_hosts() {
+        let mut d = Dispatcher::new(PlacementKind::RoundRobin, None);
+        let free = |h| cand(h, 0, 2, 10.0, 12.0, 1e8, 40.0);
+        let cands = vec![free(0), free(1), free(2)];
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(0));
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(1));
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(2));
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(0));
+        // A full host is skipped without disturbing the rotation.
+        let cands = vec![free(0), cand(1, 2, 0, 10.0, 12.0, 1e8, 40.0), free(2)];
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(2));
+    }
+
+    #[test]
+    fn least_loaded_prefers_the_emptier_host() {
+        let mut d = Dispatcher::new(PlacementKind::LeastLoaded, None);
+        let cands = vec![
+            cand(0, 3, 1, 30.0, 32.0, 1e8, 60.0),
+            cand(1, 1, 3, 30.0, 32.0, 1e8, 60.0),
+            cand(2, 2, 2, 30.0, 32.0, 1e8, 60.0),
+        ];
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(1));
+    }
+
+    #[test]
+    fn marginal_energy_prefers_fewer_joules_per_byte() {
+        let mut d = Dispatcher::new(PlacementKind::MarginalEnergy, None);
+        // Host 0: +25 W for 50 MB/s = 0.5 µJ/B; host 1: +15 W for
+        // 100 MB/s = 0.15 µJ/B.
+        let cands = vec![
+            cand(0, 1, 3, 30.0, 55.0, 50e6, 75.0),
+            cand(1, 0, 4, 20.0, 35.0, 100e6, 65.0),
+        ];
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(1));
+        // A host that cannot move bytes scores infinitely bad.
+        let cands = vec![
+            cand(0, 1, 3, 30.0, 31.0, 0.0, 61.0),
+            cand(1, 0, 4, 20.0, 50.0, 100e6, 80.0),
+        ];
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(1));
+    }
+
+    #[test]
+    fn power_cap_queues_or_reroutes() {
+        let mut d =
+            Dispatcher::new(PlacementKind::MarginalEnergy, Some(Power::from_watts(70.0)));
+        // Best-scored host breaks the cap; the other fits → reroute.
+        let cands = vec![
+            cand(0, 0, 4, 20.0, 35.0, 100e6, 75.0), // 0.15 µJ/B but 75 W > cap
+            cand(1, 0, 4, 30.0, 55.0, 50e6, 65.0),  // 0.5 µJ/B, fits
+        ];
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(1));
+        // Nobody fits → queue on the power cap.
+        let cands = vec![
+            cand(0, 0, 4, 20.0, 35.0, 100e6, 75.0),
+            cand(1, 0, 4, 30.0, 55.0, 50e6, 72.0),
+        ];
+        assert_eq!(d.place(&cands), PlaceDecision::QueuePowerCap);
+        // No free slots anywhere → queue on capacity instead.
+        let cands = vec![
+            cand(0, 4, 0, 20.0, 35.0, 100e6, 60.0),
+            cand(1, 4, 0, 30.0, 55.0, 50e6, 60.0),
+        ];
+        assert_eq!(d.place(&cands), PlaceDecision::QueueNoSlot);
+        assert_eq!(d.place(&[]), PlaceDecision::QueueNoSlot);
+    }
+
+    #[test]
+    fn two_hosts_two_sessions_least_loaded_spreads() {
+        let hosts = vec![
+            HostSpec::new("a", testbeds::cloudlab()),
+            HostSpec::new("b", testbeds::cloudlab()),
+        ];
+        let sessions = vec![
+            TenantSpec::new(
+                "s0",
+                crate::dataset::standard::medium_dataset(1),
+                AlgorithmKind::MaxThroughput,
+            ),
+            TenantSpec::new(
+                "s1",
+                crate::dataset::standard::medium_dataset(2),
+                AlgorithmKind::MaxThroughput,
+            ),
+        ];
+        let cfg = DispatcherConfig::new(hosts, PlacementKind::LeastLoaded)
+            .with_sessions(sessions)
+            .with_seed(5);
+        let out = run_dispatcher(&cfg);
+        assert!(out.fleet.completed, "both sessions must finish");
+        assert!(out.unplaced.is_empty());
+        assert_eq!(out.fleet.tenants.len(), 2);
+        assert_eq!(out.fleet.hosts.len(), 2);
+        // Least-loaded spreads simultaneous arrivals across hosts.
+        assert_ne!(out.fleet.tenants[0].host, out.fleet.tenants[1].host);
+        assert_eq!(out.decisions.len(), 2);
+        assert!(out.decisions.iter().all(|d| !d.queued()));
+        // Both hosts billed some energy (idle or serving).
+        for h in &out.fleet.hosts {
+            assert!(h.client_energy.as_joules() > 0.0, "{} unbilled", h.host);
+        }
+    }
+}

@@ -40,6 +40,7 @@ struct EpochCache {
 /// telemetry accumulators and the energy attributed to it.
 #[derive(Debug, Clone)]
 pub struct SessionSlot {
+    /// This session's transfer engine.
     pub engine: TransferEngine,
     active: bool,
     arrived_at: SimTime,
@@ -85,10 +86,12 @@ impl SessionSlot {
         }
     }
 
+    /// True while the session is admitted.
     pub fn is_active(&self) -> bool {
         self.active
     }
 
+    /// When the session was admitted.
     pub fn arrived_at(&self) -> SimTime {
         self.arrived_at
     }
@@ -112,17 +115,21 @@ impl SessionSlot {
 /// CPU knobs instead.
 #[derive(Debug)]
 pub struct TuneCtx<'a> {
+    /// The session's own transfer engine.
     pub engine: &'a mut TransferEngine,
+    /// The client CPU setting the algorithm may actuate.
     pub client: &'a mut CpuState,
 }
 
 /// The complete simulated world: one shared host, N tenant sessions.
 #[derive(Debug, Clone)]
 pub struct Simulation {
+    /// The shared bottleneck path.
     pub link: Link,
     /// The shared client end system (CPU settings, power models, meters).
     pub host: Host,
     slots: Vec<SessionSlot>,
+    /// Current simulated time.
     pub now: SimTime,
     tick: SimDuration,
     rng: Xoshiro256,
@@ -204,6 +211,7 @@ impl Simulation {
         self.slots[slot].active = false;
     }
 
+    /// Registered session slots (active or not).
     pub fn num_slots(&self) -> usize {
         self.slots.len()
     }
@@ -213,14 +221,17 @@ impl Simulation {
         self.slots.iter().filter(|s| s.active).count() as u32
     }
 
+    /// Borrow one session slot.
     pub fn slot(&self, slot: usize) -> &SessionSlot {
         &self.slots[slot]
     }
 
+    /// Mutably borrow one session slot.
     pub fn slot_mut(&mut self, slot: usize) -> &mut SessionSlot {
         &mut self.slots[slot]
     }
 
+    /// All session slots.
     pub fn slots(&self) -> &[SessionSlot] {
         &self.slots
     }
@@ -231,6 +242,7 @@ impl Simulation {
         &self.slots[0].engine
     }
 
+    /// Mutable access to the first session's engine.
     pub fn engine_mut(&mut self) -> &mut TransferEngine {
         &mut self.slots[0].engine
     }
@@ -241,6 +253,7 @@ impl Simulation {
         TuneCtx { engine: &mut self.slots[slot].engine, client: &mut self.host.client }
     }
 
+    /// The simulation tick length.
     pub fn tick_len(&self) -> SimDuration {
         self.tick
     }
@@ -257,10 +270,12 @@ impl Simulation {
         self.host.client_energy()
     }
 
+    /// Server package energy so far.
     pub fn server_energy(&self) -> Energy {
         self.host.server_energy()
     }
 
+    /// Aggregate stats of the most recent tick.
     pub fn last_stats(&self) -> TickStats {
         self.last_world_stats
     }

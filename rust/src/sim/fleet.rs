@@ -9,16 +9,20 @@
 //! per-session CPU governors are disabled while a policy is in charge.
 //!
 //! [`super::session::run_session`] is exactly this driver with one
-//! tenant, no policy, and the session's own governor left enabled.
+//! tenant, no policy, and the session's own governor left enabled. The
+//! multi-host dispatcher ([`super::dispatcher`]) drives several of these
+//! worlds — one per host — in lockstep behind a placement policy; the
+//! per-host driver state lives in the crate-internal `HostWorld` so both
+//! entry points share one implementation.
 
 use crate::config::experiment::{GovernorKind, TunerParams};
 use crate::config::Testbed;
 use crate::coordinator::fleet::{FleetPolicy, FleetPolicyKind};
 use crate::coordinator::{Algorithm, AlgorithmKind};
-use crate::cpusim::CpuState;
+use crate::cpusim::{CpuDemand, CpuState};
 use crate::dataset::Dataset;
 use crate::netsim::BandwidthEvent;
-use crate::sim::{Simulation, TuneCtx};
+use crate::sim::{Simulation, TickStats, TuneCtx, MAX_APP_UTILIZATION};
 use crate::transfer::TransferEngine;
 use crate::units::{Bytes, Energy, Freq, Rate, SimDuration, SimTime};
 
@@ -28,18 +32,23 @@ use super::session::TimelinePoint;
 /// time on the shared host.
 #[derive(Debug, Clone)]
 pub struct TenantSpec {
+    /// Display name of the tenant (unique within a run by convention).
     pub name: String,
+    /// The files this tenant has to move.
     pub dataset: Dataset,
+    /// The tuning algorithm driving this tenant's transfer.
     pub algorithm: AlgorithmKind,
     /// When this session is admitted (simulated clock).
     pub arrive_at: SimTime,
 }
 
 impl TenantSpec {
+    /// A tenant arriving at t = 0.
     pub fn new(name: impl Into<String>, dataset: Dataset, algorithm: AlgorithmKind) -> Self {
         TenantSpec { name: name.into(), dataset, algorithm, arrive_at: SimTime::ZERO }
     }
 
+    /// Set the arrival (admission) time.
     pub fn arriving_at(mut self, at: SimTime) -> Self {
         self.arrive_at = at;
         self
@@ -49,7 +58,9 @@ impl TenantSpec {
 /// Everything needed to run one multi-tenant world.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
+    /// The shared host + WAN path everyone runs on.
     pub testbed: Testbed,
+    /// The sessions to serve, with their scripted arrival times.
     pub tenants: Vec<TenantSpec>,
     /// Host-level arbitration. `None` leaves the host knobs to the
     /// tenants' own governors (the single-session compatibility mode).
@@ -58,7 +69,9 @@ pub struct FleetConfig {
     pub params: TunerParams,
     /// Arbitration cadence of the fleet policy.
     pub fleet_interval: SimDuration,
+    /// RNG seed (background traffic noise).
     pub seed: u64,
+    /// Simulation tick length.
     pub tick: SimDuration,
     /// Abort the run after this much simulated time.
     pub max_sim_time: SimDuration,
@@ -76,6 +89,7 @@ pub struct FleetConfig {
 }
 
 impl FleetConfig {
+    /// A fleet on `testbed` under `policy`, with no tenants yet.
     pub fn new(testbed: Testbed, policy: Option<FleetPolicyKind>) -> Self {
         FleetConfig {
             testbed,
@@ -93,16 +107,19 @@ impl FleetConfig {
         }
     }
 
+    /// Append one tenant.
     pub fn with_tenant(mut self, tenant: TenantSpec) -> Self {
         self.tenants.push(tenant);
         self
     }
 
+    /// Replace the shared tuner parameters.
     pub fn with_params(mut self, params: TunerParams) -> Self {
         self.params = params;
         self
     }
 
+    /// Set the RNG seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -112,11 +129,21 @@ impl FleetConfig {
 /// What one tenant got out of the shared host.
 #[derive(Debug, Clone)]
 pub struct TenantOutcome {
+    /// Tenant name (from its [`TenantSpec`]).
     pub name: String,
+    /// Name of the tuning algorithm that drove the transfer.
     pub algorithm: String,
+    /// Name of the host that served this tenant — the testbed name for a
+    /// single-host fleet, the [`super::dispatcher::HostSpec`] name in a
+    /// multi-host world.
+    pub host: String,
+    /// Whether the transfer finished before the time cap.
     pub completed: bool,
+    /// When the session was admitted.
     pub arrived_at: SimTime,
+    /// When the transfer finished (`None` if it never did).
     pub finished_at: Option<SimTime>,
+    /// Bytes actually moved.
     pub moved: Bytes,
     /// Average throughput over the tenant's residency on the host.
     pub avg_throughput: Rate,
@@ -132,24 +159,84 @@ pub struct TenantOutcome {
     pub attributed_energy: Energy,
     /// Client package (RAPL) energy attributed to this tenant.
     pub attributed_package_energy: Energy,
+    /// Most channels the tenant ever had open.
     pub peak_channels: u32,
+    /// Per-timeout timeline (empty unless recording was requested).
     pub timeline: Vec<TimelinePoint>,
+}
+
+/// Per-host totals of a fleet run — one entry per host in
+/// [`FleetOutcome::hosts`]. A single-host fleet has exactly one; the
+/// multi-host dispatcher one per [`super::dispatcher::HostSpec`].
+#[derive(Debug, Clone)]
+pub struct HostBreakdown {
+    /// Host name (testbed name for single-host runs).
+    pub host: String,
+    /// Name of the testbed this host models.
+    pub testbed: String,
+    /// Sessions this host admitted over the run.
+    pub tenants_served: u32,
+    /// Bytes moved through this host.
+    pub moved: Bytes,
+    /// Client energy per the testbed's instrument (RAPL or wall).
+    pub client_energy: Energy,
+    /// Client package (RAPL) energy.
+    pub client_package_energy: Energy,
+    /// Server package energy.
+    pub server_energy: Energy,
+    /// Client active-core count when the run ended.
+    pub final_active_cores: u32,
+    /// Client frequency when the run ended.
+    pub final_freq: Freq,
+}
+
+/// Jain's fairness index over a set of allocations: `(Σx)² / (n · Σx²)`.
+///
+/// 1.0 means perfectly equal shares; `1/n` means one participant got
+/// everything. Degenerate inputs (no participants, or all-zero shares)
+/// report 1.0 — nothing was shared unfairly.
+pub fn jain_index<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    let (mut n, mut sum, mut sum_sq) = (0u32, 0.0f64, 0.0f64);
+    for x in xs {
+        n += 1;
+        sum += x;
+        sum_sq += x * x;
+    }
+    if n == 0 || sum_sq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (n as f64 * sum_sq)
 }
 
 /// What the whole fleet run produced.
 #[derive(Debug, Clone)]
 pub struct FleetOutcome {
+    /// Name of the arbitration policy (and, in multi-host runs, the
+    /// placement policy) that governed the run.
     pub policy: String,
+    /// Per-tenant outcomes.
     pub tenants: Vec<TenantOutcome>,
+    /// True when every tenant finished before the time cap.
     pub completed: bool,
+    /// Makespan of the whole run.
     pub duration: SimDuration,
+    /// Total bytes moved by all tenants.
     pub moved: Bytes,
-    /// Host client energy per the testbed's instrument (RAPL or wall).
+    /// Host client energy per the testbed's instrument (RAPL or wall);
+    /// summed over hosts in multi-host runs.
     pub client_energy: Energy,
+    /// Client package (RAPL) energy, summed over hosts.
     pub client_package_energy: Energy,
+    /// Server package energy, summed over hosts.
     pub server_energy: Energy,
+    /// Client active cores at the end of the run (host 0 in multi-host
+    /// runs; see [`Self::hosts`] for the rest).
     pub final_active_cores: u32,
+    /// Client frequency at the end of the run (host 0 in multi-host runs).
     pub final_freq: Freq,
+    /// Per-host breakdowns — one entry for a single-host fleet, one per
+    /// host behind the dispatcher.
+    pub hosts: Vec<HostBreakdown>,
 }
 
 impl FleetOutcome {
@@ -158,6 +245,17 @@ impl FleetOutcome {
     pub fn energy_per_tenant(&self) -> Energy {
         Energy::from_joules(
             self.client_energy.as_joules() / self.tenants.len().max(1) as f64,
+        )
+    }
+
+    /// Jain fairness index over per-tenant goodput (average throughput of
+    /// every tenant that was admitted). 1.0 = perfectly fair.
+    pub fn jain_fairness(&self) -> f64 {
+        jain_index(
+            self.tenants
+                .iter()
+                .filter(|t| t.residency > SimDuration::ZERO)
+                .map(|t| t.avg_throughput.as_bytes_per_sec()),
         )
     }
 }
@@ -180,6 +278,15 @@ struct TenantRun {
     shadow_cpu: CpuState,
 }
 
+/// The slice of a [`TenantSpec`] the driver still needs after
+/// `init_tenant` has consumed the dataset: keeping the full spec alive
+/// would pin every session's generated file list in memory for the whole
+/// run (thousands of sessions in open workloads).
+struct TenantMeta {
+    name: String,
+    arrive_at: SimTime,
+}
+
 /// Install the policy's per-session channel budget on one tenant's
 /// engine: future `set_num_channels` calls clamp to it (no churn), and a
 /// count already above the new budget shrinks once now.
@@ -192,157 +299,205 @@ fn apply_cap(sim: &mut Simulation, slot: usize, cap: u32) {
     }
 }
 
-/// Run a multi-tenant world to completion (or the time cap).
-pub fn run_fleet(cfg: &FleetConfig) -> FleetOutcome {
-    assert!(!cfg.tenants.is_empty(), "a fleet needs at least one tenant");
+/// One host's complete driver state: the simulation plus everything the
+/// fleet loop tracks around it (tenants, tuning deadlines, the
+/// arbitration cadence and the active channel cap).
+///
+/// [`run_fleet`] drives exactly one of these; the multi-host dispatcher
+/// ([`super::dispatcher::run_dispatcher`]) drives one per host in
+/// lockstep. The methods are the phases of the original single-host loop,
+/// split so both drivers share one implementation: `admissions_due` →
+/// `sample_peaks` → (`internal_horizon` + `step_once` inner loop) →
+/// `post_segment`, then `finish`.
+pub(crate) struct HostWorld {
+    name: String,
+    testbed: Testbed,
+    pub(crate) sim: Simulation,
+    specs: Vec<TenantMeta>,
+    tenants: Vec<TenantRun>,
+    policy: Option<Box<dyn FleetPolicy>>,
+    params: TunerParams,
+    record_timeline: bool,
+    reference_stepper: bool,
+    fleet_step: f64,
+    next_fleet: f64,
+    channel_cap: Option<u32>,
+}
 
-    let mut policy: Option<Box<dyn FleetPolicy>> =
-        cfg.policy.map(|kind| kind.build(&cfg.params));
+impl HostWorld {
+    /// Assemble a world with `specs` pre-registered (engines parked until
+    /// their arrival time). `policy_kind` must be `Some` when `specs` is
+    /// empty: without tenants there is no Algorithm-1 plan to take the
+    /// initial host CPU setting from.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn build(
+        name: impl Into<String>,
+        testbed: &Testbed,
+        specs: &[TenantSpec],
+        policy_kind: Option<FleetPolicyKind>,
+        params: TunerParams,
+        fleet_interval: SimDuration,
+        tick: SimDuration,
+        seed: u64,
+        bandwidth_events: Vec<BandwidthEvent>,
+        server_scaling: bool,
+        record_timeline: bool,
+        reference_stepper: bool,
+    ) -> HostWorld {
+        let policy: Option<Box<dyn FleetPolicy>> = policy_kind.map(|kind| kind.build(&params));
 
-    // In fleet mode the policy owns the host CPU: tenant governors are
-    // replaced by the null governor so they cannot fight over the package.
-    let mut params = cfg.params;
-    if policy.is_some() {
-        params.governor = GovernorKind::None;
-    }
+        // In fleet mode the policy owns the host CPU: tenant governors are
+        // replaced by the null governor so they cannot fight over the
+        // package.
+        let mut params = params;
+        if policy.is_some() {
+            params.governor = GovernorKind::None;
+        }
 
-    // Initialize every tenant's algorithm and engine up front (Alg. 1 runs
-    // at submission time); engines stay parked until admission.
-    let mut tenants: Vec<TenantRun> = Vec::with_capacity(cfg.tenants.len());
-    let mut engines: Vec<TransferEngine> = Vec::with_capacity(cfg.tenants.len());
-    let mut first_cpu: Option<CpuState> = None;
-    for spec in &cfg.tenants {
-        let mut algo = spec.algorithm.build(params);
-        let plan = algo.init(&cfg.testbed, &spec.dataset);
-        let mut engine = TransferEngine::with_knee(
-            &plan.partitions,
-            cfg.testbed.link.avg_win,
-            cfg.testbed.link.knee_streams(),
-        );
-        if plan.handshake_rtts > 0.0 {
-            for i in 0..plan.partitions.len() {
-                engine.set_handshake_rtts(i, plan.handshake_rtts);
+        // Initialize every pre-registered tenant's algorithm and engine up
+        // front (Alg. 1 runs at submission time); engines stay parked
+        // until admission.
+        let mut tenants: Vec<TenantRun> = Vec::with_capacity(specs.len());
+        let mut engines: Vec<TransferEngine> = Vec::with_capacity(specs.len());
+        let mut first_cpu: Option<CpuState> = None;
+        for spec in specs {
+            let (run, engine, cpu) = init_tenant(spec, params, testbed);
+            if first_cpu.is_none() {
+                first_cpu = Some(cpu);
             }
+            tenants.push(run);
+            engines.push(engine);
         }
-        engine.update_weights();
-        if first_cpu.is_none() {
-            first_cpu = Some(plan.client_cpu.clone());
+
+        // The host CPU starts where the policy (or, without one, the first
+        // tenant's Algorithm-1 plan) says.
+        let client = match &policy {
+            Some(p) => p.initial_cpu(&testbed.client_cpu),
+            None => first_cpu.expect("a fleet without a policy needs at least one tenant"),
+        };
+        let mut sim = Simulation::empty(testbed, client, tick, seed, bandwidth_events);
+        sim.host.server_autoscale = server_scaling;
+        for (t, engine) in tenants.iter_mut().zip(engines) {
+            t.slot = sim.add_slot(engine);
         }
-        // Floored so a degenerate timeout cannot stall the catch-up loop.
-        let timeout = algo.timeout().as_secs().max(1e-3);
-        tenants.push(TenantRun {
-            algo,
-            slot: 0, // assigned below
-            init_channels: plan.num_channels,
-            admitted: false,
-            finished_at: None,
-            next_timeout: spec.arrive_at.as_secs() + timeout,
-            timeout,
-            peak_channels: 0,
-            timeline: Vec::new(),
-            shadow_cpu: plan.client_cpu,
-        });
-        engines.push(engine);
+
+        // Arbitration cadence, floored at one tick so a degenerate config
+        // cannot stall the catch-up loop.
+        let fleet_step = fleet_interval.as_secs().max(tick.as_secs()).max(1e-3);
+
+        HostWorld {
+            name: name.into(),
+            testbed: testbed.clone(),
+            sim,
+            specs: specs
+                .iter()
+                .map(|s| TenantMeta { name: s.name.clone(), arrive_at: s.arrive_at })
+                .collect(),
+            tenants,
+            policy,
+            params,
+            record_timeline,
+            reference_stepper,
+            fleet_step,
+            next_fleet: fleet_step,
+            channel_cap: None,
+        }
     }
 
-    // The host CPU starts where the policy (or, without one, the first
-    // tenant's Algorithm-1 plan) says.
-    let fleet_managed = policy.is_some();
-    let client = match &policy {
-        Some(p) => p.initial_cpu(&cfg.testbed.client_cpu),
-        None => first_cpu.expect("at least one tenant"),
-    };
-    let mut sim = Simulation::empty(
-        &cfg.testbed,
-        client,
-        cfg.tick,
-        cfg.seed,
-        cfg.bandwidth_events.clone(),
-    );
-    sim.host.server_autoscale = cfg.server_scaling;
-    for (t, engine) in tenants.iter_mut().zip(engines) {
-        t.slot = sim.add_slot(engine);
+    /// Register a session that arrives *now* (a dispatcher placement): its
+    /// algorithm initializes at the current clock and `admissions_due`
+    /// will admit it before the next tick.
+    pub(crate) fn register_arrival(&mut self, mut spec: TenantSpec) {
+        spec.arrive_at = self.sim.now;
+        let (mut run, engine, _cpu) = init_tenant(&spec, self.params, &self.testbed);
+        run.slot = self.sim.add_slot(engine);
+        self.tenants.push(run);
+        // Drop the dataset: only the name and arrival instant are needed
+        // from here on.
+        self.specs.push(TenantMeta { name: spec.name, arrive_at: spec.arrive_at });
     }
 
-    // Arbitration cadence, floored at one tick so a degenerate config
-    // cannot stall the catch-up loop below.
-    let fleet_step = cfg.fleet_interval.as_secs().max(cfg.tick.as_secs()).max(1e-3);
-    let mut next_fleet = fleet_step;
-    let mut channel_cap: Option<u32> = None;
-
-    while !sim.is_done() && sim.now.as_secs() < cfg.max_sim_time.as_secs() {
-        // Admissions due now (t=0 tenants are admitted before the first
-        // tick; channels open cold, exactly like a fresh session).
-        for (t, spec) in tenants.iter_mut().zip(&cfg.tenants) {
-            if !t.admitted && spec.arrive_at.as_secs() <= sim.now.as_secs() + 1e-9 {
+    /// Admissions due now (t=0 tenants are admitted before the first
+    /// tick; channels open cold, exactly like a fresh session).
+    pub(crate) fn admissions_due(&mut self) {
+        let now = self.sim.now.as_secs();
+        for (t, spec) in self.tenants.iter_mut().zip(&self.specs) {
+            if !t.admitted && spec.arrive_at.as_secs() <= now + 1e-9 {
                 t.admitted = true;
-                sim.activate_slot(t.slot);
-                let engine = &mut sim.slot_mut(t.slot).engine;
-                engine.set_channel_cap(channel_cap);
+                self.sim.activate_slot(t.slot);
+                let engine = &mut self.sim.slot_mut(t.slot).engine;
+                engine.set_channel_cap(self.channel_cap);
                 engine.update_weights();
                 engine.set_num_channels(t.init_channels);
                 t.peak_channels = engine.num_channels();
             }
         }
+    }
 
-        // Channel counts only move at the driver-level events that bound
-        // this segment (tuning, arbitration, admission) or drop to zero on
-        // completion, so sampling the peak once per segment equals the
-        // old per-tick max.
-        for t in tenants.iter_mut() {
+    /// Channel counts only move at the driver-level events that bound a
+    /// segment (tuning, arbitration, admission) or drop to zero on
+    /// completion, so sampling the peak once per segment equals the old
+    /// per-tick max.
+    pub(crate) fn sample_peaks(&mut self) {
+        for t in self.tenants.iter_mut() {
             if t.admitted && t.finished_at.is_none() {
                 t.peak_channels =
-                    t.peak_channels.max(sim.slot(t.slot).engine.num_channels());
+                    t.peak_channels.max(self.sim.slot(t.slot).engine.num_channels());
             }
         }
+    }
 
-        // Event horizon: the earliest instant any driver-level event can
-        // fire. Between now and then every tick is pure stepping, so run
-        // a tight inner loop that skips the per-tick deadline re-checks
-        // the old driver made. Completions end a segment early (the
-        // departure scan must run on exactly the tick a tenant finishes,
-        // as it would per-tick). The break comparison is the identical
-        // `now + 1e-9 >= deadline` the per-tick scans below make, so no
-        // event fires earlier or later than it did pre-horizon.
-        let mut horizon = cfg.max_sim_time.as_secs();
-        for (t, spec) in tenants.iter().zip(&cfg.tenants) {
+    /// Event horizon: the earliest instant any driver-level event on THIS
+    /// host can fire — the earliest pending admission, tuning timeout or
+    /// fleet arbitration, bounded by `cap_secs` (the run's time cap). The
+    /// dispatcher takes the min across hosts plus its own arrival times.
+    pub(crate) fn internal_horizon(&self, cap_secs: f64) -> f64 {
+        let mut horizon = cap_secs;
+        for (t, spec) in self.tenants.iter().zip(&self.specs) {
             if !t.admitted {
                 horizon = horizon.min(spec.arrive_at.as_secs());
             } else if t.finished_at.is_none() {
                 horizon = horizon.min(t.next_timeout);
             }
         }
-        if policy.is_some() {
-            horizon = horizon.min(next_fleet);
+        if self.policy.is_some() {
+            horizon = horizon.min(self.next_fleet);
         }
-        loop {
-            let stats =
-                if cfg.reference_stepper { sim.step_reference() } else { sim.step() };
-            if stats.session_completed
-                || sim.now.as_secs() + 1e-9 >= horizon
-                || sim.now.as_secs() >= cfg.max_sim_time.as_secs()
-            {
-                break;
-            }
+        horizon
+    }
+
+    /// Advance this host's simulation by one tick.
+    pub(crate) fn step_once(&mut self) -> TickStats {
+        if self.reference_stepper {
+            self.sim.step_reference()
+        } else {
+            self.sim.step()
         }
+    }
+
+    /// The driver-level events at a segment boundary, in the order the
+    /// per-tick loop used to check them: per-tenant tuning timeouts, then
+    /// host-level arbitration, then departures.
+    pub(crate) fn post_segment(&mut self) {
+        let fleet_managed = self.policy.is_some();
 
         // Per-tenant tuning timeouts. A tick that overshoots several
         // timeouts drains once and then advances `next_timeout` past the
         // clock, so long ticks cannot skew the tuning cadence.
-        for t in tenants.iter_mut() {
+        for t in self.tenants.iter_mut() {
             if !t.admitted || t.finished_at.is_some() {
                 continue;
             }
-            if sim.now.as_secs() + 1e-9 >= t.next_timeout {
-                let tel = sim.drain_telemetry_for(t.slot);
-                if cfg.record_timeline {
+            if self.sim.now.as_secs() + 1e-9 >= t.next_timeout {
+                let tel = self.sim.drain_telemetry_for(t.slot);
+                if self.record_timeline {
                     t.timeline.push(TimelinePoint {
                         t_secs: tel.now.as_secs(),
                         fsm: t.algo.fsm_label(),
                         throughput: tel.avg_throughput,
                         channels: tel.num_channels,
-                        active_cores: sim.host.client.active_cores(),
-                        freq: sim.host.client.freq(),
+                        active_cores: self.sim.host.client.active_cores(),
+                        freq: self.sim.host.client.freq(),
                         cpu_load: tel.cpu_load,
                         power_w: tel.avg_power.as_watts(),
                     });
@@ -351,98 +506,284 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetOutcome {
                     // The policy owns the real host CPU: hand the tenant's
                     // governor a shadow setting it can harmlessly actuate.
                     let ctx = &mut TuneCtx {
-                        engine: &mut sim.slot_mut(t.slot).engine,
+                        engine: &mut self.sim.slot_mut(t.slot).engine,
                         client: &mut t.shadow_cpu,
                     };
                     t.algo.on_timeout(&tel, ctx);
                 } else {
-                    t.algo.on_timeout(&tel, &mut sim.tune_ctx(t.slot));
+                    t.algo.on_timeout(&tel, &mut self.sim.tune_ctx(t.slot));
                 }
                 t.next_timeout += t.timeout;
-                while sim.now.as_secs() + 1e-9 >= t.next_timeout {
+                while self.sim.now.as_secs() + 1e-9 >= t.next_timeout {
                     t.next_timeout += t.timeout;
                 }
             }
         }
 
         // Host-level arbitration at the fleet cadence.
-        if let Some(p) = policy.as_mut() {
-            if sim.now.as_secs() + 1e-9 >= next_fleet {
-                let active = sim.active_sessions();
-                let view = sim.host.drain_fleet_interval(sim.now, active);
-                let directive = p.arbitrate(&view, &mut sim.host.client);
-                channel_cap = directive.per_session_channel_cap;
-                if let Some(cap) = channel_cap {
-                    for t in tenants.iter() {
+        if let Some(p) = self.policy.as_mut() {
+            if self.sim.now.as_secs() + 1e-9 >= self.next_fleet {
+                let active = self.sim.active_sessions();
+                let view = self.sim.host.drain_fleet_interval(self.sim.now, active);
+                let directive = p.arbitrate(&view, &mut self.sim.host.client);
+                self.channel_cap = directive.per_session_channel_cap;
+                if let Some(cap) = self.channel_cap {
+                    for t in self.tenants.iter() {
                         if t.admitted && t.finished_at.is_none() {
-                            apply_cap(&mut sim, t.slot, cap);
+                            apply_cap(&mut self.sim, t.slot, cap);
                         }
                     }
                 }
-                next_fleet += fleet_step;
-                while sim.now.as_secs() + 1e-9 >= next_fleet {
-                    next_fleet += fleet_step;
+                self.next_fleet += self.fleet_step;
+                while self.sim.now.as_secs() + 1e-9 >= self.next_fleet {
+                    self.next_fleet += self.fleet_step;
                 }
             }
         }
 
         // Departures: a finished tenant releases its share of the host.
-        for t in tenants.iter_mut() {
+        for t in self.tenants.iter_mut() {
             if t.admitted
                 && t.finished_at.is_none()
-                && sim.slot(t.slot).engine.is_done()
+                && self.sim.slot(t.slot).engine.is_done()
             {
-                t.finished_at = Some(sim.now);
-                sim.deactivate_slot(t.slot);
+                t.finished_at = Some(self.sim.now);
+                self.sim.deactivate_slot(t.slot);
             }
         }
     }
 
-    let completed = sim.is_done();
-    let duration = sim.now.since(SimTime::ZERO);
-
-    let mut outcomes = Vec::with_capacity(tenants.len());
-    let mut moved_total = Bytes::ZERO;
-    for (t, spec) in tenants.into_iter().zip(&cfg.tenants) {
-        let slot = sim.slot(t.slot);
-        let moved = slot.engine.total().saturating_sub(slot.engine.remaining());
-        moved_total += moved;
-        let end = t.finished_at.unwrap_or(sim.now);
-        let residency = if t.admitted {
-            end.since(slot.arrived_at())
-        } else {
-            SimDuration::ZERO
-        };
-        outcomes.push(TenantOutcome {
-            name: spec.name.clone(),
-            algorithm: t.algo.name().to_string(),
-            completed: t.finished_at.is_some(),
-            arrived_at: spec.arrive_at,
-            finished_at: t.finished_at,
-            moved,
-            avg_throughput: Rate::average(moved, residency),
-            residency,
-            attributed_energy: slot.attributed_energy(),
-            attributed_package_energy: slot.attributed_package_energy(),
-            peak_channels: t.peak_channels,
-            timeline: t.timeline,
-        });
+    /// True once every registered session has moved all of its data.
+    pub(crate) fn all_done(&self) -> bool {
+        self.sim.is_done()
     }
 
+    /// Name of the arbitration policy in charge ("none" without one).
+    pub(crate) fn policy_name(&self) -> &'static str {
+        match &self.policy {
+            Some(p) => p.name(),
+            None => "none",
+        }
+    }
+
+    /// Current simulated time in seconds.
+    pub(crate) fn now_secs(&self) -> f64 {
+        self.sim.now.as_secs()
+    }
+
+    /// Sessions registered and unfinished — unlike
+    /// [`Simulation::active_sessions`] this also counts sessions
+    /// registered in the current segment that the next `admissions_due`
+    /// call will activate. The dispatcher's occupancy view: simultaneous
+    /// arrivals must each claim their slot immediately.
+    pub(crate) fn occupancy(&self) -> u32 {
+        self.tenants.iter().filter(|t| t.finished_at.is_none()).count() as u32
+    }
+
+    /// Analytic steady-state CPU demand estimate for `sessions` concurrent
+    /// sessions on this host: aggregate goodput at the link's effective
+    /// capacity (bottleneck minus mean background), bounded by the CPU
+    /// ceiling at the maximum operating point, with each session running
+    /// the knee-many streams the allocator favors. Requests are omitted —
+    /// their cycle cost is negligible next to per-byte and per-stream
+    /// work. Used by the dispatcher's placement scoring, never by the
+    /// stepper itself.
+    pub(crate) fn projected_demand(&self, sessions: u32) -> CpuDemand {
+        if sessions == 0 {
+            return CpuDemand::default();
+        }
+        let link = &self.testbed.link;
+        let effective = link.capacity.as_bytes_per_sec() * (1.0 - self.testbed.bg_mean);
+        let streams = link.knee_streams() * sessions as f64;
+        let spec = &self.testbed.client_cpu;
+        let cpu_cap = spec.achievable_bytes_per_sec(
+            spec.num_cores,
+            spec.max_freq(),
+            0.0,
+            streams,
+            MAX_APP_UTILIZATION,
+        );
+        CpuDemand {
+            bytes_per_sec: effective.min(cpu_cap),
+            requests_per_sec: 0.0,
+            open_streams: streams,
+        }
+    }
+
+    /// Predicted whole-host instrument power (W) with `sessions`
+    /// concurrent sessions, at the cheapest client operating point able to
+    /// carry the projected demand.
+    pub(crate) fn projected_power_w(&self, sessions: u32) -> f64 {
+        self.sim
+            .host
+            .projected_instrument_power(&self.projected_demand(sessions))
+            .as_watts()
+    }
+
+    /// Expected per-session goodput (bytes/s) with `sessions` sessions
+    /// sharing the host.
+    pub(crate) fn projected_session_bps(&self, sessions: u32) -> f64 {
+        if sessions == 0 {
+            0.0
+        } else {
+            self.projected_demand(sessions).bytes_per_sec / sessions as f64
+        }
+    }
+
+    /// Tear the world down into per-tenant outcomes plus this host's
+    /// totals.
+    pub(crate) fn finish(self) -> (Vec<TenantOutcome>, HostBreakdown) {
+        let HostWorld { name, testbed, sim, specs, tenants, .. } = self;
+        let mut outcomes = Vec::with_capacity(tenants.len());
+        let mut moved_total = Bytes::ZERO;
+        let mut served = 0u32;
+        for (t, spec) in tenants.into_iter().zip(&specs) {
+            let slot = sim.slot(t.slot);
+            let moved = slot.engine.total().saturating_sub(slot.engine.remaining());
+            moved_total += moved;
+            if t.admitted {
+                served += 1;
+            }
+            let end = t.finished_at.unwrap_or(sim.now);
+            let residency = if t.admitted {
+                end.since(slot.arrived_at())
+            } else {
+                SimDuration::ZERO
+            };
+            outcomes.push(TenantOutcome {
+                name: spec.name.clone(),
+                algorithm: t.algo.name().to_string(),
+                host: name.clone(),
+                completed: t.finished_at.is_some(),
+                arrived_at: spec.arrive_at,
+                finished_at: t.finished_at,
+                moved,
+                avg_throughput: Rate::average(moved, residency),
+                residency,
+                attributed_energy: slot.attributed_energy(),
+                attributed_package_energy: slot.attributed_package_energy(),
+                peak_channels: t.peak_channels,
+                timeline: t.timeline,
+            });
+        }
+        let breakdown = HostBreakdown {
+            host: name,
+            testbed: testbed.name.to_string(),
+            tenants_served: served,
+            moved: moved_total,
+            client_energy: sim.client_energy(),
+            client_package_energy: sim.host.client_rapl.total(),
+            server_energy: sim.server_energy(),
+            final_active_cores: sim.host.client.active_cores(),
+            final_freq: sim.host.client.freq(),
+        };
+        (outcomes, breakdown)
+    }
+}
+
+/// Build one tenant's algorithm + engine from its spec (Algorithm 1 runs
+/// at submission time). Returns the driver state, the parked engine, and
+/// the plan's client CPU setting (the host's initial setting when no
+/// fleet policy is in charge).
+fn init_tenant(
+    spec: &TenantSpec,
+    params: TunerParams,
+    testbed: &Testbed,
+) -> (TenantRun, TransferEngine, CpuState) {
+    let mut algo = spec.algorithm.build(params);
+    let plan = algo.init(testbed, &spec.dataset);
+    let mut engine = TransferEngine::with_knee(
+        &plan.partitions,
+        testbed.link.avg_win,
+        testbed.link.knee_streams(),
+    );
+    if plan.handshake_rtts > 0.0 {
+        for i in 0..plan.partitions.len() {
+            engine.set_handshake_rtts(i, plan.handshake_rtts);
+        }
+    }
+    engine.update_weights();
+    // Floored so a degenerate timeout cannot stall the catch-up loop.
+    let timeout = algo.timeout().as_secs().max(1e-3);
+    let cpu = plan.client_cpu.clone();
+    let run = TenantRun {
+        algo,
+        slot: 0, // assigned by the caller
+        init_channels: plan.num_channels,
+        admitted: false,
+        finished_at: None,
+        next_timeout: spec.arrive_at.as_secs() + timeout,
+        timeout,
+        peak_channels: 0,
+        timeline: Vec::new(),
+        shadow_cpu: plan.client_cpu,
+    };
+    (run, engine, cpu)
+}
+
+/// Run a multi-tenant world to completion (or the time cap).
+pub fn run_fleet(cfg: &FleetConfig) -> FleetOutcome {
+    assert!(!cfg.tenants.is_empty(), "a fleet needs at least one tenant");
+
+    let mut world = HostWorld::build(
+        cfg.testbed.name,
+        &cfg.testbed,
+        &cfg.tenants,
+        cfg.policy,
+        cfg.params,
+        cfg.fleet_interval,
+        cfg.tick,
+        cfg.seed,
+        cfg.bandwidth_events.clone(),
+        cfg.server_scaling,
+        cfg.record_timeline,
+        cfg.reference_stepper,
+    );
+    let max = cfg.max_sim_time.as_secs();
+
+    while !world.all_done() && world.now_secs() < max {
+        world.admissions_due();
+        world.sample_peaks();
+
+        // Event horizon: between now and the earliest driver-level event
+        // every tick is pure stepping, so run a tight inner loop that
+        // skips the per-tick deadline re-checks the old driver made.
+        // Completions end a segment early (the departure scan must run on
+        // exactly the tick a tenant finishes, as it would per-tick). The
+        // break comparison is the identical `now + 1e-9 >= deadline` the
+        // per-tick scans make, so no event fires earlier or later than it
+        // did pre-horizon.
+        let horizon = world.internal_horizon(max);
+        loop {
+            let stats = world.step_once();
+            if stats.session_completed
+                || world.now_secs() + 1e-9 >= horizon
+                || world.now_secs() >= max
+            {
+                break;
+            }
+        }
+
+        world.post_segment();
+    }
+
+    let completed = world.all_done();
+    let duration = world.sim.now.since(SimTime::ZERO);
+    let policy = world.policy_name().to_string();
+    let (tenants, breakdown) = world.finish();
+
     FleetOutcome {
-        policy: match &policy {
-            Some(p) => p.name().to_string(),
-            None => "none".to_string(),
-        },
-        tenants: outcomes,
+        policy,
+        tenants,
         completed,
         duration,
-        moved: moved_total,
-        client_energy: sim.client_energy(),
-        client_package_energy: sim.host.client_rapl.total(),
-        server_energy: sim.server_energy(),
-        final_active_cores: sim.host.client.active_cores(),
-        final_freq: sim.host.client.freq(),
+        moved: breakdown.moved,
+        client_energy: breakdown.client_energy,
+        client_package_energy: breakdown.client_package_energy,
+        server_energy: breakdown.server_energy,
+        final_active_cores: breakdown.final_active_cores,
+        final_freq: breakdown.final_freq,
+        hosts: vec![breakdown],
     }
 }
 
@@ -478,6 +819,7 @@ mod tests {
             assert!(t.attributed_energy.as_joules() > 0.0);
             assert!(t.avg_throughput.as_mbps() > 10.0);
             assert!(t.finished_at.unwrap() > t.arrived_at);
+            assert_eq!(t.host, "CloudLab", "single-host fleet serves on the testbed");
         }
         // Attribution is conservative: tenant shares sum to the host bill.
         let attributed: f64 =
@@ -487,6 +829,11 @@ mod tests {
             (attributed - host).abs() < 1e-6 * host,
             "attributed {attributed} vs host {host}"
         );
+        // The single-host breakdown carries the same totals.
+        assert_eq!(out.hosts.len(), 1);
+        assert_eq!(out.hosts[0].tenants_served, 4);
+        assert_eq!(out.hosts[0].client_energy.as_joules(), host);
+        assert_eq!(out.hosts[0].moved.as_f64(), out.moved.as_f64());
     }
 
     #[test]
@@ -600,5 +947,30 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn jain_index_limits() {
+        // Equal shares are perfectly fair.
+        assert!((jain_index([5.0, 5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        // One participant taking everything scores 1/n.
+        assert!((jain_index([9.0, 0.0, 0.0]) - 1.0 / 3.0).abs() < 1e-12);
+        // Scale invariance: fairness depends on proportions only.
+        let a = jain_index([1.0, 2.0, 3.0]);
+        let b = jain_index([10.0, 20.0, 30.0]);
+        assert!((a - b).abs() < 1e-12);
+        assert!(a > 1.0 / 3.0 && a < 1.0);
+        // Degenerate inputs are trivially fair.
+        assert_eq!(jain_index(Vec::<f64>::new()), 1.0);
+        assert_eq!(jain_index([0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn fleet_outcome_reports_fairness() {
+        let out = run_fleet(&four_tenant_cfg(FleetPolicyKind::FairShare, 21));
+        let j = out.jain_fairness();
+        // Four near-identical tenants under a fair-share policy: goodputs
+        // must be close to equal (staggered arrivals skew them a little).
+        assert!(j > 0.8 && j <= 1.0 + 1e-12, "fair-share Jain index {j}");
     }
 }

@@ -24,8 +24,11 @@ pub const MAX_APP_UTILIZATION: f64 = 0.92;
 pub struct HostTick {
     /// Client CPU load implied by the aggregate demand (0..∞).
     pub client_load: f64,
+    /// Server CPU load implied by the aggregate demand.
     pub server_load: f64,
+    /// Client package power this tick.
     pub client_power: Power,
+    /// Server package power this tick.
     pub server_power: Power,
     /// Energy this tick on the testbed's client instrument (wall meter on
     /// DIDCLab, RAPL elsewhere), in joules.
@@ -38,6 +41,7 @@ pub struct HostTick {
 /// what a [`crate::coordinator::fleet::FleetPolicy`] reads.
 #[derive(Debug, Clone, Copy)]
 pub struct FleetView {
+    /// When the interval ended.
     pub now: SimTime,
     /// Sessions currently admitted and unfinished.
     pub active_sessions: u32,
@@ -99,6 +103,19 @@ impl OpPointCache {
             + open_streams * spec.cycles_per_stream_sec;
         ((self.cap_cycles_util - overhead) / spec.cycles_per_byte).max(0.0)
     }
+}
+
+/// A client CPU operating point chosen by [`Host::min_client_power_for`]:
+/// the cheapest (cores, frequency) able to carry a projected demand, and
+/// the package power it would draw there.
+#[derive(Debug, Clone, Copy)]
+pub struct ProjectedPoint {
+    /// Client package power at this point under the projected demand.
+    pub power: Power,
+    /// Active cores at the chosen point.
+    pub cores: u32,
+    /// Core frequency at the chosen point.
+    pub freq: crate::units::Freq,
 }
 
 /// The shared client machine (plus its peer server) that all sessions of
@@ -180,10 +197,12 @@ impl Host {
         }
     }
 
+    /// Server package energy so far.
     pub fn server_energy(&self) -> Energy {
         self.server_rapl.total()
     }
 
+    /// True when the client instrument is the wall meter.
     pub fn wall_meter(&self) -> bool {
         self.wall_meter
     }
@@ -298,6 +317,74 @@ impl Host {
             if !self.server.decrease_freq() {
                 self.server.decrease_cores();
             }
+        }
+    }
+
+    /// The cheapest client operating point able to carry `demand`, and
+    /// the client package power it would draw there.
+    ///
+    /// Scans the full (active cores, P-state) grid, pricing each point
+    /// with the same frozen [`crate::power::OpPointPower`] coefficients
+    /// ([`PowerModel::at`]) the epoch-cached stepper uses, so projections
+    /// are consistent with what the meters will record once a
+    /// load-tracking policy settles there. This is the primitive behind
+    /// the multi-host dispatcher's marginal-energy placement
+    /// (GreenDataFlow, arXiv:1810.05892): a candidate host is scored by
+    /// the delta between this projection at its post-placement demand and
+    /// at its current demand. When no operating point can carry the
+    /// demand, the maximum point is returned with its (clamped-load)
+    /// power — the host would saturate there.
+    pub fn min_client_power_for(&self, demand: &CpuDemand) -> ProjectedPoint {
+        let spec = self.client.spec();
+        let mut best: Option<ProjectedPoint> = None;
+        for cores in 1..=spec.num_cores {
+            for &f in &spec.freq_levels {
+                let cap = spec.achievable_bytes_per_sec(
+                    cores,
+                    f,
+                    demand.requests_per_sec,
+                    demand.open_streams,
+                    MAX_APP_UTILIZATION,
+                );
+                if cap + 1e-9 < demand.bytes_per_sec {
+                    continue;
+                }
+                let load = spec.load(demand, cores, f);
+                let power =
+                    self.client_power.at(cores, f).power(load, demand.bytes_per_sec);
+                let better = match &best {
+                    Some(b) => power < b.power,
+                    None => true,
+                };
+                if better {
+                    best = Some(ProjectedPoint { power, cores, freq: f });
+                }
+            }
+        }
+        best.unwrap_or_else(|| {
+            let cores = spec.num_cores;
+            let f = spec.max_freq();
+            let load = spec.load(demand, cores, f);
+            ProjectedPoint {
+                power: self.client_power.at(cores, f).power(load, demand.bytes_per_sec),
+                cores,
+                freq: f,
+            }
+        })
+    }
+
+    /// [`Self::min_client_power_for`] expressed on the testbed's
+    /// *instrument*: wall-metered hosts (DIDCLab) add the always-on
+    /// platform base to the projected package draw, RAPL hosts report the
+    /// package alone — the same convention [`Self::record_tick`] bills
+    /// under. The dispatcher's fleet power cap compares aggregates of
+    /// this quantity.
+    pub fn projected_instrument_power(&self, demand: &CpuDemand) -> Power {
+        let pkg = self.min_client_power_for(demand).power;
+        if self.wall_meter {
+            pkg + self.client_node.base()
+        } else {
+            pkg
         }
     }
 
@@ -520,6 +607,62 @@ mod tests {
         let empty = h.drain_fleet_interval(t, 3);
         assert_eq!(empty.avg_load, 0.0);
         assert_eq!(empty.avg_throughput, Rate::ZERO);
+    }
+
+    #[test]
+    fn min_power_projection_picks_cheapest_feasible_point() {
+        let h = host("cloudlab");
+        // Idle demand: the floor of the grid wins.
+        let idle = h.min_client_power_for(&CpuDemand::default());
+        assert_eq!(idle.cores, 1);
+        assert_eq!(idle.freq, h.client.spec().min_freq());
+        // ~1 Gbps of goodput still fits low operating points on Broadwell
+        // and must cost more than idle.
+        let demand =
+            CpuDemand { bytes_per_sec: 115e6, requests_per_sec: 0.0, open_streams: 5.0 };
+        let p = h.min_client_power_for(&demand);
+        assert!(p.power > idle.power);
+        let spec = h.client.spec().clone();
+        // The chosen point can actually carry the demand…
+        let cap = spec.achievable_bytes_per_sec(p.cores, p.freq, 0.0, 5.0, MAX_APP_UTILIZATION);
+        assert!(cap + 1e-9 >= demand.bytes_per_sec);
+        // …and no feasible grid point is cheaper.
+        for cores in 1..=spec.num_cores {
+            for &f in &spec.freq_levels {
+                let cap =
+                    spec.achievable_bytes_per_sec(cores, f, 0.0, 5.0, MAX_APP_UTILIZATION);
+                if cap + 1e-9 < demand.bytes_per_sec {
+                    continue;
+                }
+                let load = spec.load(&demand, cores, f);
+                let w = h.client_power_model().at(cores, f).power(load, demand.bytes_per_sec);
+                assert!(w >= p.power, "{cores} cores @ {f}: {w:?} beats {:?}", p.power);
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_demand_projects_the_saturated_max_point() {
+        let h = host("didclab");
+        let demand = CpuDemand { bytes_per_sec: 1e12, ..CpuDemand::default() };
+        let p = h.min_client_power_for(&demand);
+        assert_eq!(p.cores, h.client.spec().num_cores);
+        assert_eq!(p.freq, h.client.spec().max_freq());
+    }
+
+    #[test]
+    fn wall_meter_projection_includes_platform_base() {
+        let didclab = host("didclab");
+        let d = CpuDemand::default();
+        assert!(
+            didclab.projected_instrument_power(&d) > didclab.min_client_power_for(&d).power,
+            "wall instrument adds the platform base"
+        );
+        let cloudlab = host("cloudlab");
+        assert_eq!(
+            cloudlab.projected_instrument_power(&d),
+            cloudlab.min_client_power_for(&d).power
+        );
     }
 
     #[test]

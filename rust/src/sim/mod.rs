@@ -5,15 +5,19 @@
 //! runs a single complete transfer under a tuning algorithm and produces
 //! a [`session::SessionOutcome`] (the numbers the paper's figures plot);
 //! [`fleet`] drives N concurrent sessions with cross-session arbitration
-//! and per-tenant accounting. The session driver is the N=1 special case
-//! of the fleet driver.
+//! and per-tenant accounting; [`dispatcher`] drives several hosts behind
+//! a placement policy with open (Poisson) workloads and power-capped
+//! admission control. The session driver is the N=1 special case of the
+//! fleet driver, which in turn is the one-host special case of the
+//! dispatcher's per-host world.
 
 mod engine;
 mod host;
 mod telemetry;
+pub mod dispatcher;
 pub mod fleet;
 pub mod session;
 
 pub use engine::{SessionSlot, Simulation, TuneCtx};
-pub use host::{FleetView, Host, HostTick, MAX_APP_UTILIZATION};
-pub use telemetry::{NetView, Telemetry, TickStats};
+pub use host::{FleetView, Host, HostTick, ProjectedPoint, MAX_APP_UTILIZATION};
+pub use telemetry::{DispatchRecord, NetView, PlacementScore, Telemetry, TickStats};

@@ -15,11 +15,17 @@ use crate::units::{Bytes, Energy, Freq, Rate, SimDuration};
 /// Everything needed to run one session.
 #[derive(Debug, Clone)]
 pub struct SessionConfig {
+    /// The end systems + path to run on.
     pub testbed: Testbed,
+    /// The files to move.
     pub dataset: Dataset,
+    /// The tuning algorithm.
     pub algorithm: AlgorithmKind,
+    /// Tuner knobs.
     pub params: TunerParams,
+    /// RNG seed (background noise).
     pub seed: u64,
+    /// Simulation tick length.
     pub tick: SimDuration,
     /// Abort the session after this much simulated time.
     pub max_sim_time: SimDuration,
@@ -38,6 +44,7 @@ pub struct SessionConfig {
 }
 
 impl SessionConfig {
+    /// A session with default knobs.
     pub fn new(testbed: Testbed, dataset: Dataset, algorithm: AlgorithmKind) -> Self {
         SessionConfig {
             testbed,
@@ -66,16 +73,19 @@ impl SessionConfig {
         self
     }
 
+    /// Replace the tuner parameters.
     pub fn with_params(mut self, params: TunerParams) -> Self {
         self.params = params;
         self
     }
 
+    /// Set the RNG seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Record the per-timeout timeline.
     pub fn recording(mut self) -> Self {
         self.record_timeline = true;
         self
@@ -85,25 +95,38 @@ impl SessionConfig {
 /// One point of the per-timeout timeline.
 #[derive(Debug, Clone, Copy)]
 pub struct TimelinePoint {
+    /// Time of the timeout, seconds.
     pub t_secs: f64,
     /// FSM state the algorithm was in when this interval was observed.
     pub fsm: &'static str,
+    /// Interval-average throughput.
     pub throughput: Rate,
+    /// Channels open at the timeout.
     pub channels: u32,
+    /// Client cores online.
     pub active_cores: u32,
+    /// Client frequency.
     pub freq: Freq,
+    /// Interval-average client CPU load.
     pub cpu_load: f64,
+    /// Interval-average client power, W.
     pub power_w: f64,
 }
 
 /// What one session produced — the quantities the paper's figures plot.
 #[derive(Debug, Clone)]
 pub struct SessionOutcome {
+    /// Algorithm that drove the transfer.
     pub algorithm: String,
+    /// Testbed name.
     pub testbed: String,
+    /// Dataset name.
     pub dataset: String,
+    /// Whether the transfer finished before the cap.
     pub completed: bool,
+    /// Session wall time (simulated).
     pub duration: SimDuration,
+    /// Bytes moved.
     pub moved: Bytes,
     /// Whole-session average application throughput.
     pub avg_throughput: Rate,
@@ -111,10 +134,15 @@ pub struct SessionOutcome {
     pub client_energy: Energy,
     /// Client package (RAPL) energy, regardless of instrument.
     pub client_package_energy: Energy,
+    /// Server package energy.
     pub server_energy: Energy,
+    /// Client cores online at the end.
     pub final_active_cores: u32,
+    /// Client frequency at the end.
     pub final_freq: Freq,
+    /// Most channels ever open.
     pub peak_channels: u32,
+    /// Per-timeout timeline (empty unless recorded).
     pub timeline: Vec<TimelinePoint>,
 }
 

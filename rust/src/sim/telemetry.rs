@@ -5,12 +5,19 @@ use crate::units::{Bytes, Energy, Power, Rate, SimDuration, SimTime};
 /// Instantaneous statistics from one simulation tick.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TickStats {
+    /// Application goodput this tick.
     pub goodput: Rate,
+    /// Bytes moved this tick.
     pub moved: Bytes,
+    /// Client CPU load (0..∞).
     pub client_load: f64,
+    /// Server CPU load (0..∞).
     pub server_load: f64,
+    /// Client package power.
     pub client_power: Power,
+    /// Server package power.
     pub server_power: Power,
+    /// TCP streams open across all sessions.
     pub open_streams: usize,
     /// True when an active session's transfer finished on this tick — the
     /// event-horizon drivers end their inner tick loop here so departures
@@ -25,10 +32,15 @@ pub struct TickStats {
 pub struct NetView {
     /// Estimated available bottleneck capacity, bytes/s.
     pub available_bps: f64,
+    /// Path round-trip time, seconds.
     pub rtt_s: f64,
+    /// Mean steady-state TCP window, bytes.
     pub avg_win_bytes: f64,
+    /// Stream count where overload sets in.
     pub knee_streams: f64,
+    /// Overload penalty slope.
     pub overload_gamma: f64,
+    /// Overload penalty floor.
     pub overload_floor: f64,
     /// Average streams per channel across open channels.
     pub parallelism: f64,
@@ -43,6 +55,7 @@ pub struct NetView {
 /// `cpuLoad`, remaining data).
 #[derive(Debug, Clone, Copy)]
 pub struct Telemetry {
+    /// When the interval ended.
     pub now: SimTime,
     /// Average application throughput over the interval.
     pub avg_throughput: Rate,
@@ -92,6 +105,67 @@ impl Telemetry {
     /// Fraction of the session already moved.
     pub fn progress(&self) -> f64 {
         1.0 - self.remaining.fraction_of(self.total)
+    }
+}
+
+/// One host's score sheet inside a [`DispatchRecord`] — the quantities
+/// the placement policy compared when a session was dispatched. Exposed
+/// so placement decisions can be mined offline (historical-log-driven
+/// tuning, arXiv:2104.01192): every record carries enough context to
+/// replay or second-guess the choice.
+#[derive(Debug, Clone)]
+pub struct PlacementScore {
+    /// Host name (its [`crate::sim::dispatcher::HostSpec`] name).
+    pub host: String,
+    /// Sessions active on the host when the decision was made.
+    pub active_sessions: u32,
+    /// Predicted whole-host instrument power at the current session
+    /// count, W.
+    pub current_power_w: f64,
+    /// Predicted whole-host instrument power with the new session, W.
+    pub projected_power_w: f64,
+    /// Expected goodput of the new session if placed here, bytes/s.
+    pub projected_session_bps: f64,
+    /// Marginal energy per byte: `(projected − current) / goodput`, J/B.
+    pub marginal_j_per_byte: f64,
+}
+
+/// One dispatcher decision: which host (if any) an arriving session was
+/// placed on, with the per-host scores that drove the choice — the
+/// telemetry surface of [`crate::sim::dispatcher::run_dispatcher`].
+#[derive(Debug, Clone)]
+pub struct DispatchRecord {
+    /// When the decision was made (simulated clock), seconds.
+    pub t_secs: f64,
+    /// Session name.
+    pub session: String,
+    /// When the session originally asked to run, seconds (equals
+    /// `t_secs` unless it sat in the admission queue first).
+    pub requested_at_secs: f64,
+    /// Index of the host the session was admitted to, or `None` if it
+    /// was queued by admission control.
+    pub admitted_host: Option<usize>,
+    /// Name of the admitting host (`None` while queued).
+    pub host: Option<String>,
+    /// Projected aggregate fleet power after this decision, W — for an
+    /// admission, the value admission control compared against the power
+    /// cap; for a queueing, the best (lowest) projection among hosts with
+    /// a free slot, i.e. the one that still broke the cap.
+    pub projected_fleet_power_w: f64,
+    /// Per-host scores at decision time, indexed like the dispatcher's
+    /// host list.
+    pub scores: Vec<PlacementScore>,
+}
+
+impl DispatchRecord {
+    /// True when this decision queued the session instead of admitting.
+    pub fn queued(&self) -> bool {
+        self.admitted_host.is_none()
+    }
+
+    /// How long the session waited between requesting and this decision.
+    pub fn waited_secs(&self) -> f64 {
+        (self.t_secs - self.requested_at_secs).max(0.0)
     }
 }
 

@@ -73,6 +73,7 @@ impl Gen {
         self.usize_in(lo as usize, hi as usize) as u32
     }
 
+    /// A fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.f64_in(0.0, 1.0) < 0.5
     }

@@ -30,6 +30,7 @@ impl Channel {
         Channel { partition, streams }
     }
 
+    /// Open TCP streams on this channel.
     pub fn num_streams(&self) -> usize {
         self.streams.len()
     }

@@ -8,6 +8,7 @@ use crate::units::{Bytes, Rate, Rtt, SimDuration};
 /// Per-partition progress the tuning algorithms observe.
 #[derive(Debug, Clone)]
 pub struct PartitionProgress {
+    /// Partition band name (`"small"` / `"medium"` / `"large"`).
     pub name: &'static str,
     /// Per-partition pipelining level (requests in flight back-to-back).
     pub pp_level: u32,
@@ -15,7 +16,9 @@ pub struct PartitionProgress {
     pub parallelism: u32,
     /// Average file size (drives request-rate and pipelining overhead).
     pub avg_file_size: Bytes,
+    /// Bytes the partition started with.
     pub total: Bytes,
+    /// Bytes still to move.
     pub remaining: Bytes,
     /// Channel-distribution weight (recomputed by `update_weights`).
     pub weight: f64,
@@ -28,6 +31,7 @@ pub struct PartitionProgress {
 }
 
 impl PartitionProgress {
+    /// True once the partition has no bytes left.
     pub fn done(&self) -> bool {
         self.remaining.is_zero()
     }
@@ -135,30 +139,37 @@ impl TransferEngine {
         p.min(room.max(1))
     }
 
+    /// Per-partition progress view.
     pub fn partitions(&self) -> &[PartitionProgress] {
         &self.partitions
     }
 
+    /// The open channels.
     pub fn channels(&self) -> &[Channel] {
         &self.channels
     }
 
+    /// Open channel count.
     pub fn num_channels(&self) -> u32 {
         self.channels.len() as u32
     }
 
+    /// Total TCP streams across open channels.
     pub fn open_streams(&self) -> usize {
         self.channels.iter().map(|c| c.num_streams()).sum()
     }
 
+    /// Bytes still to move across all partitions.
     pub fn remaining(&self) -> Bytes {
         self.partitions.iter().map(|p| p.remaining).sum()
     }
 
+    /// Total session size.
     pub fn total(&self) -> Bytes {
         self.partitions.iter().map(|p| p.total).sum()
     }
 
+    /// True once every partition is finished.
     pub fn is_done(&self) -> bool {
         self.partitions.iter().all(|p| p.done())
     }
@@ -190,6 +201,7 @@ impl TransferEngine {
         self.channel_cap = cap.map(|c| c.max(1));
     }
 
+    /// The active per-session channel budget, if any.
     pub fn channel_cap(&self) -> Option<u32> {
         self.channel_cap
     }

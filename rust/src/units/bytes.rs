@@ -13,6 +13,7 @@ use std::ops::{Add, AddAssign, Div, Mul, Sub, SubAssign};
 pub struct Bytes(f64);
 
 impl Bytes {
+    /// Zero bytes.
     pub const ZERO: Bytes = Bytes(0.0);
 
     /// Construct from a raw byte count. Negative inputs clamp to zero.
@@ -20,42 +21,52 @@ impl Bytes {
         Bytes(if bytes > 0.0 { bytes } else { 0.0 })
     }
 
+    /// Construct from kilobytes (10³ bytes).
     pub fn from_kb(kb: f64) -> Self {
         Bytes::new(kb * 1e3)
     }
 
+    /// Construct from megabytes (10⁶ bytes).
     pub fn from_mb(mb: f64) -> Self {
         Bytes::new(mb * 1e6)
     }
 
+    /// Construct from gigabytes (10⁹ bytes).
     pub fn from_gb(gb: f64) -> Self {
         Bytes::new(gb * 1e9)
     }
 
+    /// The raw byte count.
     pub fn as_f64(self) -> f64 {
         self.0
     }
 
+    /// Value in kilobytes.
     pub fn as_kb(self) -> f64 {
         self.0 / 1e3
     }
 
+    /// Value in megabytes.
     pub fn as_mb(self) -> f64 {
         self.0 / 1e6
     }
 
+    /// Value in gigabytes.
     pub fn as_gb(self) -> f64 {
         self.0 / 1e9
     }
 
+    /// True when no bytes remain.
     pub fn is_zero(self) -> bool {
         self.0 <= 0.0
     }
 
+    /// The smaller of two volumes.
     pub fn min(self, other: Bytes) -> Bytes {
         Bytes(self.0.min(other.0))
     }
 
+    /// The larger of two volumes.
     pub fn max(self, other: Bytes) -> Bytes {
         Bytes(self.0.max(other.0))
     }

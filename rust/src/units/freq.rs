@@ -11,36 +11,45 @@ use std::ops::{Add, Div, Mul, Sub};
 pub struct Freq(f64);
 
 impl Freq {
+    /// Zero hertz.
     pub const ZERO: Freq = Freq(0.0);
 
+    /// Construct from hertz.
     pub fn from_hz(hz: f64) -> Self {
         Freq(if hz > 0.0 { hz } else { 0.0 })
     }
 
+    /// Construct from megahertz.
     pub fn from_mhz(mhz: f64) -> Self {
         Freq::from_hz(mhz * 1e6)
     }
 
+    /// Construct from gigahertz.
     pub fn from_ghz(ghz: f64) -> Self {
         Freq::from_hz(ghz * 1e9)
     }
 
+    /// Value in hertz.
     pub fn as_hz(self) -> f64 {
         self.0
     }
 
+    /// Value in megahertz.
     pub fn as_mhz(self) -> f64 {
         self.0 / 1e6
     }
 
+    /// Value in gigahertz.
     pub fn as_ghz(self) -> f64 {
         self.0 / 1e9
     }
 
+    /// The lower of two frequencies.
     pub fn min(self, other: Freq) -> Freq {
         Freq(self.0.min(other.0))
     }
 
+    /// The higher of two frequencies.
     pub fn max(self, other: Freq) -> Freq {
         Freq(self.0.max(other.0))
     }

@@ -10,12 +10,15 @@ use std::ops::{Add, AddAssign, Div, Mul, Sub};
 pub struct Power(f64);
 
 impl Power {
+    /// Zero watts.
     pub const ZERO: Power = Power(0.0);
 
+    /// Construct from watts.
     pub fn from_watts(w: f64) -> Self {
         Power(if w > 0.0 { w } else { 0.0 })
     }
 
+    /// Value in watts.
     pub fn as_watts(self) -> f64 {
         self.0
     }
@@ -25,10 +28,12 @@ impl Power {
         Energy::from_joules(self.0 * dt.as_secs())
     }
 
+    /// The smaller of two power draws.
     pub fn min(self, other: Power) -> Power {
         Power(self.0.min(other.0))
     }
 
+    /// The larger of two power draws.
     pub fn max(self, other: Power) -> Power {
         Power(self.0.max(other.0))
     }
@@ -78,24 +83,30 @@ impl fmt::Display for Power {
 pub struct Energy(f64);
 
 impl Energy {
+    /// Zero joules.
     pub const ZERO: Energy = Energy(0.0);
 
+    /// Construct from joules.
     pub fn from_joules(j: f64) -> Self {
         Energy(if j > 0.0 { j } else { 0.0 })
     }
 
+    /// Construct from kilojoules.
     pub fn from_kilojoules(kj: f64) -> Self {
         Energy::from_joules(kj * 1e3)
     }
 
+    /// Value in joules.
     pub fn as_joules(self) -> f64 {
         self.0
     }
 
+    /// Value in kilojoules.
     pub fn as_kilojoules(self) -> f64 {
         self.0 / 1e3
     }
 
+    /// Value in watt-hours.
     pub fn as_watt_hours(self) -> f64 {
         self.0 / 3600.0
     }
@@ -109,6 +120,7 @@ impl Energy {
         }
     }
 
+    /// True when no energy has accrued.
     pub fn is_zero(self) -> bool {
         self.0 <= 0.0
     }

@@ -11,6 +11,7 @@ use std::ops::{Add, AddAssign, Div, Mul, Sub};
 pub struct Rate(f64);
 
 impl Rate {
+    /// Zero bits per second.
     pub const ZERO: Rate = Rate(0.0);
 
     /// From raw bits per second; negative clamps to zero.
@@ -18,10 +19,12 @@ impl Rate {
         Rate(if bps > 0.0 { bps } else { 0.0 })
     }
 
+    /// Construct from megabits per second.
     pub fn from_mbps(mbps: f64) -> Self {
         Rate::from_bits_per_sec(mbps * 1e6)
     }
 
+    /// Construct from gigabits per second.
     pub fn from_gbps(gbps: f64) -> Self {
         Rate::from_bits_per_sec(gbps * 1e9)
     }
@@ -31,30 +34,37 @@ impl Rate {
         Rate::from_bits_per_sec(bytes * 8.0)
     }
 
+    /// Value in bits per second.
     pub fn as_bits_per_sec(self) -> f64 {
         self.0
     }
 
+    /// Value in megabits per second.
     pub fn as_mbps(self) -> f64 {
         self.0 / 1e6
     }
 
+    /// Value in gigabits per second.
     pub fn as_gbps(self) -> f64 {
         self.0 / 1e9
     }
 
+    /// Value in bytes per second.
     pub fn as_bytes_per_sec(self) -> f64 {
         self.0 / 8.0
     }
 
+    /// True when nothing is flowing.
     pub fn is_zero(self) -> bool {
         self.0 <= 0.0
     }
 
+    /// The slower of two rates.
     pub fn min(self, other: Rate) -> Rate {
         Rate(self.0.min(other.0))
     }
 
+    /// The faster of two rates.
     pub fn max(self, other: Rate) -> Rate {
         Rate(self.0.max(other.0))
     }

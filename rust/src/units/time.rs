@@ -9,12 +9,15 @@ use std::ops::{Add, AddAssign, Div, Mul, Sub};
 pub struct SimTime(f64);
 
 impl SimTime {
+    /// The simulation epoch (t = 0).
     pub const ZERO: SimTime = SimTime(0.0);
 
+    /// Construct from seconds since the epoch.
     pub fn from_secs(s: f64) -> Self {
         SimTime(s)
     }
 
+    /// Seconds since the simulation epoch.
     pub fn as_secs(self) -> f64 {
         self.0
     }
@@ -49,32 +52,40 @@ impl fmt::Display for SimTime {
 pub struct SimDuration(f64);
 
 impl SimDuration {
+    /// Zero duration.
     pub const ZERO: SimDuration = SimDuration(0.0);
 
+    /// Construct from seconds.
     pub fn from_secs(s: f64) -> Self {
         SimDuration(if s > 0.0 { s } else { 0.0 })
     }
 
+    /// Construct from milliseconds.
     pub fn from_millis(ms: f64) -> Self {
         SimDuration::from_secs(ms / 1e3)
     }
 
+    /// Value in seconds.
     pub fn as_secs(self) -> f64 {
         self.0
     }
 
+    /// Value in milliseconds.
     pub fn as_millis(self) -> f64 {
         self.0 * 1e3
     }
 
+    /// True for a zero-length duration.
     pub fn is_zero(self) -> bool {
         self.0 <= 0.0
     }
 
+    /// The shorter of two durations.
     pub fn min(self, other: SimDuration) -> SimDuration {
         SimDuration(self.0.min(other.0))
     }
 
+    /// The longer of two durations.
     pub fn max(self, other: SimDuration) -> SimDuration {
         SimDuration(self.0.max(other.0))
     }

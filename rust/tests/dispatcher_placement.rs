@@ -1,0 +1,256 @@
+//! Acceptance tests for the multi-host dispatcher (ISSUE 3).
+//!
+//! Pins the two headline properties:
+//!
+//! * on a heterogeneous two-host fleet, `MarginalEnergy` placement
+//!   consumes strictly less total energy than `RoundRobin` at equal or
+//!   better aggregate goodput;
+//! * admission control never admits a session whose projected fleet
+//!   power exceeds the configured cap, and queued sessions drain FIFO as
+//!   capacity frees up.
+
+use greendt::config::testbeds;
+use greendt::coordinator::{AlgorithmKind, PlacementKind};
+use greendt::sim::dispatcher::{
+    run_dispatcher, DispatcherConfig, HostSpec, PoissonArrivals, SessionSpec,
+};
+use greendt::units::{Power, SimTime};
+
+/// A heterogeneous fleet: an efficient Broadwell client (CloudLab) next
+/// to a legacy Bloomfield one (DIDCLab), both behind 1 Gbps paths.
+fn hetero_hosts() -> Vec<HostSpec> {
+    vec![
+        HostSpec::new("efficient", testbeds::cloudlab()),
+        HostSpec::new("legacy", testbeds::didclab()),
+    ]
+}
+
+/// Four medium sessions spaced far enough apart that each completes
+/// before the next arrives: placement then changes *where* work runs,
+/// never how much of it overlaps — the clean energy comparison.
+fn spaced_sessions(n: u64, spacing: f64) -> Vec<SessionSpec> {
+    (0..n)
+        .map(|i| {
+            SessionSpec::new(
+                format!("session-{i}"),
+                greendt::dataset::standard::medium_dataset(100 + i),
+                AlgorithmKind::MaxThroughput,
+            )
+            .arriving_at(SimTime::from_secs(spacing * i as f64))
+        })
+        .collect()
+}
+
+fn hetero_cfg(placement: PlacementKind) -> DispatcherConfig {
+    DispatcherConfig::new(hetero_hosts(), placement)
+        .with_sessions(spaced_sessions(4, 180.0))
+        .with_seed(17)
+}
+
+#[test]
+fn marginal_energy_beats_round_robin_on_heterogeneous_fleet() {
+    let me = run_dispatcher(&hetero_cfg(PlacementKind::MarginalEnergy));
+    let rr = run_dispatcher(&hetero_cfg(PlacementKind::RoundRobin));
+    assert!(me.fleet.completed, "marginal-energy run must finish");
+    assert!(rr.fleet.completed, "round-robin run must finish");
+    assert!(me.unplaced.is_empty() && rr.unplaced.is_empty());
+
+    // Marginal-energy placement routes every session to the efficient
+    // host — its predicted joules-per-byte delta is lower at every
+    // arrival instant.
+    for t in &me.fleet.tenants {
+        assert_eq!(t.host, "efficient", "{} placed on {}", t.name, t.host);
+    }
+    // Round-robin alternates, so the legacy host serves half the work.
+    assert!(
+        rr.fleet.tenants.iter().any(|t| t.host == "legacy"),
+        "round-robin must exercise the legacy host"
+    );
+
+    // Headline: strictly less total energy …
+    let me_j = me.fleet.client_energy.as_joules();
+    let rr_j = rr.fleet.client_energy.as_joules();
+    assert!(
+        me_j < rr_j,
+        "marginal energy must beat round-robin on joules: {me_j:.0} vs {rr_j:.0}"
+    );
+
+    // … at equal or better aggregate goodput (same bytes moved; the
+    // makespan must not be worse, because the legacy host is also the
+    // slower one).
+    assert!(
+        (me.fleet.moved.as_f64() - rr.fleet.moved.as_f64()).abs() < 1.0,
+        "both placements move the same workload: {} vs {}",
+        me.fleet.moved,
+        rr.fleet.moved
+    );
+    assert!(
+        me.fleet.duration.as_secs() <= rr.fleet.duration.as_secs() + 1e-9,
+        "marginal energy may not sacrifice makespan: {} vs {}",
+        me.fleet.duration,
+        rr.fleet.duration
+    );
+
+    // The decision telemetry carries the scores that justify the choice.
+    assert_eq!(me.decisions.len(), 4);
+    for d in &me.decisions {
+        assert!(!d.queued());
+        assert_eq!(d.scores.len(), 2);
+        let eff = d.scores.iter().find(|s| s.host == "efficient").unwrap();
+        let old = d.scores.iter().find(|s| s.host == "legacy").unwrap();
+        assert!(
+            eff.marginal_j_per_byte < old.marginal_j_per_byte,
+            "at t={} the efficient host must score better ({:.3e} vs {:.3e})",
+            d.t_secs,
+            eff.marginal_j_per_byte,
+            old.marginal_j_per_byte
+        );
+    }
+}
+
+#[test]
+fn admission_control_respects_the_power_cap() {
+    // Two single-slot CloudLab hosts, three simultaneous arrivals. The
+    // cap is calibrated from an uncapped probe: room for one serving
+    // host (idle fleet + 1.5 × one session's power delta) but not two.
+    let mk_hosts = || {
+        vec![
+            HostSpec::new("a", testbeds::cloudlab()).with_max_sessions(1),
+            HostSpec::new("b", testbeds::cloudlab()).with_max_sessions(1),
+        ]
+    };
+    let mk_sessions = || spaced_sessions(3, 0.0);
+
+    let probe_cfg = DispatcherConfig::new(mk_hosts(), PlacementKind::MarginalEnergy)
+        .with_sessions(mk_sessions())
+        .with_seed(29);
+    let probe = run_dispatcher(&probe_cfg);
+    assert!(probe.fleet.completed);
+    let first = &probe.decisions[0];
+    let idle_fleet: f64 = first.scores.iter().map(|s| s.current_power_w).sum();
+    let chosen = first.admitted_host.expect("uncapped first arrival admits");
+    let delta =
+        first.scores[chosen].projected_power_w - first.scores[chosen].current_power_w;
+    assert!(delta > 0.0, "serving a session must project extra power");
+    let cap = idle_fleet + 1.5 * delta;
+
+    let capped_cfg = DispatcherConfig::new(mk_hosts(), PlacementKind::MarginalEnergy)
+        .with_sessions(mk_sessions())
+        .with_seed(29)
+        .with_power_cap(Power::from_watts(cap));
+    let out = run_dispatcher(&capped_cfg);
+
+    // Everyone is eventually served — admission control delays, it does
+    // not starve.
+    assert!(out.fleet.completed, "capped run must still finish");
+    assert!(out.unplaced.is_empty());
+    for t in &out.fleet.tenants {
+        assert!(t.completed, "{} never finished", t.name);
+    }
+
+    // The invariant under test: no admitted decision ever projected the
+    // fleet past the cap.
+    let mut admitted = 0;
+    let mut queued = 0;
+    for d in &out.decisions {
+        if d.queued() {
+            queued += 1;
+        } else {
+            admitted += 1;
+            assert!(
+                d.projected_fleet_power_w <= cap + 1e-6,
+                "session {} admitted at {:.2} W over the {:.2} W cap",
+                d.session,
+                d.projected_fleet_power_w,
+                cap
+            );
+        }
+    }
+    assert_eq!(admitted, 3, "every session is admitted exactly once");
+    assert!(queued >= 2, "the cap must actually queue the burst, got {queued}");
+
+    // FIFO: sessions are admitted in request order, and the queued ones
+    // waited for a departure.
+    let admit_order: Vec<&str> = out
+        .decisions
+        .iter()
+        .filter(|d| !d.queued())
+        .map(|d| d.session.as_str())
+        .collect();
+    assert_eq!(admit_order, ["session-0", "session-1", "session-2"]);
+    let waited: Vec<f64> = out
+        .decisions
+        .iter()
+        .filter(|d| !d.queued())
+        .map(|d| d.waited_secs())
+        .collect();
+    assert_eq!(waited[0], 0.0);
+    assert!(waited[1] > 0.0 && waited[2] > waited[1] - 1e-9);
+
+    // Serialization is the price: the capped run takes longer than the
+    // uncapped probe that ran two hosts in parallel.
+    assert!(
+        out.fleet.duration.as_secs() > probe.fleet.duration.as_secs(),
+        "cap must serialize the burst: {} vs {}",
+        out.fleet.duration,
+        probe.fleet.duration
+    );
+}
+
+#[test]
+fn dispatcher_runs_are_deterministic_under_a_seed() {
+    let mk = |seed: u64| {
+        let sessions = PoissonArrivals::new(1.0 / 90.0, 3, seed)
+            .sessions("medium", AlgorithmKind::MaxThroughput)
+            .expect("known family");
+        DispatcherConfig::new(hetero_hosts(), PlacementKind::MarginalEnergy)
+            .with_sessions(sessions)
+            .with_seed(seed)
+    };
+    let a = run_dispatcher(&mk(11));
+    let b = run_dispatcher(&mk(11));
+    assert_eq!(a.fleet.duration.as_secs(), b.fleet.duration.as_secs());
+    assert_eq!(
+        a.fleet.client_energy.as_joules(),
+        b.fleet.client_energy.as_joules()
+    );
+    for (x, y) in a.fleet.tenants.iter().zip(&b.fleet.tenants) {
+        assert_eq!(x.host, y.host);
+        assert_eq!(
+            x.finished_at.unwrap().as_secs(),
+            y.finished_at.unwrap().as_secs()
+        );
+    }
+    for (x, y) in a.decisions.iter().zip(&b.decisions) {
+        assert_eq!(x.session, y.session);
+        assert_eq!(x.admitted_host, y.admitted_host);
+        assert_eq!(x.projected_fleet_power_w, y.projected_fleet_power_w);
+    }
+    // A different seed perturbs arrivals and background noise.
+    let c = run_dispatcher(&mk(12));
+    assert_ne!(
+        a.fleet.client_energy.as_joules(),
+        c.fleet.client_energy.as_joules()
+    );
+}
+
+#[test]
+fn fairness_improves_when_placement_spreads_load() {
+    // Two identical hosts, four simultaneous sessions. Least-loaded
+    // spreads them two per host; every session then sees the same world,
+    // so per-tenant goodput is near-identical and the Jain index is
+    // close to 1.
+    let hosts = vec![
+        HostSpec::new("a", testbeds::cloudlab()),
+        HostSpec::new("b", testbeds::cloudlab()),
+    ];
+    let cfg = DispatcherConfig::new(hosts, PlacementKind::LeastLoaded)
+        .with_sessions(spaced_sessions(4, 0.0))
+        .with_seed(23);
+    let out = run_dispatcher(&cfg);
+    assert!(out.fleet.completed);
+    let on_a = out.fleet.tenants.iter().filter(|t| t.host == "a").count();
+    assert_eq!(on_a, 2, "least-loaded must split 4 sessions 2/2");
+    let j = out.fleet.jain_fairness();
+    assert!(j > 0.95, "near-symmetric fleet must be near-fair, Jain {j}");
+}
