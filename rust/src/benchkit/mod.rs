@@ -50,32 +50,10 @@ impl BenchReport {
     }
 }
 
-/// Minimal JSON string escaping (bench names are code-controlled ASCII,
-/// but keep the output valid for any input).
-pub(crate) fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            '\r' => out.push_str("\\r"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
-/// JSON-safe float rendering (JSON has no NaN/Infinity literals).
-pub(crate) fn json_f64(x: f64) -> String {
-    if x.is_finite() {
-        format!("{x}")
-    } else {
-        "null".to_string()
-    }
-}
+// The write-side JSON helpers now live with the history store's codec
+// (`crate::history::json`) — one escaping/number implementation for every
+// JSON line the crate emits.
+pub(crate) use crate::history::json::{escape as json_escape, num as json_f64};
 
 fn fmt_duration(secs: f64) -> String {
     if secs >= 1.0 {

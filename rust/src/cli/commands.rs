@@ -32,6 +32,8 @@ COMMANDS:
              --seed <N>            RNG seed (default 42)
              --trace               print the per-timeout timeline
              --server-scaling      extension: Algorithm 3 on the server too
+             --record-history <F>  append this run to a JSONL history store
+             --history <F>         warm-start `--algo history` from a store
   sweep      Ablations: static-concurrency sweep + tuner sensitivity
              --testbed <T> --dataset <D>  (sweep panel; default cloudlab/large)
   fleet      Multi-tenant fleet: N sessions under one arbitration policy,
@@ -39,18 +41,28 @@ COMMANDS:
              --testbed <T[,T2,..]> testbed per host, cycled (default cloudlab)
              --dataset <D>         per-tenant dataset family (default medium)
              --tenants <N>         number of sessions (default 4)
-             --algo <A>            per-tenant algorithm (default eemt)
+             --algo <A>            per-tenant algorithm (default eemt;
+                                   `history` = warm-started ME)
              --policy fairshare|minenergy   host arbitration (default minenergy)
              --spacing <SECS>      arrival spacing between tenants (default 30)
              --seed <N>            RNG seed (default 42)
+             --record-history <F>  append completed sessions (and, multi-host,
+                                   placement decisions) to a JSONL store
+             --history <F>         learn from a store: warm-starts
+                                   `--algo history`, feeds `--placement learned`
              multi-host dispatcher (any of these flags selects it):
              --hosts <N>           number of hosts (default 2)
-             --placement rr|leastloaded|marginal    session placement
+             --placement rr|leastloaded|marginal|learned   session placement
                                    (default marginal = marginal energy)
              --arrivals poisson:<per-min>:<count>   open workload: Poisson
                                    arrivals instead of --tenants/--spacing
              --power-cap <WATTS>   fleet admission cap on projected power
              --max-sessions <N>    per-host session-slot pool (default 8)
+  history    Inspect or maintain a JSONL history store
+             stats --history <F>   record counts + per-host/testbed costs
+             query --history <F>   k-NN answer for a workload:
+                   --testbed <T> --dataset <D> [--contention <N>] [--algo <A>]
+             prune --history <F> --keep <N>   keep the newest N records
   bench      Hot-path benchmark: sim-seconds/wall-second of the naive
              reference stepper vs the epoch-cached stepper (plus micro
              benches of the per-tick pipeline)
@@ -77,6 +89,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
     match cmd {
         "run" | "session" => cmd_run(&args),
         "fleet" => cmd_fleet(&args),
+        "history" => cmd_history(&args),
         "sweep" => cmd_sweep(&args),
         "bench" => cmd_bench(&args),
         "fig2" => cmd_fig2(&args),
@@ -103,6 +116,67 @@ fn parse_algo(args: &ParsedArgs) -> Result<AlgorithmKind> {
     AlgorithmKind::parse(id, target).with_context(|| {
         format!("unknown algorithm '{id}' (or missing --target-mbps for target algorithms)")
     })
+}
+
+/// Load the `--history` store's k-NN index, if the flag was given.
+fn load_history_index(args: &ParsedArgs) -> Result<Option<crate::history::KnnIndex>> {
+    match args.get("history") {
+        Some(path) => {
+            let store = crate::history::HistoryStore::open(path)?;
+            let index = store.index();
+            println!(
+                "history: loaded {} run records from {path} ({} indexed, {} lines skipped)",
+                store.runs().len(),
+                index.len(),
+                store.skipped()
+            );
+            Ok(Some(index))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Swap a cold `--algo history` kind for the k-NN warm start answered by
+/// the index (when one is loaded and confident); every other kind passes
+/// through unchanged.
+fn warm_kind(
+    kind: AlgorithmKind,
+    index: Option<&crate::history::KnnIndex>,
+    dataset: &crate::dataset::Dataset,
+    testbed: &crate::config::Testbed,
+    contention: u32,
+) -> AlgorithmKind {
+    use crate::history::{Query, WorkloadFingerprint};
+    if kind != AlgorithmKind::HistoryTuned(None) {
+        return kind;
+    }
+    let Some(index) = index else { return kind };
+    let q = Query::on_testbed(testbed, WorkloadFingerprint::of(dataset), contention)
+        .with_algorithm(kind.id());
+    match index.confident_warm_start(&q) {
+        Some(warm) => AlgorithmKind::HistoryTuned(Some(warm)),
+        None => kind,
+    }
+}
+
+/// Append a run's records to the `--record-history` store, if requested.
+/// The recording path never queries past records, so the store is opened
+/// append-only (no load/parse of the accumulated log).
+fn record_history(
+    args: &ParsedArgs,
+    runs: &[crate::history::RunRecord],
+    decisions: &[crate::sim::DispatchRecord],
+) -> Result<()> {
+    let Some(path) = args.get("record-history") else { return Ok(()) };
+    let mut store = crate::history::HistoryStore::append_only(path);
+    let n = store.append_runs(runs)?;
+    let d = store.append_dispatches(decisions)?;
+    if d > 0 {
+        println!("history: {n} run records + {d} decisions appended to {path}");
+    } else {
+        println!("history: {n} run records appended to {path}");
+    }
+    Ok(())
 }
 
 fn parse_params(args: &ParsedArgs) -> Result<TunerParams> {
@@ -136,6 +210,18 @@ fn cmd_run(args: &ParsedArgs) -> Result<i32> {
             .with_context(|| format!("unknown dataset '{ds_name}'"))?;
         (testbed, dataset, parse_algo(args)?, parse_params(args)?, seed)
     };
+
+    // `--algo history` + `--history <store>`: replace the cold kind with
+    // the k-NN warm start for this workload (a lone session queries at
+    // contention 0).
+    let index = load_history_index(args)?;
+    let kind = warm_kind(kind, index.as_ref(), &dataset, &testbed, 0);
+    if let AlgorithmKind::HistoryTuned(Some(w)) = kind {
+        println!(
+            "history: warm start at {} cores / P-state {} / {} channels",
+            w.cores, w.pstate, w.channels
+        );
+    }
 
     let mut cfg =
         SessionConfig::new(testbed, dataset, kind).with_params(params).with_seed(seed);
@@ -177,6 +263,7 @@ fn cmd_run(args: &ParsedArgs) -> Result<i32> {
         crate::metrics::timeseries::save_timeline(&out, path)?;
         println!("\ntimeline written to {path}");
     }
+    record_history(args, &out.run_records, &[])?;
     Ok(if out.completed { 0 } else { 1 })
 }
 
@@ -214,17 +301,22 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<i32> {
     let kind = parse_algo(args)?;
     let testbed =
         testbeds::by_name(tb_name).with_context(|| format!("unknown testbed '{tb_name}'"))?;
+    let index = load_history_index(args)?;
 
     let mut cfg = FleetConfig::new(testbed, Some(policy)).with_seed(seed);
     for i in 0..tenants {
         let ds = standard::by_name(ds_name, seed.wrapping_add(i as u64))
             .with_context(|| format!("unknown dataset '{ds_name}'"))?;
+        // Warm-start `history` tenants: tenant i expects roughly i earlier
+        // sessions still resident (the scripted arrivals overlap).
+        let kind = warm_kind(kind, index.as_ref(), &ds, &cfg.testbed, i.min(8));
         cfg.tenants.push(
             TenantSpec::new(format!("tenant-{i}"), ds, kind)
                 .arriving_at(SimTime::from_secs(spacing * i as f64)),
         );
     }
     let out = run_fleet(&cfg);
+    record_history(args, &out.run_records, &[])?;
 
     println!(
         "fleet: {} tenants ({}) on {} under {}",
@@ -353,11 +445,22 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
     };
     let n_sessions = sessions.len();
 
+    // Historical-log learning: the dispatcher itself warm-starts
+    // `history` sessions at admission time (against the host that
+    // actually admits them) and blends observed costs into `learned`
+    // placement — the CLI only loads the index.
+    let index = load_history_index(args)?;
+    if placement == PlacementKind::Learned && index.is_none() {
+        println!("note: --placement learned without --history scores like marginal energy");
+    }
+
     let mut cfg = DispatcherConfig::new(hosts, placement).with_seed(seed);
     cfg.sessions = sessions;
     cfg.policy = policy;
     cfg.power_cap = power_cap;
+    cfg.history = index;
     let out = run_dispatcher(&cfg);
+    record_history(args, &out.fleet.run_records, &out.decisions)?;
     let fleet = &out.fleet;
 
     println!(
@@ -428,6 +531,122 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
         println!("  never admitted   : {}", out.unplaced.join(", "));
     }
     Ok(if fleet.completed { 0 } else { 1 })
+}
+
+/// The `greendt history` subcommand: inspect or maintain a JSONL store
+/// (`stats` / `query` / `prune`).
+fn cmd_history(args: &ParsedArgs) -> Result<i32> {
+    use crate::history::{HistoryStore, Query, WorkloadFingerprint, CONFIDENCE_FLOOR};
+    use crate::units::Bytes;
+
+    let action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("stats");
+    let path = args.get("history").context("history commands need --history <file>")?;
+    let mut store = HistoryStore::open(path)?;
+    match action {
+        "stats" => {
+            let s = store.stats();
+            println!("history store: {path}");
+            println!("  run records      : {}", s.runs);
+            println!("  dispatch records : {}", s.dispatches);
+            println!("  skipped lines    : {}", s.skipped);
+            if s.runs == 0 {
+                return Ok(0);
+            }
+            let mut hosts: Vec<String> =
+                store.runs().iter().map(|r| r.host.clone()).collect();
+            hosts.sort();
+            hosts.dedup();
+            let mut t = crate::metrics::Table::new(
+                "per-host history",
+                &["host", "testbed", "runs", "moved", "mean J/B", "mean goodput"],
+            );
+            for h in hosts {
+                let rs: Vec<_> = store.runs().iter().filter(|r| r.host == h).collect();
+                let moved: f64 = rs.iter().map(|r| r.moved_bytes).sum();
+                let joules: f64 = rs.iter().map(|r| r.joules).sum();
+                let goodput =
+                    rs.iter().map(|r| r.goodput_bps).sum::<f64>() / rs.len() as f64;
+                t.push_row(vec![
+                    h,
+                    rs[0].testbed.clone(),
+                    rs.len().to_string(),
+                    format!("{}", Bytes::new(moved)),
+                    format!("{:.3e}", if moved > 0.0 { joules / moved } else { 0.0 }),
+                    format!("{}", Rate::from_bytes_per_sec(goodput)),
+                ]);
+            }
+            println!("{}", t.to_markdown());
+            Ok(0)
+        }
+        "query" => {
+            let tb_name = args.get_or("testbed", "cloudlab");
+            let ds_name = args.get_or("dataset", "medium");
+            let contention = args
+                .get_u32("contention")
+                .map_err(|e: ArgError| anyhow::anyhow!(e))?
+                .unwrap_or(0);
+            let testbed = testbeds::by_name(tb_name)
+                .with_context(|| format!("unknown testbed '{tb_name}'"))?;
+            let dataset = standard::by_name(ds_name, seed_of(args)?)
+                .with_context(|| format!("unknown dataset '{ds_name}'"))?;
+            let index = store.index();
+            let mut q =
+                Query::on_testbed(&testbed, WorkloadFingerprint::of(&dataset), contention);
+            if let Some(algo) = args.get("algo") {
+                q = q.with_algorithm(algo);
+            }
+            println!(
+                "query: {ds_name} on {tb_name} at contention {contention} \
+                 ({} records indexed)",
+                index.len()
+            );
+            match index.warm_start(&q) {
+                Some((w, conf)) => {
+                    println!(
+                        "  warm start : {} cores / P-state {} / {} channels",
+                        w.cores, w.pstate, w.channels
+                    );
+                    let verdict = if conf >= CONFIDENCE_FLOOR {
+                        "above the floor — would be applied"
+                    } else {
+                        "below the floor — sessions would slow-start"
+                    };
+                    println!("  confidence : {conf:.2} ({verdict})");
+                }
+                None => println!("  warm start : none (empty store)"),
+            }
+            for host in index.hosts() {
+                if let Some((jpb, conf)) = index.observed_j_per_byte(&host, &q) {
+                    println!(
+                        "  {host:<18}: {jpb:.3e} J/B observed (confidence {conf:.2})"
+                    );
+                }
+            }
+            Ok(0)
+        }
+        "prune" => {
+            // Destructive maintenance never guesses a default budget.
+            let keep = args
+                .get_u32("keep")
+                .map_err(|e: ArgError| anyhow::anyhow!(e))?
+                .context("history prune needs an explicit --keep <N>")?
+                as usize;
+            let before = store.stats();
+            let dropped = store.prune(keep)?;
+            let after = store.stats();
+            println!(
+                "pruned {dropped} of {} lines; kept {} runs + {} decisions",
+                before.runs + before.dispatches,
+                after.runs,
+                after.dispatches
+            );
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown history action '{other}' (expected stats|query|prune)");
+            Ok(2)
+        }
+    }
 }
 
 fn cmd_sweep(args: &ParsedArgs) -> Result<i32> {
@@ -597,5 +816,56 @@ mod tests {
         assert!(run(&argv("fleet --placement warp")).is_err());
         assert!(run(&argv("fleet --arrivals uniform:1:3")).is_err());
         assert!(run(&argv("fleet --hosts 2 --testbed cloudlab,atlantis")).is_err());
+    }
+
+    #[test]
+    fn history_algo_runs_cold_without_a_store() {
+        let code = run(&argv(
+            "run --testbed cloudlab --dataset large --algo history --seed 3",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn learned_placement_without_history_degrades_gracefully() {
+        let code = run(&argv(
+            "fleet --hosts 2 --placement learned --tenants 2 --dataset small \
+             --spacing 5 --seed 3",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn history_subcommand_needs_a_store_flag() {
+        assert!(run(&argv("history stats")).is_err());
+        assert_eq!(run(&argv("history frobnicate --history /tmp/x.jsonl")).unwrap(), 2);
+    }
+
+    #[test]
+    fn record_then_warm_then_inspect_cycle() {
+        let path = std::env::temp_dir()
+            .join(format!("greendt_cli_history_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let p = path.to_str().unwrap();
+        let base = "fleet --tenants 2 --dataset small --spacing 5 --algo history --seed 3";
+        assert_eq!(run(&argv(&format!("{base} --record-history {p}"))).unwrap(), 0);
+        assert_eq!(run(&argv(&format!("{base} --history {p}"))).unwrap(), 0);
+        assert_eq!(run(&argv(&format!("history stats --history {p}"))).unwrap(), 0);
+        assert_eq!(
+            run(&argv(&format!(
+                "history query --history {p} --testbed cloudlab --dataset small"
+            )))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&argv(&format!("history prune --history {p} --keep 1"))).unwrap(),
+            0
+        );
+        // Destructive prune refuses to guess a budget.
+        assert!(run(&argv(&format!("history prune --history {p}"))).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -102,6 +102,12 @@ pub enum AlgorithmKind {
     /// governor (the static baseline the sweep harness measures, and a
     /// simple tenant workload for fleet scenarios).
     NoTune(u32),
+    /// ME warm-started from the historical-log subsystem: starts at the
+    /// carried [`WarmStart`](crate::history::WarmStart) (the k-NN answer
+    /// for this workload) and keeps the paper's runtime adaptation;
+    /// `None` — an empty store, or confidence below the floor — is
+    /// bit-for-bit the cold [`Self::MinEnergy`] slow-start path.
+    HistoryTuned(Option<crate::history::WarmStart>),
 }
 
 impl AlgorithmKind {
@@ -120,10 +126,13 @@ impl AlgorithmKind {
             AlgorithmKind::AlanMinEnergy => "alan-me",
             AlgorithmKind::AlanMaxThroughput => "alan-mt",
             AlgorithmKind::NoTune(_) => "notune",
+            AlgorithmKind::HistoryTuned(_) => "history",
         }
     }
 
     /// Parse a CLI identifier (target rates are provided separately).
+    /// `history` parses cold ([`Self::HistoryTuned`] with no warm start);
+    /// the CLI swaps in the k-NN answer when `--history` names a store.
     pub fn parse(id: &str, target: Option<Rate>) -> Option<AlgorithmKind> {
         Some(match id {
             "me" => AlgorithmKind::MinEnergy,
@@ -137,6 +146,7 @@ impl AlgorithmKind {
             "ismail-tt" => AlgorithmKind::IsmailTarget(target?),
             "alan-me" => AlgorithmKind::AlanMinEnergy,
             "alan-mt" => AlgorithmKind::AlanMaxThroughput,
+            "history" => AlgorithmKind::HistoryTuned(None),
             _ => return None,
         })
     }
@@ -174,14 +184,19 @@ impl AlgorithmKind {
             AlgorithmKind::NoTune(channels) => {
                 Box::new(super::no_tune::NoTune::new(channels))
             }
+            AlgorithmKind::HistoryTuned(warm) => {
+                Box::new(super::history_tuned::HistoryTuned::new(params, warm))
+            }
         }
     }
 
     /// The SLA the algorithm serves (drives Alg. 1's CPU init).
     pub fn sla(&self) -> SlaPolicy {
         match *self {
-            AlgorithmKind::MinEnergy | AlgorithmKind::IsmailMinEnergy
-            | AlgorithmKind::AlanMinEnergy => SlaPolicy::Energy,
+            AlgorithmKind::MinEnergy
+            | AlgorithmKind::IsmailMinEnergy
+            | AlgorithmKind::AlanMinEnergy
+            | AlgorithmKind::HistoryTuned(_) => SlaPolicy::Energy,
             AlgorithmKind::TargetThroughput(r) | AlgorithmKind::IsmailTarget(r) => {
                 SlaPolicy::TargetThroughput(r)
             }
@@ -209,17 +224,24 @@ mod tests {
             AlgorithmKind::IsmailTarget(Rate::from_gbps(2.0)),
             AlgorithmKind::AlanMinEnergy,
             AlgorithmKind::AlanMaxThroughput,
+            AlgorithmKind::HistoryTuned(None),
         ] {
             let parsed = AlgorithmKind::parse(kind.id(), target).unwrap();
             assert_eq!(parsed.id(), kind.id());
         }
         assert!(AlgorithmKind::parse("bogus", None).is_none());
         assert!(AlgorithmKind::parse("eett", None).is_none(), "target required");
+        // `history` always parses cold; warm starts come from the store.
+        assert_eq!(
+            AlgorithmKind::parse("history", None),
+            Some(AlgorithmKind::HistoryTuned(None))
+        );
     }
 
     #[test]
     fn sla_mapping() {
         assert!(AlgorithmKind::MinEnergy.sla().is_energy());
+        assert!(AlgorithmKind::HistoryTuned(None).sla().is_energy());
         assert!(!AlgorithmKind::MaxThroughput.sla().is_energy());
         assert!(AlgorithmKind::TargetThroughput(Rate::from_mbps(400.0)).sla().target().is_some());
     }
@@ -240,6 +262,12 @@ mod tests {
             AlgorithmKind::AlanMinEnergy,
             AlgorithmKind::AlanMaxThroughput,
             AlgorithmKind::NoTune(4),
+            AlgorithmKind::HistoryTuned(None),
+            AlgorithmKind::HistoryTuned(Some(crate::history::WarmStart {
+                cores: 2,
+                pstate: 1,
+                channels: 8,
+            })),
         ] {
             let a = kind.build(p);
             assert!(!a.name().is_empty());

@@ -182,6 +182,14 @@ pub enum PlacementKind {
     /// points (both priced by [`crate::power::PowerModel::at`]), divided
     /// by the new session's expected goodput there.
     MarginalEnergy,
+    /// `MarginalEnergy` corrected by experience (historical-log learning,
+    /// arXiv:2104.01192): the model score is blended with the
+    /// history-observed J/B of similar workloads on each host, weighted
+    /// by the observation's k-NN confidence (see
+    /// [`crate::history::KnnIndex::observed_j_per_byte`]). Identical to
+    /// `MarginalEnergy` when the run has no history attached or the
+    /// store knows nothing relevant.
+    Learned,
 }
 
 impl PlacementKind {
@@ -191,6 +199,7 @@ impl PlacementKind {
             PlacementKind::RoundRobin => "roundrobin",
             PlacementKind::LeastLoaded => "leastloaded",
             PlacementKind::MarginalEnergy => "marginalenergy",
+            PlacementKind::Learned => "learned",
         }
     }
 
@@ -202,6 +211,7 @@ impl PlacementKind {
             "marginalenergy" | "marginal-energy" | "marginal" | "me" => {
                 PlacementKind::MarginalEnergy
             }
+            "learned" | "history" => PlacementKind::Learned,
             _ => return None,
         })
     }
@@ -238,11 +248,13 @@ mod tests {
             PlacementKind::RoundRobin,
             PlacementKind::LeastLoaded,
             PlacementKind::MarginalEnergy,
+            PlacementKind::Learned,
         ] {
             assert_eq!(PlacementKind::parse(kind.id()), Some(kind));
         }
         assert_eq!(PlacementKind::parse("rr"), Some(PlacementKind::RoundRobin));
         assert_eq!(PlacementKind::parse("marginal"), Some(PlacementKind::MarginalEnergy));
+        assert_eq!(PlacementKind::parse("history"), Some(PlacementKind::Learned));
         assert!(PlacementKind::parse("bogus").is_none());
     }
 

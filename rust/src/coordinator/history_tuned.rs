@@ -1,0 +1,178 @@
+//! History-warm-started tuning: skip the probe when the fleet has
+//! already seen this workload.
+//!
+//! [`HistoryTuned`] is the "apply" layer of the historical-log subsystem
+//! ([`crate::history`]): given a [`WarmStart`] answered by the k-NN index
+//! (the settled `(cores, P-state, channels)` point of the most similar
+//! past runs), the session starts *there* — channels open at the
+//! converged count with no Slow Start correction phase, and the client
+//! CPU begins at the recorded operating point instead of Algorithm 1's
+//! cold minimum. Everything after t = 0 is the paper's machinery
+//! unchanged — and structurally so: `HistoryTuned` is a thin shell
+//! around an embedded [`MinEnergy`] whose every timeout it forwards, so
+//! the steady-state loop cannot drift from Algorithm 4's. Warm mode only
+//! rewrites the *initial conditions*
+//! ([`MinEnergy::skip_slow_start`] plus the warm CPU point in the plan);
+//! a stale warm start is therefore corrected at runtime rather than
+//! trusted forever.
+//!
+//! Without a warm start (empty store, or confidence below
+//! [`crate::history::CONFIDENCE_FLOOR`] — the caller decides by passing
+//! `None`), nothing is overridden at all and the session is bit-for-bit
+//! the existing ME slow-start path (pinned by
+//! `rust/tests/history_learning.rs`).
+//!
+//! **Fleet-mode scope.** On a policy-managed host (`greendt fleet`, the
+//! dispatcher) the [`FleetPolicy`](crate::coordinator::fleet::FleetPolicy)
+//! owns the real CPU knobs and per-session governors actuate a shadow
+//! setting, so the warm `(cores, P-state)` is inert there — only the
+//! warm *channel count* takes effect (skipping the slow-start probe).
+//! The full operating point applies in single-session mode
+//! (`greendt run --history`), where the session owns the host CPU.
+//! Warm-starting the policy's own host knobs from aggregate history is
+//! a ROADMAP follow-on.
+
+use super::algorithm::{Algorithm, InitPlan};
+use super::min_energy::MinEnergy;
+use crate::config::experiment::{GovernorKind, TunerParams};
+use crate::config::Testbed;
+use crate::cpusim::CpuState;
+use crate::dataset::Dataset;
+use crate::history::WarmStart;
+use crate::sim::{Telemetry, TuneCtx};
+use crate::units::SimDuration;
+
+/// The history-warm-started Minimum Energy algorithm (see the module
+/// docs). Cold (`warm == None`) it *is* [`MinEnergy`].
+#[derive(Debug)]
+pub struct HistoryTuned {
+    params: TunerParams,
+    warm: Option<WarmStart>,
+    /// The real machinery, warm or cold: a complete ME instance every
+    /// call is forwarded to.
+    inner: MinEnergy,
+}
+
+impl HistoryTuned {
+    /// A session warm-started from `warm` (or the plain ME cold path when
+    /// `None`).
+    pub fn new(params: TunerParams, warm: Option<WarmStart>) -> Self {
+        HistoryTuned { inner: MinEnergy::new(params), params, warm }
+    }
+
+    /// The warm start in effect (`None` = cold fallback).
+    pub fn warm_start(&self) -> Option<WarmStart> {
+        self.warm
+    }
+}
+
+impl Algorithm for HistoryTuned {
+    fn name(&self) -> &'static str {
+        "HistoryTuned"
+    }
+
+    fn timeout(&self) -> SimDuration {
+        self.inner.timeout()
+    }
+
+    fn init(&mut self, testbed: &Testbed, dataset: &Dataset) -> InitPlan {
+        // Algorithm 1 runs either way — history replaces the *probed*
+        // knobs (channels, CPU point), not the dataset layout.
+        let plan = self.inner.init(testbed, dataset);
+        let Some(warm) = self.warm else { return plan };
+
+        let spec = testbed.client_cpu.clone();
+        let pstate = (warm.pstate as usize).min(spec.freq_levels.len() - 1);
+        let freq = spec.freq_levels[pstate];
+        let cores = warm.cores.clamp(1, spec.num_cores);
+        // Same OS-governor escape hatch as ME: without the load-control
+        // module the OS owns the CPU and the warm point applies to
+        // channels only.
+        let client_cpu = if self.params.governor == GovernorKind::Os {
+            CpuState::performance(spec)
+        } else {
+            CpuState::new(spec, cores, freq)
+        };
+        let num_ch = warm.channels.clamp(1, self.params.max_ch);
+        self.inner.skip_slow_start(num_ch);
+        InitPlan::new(plan.partitions, num_ch, client_cpu)
+    }
+
+    fn fsm_label(&self) -> &'static str {
+        self.inner.fsm_label()
+    }
+
+    fn on_timeout(&mut self, telemetry: &Telemetry, ctx: &mut TuneCtx) {
+        self.inner.on_timeout(telemetry, ctx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::dataset::standard;
+
+    #[test]
+    fn cold_init_matches_min_energy_exactly() {
+        let params = TunerParams::default();
+        let tb = testbeds::didclab();
+        let ds = standard::medium_dataset(5);
+        let mut warmless = HistoryTuned::new(params, None);
+        let mut me = MinEnergy::new(params);
+        let a = warmless.init(&tb, &ds);
+        let b = me.init(&tb, &ds);
+        assert_eq!(a.num_channels, b.num_channels);
+        assert_eq!(a.client_cpu.active_cores(), b.client_cpu.active_cores());
+        assert_eq!(a.client_cpu.freq(), b.client_cpu.freq());
+        assert_eq!(a.partitions.len(), b.partitions.len());
+        assert_eq!(warmless.fsm_label(), "slow-start");
+        assert!(warmless.warm_start().is_none());
+    }
+
+    #[test]
+    fn warm_init_starts_at_the_recorded_point() {
+        let tb = testbeds::didclab();
+        let warm = WarmStart { cores: 2, pstate: 1, channels: 9 };
+        let mut ht = HistoryTuned::new(TunerParams::default(), Some(warm));
+        let plan = ht.init(&tb, &standard::medium_dataset(5));
+        assert_eq!(plan.num_channels, 9, "channels open at the converged count");
+        assert_eq!(plan.client_cpu.active_cores(), 2);
+        assert_eq!(plan.client_cpu.freq(), tb.client_cpu.freq_levels[1]);
+        // No slow-start phase: the FSM starts in Increase.
+        assert_eq!(ht.fsm_label(), "increase");
+        assert_eq!(ht.warm_start(), Some(warm));
+    }
+
+    #[test]
+    fn warm_init_clamps_out_of_range_points() {
+        // A record from a bigger machine must not panic on this one.
+        let tb = testbeds::cloudlab();
+        let warm = WarmStart { cores: 999, pstate: 999, channels: 999 };
+        let mut ht = HistoryTuned::new(TunerParams::default(), Some(warm));
+        let plan = ht.init(&tb, &standard::small_dataset(1));
+        assert_eq!(plan.client_cpu.active_cores(), tb.client_cpu.num_cores);
+        assert_eq!(plan.client_cpu.freq(), tb.client_cpu.max_freq());
+        assert_eq!(plan.num_channels, TunerParams::default().max_ch);
+    }
+
+    #[test]
+    fn warm_session_completes_and_keeps_adapting() {
+        use crate::coordinator::AlgorithmKind;
+        use crate::sim::session::{run_session, SessionConfig};
+        let warm = WarmStart { cores: 2, pstate: 1, channels: 9 };
+        let cfg = SessionConfig::new(
+            testbeds::didclab(),
+            standard::medium_dataset(6),
+            AlgorithmKind::HistoryTuned(Some(warm)),
+        )
+        .with_seed(77);
+        let out = run_session(&cfg);
+        assert!(out.completed, "warm session must finish");
+        assert_eq!(out.algorithm, "HistoryTuned");
+        assert!(out.avg_throughput.as_mbps() > 100.0);
+        // Runtime adaptation stayed on: the FSM may move channels past
+        // the warm point, and the governor owns the CPU afterward.
+        assert!(out.peak_channels >= 9);
+    }
+}

@@ -138,6 +138,18 @@ impl Algorithm for MinEnergy {
 }
 
 impl MinEnergy {
+    /// Warm start (historical-log learning): drop the pending Slow Start
+    /// phase and enter the steady-state FSM directly at `num_ch`
+    /// channels, as if the probe had already converged there. Call after
+    /// [`Algorithm::init`]; every later timeout runs the unchanged
+    /// Algorithm 4 loop, so a stale warm point is corrected at runtime.
+    pub fn skip_slow_start(&mut self, num_ch: u32) {
+        self.slow_start = None;
+        self.state = FsmState::Increase;
+        self.e_past = None;
+        self.num_ch = num_ch.max(1);
+    }
+
     /// Observable state for tests and the CLI's `--trace` output.
     pub fn fsm_state(&self) -> FsmState {
         self.state

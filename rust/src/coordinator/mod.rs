@@ -12,6 +12,10 @@
 //!   Algorithms 4, 5, 6.
 //! * [`no_tune`] — the static fixed-channel baseline (sweeps, fleet
 //!   tenants).
+//! * [`history_tuned`] — ME warm-started from the historical-log
+//!   subsystem ([`crate::history`]): skips the slow-start probe when the
+//!   k-NN index has seen a similar workload, falls back to the paper's
+//!   cold path otherwise.
 //! * [`algorithm`] — the common [`algorithm::Algorithm`] trait and the
 //!   factory used by sessions, experiments and the CLI.
 //! * [`fleet`] — cross-session arbitration of the shared host's
@@ -23,6 +27,7 @@ pub mod algorithm;
 pub mod fleet;
 pub mod fsm;
 pub mod heuristic;
+pub mod history_tuned;
 pub mod load_control;
 pub mod max_throughput;
 pub mod min_energy;

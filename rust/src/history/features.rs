@@ -1,0 +1,220 @@
+//! Feature extraction: turn a workload + its context into the normalized,
+//! discretized vector the k-NN index measures distances in.
+//!
+//! Following the decision-tree line of work on historical transfer logs
+//! (arXiv:2204.07601), every numeric feature is log- or range-scaled into
+//! roughly `[0, 1]` and then *discretized* onto a fixed grid
+//! ([`QUANT_BINS`] levels) before any distance is computed. Discretization
+//! does two jobs: it makes near-identical workloads (same dataset family,
+//! different generator seed) land on exactly the same grid point, and it
+//! keeps the index deterministic — distances are sums of exact multiples
+//! of `1/QUANT_BINS`, so ordering never depends on float noise.
+
+use crate::dataset::Dataset;
+
+/// Files strictly smaller than this many bytes are "small" (the Table II
+/// small family averages ~100 KB).
+pub const SMALL_FILE_MAX_BYTES: f64 = 1e6;
+/// Files up to this many bytes are "medium"; larger ones are "large"
+/// (the Table II large family averages ~223 MB).
+pub const MEDIUM_FILE_MAX_BYTES: f64 = 64e6;
+
+/// Number of discretization levels per feature dimension.
+pub const QUANT_BINS: f64 = 32.0;
+
+/// Dimensionality of the numeric feature vector.
+pub const FEATURE_DIMS: usize = 9;
+
+/// The shape of a workload, as the history subsystem fingerprints it at
+/// admission time: total volume, file-count, and the byte-weighted
+/// small/medium/large class mix. Derivable from any [`Dataset`] without
+/// keeping the file list alive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadFingerprint {
+    /// Total bytes to move.
+    pub total_bytes: f64,
+    /// Number of files.
+    pub num_files: u64,
+    /// Mean file size, bytes.
+    pub avg_file_bytes: f64,
+    /// Fraction of bytes in files smaller than [`SMALL_FILE_MAX_BYTES`].
+    pub frac_small: f64,
+    /// Fraction of bytes in files between the small and medium bounds.
+    pub frac_medium: f64,
+    /// Fraction of bytes in files larger than [`MEDIUM_FILE_MAX_BYTES`].
+    pub frac_large: f64,
+}
+
+impl WorkloadFingerprint {
+    /// Fingerprint a dataset (one pass over the file list).
+    pub fn of(dataset: &Dataset) -> WorkloadFingerprint {
+        let mut total = 0.0f64;
+        let mut small = 0.0f64;
+        let mut medium = 0.0f64;
+        let mut large = 0.0f64;
+        for f in &dataset.files {
+            let sz = f.size.as_f64();
+            total += sz;
+            if sz < SMALL_FILE_MAX_BYTES {
+                small += sz;
+            } else if sz <= MEDIUM_FILE_MAX_BYTES {
+                medium += sz;
+            } else {
+                large += sz;
+            }
+        }
+        let n = dataset.files.len();
+        let denom = if total > 0.0 { total } else { 1.0 };
+        WorkloadFingerprint {
+            total_bytes: total,
+            num_files: n as u64,
+            avg_file_bytes: if n == 0 { 0.0 } else { total / n as f64 },
+            frac_small: small / denom,
+            frac_medium: medium / denom,
+            frac_large: large / denom,
+        }
+    }
+}
+
+/// A "workload like this" question put to the k-NN index: the fingerprint
+/// plus the context the answer must transfer to. `testbed` and
+/// `algorithm` are categorical — a mismatch adds a fixed distance penalty
+/// instead of filtering, so sparse stores still answer (with lower
+/// confidence); `None` matches everything penalty-free.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    /// Workload shape.
+    pub workload: WorkloadFingerprint,
+    /// Testbed name to prefer records from (`None` = indifferent).
+    pub testbed: Option<String>,
+    /// Path round-trip time, seconds.
+    pub rtt_s: f64,
+    /// Path bandwidth, bits/s.
+    pub bandwidth_bps: f64,
+    /// Sessions already active on the host at admission time.
+    pub contention: u32,
+    /// Algorithm id to prefer records from (`None` = indifferent).
+    pub algorithm: Option<String>,
+}
+
+impl Query {
+    /// A query for `workload` on `testbed` with `contention` concurrent
+    /// sessions already running.
+    pub fn on_testbed(
+        testbed: &crate::config::Testbed,
+        workload: WorkloadFingerprint,
+        contention: u32,
+    ) -> Query {
+        Query {
+            workload,
+            testbed: Some(testbed.name.to_string()),
+            rtt_s: testbed.link.rtt.as_secs(),
+            bandwidth_bps: testbed.link.capacity.as_bits_per_sec(),
+            contention,
+            algorithm: None,
+        }
+    }
+
+    /// Restrict the query to records from one algorithm id.
+    pub fn with_algorithm(mut self, id: impl Into<String>) -> Query {
+        self.algorithm = Some(id.into());
+        self
+    }
+}
+
+/// A normalized, discretized feature vector (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FeatureVec(pub [f64; FEATURE_DIMS]);
+
+/// Snap a scaled feature onto the [`QUANT_BINS`] grid (clamped to
+/// `[0, 2]` so outliers cannot dominate the distance).
+fn quantize(x: f64) -> f64 {
+    (x.clamp(0.0, 2.0) * QUANT_BINS).round() / QUANT_BINS
+}
+
+/// Build the feature vector for a workload in its context.
+pub fn features(
+    w: &WorkloadFingerprint,
+    rtt_s: f64,
+    bandwidth_bps: f64,
+    contention: u32,
+) -> FeatureVec {
+    FeatureVec([
+        quantize(w.total_bytes.max(1.0).log10() / 12.0),
+        quantize((w.num_files.max(1) as f64).log10() / 6.0),
+        quantize(w.avg_file_bytes.max(1.0).log10() / 10.0),
+        quantize(w.frac_small),
+        quantize(w.frac_medium),
+        quantize(w.frac_large),
+        quantize(rtt_s.max(0.0) * 10.0),
+        quantize(bandwidth_bps.max(1.0).log10() / 11.0),
+        quantize(contention as f64 / 8.0),
+    ])
+}
+
+/// Euclidean distance between two feature vectors.
+pub fn distance(a: &FeatureVec, b: &FeatureVec) -> f64 {
+    a.0.iter()
+        .zip(b.0.iter())
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::testbeds;
+    use crate::dataset::standard;
+
+    #[test]
+    fn fingerprint_classes_partition_the_bytes() {
+        let fp = WorkloadFingerprint::of(&standard::mixed_dataset(3));
+        assert!((fp.frac_small + fp.frac_medium + fp.frac_large - 1.0).abs() < 1e-12);
+        // Mixed = small (~1.9 GB) + medium (~11.7 GB) + large (~27.9 GB):
+        // the large files dominate the byte mix.
+        assert!(fp.frac_large > 0.5, "large fraction {}", fp.frac_large);
+        assert!(fp.frac_small < 0.1);
+        assert_eq!(fp.num_files, 25_128);
+    }
+
+    #[test]
+    fn fingerprint_of_empty_dataset_is_safe() {
+        let fp = WorkloadFingerprint::of(&Dataset::new("empty", vec![]));
+        assert_eq!(fp.total_bytes, 0.0);
+        assert_eq!(fp.avg_file_bytes, 0.0);
+        assert_eq!(fp.frac_small + fp.frac_medium + fp.frac_large, 0.0);
+    }
+
+    #[test]
+    fn same_family_different_seed_lands_on_the_same_grid_point() {
+        // The whole point of discretization: generator noise between seeds
+        // must not perturb the feature vector.
+        let a = WorkloadFingerprint::of(&standard::medium_dataset(1));
+        let b = WorkloadFingerprint::of(&standard::medium_dataset(2));
+        let fa = features(&a, 0.044, 1e9, 0);
+        let fb = features(&b, 0.044, 1e9, 0);
+        assert_eq!(fa, fb, "seed noise must quantize away");
+        assert_eq!(distance(&fa, &fb), 0.0);
+    }
+
+    #[test]
+    fn different_families_are_far_apart() {
+        let small = WorkloadFingerprint::of(&standard::small_dataset(1));
+        let large = WorkloadFingerprint::of(&standard::large_dataset(1));
+        let fs = features(&small, 0.044, 1e9, 0);
+        let fl = features(&large, 0.044, 1e9, 0);
+        assert!(distance(&fs, &fl) > 0.5, "distance {}", distance(&fs, &fl));
+    }
+
+    #[test]
+    fn query_on_testbed_captures_the_path() {
+        let tb = testbeds::didclab();
+        let q = Query::on_testbed(&tb, WorkloadFingerprint::of(&standard::small_dataset(1)), 2);
+        assert_eq!(q.testbed.as_deref(), Some("DIDCLab"));
+        assert!((q.rtt_s - 0.044).abs() < 1e-9);
+        assert!((q.bandwidth_bps - 1e9).abs() < 1.0);
+        assert_eq!(q.contention, 2);
+        assert_eq!(q.with_algorithm("me").algorithm.as_deref(), Some("me"));
+    }
+}

@@ -1,0 +1,392 @@
+//! A deterministic k-nearest-neighbour index over run records.
+//!
+//! No external crates, no randomness: neighbours are found by a linear
+//! scan over the indexed records, ordered by (distance, insertion order),
+//! so the same store always produces the same answers. Two questions are
+//! answered (the two the coordinator and dispatcher ask):
+//!
+//! * [`KnnIndex::warm_start`] — "what is the best known operating point
+//!   for a workload like this?" A distance-weighted *vote* over the
+//!   discretized `(cores, P-state, channels)` triples of the k nearest
+//!   runs (à la the decision-tree history work, arXiv:2204.07601);
+//! * [`KnnIndex::observed_j_per_byte`] — "what did moving a byte of a
+//!   workload like this actually cost on host *h*?" A distance-weighted
+//!   mean over that host's k nearest runs, which
+//!   [`PlacementKind::Learned`](crate::coordinator::fleet::PlacementKind)
+//!   blends with the model-based marginal-energy score.
+//!
+//! Both answers come with a confidence in `[0, 1]` (mean similarity of
+//! the neighbours found, `0` for an empty index); callers fall back to
+//! the model-only path below [`CONFIDENCE_FLOOR`].
+//!
+//! The index is a snapshot: it is built once from a store's records and
+//! is *not* invalidated by later appends — rebuild (cheap, linear) to see
+//! new history. See ARCHITECTURE.md §History.
+
+use super::features::{self, FeatureVec, Query};
+use super::record::RunRecord;
+
+/// Minimum confidence at which history overrides the cold-start path.
+pub const CONFIDENCE_FLOOR: f64 = 0.25;
+
+/// Default neighbour count.
+pub const DEFAULT_K: usize = 5;
+
+/// Distance penalty added per mismatched categorical field (testbed,
+/// algorithm) — large enough that a same-testbed record always beats a
+/// cross-testbed one at comparable workload distance, small enough that a
+/// sparse store still answers.
+const CATEGORY_PENALTY: f64 = 1.0;
+
+/// A warm-start recommendation: the operating point a
+/// [`HistoryTuned`](crate::coordinator::history_tuned::HistoryTuned)
+/// session starts from instead of the paper's cold slow-start probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct WarmStart {
+    /// Client cores to start with.
+    pub cores: u32,
+    /// Client P-state index to start at (into the testbed's ladder).
+    pub pstate: u32,
+    /// Channel count to open immediately (no slow-start correction).
+    pub channels: u32,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    features: FeatureVec,
+    testbed: String,
+    algorithm: String,
+    host: String,
+    op: WarmStart,
+    j_per_byte: f64,
+}
+
+/// The index itself (see the module docs). Cloneable so a
+/// [`DispatcherConfig`](crate::sim::dispatcher::DispatcherConfig) can
+/// carry one.
+#[derive(Debug, Clone)]
+pub struct KnnIndex {
+    k: usize,
+    entries: Vec<Entry>,
+}
+
+impl KnnIndex {
+    /// Index `records` with the default neighbour count. Incomplete runs
+    /// and runs that moved no bytes are skipped — they carry no usable
+    /// operating point.
+    pub fn build(records: &[RunRecord]) -> KnnIndex {
+        KnnIndex::with_k(records, DEFAULT_K)
+    }
+
+    /// Index `records` with an explicit neighbour count.
+    pub fn with_k(records: &[RunRecord], k: usize) -> KnnIndex {
+        let entries = records
+            .iter()
+            .filter(|r| r.completed && r.moved_bytes > 0.0)
+            .map(|r| Entry {
+                features: features::features(
+                    &r.workload,
+                    r.rtt_s,
+                    r.bandwidth_bps,
+                    r.contention,
+                ),
+                testbed: r.testbed.clone(),
+                algorithm: r.algorithm.clone(),
+                host: r.host.clone(),
+                op: WarmStart {
+                    cores: r.cores,
+                    pstate: r.pstate,
+                    channels: r.channels,
+                },
+                j_per_byte: r.j_per_byte,
+            })
+            .collect();
+        KnnIndex { k: k.max(1), entries }
+    }
+
+    /// Indexed run count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing was indexed.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Distinct host names in the index, sorted.
+    pub fn hosts(&self) -> Vec<String> {
+        let mut hosts: Vec<String> = self.entries.iter().map(|e| e.host.clone()).collect();
+        hosts.sort();
+        hosts.dedup();
+        hosts
+    }
+
+    fn dist(entry: &Entry, q: &Query, qf: &FeatureVec) -> f64 {
+        let mut d = features::distance(&entry.features, qf);
+        if let Some(tb) = &q.testbed {
+            if tb != &entry.testbed {
+                d += CATEGORY_PENALTY;
+            }
+        }
+        if let Some(algo) = &q.algorithm {
+            if algo != &entry.algorithm {
+                d += CATEGORY_PENALTY;
+            }
+        }
+        d
+    }
+
+    /// The k nearest entries (optionally restricted to one host), as
+    /// `(distance, entry)` in deterministic (distance, insertion) order.
+    /// The scan is O(n) + an O(k log k) sort of the survivors — the
+    /// (distance, index) comparator is a strict total order, so the
+    /// select-then-sort is as deterministic as a full sort.
+    fn neighbors<'a>(&'a self, q: &Query, host: Option<&str>) -> Vec<(f64, &'a Entry)> {
+        let qf = features::features(&q.workload, q.rtt_s, q.bandwidth_bps, q.contention);
+        let cmp = |a: &(f64, usize), b: &(f64, usize)| {
+            a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1))
+        };
+        let mut scored: Vec<(f64, usize)> = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| host.is_none_or(|h| e.host == h))
+            .map(|(i, e)| (Self::dist(e, q, &qf), i))
+            .collect();
+        if scored.len() > self.k {
+            scored.select_nth_unstable_by(self.k - 1, cmp);
+            scored.truncate(self.k);
+        }
+        scored.sort_by(cmp);
+        scored
+            .into_iter()
+            .map(|(d, i)| (d, &self.entries[i]))
+            .collect()
+    }
+
+    /// Mean similarity (`1/(1+d)`) of a neighbour set — the confidence
+    /// attached to every answer.
+    fn confidence(neighbors: &[(f64, &Entry)]) -> f64 {
+        if neighbors.is_empty() {
+            return 0.0;
+        }
+        neighbors.iter().map(|(d, _)| 1.0 / (1.0 + d)).sum::<f64>() / neighbors.len() as f64
+    }
+
+    /// Best known operating point for a workload like `q`, with its
+    /// confidence. `None` only when the index is empty.
+    ///
+    /// Distance-weighted vote over discrete `(cores, pstate, channels)`
+    /// triples: each neighbour votes with weight `1/(ε + d)`, so an exact
+    /// workload match dominates; ties break toward the smallest triple.
+    pub fn warm_start(&self, q: &Query) -> Option<(WarmStart, f64)> {
+        let neighbors = self.neighbors(q, None);
+        if neighbors.is_empty() {
+            return None;
+        }
+        let mut votes: std::collections::BTreeMap<WarmStart, f64> =
+            std::collections::BTreeMap::new();
+        for (d, e) in &neighbors {
+            *votes.entry(e.op).or_insert(0.0) += 1.0 / (1e-6 + d);
+        }
+        // BTreeMap iterates ascending, so `>` keeps the smallest triple on
+        // exact weight ties.
+        let mut best: Option<(WarmStart, f64)> = None;
+        for (op, w) in votes {
+            if best.as_ref().is_none_or(|(_, bw)| w > *bw) {
+                best = Some((op, w));
+            }
+        }
+        best.map(|(op, _)| (op, Self::confidence(&neighbors)))
+    }
+
+    /// [`Self::warm_start`] gated at [`CONFIDENCE_FLOOR`]: `None` means
+    /// "stay on the cold slow-start path".
+    pub fn confident_warm_start(&self, q: &Query) -> Option<WarmStart> {
+        match self.warm_start(q) {
+            Some((op, conf)) if conf >= CONFIDENCE_FLOOR => Some(op),
+            _ => None,
+        }
+    }
+
+    /// Observed energy cost (J/B) of serving a workload like `q` on
+    /// `host`, with its confidence. `None` when the index holds no run
+    /// from that host.
+    pub fn observed_j_per_byte(&self, host: &str, q: &Query) -> Option<(f64, f64)> {
+        let neighbors = self.neighbors(q, Some(host));
+        if neighbors.is_empty() {
+            return None;
+        }
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (d, e) in &neighbors {
+            let w = 1.0 / (1e-6 + d);
+            num += w * e.j_per_byte;
+            den += w;
+        }
+        Some((num / den, Self::confidence(&neighbors)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::history::features::WorkloadFingerprint;
+
+    fn record(
+        host: &str,
+        testbed: &str,
+        total_gb: f64,
+        op: (u32, u32, u32),
+        jpb: f64,
+    ) -> RunRecord {
+        let n = 100;
+        RunRecord {
+            session: format!("s-{host}-{total_gb}"),
+            algorithm: "history".to_string(),
+            host: host.to_string(),
+            testbed: testbed.to_string(),
+            rtt_s: 0.044,
+            bandwidth_bps: 1e9,
+            workload: WorkloadFingerprint {
+                total_bytes: total_gb * 1e9,
+                num_files: n,
+                avg_file_bytes: total_gb * 1e9 / n as f64,
+                frac_small: 0.0,
+                frac_medium: 1.0,
+                frac_large: 0.0,
+            },
+            contention: 0,
+            cores: op.0,
+            pstate: op.1,
+            channels: op.2,
+            peak_channels: op.2,
+            goodput_bps: 1e8,
+            joules: jpb * total_gb * 1e9,
+            j_per_byte: jpb,
+            moved_bytes: total_gb * 1e9,
+            duration_s: 100.0,
+            completed: true,
+            traj: Vec::new(),
+        }
+    }
+
+    fn query(total_gb: f64) -> Query {
+        let n = 100;
+        Query {
+            workload: WorkloadFingerprint {
+                total_bytes: total_gb * 1e9,
+                num_files: n,
+                avg_file_bytes: total_gb * 1e9 / n as f64,
+                frac_small: 0.0,
+                frac_medium: 1.0,
+                frac_large: 0.0,
+            },
+            testbed: Some("DIDCLab".to_string()),
+            rtt_s: 0.044,
+            bandwidth_bps: 1e9,
+            contention: 0,
+            algorithm: None,
+        }
+    }
+
+    #[test]
+    fn empty_index_answers_nothing() {
+        let idx = KnnIndex::build(&[]);
+        assert!(idx.is_empty());
+        assert!(idx.warm_start(&query(10.0)).is_none());
+        assert!(idx.confident_warm_start(&query(10.0)).is_none());
+        assert!(idx.observed_j_per_byte("h", &query(10.0)).is_none());
+    }
+
+    #[test]
+    fn exact_match_wins_with_high_confidence() {
+        let recs = vec![
+            record("h0", "DIDCLab", 10.0, (2, 1, 9), 4e-8),
+            record("h0", "DIDCLab", 0.1, (1, 0, 3), 9e-8),
+        ];
+        let idx = KnnIndex::build(&recs);
+        let (op, conf) = idx.warm_start(&query(10.0)).unwrap();
+        assert_eq!(op, WarmStart { cores: 2, pstate: 1, channels: 9 });
+        assert!(conf >= CONFIDENCE_FLOOR, "confidence {conf}");
+        assert_eq!(idx.confident_warm_start(&query(10.0)), Some(op));
+    }
+
+    #[test]
+    fn incomplete_runs_are_not_indexed() {
+        let mut r = record("h0", "DIDCLab", 10.0, (2, 1, 9), 4e-8);
+        r.completed = false;
+        assert!(KnnIndex::build(&[r]).is_empty());
+    }
+
+    #[test]
+    fn vote_is_distance_weighted() {
+        // Two far records agree on one op point, one exact match says
+        // another: the exact match's 1/ε weight must dominate the vote.
+        let recs = vec![
+            record("h0", "DIDCLab", 0.1, (8, 5, 30), 9e-8),
+            record("h0", "DIDCLab", 0.1, (8, 5, 30), 9e-8),
+            record("h0", "DIDCLab", 10.0, (2, 1, 9), 4e-8),
+        ];
+        let idx = KnnIndex::build(&recs);
+        let (op, _) = idx.warm_start(&query(10.0)).unwrap();
+        assert_eq!(op.channels, 9, "exact match must out-vote the far pair");
+    }
+
+    #[test]
+    fn testbed_mismatch_is_penalized_not_filtered() {
+        let recs = vec![
+            record("h0", "Chameleon", 10.0, (8, 5, 14), 2e-8),
+            record("h1", "DIDCLab", 10.0, (2, 1, 9), 4e-8),
+        ];
+        let idx = KnnIndex::build(&recs);
+        // Query prefers DIDCLab: the same-testbed record wins the vote.
+        let (op, _) = idx.warm_start(&query(10.0)).unwrap();
+        assert_eq!(op.cores, 2);
+        // But a query indifferent to testbed still sees both.
+        let mut q = query(10.0);
+        q.testbed = None;
+        let (_, conf) = idx.warm_start(&q).unwrap();
+        assert!(conf > 0.5);
+    }
+
+    #[test]
+    fn per_host_cost_estimates_are_host_filtered() {
+        let recs = vec![
+            record("efficient", "CloudLab", 10.0, (2, 1, 9), 2e-8),
+            record("legacy", "DIDCLab", 10.0, (2, 1, 9), 8e-8),
+        ];
+        let idx = KnnIndex::build(&recs);
+        assert_eq!(idx.hosts(), vec!["efficient".to_string(), "legacy".to_string()]);
+        let (eff, _) = idx.observed_j_per_byte("efficient", &query(10.0)).unwrap();
+        let (leg, _) = idx.observed_j_per_byte("legacy", &query(10.0)).unwrap();
+        assert!((eff - 2e-8).abs() < 1e-12);
+        assert!((leg - 8e-8).abs() < 1e-12);
+        assert!(idx.observed_j_per_byte("nope", &query(10.0)).is_none());
+    }
+
+    #[test]
+    fn answers_are_deterministic_across_rebuilds() {
+        let recs: Vec<RunRecord> = (0..20u32)
+            .map(|i| {
+                record(
+                    if i % 2 == 0 { "h0" } else { "h1" },
+                    "DIDCLab",
+                    1.0 + i as f64,
+                    (1 + i % 4, i % 3, 4 + i % 11),
+                    (2 + i % 7) as f64 * 1e-8,
+                )
+            })
+            .collect();
+        let a = KnnIndex::build(&recs);
+        let b = KnnIndex::build(&recs);
+        for gb in [1.0, 5.5, 19.0] {
+            assert_eq!(a.warm_start(&query(gb)), b.warm_start(&query(gb)));
+            assert_eq!(
+                a.observed_j_per_byte("h0", &query(gb)),
+                b.observed_j_per_byte("h0", &query(gb))
+            );
+        }
+    }
+}

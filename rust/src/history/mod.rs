@@ -1,0 +1,42 @@
+//! Historical-log learning: record every run, learn from what the fleet
+//! has already seen.
+//!
+//! The paper's algorithms start every transfer from a cold slow-start
+//! probe, and the dispatcher scores hosts from instantaneous projections
+//! only. Kosar et al.'s follow-on work shows the probing energy can be
+//! reused away: cross-layer tuning from historical log analysis
+//! (arXiv:2104.01192) and decision-tree uncertainty reduction over past
+//! transfers (arXiv:2204.07601). This subsystem is that loop, in three
+//! layers:
+//!
+//! * **store** ([`store`], [`record`], [`json`]) — a versioned JSONL
+//!   [`HistoryStore`]: one [`RunRecord`] per completed session (workload
+//!   fingerprint, path, settled `(cores, P-state, channels)` point, cost)
+//!   plus one line per dispatcher decision, written by
+//!   `--record-history <path>` and loadable across runs;
+//! * **learn** ([`features`], [`knn`]) — normalized, discretized feature
+//!   vectors and a deterministic distance-weighted k-NN index answering
+//!   "best known operating point for a workload like this"
+//!   ([`KnnIndex::warm_start`]) and "observed J/B on host *h*"
+//!   ([`KnnIndex::observed_j_per_byte`]);
+//! * **apply** — the
+//!   [`HistoryTuned`](crate::coordinator::history_tuned::HistoryTuned)
+//!   algorithm (warm-starts cores/P-state/concurrency, falls back to the
+//!   paper's slow start below [`CONFIDENCE_FLOOR`]) and
+//!   [`PlacementKind::Learned`](crate::coordinator::fleet::PlacementKind)
+//!   (blends the model-based marginal-energy score with history-observed
+//!   ΔJ/byte per host).
+//!
+//! `examples/learned_fleet.rs` is the end-to-end demo: the same arrival
+//! script run cold and then warm, with the joules/goodput delta printed.
+
+pub mod features;
+pub mod json;
+pub mod knn;
+pub mod record;
+pub mod store;
+
+pub use features::{Query, WorkloadFingerprint};
+pub use knn::{KnnIndex, WarmStart, CONFIDENCE_FLOOR};
+pub use record::{RunRecord, TrajPoint, FORMAT_VERSION};
+pub use store::{HistoryStore, StoreStats};

@@ -1,0 +1,335 @@
+//! The versioned on-disk record schema (JSONL, one record per line).
+//!
+//! Two record kinds share the stream, discriminated by `"kind"`:
+//!
+//! * `"run"` — one [`RunRecord`] per *completed* session/tenant: the
+//!   workload fingerprint, the path, the operating point the run settled
+//!   at, and what it cost. These are what the k-NN index learns from.
+//! * `"dispatch"` — one line per dispatcher placement decision
+//!   ([`DispatchRecord`]), written for offline mining; the store counts
+//!   and preserves them but does not parse them back into structs.
+//!
+//! Every line carries `"v"` ([`FORMAT_VERSION`]). Loaders skip lines with
+//! an unknown version or kind (counting them), so an old binary reading a
+//! newer store degrades gracefully instead of failing — the
+//! forward-compatibility contract pinned by
+//! `rust/tests/history_learning.rs`.
+
+use super::features::WorkloadFingerprint;
+use super::json::{self, Json};
+use crate::sim::DispatchRecord;
+
+/// Version written into every line this build produces.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// One sample of a session's `(cores, P-state, channels)` trajectory
+/// (recorded at tuning timeouts when the driver keeps timelines).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrajPoint {
+    /// Simulated time of the sample, seconds.
+    pub t_secs: f64,
+    /// Client cores online.
+    pub cores: u32,
+    /// Client P-state index.
+    pub pstate: u32,
+    /// Channels open.
+    pub channels: u32,
+}
+
+/// Everything the history subsystem remembers about one completed
+/// session — see the module docs for the schema contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    /// Session/tenant name.
+    pub session: String,
+    /// Algorithm id (see [`crate::coordinator::AlgorithmKind::id`]).
+    pub algorithm: String,
+    /// Name of the host that served the session.
+    pub host: String,
+    /// Name of the testbed that host models.
+    pub testbed: String,
+    /// Path round-trip time, seconds.
+    pub rtt_s: f64,
+    /// Path bandwidth, bits/s.
+    pub bandwidth_bps: f64,
+    /// Workload shape at admission.
+    pub workload: WorkloadFingerprint,
+    /// Sessions already active on the host when this one was admitted.
+    pub contention: u32,
+    /// Client cores at departure (the settled operating point).
+    pub cores: u32,
+    /// Client P-state index at departure.
+    pub pstate: u32,
+    /// Channels in effect at departure (the converged concurrency).
+    pub channels: u32,
+    /// Most channels the session ever had open.
+    pub peak_channels: u32,
+    /// Whole-residency average goodput, bytes/s.
+    pub goodput_bps: f64,
+    /// Host instrument energy attributed to the session, joules.
+    pub joules: f64,
+    /// `joules / moved_bytes` — the figure the learned placement blends.
+    pub j_per_byte: f64,
+    /// Bytes the session moved.
+    pub moved_bytes: f64,
+    /// Residency on the host, seconds.
+    pub duration_s: f64,
+    /// Whether the transfer finished before the run's time cap.
+    pub completed: bool,
+    /// Tuning-timeout trajectory (empty unless the driver recorded
+    /// timelines).
+    pub traj: Vec<TrajPoint>,
+}
+
+impl RunRecord {
+    /// Serialize to one JSONL line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        let traj: Vec<String> = self
+            .traj
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"t\":{},\"cores\":{},\"pstate\":{},\"ch\":{}}}",
+                    json::num(p.t_secs),
+                    p.cores,
+                    p.pstate,
+                    p.channels
+                )
+            })
+            .collect();
+        format!(
+            concat!(
+                "{{\"v\":{},\"kind\":\"run\",\"session\":\"{}\",\"algo\":\"{}\",",
+                "\"host\":\"{}\",\"testbed\":\"{}\",\"rtt_s\":{},\"bw_bps\":{},",
+                "\"total_bytes\":{},\"num_files\":{},\"avg_file_bytes\":{},",
+                "\"frac_small\":{},\"frac_medium\":{},\"frac_large\":{},",
+                "\"contention\":{},\"cores\":{},\"pstate\":{},\"channels\":{},",
+                "\"peak_channels\":{},\"goodput_bps\":{},\"joules\":{},",
+                "\"j_per_byte\":{},\"moved_bytes\":{},\"duration_s\":{},",
+                "\"completed\":{},\"traj\":[{}]}}"
+            ),
+            FORMAT_VERSION,
+            json::escape(&self.session),
+            json::escape(&self.algorithm),
+            json::escape(&self.host),
+            json::escape(&self.testbed),
+            json::num(self.rtt_s),
+            json::num(self.bandwidth_bps),
+            json::num(self.workload.total_bytes),
+            self.workload.num_files,
+            json::num(self.workload.avg_file_bytes),
+            json::num(self.workload.frac_small),
+            json::num(self.workload.frac_medium),
+            json::num(self.workload.frac_large),
+            self.contention,
+            self.cores,
+            self.pstate,
+            self.channels,
+            self.peak_channels,
+            json::num(self.goodput_bps),
+            json::num(self.joules),
+            json::num(self.j_per_byte),
+            json::num(self.moved_bytes),
+            json::num(self.duration_s),
+            self.completed,
+            traj.join(",")
+        )
+    }
+
+    /// Rebuild a record from a parsed `"kind":"run"` object. `None` when
+    /// any required field is missing or mistyped (the store counts such
+    /// lines as skipped).
+    pub fn from_json(v: &Json) -> Option<RunRecord> {
+        let f = |key: &str| v.get(key).and_then(Json::as_f64);
+        let u = |key: &str| v.get(key).and_then(Json::as_u32);
+        let s = |key: &str| v.get(key).and_then(Json::as_str).map(str::to_string);
+        let mut traj = Vec::new();
+        for p in v.get("traj").and_then(Json::as_arr).unwrap_or(&[]) {
+            traj.push(TrajPoint {
+                t_secs: p.get("t").and_then(Json::as_f64)?,
+                cores: p.get("cores").and_then(Json::as_u32)?,
+                pstate: p.get("pstate").and_then(Json::as_u32)?,
+                channels: p.get("ch").and_then(Json::as_u32)?,
+            });
+        }
+        Some(RunRecord {
+            session: s("session")?,
+            algorithm: s("algo")?,
+            host: s("host")?,
+            testbed: s("testbed")?,
+            rtt_s: f("rtt_s")?,
+            bandwidth_bps: f("bw_bps")?,
+            workload: WorkloadFingerprint {
+                total_bytes: f("total_bytes")?,
+                num_files: v.get("num_files").and_then(Json::as_u64)?,
+                avg_file_bytes: f("avg_file_bytes")?,
+                frac_small: f("frac_small")?,
+                frac_medium: f("frac_medium")?,
+                frac_large: f("frac_large")?,
+            },
+            contention: u("contention")?,
+            cores: u("cores")?,
+            pstate: u("pstate")?,
+            channels: u("channels")?,
+            peak_channels: u("peak_channels")?,
+            goodput_bps: f("goodput_bps")?,
+            joules: f("joules")?,
+            j_per_byte: f("j_per_byte")?,
+            moved_bytes: f("moved_bytes")?,
+            duration_s: f("duration_s")?,
+            completed: v.get("completed").and_then(Json::as_bool)?,
+            traj,
+        })
+    }
+}
+
+/// Serialize one dispatcher decision to its JSONL line (no trailing
+/// newline). Scores keep the host order of the decision.
+pub fn dispatch_to_json_line(d: &DispatchRecord) -> String {
+    let scores: Vec<String> = d
+        .scores
+        .iter()
+        .map(|s| {
+            let learned = match s.learned_j_per_byte {
+                Some(x) => json::num(x),
+                None => "null".to_string(),
+            };
+            format!(
+                concat!(
+                    "{{\"host\":\"{}\",\"active\":{},\"cur_w\":{},\"proj_w\":{},",
+                    "\"bps\":{},\"jpb\":{},\"learned_jpb\":{}}}"
+                ),
+                json::escape(&s.host),
+                s.active_sessions,
+                json::num(s.current_power_w),
+                json::num(s.projected_power_w),
+                json::num(s.projected_session_bps),
+                json::num(s.marginal_j_per_byte),
+                learned
+            )
+        })
+        .collect();
+    format!(
+        concat!(
+            "{{\"v\":{},\"kind\":\"dispatch\",\"t\":{},\"session\":\"{}\",",
+            "\"requested_at\":{},\"admitted_host\":{},\"host\":{},",
+            "\"fleet_w\":{},\"scores\":[{}]}}"
+        ),
+        FORMAT_VERSION,
+        json::num(d.t_secs),
+        json::escape(&d.session),
+        json::num(d.requested_at_secs),
+        match d.admitted_host {
+            Some(h) => h.to_string(),
+            None => "null".to_string(),
+        },
+        match &d.host {
+            Some(h) => format!("\"{}\"", json::escape(h)),
+            None => "null".to_string(),
+        },
+        json::num(d.projected_fleet_power_w),
+        scores.join(",")
+    )
+}
+
+/// A fully populated sample record shared by the history unit tests.
+#[cfg(test)]
+pub(crate) fn sample_record() -> RunRecord {
+    RunRecord {
+        session: "tenant-0".to_string(),
+        algorithm: "history".to_string(),
+        host: "host0-DIDCLab".to_string(),
+        testbed: "DIDCLab".to_string(),
+        rtt_s: 0.044,
+        bandwidth_bps: 1e9,
+        workload: WorkloadFingerprint {
+            total_bytes: 11.7e9,
+            num_files: 5000,
+            avg_file_bytes: 2.34e6,
+            frac_small: 0.0,
+            frac_medium: 1.0,
+            frac_large: 0.0,
+        },
+        contention: 1,
+        cores: 2,
+        pstate: 1,
+        channels: 9,
+        peak_channels: 14,
+        goodput_bps: 1.0817e8,
+        joules: 8123.25,
+        j_per_byte: 8123.25 / 11.7e9,
+        moved_bytes: 11.7e9,
+        duration_s: 108.2,
+        completed: true,
+        traj: vec![
+            TrajPoint { t_secs: 3.0, cores: 1, pstate: 0, channels: 6 },
+            TrajPoint { t_secs: 6.0, cores: 2, pstate: 0, channels: 12 },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::PlacementScore;
+
+    fn sample() -> RunRecord {
+        sample_record()
+    }
+
+    #[test]
+    fn run_record_round_trips_bit_for_bit() {
+        let r = sample();
+        let line = r.to_json_line();
+        let v = crate::history::json::parse(&line).expect("line must be valid JSON");
+        assert_eq!(v.get("v").and_then(Json::as_u32), Some(FORMAT_VERSION));
+        assert_eq!(v.get("kind").and_then(Json::as_str), Some("run"));
+        let back = RunRecord::from_json(&v).expect("round trip");
+        assert_eq!(back, r);
+        // f64 equality above is bitwise in practice (shortest round-trip
+        // rendering); pin the sharpest field explicitly.
+        assert_eq!(back.j_per_byte.to_bits(), r.j_per_byte.to_bits());
+    }
+
+    #[test]
+    fn missing_fields_reject_the_record() {
+        let r = sample();
+        let line = r.to_json_line().replace("\"cores\":2,", "");
+        let v = crate::history::json::parse(&line).unwrap();
+        assert!(RunRecord::from_json(&v).is_none());
+    }
+
+    #[test]
+    fn dispatch_line_is_valid_json_with_scores() {
+        let d = DispatchRecord {
+            t_secs: 12.5,
+            session: "session-3".to_string(),
+            requested_at_secs: 10.0,
+            admitted_host: Some(1),
+            host: Some("legacy".to_string()),
+            projected_fleet_power_w: 95.5,
+            scores: vec![PlacementScore {
+                host: "legacy".to_string(),
+                active_sessions: 2,
+                current_power_w: 40.0,
+                projected_power_w: 55.0,
+                projected_session_bps: 5e7,
+                marginal_j_per_byte: 3e-7,
+                learned_j_per_byte: None,
+            }],
+        };
+        let v = crate::history::json::parse(&dispatch_to_json_line(&d)).unwrap();
+        assert_eq!(v.get("kind").and_then(Json::as_str), Some("dispatch"));
+        assert_eq!(v.get("session").and_then(Json::as_str), Some("session-3"));
+        let scores = v.get("scores").and_then(Json::as_arr).unwrap();
+        assert_eq!(scores.len(), 1);
+        assert_eq!(scores[0].get("learned_jpb"), Some(&Json::Null));
+        // A queued decision renders nulls.
+        let mut q = d.clone();
+        q.admitted_host = None;
+        q.host = None;
+        let v = crate::history::json::parse(&dispatch_to_json_line(&q)).unwrap();
+        assert_eq!(v.get("admitted_host"), Some(&Json::Null));
+        assert_eq!(v.get("host"), Some(&Json::Null));
+    }
+}

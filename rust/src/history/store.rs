@@ -1,0 +1,498 @@
+//! The persistent transfer log: a JSONL [`HistoryStore`].
+//!
+//! One store is one append-only file (or a purely in-memory buffer for
+//! tests and examples): `greendt … --record-history <path>` appends one
+//! [`RunRecord`] line per completed session plus one dispatch line per
+//! placement decision, and `--history <path>` loads the same file back —
+//! across process runs — to warm-start tuning and placement. Loading is
+//! forgiving: lines with an unknown version, unknown kind, or any parse
+//! error are counted in [`HistoryStore::skipped`] and kept verbatim (so
+//! maintenance never destroys them), never fatal (see [`super::record`]
+//! for the schema contract).
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::json::{self, Json};
+use super::knn::KnnIndex;
+use super::record::{self, RunRecord, FORMAT_VERSION};
+use crate::sim::DispatchRecord;
+
+/// Summary counters of one store (printed by `greendt history stats`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Parsed run records.
+    pub runs: usize,
+    /// Preserved dispatch-decision lines.
+    pub dispatches: usize,
+    /// Lines skipped on load (unknown version/kind, parse errors).
+    pub skipped: usize,
+}
+
+/// Which buffer one store line lives in (see [`HistoryStore::order`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LineKind {
+    Run,
+    Dispatch,
+    Foreign,
+}
+
+/// The persistent transfer log (see the module docs).
+#[derive(Debug, Clone)]
+pub struct HistoryStore {
+    path: Option<PathBuf>,
+    /// Parsed run records (loaded + appended; [`Self::append_only`]
+    /// stores hold only what this process appended).
+    runs: Vec<RunRecord>,
+    /// The original text of every run record, parallel to `runs`: a
+    /// rewrite ([`Self::prune`]) must reproduce the line verbatim, not
+    /// re-serialize the parsed struct — a same-version line may carry
+    /// extra keys this build parses past but does not own.
+    run_lines: Vec<String>,
+    /// Dispatch lines are preserved verbatim (they are write-mostly
+    /// telemetry; nothing in-process parses them back).
+    dispatch_lines: Vec<String>,
+    /// Lines this build could not interpret (unknown version/kind, parse
+    /// errors), preserved verbatim so maintenance operations like
+    /// [`Self::prune`] never destroy what a newer build wrote.
+    foreign_lines: Vec<String>,
+    /// Append-order journal across the three buffers: `(kind, index into
+    /// that kind's buffer)` per line, so a rewrite reproduces the
+    /// original interleaving (offline miners correlate timestamp-less
+    /// run lines with decisions by position).
+    order: Vec<(LineKind, usize)>,
+    /// False for [`Self::append_only`] handles, which never read the
+    /// backing file and therefore must not rewrite it.
+    loaded: bool,
+}
+
+impl HistoryStore {
+    /// An unbacked store (tests, examples): appends stay in memory.
+    pub fn in_memory() -> HistoryStore {
+        HistoryStore {
+            path: None,
+            runs: Vec::new(),
+            run_lines: Vec::new(),
+            dispatch_lines: Vec::new(),
+            foreign_lines: Vec::new(),
+            order: Vec::new(),
+            loaded: true,
+        }
+    }
+
+    /// Open (and load) the store at `path`; a missing file is an empty
+    /// store, created on first append.
+    pub fn open(path: impl AsRef<Path>) -> Result<HistoryStore> {
+        let path = path.as_ref();
+        let mut store = HistoryStore::append_only(path);
+        if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading history store {}", path.display()))?;
+            store.ingest(&text);
+        }
+        store.loaded = true;
+        Ok(store)
+    }
+
+    /// A file-backed store that does *not* read existing contents —
+    /// the recording path (`--record-history`) only ever appends, so
+    /// re-parsing a large accumulated log would be pure waste. Queries
+    /// against such a store see only what this process appended, and
+    /// [`Self::prune`] refuses it (a rewrite from a partial view would
+    /// destroy the unread lines — use [`Self::open`] to prune).
+    pub fn append_only(path: impl AsRef<Path>) -> HistoryStore {
+        let mut store = HistoryStore::in_memory();
+        store.path = Some(path.as_ref().to_path_buf());
+        store.loaded = false;
+        store
+    }
+
+    /// Parse store text into this store's buffers (counting skips).
+    fn ingest(&mut self, text: &str) {
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some(v) = json::parse(line) else {
+                self.push_foreign(line);
+                continue;
+            };
+            if v.get("v").and_then(Json::as_u32) != Some(FORMAT_VERSION) {
+                self.push_foreign(line);
+                continue;
+            }
+            match v.get("kind").and_then(Json::as_str) {
+                Some("run") => match RunRecord::from_json(&v) {
+                    Some(r) => {
+                        self.order.push((LineKind::Run, self.runs.len()));
+                        self.runs.push(r);
+                        self.run_lines.push(line.to_string());
+                    }
+                    None => self.push_foreign(line),
+                },
+                Some("dispatch") => {
+                    self.order.push((LineKind::Dispatch, self.dispatch_lines.len()));
+                    self.dispatch_lines.push(line.to_string());
+                }
+                _ => self.push_foreign(line),
+            }
+        }
+    }
+
+    fn push_foreign(&mut self, line: &str) {
+        self.order.push((LineKind::Foreign, self.foreign_lines.len()));
+        self.foreign_lines.push(line.to_string());
+    }
+
+    /// Append `lines` to the backing file in one open/write (no-op for
+    /// in-memory stores).
+    fn write_lines(&self, lines: &[String]) -> Result<()> {
+        if lines.is_empty() {
+            return Ok(());
+        }
+        let Some(path) = &self.path else { return Ok(()) };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening history store {}", path.display()))?;
+        let mut buf = String::with_capacity(lines.iter().map(|l| l.len() + 1).sum());
+        for line in lines {
+            buf.push_str(line);
+            buf.push('\n');
+        }
+        f.write_all(buf.as_bytes())
+            .with_context(|| format!("appending to {}", path.display()))
+    }
+
+    /// Append run records (write-through when file-backed, one file open
+    /// per batch). Returns how many were appended.
+    pub fn append_runs(&mut self, records: &[RunRecord]) -> Result<usize> {
+        let lines: Vec<String> = records.iter().map(RunRecord::to_json_line).collect();
+        self.write_lines(&lines)?;
+        for (r, line) in records.iter().zip(lines) {
+            self.order.push((LineKind::Run, self.runs.len()));
+            self.runs.push(r.clone());
+            self.run_lines.push(line);
+        }
+        Ok(records.len())
+    }
+
+    /// Append dispatcher decisions (write-through when file-backed, one
+    /// file open per batch). Returns how many were appended.
+    pub fn append_dispatches(&mut self, decisions: &[DispatchRecord]) -> Result<usize> {
+        let lines: Vec<String> =
+            decisions.iter().map(record::dispatch_to_json_line).collect();
+        self.write_lines(&lines)?;
+        for line in lines {
+            self.order.push((LineKind::Dispatch, self.dispatch_lines.len()));
+            self.dispatch_lines.push(line);
+        }
+        Ok(decisions.len())
+    }
+
+    /// The loaded + appended run records, oldest first.
+    pub fn runs(&self) -> &[RunRecord] {
+        &self.runs
+    }
+
+    /// Number of dispatch-decision lines held.
+    pub fn dispatch_count(&self) -> usize {
+        self.dispatch_lines.len()
+    }
+
+    /// Lines skipped while loading (unknown version/kind or malformed).
+    /// They are preserved verbatim, not discarded — see [`Self::prune`].
+    pub fn skipped(&self) -> usize {
+        self.foreign_lines.len()
+    }
+
+    /// Summary counters.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            runs: self.runs.len(),
+            dispatches: self.dispatch_lines.len(),
+            skipped: self.foreign_lines.len(),
+        }
+    }
+
+    /// Build a k-NN index over the current run records (a snapshot —
+    /// later appends do not update it; rebuild to refresh).
+    pub fn index(&self) -> KnnIndex {
+        KnnIndex::build(&self.runs)
+    }
+
+    /// Keep only the newest `keep` run records and `keep` dispatch lines,
+    /// rewriting the backing file with the surviving lines in their
+    /// original order. Lines this build could not interpret (e.g.
+    /// records written by a newer version) are rewritten verbatim, never
+    /// dropped — pruning must not destroy what it cannot read; for the
+    /// same reason an [`Self::append_only`] handle (which never read the
+    /// file) cannot prune. Returns the number of lines dropped.
+    pub fn prune(&mut self, keep: usize) -> Result<usize> {
+        if !self.loaded {
+            bail!(
+                "pruning needs a fully loaded store (HistoryStore::open), \
+                 not an append-only handle"
+            );
+        }
+        let drop_runs = self.runs.len().saturating_sub(keep);
+        let drop_disp = self.dispatch_lines.len().saturating_sub(keep);
+        // Rebuild the buffers through the order journal so the surviving
+        // lines keep their original interleaving.
+        let mut runs = Vec::with_capacity(self.runs.len() - drop_runs);
+        let mut run_lines = Vec::with_capacity(self.runs.len() - drop_runs);
+        let mut dispatches = Vec::with_capacity(self.dispatch_lines.len() - drop_disp);
+        let mut foreign = Vec::with_capacity(self.foreign_lines.len());
+        let mut order = Vec::with_capacity(self.order.len());
+        for &(kind, idx) in &self.order {
+            match kind {
+                LineKind::Run => {
+                    if idx >= drop_runs {
+                        order.push((LineKind::Run, runs.len()));
+                        runs.push(self.runs[idx].clone());
+                        run_lines.push(self.run_lines[idx].clone());
+                    }
+                }
+                LineKind::Dispatch => {
+                    if idx >= drop_disp {
+                        order.push((LineKind::Dispatch, dispatches.len()));
+                        dispatches.push(self.dispatch_lines[idx].clone());
+                    }
+                }
+                LineKind::Foreign => {
+                    order.push((LineKind::Foreign, foreign.len()));
+                    foreign.push(self.foreign_lines[idx].clone());
+                }
+            }
+        }
+        self.runs = runs;
+        self.run_lines = run_lines;
+        self.dispatch_lines = dispatches;
+        self.foreign_lines = foreign;
+        self.order = order;
+        if let Some(path) = &self.path {
+            let mut out = String::new();
+            // Run lines are rewritten from their original text, not
+            // re-serialized: a same-version line may carry keys this
+            // build does not know about.
+            for &(kind, idx) in &self.order {
+                match kind {
+                    LineKind::Run => out.push_str(&self.run_lines[idx]),
+                    LineKind::Dispatch => out.push_str(&self.dispatch_lines[idx]),
+                    LineKind::Foreign => out.push_str(&self.foreign_lines[idx]),
+                }
+                out.push('\n');
+            }
+            // Atomic replace: write a sibling temp file, then rename over
+            // the original, so a crash mid-rewrite cannot truncate the
+            // store (the lines prune promises to preserve included).
+            let mut tmp_name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+            tmp_name.push(".tmp");
+            let tmp = path.with_file_name(tmp_name);
+            std::fs::write(&tmp, out)
+                .with_context(|| format!("writing pruned store to {}", tmp.display()))?;
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("replacing history store {}", path.display()))?;
+        }
+        Ok(drop_runs + drop_disp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::PlacementScore;
+
+    fn sample_run(name: &str) -> RunRecord {
+        let mut r = crate::history::record::sample_record();
+        r.session = name.to_string();
+        r
+    }
+
+    fn sample_dispatch() -> DispatchRecord {
+        DispatchRecord {
+            t_secs: 1.0,
+            session: "s".to_string(),
+            requested_at_secs: 1.0,
+            admitted_host: Some(0),
+            host: Some("h".to_string()),
+            projected_fleet_power_w: 50.0,
+            scores: vec![PlacementScore {
+                host: "h".to_string(),
+                active_sessions: 0,
+                current_power_w: 10.0,
+                projected_power_w: 20.0,
+                projected_session_bps: 1e8,
+                marginal_j_per_byte: 1e-7,
+                learned_j_per_byte: Some(2e-7),
+            }],
+        }
+    }
+
+    fn temp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("greendt_history_{name}_{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn file_round_trip_preserves_records() {
+        let path = temp_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let mut store = HistoryStore::open(&path).unwrap();
+        store.append_runs(&[sample_run("a"), sample_run("b")]).unwrap();
+        store.append_dispatches(&[sample_dispatch()]).unwrap();
+
+        let back = HistoryStore::open(&path).unwrap();
+        assert_eq!(back.stats(), StoreStats { runs: 2, dispatches: 1, skipped: 0 });
+        assert_eq!(back.runs(), store.runs());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unknown_versions_and_garbage_are_skipped_with_a_count() {
+        let path = temp_path("skip");
+        let good = sample_run("good").to_json_line();
+        let future = good.replace("\"v\":1,", "\"v\":999,");
+        let text = format!("{good}\nnot json at all\n{future}\n{{\"v\":1,\"kind\":\"??\"}}\n");
+        std::fs::write(&path, text).unwrap();
+        let store = HistoryStore::open(&path).unwrap();
+        assert_eq!(store.stats(), StoreStats { runs: 1, dispatches: 0, skipped: 3 });
+        assert_eq!(store.runs()[0].session, "good");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn prune_keeps_the_newest_and_rewrites() {
+        let path = temp_path("prune");
+        let _ = std::fs::remove_file(&path);
+        let mut store = HistoryStore::open(&path).unwrap();
+        let runs: Vec<RunRecord> =
+            (0..5).map(|i| sample_run(&format!("run-{i}"))).collect();
+        store.append_runs(&runs).unwrap();
+        let dropped = store.prune(2).unwrap();
+        assert_eq!(dropped, 3);
+        assert_eq!(store.runs().len(), 2);
+        assert_eq!(store.runs()[0].session, "run-3");
+        let back = HistoryStore::open(&path).unwrap();
+        assert_eq!(back.stats(), StoreStats { runs: 2, dispatches: 0, skipped: 0 });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn prune_preserves_lines_it_cannot_read() {
+        // A newer build's records must survive this build's maintenance.
+        let path = temp_path("prune_foreign");
+        let good = sample_run("mine").to_json_line();
+        let future = good.replace("\"v\":1,", "\"v\":9,");
+        std::fs::write(&path, format!("{good}\n{future}\n")).unwrap();
+        let mut store = HistoryStore::open(&path).unwrap();
+        assert_eq!(store.stats(), StoreStats { runs: 1, dispatches: 0, skipped: 1 });
+        store.prune(0).unwrap();
+        let back = HistoryStore::open(&path).unwrap();
+        assert_eq!(
+            back.stats(),
+            StoreStats { runs: 0, dispatches: 0, skipped: 1 },
+            "the v9 line must still be in the file after prune"
+        );
+        assert!(std::fs::read_to_string(&path).unwrap().contains("\"v\":9,"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn prune_preserves_the_original_interleaving() {
+        // run/dispatch/run/dispatch must come back in that order, not
+        // grouped by kind — offline miners correlate by position.
+        let path = temp_path("prune_order");
+        let _ = std::fs::remove_file(&path);
+        let mut store = HistoryStore::open(&path).unwrap();
+        store.append_runs(&[sample_run("r0")]).unwrap();
+        store.append_dispatches(&[sample_dispatch()]).unwrap();
+        store.append_runs(&[sample_run("r1")]).unwrap();
+        store.append_dispatches(&[sample_dispatch()]).unwrap();
+        // Nothing dropped: the rewrite must be order-identical.
+        assert_eq!(store.prune(10).unwrap(), 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let kinds: Vec<&str> = text
+            .lines()
+            .map(|l| if l.contains("\"kind\":\"run\"") { "run" } else { "dispatch" })
+            .collect();
+        assert_eq!(kinds, ["run", "dispatch", "run", "dispatch"]);
+        // Dropping the oldest run keeps everyone else in place.
+        assert_eq!(store.prune(1).unwrap(), 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("\"session\":\"r0\""));
+        assert!(text.contains("\"session\":\"r1\""));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn prune_keeps_extra_keys_on_same_version_lines() {
+        // A v1 line with a key this build does not know still parses
+        // (from_json ignores extras) — and a rewrite must not strip it.
+        let path = temp_path("prune_extra_keys");
+        let annotated = sample_run("keep")
+            .to_json_line()
+            .replace("\"kind\":\"run\",", "\"kind\":\"run\",\"note\":\"baseline\",");
+        std::fs::write(&path, format!("{annotated}\n")).unwrap();
+        let mut store = HistoryStore::open(&path).unwrap();
+        assert_eq!(store.runs().len(), 1, "the annotated line must parse");
+        store.prune(10).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            text.contains("\"note\":\"baseline\""),
+            "prune must rewrite run lines verbatim, not re-serialize them"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn append_only_handles_cannot_prune() {
+        let path = temp_path("prune_append_only");
+        let _ = std::fs::remove_file(&path);
+        let mut store = HistoryStore::append_only(&path);
+        store.append_runs(&[sample_run("x")]).unwrap();
+        assert!(
+            store.prune(0).is_err(),
+            "a partial view must not rewrite the backing file"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn append_only_store_writes_without_loading() {
+        let path = temp_path("append_only");
+        let _ = std::fs::remove_file(&path);
+        // Pre-existing contents are not read…
+        std::fs::write(&path, format!("{}\n", sample_run("old").to_json_line())).unwrap();
+        let mut store = HistoryStore::append_only(&path);
+        assert_eq!(store.stats(), StoreStats::default());
+        // …but appends land after them.
+        store.append_runs(&[sample_run("new")]).unwrap();
+        let back = HistoryStore::open(&path).unwrap();
+        assert_eq!(back.runs().len(), 2);
+        assert_eq!(back.runs()[0].session, "old");
+        assert_eq!(back.runs()[1].session, "new");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn in_memory_store_never_touches_disk() {
+        let mut store = HistoryStore::in_memory();
+        store.append_runs(&[sample_run("x")]).unwrap();
+        store.append_dispatches(&[sample_dispatch()]).unwrap();
+        assert_eq!(store.stats(), StoreStats { runs: 1, dispatches: 1, skipped: 0 });
+        assert_eq!(store.index().len(), 1);
+        assert_eq!(store.prune(0).unwrap(), 2);
+        assert_eq!(store.stats(), StoreStats::default());
+    }
+}

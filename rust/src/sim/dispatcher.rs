@@ -32,7 +32,8 @@
 //! a tight lockstep inner loop of bare `step()` calls, so ticks between
 //! cross-host deadlines stay as cheap as in the single-host fleet.
 
-use std::collections::VecDeque;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
 
 use super::fleet::{FleetOutcome, HostWorld, TenantSpec};
 use super::telemetry::{DispatchRecord, PlacementScore};
@@ -40,6 +41,7 @@ use crate::config::experiment::TunerParams;
 use crate::config::Testbed;
 use crate::coordinator::fleet::{FleetPolicyKind, PlacementKind};
 use crate::coordinator::AlgorithmKind;
+use crate::history::{KnnIndex, Query, WorkloadFingerprint, CONFIDENCE_FLOOR};
 use crate::rng::{self, Distribution, Exponential};
 use crate::units::{Bytes, Energy, Power, SimDuration, SimTime};
 
@@ -90,15 +92,21 @@ pub struct PoissonArrivals {
 }
 
 impl PoissonArrivals {
-    /// A process with `rate_per_sec` mean arrivals per second.
+    /// A process with `rate_per_sec` mean arrivals per second. Degenerate
+    /// parameters (rate ≤ 0, zero count) are allowed and describe the
+    /// empty process — [`Self::times`] yields no arrivals instead of
+    /// panicking, so a scripted sweep can drive the rate to zero.
     pub fn new(rate_per_sec: f64, count: u32, seed: u64) -> Self {
-        assert!(rate_per_sec > 0.0, "Poisson arrivals need a positive rate");
         PoissonArrivals { rate_per_sec, count, seed }
     }
 
     /// The arrival instants: a strictly increasing sequence of `count`
-    /// times starting after t = 0.
+    /// times starting after t = 0 — empty when the process is degenerate
+    /// (rate ≤ 0 or `count` 0).
     pub fn times(&self) -> Vec<SimTime> {
+        if self.rate_per_sec <= 0.0 || self.count == 0 {
+            return Vec::new();
+        }
         let mut rng = rng::stream(self.seed, "poisson-arrivals");
         let exp = Exponential::new(self.rate_per_sec);
         let mut t = 0.0;
@@ -157,6 +165,18 @@ pub struct HostCandidate {
     /// at its current projection), W — what admission control compares
     /// against the power cap.
     pub projected_fleet_power_w: f64,
+    /// History-observed J/B for a workload like this on this host
+    /// (`None` when no [`KnnIndex`] is attached, it has no record from
+    /// this host, or the observation's confidence sits below
+    /// [`CONFIDENCE_FLOOR`](crate::history::CONFIDENCE_FLOOR)). Note the
+    /// scale: this is the session's *total attributed* cost — its
+    /// byte-weighted share of whole-host draw, fixed costs included —
+    /// not a marginal delta; see [`Self::learned_score`].
+    pub learned_j_per_byte: Option<f64>,
+    /// Confidence of the observation in `[0, 1]` — the blend weight
+    /// `Learned` placement gives it over the model score. Already gated
+    /// at the confidence floor when set by the dispatcher.
+    pub learned_weight: f64,
 }
 
 impl HostCandidate {
@@ -169,6 +189,35 @@ impl HostCandidate {
         } else {
             (self.projected_power_w - self.current_power_w).max(0.0)
                 / self.projected_session_bps
+        }
+    }
+
+    /// The `Learned` score: the model-based marginal J/B blended with the
+    /// history-observed J/B for similar workloads on this host, weighted
+    /// by the observation's confidence. Without history (or when the
+    /// model already scores the host unusable) this reduces exactly to
+    /// [`Self::marginal_j_per_byte`], so an empty store ranks hosts
+    /// identically to `MarginalEnergy`.
+    ///
+    /// The two terms deliberately price different things: the model term
+    /// is *marginal* (extra watts the placement adds), the observed term
+    /// is *full-cost* (the session's attributed share of everything the
+    /// host drew, platform base included — the number the fleet actually
+    /// billed). Blending them biases placement away from hosts whose
+    /// realized per-byte bills ran high — contention, overload, a heavy
+    /// idle floor — exactly the costs the marginal projection is blind
+    /// to. The price is that a high-fixed-cost host can be passed over
+    /// even when its marginal draw is competitive; recording a marginal
+    /// estimate at admission for a scale-consistent blend is a noted
+    /// ROADMAP follow-on.
+    pub fn learned_score(&self) -> f64 {
+        let model = self.marginal_j_per_byte();
+        match self.learned_j_per_byte {
+            Some(observed) if model.is_finite() && self.learned_weight > 0.0 => {
+                let w = self.learned_weight.clamp(0.0, 1.0);
+                (1.0 - w) * model + w * observed
+            }
+            _ => model,
         }
     }
 }
@@ -232,6 +281,8 @@ impl Dispatcher {
     ///         projected_power_w: 55.0,   // +25 W …
     ///         projected_session_bps: 50e6, // … for 50 MB/s → 0.5 µJ/B
     ///         projected_fleet_power_w: 75.0,
+    ///         learned_j_per_byte: None,
+    ///         learned_weight: 0.0,
     ///     },
     ///     HostCandidate {
     ///         host: 1,
@@ -241,6 +292,8 @@ impl Dispatcher {
     ///         projected_power_w: 35.0,   // +15 W …
     ///         projected_session_bps: 100e6, // … for 100 MB/s → 0.15 µJ/B
     ///         projected_fleet_power_w: 65.0,
+    ///         learned_j_per_byte: None,
+    ///         learned_weight: 0.0,
     ///     },
     /// ];
     /// // Host 1 moves the session's bytes for fewer joules each: admit it.
@@ -266,6 +319,14 @@ impl Dispatcher {
                     candidates[a]
                         .marginal_j_per_byte()
                         .total_cmp(&candidates[b].marginal_j_per_byte())
+                        .then_with(|| candidates[a].host.cmp(&candidates[b].host))
+                });
+            }
+            PlacementKind::Learned => {
+                order.sort_by(|&a, &b| {
+                    candidates[a]
+                        .learned_score()
+                        .total_cmp(&candidates[b].learned_score())
                         .then_with(|| candidates[a].host.cmp(&candidates[b].host))
                 });
             }
@@ -328,6 +389,16 @@ pub struct DispatcherConfig {
     /// Drive every host with the naive reference stepper instead of the
     /// epoch-cached fast path (tests and benchmarks).
     pub reference_stepper: bool,
+    /// Historical-log index consulted at every placement decision: each
+    /// candidate host is annotated with the history-observed ΔJ/byte for
+    /// workloads like the arriving one, which
+    /// [`PlacementKind::Learned`] blends into its score (other placements
+    /// carry it as telemetry only), and cold
+    /// [`AlgorithmKind::HistoryTuned`] sessions are warm-started at
+    /// admission time against the host that actually admitted them.
+    /// `None` — and an index that knows nothing relevant — degrades to
+    /// pure model-based scoring with cold slow starts.
+    pub history: Option<KnnIndex>,
 }
 
 impl DispatcherConfig {
@@ -347,6 +418,7 @@ impl DispatcherConfig {
             max_sim_time: SimDuration::from_secs(14_400.0),
             record_timeline: false,
             reference_stepper: false,
+            history: None,
         }
     }
 
@@ -359,6 +431,12 @@ impl DispatcherConfig {
     /// Set the fleet-wide power cap.
     pub fn with_power_cap(mut self, cap: Power) -> Self {
         self.power_cap = Some(cap);
+        self
+    }
+
+    /// Attach a historical-log index (see [`Self::history`]).
+    pub fn with_history(mut self, index: KnnIndex) -> Self {
+        self.history = Some(index);
         self
     }
 
@@ -389,8 +467,81 @@ fn host_seed(seed: u64, host: usize) -> u64 {
     seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(host as u64 + 1))
 }
 
+/// The history context of one arriving session, resolved once at arrival
+/// time: the attached index plus the session's workload fingerprint —
+/// fingerprinting walks the whole file list, so queued sessions that
+/// retry placement every segment must not recompute it.
+struct LearnedQuery<'a> {
+    index: &'a KnnIndex,
+    fingerprint: WorkloadFingerprint,
+    algo_id: &'static str,
+    /// Memoized per-`(host index, occupancy)` observations: the k-NN
+    /// answer is a pure function of those two, and a power-capped queue
+    /// head re-asks for it every event segment — without the memo each
+    /// retry would rescan the whole index per host.
+    observations: RefCell<BTreeMap<(usize, u32), Option<(f64, f64)>>>,
+}
+
+impl<'a> LearnedQuery<'a> {
+    /// Resolve the context for `spec` (`None` without an index).
+    fn for_spec(history: Option<&'a KnnIndex>, spec: &SessionSpec) -> Option<LearnedQuery<'a>> {
+        history.map(|index| LearnedQuery {
+            index,
+            fingerprint: WorkloadFingerprint::of(&spec.dataset),
+            algo_id: spec.algorithm.id(),
+            observations: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Observed `(J/B, confidence)` for this session on host `host_idx`
+    /// at its current occupancy (memoized; see [`Self::observations`]).
+    fn observed(
+        &self,
+        host_idx: usize,
+        host_name: &str,
+        world: &HostWorld,
+        active: u32,
+    ) -> Option<(f64, f64)> {
+        *self
+            .observations
+            .borrow_mut()
+            .entry((host_idx, active))
+            .or_insert_with(|| {
+                let q = Query::on_testbed(world.testbed(), self.fingerprint, active)
+                    .with_algorithm(self.algo_id);
+                self.index.observed_j_per_byte(host_name, &q)
+            })
+    }
+}
+
+/// Warm-start a cold `HistoryTuned` session against the host that just
+/// admitted it: the k-NN query uses *that* host's path and its occupancy
+/// at admission, so on heterogeneous fleets the warm operating point
+/// matches the hardware the session will actually run on (a host-0 query
+/// at arrival time would answer for the wrong testbed). Sessions of any
+/// other algorithm — and unconfident answers — pass through untouched.
+fn warm_start_on_host(spec: &mut SessionSpec, world: &HostWorld, learned: Option<&LearnedQuery>) {
+    if spec.algorithm != AlgorithmKind::HistoryTuned(None) {
+        return;
+    }
+    let Some(lq) = learned else { return };
+    let q = Query::on_testbed(world.testbed(), lq.fingerprint, world.occupancy())
+        .with_algorithm(lq.algo_id);
+    if let Some(warm) = lq.index.confident_warm_start(&q) {
+        spec.algorithm = AlgorithmKind::HistoryTuned(Some(warm));
+    }
+}
+
 /// Snapshot every host into placement candidates (see [`HostCandidate`]).
-fn build_candidates(worlds: &[HostWorld], hosts: &[HostSpec]) -> Vec<HostCandidate> {
+/// With a history context resolved, each candidate is additionally scored
+/// with the observed ΔJ/byte of workloads like the arriving one on that
+/// host (the per-host testbed and current occupancy parameterize the
+/// query).
+fn build_candidates(
+    worlds: &[HostWorld],
+    hosts: &[HostSpec],
+    learned: Option<&LearnedQuery<'_>>,
+) -> Vec<HostCandidate> {
     let current: Vec<(u32, f64)> = worlds
         .iter()
         .map(|w| {
@@ -409,6 +560,11 @@ fn build_candidates(worlds: &[HostWorld], hosts: &[HostSpec]) -> Vec<HostCandida
         .map(|(i, w)| {
             let (active, cur_w) = current[i];
             let proj_w = w.projected_power_w(active + 1);
+            // Same gate warm starts honor: an observation below the
+            // confidence floor is telemetry at best, never a score term.
+            let observed = learned
+                .and_then(|lq| lq.observed(i, &hosts[i].name, w, active))
+                .filter(|&(_, conf)| conf >= CONFIDENCE_FLOOR);
             HostCandidate {
                 host: i,
                 active_sessions: active,
@@ -417,6 +573,8 @@ fn build_candidates(worlds: &[HostWorld], hosts: &[HostSpec]) -> Vec<HostCandida
                 projected_power_w: proj_w,
                 projected_session_bps: w.projected_session_bps(active + 1),
                 projected_fleet_power_w: fleet_base - cur_w + proj_w,
+                learned_j_per_byte: observed.map(|(jpb, _)| jpb),
+                learned_weight: observed.map(|(_, conf)| conf).unwrap_or(0.0),
             }
         })
         .collect()
@@ -440,6 +598,7 @@ fn make_record(
             projected_power_w: c.projected_power_w,
             projected_session_bps: c.projected_session_bps,
             marginal_j_per_byte: c.marginal_j_per_byte(),
+            learned_j_per_byte: c.learned_j_per_byte,
         })
         .collect();
     let projected_fleet_power_w = match admitted {
@@ -512,7 +671,9 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
     let mut pending: VecDeque<SessionSpec> = pending.into();
     // Sessions admission control is holding back, FIFO: the head blocks
     // the rest so a power-hungry host cannot starve early requesters.
-    let mut queue: VecDeque<(SessionSpec, f64)> = VecDeque::new();
+    // Each entry carries its once-resolved history context so retries
+    // never re-fingerprint the dataset.
+    let mut queue: VecDeque<(SessionSpec, f64, Option<LearnedQuery>)> = VecDeque::new();
     let mut dispatcher = Dispatcher::new(cfg.placement, cfg.power_cap);
     let mut decisions: Vec<DispatchRecord> = Vec::new();
 
@@ -524,10 +685,13 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         // does not fit), then arrivals due now. A newcomer never jumps an
         // occupied queue.
         while !queue.is_empty() {
-            let candidates = build_candidates(&worlds, &cfg.hosts);
+            let candidates = {
+                let head = queue.front().expect("non-empty");
+                build_candidates(&worlds, &cfg.hosts, head.2.as_ref())
+            };
             match dispatcher.place(&candidates) {
                 PlaceDecision::Admit(h) => {
-                    let (spec, requested) = queue.pop_front().expect("non-empty");
+                    let (mut spec, requested, lq) = queue.pop_front().expect("non-empty");
                     decisions.push(make_record(
                         now,
                         &spec.name,
@@ -536,7 +700,8 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         &candidates,
                         &cfg.hosts,
                     ));
-                    worlds[h].register_arrival(spec);
+                    warm_start_on_host(&mut spec, &worlds[h], lq.as_ref());
+                    worlds[h].register_arrival(spec, lq.map(|l| l.fingerprint));
                 }
                 _ => break,
             }
@@ -545,9 +710,10 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
             .front()
             .is_some_and(|s| s.arrive_at.as_secs() <= now + 1e-9)
         {
-            let spec = pending.pop_front().expect("non-empty");
+            let mut spec = pending.pop_front().expect("non-empty");
             let requested = spec.arrive_at.as_secs();
-            let candidates = build_candidates(&worlds, &cfg.hosts);
+            let learned = LearnedQuery::for_spec(cfg.history.as_ref(), &spec);
+            let candidates = build_candidates(&worlds, &cfg.hosts, learned.as_ref());
             let decision = if queue.is_empty() {
                 dispatcher.place(&candidates)
             } else {
@@ -563,7 +729,9 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         &candidates,
                         &cfg.hosts,
                     ));
-                    worlds[h].register_arrival(spec);
+                    warm_start_on_host(&mut spec, &worlds[h], learned.as_ref());
+                    let fp = learned.map(|l| l.fingerprint);
+                    worlds[h].register_arrival(spec, fp);
                 }
                 _ => {
                     decisions.push(make_record(
@@ -574,7 +742,7 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         &candidates,
                         &cfg.hosts,
                     ));
-                    queue.push_back((spec, requested));
+                    queue.push_back((spec, requested, learned));
                 }
             }
         }
@@ -633,20 +801,22 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
     let duration = worlds[0].sim.now.since(SimTime::ZERO);
     let unplaced: Vec<String> = queue
         .iter()
-        .map(|(s, _)| s.name.clone())
+        .map(|(s, _, _)| s.name.clone())
         .chain(pending.iter().map(|s| s.name.clone()))
         .collect();
     let policy = format!("{}+{}", cfg.placement.id(), worlds[0].policy_name());
 
     let mut tenants = Vec::new();
     let mut hosts = Vec::new();
+    let mut run_records = Vec::new();
     let mut moved = Bytes::ZERO;
     let mut client_energy = Energy::ZERO;
     let mut client_package_energy = Energy::ZERO;
     let mut server_energy = Energy::ZERO;
     for w in worlds {
-        let (t, b) = w.finish();
+        let (t, b, r) = w.finish();
         tenants.extend(t);
+        run_records.extend(r);
         moved += b.moved;
         client_energy = client_energy + b.client_energy;
         client_package_energy = client_package_energy + b.client_package_energy;
@@ -673,6 +843,7 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
             final_active_cores: hosts[0].final_active_cores,
             final_freq: hosts[0].final_freq,
             hosts,
+            run_records,
         },
         decisions,
         unplaced,
@@ -701,6 +872,8 @@ mod tests {
             projected_power_w: proj_w,
             projected_session_bps: bps,
             projected_fleet_power_w: fleet_w,
+            learned_j_per_byte: None,
+            learned_weight: 0.0,
         }
     }
 
@@ -715,12 +888,28 @@ mod tests {
         for w in a.windows(2) {
             assert!(w[1] > w[0], "arrival times must strictly increase");
         }
-        // Empirical rate: mean inter-arrival ≈ 1/λ = 2 s within 5%.
-        let mean = a.last().unwrap().as_secs() / 4000.0;
+        // Empirical rate: mean inter-arrival ≈ 1/λ = 2 s within 5%. The
+        // sample list is non-empty by the length assertion above, so the
+        // guard only documents that `times()` may legally return nothing.
+        let mean = a.last().map(|t| t.as_secs()).unwrap_or(0.0) / 4000.0;
         assert!((mean - 2.0).abs() < 0.1, "mean inter-arrival {mean}");
         // A different seed perturbs the process.
         let c = PoissonArrivals::new(0.5, 4000, 8).times();
         assert_ne!(a[0].as_secs(), c[0].as_secs());
+    }
+
+    #[test]
+    fn degenerate_poisson_processes_yield_empty_schedules() {
+        // Rate ≈ 0 or a zero session budget must not panic — the process
+        // is simply empty (regression: `new` used to assert on the rate
+        // and downstream code unwrapped the last sample).
+        assert!(PoissonArrivals::new(0.0, 100, 7).times().is_empty());
+        assert!(PoissonArrivals::new(-1.0, 100, 7).times().is_empty());
+        assert!(PoissonArrivals::new(2.0, 0, 7).times().is_empty());
+        let specs = PoissonArrivals::new(0.0, 4, 7)
+            .sessions("medium", AlgorithmKind::MaxThroughput)
+            .expect("known family");
+        assert!(specs.is_empty(), "empty schedule, not a panic");
     }
 
     #[test]
@@ -786,6 +975,28 @@ mod tests {
     }
 
     #[test]
+    fn learned_placement_blends_observed_costs() {
+        let mut d = Dispatcher::new(PlacementKind::Learned, None);
+        // Model says host 0 wins (0.15 vs 0.5 µJ/B)…
+        let mut c0 = cand(0, 0, 4, 20.0, 35.0, 100e6, 65.0);
+        let mut c1 = cand(1, 0, 4, 30.0, 55.0, 50e6, 75.0);
+        // …but history has seen this workload cost 2 µJ/B there.
+        c0.learned_j_per_byte = Some(2e-6);
+        c0.learned_weight = 0.9;
+        c1.learned_j_per_byte = Some(4e-7);
+        c1.learned_weight = 0.9;
+        assert_eq!(d.place(&[c0, c1]), PlaceDecision::Admit(1));
+        // Without observations the blend reduces exactly to the model
+        // score, i.e. `Learned` on an empty store == `MarginalEnergy`.
+        let cands = vec![
+            cand(0, 0, 4, 20.0, 35.0, 100e6, 65.0),
+            cand(1, 0, 4, 30.0, 55.0, 50e6, 75.0),
+        ];
+        assert_eq!(cands[0].learned_score(), cands[0].marginal_j_per_byte());
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(0));
+    }
+
+    #[test]
     fn power_cap_queues_or_reroutes() {
         let mut d =
             Dispatcher::new(PlacementKind::MarginalEnergy, Some(Power::from_watts(70.0)));
@@ -808,6 +1019,81 @@ mod tests {
         ];
         assert_eq!(d.place(&cands), PlaceDecision::QueueNoSlot);
         assert_eq!(d.place(&[]), PlaceDecision::QueueNoSlot);
+    }
+
+    #[test]
+    fn warm_start_resolves_against_the_admitting_host() {
+        use crate::config::experiment::TunerParams;
+        use crate::history::{KnnIndex, RunRecord, WorkloadFingerprint};
+
+        let tb = testbeds::didclab();
+        let world = HostWorld::build(
+            "h",
+            &tb,
+            &[],
+            Some(FleetPolicyKind::MinEnergyFleet),
+            TunerParams::default(),
+            SimDuration::from_secs(3.0),
+            SimDuration::from_millis(100.0),
+            1,
+            Vec::new(),
+            false,
+            false,
+            false,
+        );
+        let ds = crate::dataset::standard::medium_dataset(11);
+        let record = RunRecord {
+            session: "past".to_string(),
+            algorithm: "history".to_string(),
+            host: "h".to_string(),
+            testbed: tb.name.to_string(),
+            rtt_s: tb.link.rtt.as_secs(),
+            bandwidth_bps: tb.link.capacity.as_bits_per_sec(),
+            workload: WorkloadFingerprint::of(&ds),
+            contention: 0,
+            cores: 2,
+            pstate: 1,
+            channels: 9,
+            peak_channels: 12,
+            goodput_bps: 1e8,
+            joules: 8000.0,
+            j_per_byte: 8000.0 / 11.7e9,
+            moved_bytes: 11.7e9,
+            duration_s: 110.0,
+            completed: true,
+            traj: Vec::new(),
+        };
+        let index = KnnIndex::build(&[record]);
+
+        // A cold `history` session is warmed against this host's path…
+        let mut spec = TenantSpec::new("s", ds, AlgorithmKind::HistoryTuned(None));
+        let lq = LearnedQuery::for_spec(Some(&index), &spec);
+        warm_start_on_host(&mut spec, &world, lq.as_ref());
+        assert!(
+            matches!(
+                spec.algorithm,
+                AlgorithmKind::HistoryTuned(Some(w)) if w.channels == 9 && w.cores == 2
+            ),
+            "expected the recorded op point, got {:?}",
+            spec.algorithm
+        );
+        // …while non-history sessions pass through untouched.
+        let mut other = TenantSpec::new(
+            "o",
+            crate::dataset::standard::medium_dataset(12),
+            AlgorithmKind::MaxThroughput,
+        );
+        let lq = LearnedQuery::for_spec(Some(&index), &other);
+        warm_start_on_host(&mut other, &world, lq.as_ref());
+        assert_eq!(other.algorithm, AlgorithmKind::MaxThroughput);
+        // And without an index nothing changes.
+        let mut cold = TenantSpec::new(
+            "c",
+            crate::dataset::standard::medium_dataset(13),
+            AlgorithmKind::HistoryTuned(None),
+        );
+        warm_start_on_host(&mut cold, &world, None);
+        assert_eq!(cold.algorithm, AlgorithmKind::HistoryTuned(None));
     }
 
     #[test]

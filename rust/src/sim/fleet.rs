@@ -21,6 +21,7 @@ use crate::coordinator::fleet::{FleetPolicy, FleetPolicyKind};
 use crate::coordinator::{Algorithm, AlgorithmKind};
 use crate::cpusim::{CpuDemand, CpuState};
 use crate::dataset::Dataset;
+use crate::history::{RunRecord, TrajPoint, WorkloadFingerprint};
 use crate::netsim::BandwidthEvent;
 use crate::sim::{Simulation, TickStats, TuneCtx, MAX_APP_UTILIZATION};
 use crate::transfer::TransferEngine;
@@ -237,6 +238,10 @@ pub struct FleetOutcome {
     /// Per-host breakdowns — one entry for a single-host fleet, one per
     /// host behind the dispatcher.
     pub hosts: Vec<HostBreakdown>,
+    /// One history record per completed tenant (see
+    /// [`crate::history::RunRecord`]) — what `--record-history` appends
+    /// to the store. Always populated; persisting is the caller's choice.
+    pub run_records: Vec<RunRecord>,
 }
 
 impl FleetOutcome {
@@ -276,15 +281,30 @@ struct TenantRun {
     /// governor actuates this per-tenant shadow setting instead, so even
     /// baselines with built-in OS governors cannot fight the policy.
     shadow_cpu: CpuState,
+    /// Sessions already admitted and unfinished when this one was
+    /// admitted — the history record's contention level.
+    contention: u32,
+    /// Channels in effect at the last tuning/arbitration event (the
+    /// converged concurrency a warm start should reproduce; the engine's
+    /// own count collapses once the transfer drains).
+    last_channels: u32,
+    /// Host client cores/P-state at departure (the settled operating
+    /// point recorded into history).
+    settled_cores: u32,
+    settled_pstate: u32,
 }
 
 /// The slice of a [`TenantSpec`] the driver still needs after
 /// `init_tenant` has consumed the dataset: keeping the full spec alive
 /// would pin every session's generated file list in memory for the whole
-/// run (thousands of sessions in open workloads).
+/// run (thousands of sessions in open workloads). The workload
+/// fingerprint is taken here, at admission-record time, precisely so the
+/// file list can be dropped.
 struct TenantMeta {
     name: String,
     arrive_at: SimTime,
+    fingerprint: WorkloadFingerprint,
+    algo_id: &'static str,
 }
 
 /// Install the policy's per-session channel budget on one tenant's
@@ -389,10 +409,7 @@ impl HostWorld {
             name: name.into(),
             testbed: testbed.clone(),
             sim,
-            specs: specs
-                .iter()
-                .map(|s| TenantMeta { name: s.name.clone(), arrive_at: s.arrive_at })
-                .collect(),
+            specs: specs.iter().map(TenantMeta::of).collect(),
             tenants,
             policy,
             params,
@@ -406,30 +423,55 @@ impl HostWorld {
 
     /// Register a session that arrives *now* (a dispatcher placement): its
     /// algorithm initializes at the current clock and `admissions_due`
-    /// will admit it before the next tick.
-    pub(crate) fn register_arrival(&mut self, mut spec: TenantSpec) {
+    /// will admit it before the next tick. `fingerprint` reuses a
+    /// fingerprint the dispatcher already computed for placement scoring
+    /// (fingerprinting walks the whole file list); `None` computes it
+    /// here.
+    pub(crate) fn register_arrival(
+        &mut self,
+        mut spec: TenantSpec,
+        fingerprint: Option<WorkloadFingerprint>,
+    ) {
         spec.arrive_at = self.sim.now;
         let (mut run, engine, _cpu) = init_tenant(&spec, self.params, &self.testbed);
         run.slot = self.sim.add_slot(engine);
         self.tenants.push(run);
-        // Drop the dataset: only the name and arrival instant are needed
-        // from here on.
-        self.specs.push(TenantMeta { name: spec.name, arrive_at: spec.arrive_at });
+        // Drop the dataset: only the name, arrival instant and workload
+        // fingerprint are needed from here on.
+        self.specs.push(TenantMeta {
+            fingerprint: fingerprint.unwrap_or_else(|| WorkloadFingerprint::of(&spec.dataset)),
+            algo_id: spec.algorithm.id(),
+            name: spec.name,
+            arrive_at: spec.arrive_at,
+        });
+    }
+
+    /// The testbed this host models.
+    pub(crate) fn testbed(&self) -> &Testbed {
+        &self.testbed
     }
 
     /// Admissions due now (t=0 tenants are admitted before the first
     /// tick; channels open cold, exactly like a fresh session).
     pub(crate) fn admissions_due(&mut self) {
         let now = self.sim.now.as_secs();
+        // Contention as the history record defines it: sessions already
+        // admitted and unfinished when this one joins. Simultaneous
+        // admissions in this call count each other in admission order.
+        let mut active =
+            self.tenants.iter().filter(|t| t.admitted && t.finished_at.is_none()).count() as u32;
         for (t, spec) in self.tenants.iter_mut().zip(&self.specs) {
             if !t.admitted && spec.arrive_at.as_secs() <= now + 1e-9 {
                 t.admitted = true;
+                t.contention = active;
+                active += 1;
                 self.sim.activate_slot(t.slot);
                 let engine = &mut self.sim.slot_mut(t.slot).engine;
                 engine.set_channel_cap(self.channel_cap);
                 engine.update_weights();
                 engine.set_num_channels(t.init_channels);
                 t.peak_channels = engine.num_channels();
+                t.last_channels = engine.num_channels();
             }
         }
     }
@@ -513,6 +555,7 @@ impl HostWorld {
                 } else {
                     t.algo.on_timeout(&tel, &mut self.sim.tune_ctx(t.slot));
                 }
+                t.last_channels = self.sim.slot(t.slot).engine.num_channels().max(1);
                 t.next_timeout += t.timeout;
                 while self.sim.now.as_secs() + 1e-9 >= t.next_timeout {
                     t.next_timeout += t.timeout;
@@ -528,9 +571,11 @@ impl HostWorld {
                 let directive = p.arbitrate(&view, &mut self.sim.host.client);
                 self.channel_cap = directive.per_session_channel_cap;
                 if let Some(cap) = self.channel_cap {
-                    for t in self.tenants.iter() {
+                    for t in self.tenants.iter_mut() {
                         if t.admitted && t.finished_at.is_none() {
                             apply_cap(&mut self.sim, t.slot, cap);
+                            t.last_channels =
+                                self.sim.slot(t.slot).engine.num_channels().max(1);
                         }
                     }
                 }
@@ -548,6 +593,11 @@ impl HostWorld {
                 && self.sim.slot(t.slot).engine.is_done()
             {
                 t.finished_at = Some(self.sim.now);
+                // Freeze the settled operating point for the history
+                // record: the host CPU setting the session departed under
+                // plus the channel count it last ran with.
+                t.settled_cores = self.sim.host.client.active_cores();
+                t.settled_pstate = self.sim.host.client.freq_index() as u32;
                 self.sim.deactivate_slot(t.slot);
             }
         }
@@ -630,11 +680,14 @@ impl HostWorld {
         }
     }
 
-    /// Tear the world down into per-tenant outcomes plus this host's
-    /// totals.
-    pub(crate) fn finish(self) -> (Vec<TenantOutcome>, HostBreakdown) {
+    /// Tear the world down into per-tenant outcomes, this host's totals,
+    /// and one history [`RunRecord`] per *completed* tenant (the record
+    /// hook behind `--record-history`; callers that don't persist them
+    /// pay only their construction).
+    pub(crate) fn finish(self) -> (Vec<TenantOutcome>, HostBreakdown, Vec<RunRecord>) {
         let HostWorld { name, testbed, sim, specs, tenants, .. } = self;
         let mut outcomes = Vec::with_capacity(tenants.len());
+        let mut records = Vec::new();
         let mut moved_total = Bytes::ZERO;
         let mut served = 0u32;
         for (t, spec) in tenants.into_iter().zip(&specs) {
@@ -650,6 +703,17 @@ impl HostWorld {
             } else {
                 SimDuration::ZERO
             };
+            if t.finished_at.is_some() && !moved.is_zero() {
+                records.push(run_record(
+                    &t,
+                    spec,
+                    &testbed,
+                    &name,
+                    moved,
+                    residency,
+                    slot.attributed_energy(),
+                ));
+            }
             outcomes.push(TenantOutcome {
                 name: spec.name.clone(),
                 algorithm: t.algo.name().to_string(),
@@ -677,7 +741,69 @@ impl HostWorld {
             final_active_cores: sim.host.client.active_cores(),
             final_freq: sim.host.client.freq(),
         };
-        (outcomes, breakdown)
+        (outcomes, breakdown, records)
+    }
+}
+
+impl TenantMeta {
+    /// Capture what the driver keeps of a spec (fingerprinting the
+    /// dataset so the file list can be dropped).
+    fn of(spec: &TenantSpec) -> TenantMeta {
+        TenantMeta {
+            name: spec.name.clone(),
+            arrive_at: spec.arrive_at,
+            fingerprint: WorkloadFingerprint::of(&spec.dataset),
+            algo_id: spec.algorithm.id(),
+        }
+    }
+}
+
+/// Assemble one completed tenant's history record. The settled operating
+/// point is the host CPU setting at departure plus the channel count the
+/// session last tuned to; the trajectory is populated from the timeline
+/// when one was recorded.
+fn run_record(
+    t: &TenantRun,
+    spec: &TenantMeta,
+    testbed: &Testbed,
+    host: &str,
+    moved: Bytes,
+    residency: SimDuration,
+    attributed: Energy,
+) -> RunRecord {
+    let ladder = &testbed.client_cpu.freq_levels;
+    let traj = t
+        .timeline
+        .iter()
+        .map(|p| TrajPoint {
+            t_secs: p.t_secs,
+            cores: p.active_cores,
+            pstate: ladder.iter().position(|&f| f == p.freq).unwrap_or(0) as u32,
+            channels: p.channels,
+        })
+        .collect();
+    let moved_f = moved.as_f64();
+    let joules = attributed.as_joules();
+    RunRecord {
+        session: spec.name.clone(),
+        algorithm: spec.algo_id.to_string(),
+        host: host.to_string(),
+        testbed: testbed.name.to_string(),
+        rtt_s: testbed.link.rtt.as_secs(),
+        bandwidth_bps: testbed.link.capacity.as_bits_per_sec(),
+        workload: spec.fingerprint,
+        contention: t.contention,
+        cores: t.settled_cores,
+        pstate: t.settled_pstate,
+        channels: t.last_channels,
+        peak_channels: t.peak_channels,
+        goodput_bps: Rate::average(moved, residency).as_bytes_per_sec(),
+        joules,
+        j_per_byte: if moved_f > 0.0 { joules / moved_f } else { 0.0 },
+        moved_bytes: moved_f,
+        duration_s: residency.as_secs(),
+        completed: true,
+        traj,
     }
 }
 
@@ -717,6 +843,10 @@ fn init_tenant(
         peak_channels: 0,
         timeline: Vec::new(),
         shadow_cpu: plan.client_cpu,
+        contention: 0,
+        last_channels: plan.num_channels,
+        settled_cores: cpu.active_cores(),
+        settled_pstate: cpu.freq_index() as u32,
     };
     (run, engine, cpu)
 }
@@ -770,7 +900,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetOutcome {
     let completed = world.all_done();
     let duration = world.sim.now.since(SimTime::ZERO);
     let policy = world.policy_name().to_string();
-    let (tenants, breakdown) = world.finish();
+    let (tenants, breakdown, run_records) = world.finish();
 
     FleetOutcome {
         policy,
@@ -784,6 +914,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetOutcome {
         final_active_cores: breakdown.final_active_cores,
         final_freq: breakdown.final_freq,
         hosts: vec![breakdown],
+        run_records,
     }
 }
 
@@ -947,6 +1078,29 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn completed_tenants_produce_history_records() {
+        let out = run_fleet(&four_tenant_cfg(FleetPolicyKind::MinEnergyFleet, 31));
+        assert!(out.completed);
+        assert_eq!(out.run_records.len(), 4, "one record per completed tenant");
+        for (r, t) in out.run_records.iter().zip(&out.tenants) {
+            assert_eq!(r.session, t.name);
+            assert_eq!(r.testbed, "CloudLab");
+            assert_eq!(r.algorithm, "eemt");
+            assert!(r.completed);
+            assert!(r.cores >= 1 && r.channels >= 1 && r.peak_channels >= 1);
+            assert!(r.joules > 0.0 && r.j_per_byte > 0.0);
+            assert!((r.moved_bytes - t.moved.as_f64()).abs() < 1.0);
+            assert!((r.duration_s - t.residency.as_secs()).abs() < 1e-9);
+            assert!((r.rtt_s - 0.036).abs() < 1e-9);
+            assert_eq!(r.workload.num_files, 5_000);
+        }
+        // Staggered arrivals overlap: later tenants were admitted into
+        // contention, the first into an empty host.
+        assert_eq!(out.run_records[0].contention, 0);
+        assert!(out.run_records[1].contention >= 1);
     }
 
     #[test]

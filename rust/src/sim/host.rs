@@ -321,7 +321,8 @@ impl Host {
     }
 
     /// The cheapest client operating point able to carry `demand`, and
-    /// the client package power it would draw there.
+    /// the client package power it would draw there — `None` when the
+    /// demand exceeds what even the maximum point can serve.
     ///
     /// Scans the full (active cores, P-state) grid, pricing each point
     /// with the same frozen [`crate::power::OpPointPower`] coefficients
@@ -331,10 +332,9 @@ impl Host {
     /// the multi-host dispatcher's marginal-energy placement
     /// (GreenDataFlow, arXiv:1810.05892): a candidate host is scored by
     /// the delta between this projection at its post-placement demand and
-    /// at its current demand. When no operating point can carry the
-    /// demand, the maximum point is returned with its (clamped-load)
-    /// power — the host would saturate there.
-    pub fn min_client_power_for(&self, demand: &CpuDemand) -> ProjectedPoint {
+    /// at its current demand. Callers that need a number even for
+    /// infeasible demand combine it with [`Self::saturated_client_point`].
+    pub fn min_client_power_for(&self, demand: &CpuDemand) -> Option<ProjectedPoint> {
         let spec = self.client.spec();
         let mut best: Option<ProjectedPoint> = None;
         for cores in 1..=spec.num_cores {
@@ -361,26 +361,36 @@ impl Host {
                 }
             }
         }
-        best.unwrap_or_else(|| {
-            let cores = spec.num_cores;
-            let f = spec.max_freq();
-            let load = spec.load(demand, cores, f);
-            ProjectedPoint {
-                power: self.client_power.at(cores, f).power(load, demand.bytes_per_sec),
-                cores,
-                freq: f,
-            }
-        })
+        best
+    }
+
+    /// The maximum client operating point under `demand`, with its
+    /// (clamped-load) power — what the host would actually run at if
+    /// asked to serve more than it can: it saturates there.
+    pub fn saturated_client_point(&self, demand: &CpuDemand) -> ProjectedPoint {
+        let spec = self.client.spec();
+        let cores = spec.num_cores;
+        let f = spec.max_freq();
+        let load = spec.load(demand, cores, f);
+        ProjectedPoint {
+            power: self.client_power.at(cores, f).power(load, demand.bytes_per_sec),
+            cores,
+            freq: f,
+        }
     }
 
     /// [`Self::min_client_power_for`] expressed on the testbed's
     /// *instrument*: wall-metered hosts (DIDCLab) add the always-on
     /// platform base to the projected package draw, RAPL hosts report the
     /// package alone — the same convention [`Self::record_tick`] bills
-    /// under. The dispatcher's fleet power cap compares aggregates of
-    /// this quantity.
+    /// under. Infeasible demand is priced at the saturated maximum point.
+    /// The dispatcher's fleet power cap compares aggregates of this
+    /// quantity.
     pub fn projected_instrument_power(&self, demand: &CpuDemand) -> Power {
-        let pkg = self.min_client_power_for(demand).power;
+        let pkg = self
+            .min_client_power_for(demand)
+            .unwrap_or_else(|| self.saturated_client_point(demand))
+            .power;
         if self.wall_meter {
             pkg + self.client_node.base()
         } else {
@@ -613,14 +623,14 @@ mod tests {
     fn min_power_projection_picks_cheapest_feasible_point() {
         let h = host("cloudlab");
         // Idle demand: the floor of the grid wins.
-        let idle = h.min_client_power_for(&CpuDemand::default());
+        let idle = h.min_client_power_for(&CpuDemand::default()).unwrap();
         assert_eq!(idle.cores, 1);
         assert_eq!(idle.freq, h.client.spec().min_freq());
         // ~1 Gbps of goodput still fits low operating points on Broadwell
         // and must cost more than idle.
         let demand =
             CpuDemand { bytes_per_sec: 115e6, requests_per_sec: 0.0, open_streams: 5.0 };
-        let p = h.min_client_power_for(&demand);
+        let p = h.min_client_power_for(&demand).unwrap();
         assert!(p.power > idle.power);
         let spec = h.client.spec().clone();
         // The chosen point can actually carry the demand…
@@ -642,12 +652,65 @@ mod tests {
     }
 
     #[test]
-    fn infeasible_demand_projects_the_saturated_max_point() {
+    fn min_power_projection_is_monotone_in_demanded_goodput() {
+        // More demanded bytes/s can never get cheaper: the feasible set
+        // only shrinks, so the chosen minimum power is non-decreasing.
+        let h = host("cloudlab");
+        let mut last = Power::ZERO;
+        let mut bps = 1e6;
+        while let Some(p) = h.min_client_power_for(&CpuDemand {
+            bytes_per_sec: bps,
+            requests_per_sec: 10.0,
+            open_streams: 6.0,
+        }) {
+            assert!(
+                p.power >= last,
+                "power must not drop as demand grows: {:?} after {last:?} at {bps} B/s",
+                p.power
+            );
+            last = p.power;
+            bps *= 1.5;
+            assert!(bps < 1e13, "demand must eventually become infeasible");
+        }
+    }
+
+    #[test]
+    fn min_power_projection_agrees_with_the_power_model_at_its_point() {
+        // The returned power must be exactly PowerModel::at(...).power at
+        // the chosen op point — the same coefficients the meters bill.
+        let h = host("didclab");
+        for bps in [0.0, 20e6, 60e6, 110e6] {
+            let demand =
+                CpuDemand { bytes_per_sec: bps, requests_per_sec: 5.0, open_streams: 4.0 };
+            let p = h.min_client_power_for(&demand).unwrap();
+            let spec = h.client.spec();
+            let load = spec.load(&demand, p.cores, p.freq);
+            let direct = h.client_power_model().at(p.cores, p.freq).power(load, bps);
+            assert_eq!(
+                p.power.as_watts().to_bits(),
+                direct.as_watts().to_bits(),
+                "projection must match PowerModel::at at {bps} B/s"
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_demand_returns_none_and_saturates_the_instrument() {
         let h = host("didclab");
         let demand = CpuDemand { bytes_per_sec: 1e12, ..CpuDemand::default() };
-        let p = h.min_client_power_for(&demand);
-        assert_eq!(p.cores, h.client.spec().num_cores);
-        assert_eq!(p.freq, h.client.spec().max_freq());
+        assert!(
+            h.min_client_power_for(&demand).is_none(),
+            "demand beyond host capacity has no feasible point"
+        );
+        // The saturated fallback prices the maximum point; the instrument
+        // projection uses it (plus the wall base on DIDCLab).
+        let sat = h.saturated_client_point(&demand);
+        assert_eq!(sat.cores, h.client.spec().num_cores);
+        assert_eq!(sat.freq, h.client.spec().max_freq());
+        assert_eq!(
+            h.projected_instrument_power(&demand),
+            sat.power + h.client_node.base()
+        );
     }
 
     #[test]
@@ -655,13 +718,14 @@ mod tests {
         let didclab = host("didclab");
         let d = CpuDemand::default();
         assert!(
-            didclab.projected_instrument_power(&d) > didclab.min_client_power_for(&d).power,
+            didclab.projected_instrument_power(&d)
+                > didclab.min_client_power_for(&d).unwrap().power,
             "wall instrument adds the platform base"
         );
         let cloudlab = host("cloudlab");
         assert_eq!(
             cloudlab.projected_instrument_power(&d),
-            cloudlab.min_client_power_for(&d).power
+            cloudlab.min_client_power_for(&d).unwrap().power
         );
     }
 

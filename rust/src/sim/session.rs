@@ -144,6 +144,9 @@ pub struct SessionOutcome {
     pub peak_channels: u32,
     /// Per-timeout timeline (empty unless recorded).
     pub timeline: Vec<TimelinePoint>,
+    /// History record of the session if it completed (see
+    /// [`crate::history::RunRecord`]) — what `--record-history` appends.
+    pub run_records: Vec<crate::history::RunRecord>,
 }
 
 impl SessionOutcome {
@@ -187,6 +190,7 @@ pub fn run_session(cfg: &SessionConfig) -> SessionOutcome {
         final_freq: out.final_freq,
         peak_channels: tenant.peak_channels,
         timeline: tenant.timeline,
+        run_records: out.run_records,
     }
 }
 

@@ -128,6 +128,12 @@ pub struct PlacementScore {
     pub projected_session_bps: f64,
     /// Marginal energy per byte: `(projected − current) / goodput`, J/B.
     pub marginal_j_per_byte: f64,
+    /// History-observed J/B for a workload like this on this host, when a
+    /// [`KnnIndex`](crate::history::KnnIndex) was attached to the run and
+    /// had relevant records (`None` otherwise). What
+    /// [`PlacementKind::Learned`](crate::coordinator::fleet::PlacementKind)
+    /// blended into the score.
+    pub learned_j_per_byte: Option<f64>,
 }
 
 /// One dispatcher decision: which host (if any) an arriving session was

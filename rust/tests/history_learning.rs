@@ -1,0 +1,291 @@
+//! Acceptance tests for the historical-log learning subsystem (ISSUE 4).
+//!
+//! Pins the headline properties:
+//!
+//! * the `RunRecord` JSONL schema round-trips bit-for-bit through a
+//!   file-backed store, and unknown-version lines are skipped with a
+//!   count (forward compatibility);
+//! * the k-NN index is deterministic under a fixed seed;
+//! * `HistoryTuned` without a warm start is bit-for-bit the existing
+//!   Minimum Energy slow-start path;
+//! * the `examples/learned_fleet.rs` scenario: replaying the same seeded
+//!   arrival script warm consumes strictly fewer joules at
+//!   equal-or-better aggregate goodput than the cold run.
+
+use greendt::config::testbeds;
+use greendt::coordinator::{AlgorithmKind, FleetPolicyKind, PlacementKind};
+use greendt::dataset::standard;
+use greendt::history::{
+    HistoryStore, KnnIndex, Query, RunRecord, TrajPoint, WorkloadFingerprint,
+};
+use greendt::sim::dispatcher::{run_dispatcher, DispatcherConfig, HostSpec};
+use greendt::sim::fleet::{run_fleet, FleetConfig, FleetOutcome, TenantSpec};
+use greendt::sim::session::{run_session, SessionConfig};
+use greendt::units::{Rate, SimTime};
+
+/// The `learned_fleet` example's arrival script: N staggered medium
+/// tenants on DIDCLab under the min-energy fleet policy, one seed.
+fn fleet_cfg(kinds: &[AlgorithmKind]) -> FleetConfig {
+    let mut cfg = FleetConfig::new(testbeds::didclab(), Some(FleetPolicyKind::MinEnergyFleet))
+        .with_seed(11);
+    for (i, kind) in kinds.iter().enumerate() {
+        cfg.tenants.push(
+            TenantSpec::new(
+                format!("tenant-{i}"),
+                standard::medium_dataset(11 + i as u64),
+                *kind,
+            )
+            .arriving_at(SimTime::from_secs(40.0 * i as f64)),
+        );
+    }
+    cfg
+}
+
+fn goodput(out: &FleetOutcome) -> f64 {
+    Rate::average(out.moved, out.duration).as_bytes_per_sec()
+}
+
+fn temp_store(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("greendt_it_{name}_{}.jsonl", std::process::id()))
+}
+
+#[test]
+fn run_record_schema_round_trips_through_a_file() {
+    let record = RunRecord {
+        session: "tenant-0".to_string(),
+        algorithm: "history".to_string(),
+        host: "DIDCLab".to_string(),
+        testbed: "DIDCLab".to_string(),
+        rtt_s: 0.044,
+        bandwidth_bps: 1e9,
+        workload: WorkloadFingerprint {
+            total_bytes: 11.7e9,
+            num_files: 5000,
+            avg_file_bytes: 2.34e6,
+            frac_small: 0.125,
+            frac_medium: 0.75,
+            frac_large: 0.125,
+        },
+        contention: 2,
+        cores: 2,
+        pstate: 1,
+        channels: 9,
+        peak_channels: 14,
+        goodput_bps: 1.0817e8,
+        joules: 8123.25,
+        j_per_byte: 8123.25 / 11.7e9,
+        moved_bytes: 11.7e9,
+        duration_s: 108.2,
+        completed: true,
+        traj: vec![TrajPoint { t_secs: 3.0, cores: 1, pstate: 0, channels: 6 }],
+    };
+    let path = temp_store("roundtrip");
+    let _ = std::fs::remove_file(&path);
+    let mut store = HistoryStore::open(&path).unwrap();
+    store.append_runs(std::slice::from_ref(&record)).unwrap();
+
+    let back = HistoryStore::open(&path).unwrap();
+    assert_eq!(back.runs().len(), 1);
+    assert_eq!(back.skipped(), 0);
+    let b = &back.runs()[0];
+    assert_eq!(b, &record, "serialize → load must be identical");
+    // f64 fields survive bit-for-bit (shortest round-trip rendering).
+    assert_eq!(b.j_per_byte.to_bits(), record.j_per_byte.to_bits());
+    assert_eq!(b.goodput_bps.to_bits(), record.goodput_bps.to_bits());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn unknown_version_lines_are_skipped_with_a_count() {
+    let good = RunRecord {
+        session: "ok".to_string(),
+        algorithm: "me".to_string(),
+        host: "h".to_string(),
+        testbed: "CloudLab".to_string(),
+        rtt_s: 0.036,
+        bandwidth_bps: 1e9,
+        workload: WorkloadFingerprint {
+            total_bytes: 2e9,
+            num_files: 100,
+            avg_file_bytes: 2e7,
+            frac_small: 0.0,
+            frac_medium: 1.0,
+            frac_large: 0.0,
+        },
+        contention: 0,
+        cores: 1,
+        pstate: 0,
+        channels: 4,
+        peak_channels: 4,
+        goodput_bps: 1e8,
+        joules: 100.0,
+        j_per_byte: 5e-8,
+        moved_bytes: 2e9,
+        duration_s: 20.0,
+        completed: true,
+        traj: Vec::new(),
+    }
+    .to_json_line();
+    let future = good.replace("\"v\":1,", "\"v\":2,");
+    let path = temp_store("skip");
+    std::fs::write(&path, format!("{good}\n{future}\nnot json\n")).unwrap();
+    let store = HistoryStore::open(&path).unwrap();
+    assert_eq!(store.runs().len(), 1, "only the v1 line loads");
+    assert_eq!(store.skipped(), 2, "future version + garbage are counted");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn knn_answers_are_pinned_under_a_fixed_seed() {
+    // Records come from a real (seeded, deterministic) cold fleet run, so
+    // this pins the whole record→index→answer pipeline.
+    let kinds = vec![AlgorithmKind::HistoryTuned(None); 2];
+    let a = run_fleet(&fleet_cfg(&kinds));
+    let b = run_fleet(&fleet_cfg(&kinds));
+    assert_eq!(a.run_records.len(), 2);
+    for (x, y) in a.run_records.iter().zip(&b.run_records) {
+        assert_eq!(x, y, "records must be reproducible under the seed");
+    }
+    let q = Query::on_testbed(
+        &testbeds::didclab(),
+        WorkloadFingerprint::of(&standard::medium_dataset(11)),
+        0,
+    )
+    .with_algorithm("history");
+    let wa = KnnIndex::build(&a.run_records).warm_start(&q);
+    let wb = KnnIndex::build(&b.run_records).warm_start(&q);
+    assert_eq!(wa, wb, "same records, same answer");
+    let (warm, confidence) = wa.expect("two records indexed");
+    assert!(confidence >= greendt::history::CONFIDENCE_FLOOR, "confidence {confidence}");
+    assert!(warm.cores >= 1 && warm.channels >= 1);
+}
+
+#[test]
+fn history_tuned_cold_is_bit_for_bit_the_slow_start_path() {
+    let mk = |kind| {
+        SessionConfig::new(testbeds::didclab(), standard::medium_dataset(6), kind)
+            .with_seed(77)
+    };
+    let me = run_session(&mk(AlgorithmKind::MinEnergy));
+    let cold = run_session(&mk(AlgorithmKind::HistoryTuned(None)));
+    assert!(me.completed && cold.completed);
+    assert_eq!(
+        me.duration.as_secs().to_bits(),
+        cold.duration.as_secs().to_bits(),
+        "cold fallback must reproduce ME's timing exactly"
+    );
+    assert_eq!(
+        me.client_energy.as_joules().to_bits(),
+        cold.client_energy.as_joules().to_bits(),
+        "cold fallback must reproduce ME's energy exactly"
+    );
+    assert_eq!(me.peak_channels, cold.peak_channels);
+    assert_eq!(me.final_active_cores, cold.final_active_cores);
+}
+
+#[test]
+fn warm_replay_beats_the_cold_run_on_the_same_arrival_script() {
+    // The examples/learned_fleet.rs scenario, pinned.
+    let cold_kinds = vec![AlgorithmKind::HistoryTuned(None); 3];
+    let cold = run_fleet(&fleet_cfg(&cold_kinds));
+    assert!(cold.completed, "cold run must finish");
+    assert_eq!(cold.run_records.len(), 3);
+
+    let mut store = HistoryStore::in_memory();
+    store.append_runs(&cold.run_records).unwrap();
+    let index = store.index();
+    let tb = testbeds::didclab();
+    let warm_kinds: Vec<AlgorithmKind> = (0..3u64)
+        .map(|i| {
+            let fp = WorkloadFingerprint::of(&standard::medium_dataset(11 + i));
+            let q = Query::on_testbed(&tb, fp, i as u32).with_algorithm("history");
+            let warm = index
+                .confident_warm_start(&q)
+                .expect("a store of identical workloads must answer confidently");
+            AlgorithmKind::HistoryTuned(Some(warm))
+        })
+        .collect();
+    let warm = run_fleet(&fleet_cfg(&warm_kinds));
+    assert!(warm.completed, "warm run must finish");
+
+    // Headline: strictly fewer joules at equal-or-better goodput.
+    let cold_j = cold.client_energy.as_joules();
+    let warm_j = warm.client_energy.as_joules();
+    assert!(
+        warm_j < cold_j,
+        "warm replay must consume strictly fewer joules: {warm_j:.0} vs {cold_j:.0}"
+    );
+    assert!(
+        goodput(&warm) >= goodput(&cold),
+        "warm replay must not lose aggregate goodput: {} vs {}",
+        goodput(&warm),
+        goodput(&cold)
+    );
+    // Same bytes either way — the win is makespan/energy, not volume.
+    assert!((warm.moved.as_f64() - cold.moved.as_f64()).abs() < 1.0);
+}
+
+#[test]
+fn learned_placement_runs_end_to_end_with_recorded_history() {
+    // Seed the store from a round-robin run that exercises both hosts,
+    // then dispatch the same workload under learned placement.
+    let hosts = || {
+        vec![
+            HostSpec::new("efficient", testbeds::cloudlab()),
+            HostSpec::new("legacy", testbeds::didclab()),
+        ]
+    };
+    let sessions = |seed0: u64| -> Vec<TenantSpec> {
+        (0..4u64)
+            .map(|i| {
+                TenantSpec::new(
+                    format!("session-{i}"),
+                    standard::medium_dataset(seed0 + i),
+                    AlgorithmKind::MaxThroughput,
+                )
+                .arriving_at(SimTime::from_secs(180.0 * i as f64))
+            })
+            .collect()
+    };
+    let seed_run = run_dispatcher(
+        &DispatcherConfig::new(hosts(), PlacementKind::RoundRobin)
+            .with_sessions(sessions(100))
+            .with_seed(17),
+    );
+    assert!(seed_run.fleet.completed);
+    let mut store = HistoryStore::in_memory();
+    store.append_runs(&seed_run.fleet.run_records).unwrap();
+    store.append_dispatches(&seed_run.decisions).unwrap();
+    assert_eq!(store.stats().runs, 4);
+    assert_eq!(store.stats().dispatches, 4);
+
+    let learned = run_dispatcher(
+        &DispatcherConfig::new(hosts(), PlacementKind::Learned)
+            .with_sessions(sessions(100))
+            .with_seed(17)
+            .with_history(store.index()),
+    );
+    assert!(learned.fleet.completed);
+    assert!(learned.unplaced.is_empty());
+    // The decisions carry the observed costs the blend used, and with
+    // history from both hosts the efficient one must win every spaced
+    // placement (it wins on both the model and the observed term).
+    for d in &learned.decisions {
+        assert!(
+            d.scores.iter().any(|s| s.learned_j_per_byte.is_some()),
+            "learned placement must surface observed costs in telemetry"
+        );
+        assert_eq!(d.host.as_deref(), Some("efficient"));
+    }
+    // And it never does worse than the model-only score on energy here.
+    let me_run = run_dispatcher(
+        &DispatcherConfig::new(hosts(), PlacementKind::MarginalEnergy)
+            .with_sessions(sessions(100))
+            .with_seed(17),
+    );
+    assert!(
+        learned.fleet.client_energy.as_joules()
+            <= me_run.fleet.client_energy.as_joules() + 1e-6,
+        "learned placement must not regress marginal energy on this fleet"
+    );
+}
