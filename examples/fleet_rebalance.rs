@@ -1,0 +1,121 @@
+//! Fleet rebalancer: rescue a session stranded on an expensive host.
+//!
+//!     cargo run --release --example fleet_rebalance
+//!
+//! A hot-spot script: a short session takes the efficient host's only
+//! slot, so the long session arriving moments later is admitted on the
+//! legacy (Bloomfield, wall-metered) host — the placement the dispatcher
+//! would never pick on an empty fleet. Mid-run the fleet power cap
+//! tightens. Three rebalance policies are compared:
+//!
+//! * `off`           — the stranded session serves out on the legacy host;
+//! * `cap-pressure`  — the squeeze forces a move as soon as the efficient
+//!                     slot frees (sheds projected watts to satisfy the cap);
+//! * `marginal-delta`— the move fires on energy grounds alone, cap or not.
+//!
+//! Every move pays a real price: streams drain, a handoff delay passes,
+//! and the remaining bytes re-enter slow start on the target.
+
+use greendt::config::testbeds;
+use greendt::coordinator::{AlgorithmKind, PlacementKind};
+use greendt::dataset::standard;
+use greendt::metrics::Table;
+use greendt::rebalance::{RebalanceConfig, RebalancePolicyKind};
+use greendt::sim::dispatcher::{
+    run_dispatcher, DispatchOutcome, DispatcherConfig, HostSpec, SessionSpec,
+};
+use greendt::units::{Power, Rate, SimTime};
+
+fn base_cfg() -> DispatcherConfig {
+    let hosts = vec![
+        HostSpec::new("efficient", testbeds::cloudlab()).with_max_sessions(1),
+        HostSpec::new("legacy", testbeds::didclab()).with_max_sessions(1),
+    ];
+    let sessions = vec![
+        SessionSpec::new("short", standard::medium_dataset(11), AlgorithmKind::MaxThroughput),
+        SessionSpec::new("long", standard::large_dataset(12), AlgorithmKind::MaxThroughput)
+            .arriving_at(SimTime::from_secs(5.0)),
+    ];
+    DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+        .with_sessions(sessions)
+        .with_seed(42)
+}
+
+fn run_policy(policy: RebalancePolicyKind, cap: Power) -> DispatchOutcome {
+    let mut cfg = base_cfg().with_cap_event(SimTime::from_secs(50.0), Some(cap));
+    cfg.rebalance = RebalanceConfig::new(policy);
+    run_dispatcher(&cfg)
+}
+
+fn main() {
+    println!("== fleet_rebalance: a stranded session, three rebalance policies ==\n");
+
+    // Size the squeeze from the fleet's own projections: between the
+    // "long stays on legacy" and "long moved to efficient" steady states.
+    let probe = run_dispatcher(&base_cfg());
+    assert!(probe.fleet.completed, "probe run must finish");
+    let first = &probe.decisions[0];
+    let eff = first.scores.iter().find(|s| s.host == "efficient").unwrap();
+    let leg = first.scores.iter().find(|s| s.host == "legacy").unwrap();
+    let cap = Power::from_watts(
+        0.5 * (eff.current_power_w + leg.projected_power_w)
+            + 0.5 * (eff.projected_power_w + leg.current_power_w),
+    );
+    println!(
+        "power cap tightens to {cap} at t=50 s (stranded projection {:.1} W, \
+         post-move projection {:.1} W)\n",
+        eff.current_power_w + leg.projected_power_w,
+        eff.projected_power_w + leg.current_power_w,
+    );
+
+    let mut table = Table::new(
+        "rebalance policies compared",
+        &["rebalance", "fleet energy", "makespan", "agg goodput", "moves", "on legacy"],
+    );
+    for policy in [
+        RebalancePolicyKind::Off,
+        RebalancePolicyKind::CapPressure,
+        RebalancePolicyKind::MarginalEnergyDelta,
+    ] {
+        let out = run_policy(policy, cap);
+        let fleet = &out.fleet;
+        assert!(fleet.completed, "{} run did not finish", policy.id());
+        let legacy_bytes: f64 = fleet
+            .tenants
+            .iter()
+            .filter(|t| t.host == "legacy")
+            .map(|t| t.moved.as_f64())
+            .sum();
+        table.push_row(vec![
+            policy.id().to_string(),
+            format!("{}", fleet.client_energy),
+            format!("{}", fleet.duration),
+            format!("{}", Rate::average(fleet.moved, fleet.duration)),
+            out.migrations.len().to_string(),
+            format!("{:.1} GB", legacy_bytes / 1e9),
+        ]);
+        for m in &out.migrations {
+            println!(
+                "{}: t={:.1}s  {} {} -> {} ({:.1} GB done, {:.1} GB re-admitted, \
+                 drain {:.0} s, est. saving {:.0} J vs cost {:.0} J)",
+                policy.id(),
+                m.t_secs,
+                m.session,
+                m.from,
+                m.to,
+                m.moved_bytes / 1e9,
+                m.remaining_bytes / 1e9,
+                m.drain_secs,
+                m.est_benefit_j,
+                m.est_cost_j,
+            );
+        }
+    }
+    println!("\n{}", table.to_markdown());
+    println!(
+        "a migration is never free — the drain delay and slow-start re-ramp are\n\
+         simulated — but serving the remaining bytes on the efficient host repays\n\
+         the move many times over, and the cap squeeze is satisfied by shedding\n\
+         the legacy host's marginal draw instead of queueing future work."
+    );
+}

@@ -112,6 +112,7 @@ fn main() {
             projected_power_w: 30.0 + ((i * 7) % 13) as f64,
             projected_session_bps: 40e6 + (i as f64) * 5e6,
             projected_fleet_power_w: 400.0 + i as f64,
+            queue_delay_j_per_byte: if i % 2 == 0 { 0.0 } else { 2e-8 },
             learned_j_per_byte: if i % 3 == 0 { Some(1e-7 + i as f64 * 1e-9) } else { None },
             learned_weight: if i % 3 == 0 { 0.6 } else { 0.0 },
         })

@@ -1,0 +1,124 @@
+//! Rebalancer bench: decision cost at fleet scale plus the end-to-end
+//! price of running a rebalancing dispatcher, written to
+//! `BENCH_rebalance.json` (the committed seed carries the schema; CI
+//! regenerates and uploads the file next to `BENCH_hotpath.json`).
+//!
+//!     cargo bench --bench bench_rebalance
+//!
+//! Micro: `Rebalancer::propose` over a synthetic 16-host / 128-session
+//! snapshot — what every segment boundary pays while a policy is active —
+//! and the `weighted_caps` split. Macro: the hot-spot migration scenario
+//! end-to-end with the rebalancer off vs on (`marginal-delta`), so the
+//! decision layer's wall-clock overhead and the migration machinery are
+//! both on the record.
+
+use greendt::benchkit::{bench, time_once, BenchReport};
+use greendt::config::testbeds;
+use greendt::coordinator::fleet::weighted_caps;
+use greendt::coordinator::{AlgorithmKind, PlacementKind};
+use greendt::dataset::standard;
+use greendt::rebalance::{
+    HostView, RebalanceConfig, RebalancePolicyKind, Rebalancer, SessionView,
+};
+use greendt::sim::dispatcher::{run_dispatcher, DispatcherConfig, HostSpec, SessionSpec};
+use greendt::units::SimTime;
+
+/// A 16-host fleet snapshot with 8 sessions per host and mild
+/// heterogeneity, so proposals must actually compare candidates.
+fn synthetic_views() -> Vec<HostView> {
+    (0..16usize)
+        .map(|i| {
+            let active = 8u32;
+            let idle = 15.0 + i as f64;
+            let per_session = 4.0 + ((i * 5) % 11) as f64;
+            HostView {
+                host: i,
+                active,
+                free_slots: if i % 4 == 0 { 0 } else { 4 },
+                idle_power_w: idle,
+                power_now_w: idle + per_session * active as f64,
+                power_minus_one_w: idle + per_session * (active - 1) as f64,
+                power_plus_one_w: idle + per_session * (active + 1) as f64,
+                session_bps_now: 40e6 + (i as f64) * 2e6,
+                session_bps_plus_one: 36e6 + (i as f64) * 2e6,
+                session_bps_alone: 110e6,
+                rtt_s: 0.036,
+                sessions: (0..active)
+                    .map(|s| SessionView {
+                        tenant: s as usize,
+                        name: format!("h{i}-s{s}"),
+                        remaining_bytes: 1e9 + (s as f64) * 3e9,
+                    })
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+/// The `fleet_rebalance` example's hot-spot scenario (a stranded long
+/// session the rebalancer rescues), as the macro workload.
+fn hotspot(policy: RebalancePolicyKind) -> DispatcherConfig {
+    let hosts = vec![
+        HostSpec::new("efficient", testbeds::cloudlab()).with_max_sessions(1),
+        HostSpec::new("legacy", testbeds::didclab()).with_max_sessions(1),
+    ];
+    let sessions = vec![
+        SessionSpec::new("short", standard::medium_dataset(11), AlgorithmKind::MaxThroughput),
+        SessionSpec::new("long", standard::medium_dataset(12), AlgorithmKind::MaxThroughput)
+            .arriving_at(SimTime::from_secs(5.0)),
+    ];
+    let mut cfg = DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+        .with_sessions(sessions)
+        .with_seed(42);
+    cfg.rebalance = RebalanceConfig::new(policy);
+    cfg
+}
+
+fn main() {
+    println!("== bench_rebalance: fleet rebalancer decision + migration cost ==\n");
+    let mut reports: Vec<BenchReport> = Vec::new();
+
+    // Micro: one proposal scan per policy over the 16-host snapshot.
+    let views = synthetic_views();
+    for policy in [RebalancePolicyKind::CapPressure, RebalancePolicyKind::MarginalEnergyDelta] {
+        let r = Rebalancer::new(RebalanceConfig::new(policy));
+        let cap = Some(500.0);
+        reports.push(bench(
+            &format!("rebalance propose/{}/16 hosts x 8", policy.id()),
+            200,
+            20_000,
+            || r.propose(&views, cap),
+        ));
+    }
+
+    // Micro: the weighted channel split at a plausible tenant count.
+    let remaining: Vec<f64> = (0..64).map(|i| 1e9 + (i as f64) * 7e8).collect();
+    let caps_bench = bench("weighted_caps/64 tenants", 200, 50_000, || {
+        weighted_caps(48, &remaining)
+    });
+    reports.push(caps_bench);
+
+    // Macro: the hot-spot scenario end-to-end, rebalancer off vs on.
+    let (off, off_s) = time_once("run_dispatcher/hotspot/rebalance off", || {
+        run_dispatcher(&hotspot(RebalancePolicyKind::Off))
+    });
+    assert!(off.fleet.completed && off.migrations.is_empty());
+    let (on, on_s) = time_once("run_dispatcher/hotspot/marginal-delta", || {
+        run_dispatcher(&hotspot(RebalancePolicyKind::MarginalEnergyDelta))
+    });
+    assert!(on.fleet.completed, "rebalancing run must finish");
+
+    // Machine-readable record, next to BENCH_hotpath.json.
+    let micro: Vec<String> = reports.iter().map(|r| r.to_json()).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"rebalance\",\n  \"measured\": true,\n  \
+         \"macro\": {{\n    \"off_wall_seconds\": {},\n    \"on_wall_seconds\": {},\n    \
+         \"migrations\": {}\n  }},\n  \"micro\": [{}]\n}}\n",
+        off_s,
+        on_s,
+        on.migrations.len(),
+        micro.join(",")
+    );
+    std::fs::write("BENCH_rebalance.json", json).expect("writing BENCH_rebalance.json");
+    println!("\nbench report written to BENCH_rebalance.json");
+}

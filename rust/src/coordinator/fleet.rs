@@ -25,8 +25,16 @@ use crate::sim::FleetView;
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FleetDirective {
     /// Cap each active session's channel count (None = leave tenants
-    /// alone). Enforced after every tenant tuning step.
+    /// alone). Enforced after every tenant tuning step, and applied to
+    /// sessions admitted between arbitrations.
     pub per_session_channel_cap: Option<u32>,
+    /// Total channel budget to split across active sessions in
+    /// proportion to their *remaining bytes* (None = no weighted split).
+    /// When set, the driver derives per-tenant caps via
+    /// [`weighted_caps`] at each arbitration instead of the uniform
+    /// `per_session_channel_cap`, which then only covers sessions
+    /// admitted before the next arbitration.
+    pub weighted_channel_budget: Option<u32>,
 }
 
 /// A cross-session arbitration policy, invoked once per fleet interval.
@@ -45,6 +53,57 @@ pub trait FleetPolicy: std::fmt::Debug {
 /// Equal split of a total channel budget over the active sessions.
 fn fair_cap(max_total_channels: u32, active_sessions: u32) -> u32 {
     (max_total_channels / active_sessions.max(1)).max(1)
+}
+
+/// Split a total channel budget over sessions in proportion to their
+/// remaining bytes: largest-remainder rounding of `weight_i × total`,
+/// floored at one channel per session (matching [`fair_cap`]'s floor —
+/// with a budget below one-per-session the sum exceeds the budget rather
+/// than starving anyone). All-zero remainders fall back to the equal
+/// split. Deterministic: remainder ties break to the lower index.
+pub fn weighted_caps(total: u32, remaining_bytes: &[f64]) -> Vec<u32> {
+    let n = remaining_bytes.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let sum: f64 = remaining_bytes.iter().map(|r| r.max(0.0)).sum();
+    if sum <= 0.0 {
+        return vec![fair_cap(total, n as u32); n];
+    }
+    let total = total.max(1);
+    let mut caps: Vec<u32> = Vec::with_capacity(n);
+    let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(n);
+    let mut assigned = 0u32;
+    for (i, r) in remaining_bytes.iter().enumerate() {
+        let share = r.max(0.0) / sum * total as f64;
+        let floor = (share.floor() as u32).max(1);
+        fracs.push((i, share - share.floor()));
+        caps.push(floor);
+        assigned += floor;
+    }
+    // Hand out what largest-remainder rounding still owes; never claw
+    // back below the one-channel floor.
+    fracs.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    let mut fi = 0;
+    while assigned < total {
+        caps[fracs[fi % n].0] += 1;
+        assigned += 1;
+        fi += 1;
+    }
+    while assigned > total {
+        // Trim the largest cap above the floor (ties to the lower index).
+        match (0..n)
+            .filter(|&i| caps[i] > 1)
+            .max_by(|&a, &b| caps[a].cmp(&caps[b]).then_with(|| b.cmp(&a)))
+        {
+            Some(k) => {
+                caps[k] -= 1;
+                assigned -= 1;
+            }
+            None => break, // everyone at the floor: accept the overshoot
+        }
+    }
+    caps
 }
 
 /// Static reference policy: the host runs the performance governor and
@@ -70,6 +129,41 @@ impl FleetPolicy for FairShare {
                 self.max_total_channels,
                 view.active_sessions,
             )),
+            weighted_channel_budget: None,
+        }
+    }
+}
+
+/// [`FairShare`] with remaining-bytes-weighted channel budgets instead of
+/// the equal split: the host still runs the performance governor, but the
+/// arbitration hands each session a slice of the total channel budget
+/// proportional to its remaining bytes (see [`weighted_caps`]) — heavy
+/// tenants hold the concurrency, nearly-done tenants release it early.
+#[derive(Debug, Clone)]
+pub struct WeightedShare {
+    /// Total channel budget split across active sessions by remaining
+    /// bytes.
+    pub max_total_channels: u32,
+}
+
+impl FleetPolicy for WeightedShare {
+    fn name(&self) -> &'static str {
+        "weighted-share"
+    }
+
+    fn initial_cpu(&self, spec: &CpuSpec) -> CpuState {
+        CpuState::performance(spec.clone())
+    }
+
+    fn arbitrate(&mut self, view: &FleetView, _client: &mut CpuState) -> FleetDirective {
+        FleetDirective {
+            // Equal-split fallback for sessions admitted before the next
+            // arbitration recomputes the weighted slices.
+            per_session_channel_cap: Some(fair_cap(
+                self.max_total_channels,
+                view.active_sessions,
+            )),
+            weighted_channel_budget: Some(self.max_total_channels),
         }
     }
 }
@@ -114,6 +208,7 @@ impl FleetPolicy for MinEnergyFleet {
                 self.max_total_channels,
                 view.active_sessions,
             )),
+            weighted_channel_budget: None,
         }
     }
 }
@@ -123,6 +218,9 @@ impl FleetPolicy for MinEnergyFleet {
 pub enum FleetPolicyKind {
     /// Static performance governor + equal channel split.
     FairShare,
+    /// Static performance governor + remaining-bytes-weighted channel
+    /// split ([`WeightedShare`]).
+    WeightedShare,
     /// Aggregate-load Algorithm 3 + equal channel split.
     MinEnergyFleet,
 }
@@ -132,6 +230,7 @@ impl FleetPolicyKind {
     pub fn id(&self) -> &'static str {
         match self {
             FleetPolicyKind::FairShare => "fairshare",
+            FleetPolicyKind::WeightedShare => "weightedshare",
             FleetPolicyKind::MinEnergyFleet => "minenergy",
         }
     }
@@ -140,6 +239,9 @@ impl FleetPolicyKind {
     pub fn parse(id: &str) -> Option<FleetPolicyKind> {
         Some(match id {
             "fairshare" | "fair-share" => FleetPolicyKind::FairShare,
+            "weightedshare" | "weighted-share" | "weighted" => {
+                FleetPolicyKind::WeightedShare
+            }
             "minenergy" | "min-energy" | "min-energy-fleet" => {
                 FleetPolicyKind::MinEnergyFleet
             }
@@ -153,6 +255,9 @@ impl FleetPolicyKind {
         match self {
             FleetPolicyKind::FairShare => {
                 Box::new(FairShare { max_total_channels: params.max_ch })
+            }
+            FleetPolicyKind::WeightedShare => {
+                Box::new(WeightedShare { max_total_channels: params.max_ch })
             }
             FleetPolicyKind::MinEnergyFleet => Box::new(MinEnergyFleet {
                 thresholds: params.thresholds,
@@ -236,10 +341,56 @@ mod tests {
 
     #[test]
     fn ids_round_trip() {
-        for kind in [FleetPolicyKind::FairShare, FleetPolicyKind::MinEnergyFleet] {
+        for kind in [
+            FleetPolicyKind::FairShare,
+            FleetPolicyKind::WeightedShare,
+            FleetPolicyKind::MinEnergyFleet,
+        ] {
             assert_eq!(FleetPolicyKind::parse(kind.id()), Some(kind));
         }
+        assert_eq!(
+            FleetPolicyKind::parse("weighted"),
+            Some(FleetPolicyKind::WeightedShare)
+        );
         assert!(FleetPolicyKind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn weighted_caps_follow_remaining_bytes() {
+        // 3:1 remaining split of a 48-channel budget → 36/12.
+        let caps = weighted_caps(48, &[30e9, 10e9]);
+        assert_eq!(caps, vec![36, 12]);
+        assert_eq!(caps.iter().sum::<u32>(), 48, "budget conserved");
+        // A nearly-done tenant keeps the one-channel floor.
+        let caps = weighted_caps(48, &[47.9e9, 0.1e9]);
+        assert_eq!(caps.iter().sum::<u32>(), 48);
+        assert!(caps[1] >= 1 && caps[0] > 40, "floor holds, heavy tenant dominates");
+        // All-zero remainders fall back to the equal split.
+        assert_eq!(weighted_caps(48, &[0.0, 0.0, 0.0]), vec![16, 16, 16]);
+        // Budget below one-per-session floors at 1 each (like fair_cap).
+        assert_eq!(weighted_caps(2, &[1e9, 1e9, 1e9]), vec![1, 1, 1]);
+        assert_eq!(weighted_caps(5, &[]), Vec::<u32>::new());
+        // Deterministic under exact ties.
+        assert_eq!(weighted_caps(7, &[1e9, 1e9]), weighted_caps(7, &[1e9, 1e9]));
+        assert_eq!(weighted_caps(7, &[1e9, 1e9]).iter().sum::<u32>(), 7);
+    }
+
+    #[test]
+    fn weighted_share_hands_out_the_budget_and_the_fallback_cap() {
+        let mut p = WeightedShare { max_total_channels: 48 };
+        let cpu0 = p.initial_cpu(&broadwell_client());
+        assert!(cpu0.at_max_cores() && cpu0.at_max_freq());
+        let mut cpu = cpu0.clone();
+        let d = p.arbitrate(&view(0.9, 4), &mut cpu);
+        assert_eq!(d.weighted_channel_budget, Some(48));
+        assert_eq!(d.per_session_channel_cap, Some(12), "equal-split fallback");
+        assert!(cpu.at_max_cores() && cpu.at_max_freq(), "never touches the CPU");
+        // The equal-split policies never request a weighted split.
+        let mut fair = FairShare { max_total_channels: 48 };
+        assert_eq!(
+            fair.arbitrate(&view(0.9, 4), &mut cpu).weighted_channel_budget,
+            None
+        );
     }
 
     #[test]

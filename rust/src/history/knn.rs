@@ -59,6 +59,9 @@ struct Entry {
     host: String,
     op: WarmStart,
     j_per_byte: f64,
+    /// The marginal J/B the dispatcher estimated at this run's admission
+    /// (v2 records; `None` on v1 records and single-host runs).
+    marginal_j_per_byte: Option<f64>,
 }
 
 /// The index itself (see the module docs). Cloneable so a
@@ -99,6 +102,7 @@ impl KnnIndex {
                     channels: r.channels,
                 },
                 j_per_byte: r.j_per_byte,
+                marginal_j_per_byte: r.admission_marginal_jpb.filter(|m| m.is_finite()),
             })
             .collect();
         KnnIndex { k: k.max(1), entries }
@@ -112,6 +116,16 @@ impl KnnIndex {
     /// True when nothing was indexed.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
+    }
+
+    /// True when at least one indexed run carries the v2 admission
+    /// marginal. Callers that blend observations across hosts pick one
+    /// scale per decision with this: marginal-only when available,
+    /// full-cost otherwise — never a mix (a v1-era host would otherwise
+    /// be compared on its full attributed bill against a v2 host's
+    /// marginal, inflating it by the fixed costs).
+    pub fn has_marginal_observations(&self) -> bool {
+        self.entries.iter().any(|e| e.marginal_j_per_byte.is_some())
     }
 
     /// Distinct host names in the index, sorted.
@@ -174,6 +188,22 @@ impl KnnIndex {
         neighbors.iter().map(|(d, _)| 1.0 / (1.0 + d)).sum::<f64>() / neighbors.len() as f64
     }
 
+    /// Distance-weighted mean (weight `1/(ε + d)`) of one per-entry value
+    /// over a neighbour set — the single weighting kernel behind both
+    /// cost observations, so the marginal and full-cost answers can
+    /// never drift apart in how they average. Callers guarantee a
+    /// non-empty set.
+    fn weighted_mean(neighbors: &[(f64, &Entry)], value: impl Fn(&Entry) -> f64) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (d, e) in neighbors {
+            let w = 1.0 / (1e-6 + d);
+            num += w * value(e);
+            den += w;
+        }
+        num / den
+    }
+
     /// Best known operating point for a workload like `q`, with its
     /// confidence. `None` only when the index is empty.
     ///
@@ -218,14 +248,28 @@ impl KnnIndex {
         if neighbors.is_empty() {
             return None;
         }
-        let mut num = 0.0;
-        let mut den = 0.0;
-        for (d, e) in &neighbors {
-            let w = 1.0 / (1e-6 + d);
-            num += w * e.j_per_byte;
-            den += w;
+        let mean = Self::weighted_mean(&neighbors, |e| e.j_per_byte);
+        Some((mean, Self::confidence(&neighbors)))
+    }
+
+    /// Like [`Self::observed_j_per_byte`] but over the *marginal* J/B
+    /// recorded at admission (schema v2) — the scale the dispatcher's
+    /// model score lives on, so `Learned` placement can blend like with
+    /// like. Only neighbours that carry the field participate (v1
+    /// records do not); `None` when no neighbour from `host` does, in
+    /// which case callers fall back to the full-cost observation.
+    pub fn observed_marginal_j_per_byte(&self, host: &str, q: &Query) -> Option<(f64, f64)> {
+        let neighbors: Vec<(f64, &Entry)> = self
+            .neighbors(q, Some(host))
+            .into_iter()
+            .filter(|(_, e)| e.marginal_j_per_byte.is_some())
+            .collect();
+        if neighbors.is_empty() {
+            return None;
         }
-        Some((num / den, Self::confidence(&neighbors)))
+        let mean =
+            Self::weighted_mean(&neighbors, |e| e.marginal_j_per_byte.expect("filtered above"));
+        Some((mean, Self::confidence(&neighbors)))
     }
 }
 
@@ -268,6 +312,7 @@ mod tests {
             moved_bytes: total_gb * 1e9,
             duration_s: 100.0,
             completed: true,
+            admission_marginal_jpb: None,
             traj: Vec::new(),
         }
     }
@@ -364,6 +409,33 @@ mod tests {
         assert!((eff - 2e-8).abs() < 1e-12);
         assert!((leg - 8e-8).abs() < 1e-12);
         assert!(idx.observed_j_per_byte("nope", &query(10.0)).is_none());
+    }
+
+    #[test]
+    fn marginal_observations_require_the_v2_field() {
+        // v1-style records (no admission marginal) answer only the
+        // full-cost question; mixed stores answer the marginal question
+        // from the records that carry it.
+        let mut a = record("h0", "DIDCLab", 10.0, (2, 1, 9), 4e-8);
+        let b = record("h0", "DIDCLab", 10.0, (2, 1, 9), 6e-8);
+        let idx = KnnIndex::build(&[a.clone(), b.clone()]);
+        assert!(!idx.has_marginal_observations(), "pure v1-era store");
+        assert!(idx.observed_j_per_byte("h0", &query(10.0)).is_some());
+        assert!(
+            idx.observed_marginal_j_per_byte("h0", &query(10.0)).is_none(),
+            "no record carries the admission marginal"
+        );
+        a.admission_marginal_jpb = Some(1.5e-8);
+        let idx = KnnIndex::build(&[a, b]);
+        assert!(idx.has_marginal_observations());
+        let (m, conf) = idx
+            .observed_marginal_j_per_byte("h0", &query(10.0))
+            .expect("one record carries it");
+        assert!((m - 1.5e-8).abs() < 1e-14, "only the carrying record votes: {m}");
+        assert!(conf > 0.0);
+        // Full-cost observation is unchanged by the marginal field.
+        let (jpb, _) = idx.observed_j_per_byte("h0", &query(10.0)).unwrap();
+        assert!(jpb > 4e-8 && jpb < 6e-8);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The versioned on-disk record schema (JSONL, one record per line).
 //!
-//! Two record kinds share the stream, discriminated by `"kind"`:
+//! Three record kinds share the stream, discriminated by `"kind"`:
 //!
 //! * `"run"` — one [`RunRecord`] per *completed* session/tenant: the
 //!   workload fingerprint, the path, the operating point the run settled
@@ -8,19 +8,33 @@
 //! * `"dispatch"` — one line per dispatcher placement decision
 //!   ([`DispatchRecord`]), written for offline mining; the store counts
 //!   and preserves them but does not parse them back into structs.
+//! * `"migration"` — one line per rebalancer move
+//!   ([`MigrationRecord`](crate::sim::MigrationRecord)), write-mostly
+//!   like dispatch lines.
 //!
-//! Every line carries `"v"` ([`FORMAT_VERSION`]). Loaders skip lines with
-//! an unknown version or kind (counting them), so an old binary reading a
-//! newer store degrades gracefully instead of failing — the
-//! forward-compatibility contract pinned by
-//! `rust/tests/history_learning.rs`.
+//! Every line carries `"v"` ([`FORMAT_VERSION`]). Loaders accept every
+//! version from [`MIN_SUPPORTED_VERSION`] up (missing newer optional
+//! fields default) and skip lines with an *unknown* version or kind
+//! (counting them), so an old binary reading a newer store degrades
+//! gracefully instead of failing — the forward-compatibility contract
+//! pinned by `rust/tests/history_learning.rs`.
+//!
+//! **v1 → v2**: run records gained `"adm_jpb"` — the dispatcher's
+//! *marginal* J/B estimate for the admitting host at admission time
+//! (`null`/absent on single-host runs). It gives learned placement a
+//! scale-consistent observation to blend with the marginal model score,
+//! instead of the full-cost attributed bill v1 could only offer.
 
 use super::features::WorkloadFingerprint;
 use super::json::{self, Json};
-use crate::sim::DispatchRecord;
+use crate::sim::{DispatchRecord, MigrationRecord};
 
 /// Version written into every line this build produces.
-pub const FORMAT_VERSION: u32 = 1;
+pub const FORMAT_VERSION: u32 = 2;
+
+/// Oldest line version this build still parses (older *known* versions
+/// simply leave their missing optional fields unset).
+pub const MIN_SUPPORTED_VERSION: u32 = 1;
 
 /// One sample of a session's `(cores, P-state, channels)` trajectory
 /// (recorded at tuning timeouts when the driver keeps timelines).
@@ -76,6 +90,12 @@ pub struct RunRecord {
     pub duration_s: f64,
     /// Whether the transfer finished before the run's time cap.
     pub completed: bool,
+    /// The dispatcher's *marginal* J/B estimate for the admitting host
+    /// at admission time (the `MarginalEnergy` model score) — `None` on
+    /// single-host fleets and on v1 records. Scale-consistent with the
+    /// placement model, unlike [`Self::j_per_byte`], which is the
+    /// session's full attributed bill.
+    pub admission_marginal_jpb: Option<f64>,
     /// Tuning-timeout trajectory (empty unless the driver recorded
     /// timelines).
     pub traj: Vec<TrajPoint>,
@@ -106,7 +126,7 @@ impl RunRecord {
                 "\"contention\":{},\"cores\":{},\"pstate\":{},\"channels\":{},",
                 "\"peak_channels\":{},\"goodput_bps\":{},\"joules\":{},",
                 "\"j_per_byte\":{},\"moved_bytes\":{},\"duration_s\":{},",
-                "\"completed\":{},\"traj\":[{}]}}"
+                "\"completed\":{},\"adm_jpb\":{},\"traj\":[{}]}}"
             ),
             FORMAT_VERSION,
             json::escape(&self.session),
@@ -132,6 +152,10 @@ impl RunRecord {
             json::num(self.moved_bytes),
             json::num(self.duration_s),
             self.completed,
+            match self.admission_marginal_jpb {
+                Some(m) => json::num(m),
+                None => "null".to_string(),
+            },
             traj.join(",")
         )
     }
@@ -178,6 +202,8 @@ impl RunRecord {
             moved_bytes: f("moved_bytes")?,
             duration_s: f("duration_s")?,
             completed: v.get("completed").and_then(Json::as_bool)?,
+            // v2 optional: absent (v1) and null both mean "not recorded".
+            admission_marginal_jpb: f("adm_jpb"),
             traj,
         })
     }
@@ -197,7 +223,7 @@ pub fn dispatch_to_json_line(d: &DispatchRecord) -> String {
             format!(
                 concat!(
                     "{{\"host\":\"{}\",\"active\":{},\"cur_w\":{},\"proj_w\":{},",
-                    "\"bps\":{},\"jpb\":{},\"learned_jpb\":{}}}"
+                    "\"bps\":{},\"jpb\":{},\"queue_jpb\":{},\"learned_jpb\":{}}}"
                 ),
                 json::escape(&s.host),
                 s.active_sessions,
@@ -205,6 +231,7 @@ pub fn dispatch_to_json_line(d: &DispatchRecord) -> String {
                 json::num(s.projected_power_w),
                 json::num(s.projected_session_bps),
                 json::num(s.marginal_j_per_byte),
+                json::num(s.queue_delay_j_per_byte),
                 learned
             )
         })
@@ -229,6 +256,35 @@ pub fn dispatch_to_json_line(d: &DispatchRecord) -> String {
         },
         json::num(d.projected_fleet_power_w),
         scores.join(",")
+    )
+}
+
+/// Serialize one rebalancer migration to its JSONL line (no trailing
+/// newline). Write-mostly like dispatch lines: the store preserves and
+/// counts them for offline mining, nothing parses them back in-process.
+pub fn migration_to_json_line(m: &MigrationRecord) -> String {
+    format!(
+        concat!(
+            "{{\"v\":{},\"kind\":\"migration\",\"t\":{},\"session\":\"{}\",",
+            "\"from_host\":{},\"from\":\"{}\",\"to_host\":{},\"to\":\"{}\",",
+            "\"moved_bytes\":{},\"remaining_bytes\":{},\"drain_s\":{},",
+            "\"resume_at\":{},\"est_benefit_j\":{},\"est_cost_j\":{},",
+            "\"policy\":\"{}\"}}"
+        ),
+        FORMAT_VERSION,
+        json::num(m.t_secs),
+        json::escape(&m.session),
+        m.from_host,
+        json::escape(&m.from),
+        m.to_host,
+        json::escape(&m.to),
+        json::num(m.moved_bytes),
+        json::num(m.remaining_bytes),
+        json::num(m.drain_secs),
+        json::num(m.resume_at_secs),
+        json::num(m.est_benefit_j),
+        json::num(m.est_cost_j),
+        json::escape(m.policy),
     )
 }
 
@@ -261,6 +317,7 @@ pub(crate) fn sample_record() -> RunRecord {
         moved_bytes: 11.7e9,
         duration_s: 108.2,
         completed: true,
+        admission_marginal_jpb: Some(3.2e-7),
         traj: vec![
             TrajPoint { t_secs: 3.0, cores: 1, pstate: 0, channels: 6 },
             TrajPoint { t_secs: 6.0, cores: 2, pstate: 0, channels: 12 },
@@ -300,6 +357,58 @@ mod tests {
     }
 
     #[test]
+    fn v1_lines_without_the_marginal_field_still_parse() {
+        // A v1 writer never emitted "adm_jpb": stripping it (and carrying
+        // the old version stamp) must load with the field unset — the
+        // forgiving-loader side of the v2 bump.
+        let mut r = sample();
+        r.admission_marginal_jpb = Some(1.5e-7);
+        let rendered = format!("\"adm_jpb\":{},", crate::history::json::num(1.5e-7));
+        let line = r
+            .to_json_line()
+            .replace(&rendered, "")
+            .replace("\"v\":2,", "\"v\":1,");
+        let v = crate::history::json::parse(&line).expect("stripped line stays valid JSON");
+        let back = RunRecord::from_json(&v).expect("v1 shape must parse");
+        assert_eq!(back.admission_marginal_jpb, None);
+        assert_eq!(back.cores, r.cores);
+        // And an explicit null means the same thing.
+        let nulled = r.to_json_line().replace(&rendered, "\"adm_jpb\":null,");
+        let v = crate::history::json::parse(&nulled).unwrap();
+        assert_eq!(RunRecord::from_json(&v).unwrap().admission_marginal_jpb, None);
+    }
+
+    #[test]
+    fn migration_line_is_valid_json() {
+        let m = MigrationRecord {
+            t_secs: 120.5,
+            session: "session-1".to_string(),
+            from_host: 1,
+            from: "legacy".to_string(),
+            to_host: 0,
+            to: "efficient".to_string(),
+            moved_bytes: 9.5e9,
+            remaining_bytes: 18.3e9,
+            drain_secs: 5.0,
+            resume_at_secs: 125.5,
+            est_benefit_j: 4100.0,
+            est_cost_j: 160.0,
+            policy: "cap-pressure",
+        };
+        let v = crate::history::json::parse(&migration_to_json_line(&m)).unwrap();
+        assert_eq!(v.get("v").and_then(Json::as_u32), Some(FORMAT_VERSION));
+        assert_eq!(v.get("kind").and_then(Json::as_str), Some("migration"));
+        assert_eq!(v.get("session").and_then(Json::as_str), Some("session-1"));
+        assert_eq!(v.get("from").and_then(Json::as_str), Some("legacy"));
+        assert_eq!(v.get("to").and_then(Json::as_str), Some("efficient"));
+        assert_eq!(v.get("policy").and_then(Json::as_str), Some("cap-pressure"));
+        let moved = v.get("moved_bytes").and_then(Json::as_f64).unwrap();
+        let rem = v.get("remaining_bytes").and_then(Json::as_f64).unwrap();
+        assert_eq!(moved.to_bits(), 9.5e9f64.to_bits());
+        assert_eq!(rem.to_bits(), 18.3e9f64.to_bits());
+    }
+
+    #[test]
     fn dispatch_line_is_valid_json_with_scores() {
         let d = DispatchRecord {
             t_secs: 12.5,
@@ -315,6 +424,7 @@ mod tests {
                 projected_power_w: 55.0,
                 projected_session_bps: 5e7,
                 marginal_j_per_byte: 3e-7,
+                queue_delay_j_per_byte: 0.0,
                 learned_j_per_byte: None,
             }],
         };

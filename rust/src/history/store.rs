@@ -2,8 +2,9 @@
 //!
 //! One store is one append-only file (or a purely in-memory buffer for
 //! tests and examples): `greendt … --record-history <path>` appends one
-//! [`RunRecord`] line per completed session plus one dispatch line per
-//! placement decision, and `--history <path>` loads the same file back —
+//! [`RunRecord`] line per completed session plus one line per placement
+//! decision and per rebalancer migration, and `--history <path>` loads
+//! the same file back —
 //! across process runs — to warm-start tuning and placement. Loading is
 //! forgiving: lines with an unknown version, unknown kind, or any parse
 //! error are counted in [`HistoryStore::skipped`] and kept verbatim (so
@@ -18,8 +19,8 @@ use anyhow::{bail, Context, Result};
 
 use super::json::{self, Json};
 use super::knn::KnnIndex;
-use super::record::{self, RunRecord, FORMAT_VERSION};
-use crate::sim::DispatchRecord;
+use super::record::{self, RunRecord, FORMAT_VERSION, MIN_SUPPORTED_VERSION};
+use crate::sim::{DispatchRecord, MigrationRecord};
 
 /// Summary counters of one store (printed by `greendt history stats`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -28,6 +29,8 @@ pub struct StoreStats {
     pub runs: usize,
     /// Preserved dispatch-decision lines.
     pub dispatches: usize,
+    /// Preserved rebalancer-migration lines.
+    pub migrations: usize,
     /// Lines skipped on load (unknown version/kind, parse errors).
     pub skipped: usize,
 }
@@ -37,6 +40,7 @@ pub struct StoreStats {
 enum LineKind {
     Run,
     Dispatch,
+    Migration,
     Foreign,
 }
 
@@ -55,11 +59,13 @@ pub struct HistoryStore {
     /// Dispatch lines are preserved verbatim (they are write-mostly
     /// telemetry; nothing in-process parses them back).
     dispatch_lines: Vec<String>,
+    /// Migration lines, preserved verbatim like dispatch lines.
+    migration_lines: Vec<String>,
     /// Lines this build could not interpret (unknown version/kind, parse
     /// errors), preserved verbatim so maintenance operations like
     /// [`Self::prune`] never destroy what a newer build wrote.
     foreign_lines: Vec<String>,
-    /// Append-order journal across the three buffers: `(kind, index into
+    /// Append-order journal across the four buffers: `(kind, index into
     /// that kind's buffer)` per line, so a rewrite reproduces the
     /// original interleaving (offline miners correlate timestamp-less
     /// run lines with decisions by position).
@@ -77,6 +83,7 @@ impl HistoryStore {
             runs: Vec::new(),
             run_lines: Vec::new(),
             dispatch_lines: Vec::new(),
+            migration_lines: Vec::new(),
             foreign_lines: Vec::new(),
             order: Vec::new(),
             loaded: true,
@@ -121,7 +128,8 @@ impl HistoryStore {
                 self.push_foreign(line);
                 continue;
             };
-            if v.get("v").and_then(Json::as_u32) != Some(FORMAT_VERSION) {
+            let version = v.get("v").and_then(Json::as_u32);
+            if !version.is_some_and(|n| (MIN_SUPPORTED_VERSION..=FORMAT_VERSION).contains(&n)) {
                 self.push_foreign(line);
                 continue;
             }
@@ -137,6 +145,10 @@ impl HistoryStore {
                 Some("dispatch") => {
                     self.order.push((LineKind::Dispatch, self.dispatch_lines.len()));
                     self.dispatch_lines.push(line.to_string());
+                }
+                Some("migration") => {
+                    self.order.push((LineKind::Migration, self.migration_lines.len()));
+                    self.migration_lines.push(line.to_string());
                 }
                 _ => self.push_foreign(line),
             }
@@ -201,6 +213,19 @@ impl HistoryStore {
         Ok(decisions.len())
     }
 
+    /// Append rebalancer migrations (write-through when file-backed, one
+    /// file open per batch). Returns how many were appended.
+    pub fn append_migrations(&mut self, migrations: &[MigrationRecord]) -> Result<usize> {
+        let lines: Vec<String> =
+            migrations.iter().map(record::migration_to_json_line).collect();
+        self.write_lines(&lines)?;
+        for line in lines {
+            self.order.push((LineKind::Migration, self.migration_lines.len()));
+            self.migration_lines.push(line);
+        }
+        Ok(migrations.len())
+    }
+
     /// The loaded + appended run records, oldest first.
     pub fn runs(&self) -> &[RunRecord] {
         &self.runs
@@ -209,6 +234,11 @@ impl HistoryStore {
     /// Number of dispatch-decision lines held.
     pub fn dispatch_count(&self) -> usize {
         self.dispatch_lines.len()
+    }
+
+    /// Number of rebalancer-migration lines held.
+    pub fn migration_count(&self) -> usize {
+        self.migration_lines.len()
     }
 
     /// Lines skipped while loading (unknown version/kind or malformed).
@@ -222,6 +252,7 @@ impl HistoryStore {
         StoreStats {
             runs: self.runs.len(),
             dispatches: self.dispatch_lines.len(),
+            migrations: self.migration_lines.len(),
             skipped: self.foreign_lines.len(),
         }
     }
@@ -232,9 +263,9 @@ impl HistoryStore {
         KnnIndex::build(&self.runs)
     }
 
-    /// Keep only the newest `keep` run records and `keep` dispatch lines,
-    /// rewriting the backing file with the surviving lines in their
-    /// original order. Lines this build could not interpret (e.g.
+    /// Keep only the newest `keep` run records, `keep` dispatch lines and
+    /// `keep` migration lines, rewriting the backing file with the
+    /// surviving lines in their original order. Lines this build could not interpret (e.g.
     /// records written by a newer version) are rewritten verbatim, never
     /// dropped — pruning must not destroy what it cannot read; for the
     /// same reason an [`Self::append_only`] handle (which never read the
@@ -248,11 +279,13 @@ impl HistoryStore {
         }
         let drop_runs = self.runs.len().saturating_sub(keep);
         let drop_disp = self.dispatch_lines.len().saturating_sub(keep);
+        let drop_migr = self.migration_lines.len().saturating_sub(keep);
         // Rebuild the buffers through the order journal so the surviving
         // lines keep their original interleaving.
         let mut runs = Vec::with_capacity(self.runs.len() - drop_runs);
         let mut run_lines = Vec::with_capacity(self.runs.len() - drop_runs);
         let mut dispatches = Vec::with_capacity(self.dispatch_lines.len() - drop_disp);
+        let mut migrations = Vec::with_capacity(self.migration_lines.len() - drop_migr);
         let mut foreign = Vec::with_capacity(self.foreign_lines.len());
         let mut order = Vec::with_capacity(self.order.len());
         for &(kind, idx) in &self.order {
@@ -270,6 +303,12 @@ impl HistoryStore {
                         dispatches.push(self.dispatch_lines[idx].clone());
                     }
                 }
+                LineKind::Migration => {
+                    if idx >= drop_migr {
+                        order.push((LineKind::Migration, migrations.len()));
+                        migrations.push(self.migration_lines[idx].clone());
+                    }
+                }
                 LineKind::Foreign => {
                     order.push((LineKind::Foreign, foreign.len()));
                     foreign.push(self.foreign_lines[idx].clone());
@@ -279,6 +318,7 @@ impl HistoryStore {
         self.runs = runs;
         self.run_lines = run_lines;
         self.dispatch_lines = dispatches;
+        self.migration_lines = migrations;
         self.foreign_lines = foreign;
         self.order = order;
         if let Some(path) = &self.path {
@@ -290,6 +330,7 @@ impl HistoryStore {
                 match kind {
                     LineKind::Run => out.push_str(&self.run_lines[idx]),
                     LineKind::Dispatch => out.push_str(&self.dispatch_lines[idx]),
+                    LineKind::Migration => out.push_str(&self.migration_lines[idx]),
                     LineKind::Foreign => out.push_str(&self.foreign_lines[idx]),
                 }
                 out.push('\n');
@@ -305,7 +346,7 @@ impl HistoryStore {
             std::fs::rename(&tmp, path)
                 .with_context(|| format!("replacing history store {}", path.display()))?;
         }
-        Ok(drop_runs + drop_disp)
+        Ok(drop_runs + drop_disp + drop_migr)
     }
 }
 
@@ -335,6 +376,7 @@ mod tests {
                 projected_power_w: 20.0,
                 projected_session_bps: 1e8,
                 marginal_j_per_byte: 1e-7,
+                queue_delay_j_per_byte: 0.0,
                 learned_j_per_byte: Some(2e-7),
             }],
         }
@@ -353,7 +395,7 @@ mod tests {
         store.append_dispatches(&[sample_dispatch()]).unwrap();
 
         let back = HistoryStore::open(&path).unwrap();
-        assert_eq!(back.stats(), StoreStats { runs: 2, dispatches: 1, skipped: 0 });
+        assert_eq!(back.stats(), StoreStats { runs: 2, dispatches: 1, migrations: 0, skipped: 0 });
         assert_eq!(back.runs(), store.runs());
         let _ = std::fs::remove_file(&path);
     }
@@ -362,11 +404,11 @@ mod tests {
     fn unknown_versions_and_garbage_are_skipped_with_a_count() {
         let path = temp_path("skip");
         let good = sample_run("good").to_json_line();
-        let future = good.replace("\"v\":1,", "\"v\":999,");
+        let future = good.replace("\"v\":2,", "\"v\":999,");
         let text = format!("{good}\nnot json at all\n{future}\n{{\"v\":1,\"kind\":\"??\"}}\n");
         std::fs::write(&path, text).unwrap();
         let store = HistoryStore::open(&path).unwrap();
-        assert_eq!(store.stats(), StoreStats { runs: 1, dispatches: 0, skipped: 3 });
+        assert_eq!(store.stats(), StoreStats { runs: 1, dispatches: 0, migrations: 0, skipped: 3 });
         assert_eq!(store.runs()[0].session, "good");
         let _ = std::fs::remove_file(&path);
     }
@@ -384,7 +426,7 @@ mod tests {
         assert_eq!(store.runs().len(), 2);
         assert_eq!(store.runs()[0].session, "run-3");
         let back = HistoryStore::open(&path).unwrap();
-        assert_eq!(back.stats(), StoreStats { runs: 2, dispatches: 0, skipped: 0 });
+        assert_eq!(back.stats(), StoreStats { runs: 2, dispatches: 0, migrations: 0, skipped: 0 });
         let _ = std::fs::remove_file(&path);
     }
 
@@ -393,15 +435,15 @@ mod tests {
         // A newer build's records must survive this build's maintenance.
         let path = temp_path("prune_foreign");
         let good = sample_run("mine").to_json_line();
-        let future = good.replace("\"v\":1,", "\"v\":9,");
+        let future = good.replace("\"v\":2,", "\"v\":9,");
         std::fs::write(&path, format!("{good}\n{future}\n")).unwrap();
         let mut store = HistoryStore::open(&path).unwrap();
-        assert_eq!(store.stats(), StoreStats { runs: 1, dispatches: 0, skipped: 1 });
+        assert_eq!(store.stats(), StoreStats { runs: 1, dispatches: 0, migrations: 0, skipped: 1 });
         store.prune(0).unwrap();
         let back = HistoryStore::open(&path).unwrap();
         assert_eq!(
             back.stats(),
-            StoreStats { runs: 0, dispatches: 0, skipped: 1 },
+            StoreStats { runs: 0, dispatches: 0, migrations: 0, skipped: 1 },
             "the v9 line must still be in the file after prune"
         );
         assert!(std::fs::read_to_string(&path).unwrap().contains("\"v\":9,"));
@@ -486,11 +528,50 @@ mod tests {
     }
 
     #[test]
+    fn migration_lines_round_trip_and_survive_prune() {
+        use crate::sim::MigrationRecord;
+        let path = temp_path("migrations");
+        let _ = std::fs::remove_file(&path);
+        let m = MigrationRecord {
+            t_secs: 99.0,
+            session: "s".to_string(),
+            from_host: 1,
+            from: "legacy".to_string(),
+            to_host: 0,
+            to: "efficient".to_string(),
+            moved_bytes: 1e9,
+            remaining_bytes: 2e9,
+            drain_secs: 5.0,
+            resume_at_secs: 104.0,
+            est_benefit_j: 1000.0,
+            est_cost_j: 100.0,
+            policy: "cap-pressure",
+        };
+        let mut store = HistoryStore::open(&path).unwrap();
+        store.append_runs(&[sample_run("r")]).unwrap();
+        store.append_migrations(&[m.clone(), m]).unwrap();
+        assert_eq!(store.migration_count(), 2);
+
+        let back = HistoryStore::open(&path).unwrap();
+        assert_eq!(
+            back.stats(),
+            StoreStats { runs: 1, dispatches: 0, migrations: 2, skipped: 0 },
+            "migration lines load as their own kind, not as foreign"
+        );
+        // Prune treats them like dispatch lines: keep the newest N.
+        let mut back = back;
+        assert_eq!(back.prune(1).unwrap(), 1, "one migration line dropped");
+        assert_eq!(back.stats().migrations, 1);
+        assert_eq!(back.stats().runs, 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn in_memory_store_never_touches_disk() {
         let mut store = HistoryStore::in_memory();
         store.append_runs(&[sample_run("x")]).unwrap();
         store.append_dispatches(&[sample_dispatch()]).unwrap();
-        assert_eq!(store.stats(), StoreStats { runs: 1, dispatches: 1, skipped: 0 });
+        assert_eq!(store.stats(), StoreStats { runs: 1, dispatches: 1, migrations: 0, skipped: 0 });
         assert_eq!(store.index().len(), 1);
         assert_eq!(store.prune(0).unwrap(), 2);
         assert_eq!(store.stats(), StoreStats::default());

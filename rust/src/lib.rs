@@ -33,6 +33,7 @@ pub mod cpusim;
 pub mod power;
 pub mod transfer;
 pub mod sim;
+pub mod rebalance;
 pub mod history;
 pub mod coordinator;
 pub mod baselines;

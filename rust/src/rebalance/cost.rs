@@ -1,0 +1,125 @@
+//! The migration cost model: bytes never teleport, and neither do joules.
+//!
+//! A live migration is simulated faithfully by the dispatcher — the
+//! session's streams drain, a handoff delay passes with the session
+//! resident nowhere, and the remaining bytes re-enter both TCP slow start
+//! and the coordinator's slow-start FSM on the target host. This module
+//! is the *predictive* side of that same price: the estimate a
+//! [`Rebalancer`](super::Rebalancer) charges against a move's estimated
+//! saving before proposing it, so marginal-looking moves are suppressed
+//! instead of thrashing.
+
+use crate::units::SimDuration;
+
+/// The contention price, J/B: the extra seconds-per-byte a session
+/// suffers at `bps_shared` relative to running alone at `bps_alone`,
+/// charged at the host's idle draw. The one formula shared by admission
+/// scoring (`HostCandidate::queue_delay_j_per_byte` in
+/// [`crate::sim::dispatcher`]) and the rebalancer's move comparison
+/// ([`HostView`](super::HostView)), so the two layers can never price
+/// the same contention differently. Zero for degenerate inputs and when
+/// sharing does not slow the session.
+pub fn contention_price_j_per_byte(idle_w: f64, bps_shared: f64, bps_alone: f64) -> f64 {
+    if bps_shared <= 0.0 || bps_alone <= 0.0 {
+        return 0.0;
+    }
+    (idle_w * (1.0 / bps_shared - 1.0 / bps_alone)).max(0.0)
+}
+
+/// Round-trips the re-admitted transfer is charged for ramping back to
+/// steady state: TCP window doublings from a cold congestion window plus
+/// the coordinator's slow-start FSM rounds. A deliberate over-estimate —
+/// hysteresis belongs on the cost side.
+const RAMP_RTTS: f64 = 16.0;
+
+/// What one migration is estimated to cost, and the knobs of that
+/// estimate. The same `drain` value parameterizes the *simulated* handoff
+/// (the dispatcher holds the session out of every host for exactly this
+/// long), so the model and the simulation cannot drift apart on the
+/// dominant term.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationCost {
+    /// Drain/handoff delay: simulated time between preemption on the
+    /// source and re-admission on the target (stream teardown, control
+    /// plane, connection re-establishment).
+    pub drain: SimDuration,
+    /// Hysteresis: a move needs `benefit > cost × (1 + min_gain)` before
+    /// the marginal-delta policy (see
+    /// [`RebalancePolicyKind`](super::RebalancePolicyKind)) proposes it.
+    pub min_gain: f64,
+}
+
+impl Default for MigrationCost {
+    fn default() -> Self {
+        MigrationCost { drain: SimDuration::from_secs(5.0), min_gain: 0.25 }
+    }
+}
+
+impl MigrationCost {
+    /// A cost model with an explicit drain delay (the CLI's
+    /// `--migration-cost <secs>`).
+    pub fn with_drain_secs(secs: f64) -> Self {
+        MigrationCost {
+            drain: SimDuration::from_secs(secs.max(0.0)),
+            ..MigrationCost::default()
+        }
+    }
+
+    /// Estimated joules one move burns, given the *target* host's idle
+    /// draw, the extra watts it will draw while serving the session, and
+    /// its path RTT:
+    ///
+    /// * the drain delay pushes the whole remaining transfer `drain`
+    ///   seconds later, so the serving host stays powered that much
+    ///   longer — priced at the target's idle draw;
+    /// * the slow-start re-ramp wastes roughly [`RAMP_RTTS`] round-trips
+    ///   of the target's *marginal* (serving-minus-idle) draw.
+    pub fn estimate_joules(
+        &self,
+        target_idle_w: f64,
+        target_marginal_w: f64,
+        target_rtt_s: f64,
+    ) -> f64 {
+        let drain_j = self.drain.as_secs() * target_idle_w.max(0.0);
+        let ramp_j = RAMP_RTTS * target_rtt_s.max(0.0) * target_marginal_w.max(0.0);
+        drain_j + ramp_j
+    }
+
+    /// The gate the marginal-delta policy applies: does `benefit_j`
+    /// clear the estimated cost plus the hysteresis margin? Infinite
+    /// benefits (a stalled source host) always pass; NaNs never do.
+    pub fn worth_it(&self, benefit_j: f64, cost_j: f64) -> bool {
+        benefit_j > cost_j * (1.0 + self.min_gain.max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimate_scales_with_drain_and_rtt() {
+        let cheap = MigrationCost::with_drain_secs(1.0);
+        let slow = MigrationCost::with_drain_secs(30.0);
+        let a = cheap.estimate_joules(20.0, 15.0, 0.036);
+        let b = slow.estimate_joules(20.0, 15.0, 0.036);
+        assert!(b > a + 500.0, "29 extra idle-seconds at 20 W: {a} vs {b}");
+        // A longer path pays a bigger re-ramp.
+        let lan = cheap.estimate_joules(20.0, 15.0, 0.001);
+        let wan = cheap.estimate_joules(20.0, 15.0, 0.1);
+        assert!(wan > lan);
+        // Degenerate inputs clamp instead of going negative.
+        assert_eq!(MigrationCost::with_drain_secs(-3.0).drain, SimDuration::ZERO);
+        assert!(cheap.estimate_joules(-5.0, -5.0, 0.04) == 0.0);
+    }
+
+    #[test]
+    fn worth_it_applies_hysteresis() {
+        let m = MigrationCost { drain: SimDuration::from_secs(5.0), min_gain: 0.25 };
+        assert!(!m.worth_it(100.0, 100.0), "break-even is not worth a move");
+        assert!(!m.worth_it(120.0, 100.0), "inside the hysteresis band");
+        assert!(m.worth_it(130.0, 100.0));
+        assert!(m.worth_it(f64::INFINITY, 100.0), "stalled source always moves");
+        assert!(!m.worth_it(f64::NAN, 100.0), "NaN never passes the gate");
+    }
+}

@@ -1,0 +1,499 @@
+//! The rebalancer itself: scan host snapshots, propose at most one move.
+//!
+//! Pure over [`HostView`] snapshots (no simulation access), exactly like
+//! [`Dispatcher::place`](crate::sim::dispatcher::Dispatcher::place) one
+//! layer down — decisions are deterministic, unit-testable and replayable
+//! from telemetry. The dispatcher builds the views at segment boundaries
+//! from the same occupancy-keyed projections placement scoring uses
+//! (`HostWorld::projected_power_w` / `projected_session_bps`), executes a
+//! returned [`MoveProposal`] (preempt → drain → re-admit), and records a
+//! [`MigrationRecord`](crate::sim::MigrationRecord).
+
+use std::collections::BTreeMap;
+
+use super::cost::MigrationCost;
+use super::policy::{RebalanceConfig, RebalancePolicyKind};
+
+/// Minimum projected fleet-power reduction (W) a cap-pressure move must
+/// deliver. Guards against moves whose only effect is churn when two
+/// hosts' marginal draws are within measurement noise of each other.
+const MIN_POWER_DROP_W: f64 = 0.5;
+
+/// One running session as the rebalancer sees it.
+#[derive(Debug, Clone)]
+pub struct SessionView {
+    /// Index of the tenant inside its host's world (what the executor
+    /// hands back so the dispatcher can preempt the right slot).
+    pub tenant: usize,
+    /// Session name (move budgets are kept per name, which survives the
+    /// migration).
+    pub name: String,
+    /// Bytes the session still has to move — what a move would re-admit.
+    pub remaining_bytes: f64,
+}
+
+/// One host's snapshot at a segment boundary: the occupancy-keyed power
+/// and goodput projections around its current session count. All powers
+/// are whole-host *instrument* projections (wall-metered hosts include
+/// their platform base), the same convention admission control caps.
+#[derive(Debug, Clone)]
+pub struct HostView {
+    /// Index of the host in the dispatcher's host list.
+    pub host: usize,
+    /// Sessions currently resident (registered and unfinished).
+    pub active: u32,
+    /// Session slots still free (0 = cannot be a migration target).
+    pub free_slots: u32,
+    /// Projected draw with no sessions at all, W — the idle floor.
+    pub idle_power_w: f64,
+    /// Projected draw at the current session count, W.
+    pub power_now_w: f64,
+    /// Projected draw with one session fewer, W (equals the idle floor
+    /// when one session is resident).
+    pub power_minus_one_w: f64,
+    /// Projected draw with one session more, W.
+    pub power_plus_one_w: f64,
+    /// Expected per-session goodput at the current count, bytes/s.
+    pub session_bps_now: f64,
+    /// Expected per-session goodput with one session more, bytes/s.
+    pub session_bps_plus_one: f64,
+    /// Expected goodput of a session running *alone* here, bytes/s —
+    /// the baseline the contention price is measured against.
+    pub session_bps_alone: f64,
+    /// Path round-trip time, seconds (prices the slow-start re-ramp).
+    pub rtt_s: f64,
+    /// The sessions running here, in tenant order.
+    pub sessions: Vec<SessionView>,
+}
+
+impl HostView {
+    /// Marginal watts released if one resident session departs.
+    fn marginal_out_w(&self) -> f64 {
+        (self.power_now_w - self.power_minus_one_w).max(0.0)
+    }
+
+    /// Marginal watts added if one more session is admitted.
+    fn marginal_in_w(&self) -> f64 {
+        (self.power_plus_one_w - self.power_now_w).max(0.0)
+    }
+
+    /// Contention price at `bps_shared` (see
+    /// [`contention_price_j_per_byte`](super::contention_price_j_per_byte)
+    /// — the same formula admission scoring uses). This is what keeps
+    /// the rebalancer from "consolidating" sessions onto a
+    /// link-saturated host: there the *marginal watts* of one more
+    /// session are near zero (the link caps aggregate demand), but
+    /// everyone's residency stretches.
+    fn contention_price(&self, bps_shared: f64) -> f64 {
+        super::contention_price_j_per_byte(self.idle_power_w, bps_shared, self.session_bps_alone)
+    }
+
+    /// Effective J/B a resident session pays by *staying* here: marginal
+    /// watts over its goodput, plus the contention price it is already
+    /// suffering. Infinite when the host moves nothing.
+    fn jpb_stay(&self) -> f64 {
+        if self.session_bps_now <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.marginal_out_w() / self.session_bps_now
+                + self.contention_price(self.session_bps_now)
+        }
+    }
+
+    /// Effective J/B an incoming session would pay here: marginal watts
+    /// over its post-move goodput, plus the contention it would create.
+    fn jpb_in(&self) -> f64 {
+        if self.session_bps_plus_one <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.marginal_in_w() / self.session_bps_plus_one
+                + self.contention_price(self.session_bps_plus_one)
+        }
+    }
+
+    /// Watts of this host's idle draw effectively stranded by the
+    /// contention an incoming session would create:
+    /// `idle_W × (1 − bps_shared/bps_alone)` — the contention price
+    /// expressed in watts (price × post-move goodput), so cap-pressure
+    /// can net it against a projected watt drop. Zero on an
+    /// uncontended target; approaches the full idle draw as the
+    /// target's link saturates.
+    fn contention_toll_w(&self) -> f64 {
+        if self.session_bps_alone <= 0.0 {
+            return 0.0;
+        }
+        let ratio = (self.session_bps_plus_one / self.session_bps_alone).clamp(0.0, 1.0);
+        (self.idle_power_w * (1.0 - ratio)).max(0.0)
+    }
+}
+
+/// One move the rebalancer wants executed: preempt `session` on `from`,
+/// re-admit its remaining bytes on `to` after the drain delay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoveProposal {
+    /// Session name.
+    pub session: String,
+    /// Tenant index inside the source host's world.
+    pub tenant: usize,
+    /// Source host index.
+    pub from: usize,
+    /// Target host index.
+    pub to: usize,
+    /// Estimated joules saved by serving the remaining bytes on the
+    /// target instead (may be negative for cap-pressure moves — the cap
+    /// is a constraint, not an optimization).
+    pub est_benefit_j: f64,
+    /// Estimated joules the move itself burns (drain + slow-start
+    /// re-ramp; see [`MigrationCost::estimate_joules`]).
+    pub est_cost_j: f64,
+    /// Projected fleet-power reduction of the move, W.
+    pub est_power_drop_w: f64,
+}
+
+/// The rebalancer: policy + cost model + per-session move budgets.
+#[derive(Debug, Clone)]
+pub struct Rebalancer {
+    cfg: RebalanceConfig,
+    /// Moves already executed, by session name.
+    moves: BTreeMap<String, u32>,
+}
+
+impl Rebalancer {
+    /// A rebalancer for `cfg`. An `Off` config never proposes anything.
+    pub fn new(cfg: RebalanceConfig) -> Rebalancer {
+        Rebalancer { cfg, moves: BTreeMap::new() }
+    }
+
+    /// True when the policy can ever propose a move — the dispatcher
+    /// skips snapshot building entirely otherwise, so `Off` adds zero
+    /// work to the segment loop.
+    pub fn active(&self) -> bool {
+        self.cfg.policy != RebalancePolicyKind::Off
+    }
+
+    /// The configured drain/handoff delay (the dispatcher holds a
+    /// preempted session out of every host for exactly this long).
+    pub fn drain(&self) -> crate::units::SimDuration {
+        self.cfg.migration_cost.drain
+    }
+
+    /// The policy in charge.
+    pub fn policy(&self) -> RebalancePolicyKind {
+        self.cfg.policy
+    }
+
+    /// Record that `session` was moved (spends one unit of its budget).
+    pub fn note_move(&mut self, session: &str) {
+        *self.moves.entry(session.to_string()).or_insert(0) += 1;
+    }
+
+    /// True while `session` still has move budget left.
+    fn eligible(&self, session: &str) -> bool {
+        self.moves.get(session).copied().unwrap_or(0) < self.cfg.max_moves_per_session
+    }
+
+    /// Scan the fleet and propose at most one move (the dispatcher calls
+    /// this once per segment boundary; multi-move rebalances happen one
+    /// boundary at a time, which keeps every step priced against fresh
+    /// projections). `cap_w` is the *effective* admission power cap at
+    /// this instant, if any.
+    pub fn propose(&self, hosts: &[HostView], cap_w: Option<f64>) -> Option<MoveProposal> {
+        match self.cfg.policy {
+            RebalancePolicyKind::Off => None,
+            RebalancePolicyKind::CapPressure => self.propose_cap_pressure(hosts, cap_w?),
+            RebalancePolicyKind::MarginalEnergyDelta => self.propose_delta(hosts, cap_w),
+        }
+    }
+
+    /// Projected fleet power after moving one session `from → to`.
+    fn power_after(hosts: &[HostView], fleet_now_w: f64, from: usize, to: usize) -> f64 {
+        fleet_now_w - hosts[from].marginal_out_w() + hosts[to].marginal_in_w()
+    }
+
+    /// The move candidates shared by both policies: every eligible
+    /// session on every host, paired with every *other* host that has a
+    /// free slot. Yields `(session, from, to)` in deterministic
+    /// (host, tenant, target) order.
+    fn candidates<'a>(
+        &'a self,
+        hosts: &'a [HostView],
+    ) -> impl Iterator<Item = (&'a SessionView, usize, usize)> + 'a {
+        hosts.iter().flat_map(move |src| {
+            src.sessions
+                .iter()
+                .filter(move |s| s.remaining_bytes > 0.0 && self.eligible(&s.name))
+                .flat_map(move |s| {
+                    hosts
+                        .iter()
+                        .filter(move |dst| dst.host != src.host && dst.free_slots > 0)
+                        .map(move |dst| (s, src.host, dst.host))
+                })
+        })
+    }
+
+    /// Cap pressure: only while the projected fleet power exceeds the
+    /// cap. Picks the move shedding the most projected watts *net of the
+    /// idle-watts the created contention strands* (a link-saturated sink
+    /// drops projected watts for free but stretches every resident's
+    /// residency — see [`HostView::contention_toll_w`]); ties break to
+    /// the session with the most remaining bytes (longest future
+    /// benefit), then to the first candidate in scan order.
+    fn propose_cap_pressure(&self, hosts: &[HostView], cap_w: f64) -> Option<MoveProposal> {
+        let fleet_now: f64 = hosts.iter().map(|h| h.power_now_w).sum();
+        if fleet_now <= cap_w + 1e-6 {
+            return None;
+        }
+        // Scan with scalars only; the winning proposal (name clone, cost
+        // estimate) is assembled once at the end.
+        let mut best: Option<(f64, f64, (&SessionView, usize, usize, f64))> = None;
+        for (s, from, to) in self.candidates(hosts) {
+            let drop = fleet_now - Self::power_after(hosts, fleet_now, from, to);
+            let net = drop - hosts[to].contention_toll_w();
+            if net < MIN_POWER_DROP_W {
+                continue;
+            }
+            let better = match &best {
+                Some((bn, br, _)) => {
+                    net > *bn + 1e-12 || (net > *bn - 1e-12 && s.remaining_bytes > *br)
+                }
+                None => true,
+            };
+            if better {
+                best = Some((net, s.remaining_bytes, (s, from, to, drop)));
+            }
+        }
+        best.map(|(_, _, (s, from, to, drop))| self.proposal_for(hosts, s, from, to, drop))
+    }
+
+    /// Marginal-energy delta: move whenever the estimated saving on the
+    /// remaining bytes clears the migration cost plus hysteresis. With a
+    /// cap in force a move may never push the projection further above
+    /// it. Picks the largest net (benefit − cost) saving.
+    fn propose_delta(&self, hosts: &[HostView], cap_w: Option<f64>) -> Option<MoveProposal> {
+        let fleet_now: f64 = hosts.iter().map(|h| h.power_now_w).sum();
+        let cost_model: &MigrationCost = &self.cfg.migration_cost;
+        // Scan with scalars only (see `propose_cap_pressure`); benefit
+        // and cost are pure functions of the views, so the winner's
+        // proposal recomputes them identically.
+        let mut best: Option<(f64, (&SessionView, usize, usize, f64))> = None;
+        for (s, from, to) in self.candidates(hosts) {
+            let after = Self::power_after(hosts, fleet_now, from, to);
+            if let Some(cap) = cap_w {
+                // Never worsen a cap violation (reducing one is fine).
+                if after > cap + 1e-9 && after > fleet_now - 1e-9 {
+                    continue;
+                }
+            }
+            let benefit = s.remaining_bytes * (hosts[from].jpb_stay() - hosts[to].jpb_in());
+            let cost = cost_model.estimate_joules(
+                hosts[to].idle_power_w,
+                hosts[to].marginal_in_w(),
+                hosts[to].rtt_s,
+            );
+            if !cost_model.worth_it(benefit, cost) {
+                continue;
+            }
+            let net = benefit - cost;
+            let better = match &best {
+                Some((bn, _)) => net > *bn + 1e-12,
+                None => true,
+            };
+            if better {
+                best = Some((net, (s, from, to, fleet_now - after)));
+            }
+        }
+        best.map(|(_, (s, from, to, drop))| self.proposal_for(hosts, s, from, to, drop))
+    }
+
+    /// Assemble the proposal record for one candidate move.
+    fn proposal_for(
+        &self,
+        hosts: &[HostView],
+        s: &SessionView,
+        from: usize,
+        to: usize,
+        drop_w: f64,
+    ) -> MoveProposal {
+        let benefit = s.remaining_bytes * (hosts[from].jpb_stay() - hosts[to].jpb_in());
+        let cost = self.cfg.migration_cost.estimate_joules(
+            hosts[to].idle_power_w,
+            hosts[to].marginal_in_w(),
+            hosts[to].rtt_s,
+        );
+        MoveProposal {
+            session: s.name.clone(),
+            tenant: s.tenant,
+            from,
+            to,
+            est_benefit_j: benefit,
+            est_cost_j: cost,
+            est_power_drop_w: drop_w,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A host serving `active` sessions with linear per-session power.
+    fn host(idx: usize, active: u32, free: u32, idle_w: f64, per_session_w: f64) -> HostView {
+        let sessions = (0..active)
+            .map(|i| SessionView {
+                tenant: i as usize,
+                name: format!("h{idx}-s{i}"),
+                remaining_bytes: 10e9,
+            })
+            .collect();
+        HostView {
+            host: idx,
+            active,
+            free_slots: free,
+            idle_power_w: idle_w,
+            power_now_w: idle_w + per_session_w * active as f64,
+            power_minus_one_w: idle_w + per_session_w * active.saturating_sub(1) as f64,
+            power_plus_one_w: idle_w + per_session_w * (active + 1) as f64,
+            session_bps_now: 100e6,
+            session_bps_plus_one: 100e6,
+            session_bps_alone: 100e6,
+            rtt_s: 0.04,
+            sessions,
+        }
+    }
+
+    fn delta_rebalancer() -> Rebalancer {
+        Rebalancer::new(RebalanceConfig::new(RebalancePolicyKind::MarginalEnergyDelta))
+    }
+
+    #[test]
+    fn off_policy_proposes_nothing_and_is_inactive() {
+        let r = Rebalancer::new(RebalanceConfig::default());
+        assert!(!r.active());
+        let hosts = vec![host(0, 1, 3, 20.0, 40.0), host(1, 0, 4, 10.0, 5.0)];
+        assert_eq!(r.propose(&hosts, Some(30.0)), None);
+    }
+
+    #[test]
+    fn delta_moves_to_the_cheaper_host_when_the_gap_pays() {
+        // Staying costs 40 W / 100 MB/s = 4e-7 J/B; moving costs 5 W /
+        // 100 MB/s = 5e-8 J/B. Benefit on 10 GB ≈ 3500 J; cost ≈ 5 s ×
+        // 10 W + ramp ≈ 53 J — clears the gate easily.
+        let r = delta_rebalancer();
+        let hosts = vec![host(0, 1, 3, 20.0, 40.0), host(1, 0, 4, 10.0, 5.0)];
+        let mv = r.propose(&hosts, None).expect("the gap must pay for a move");
+        assert_eq!((mv.from, mv.to), (0, 1));
+        assert_eq!(mv.session, "h0-s0");
+        assert!(mv.est_benefit_j > 3000.0, "benefit {:.0}", mv.est_benefit_j);
+        assert!(mv.est_cost_j > 0.0 && mv.est_cost_j < mv.est_benefit_j);
+        assert!(mv.est_power_drop_w > 30.0);
+    }
+
+    #[test]
+    fn delta_respects_cost_hysteresis() {
+        // Near-identical hosts: the saving cannot clear the migration
+        // cost, so nothing moves even though host 1 is a hair cheaper.
+        let r = delta_rebalancer();
+        let hosts = vec![host(0, 1, 3, 20.0, 10.0), host(1, 0, 4, 20.0, 9.9)];
+        assert_eq!(r.propose(&hosts, None), None);
+    }
+
+    #[test]
+    fn delta_needs_a_free_slot_on_the_target() {
+        let r = delta_rebalancer();
+        let hosts = vec![host(0, 1, 3, 20.0, 40.0), host(1, 4, 0, 10.0, 5.0)];
+        assert_eq!(r.propose(&hosts, None), None, "full targets are not targets");
+    }
+
+    #[test]
+    fn move_budget_pins_a_session_after_its_last_move() {
+        let mut r = Rebalancer::new(RebalanceConfig {
+            max_moves_per_session: 1,
+            ..RebalanceConfig::new(RebalancePolicyKind::MarginalEnergyDelta)
+        });
+        let hosts = vec![host(0, 1, 3, 20.0, 40.0), host(1, 0, 4, 10.0, 5.0)];
+        let mv = r.propose(&hosts, None).expect("first move allowed");
+        r.note_move(&mv.session);
+        assert_eq!(r.propose(&hosts, None), None, "budget spent: session is pinned");
+    }
+
+    #[test]
+    fn delta_never_consolidates_onto_a_saturated_host() {
+        // Host 1 is link-saturated: taking one more session adds almost
+        // no marginal watts (the raw marginal score calls it nearly
+        // free), but it would halve every session's goodput. The
+        // contention price must kill the move.
+        let r = delta_rebalancer();
+        let src = host(0, 1, 3, 20.0, 25.0); // 25 W / 100 MB/s staying
+        let mut saturated = host(1, 1, 3, 30.0, 25.0);
+        saturated.power_plus_one_w = saturated.power_now_w + 0.2; // ~free marginal
+        saturated.session_bps_plus_one = 50e6; // …but everyone crawls
+        assert_eq!(
+            r.propose(&[src, saturated], None),
+            None,
+            "contention-priced target must not attract the session"
+        );
+    }
+
+    #[test]
+    fn cap_pressure_only_acts_above_the_cap() {
+        let r = Rebalancer::new(RebalanceConfig::new(RebalancePolicyKind::CapPressure));
+        let hosts = vec![host(0, 1, 3, 20.0, 40.0), host(1, 0, 4, 10.0, 5.0)];
+        // Fleet projection = 60 + 10 = 70 W.
+        assert_eq!(r.propose(&hosts, Some(80.0)), None, "under the cap: inert");
+        assert_eq!(r.propose(&hosts, None), None, "no cap at all: inert");
+        let mv = r.propose(&hosts, Some(50.0)).expect("above the cap: act");
+        assert_eq!((mv.from, mv.to), (0, 1));
+        // The move sheds 40 W and adds 5 W.
+        assert!((mv.est_power_drop_w - 35.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cap_pressure_avoids_saturated_sinks() {
+        // The saturated host sheds the most *projected* watts (its
+        // marginal intake is nearly free because the link caps demand),
+        // but its contention toll strands most of its idle draw — the
+        // net ranking must prefer the genuinely idle host.
+        let r = Rebalancer::new(RebalanceConfig::new(RebalancePolicyKind::CapPressure));
+        let src = host(0, 1, 3, 20.0, 40.0);
+        let mut saturated = host(1, 1, 3, 30.0, 25.0);
+        saturated.power_plus_one_w = saturated.power_now_w + 0.2; // ~free intake
+        saturated.session_bps_plus_one = 50e6; // …but everyone crawls
+        let idle = host(2, 0, 4, 10.0, 15.0);
+        let mv = r.propose(&[src, saturated, idle], Some(40.0)).expect("over the cap");
+        // Raw drops: via saturated 39.8 W, via idle 25 W — but the
+        // saturated toll (30 W × ½ = 15 W) nets it to 24.8 W, under the
+        // idle host's 25 W.
+        assert_eq!(mv.to, 2, "net-of-toll ranking must pick the idle sink");
+        assert_eq!(mv.from, 0);
+    }
+
+    #[test]
+    fn cap_pressure_picks_the_biggest_power_drop() {
+        let r = Rebalancer::new(RebalanceConfig::new(RebalancePolicyKind::CapPressure));
+        // Host 0 sheds 40 W/session, host 2 sheds 15 W/session; host 1 is
+        // the cheap sink.
+        let hosts = vec![
+            host(0, 1, 3, 20.0, 40.0),
+            host(1, 0, 4, 10.0, 5.0),
+            host(2, 1, 3, 20.0, 15.0),
+        ];
+        let mv = r.propose(&hosts, Some(40.0)).expect("well above the cap");
+        assert_eq!(mv.from, 0, "the hungriest host gives up its session");
+        assert_eq!(mv.to, 1);
+    }
+
+    #[test]
+    fn proposals_are_deterministic() {
+        let r = delta_rebalancer();
+        let hosts = vec![
+            host(0, 2, 2, 20.0, 40.0),
+            host(1, 0, 4, 10.0, 5.0),
+            host(2, 0, 4, 10.0, 5.0),
+        ];
+        let a = r.propose(&hosts, None);
+        let b = r.propose(&hosts, None);
+        assert_eq!(a, b);
+        // Equal-score targets tie-break to the first in scan order.
+        assert_eq!(a.unwrap().to, 1);
+    }
+}

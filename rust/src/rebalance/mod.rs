@@ -1,0 +1,45 @@
+//! Fleet rebalancer: cap-aware preemption and live session migration.
+//!
+//! The paper's algorithms tune a transfer *in place*; the dispatcher
+//! ([`crate::sim::dispatcher`]) decides *where* a session runs — but only
+//! once, at admission. At fleet scale the biggest remaining energy lever
+//! is moving work *between* hosts after admission: a host that saturates,
+//! or a power cap that tightens mid-run, strands sessions on an operating
+//! point the dispatcher would never choose today. This subsystem is that
+//! missing decision layer, one level above placement:
+//!
+//! * **policy** ([`policy`]) — [`RebalancePolicyKind`]: `Off` (the
+//!   bit-for-bit status quo), `CapPressure` (move sessions only while the
+//!   projected aggregate fleet power exceeds the admission cap) and
+//!   `MarginalEnergyDelta` (move whenever another host would serve a
+//!   session's *remaining* bytes at a sufficiently lower marginal J/B,
+//!   GreenDataFlow-style — arXiv:1810.05892 — but applied to running
+//!   sessions);
+//! * **cost** ([`cost`]) — an explicit [`MigrationCost`] model: a move is
+//!   never free. The session drains its streams, waits a configurable
+//!   handoff delay, and re-enters TCP slow start plus the coordinator's
+//!   slow-start FSM on the target, so the estimated joules of the move
+//!   must be beaten by the estimated joules saved before a move is
+//!   proposed;
+//! * **executor** ([`executor`]) — the [`Rebalancer`]: scans
+//!   [`HostView`] snapshots at dispatcher segment boundaries and proposes
+//!   at most one [`MoveProposal`] per boundary (the driver executes it:
+//!   preempt, emit partial-run accounting and a
+//!   [`MigrationRecord`](crate::sim::MigrationRecord), re-admit the
+//!   remaining bytes after the drain). Per-session move budgets stop
+//!   ping-pong.
+//!
+//! Invariants (pinned by `rust/tests/rebalance_migration.rs`):
+//! **byte conservation** — a migrated session delivers exactly its
+//! dataset's bytes, split across its partial and resumed runs; **no
+//! migration during drain** — a session in handoff is resident nowhere
+//! and cannot be proposed again until it is running again; **`Off` is
+//! inert** — with the policy off the dispatcher is bit-for-bit today's.
+
+pub mod cost;
+pub mod executor;
+pub mod policy;
+
+pub use cost::{contention_price_j_per_byte, MigrationCost};
+pub use executor::{HostView, MoveProposal, Rebalancer, SessionView};
+pub use policy::{RebalanceConfig, RebalancePolicyKind};

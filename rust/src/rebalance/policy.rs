@@ -1,0 +1,118 @@
+//! Rebalance policies: when the fleet is allowed to move running work.
+
+use super::cost::MigrationCost;
+
+/// Which trigger the rebalancer acts on. The decision *how* a move is
+/// scored lives in [`super::executor::Rebalancer`]; this enum is the
+/// policy identity shared by the CLI, configs and telemetry (mirroring
+/// [`PlacementKind`](crate::coordinator::fleet::PlacementKind) one layer
+/// down).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RebalancePolicyKind {
+    /// Never move running sessions — the dispatcher behaves bit-for-bit
+    /// as it does without a rebalancer at all.
+    #[default]
+    Off,
+    /// Move sessions only while the projected aggregate fleet power
+    /// exceeds the admission power cap (a cap that tightened mid-run, or
+    /// a projection that grew past it): pick the move that sheds the most
+    /// projected watts. Inert without a cap.
+    CapPressure,
+    /// Move a session whenever another host would serve its *remaining*
+    /// bytes at a lower marginal J/B by more than the estimated migration
+    /// cost (plus a hysteresis margin) — the GreenDataFlow placement
+    /// score (arXiv:1810.05892) applied continuously instead of only at
+    /// admission.
+    MarginalEnergyDelta,
+}
+
+impl RebalancePolicyKind {
+    /// Stable identifier used by the CLI and in telemetry.
+    pub fn id(&self) -> &'static str {
+        match self {
+            RebalancePolicyKind::Off => "off",
+            RebalancePolicyKind::CapPressure => "cap-pressure",
+            RebalancePolicyKind::MarginalEnergyDelta => "marginal-delta",
+        }
+    }
+
+    /// Parse a CLI identifier (accepts common spellings).
+    pub fn parse(id: &str) -> Option<RebalancePolicyKind> {
+        Some(match id {
+            "off" | "none" => RebalancePolicyKind::Off,
+            "cap-pressure" | "cappressure" | "cap" => RebalancePolicyKind::CapPressure,
+            "marginal-delta" | "marginaldelta" | "me-delta" | "medelta"
+            | "marginal-energy-delta" => RebalancePolicyKind::MarginalEnergyDelta,
+            _ => return None,
+        })
+    }
+}
+
+/// Everything the dispatcher needs to run a rebalancer: the trigger
+/// policy, the migration cost model, and the per-session move budget.
+#[derive(Debug, Clone)]
+pub struct RebalanceConfig {
+    /// When moves are considered at all.
+    pub policy: RebalancePolicyKind,
+    /// What a move is estimated (and simulated) to cost.
+    pub migration_cost: MigrationCost,
+    /// Hard ceiling on how many times one session may be migrated over a
+    /// run — the anti-ping-pong budget. A session at its budget is
+    /// pinned to wherever it currently runs.
+    pub max_moves_per_session: u32,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig {
+            policy: RebalancePolicyKind::Off,
+            migration_cost: MigrationCost::default(),
+            max_moves_per_session: 2,
+        }
+    }
+}
+
+impl RebalanceConfig {
+    /// A config for `policy` with default cost model and move budget.
+    pub fn new(policy: RebalancePolicyKind) -> Self {
+        RebalanceConfig { policy, ..RebalanceConfig::default() }
+    }
+
+    /// Replace the migration cost model.
+    pub fn with_cost(mut self, cost: MigrationCost) -> Self {
+        self.migration_cost = cost;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_round_trip() {
+        for kind in [
+            RebalancePolicyKind::Off,
+            RebalancePolicyKind::CapPressure,
+            RebalancePolicyKind::MarginalEnergyDelta,
+        ] {
+            assert_eq!(RebalancePolicyKind::parse(kind.id()), Some(kind));
+        }
+        assert_eq!(
+            RebalancePolicyKind::parse("cap"),
+            Some(RebalancePolicyKind::CapPressure)
+        );
+        assert_eq!(
+            RebalancePolicyKind::parse("medelta"),
+            Some(RebalancePolicyKind::MarginalEnergyDelta)
+        );
+        assert!(RebalancePolicyKind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn default_config_is_off() {
+        let cfg = RebalanceConfig::default();
+        assert_eq!(cfg.policy, RebalancePolicyKind::Off);
+        assert!(cfg.max_moves_per_session >= 1);
+    }
+}

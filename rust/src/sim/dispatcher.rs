@@ -24,7 +24,14 @@
 //! * decision telemetry — every placement emits a
 //!   [`DispatchRecord`](crate::sim::DispatchRecord) with the per-host
 //!   scores, so the dispatcher's behavior can be mined offline
-//!   (historical-log-driven tuning, arXiv:2104.01192).
+//!   (historical-log-driven tuning, arXiv:2104.01192);
+//! * rebalancing — a [`Rebalancer`](crate::rebalance::Rebalancer) may
+//!   preempt running sessions at segment boundaries and re-admit their
+//!   remaining bytes on a cheaper host, paying a simulated drain delay
+//!   and slow-start re-ramp; scripted [`PowerCapEvent`]s tighten (or
+//!   lift) the admission cap mid-run, which is the cap-pressure
+//!   policy's trigger. Every move emits a
+//!   [`MigrationRecord`](crate::sim::MigrationRecord).
 //!
 //! The driver extends the PR 2 event-horizon loop across hosts: each
 //! segment computes the earliest driver-level event over *all* hosts
@@ -36,12 +43,13 @@ use std::cell::RefCell;
 use std::collections::{BTreeMap, VecDeque};
 
 use super::fleet::{FleetOutcome, HostWorld, TenantSpec};
-use super::telemetry::{DispatchRecord, PlacementScore};
+use super::telemetry::{DispatchRecord, MigrationRecord, PlacementScore};
 use crate::config::experiment::TunerParams;
 use crate::config::Testbed;
 use crate::coordinator::fleet::{FleetPolicyKind, PlacementKind};
 use crate::coordinator::AlgorithmKind;
 use crate::history::{KnnIndex, Query, WorkloadFingerprint, CONFIDENCE_FLOOR};
+use crate::rebalance::{HostView, RebalanceConfig, Rebalancer, SessionView};
 use crate::rng::{self, Distribution, Exponential};
 use crate::units::{Bytes, Energy, Power, SimDuration, SimTime};
 
@@ -165,13 +173,24 @@ pub struct HostCandidate {
     /// at its current projection), W — what admission control compares
     /// against the power cap.
     pub projected_fleet_power_w: f64,
+    /// Queueing-delay price of this placement, J/B (zero unless the run
+    /// enables [`DispatcherConfig::price_queue_delay`]): the expected
+    /// extra seconds-per-byte the session suffers from contention on
+    /// this host relative to running alone, priced at the host's idle
+    /// draw — `idle_W × (1/bps_shared − 1/bps_alone)`. This is what
+    /// stops `MarginalEnergy` being goodput-blind on a saturated link,
+    /// where piling on another session adds almost no marginal watts
+    /// (the link caps aggregate demand) yet stretches every session's
+    /// residency.
+    pub queue_delay_j_per_byte: f64,
     /// History-observed J/B for a workload like this on this host
     /// (`None` when no [`KnnIndex`] is attached, it has no record from
     /// this host, or the observation's confidence sits below
-    /// [`CONFIDENCE_FLOOR`](crate::history::CONFIDENCE_FLOOR)). Note the
-    /// scale: this is the session's *total attributed* cost — its
-    /// byte-weighted share of whole-host draw, fixed costs included —
-    /// not a marginal delta; see [`Self::learned_score`].
+    /// [`CONFIDENCE_FLOOR`](crate::history::CONFIDENCE_FLOOR)). With a
+    /// v2 store this is the *marginal* observation recorded at past
+    /// admissions (scale-consistent with [`Self::marginal_j_per_byte`]);
+    /// stores holding only v1 records fall back to the session's *total
+    /// attributed* cost — see [`Self::learned_score`].
     pub learned_j_per_byte: Option<f64>,
     /// Confidence of the observation in `[0, 1]` — the blend weight
     /// `Learned` placement gives it over the model score. Already gated
@@ -220,6 +239,13 @@ impl HostCandidate {
             _ => model,
         }
     }
+
+    /// What `MarginalEnergy` placement actually ranks by: the marginal
+    /// model score plus the queueing-delay price (zero unless the run
+    /// prices queue delay — see [`Self::queue_delay_j_per_byte`]).
+    pub fn score(&self) -> f64 {
+        self.marginal_j_per_byte() + self.queue_delay_j_per_byte
+    }
 }
 
 /// What [`Dispatcher::place`] decided for one arriving session.
@@ -258,6 +284,14 @@ impl Dispatcher {
         self.placement
     }
 
+    /// Retarget the admission power cap mid-run (a scripted
+    /// [`PowerCapEvent`] firing). Affects every later decision; sessions
+    /// already admitted are untouched — shedding them is the
+    /// cap-pressure rebalancer's job, not admission control's.
+    pub fn set_power_cap(&mut self, cap: Option<Power>) {
+        self.power_cap = cap;
+    }
+
     /// Choose a host for one arriving session.
     ///
     /// Candidates are ranked by the placement policy; the best-ranked
@@ -281,6 +315,7 @@ impl Dispatcher {
     ///         projected_power_w: 55.0,   // +25 W …
     ///         projected_session_bps: 50e6, // … for 50 MB/s → 0.5 µJ/B
     ///         projected_fleet_power_w: 75.0,
+    ///         queue_delay_j_per_byte: 0.0,
     ///         learned_j_per_byte: None,
     ///         learned_weight: 0.0,
     ///     },
@@ -292,6 +327,7 @@ impl Dispatcher {
     ///         projected_power_w: 35.0,   // +15 W …
     ///         projected_session_bps: 100e6, // … for 100 MB/s → 0.15 µJ/B
     ///         projected_fleet_power_w: 65.0,
+    ///         queue_delay_j_per_byte: 0.0,
     ///         learned_j_per_byte: None,
     ///         learned_weight: 0.0,
     ///     },
@@ -317,16 +353,18 @@ impl Dispatcher {
             PlacementKind::MarginalEnergy => {
                 order.sort_by(|&a, &b| {
                     candidates[a]
-                        .marginal_j_per_byte()
-                        .total_cmp(&candidates[b].marginal_j_per_byte())
+                        .score()
+                        .total_cmp(&candidates[b].score())
                         .then_with(|| candidates[a].host.cmp(&candidates[b].host))
                 });
             }
             PlacementKind::Learned => {
                 order.sort_by(|&a, &b| {
-                    candidates[a]
-                        .learned_score()
-                        .total_cmp(&candidates[b].learned_score())
+                    (candidates[a].learned_score() + candidates[a].queue_delay_j_per_byte)
+                        .total_cmp(
+                            &(candidates[b].learned_score()
+                                + candidates[b].queue_delay_j_per_byte),
+                        )
                         .then_with(|| candidates[a].host.cmp(&candidates[b].host))
                 });
             }
@@ -356,6 +394,18 @@ impl Dispatcher {
     }
 }
 
+/// A scripted change of the fleet admission power cap mid-run — the
+/// "cap tightens" scenario the cap-pressure rebalancer exists for.
+/// Events fire at segment boundaries once the simulated clock passes
+/// `at`; the latest fired event's cap is in force.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerCapEvent {
+    /// When the new cap takes effect.
+    pub at: SimTime,
+    /// The new cap (`None` removes the cap).
+    pub cap: Option<Power>,
+}
+
 /// Everything needed to run a multi-host world.
 #[derive(Debug, Clone)]
 pub struct DispatcherConfig {
@@ -374,6 +424,19 @@ pub struct DispatcherConfig {
     /// it; `None` admits freely. This bounds the steady-state projection,
     /// not the instantaneous meters.
     pub power_cap: Option<Power>,
+    /// Scripted mid-run cap changes, applied on top of [`Self::power_cap`]
+    /// in event-time order.
+    pub cap_events: Vec<PowerCapEvent>,
+    /// The rebalancer: cap-aware preemption and live migration of running
+    /// sessions between hosts at segment boundaries (see
+    /// [`crate::rebalance`]). The default `Off` policy leaves the
+    /// dispatcher bit-for-bit as it is without one.
+    pub rebalance: RebalanceConfig,
+    /// Price expected contention delay into `MarginalEnergy`/`Learned`
+    /// placement scores (see [`HostCandidate::queue_delay_j_per_byte`]).
+    /// Off by default: scores then match the pre-rebalancer dispatcher
+    /// exactly.
+    pub price_queue_delay: bool,
     /// Tuner knobs shared by every session's algorithm.
     pub params: TunerParams,
     /// Arbitration cadence of each host's fleet policy.
@@ -411,6 +474,9 @@ impl DispatcherConfig {
             placement,
             policy: FleetPolicyKind::MinEnergyFleet,
             power_cap: None,
+            cap_events: Vec::new(),
+            rebalance: RebalanceConfig::default(),
+            price_queue_delay: false,
             params: TunerParams::default(),
             fleet_interval: SimDuration::from_secs(3.0),
             seed: 42,
@@ -431,6 +497,24 @@ impl DispatcherConfig {
     /// Set the fleet-wide power cap.
     pub fn with_power_cap(mut self, cap: Power) -> Self {
         self.power_cap = Some(cap);
+        self
+    }
+
+    /// Append a scripted mid-run cap change.
+    pub fn with_cap_event(mut self, at: SimTime, cap: Option<Power>) -> Self {
+        self.cap_events.push(PowerCapEvent { at, cap });
+        self
+    }
+
+    /// Enable a rebalance policy (see [`crate::rebalance`]).
+    pub fn with_rebalance(mut self, rebalance: RebalanceConfig) -> Self {
+        self.rebalance = rebalance;
+        self
+    }
+
+    /// Price expected contention delay into placement scores.
+    pub fn with_queue_delay_price(mut self) -> Self {
+        self.price_queue_delay = true;
         self
     }
 
@@ -456,8 +540,11 @@ pub struct DispatchOutcome {
     pub fleet: FleetOutcome,
     /// One record per placement decision, in decision order.
     pub decisions: Vec<DispatchRecord>,
-    /// Sessions never admitted before the run ended (still queued or
-    /// still pending arrival at the time cap).
+    /// One record per rebalancer move, in execution order (empty with
+    /// the rebalance policy off).
+    pub migrations: Vec<MigrationRecord>,
+    /// Sessions never admitted before the run ended (still queued, still
+    /// pending arrival, or mid-migration-drain at the time cap).
     pub unplaced: Vec<String>,
 }
 
@@ -465,6 +552,38 @@ pub struct DispatchOutcome {
 /// noise per host, reproducible from the pair).
 fn host_seed(seed: u64, host: usize) -> u64 {
     seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(host as u64 + 1))
+}
+
+/// True when a projected fleet power fits under `cap` (no cap at all
+/// fits everything) — the admission comparison, shared with the
+/// migration re-admission path.
+fn cap_ok(cap: Option<Power>, projected_w: f64) -> bool {
+    cap.is_none_or(|cap| projected_w <= cap.as_watts() + 1e-9)
+}
+
+/// Session slots already spoken for by migrations mid-drain, per host —
+/// both admission control and the rebalancer fold these into occupancy.
+fn reserved_slots(in_flight: &[InFlight], hosts: usize) -> Vec<u32> {
+    let mut reserved = vec![0u32; hosts];
+    for m in in_flight {
+        reserved[m.target] += 1;
+    }
+    reserved
+}
+
+/// A session mid-migration: preempted on its source host, draining, due
+/// to re-admit its remaining bytes once the handoff delay passes. While
+/// in flight the session is resident nowhere (it consumes no slot, no
+/// link, no CPU) and the rebalancer cannot touch it again — the
+/// "no migration during drain" invariant.
+struct InFlight {
+    /// The remaining-bytes spec; `arrive_at` is the resume instant.
+    spec: SessionSpec,
+    /// The host the rebalancer picked.
+    target: usize,
+    /// Index of this move in the run's migration records, patched if the
+    /// fallback placement has to land the session elsewhere.
+    record: usize,
 }
 
 /// The history context of one arriving session, resolved once at arrival
@@ -475,6 +594,11 @@ struct LearnedQuery<'a> {
     index: &'a KnnIndex,
     fingerprint: WorkloadFingerprint,
     algo_id: &'static str,
+    /// True when the index carries any v2 admission marginals: every
+    /// host's observation then comes from the marginal question (hosts
+    /// without one get none), never mixed with full-cost answers —
+    /// scales must be uniform *within* one placement decision.
+    marginal_scale: bool,
     /// Memoized per-`(host index, occupancy)` observations: the k-NN
     /// answer is a pure function of those two, and a power-capped queue
     /// head re-asks for it every event segment — without the memo each
@@ -489,12 +613,17 @@ impl<'a> LearnedQuery<'a> {
             index,
             fingerprint: WorkloadFingerprint::of(&spec.dataset),
             algo_id: spec.algorithm.id(),
+            marginal_scale: index.has_marginal_observations(),
             observations: RefCell::new(BTreeMap::new()),
         })
     }
 
     /// Observed `(J/B, confidence)` for this session on host `host_idx`
     /// at its current occupancy (memoized; see [`Self::observations`]).
+    /// Uses the scale-consistent *marginal* observation recorded at past
+    /// admissions (schema v2) whenever the store carries any; pure
+    /// v1-era stores fall back to the full-cost attributed J/B. The
+    /// choice is per store, not per host (see [`Self::marginal_scale`]).
     fn observed(
         &self,
         host_idx: usize,
@@ -509,7 +638,11 @@ impl<'a> LearnedQuery<'a> {
             .or_insert_with(|| {
                 let q = Query::on_testbed(world.testbed(), self.fingerprint, active)
                     .with_algorithm(self.algo_id);
-                self.index.observed_j_per_byte(host_name, &q)
+                if self.marginal_scale {
+                    self.index.observed_marginal_j_per_byte(host_name, &q)
+                } else {
+                    self.index.observed_j_per_byte(host_name, &q)
+                }
             })
     }
 }
@@ -541,15 +674,20 @@ fn build_candidates(
     worlds: &[HostWorld],
     hosts: &[HostSpec],
     learned: Option<&LearnedQuery<'_>>,
+    price_queue_delay: bool,
+    reserved: &[u32],
 ) -> Vec<HostCandidate> {
     let current: Vec<(u32, f64)> = worlds
         .iter()
-        .map(|w| {
+        .enumerate()
+        .map(|(i, w)| {
             // Occupancy, not activation: sessions registered this segment
             // activate on the next tick but already claim their slot and
             // their share of the projection, otherwise two simultaneous
-            // arrivals would both see an empty host.
-            let active = w.occupancy();
+            // arrivals would both see an empty host. Migrants mid-drain
+            // (`reserved`) equally claim their planned target's slot and
+            // draw, so an arrival cannot steal them during the handoff.
+            let active = w.occupancy() + reserved[i];
             (active, w.projected_power_w(active))
         })
         .collect();
@@ -565,6 +703,20 @@ fn build_candidates(
             let observed = learned
                 .and_then(|lq| lq.observed(i, &hosts[i].name, w, active))
                 .filter(|&(_, conf)| conf >= CONFIDENCE_FLOOR);
+            // Contention price: extra seconds-per-byte vs running alone,
+            // at the host's idle draw (zero on an empty host, and zero
+            // whenever queue-delay pricing is disabled). The formula is
+            // shared with the rebalancer's move comparison so the two
+            // layers can never price contention differently.
+            let queue_delay_j_per_byte = if price_queue_delay && active > 0 {
+                crate::rebalance::contention_price_j_per_byte(
+                    w.projected_power_w(0),
+                    w.projected_session_bps(active + 1),
+                    w.projected_session_bps(1),
+                )
+            } else {
+                0.0
+            };
             HostCandidate {
                 host: i,
                 active_sessions: active,
@@ -573,6 +725,7 @@ fn build_candidates(
                 projected_power_w: proj_w,
                 projected_session_bps: w.projected_session_bps(active + 1),
                 projected_fleet_power_w: fleet_base - cur_w + proj_w,
+                queue_delay_j_per_byte,
                 learned_j_per_byte: observed.map(|(jpb, _)| jpb),
                 learned_weight: observed.map(|(_, conf)| conf).unwrap_or(0.0),
             }
@@ -598,6 +751,7 @@ fn make_record(
             projected_power_w: c.projected_power_w,
             projected_session_bps: c.projected_session_bps,
             marginal_j_per_byte: c.marginal_j_per_byte(),
+            queue_delay_j_per_byte: c.queue_delay_j_per_byte,
             learned_j_per_byte: c.learned_j_per_byte,
         })
         .collect();
@@ -673,25 +827,128 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
     // the rest so a power-hungry host cannot starve early requesters.
     // Each entry carries its once-resolved history context so retries
     // never re-fingerprint the dataset.
-    let mut queue: VecDeque<(SessionSpec, f64, Option<LearnedQuery>)> = VecDeque::new();
+    // Queue entries additionally carry the session's migration-record
+    // index when it is a resuming migrant, so a re-admission that lands
+    // off-plan can patch the record's target.
+    let mut queue: VecDeque<(SessionSpec, f64, Option<LearnedQuery>, Option<usize>)> =
+        VecDeque::new();
     let mut dispatcher = Dispatcher::new(cfg.placement, cfg.power_cap);
     let mut decisions: Vec<DispatchRecord> = Vec::new();
+
+    // The rebalancer and its bookkeeping: scripted cap changes in event
+    // order, executed moves, and sessions mid-drain.
+    let mut effective_cap = cfg.power_cap;
+    let mut cap_events: VecDeque<PowerCapEvent> = {
+        let mut evs = cfg.cap_events.clone();
+        evs.sort_by(|a, b| a.at.as_secs().total_cmp(&b.at.as_secs()));
+        evs.into()
+    };
+    let mut rebalancer = Rebalancer::new(cfg.rebalance.clone());
+    let mut migrations: Vec<MigrationRecord> = Vec::new();
+    let mut in_flight: Vec<InFlight> = Vec::new();
 
     let max = cfg.max_sim_time.as_secs();
     loop {
         let now = worlds[0].now_secs();
 
+        // Scripted cap changes due now retarget admission control (and
+        // the cap-pressure trigger) before any decision this segment.
+        while cap_events
+            .front()
+            .is_some_and(|e| e.at.as_secs() <= now + 1e-9)
+        {
+            effective_cap = cap_events.pop_front().expect("non-empty").cap;
+            dispatcher.set_power_cap(effective_cap);
+        }
+
+        // Migrations due re-admit before anything else: the session was
+        // admitted once already, so the move must not cost it its place
+        // behind the FIFO queue.
+        let mut mi = 0;
+        while mi < in_flight.len() {
+            if in_flight[mi].spec.arrive_at.as_secs() > now + 1e-9 {
+                mi += 1;
+                continue;
+            }
+            let InFlight { mut spec, target, record } = in_flight.remove(mi);
+            let resumed_at = spec.arrive_at.as_secs();
+            let learned = LearnedQuery::for_spec(cfg.history.as_ref(), &spec);
+            // Computed after the removal above, so the resuming session
+            // does not block itself with its own reservation.
+            let reserved = reserved_slots(&in_flight, worlds.len());
+            let candidates = build_candidates(
+                &worlds,
+                &cfg.hosts,
+                learned.as_ref(),
+                cfg.price_queue_delay,
+                &reserved,
+            );
+            // The planned target takes the session back if it still can
+            // (free slot, cap headroom); a fleet that changed during the
+            // drain falls back to a fresh placement decision.
+            let direct = candidates
+                .iter()
+                .find(|c| c.host == target && c.free_slots > 0)
+                .filter(|c| cap_ok(effective_cap, c.projected_fleet_power_w))
+                .map(|c| PlaceDecision::Admit(c.host));
+            match direct.unwrap_or_else(|| dispatcher.place(&candidates)) {
+                PlaceDecision::Admit(h) => {
+                    decisions.push(make_record(
+                        now,
+                        &spec.name,
+                        resumed_at,
+                        Some(h),
+                        &candidates,
+                        &cfg.hosts,
+                    ));
+                    if h != target {
+                        migrations[record].to_host = h;
+                        migrations[record].to = cfg.hosts[h].name.clone();
+                    }
+                    let marginal = candidates
+                        .iter()
+                        .find(|c| c.host == h)
+                        .map(|c| c.marginal_j_per_byte());
+                    warm_start_on_host(&mut spec, &worlds[h], learned.as_ref());
+                    let fp = learned.map(|l| l.fingerprint);
+                    worlds[h].register_arrival(spec, fp, marginal);
+                }
+                _ => {
+                    // Nowhere to land right now: wait at the queue head
+                    // (the resuming session is the oldest requester).
+                    decisions.push(make_record(
+                        now,
+                        &spec.name,
+                        resumed_at,
+                        None,
+                        &candidates,
+                        &cfg.hosts,
+                    ));
+                    queue.push_front((spec, resumed_at, learned, Some(record)));
+                }
+            }
+        }
+
         // Queued sessions retry first (FIFO: stop at the first that still
         // does not fit), then arrivals due now. A newcomer never jumps an
-        // occupied queue.
+        // occupied queue. In-flight migrations keep their target slots
+        // reserved against both.
+        let reserved = reserved_slots(&in_flight, worlds.len());
         while !queue.is_empty() {
             let candidates = {
                 let head = queue.front().expect("non-empty");
-                build_candidates(&worlds, &cfg.hosts, head.2.as_ref())
+                build_candidates(
+                    &worlds,
+                    &cfg.hosts,
+                    head.2.as_ref(),
+                    cfg.price_queue_delay,
+                    &reserved,
+                )
             };
             match dispatcher.place(&candidates) {
                 PlaceDecision::Admit(h) => {
-                    let (mut spec, requested, lq) = queue.pop_front().expect("non-empty");
+                    let (mut spec, requested, lq, migrated) =
+                        queue.pop_front().expect("non-empty");
                     decisions.push(make_record(
                         now,
                         &spec.name,
@@ -700,8 +957,20 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         &candidates,
                         &cfg.hosts,
                     ));
+                    // A resuming migrant that lands off its planned
+                    // target corrects its migration record.
+                    if let Some(rec) = migrated {
+                        if migrations[rec].to_host != h {
+                            migrations[rec].to_host = h;
+                            migrations[rec].to = cfg.hosts[h].name.clone();
+                        }
+                    }
+                    let marginal = candidates
+                        .iter()
+                        .find(|c| c.host == h)
+                        .map(|c| c.marginal_j_per_byte());
                     warm_start_on_host(&mut spec, &worlds[h], lq.as_ref());
-                    worlds[h].register_arrival(spec, lq.map(|l| l.fingerprint));
+                    worlds[h].register_arrival(spec, lq.map(|l| l.fingerprint), marginal);
                 }
                 _ => break,
             }
@@ -713,7 +982,13 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
             let mut spec = pending.pop_front().expect("non-empty");
             let requested = spec.arrive_at.as_secs();
             let learned = LearnedQuery::for_spec(cfg.history.as_ref(), &spec);
-            let candidates = build_candidates(&worlds, &cfg.hosts, learned.as_ref());
+            let candidates = build_candidates(
+                &worlds,
+                &cfg.hosts,
+                learned.as_ref(),
+                cfg.price_queue_delay,
+                &reserved,
+            );
             let decision = if queue.is_empty() {
                 dispatcher.place(&candidates)
             } else {
@@ -729,9 +1004,13 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         &candidates,
                         &cfg.hosts,
                     ));
+                    let marginal = candidates
+                        .iter()
+                        .find(|c| c.host == h)
+                        .map(|c| c.marginal_j_per_byte());
                     warm_start_on_host(&mut spec, &worlds[h], learned.as_ref());
                     let fp = learned.map(|l| l.fingerprint);
-                    worlds[h].register_arrival(spec, fp);
+                    worlds[h].register_arrival(spec, fp, marginal);
                 }
                 _ => {
                     decisions.push(make_record(
@@ -742,21 +1021,25 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         &candidates,
                         &cfg.hosts,
                     ));
-                    queue.push_back((spec, requested, learned));
+                    queue.push_back((spec, requested, learned, None));
                 }
             }
         }
 
         let all_done = worlds.iter().all(|w| w.all_done());
-        if (pending.is_empty() && queue.is_empty() && all_done) || now >= max {
+        if (pending.is_empty() && queue.is_empty() && in_flight.is_empty() && all_done)
+            || now >= max
+        {
             break;
         }
-        // Stuck queue: nothing is running or pending, yet the head still
-        // does not fit. Occupancy — and therefore every projection the
-        // cap is checked against — can never change again, so simulating
-        // idle hosts until the time cap would be pure waste: end the run
-        // now and report the queue as unplaced.
-        if pending.is_empty() && all_done && !queue.is_empty() {
+        // Stuck queue: nothing is running, pending or mid-drain, yet the
+        // head still does not fit. Occupancy — and therefore every
+        // projection the cap is checked against — can never change again,
+        // so simulating idle hosts until the time cap would be pure
+        // waste: end the run now and report the queue as unplaced. (A
+        // drain in flight *will* change occupancy, so it keeps the loop
+        // alive.)
+        if pending.is_empty() && in_flight.is_empty() && all_done && !queue.is_empty() {
             break;
         }
 
@@ -766,11 +1049,18 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         }
 
         // Cross-host event horizon: the earliest driver-level event on
-        // any host, or the next arrival, or the time cap. Between now and
+        // any host, the next arrival, the next migration resume, the
+        // next scripted cap change, or the time cap. Between now and
         // then every tick on every host is pure stepping.
         let mut horizon = max;
         if let Some(s) = pending.front() {
             horizon = horizon.min(s.arrive_at.as_secs());
+        }
+        for m in &in_flight {
+            horizon = horizon.min(m.spec.arrive_at.as_secs());
+        }
+        if let Some(e) = cap_events.front() {
+            horizon = horizon.min(e.at.as_secs());
         }
         for w in worlds.iter() {
             horizon = horizon.min(w.internal_horizon(max));
@@ -794,15 +1084,88 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         for w in worlds.iter_mut() {
             w.post_segment();
         }
+
+        // Rebalance step: with departures handled and the clock fresh,
+        // the rebalancer sees exactly the occupancy the next admission
+        // decision would. At most one move per segment boundary — each
+        // subsequent move is priced against re-taken projections.
+        if rebalancer.active() {
+            let now = worlds[0].now_secs();
+            // Sessions mid-drain are resident nowhere, but their planned
+            // target slot — and their imminent draw there — are spoken
+            // for: fold them into the target's occupancy so a second
+            // move cannot double-book the slot and the cap trigger sees
+            // the fleet's post-resume projection, not the drain dip.
+            let reserved = reserved_slots(&in_flight, worlds.len());
+            let views: Vec<HostView> = worlds
+                .iter()
+                .enumerate()
+                .map(|(i, w)| {
+                    let active = w.occupancy() + reserved[i];
+                    HostView {
+                        host: i,
+                        active,
+                        free_slots: cfg.hosts[i].max_sessions.saturating_sub(active),
+                        idle_power_w: w.projected_power_w(0),
+                        power_now_w: w.projected_power_w(active),
+                        power_minus_one_w: w.projected_power_w(active.saturating_sub(1)),
+                        power_plus_one_w: w.projected_power_w(active + 1),
+                        session_bps_now: w.projected_session_bps(active),
+                        session_bps_plus_one: w.projected_session_bps(active + 1),
+                        session_bps_alone: w.projected_session_bps(1),
+                        rtt_s: w.link_rtt_s(),
+                        sessions: w
+                            .running_sessions()
+                            .into_iter()
+                            .map(|(tenant, name, remaining_bytes)| SessionView {
+                                tenant,
+                                name,
+                                remaining_bytes,
+                            })
+                            .collect(),
+                    }
+                })
+                .collect();
+            if let Some(mv) = rebalancer.propose(&views, effective_cap.map(|p| p.as_watts())) {
+                let pre = worlds[mv.from].preempt(mv.tenant);
+                rebalancer.note_move(&pre.name);
+                let drain = rebalancer.drain().as_secs();
+                let spec = TenantSpec::new(pre.name.clone(), pre.dataset, pre.algorithm)
+                    .arriving_at(SimTime::from_secs(now + drain));
+                migrations.push(MigrationRecord {
+                    t_secs: now,
+                    session: pre.name,
+                    from_host: mv.from,
+                    from: cfg.hosts[mv.from].name.clone(),
+                    to_host: mv.to,
+                    to: cfg.hosts[mv.to].name.clone(),
+                    moved_bytes: pre.moved.as_f64(),
+                    remaining_bytes: pre.remaining.as_f64(),
+                    drain_secs: drain,
+                    resume_at_secs: now + drain,
+                    est_benefit_j: mv.est_benefit_j,
+                    est_cost_j: mv.est_cost_j,
+                    policy: rebalancer.policy().id(),
+                });
+                in_flight.push(InFlight {
+                    spec,
+                    target: mv.to,
+                    record: migrations.len() - 1,
+                });
+            }
+        }
     }
 
-    let completed =
-        pending.is_empty() && queue.is_empty() && worlds.iter().all(|w| w.all_done());
+    let completed = pending.is_empty()
+        && queue.is_empty()
+        && in_flight.is_empty()
+        && worlds.iter().all(|w| w.all_done());
     let duration = worlds[0].sim.now.since(SimTime::ZERO);
     let unplaced: Vec<String> = queue
         .iter()
-        .map(|(s, _, _)| s.name.clone())
+        .map(|(s, _, _, _)| s.name.clone())
         .chain(pending.iter().map(|s| s.name.clone()))
+        .chain(in_flight.iter().map(|m| m.spec.name.clone()))
         .collect();
     let policy = format!("{}+{}", cfg.placement.id(), worlds[0].policy_name());
 
@@ -846,6 +1209,7 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
             run_records,
         },
         decisions,
+        migrations,
         unplaced,
     }
 }
@@ -872,6 +1236,7 @@ mod tests {
             projected_power_w: proj_w,
             projected_session_bps: bps,
             projected_fleet_power_w: fleet_w,
+            queue_delay_j_per_byte: 0.0,
             learned_j_per_byte: None,
             learned_weight: 0.0,
         }
@@ -997,6 +1362,47 @@ mod tests {
     }
 
     #[test]
+    fn queue_delay_price_breaks_saturated_host_blindness() {
+        // The goodput-blind case: host 0 is saturated (adding a session
+        // costs ~0 marginal watts because the link caps aggregate
+        // demand), so pure marginal energy scores it as nearly free even
+        // though the new session would crawl. The queue-delay price makes
+        // the idle empty host win instead.
+        let mut d = Dispatcher::new(PlacementKind::MarginalEnergy, None);
+        let mut saturated = cand(0, 4, 4, 60.0, 60.5, 25e6, 80.0); // 0.02 µJ/B marginal
+        let fresh = cand(1, 0, 8, 20.0, 38.0, 100e6, 98.5); // 0.18 µJ/B marginal
+        assert_eq!(
+            d.place(&[saturated, fresh]),
+            PlaceDecision::Admit(0),
+            "without the price, the saturated host looks cheapest"
+        );
+        // Price the contention: 20 W idle × (1/25 MB/s − 1/125 MB/s).
+        saturated.queue_delay_j_per_byte = 20.0 * (1.0 / 25e6 - 1.0 / 125e6);
+        assert!(saturated.score() > fresh.score());
+        assert_eq!(
+            d.place(&[saturated, fresh]),
+            PlaceDecision::Admit(1),
+            "the priced saturated host loses to the idle one"
+        );
+        // An unpriced candidate's score reduces to the pure marginal.
+        assert_eq!(fresh.score(), fresh.marginal_j_per_byte());
+    }
+
+    #[test]
+    fn set_power_cap_retargets_admission_mid_run() {
+        let mut d =
+            Dispatcher::new(PlacementKind::MarginalEnergy, Some(Power::from_watts(100.0)));
+        let cands = vec![cand(0, 0, 4, 20.0, 35.0, 100e6, 75.0)];
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(0));
+        // Tighten below the projection: the same candidate now queues.
+        d.set_power_cap(Some(Power::from_watts(70.0)));
+        assert_eq!(d.place(&cands), PlaceDecision::QueuePowerCap);
+        // Removing the cap admits freely again.
+        d.set_power_cap(None);
+        assert_eq!(d.place(&cands), PlaceDecision::Admit(0));
+    }
+
+    #[test]
     fn power_cap_queues_or_reroutes() {
         let mut d =
             Dispatcher::new(PlacementKind::MarginalEnergy, Some(Power::from_watts(70.0)));
@@ -1061,6 +1467,7 @@ mod tests {
             moved_bytes: 11.7e9,
             duration_s: 110.0,
             completed: true,
+            admission_marginal_jpb: None,
             traj: Vec::new(),
         };
         let index = KnnIndex::build(&[record]);

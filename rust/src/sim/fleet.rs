@@ -20,7 +20,7 @@ use crate::config::Testbed;
 use crate::coordinator::fleet::{FleetPolicy, FleetPolicyKind};
 use crate::coordinator::{Algorithm, AlgorithmKind};
 use crate::cpusim::{CpuDemand, CpuState};
-use crate::dataset::Dataset;
+use crate::dataset::{Dataset, FileSpec};
 use crate::history::{RunRecord, TrajPoint, WorkloadFingerprint};
 use crate::netsim::BandwidthEvent;
 use crate::sim::{Simulation, TickStats, TuneCtx, MAX_APP_UTILIZATION};
@@ -138,8 +138,17 @@ pub struct TenantOutcome {
     /// single-host fleet, the [`super::dispatcher::HostSpec`] name in a
     /// multi-host world.
     pub host: String,
-    /// Whether the transfer finished before the time cap.
+    /// Whether the transfer finished before the time cap. False for a
+    /// residency ended by preemption — the rebalancer re-admits the
+    /// remaining bytes elsewhere, producing a second outcome under the
+    /// same name.
     pub completed: bool,
+    /// True when this residency ended because the fleet rebalancer
+    /// preempted the session ([`crate::rebalance`]); `moved` then counts
+    /// only the bytes delivered *here*, and the matching
+    /// [`MigrationRecord`](crate::sim::MigrationRecord) names the target
+    /// host serving the rest.
+    pub preempted: bool,
     /// When the session was admitted.
     pub arrived_at: SimTime,
     /// When the transfer finished (`None` if it never did).
@@ -254,14 +263,21 @@ impl FleetOutcome {
     }
 
     /// Jain fairness index over per-tenant goodput (average throughput of
-    /// every tenant that was admitted). 1.0 = perfectly fair.
+    /// every tenant that was admitted). A migrated session appears once
+    /// per residency in [`Self::tenants`]; its residencies are aggregated
+    /// by name here, so the index measures per-*session* goodput, not
+    /// per-residency. 1.0 = perfectly fair.
     pub fn jain_fairness(&self) -> f64 {
-        jain_index(
-            self.tenants
-                .iter()
-                .filter(|t| t.residency > SimDuration::ZERO)
-                .map(|t| t.avg_throughput.as_bytes_per_sec()),
-        )
+        let mut agg: std::collections::BTreeMap<&str, (f64, f64)> =
+            std::collections::BTreeMap::new();
+        for t in &self.tenants {
+            if t.residency > SimDuration::ZERO {
+                let e = agg.entry(t.name.as_str()).or_insert((0.0, 0.0));
+                e.0 += t.moved.as_f64();
+                e.1 += t.residency.as_secs();
+            }
+        }
+        jain_index(agg.values().filter(|(_, s)| *s > 0.0).map(|(b, s)| b / s))
     }
 }
 
@@ -292,6 +308,14 @@ struct TenantRun {
     /// point recorded into history).
     settled_cores: u32,
     settled_pstate: u32,
+    /// True when the residency ended by rebalancer preemption rather than
+    /// completion (`finished_at` is then the preemption instant).
+    preempted: bool,
+    /// The dispatcher's model-side marginal J/B score for the admitting
+    /// host at admission time (`None` on single-host fleets, which have
+    /// no placement step) — recorded into history so learned placement
+    /// can blend scale-consistent terms.
+    admission_marginal_jpb: Option<f64>,
 }
 
 /// The slice of a [`TenantSpec`] the driver still needs after
@@ -305,6 +329,9 @@ struct TenantMeta {
     arrive_at: SimTime,
     fingerprint: WorkloadFingerprint,
     algo_id: &'static str,
+    /// The full algorithm kind, kept so a preempted session can be
+    /// re-initialized verbatim on its migration target.
+    kind: AlgorithmKind,
 }
 
 /// Install the policy's per-session channel budget on one tenant's
@@ -431,16 +458,19 @@ impl HostWorld {
         &mut self,
         mut spec: TenantSpec,
         fingerprint: Option<WorkloadFingerprint>,
+        admission_marginal_jpb: Option<f64>,
     ) {
         spec.arrive_at = self.sim.now;
         let (mut run, engine, _cpu) = init_tenant(&spec, self.params, &self.testbed);
         run.slot = self.sim.add_slot(engine);
+        run.admission_marginal_jpb = admission_marginal_jpb.filter(|m| m.is_finite());
         self.tenants.push(run);
         // Drop the dataset: only the name, arrival instant and workload
         // fingerprint are needed from here on.
         self.specs.push(TenantMeta {
             fingerprint: fingerprint.unwrap_or_else(|| WorkloadFingerprint::of(&spec.dataset)),
             algo_id: spec.algorithm.id(),
+            kind: spec.algorithm,
             name: spec.name,
             arrive_at: spec.arrive_at,
         });
@@ -570,7 +600,29 @@ impl HostWorld {
                 let view = self.sim.host.drain_fleet_interval(self.sim.now, active);
                 let directive = p.arbitrate(&view, &mut self.sim.host.client);
                 self.channel_cap = directive.per_session_channel_cap;
-                if let Some(cap) = self.channel_cap {
+                if let Some(total) = directive.weighted_channel_budget {
+                    // Weighted split: each active session's slice of the
+                    // total budget is proportional to its remaining
+                    // bytes, so heavy tenants get the concurrency and
+                    // near-done ones release it (ROADMAP "smarter
+                    // arbitration"). Newly admitted sessions run under
+                    // `channel_cap` (the equal-split fallback the policy
+                    // also returns) until the next arbitration.
+                    let idx: Vec<usize> = (0..self.tenants.len())
+                        .filter(|&i| {
+                            self.tenants[i].admitted && self.tenants[i].finished_at.is_none()
+                        })
+                        .collect();
+                    let remaining: Vec<f64> =
+                        idx.iter().map(|&i| self.tenant_remaining_bytes(i)).collect();
+                    let caps = crate::coordinator::fleet::weighted_caps(total, &remaining);
+                    for (&i, &cap) in idx.iter().zip(&caps) {
+                        let slot = self.tenants[i].slot;
+                        apply_cap(&mut self.sim, slot, cap);
+                        self.tenants[i].last_channels =
+                            self.sim.slot(slot).engine.num_channels().max(1);
+                    }
+                } else if let Some(cap) = self.channel_cap {
                     for t in self.tenants.iter_mut() {
                         if t.admitted && t.finished_at.is_none() {
                             apply_cap(&mut self.sim, t.slot, cap);
@@ -603,9 +655,15 @@ impl HostWorld {
         }
     }
 
-    /// True once every registered session has moved all of its data.
+    /// True once every registered session is finished with this host:
+    /// its engine has moved all of its data, or its residency was ended
+    /// (completion or preemption — a preempted engine keeps its remaining
+    /// bytes, which now belong to another host's re-admission). Without
+    /// preemptions this is exactly [`Simulation::is_done`].
     pub(crate) fn all_done(&self) -> bool {
-        self.sim.is_done()
+        self.tenants
+            .iter()
+            .all(|t| t.finished_at.is_some() || self.sim.slot(t.slot).engine.is_done())
     }
 
     /// Name of the arbitration policy in charge ("none" without one).
@@ -628,6 +686,70 @@ impl HostWorld {
     /// arrivals must each claim their slot immediately.
     pub(crate) fn occupancy(&self) -> u32 {
         self.tenants.iter().filter(|t| t.finished_at.is_none()).count() as u32
+    }
+
+    /// The sessions currently *running* here (admitted, activated,
+    /// unfinished) as `(tenant index, name, remaining bytes)` — the
+    /// rebalancer's per-host move candidates. Sessions registered this
+    /// segment but not yet activated are excluded: they have not served a
+    /// single tick, so "moving" them would just be a second placement
+    /// decision.
+    pub(crate) fn running_sessions(&self) -> Vec<(usize, String, f64)> {
+        self.tenants
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                t.admitted && t.finished_at.is_none() && self.sim.slot(t.slot).is_active()
+            })
+            .map(|(i, t)| {
+                (i, self.specs[i].name.clone(), self.sim.slot(t.slot).engine.remaining().as_f64())
+            })
+            .collect()
+    }
+
+    /// Path round-trip time of this host's link, seconds (prices the
+    /// migration slow-start re-ramp).
+    pub(crate) fn link_rtt_s(&self) -> f64 {
+        self.testbed.link.rtt.as_secs()
+    }
+
+    /// Remaining bytes of one tenant's engine (weighted-split input).
+    fn tenant_remaining_bytes(&self, tenant: usize) -> f64 {
+        let slot = self.tenants[tenant].slot;
+        self.sim.slot(slot).engine.remaining().as_f64()
+    }
+
+    /// Preempt a running session for migration: end its residency *now*,
+    /// freeze its partial-run accounting (bytes delivered here, settled
+    /// operating point), drain its streams, and hand back everything the
+    /// dispatcher needs to re-admit the remaining bytes elsewhere. The
+    /// remaining bytes leave with the returned dataset — this host's
+    /// engine keeps them only as inert bookkeeping (`all_done` treats the
+    /// preempted tenant as departed).
+    pub(crate) fn preempt(&mut self, tenant: usize) -> PreemptedSession {
+        let now = self.sim.now;
+        let t = &mut self.tenants[tenant];
+        debug_assert!(
+            t.admitted && t.finished_at.is_none(),
+            "only running sessions can be preempted"
+        );
+        t.finished_at = Some(now);
+        t.preempted = true;
+        t.settled_cores = self.sim.host.client.active_cores();
+        t.settled_pstate = self.sim.host.client.freq_index() as u32;
+        let slot = t.slot;
+        let engine = &mut self.sim.slot_mut(slot).engine;
+        let moved = engine.total().saturating_sub(engine.remaining());
+        let dataset = remaining_dataset(&self.specs[tenant].name, engine.partitions());
+        engine.drain_channels();
+        self.sim.deactivate_slot(slot);
+        PreemptedSession {
+            name: self.specs[tenant].name.clone(),
+            algorithm: self.specs[tenant].kind,
+            moved,
+            remaining: dataset.total_size(),
+            dataset,
+        }
     }
 
     /// Analytic steady-state CPU demand estimate for `sessions` concurrent
@@ -703,7 +825,12 @@ impl HostWorld {
             } else {
                 SimDuration::ZERO
             };
-            if t.finished_at.is_some() && !moved.is_zero() {
+            // Preempted residencies are partial-run accounting, not
+            // completed transfers: they produce an outcome (with
+            // `preempted` set) but no history record — their J/B covers
+            // a truncated run the k-NN must not learn an operating point
+            // from. The resumed run on the target host records normally.
+            if t.finished_at.is_some() && !t.preempted && !moved.is_zero() {
                 records.push(run_record(
                     &t,
                     spec,
@@ -718,7 +845,8 @@ impl HostWorld {
                 name: spec.name.clone(),
                 algorithm: t.algo.name().to_string(),
                 host: name.clone(),
-                completed: t.finished_at.is_some(),
+                completed: t.finished_at.is_some() && !t.preempted,
+                preempted: t.preempted,
                 arrived_at: spec.arrive_at,
                 finished_at: t.finished_at,
                 moved,
@@ -754,8 +882,60 @@ impl TenantMeta {
             arrive_at: spec.arrive_at,
             fingerprint: WorkloadFingerprint::of(&spec.dataset),
             algo_id: spec.algorithm.id(),
+            kind: spec.algorithm,
         }
     }
+}
+
+/// What [`HostWorld::preempt`] hands the dispatcher: everything needed to
+/// re-admit the session's remaining bytes on another host.
+pub(crate) struct PreemptedSession {
+    /// Session name (unchanged across the move).
+    pub(crate) name: String,
+    /// The algorithm the session was admitted with, re-initialized
+    /// verbatim on the target (Algorithm 1 re-plans, the FSM re-tunes).
+    pub(crate) algorithm: AlgorithmKind,
+    /// Bytes the session delivered on the source before preemption.
+    pub(crate) moved: Bytes,
+    /// Bytes the synthesized remaining dataset carries.
+    pub(crate) remaining: Bytes,
+    /// The remaining bytes as a dataset the target can admit.
+    pub(crate) dataset: Dataset,
+}
+
+/// Synthesize the dataset a preempted session still owes: per unfinished
+/// partition, the remaining bytes re-materialize as files of that band's
+/// average size (plus one remainder file), so the target host's
+/// Algorithm-1 partitioning sees the same size classes the source was
+/// serving. Byte-exact up to f64 addition order: the file sizes sum to
+/// the engine's remaining bytes, which is what byte conservation across
+/// a migration means.
+fn remaining_dataset(name: &str, parts: &[crate::transfer::PartitionProgress]) -> Dataset {
+    let mut files = Vec::new();
+    let mut id = 0u32;
+    for p in parts {
+        let left = p.remaining.as_f64();
+        if left <= 0.0 {
+            continue;
+        }
+        let chunk = p.avg_file_size.as_f64().max(1.0);
+        let whole = (left / chunk).floor() as u64;
+        if whole == 0 {
+            files.push(FileSpec::new(id, Bytes::new(left)));
+            id += 1;
+            continue;
+        }
+        for _ in 0..whole {
+            files.push(FileSpec::new(id, Bytes::new(chunk)));
+            id += 1;
+        }
+        let rem = left - whole as f64 * chunk;
+        if rem > 0.0 {
+            files.push(FileSpec::new(id, Bytes::new(rem)));
+            id += 1;
+        }
+    }
+    Dataset::new(name.to_string(), files)
 }
 
 /// Assemble one completed tenant's history record. The settled operating
@@ -803,6 +983,7 @@ fn run_record(
         moved_bytes: moved_f,
         duration_s: residency.as_secs(),
         completed: true,
+        admission_marginal_jpb: t.admission_marginal_jpb,
         traj,
     }
 }
@@ -847,6 +1028,8 @@ fn init_tenant(
         last_channels: plan.num_channels,
         settled_cores: cpu.active_cores(),
         settled_pstate: cpu.freq_index() as u32,
+        preempted: false,
+        admission_marginal_jpb: None,
     };
     (run, engine, cpu)
 }
@@ -1078,6 +1261,51 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn weighted_share_gives_the_heavy_tenant_the_channels() {
+        // One 27.85 GB tenant next to a 1.94 GB one under WeightedShare:
+        // once the first arbitration has split the budget by remaining
+        // bytes, the heavy tenant must hold strictly more channels than
+        // the light one at every comparable timeline instant.
+        let mut cfg =
+            FleetConfig::new(testbeds::cloudlab(), Some(FleetPolicyKind::WeightedShare))
+                .with_seed(13);
+        cfg.tenants.push(TenantSpec::new(
+            "heavy",
+            standard::large_dataset(13),
+            AlgorithmKind::MaxThroughput,
+        ));
+        cfg.tenants.push(TenantSpec::new(
+            "light",
+            standard::small_dataset(14),
+            AlgorithmKind::MaxThroughput,
+        ));
+        cfg.record_timeline = true;
+        let out = run_fleet(&cfg);
+        assert!(out.completed, "both tenants must finish");
+        assert_eq!(out.policy, "weighted-share");
+        let heavy = &out.tenants[0];
+        let light = &out.tenants[1];
+        let light_exit = light.finished_at.unwrap().as_secs();
+        let mut compared = 0;
+        for (h, l) in heavy.timeline.iter().zip(&light.timeline) {
+            // Points record the state before that timeout's tuning step;
+            // the first weighted split (t=3 s) is visible from the
+            // second point on, while both tenants are still resident.
+            if h.t_secs >= 6.0 - 1e-9 && h.t_secs < light_exit {
+                assert!(
+                    h.channels > l.channels,
+                    "heavy {} ch vs light {} ch at t={}",
+                    h.channels,
+                    l.channels,
+                    h.t_secs
+                );
+                compared += 1;
+            }
+        }
+        assert!(compared >= 2, "the overlap must cover comparable points");
     }
 
     #[test]

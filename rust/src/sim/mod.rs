@@ -20,4 +20,6 @@ pub mod session;
 
 pub use engine::{SessionSlot, Simulation, TuneCtx};
 pub use host::{FleetView, Host, HostTick, ProjectedPoint, MAX_APP_UTILIZATION};
-pub use telemetry::{DispatchRecord, NetView, PlacementScore, Telemetry, TickStats};
+pub use telemetry::{
+    DispatchRecord, MigrationRecord, NetView, PlacementScore, Telemetry, TickStats,
+};

@@ -128,6 +128,13 @@ pub struct PlacementScore {
     pub projected_session_bps: f64,
     /// Marginal energy per byte: `(projected − current) / goodput`, J/B.
     pub marginal_j_per_byte: f64,
+    /// Queueing-delay price added to the ranking when the dispatcher runs
+    /// with queue-delay pricing (see
+    /// [`DispatcherConfig::price_queue_delay`](crate::sim::dispatcher::DispatcherConfig)):
+    /// the expected extra seconds-per-byte this placement suffers from
+    /// contention on the host, converted to J/B at the host's idle draw.
+    /// Zero when pricing is off or the host is idle.
+    pub queue_delay_j_per_byte: f64,
     /// History-observed J/B for a workload like this on this host, when a
     /// [`KnnIndex`](crate::history::KnnIndex) was attached to the run and
     /// had relevant records (`None` otherwise). What
@@ -173,6 +180,53 @@ impl DispatchRecord {
     pub fn waited_secs(&self) -> f64 {
         (self.t_secs - self.requested_at_secs).max(0.0)
     }
+}
+
+/// One live migration executed by the fleet rebalancer
+/// ([`crate::rebalance`]): a running session preempted on one host and
+/// its remaining bytes re-admitted on another after a drain delay. Sits
+/// next to [`DispatchRecord`] in
+/// [`DispatchOutcome`](crate::sim::dispatcher::DispatchOutcome) and is
+/// persisted to the history log as its own record kind, so moves can be
+/// mined offline alongside the placement decisions they second-guess.
+#[derive(Debug, Clone)]
+pub struct MigrationRecord {
+    /// When the session was preempted (simulated clock), seconds.
+    pub t_secs: f64,
+    /// Session name (unchanged across the move — its partial and resumed
+    /// outcomes share it).
+    pub session: String,
+    /// Index of the source host.
+    pub from_host: usize,
+    /// Name of the source host.
+    pub from: String,
+    /// Index of the target host the remaining bytes re-admit on. The
+    /// rebalancer's planned target at preemption time, corrected to the
+    /// actual admitting host if the fleet changed during the drain and
+    /// re-admission landed elsewhere; a migrated session still unplaced
+    /// when the run ends keeps the plan (and appears in `unplaced`).
+    pub to_host: usize,
+    /// Name of the target host (same correction rule as
+    /// [`Self::to_host`]).
+    pub to: String,
+    /// Bytes the session had already delivered on the source.
+    pub moved_bytes: f64,
+    /// Bytes re-admitted on the target (byte conservation:
+    /// `moved_bytes + remaining_bytes` equals the session's original
+    /// dataset size).
+    pub remaining_bytes: f64,
+    /// Drain/handoff delay the move paid, seconds.
+    pub drain_secs: f64,
+    /// When the remaining bytes were due to re-admit, seconds
+    /// (`t_secs + drain_secs`).
+    pub resume_at_secs: f64,
+    /// The rebalancer's estimated saving on the remaining bytes, J (may
+    /// be negative for cap-pressure moves).
+    pub est_benefit_j: f64,
+    /// The rebalancer's estimated cost of the move itself, J.
+    pub est_cost_j: f64,
+    /// Id of the rebalance policy that proposed the move.
+    pub policy: &'static str,
 }
 
 #[cfg(test)]

@@ -193,6 +193,22 @@ impl TransferEngine {
         self.generation += 1;
     }
 
+    /// Close every channel without touching partition progress — the
+    /// preemption/migration path: the remaining bytes stay exactly where
+    /// they are (the engine is *not* done), but no stream remains open,
+    /// so the session stops consuming link and CPU capacity immediately.
+    /// Structural (bumps the generation), so the epoch cache restages.
+    pub fn drain_channels(&mut self) {
+        if self.channels.is_empty() {
+            return;
+        }
+        self.channels.clear();
+        for p in &mut self.partitions {
+            p.cc_level = 0;
+        }
+        self.generation += 1;
+    }
+
     /// Cap the total channel count (a fleet policy's per-session budget).
     /// Every later [`Self::set_num_channels`] clamps to this ceiling, so a
     /// tuning algorithm asking for more does not churn channels open and
@@ -736,6 +752,34 @@ mod tests {
         }
         assert!(!e.is_done(), "large dataset cannot finish in 2 s");
         assert_eq!(e.generation(), g2, "plain ticks are not structural");
+    }
+
+    #[test]
+    fn drain_channels_stops_work_but_keeps_remaining_bytes() {
+        let link = cloudlab_link();
+        let mut e = engine_for("medium", &link);
+        e.set_num_channels(6);
+        let dt = SimDuration::from_millis(100.0);
+        for _ in 0..20 {
+            e.tick(&link, dt, f64::INFINITY);
+        }
+        let remaining = e.remaining();
+        assert!(!e.is_done() && remaining > Bytes::ZERO);
+        let g0 = e.generation();
+        e.drain_channels();
+        assert!(e.generation() > g0, "draining is structural");
+        assert_eq!(e.num_channels(), 0);
+        assert_eq!(e.open_streams(), 0);
+        assert!(e.partitions().iter().all(|p| p.cc_level == 0));
+        // The bytes stay put: a drained engine is parked, not finished.
+        assert_eq!(e.remaining(), remaining);
+        assert!(!e.is_done());
+        let out = e.tick(&link, dt, f64::INFINITY);
+        assert_eq!(out.moved, Bytes::ZERO, "no channels, no movement");
+        // Draining an already-drained engine is a no-op.
+        let g1 = e.generation();
+        e.drain_channels();
+        assert_eq!(e.generation(), g1);
     }
 
     #[test]
