@@ -1,0 +1,29 @@
+//! Scale bench: dispatcher throughput as fleets grow, swept over shard
+//! counts, written to `BENCH_scale.json`.
+//!
+//!     cargo bench --bench bench_scale              # full curve
+//!     cargo bench --bench bench_scale -- --smoke   # trimmed CI grid
+//!
+//! Thin wrapper over [`greendt::benchkit::scale`]. Every grid point is
+//! measured at 1, 2 and 8 shards on the identical synchronized-arrival,
+//! constant-background workload; multi-shard runs are bit-compared to
+//! the 1-shard outcome before being reported. The full grid tops out at
+//! 1,000 hosts / 100,000 sessions.
+//!
+//! Set `GREENDT_BENCH_JSON=<path>` to redirect the report (default
+//! `BENCH_scale.json` in the working directory).
+
+use greendt::benchkit::scale;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "== bench_scale: sharded dispatcher scale curve{} ==\n",
+        if smoke { " (smoke)" } else { "" }
+    );
+    let report = scale::run(smoke);
+    let path = std::env::var("GREENDT_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_scale.json".to_string());
+    report.write_json(&path).expect("writing BENCH_scale.json");
+    println!("\nbench report written to {path}");
+}

@@ -1,0 +1,281 @@
+//! The scale benchmark: dispatcher throughput as fleets grow, swept
+//! over shard counts — shared by `cargo bench --bench bench_scale`.
+//!
+//! Each grid point runs an identical synchronized-arrival workload
+//! (every session requested at t = 0, constant background so warm
+//! epochs batch) at shard counts [`SHARD_SWEEP`], reporting
+//! sim-seconds-per-wall-second per run into `BENCH_scale.json`. The
+//! 1-shard run is the serial reference loop, so the committed curve
+//! doubles as the speedup claim for the sharded + warm-batched path:
+//! `speedup_8v1` is the ratio at the largest grid point.
+//!
+//! Every multi-shard run is bit-compared against its point's 1-shard
+//! outcome before it is reported — the bench refuses to publish a
+//! throughput number for a run that broke shard-count invariance.
+//!
+//! The smoke grid (CI) tops out at 16 hosts / 64 sessions; the full
+//! grid climbs to 1,000 hosts / 100,000 sessions.
+
+use super::{json_f64, time_once};
+use crate::coordinator::{AlgorithmKind, FleetPolicyKind, PlacementKind};
+use crate::dataset::{generate, DatasetSpec};
+use crate::sim::dispatcher::{
+    run_dispatcher, DispatchOutcome, DispatcherConfig, HostSpec, SessionSpec,
+};
+use crate::units::{Bytes, SimDuration};
+
+use super::hotpath::SessionRate;
+
+/// Shard counts every grid point is measured at. 1 is the serial
+/// reference loop; 8 is the figure the acceptance criteria track.
+pub const SHARD_SWEEP: [usize; 3] = [1, 2, 8];
+
+/// One measured run: a `(hosts, sessions)` grid point at one shard
+/// count.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalePoint {
+    /// Fleet size.
+    pub hosts: usize,
+    /// Total sessions in the workload.
+    pub sessions: usize,
+    /// Shard count the run used (1 = serial reference loop).
+    pub shards: usize,
+    /// Measured simulated-time throughput.
+    pub rate: SessionRate,
+}
+
+impl ScalePoint {
+    fn to_json(self) -> String {
+        format!(
+            "{{\"hosts\":{},\"sessions\":{},\"shards\":{},\"sim_seconds\":{},\
+             \"wall_seconds\":{},\"sim_seconds_per_wall_second\":{}}}",
+            self.hosts,
+            self.sessions,
+            self.shards,
+            json_f64(self.rate.sim_seconds),
+            json_f64(self.rate.wall_seconds),
+            json_f64(self.rate.sim_seconds_per_wall_second())
+        )
+    }
+}
+
+/// Everything one scale sweep produced (the `BENCH_scale.json` schema).
+#[derive(Debug, Clone)]
+pub struct ScaleReport {
+    /// True when the trimmed CI grid ran instead of the full curve.
+    pub smoke: bool,
+    /// Every `(hosts, sessions, shards)` run, in execution order.
+    pub points: Vec<ScalePoint>,
+}
+
+impl ScaleReport {
+    /// 8-shard over 1-shard throughput at the largest grid point that
+    /// carries both runs — the acceptance figure (≥ 4× expected: warm
+    /// batching compounds with threading even on small CI runners).
+    pub fn speedup_8v1(&self) -> f64 {
+        let mut best = 0.0_f64;
+        let mut speedup = 0.0_f64;
+        for p8 in self.points.iter().filter(|p| p.shards == 8) {
+            let Some(p1) = self
+                .points
+                .iter()
+                .find(|p| p.shards == 1 && p.hosts == p8.hosts && p.sessions == p8.sessions)
+            else {
+                continue;
+            };
+            let size = (p8.hosts * p8.sessions) as f64;
+            if size > best {
+                best = size;
+                speedup = p8.rate.sim_seconds_per_wall_second()
+                    / p1.rate.sim_seconds_per_wall_second().max(1e-12);
+            }
+        }
+        speedup
+    }
+
+    /// The machine-readable report (the `BENCH_scale.json` schema).
+    pub fn to_json(&self) -> String {
+        let grid: Vec<String> = self.points.iter().map(|p| p.to_json()).collect();
+        format!(
+            "{{\n  \"bench\": \"scale\",\n  \"measured\": true,\n  \"smoke\": {},\n  \
+             \"shard_sweep\": [1, 2, 8],\n  \"speedup_8v1\": {},\n  \"grid\": [\n    {}\n  ]\n}}\n",
+            self.smoke,
+            json_f64(self.speedup_8v1()),
+            grid.join(",\n    ")
+        )
+    }
+
+    /// Write [`Self::to_json`] to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// One grid point's workload: `sessions` synchronized arrivals (all
+/// requested at t = 0) over `hosts` machines cycling the three paper
+/// testbeds, round-robin placement (an O(hosts) decision, so placement
+/// cost cannot drown the stepping cost being measured), constant
+/// background so warm epochs batch. Arrivals beyond the slot pools
+/// queue and re-admit as sessions finish — admission control is part of
+/// the measured path on purpose.
+fn scale_cfg(hosts: usize, sessions: usize, shards: usize, smoke: bool) -> DispatcherConfig {
+    let testbeds = crate::config::testbeds::all();
+    let host_specs: Vec<HostSpec> = (0..hosts)
+        .map(|i| {
+            let tb = testbeds[i % testbeds.len()].clone();
+            HostSpec::new(format!("host{i}-{}", tb.name), tb).with_max_sessions(8)
+        })
+        .collect();
+    // Per-session micro dataset: a handful of large files so 100k
+    // engines stay cheap to hold. Smoke halves the bytes again.
+    let (files, avg_mb) = if smoke { (8, 32.0) } else { (16, 64.0) };
+    let spec = DatasetSpec::new(
+        "scale",
+        files,
+        Bytes::from_mb(avg_mb),
+        Bytes::from_mb(avg_mb / 8.0),
+    );
+    let specs: Vec<SessionSpec> = (0..sessions)
+        .map(|i| {
+            SessionSpec::new(
+                format!("session-{i}"),
+                generate(&spec, 42 + i as u64),
+                AlgorithmKind::MaxThroughput,
+            )
+        })
+        .collect();
+    let mut cfg = DispatcherConfig::new(host_specs, PlacementKind::RoundRobin)
+        .with_sessions(specs)
+        .with_seed(42)
+        .with_shards(shards)
+        .with_constant_bg();
+    cfg.policy = FleetPolicyKind::MinEnergyFleet;
+    cfg.max_sim_time = SimDuration::from_secs(28_800.0);
+    cfg
+}
+
+/// Shard-count invariance is a hard contract: refuse to report a
+/// throughput for a run whose outcome drifted from the 1-shard one.
+fn assert_outcomes_identical(reference: &DispatchOutcome, run: &DispatchOutcome, shards: usize) {
+    assert_eq!(
+        reference.fleet.duration.as_secs().to_bits(),
+        run.fleet.duration.as_secs().to_bits(),
+        "{shards}-shard run diverged from the serial loop on duration"
+    );
+    assert_eq!(
+        reference.fleet.moved.as_f64().to_bits(),
+        run.fleet.moved.as_f64().to_bits(),
+        "{shards}-shard run diverged from the serial loop on bytes moved"
+    );
+    assert_eq!(
+        reference.fleet.client_energy.as_joules().to_bits(),
+        run.fleet.client_energy.as_joules().to_bits(),
+        "{shards}-shard run diverged from the serial loop on energy"
+    );
+    assert_eq!(
+        reference.decisions.len(),
+        run.decisions.len(),
+        "{shards}-shard run diverged from the serial loop on decisions"
+    );
+}
+
+/// Run the sweep. `smoke` uses the trimmed CI grid; the full grid's
+/// largest point is 1,000 hosts / 100,000 sessions.
+pub fn run(smoke: bool) -> ScaleReport {
+    let grid: &[(usize, usize)] = if smoke {
+        &[(4, 16), (16, 64)]
+    } else {
+        &[(10, 1_000), (100, 10_000), (1_000, 100_000)]
+    };
+    let mut points = Vec::new();
+    for &(hosts, sessions) in grid {
+        let mut serial: Option<DispatchOutcome> = None;
+        for shards in SHARD_SWEEP {
+            let cfg = scale_cfg(hosts, sessions, shards, smoke);
+            let (out, wall) = time_once(
+                &format!("dispatcher/{hosts} hosts/{sessions} sessions/{shards} shards"),
+                || run_dispatcher(&cfg),
+            );
+            assert!(out.fleet.completed, "{hosts}x{sessions} did not finish under the time cap");
+            match &serial {
+                None => serial = Some(out.clone()),
+                Some(reference) => assert_outcomes_identical(reference, &out, shards),
+            }
+            points.push(ScalePoint {
+                hosts,
+                sessions,
+                shards,
+                rate: SessionRate {
+                    sim_seconds: out.fleet.duration.as_secs(),
+                    wall_seconds: wall,
+                },
+            });
+        }
+        println!();
+    }
+    let report = ScaleReport { smoke, points };
+    println!("  speedup (8 shards vs 1, largest point): {:.2}x", report.speedup_8v1());
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(hosts: usize, sessions: usize, shards: usize, rate: f64) -> ScalePoint {
+        ScalePoint {
+            hosts,
+            sessions,
+            shards,
+            rate: SessionRate { sim_seconds: rate, wall_seconds: 1.0 },
+        }
+    }
+
+    #[test]
+    fn speedup_reads_the_largest_point() {
+        let report = ScaleReport {
+            smoke: true,
+            points: vec![
+                point(4, 16, 1, 100.0),
+                point(4, 16, 8, 900.0), // 9x on the small point
+                point(16, 64, 1, 100.0),
+                point(16, 64, 8, 600.0), // 6x on the largest — this wins
+            ],
+        };
+        assert!((report.speedup_8v1() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_without_pairs_is_zero() {
+        let report = ScaleReport { smoke: true, points: vec![point(4, 16, 2, 100.0)] };
+        assert_eq!(report.speedup_8v1(), 0.0);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let report = ScaleReport {
+            smoke: false,
+            points: vec![point(4, 16, 1, 100.0), point(4, 16, 8, 500.0)],
+        };
+        let j = report.to_json();
+        assert!(j.contains("\"bench\": \"scale\""));
+        assert!(j.contains("\"measured\": true"));
+        assert!(j.contains("\"smoke\": false"));
+        assert!(j.contains("\"speedup_8v1\": 5"));
+        assert!(j.contains("\"hosts\":4"));
+        assert!(j.contains("\"shards\":8"));
+    }
+
+    #[test]
+    fn scale_config_builds_the_requested_fleet() {
+        let cfg = scale_cfg(5, 12, 2, true);
+        assert_eq!(cfg.hosts.len(), 5);
+        assert_eq!(cfg.sessions.len(), 12);
+        assert_eq!(cfg.shards, 2);
+        assert!(cfg.constant_bg);
+        // Synchronized arrivals: every session requested at t = 0.
+        assert!(cfg.sessions.iter().all(|s| s.arrive_at.as_secs() == 0.0));
+        // Testbeds cycle, so a 5-host fleet is heterogeneous.
+        assert_ne!(cfg.hosts[0].testbed.name, cfg.hosts[1].testbed.name);
+    }
+}

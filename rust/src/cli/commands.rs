@@ -66,6 +66,14 @@ COMMANDS:
                                    (default 5)
              --price-queue-delay   price expected contention delay into
                                    marginal/learned placement scores
+             --shards <N>          worker threads the lockstep stepper
+                                   shards hosts across (default: one per
+                                   available core; 1 = the serial reference
+                                   loop; outcomes are bit-identical for
+                                   every value)
+             --constant-bg         freeze each host's background traffic at
+                                   the testbed mean (fully deterministic,
+                                   lets warm epochs batch ticks)
   history    Inspect or maintain a JSONL history store
              stats --history <F>   record counts + per-host/testbed costs
              query --history <F>   k-NN answer for a workload:
@@ -93,7 +101,7 @@ ENVIRONMENT:
 pub fn run(argv: &[String]) -> Result<i32> {
     let args = ParsedArgs::parse(
         argv,
-        &["trace", "no-csv", "server-scaling", "smoke", "price-queue-delay"],
+        &["trace", "no-csv", "server-scaling", "smoke", "price-queue-delay", "constant-bg"],
     )
     .map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -295,7 +303,9 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<i32> {
         || args.get("max-sessions").is_some()
         || args.get("rebalance").is_some()
         || args.get("migration-cost").is_some()
+        || args.get("shards").is_some()
         || args.has("price-queue-delay")
+        || args.has("constant-bg")
     {
         return cmd_fleet_dispatch(args);
     }
@@ -491,6 +501,13 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
     cfg.rebalance = rebalance;
     cfg.price_queue_delay = args.has("price-queue-delay");
     cfg.history = index;
+    // `--shards N` (0 / absent = one per available core); outcomes are
+    // shard-count invariant, so the CLI defaults to full parallelism.
+    cfg.shards = args
+        .get_u32("shards")
+        .map_err(|e: ArgError| anyhow::anyhow!(e))?
+        .unwrap_or(0) as usize;
+    cfg.constant_bg = args.has("constant-bg");
     let out = run_dispatcher(&cfg);
     record_history(args, &out.fleet.run_records, &out.decisions, &out.migrations)?;
     let fleet = &out.fleet;
@@ -904,6 +921,16 @@ mod tests {
         ))
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn fleet_shards_flag_selects_the_dispatcher_and_runs() {
+        // `--shards` alone routes to the multi-host path; sharded and
+        // serial runs of the same workload both complete.
+        let base = "fleet --hosts 2 --tenants 2 --dataset small --spacing 5 --seed 3";
+        assert_eq!(run(&argv(&format!("{base} --shards 2 --constant-bg"))).unwrap(), 0);
+        assert_eq!(run(&argv(&format!("{base} --shards 1"))).unwrap(), 0);
+        assert_eq!(run(&argv("fleet --shards 0 --tenants 2 --dataset small --seed 3")).unwrap(), 0);
     }
 
     #[test]

@@ -53,6 +53,22 @@ impl Testbed {
         )
     }
 
+    /// Deterministic *constant* background at the testbed's mean, plus
+    /// scripted step events. Between events such a background is frozen
+    /// ([`BackgroundTraffic::is_frozen`]), which is the link-side
+    /// precondition for warm-epoch tick batching — large-scale fleet
+    /// runs and the `bench_scale` sweep use this link so warm epochs
+    /// batch instead of paying a (no-op) OU step per tick.
+    pub fn make_link_constant_bg_with_events(
+        &self,
+        events: Vec<crate::netsim::BandwidthEvent>,
+    ) -> Link {
+        Link::new(
+            self.link.clone(),
+            BackgroundTraffic::constant(self.bg_mean).with_events(events),
+        )
+    }
+
     /// Bandwidth-delay product of the path.
     pub fn bdp(&self) -> Bytes {
         self.link.bdp()

@@ -32,7 +32,14 @@ impl InitPlan {
 }
 
 /// A runtime tuning algorithm driving one transfer session.
-pub trait Algorithm: std::fmt::Debug {
+///
+/// `Send` is a supertrait: sessions live inside the crate-internal
+/// `HostWorld`s (`crate::sim::fleet`), which the sharded dispatcher moves across
+/// worker threads between driver events. An algorithm must not hold
+/// thread-pinned state (`Rc`, raw thread-local handles) — keep such
+/// caches keyed per thread instead, as the PJRT runtime does
+/// (`crate::runtime::Executable`).
+pub trait Algorithm: std::fmt::Debug + Send {
     /// Algorithm name as the paper's figures label it.
     fn name(&self) -> &'static str;
 

@@ -38,7 +38,13 @@ pub struct FleetDirective {
 }
 
 /// A cross-session arbitration policy, invoked once per fleet interval.
-pub trait FleetPolicy: std::fmt::Debug {
+///
+/// `Send` is a supertrait: each host's policy travels with its
+/// crate-internal `HostWorld` (`crate::sim::fleet`) when the sharded
+/// dispatcher fans hosts out across worker threads (arbitration itself
+/// still runs at segment boundaries, inside the shard that owns the
+/// host).
+pub trait FleetPolicy: std::fmt::Debug + Send {
     /// Policy name for outcomes and telemetry.
     fn name(&self) -> &'static str;
 

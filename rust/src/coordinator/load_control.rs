@@ -32,8 +32,12 @@ impl Default for LoadThresholds {
     }
 }
 
-/// A CPU-scaling policy invoked once per tuning timeout.
-pub trait Governor: std::fmt::Debug {
+/// A CPU-scaling policy invoked once per tuning timeout. `Send` is a
+/// supertrait so a session carrying one can cross the sharded
+/// dispatcher's worker threads with its host (the predictive governor's
+/// compiled PJRT artifact is a per-thread cache for exactly this
+/// reason — see [`crate::runtime::Executable`]).
+pub trait Governor: std::fmt::Debug + Send {
     /// Inspect the interval telemetry and adjust the client CPU setting.
     fn control(&mut self, telemetry: &Telemetry, cpu: &mut CpuState);
     /// Governor name for traces.

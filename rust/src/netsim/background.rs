@@ -75,6 +75,28 @@ impl BackgroundTraffic {
         self.value
     }
 
+    /// True when a [`Self::tick`] with no scripted event due is a state
+    /// no-op — bit-for-bit: no noise is drawn (`sigma == 0`), the drift
+    /// term is exactly zero (`theta == 0`, or the value already sits at
+    /// the mean), the clamp is the identity (value within bounds), and
+    /// adding the zero drift does not renormalize the value's sign bit.
+    /// The warm-epoch batched stepper may skip link ticks only while
+    /// this holds; see ARCHITECTURE.md §Scale.
+    pub fn is_frozen(&self) -> bool {
+        self.sigma == 0.0
+            && (self.theta == 0.0 || self.value == self.mean)
+            && (0.0..=self.max_fraction).contains(&self.value)
+            && (self.value + 0.0).to_bits() == self.value.to_bits()
+    }
+
+    /// When the next scripted event fires (`None` once all are consumed).
+    /// Events apply on the first tick whose start time reaches this
+    /// instant, so a batched stepper must fall back to the real
+    /// [`Self::tick`] for any tick with `next_event_at() <= now`.
+    pub fn next_event_at(&self) -> Option<SimTime> {
+        self.events.get(self.next_event).map(|e| e.at)
+    }
+
     /// Advance the process by `dt`.
     pub fn tick(&mut self, now: SimTime, dt: SimDuration, rng: &mut Xoshiro256) {
         // Apply any scripted events whose time has come.

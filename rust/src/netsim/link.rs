@@ -81,6 +81,21 @@ impl Link {
     pub fn tick(&mut self, now: SimTime, dt: SimDuration, rng: &mut Xoshiro256) {
         self.bg.tick(now, dt, rng);
     }
+
+    /// True when [`Self::tick`] with no scripted event due is a state
+    /// no-op (constant background, no RNG draws) — the link-side
+    /// precondition for warm-epoch tick batching. See
+    /// [`BackgroundTraffic::is_frozen`].
+    pub fn bg_frozen(&self) -> bool {
+        self.bg.is_frozen()
+    }
+
+    /// When the next scripted background event fires, if any — a batched
+    /// stepper must take the real tick path for any tick this instant
+    /// has reached.
+    pub fn next_bg_event_at(&self) -> Option<SimTime> {
+        self.bg.next_event_at()
+    }
 }
 
 /// Allocate goodput to `streams` over `link` for one tick.

@@ -64,8 +64,9 @@ mod backend {
     use std::path::Path;
 
     /// Thread-local PJRT CPU client: the `xla` crate's client is `Rc`-based
-    /// (not `Send`), so each session thread owns one. Creation is cheap next
-    /// to compilation, and executables are compiled once per [`Executable`].
+    /// (not `Send`), so each thread owns one. Creation is cheap next to
+    /// compilation, and executables compile once per thread per artifact
+    /// (see [`with_compiled`]).
     fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
         thread_local! {
             static CLIENT: once_cell::unsync::OnceCell<xla::PjRtClient> =
@@ -79,33 +80,72 @@ mod backend {
         })
     }
 
-    /// A compiled XLA executable loaded from an HLO-text artifact.
-    pub struct Executable {
-        exe: xla::PjRtLoadedExecutable,
-        path: String,
+    /// Parse the HLO-text artifact at `path` and compile it on this
+    /// thread's PJRT client.
+    fn compile(path: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text at {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        with_client(|client| {
+            client.compile(&comp).with_context(|| format!("compiling {path}"))
+        })
     }
 
-    impl std::fmt::Debug for Executable {
-        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-            f.debug_struct("Executable").field("path", &self.path).finish()
+    /// Run `f` against the compiled executable for `path`, compiling it
+    /// into this thread's cache on first use. Loaded executables are
+    /// `Rc`-based like the client, so they can never cross threads; the
+    /// cache gives every thread its own copy, keyed by artifact path.
+    fn with_compiled<T>(
+        path: &str,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<T>,
+    ) -> Result<T> {
+        use std::cell::RefCell;
+        use std::collections::HashMap;
+        use std::rc::Rc;
+        thread_local! {
+            static CACHE: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>> =
+                RefCell::new(HashMap::new());
         }
+        let exe = CACHE.with(|cache| -> Result<Rc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = cache.borrow().get(path) {
+                return Ok(Rc::clone(exe));
+            }
+            // Compile outside the borrow: `compile` may itself take the
+            // thread-local client, and a panic mid-borrow would poison
+            // every later lookup on this thread.
+            let exe = Rc::new(compile(path)?);
+            cache.borrow_mut().insert(path.to_string(), Rc::clone(&exe));
+            Ok(exe)
+        })?;
+        f(&exe)
+    }
+
+    /// Handle to an AOT-compiled XLA artifact.
+    ///
+    /// The handle holds only the artifact *path*: the compiled (non-
+    /// `Send`) PJRT object lives in a per-thread cache, so the handle is
+    /// `Send` and a governor carrying one migrates freely across the
+    /// sharded dispatcher's worker threads. Each thread that actually
+    /// executes it compiles its own copy on first use (compilation is
+    /// deterministic, so every copy computes identical results).
+    #[derive(Debug, Clone)]
+    pub struct Executable {
+        path: String,
     }
 
     impl Executable {
         /// Load HLO text from `path` and compile it on the CPU client.
+        /// Compilation is eager so a bad artifact fails here — at load
+        /// time — not at the first mid-run execution; it also warms the
+        /// calling thread's cache.
         pub fn load_hlo_text(path: impl AsRef<Path>) -> Result<Self> {
-            let path = path.as_ref();
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-UTF8 artifact path")?,
-            )
-            .with_context(|| format!("parsing HLO text at {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = with_client(|client| {
-                client
-                    .compile(&comp)
-                    .with_context(|| format!("compiling {}", path.display()))
-            })?;
-            Ok(Executable { exe, path: path.display().to_string() })
+            let path = path
+                .as_ref()
+                .to_str()
+                .context("non-UTF8 artifact path")?
+                .to_string();
+            with_compiled(&path, |_| Ok(()))?;
+            Ok(Executable { path })
         }
 
         /// Execute with f32 inputs; returns the elements of the output tuple
@@ -119,18 +159,20 @@ mod backend {
                     .with_context(|| format!("reshaping input to {:?}", a.shape))?;
                 literals.push(lit);
             }
-            let result = self
-                .exe
-                .execute::<xla::Literal>(&literals)
-                .with_context(|| format!("executing {}", self.path))?;
-            let out = result[0][0].to_literal_sync().context("fetching result buffer")?;
-            // Unpack the tuple: jax's return_tuple=True wraps outputs.
-            let elements = out.to_tuple().context("untupling result")?;
-            let mut vecs = Vec::with_capacity(elements.len());
-            for e in elements {
-                vecs.push(e.to_vec::<f32>().context("reading f32 output")?);
-            }
-            Ok(vecs)
+            with_compiled(&self.path, |exe| {
+                let result = exe
+                    .execute::<xla::Literal>(&literals)
+                    .with_context(|| format!("executing {}", self.path))?;
+                let out =
+                    result[0][0].to_literal_sync().context("fetching result buffer")?;
+                // Unpack the tuple: jax's return_tuple=True wraps outputs.
+                let elements = out.to_tuple().context("untupling result")?;
+                let mut vecs = Vec::with_capacity(elements.len());
+                for e in elements {
+                    vecs.push(e.to_vec::<f32>().context("reading f32 output")?);
+                }
+                Ok(vecs)
+            })
         }
 
         /// Path the executable was loaded from.

@@ -35,9 +35,21 @@
 //!
 //! The driver extends the PR 2 event-horizon loop across hosts: each
 //! segment computes the earliest driver-level event over *all* hosts
-//! (arrivals, tuning timeouts, arbitrations, the time cap) and then runs
-//! a tight lockstep inner loop of bare `step()` calls, so ticks between
-//! cross-host deadlines stay as cheap as in the single-host fleet.
+//! (arrivals, migration resumes, scripted cap changes, tuning timeouts,
+//! arbitrations, the time cap) and then runs a tight lockstep inner
+//! loop of bare `step()` calls, so ticks between cross-host deadlines
+//! stay as cheap as in the single-host fleet.
+//!
+//! With [`DispatcherConfig::shards`] above one, that inner loop is
+//! *sharded*: hosts are partitioned across worker threads which advance
+//! their shard a completion-free, horizon-bounded run of ticks at a
+//! time (`HostWorld::advance_ticks`), rejoining at every possible
+//! break point. Hosts never interact between driver events — placement,
+//! arbitration, rebalancing and cap changes all happen at segment
+//! boundaries on the dispatcher thread — so the outcome is bit-for-bit
+//! invariant to the shard count; `shards == 1` keeps the serial
+//! reference loop verbatim. See `ARCHITECTURE.md` §Scale for the
+//! determinism contract.
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, VecDeque};
@@ -452,6 +464,21 @@ pub struct DispatcherConfig {
     /// Drive every host with the naive reference stepper instead of the
     /// epoch-cached fast path (tests and benchmarks).
     pub reference_stepper: bool,
+    /// Worker threads the lockstep inner loop shards hosts across. `1`
+    /// (the default) keeps the serial per-tick reference loop exactly as
+    /// earlier releases ran it; `0` resolves to
+    /// [`std::thread::available_parallelism`]; values above the host
+    /// count clamp to it. Outcomes are bit-for-bit invariant to the
+    /// shard count — sharding changes wall-clock time only (the
+    /// `stepper_equivalence` suite pins this).
+    pub shards: usize,
+    /// Build every host's link with a *constant* background at the
+    /// testbed mean (plus any scripted events) instead of the seeded OU
+    /// process. A constant background is frozen between events, which is
+    /// the link-side precondition for warm-epoch tick batching
+    /// ([`crate::netsim::BackgroundTraffic::is_frozen`]) — large-scale
+    /// runs and `bench_scale` set this so warm epochs batch.
+    pub constant_bg: bool,
     /// Historical-log index consulted at every placement decision: each
     /// candidate host is annotated with the history-observed ΔJ/byte for
     /// workloads like the arriving one, which
@@ -484,6 +511,8 @@ impl DispatcherConfig {
             max_sim_time: SimDuration::from_secs(14_400.0),
             record_timeline: false,
             reference_stepper: false,
+            shards: 1,
+            constant_bg: false,
             history: None,
         }
     }
@@ -529,6 +558,20 @@ impl DispatcherConfig {
         self.seed = seed;
         self
     }
+
+    /// Shard the lockstep inner loop across `shards` worker threads
+    /// (see [`Self::shards`]; `0` = one per available core).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Freeze every host's background traffic at the testbed mean so
+    /// warm epochs batch (see [`Self::constant_bg`]).
+    pub fn with_constant_bg(mut self) -> Self {
+        self.constant_bg = true;
+        self
+    }
 }
 
 /// What a dispatcher run produced: the fleet outcome (tenants flattened
@@ -552,6 +595,100 @@ pub struct DispatchOutcome {
 /// noise per host, reproducible from the pair).
 fn host_seed(seed: u64, host: usize) -> u64 {
     seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(host as u64 + 1))
+}
+
+/// Resolve [`DispatcherConfig::shards`] to a concrete worker count:
+/// `0` means one shard per available core, and no configuration ever
+/// yields more shards than hosts (an empty shard is pure overhead).
+fn effective_shards(requested: usize, hosts: usize) -> usize {
+    let requested = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    requested.min(hosts.max(1)).max(1)
+}
+
+/// Upper bound on how many ticks the clock can advance from `now`
+/// before hitting the segment horizon or the time cap, found by
+/// replaying the exact accumulation the stepper performs (`now += dt`
+/// per tick, then the `t + 1e-9 >= horizon || t >= max` break). Lockstep
+/// keeps every host's clock bit-identical, so one world's replay
+/// decides for all — and because the replay *is* the break condition,
+/// a chunk can never carry the fleet onto or past a driver event.
+fn horizon_bound_ticks(now: f64, dt: f64, cap: u64, horizon: f64, max: f64) -> u64 {
+    let mut t = now;
+    let mut safe = 0u64;
+    while safe < cap {
+        t += dt;
+        if t + 1e-9 >= horizon || t >= max {
+            break;
+        }
+        safe += 1;
+    }
+    safe
+}
+
+/// The sharded lockstep inner loop: advance every host to the segment
+/// horizon, partitioned across `shards` worker threads.
+///
+/// Correctness rests on two bounds computed fresh each round:
+///
+/// * [`HostWorld::completion_bound_ticks`] — a tick count no session on
+///   any host can finish within (link-capacity-limited byte budget), so
+///   no chunk ever skips a completion the driver must react to;
+/// * [`horizon_bound_ticks`] — the exact number of ticks before the
+///   shared clock would trip a segment break, so no chunk ever crosses
+///   a driver event (arrival, cap change, migration resume, timeout,
+///   arbitration).
+///
+/// Ticks inside those bounds touch no cross-host state — hosts only
+/// interact through the dispatcher at segment boundaries — so each
+/// worker advances its shard independently and the merged fleet state
+/// is bit-for-bit what the serial loop produces. When the bound hits
+/// zero (a break could fire on the very next tick) that tick runs
+/// serially with the reference loop's own break checks, which is where
+/// completions and horizons actually fire. Worst case (a session one
+/// tick from finishing every round) this degenerates to the serial
+/// reference loop — never to a wrong answer.
+fn step_segment_sharded(worlds: &mut [HostWorld], shards: usize, horizon: f64, max: f64) {
+    // Cap per-round chunks so a long quiet segment still rejoins often
+    // enough to keep completion bounds honest against rate changes.
+    const CHUNK_CAP: u64 = 4096;
+    loop {
+        let mut chunk = CHUNK_CAP;
+        for w in worlds.iter() {
+            chunk = chunk.min(w.completion_bound_ticks());
+        }
+        let dt = worlds[0].sim.tick_len().as_secs();
+        let chunk = horizon_bound_ticks(worlds[0].now_secs(), dt, chunk, horizon, max);
+        if chunk == 0 {
+            // Boundary tick: step once serially under the reference
+            // break checks — completions and the horizon fire here.
+            let mut completed = false;
+            for w in worlds.iter_mut() {
+                completed |= w.step_once().session_completed;
+            }
+            let t = worlds[0].now_secs();
+            if completed || t + 1e-9 >= horizon || t >= max {
+                return;
+            }
+            continue;
+        }
+        // `chunk` ticks are completion-free and horizon-free on every
+        // host: fan the hosts out across workers, each advancing its
+        // shard the same tick count (warm epochs batch inside).
+        let per = worlds.len().div_ceil(shards);
+        std::thread::scope(|scope| {
+            for shard in worlds.chunks_mut(per) {
+                scope.spawn(move || {
+                    for w in shard {
+                        w.advance_ticks(chunk);
+                    }
+                });
+            }
+        });
+    }
 }
 
 /// True when a projected fleet power fits under `cap` (no cap at all
@@ -814,6 +951,7 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                 false,
                 cfg.record_timeline,
                 cfg.reference_stepper,
+                cfg.constant_bg,
             )
         })
         .collect();
@@ -848,6 +986,7 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
     let mut in_flight: Vec<InFlight> = Vec::new();
 
     let max = cfg.max_sim_time.as_secs();
+    let shards = effective_shards(cfg.shards, cfg.hosts.len());
     loop {
         let now = worlds[0].now_secs();
 
@@ -1038,8 +1177,16 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         // so simulating idle hosts until the time cap would be pure
         // waste: end the run now and report the queue as unplaced. (A
         // drain in flight *will* change occupancy, so it keeps the loop
-        // alive.)
-        if pending.is_empty() && in_flight.is_empty() && all_done && !queue.is_empty() {
+        // alive — and so does a scripted cap change still ahead: a
+        // future `PowerCapEvent` can loosen the very cap blocking the
+        // head, so the run must idle forward to it, not give up. The
+        // `stepper_equivalence` cap-squeeze test pins this.)
+        if pending.is_empty()
+            && in_flight.is_empty()
+            && all_done
+            && !queue.is_empty()
+            && cap_events.is_empty()
+        {
             break;
         }
 
@@ -1069,16 +1216,22 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         // Lockstep inner loop: one tick on every host per iteration. A
         // completion on any host ends the segment (its departure — and
         // any queued admission it unblocks — must be handled on exactly
-        // that tick).
-        loop {
-            let mut completed = false;
-            for w in worlds.iter_mut() {
-                completed |= w.step_once().session_completed;
+        // that tick). With more than one shard the same segment runs
+        // chunked across worker threads (see [`step_segment_sharded`]);
+        // `shards == 1` is the bit-for-bit reference path.
+        if shards <= 1 {
+            loop {
+                let mut completed = false;
+                for w in worlds.iter_mut() {
+                    completed |= w.step_once().session_completed;
+                }
+                let t = worlds[0].now_secs();
+                if completed || t + 1e-9 >= horizon || t >= max {
+                    break;
+                }
             }
-            let t = worlds[0].now_secs();
-            if completed || t + 1e-9 >= horizon || t >= max {
-                break;
-            }
+        } else {
+            step_segment_sharded(&mut worlds, shards, horizon, max);
         }
 
         for w in worlds.iter_mut() {
@@ -1446,6 +1599,7 @@ mod tests {
             false,
             false,
             false,
+            false,
         );
         let ds = crate::dataset::standard::medium_dataset(11);
         let record = RunRecord {
@@ -1501,6 +1655,38 @@ mod tests {
         );
         warm_start_on_host(&mut cold, &world, None);
         assert_eq!(cold.algorithm, AlgorithmKind::HistoryTuned(None));
+    }
+
+    #[test]
+    fn effective_shards_resolves_auto_and_clamps_to_hosts() {
+        // Explicit counts clamp to the host count; zero hosts still
+        // yields one (the driver asserts non-empty fleets anyway).
+        assert_eq!(effective_shards(1, 8), 1);
+        assert_eq!(effective_shards(4, 8), 4);
+        assert_eq!(effective_shards(16, 8), 8);
+        assert_eq!(effective_shards(3, 0), 1);
+        // Auto resolves to at least one worker, never more than hosts.
+        let auto = effective_shards(0, 4);
+        assert!((1..=4).contains(&auto), "auto resolved to {auto}");
+    }
+
+    #[test]
+    fn horizon_bound_replays_the_break_condition_exactly() {
+        // 0.1 is not exact in binary: the bound must replay the same
+        // accumulated sum the stepper produces, not divide analytically.
+        let dt = 0.1;
+        let bound = horizon_bound_ticks(0.0, dt, u64::MAX, 10.0, f64::MAX);
+        let mut t = 0.0;
+        for _ in 0..bound {
+            t += dt;
+        }
+        assert!(t + 1e-9 < 10.0, "bound overshoots the horizon: t = {t}");
+        assert!(t + dt + 1e-9 >= 10.0, "bound stops early: t = {t}");
+        // The cap and the time limit both clip the bound.
+        assert_eq!(horizon_bound_ticks(0.0, dt, 7, 10.0, f64::MAX), 7);
+        assert_eq!(horizon_bound_ticks(0.0, dt, u64::MAX, 10.0, 0.35), 3);
+        // Already at (or past) the horizon: nothing is safe.
+        assert_eq!(horizon_bound_ticks(10.0, dt, u64::MAX, 10.0, f64::MAX), 0);
     }
 
     #[test]

@@ -36,6 +36,18 @@ struct EpochCache {
     alloc: AllocCache,
 }
 
+/// Aggregates of one tick's per-slot pass, handed to the shared tick
+/// tail ([`Simulation::settle_tick`]) by both the slow path and the
+/// warm-batch path.
+struct SlotPass {
+    moved_total: Bytes,
+    goodput_bps: f64,
+    requests_out: f64,
+    open_streams: usize,
+    active_count: u32,
+    session_completed: bool,
+}
+
 /// One tenant session on the host: its transfer engine plus per-session
 /// telemetry accumulators and the energy attributed to it.
 #[derive(Debug, Clone)]
@@ -179,8 +191,41 @@ impl Simulation {
         seed: u64,
         events: Vec<crate::netsim::BandwidthEvent>,
     ) -> Self {
+        Self::empty_with_link(testbed, client, tick, seed, testbed.make_link_with_events(events))
+    }
+
+    /// Like [`Self::empty`] but with a *deterministic constant*
+    /// background (plus the scripted events) instead of the noisy quiet
+    /// one. Between events such a background is frozen, so warm epochs
+    /// batch (`warm_batch_until`) — this is what the large-scale
+    /// fleet paths and `bench_scale` use. Results stay bit-identical
+    /// across steppers and shard counts with either link; only the
+    /// modeled cross-traffic differs.
+    pub fn empty_constant_bg(
+        testbed: &Testbed,
+        client: CpuState,
+        tick: SimDuration,
+        seed: u64,
+        events: Vec<crate::netsim::BandwidthEvent>,
+    ) -> Self {
+        Self::empty_with_link(
+            testbed,
+            client,
+            tick,
+            seed,
+            testbed.make_link_constant_bg_with_events(events),
+        )
+    }
+
+    fn empty_with_link(
+        testbed: &Testbed,
+        client: CpuState,
+        tick: SimDuration,
+        seed: u64,
+        link: Link,
+    ) -> Self {
         Simulation {
-            link: testbed.make_link_with_events(events),
+            link,
             host: Host::new(testbed, client),
             slots: Vec::new(),
             now: SimTime::ZERO,
@@ -413,6 +458,25 @@ impl Simulation {
         }
         self.scratch_streams = flat;
         self.scratch_rates = rates;
+
+        self.settle_tick(
+            dt,
+            SlotPass {
+                moved_total,
+                goodput_bps,
+                requests_out,
+                open_streams,
+                active_count,
+                session_completed,
+            },
+        )
+    }
+
+    /// The tick tail shared by the slow path and the warm-batch path:
+    /// epoch revalidation, host accounting, the clock, per-tenant energy
+    /// attribution and the aggregate stats. Keeping this in one place is
+    /// what makes warm ticks bit-identical to slow ticks by construction.
+    fn settle_tick(&mut self, dt: SimDuration, pass: SlotPass) -> TickStats {
         // Moving bytes can retire partitions, which reassigns or clears
         // channels (a generation bump) — that ends the epoch.
         if self.epoch.valid && !self.epoch_stamps_match() {
@@ -421,17 +485,17 @@ impl Simulation {
 
         // CPU loads and power implied by the aggregate goodput.
         let demand = CpuDemand {
-            bytes_per_sec: goodput_bps,
-            requests_per_sec: requests_out,
-            open_streams: open_streams as f64,
+            bytes_per_sec: pass.goodput_bps,
+            requests_per_sec: pass.requests_out,
+            open_streams: pass.open_streams as f64,
         };
-        let ht: HostTick = self.host.record_tick(self.now, &demand, moved_total, dt);
+        let ht: HostTick = self.host.record_tick(self.now, &demand, pass.moved_total, dt);
 
         self.now += dt;
 
         // Attribute host energy to tenants by bytes moved this tick (even
         // split of idle ticks), and roll the per-session accumulators.
-        let moved_f = moved_total.as_f64();
+        let moved_f = pass.moved_total.as_f64();
         for s in &mut self.slots {
             if !s.active {
                 continue;
@@ -439,7 +503,7 @@ impl Simulation {
             let share = if moved_f > 0.0 {
                 s.tick_out.moved.as_f64() / moved_f
             } else {
-                1.0 / active_count as f64
+                1.0 / pass.active_count as f64
             };
             s.energy_j += ht.instrument_energy_j * share;
             s.package_energy_j += ht.package_energy_j * share;
@@ -451,17 +515,158 @@ impl Simulation {
         }
 
         let stats = TickStats {
-            goodput: Rate::from_bytes_per_sec(goodput_bps),
-            moved: moved_total,
+            goodput: Rate::from_bytes_per_sec(pass.goodput_bps),
+            moved: pass.moved_total,
             client_load: ht.client_load,
             server_load: ht.server_load,
             client_power: ht.client_power,
             server_power: ht.server_power,
-            open_streams,
-            session_completed,
+            open_streams: pass.open_streams,
+            session_completed: pass.session_completed,
         };
         self.last_world_stats = stats;
         stats
+    }
+
+    /// One warm-epoch tick, skipping the per-tick heavy work the slow
+    /// path would redo with identical results: the (frozen) link tick,
+    /// the max-min allocation fill and per-channel efficiency recompute.
+    /// Returns `None` — having changed nothing — when the warm-tick
+    /// preconditions do not hold; the caller then takes [`Self::step`].
+    ///
+    /// Bit-exactness argument (see ARCHITECTURE.md §Scale): each gate
+    /// conjunct certifies that one skipped piece of the slow path is a
+    /// state no-op or value-identical from cache —
+    /// * `epoch.valid && epoch_stamps_match()`: the slow path would take
+    ///   its reuse branch (no restage), and since no structural change
+    ///   happened the cached per-stream rates and per-channel stage-two
+    ///   rates still carry exactly the bits it would recompute (the
+    ///   allocation depends only on the frozen link and the unchanged
+    ///   snapshot; channel efficiency never reads remaining bytes).
+    /// * `link.bg_frozen()`: `link.tick` draws no randomness and cannot
+    ///   change link state, so skipping it preserves the RNG and the
+    ///   available bandwidth bit-for-bit.
+    /// * no background event due: the only other way `link.tick` mutates
+    ///   state. Events fire on the first tick whose start time reaches
+    ///   them, so `at > now` defers exactly like the slow path would.
+    ///
+    /// Everything still executed — capacity lookup, byte movement
+    /// ([`TransferEngine::apply_warm_rates`]), host accounting, energy
+    /// attribution — is the identical expression sequence on identical
+    /// bits. Depletion self-detects: the clamp to remaining bytes and
+    /// the stage-five generation bump happen exactly as on the slow
+    /// path, ending the epoch through the usual stamp mismatch.
+    fn try_warm_step(&mut self) -> Option<TickStats> {
+        if !(self.epoch.valid && self.epoch_stamps_match() && self.link.bg_frozen()) {
+            return None;
+        }
+        if self.link.next_bg_event_at().is_some_and(|at| at <= self.now) {
+            return None;
+        }
+        let dt = self.tick;
+
+        // Identical to the slow path's reuse branch: spans carry the
+        // stream counts the engines would report.
+        let mut requests = 0.0;
+        let mut total_streams = 0usize;
+        for s in &self.slots {
+            if s.active {
+                requests += s.last_requests_per_sec;
+                total_streams += s.stream_end - s.stream_start;
+            }
+        }
+        let cap = self.host.capacity_bytes_per_sec(requests, total_streams as f64);
+        let staged = self.scratch_streams.len();
+
+        let mut moved_total = Bytes::ZERO;
+        let mut goodput_bps = 0.0;
+        let mut requests_out = 0.0;
+        let mut open_streams = 0usize;
+        let mut active_count = 0u32;
+        let mut session_completed = false;
+        for s in &mut self.slots {
+            if !s.active {
+                continue;
+            }
+            active_count += 1;
+            let span = s.stream_end - s.stream_start;
+            let share = if staged == 0 { 1.0 } else { span as f64 / staged as f64 };
+            let out = s.engine.apply_warm_rates(dt, cap * share, span);
+            s.last_requests_per_sec = out.requests_per_sec;
+            s.tick_out = out;
+            moved_total += out.moved;
+            goodput_bps += out.goodput.as_bytes_per_sec();
+            requests_out += out.requests_per_sec;
+            open_streams += out.open_streams;
+            if s.engine.is_done() {
+                session_completed = true;
+            }
+        }
+
+        Some(self.settle_tick(
+            dt,
+            SlotPass {
+                moved_total,
+                goodput_bps,
+                requests_out,
+                open_streams,
+                active_count,
+                session_completed,
+            },
+        ))
+    }
+
+    /// Run warm ticks until the clock would reach `stop_before` (minus
+    /// the driver's `1e-9` horizon slack), the warm gate fails, or a
+    /// session completes. Returns how many ticks ran and the last tick's
+    /// stats (the previous tick's stats when none ran).
+    ///
+    /// The stopping test computes the candidate clock with the *same*
+    /// floating-point operation the tick itself uses, so a batch can
+    /// never carry the clock onto or past a deadline the event-horizon
+    /// driver's post-tick break checks compare against — the final ticks
+    /// of every segment always run in the driver's slow loop.
+    pub(crate) fn warm_batch_until(&mut self, stop_before: f64) -> (u64, TickStats) {
+        let dt = self.tick.as_secs();
+        let mut done = 0u64;
+        let mut last = self.last_world_stats;
+        loop {
+            if self.now.as_secs() + dt + 1e-9 >= stop_before {
+                break;
+            }
+            match self.try_warm_step() {
+                Some(stats) => {
+                    done += 1;
+                    last = stats;
+                    if stats.session_completed {
+                        break;
+                    }
+                }
+                None => break,
+            }
+        }
+        (done, last)
+    }
+
+    /// Run up to `max_ticks` warm ticks (no clock bound — the sharded
+    /// dispatcher precomputes safe tick counts instead). Stops early when
+    /// the warm gate fails or a session completes.
+    pub(crate) fn warm_batch_ticks(&mut self, max_ticks: u64) -> (u64, TickStats) {
+        let mut done = 0u64;
+        let mut last = self.last_world_stats;
+        while done < max_ticks {
+            match self.try_warm_step() {
+                Some(stats) => {
+                    done += 1;
+                    last = stats;
+                    if stats.session_completed {
+                        break;
+                    }
+                }
+                None => break,
+            }
+        }
+        (done, last)
     }
 
     /// Path + transfer model view for the predictive governor.
@@ -802,6 +1007,77 @@ mod tests {
                 "tenant {i} energy attribution"
             );
         }
+    }
+
+    fn make_constant_bg_sim(channels: u32) -> Simulation {
+        let tb = testbeds::cloudlab();
+        let ds = standard::large_dataset(5);
+        let parts = partition_files(&ds, tb.bdp());
+        let mut engine = TransferEngine::new(&parts, tb.link.avg_win);
+        engine.set_num_channels(channels);
+        let client = CpuState::performance(tb.client_cpu.clone());
+        let mut sim = Simulation::empty_constant_bg(
+            &tb,
+            client,
+            SimDuration::from_millis(100.0),
+            13,
+            vec![crate::netsim::BandwidthEvent {
+                at: SimTime::from_secs(30.0),
+                mean_fraction: 0.4,
+            }],
+        );
+        let slot = sim.add_slot(engine);
+        sim.activate_slot(slot);
+        sim
+    }
+
+    #[test]
+    fn warm_ticks_match_reference_bit_for_bit() {
+        // Constant-background world: once slow start ends the epoch warms
+        // and the warm tick path engages. Every warm tick must carry the
+        // same bits as the naive reference tick, and the scripted
+        // bandwidth event at 30 s must force the slow path on its tick
+        // (the gate defers to `link.tick` whenever an event is due).
+        let mut fast = make_constant_bg_sim(6);
+        let mut naive = fast.clone();
+        let mut warm = 0u64;
+        for tick in 0..600 {
+            let (n, batched) = fast.warm_batch_ticks(1);
+            let a = if n == 1 {
+                warm += 1;
+                batched
+            } else {
+                fast.step()
+            };
+            let b = naive.step_reference();
+            assert_stats_bits_eq(&a, &b, tick);
+        }
+        assert!(warm > 300, "warm path engaged on only {warm}/600 ticks");
+        assert_eq!(
+            fast.client_energy().as_joules().to_bits(),
+            naive.client_energy().as_joules().to_bits()
+        );
+        assert_eq!(
+            fast.server_energy().as_joules().to_bits(),
+            naive.server_energy().as_joules().to_bits()
+        );
+        assert_eq!(fast.engine().remaining(), naive.engine().remaining());
+    }
+
+    #[test]
+    fn warm_batch_until_respects_the_stop_line() {
+        // The batch must leave the clock strictly below the stop time
+        // minus the driver's slack, so segment-ending ticks always run in
+        // the driver's slow loop where the break checks live.
+        let mut sim = make_constant_bg_sim(6);
+        for _ in 0..50 {
+            sim.step();
+        }
+        let (n, _) = sim.warm_batch_until(20.0);
+        assert!(n > 0, "expected a warm epoch by 5 s");
+        let now = sim.now.as_secs();
+        assert!(now + sim.tick_len().as_secs() + 1e-9 >= 20.0, "stopped early: {now}");
+        assert!(now + 1e-9 < 20.0, "overshot the stop line: {now}");
     }
 
     #[test]

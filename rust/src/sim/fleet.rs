@@ -87,6 +87,13 @@ pub struct FleetConfig {
     /// path — the oracle the stepper-equivalence tests pin against, and
     /// the baseline `bench_hotpath` reports speedup over.
     pub reference_stepper: bool,
+    /// Model the background cross traffic as a deterministic constant
+    /// (plus any scripted events) instead of the noisy OU process.
+    /// Between events such a background is frozen, which lets warm
+    /// epochs batch ticks (`Simulation::warm_batch_until`) — the mode
+    /// the large-scale paths and `bench_scale` run in. Results stay
+    /// bit-identical across steppers and shard counts either way.
+    pub constant_bg: bool,
 }
 
 impl FleetConfig {
@@ -105,6 +112,7 @@ impl FleetConfig {
             bandwidth_events: Vec::new(),
             server_scaling: false,
             reference_stepper: false,
+            constant_bg: false,
         }
     }
 
@@ -390,6 +398,7 @@ impl HostWorld {
         server_scaling: bool,
         record_timeline: bool,
         reference_stepper: bool,
+        constant_bg: bool,
     ) -> HostWorld {
         let policy: Option<Box<dyn FleetPolicy>> = policy_kind.map(|kind| kind.build(&params));
 
@@ -422,7 +431,11 @@ impl HostWorld {
             Some(p) => p.initial_cpu(&testbed.client_cpu),
             None => first_cpu.expect("a fleet without a policy needs at least one tenant"),
         };
-        let mut sim = Simulation::empty(testbed, client, tick, seed, bandwidth_events);
+        let mut sim = if constant_bg {
+            Simulation::empty_constant_bg(testbed, client, tick, seed, bandwidth_events)
+        } else {
+            Simulation::empty(testbed, client, tick, seed, bandwidth_events)
+        };
         sim.host.server_autoscale = server_scaling;
         for (t, engine) in tenants.iter_mut().zip(engines) {
             t.slot = sim.add_slot(engine);
@@ -545,6 +558,69 @@ impl HostWorld {
         } else {
             self.sim.step()
         }
+    }
+
+    /// Warm-epoch batching inside a segment: after the driver's slow
+    /// tick has confirmed no break fired, burn the remaining pure warm
+    /// ticks up to (strictly before) the segment horizon in one call,
+    /// skipping the per-tick break re-checks. Returns the last batched
+    /// tick's stats when any ticks ran. No-op on the reference stepper —
+    /// and a no-op whenever the epoch is cold or the background is not
+    /// frozen, so default (noisy-link) worlds are entirely unaffected.
+    pub(crate) fn warm_batch(&mut self, horizon: f64, cap_secs: f64) -> Option<TickStats> {
+        if self.reference_stepper {
+            return None;
+        }
+        let (ticks, stats) = self.sim.warm_batch_until(horizon.min(cap_secs));
+        if ticks == 0 {
+            None
+        } else {
+            Some(stats)
+        }
+    }
+
+    /// Advance exactly `ticks` ticks, warm-batching where the epoch
+    /// allows and falling back to single steps elsewhere. The sharded
+    /// dispatcher calls this only for spans it has proven free of driver
+    /// events, horizon breaks and completions, so per-world state is
+    /// bit-identical to `ticks` bare [`Self::step_once`] calls.
+    pub(crate) fn advance_ticks(&mut self, ticks: u64) {
+        let mut left = ticks;
+        while left > 0 {
+            if !self.reference_stepper {
+                let (burned, _) = self.sim.warm_batch_ticks(left);
+                left -= burned;
+                if left == 0 {
+                    break;
+                }
+            }
+            self.step_once();
+            left -= 1;
+        }
+    }
+
+    /// Ticks this world can take before any session could possibly
+    /// complete: one tick moves at most the link's full capacity times
+    /// the tick length, so the least-remaining active session bounds the
+    /// count from below (minus a two-tick margin for floating-point
+    /// slack). Zero whenever a completion could be imminent — the
+    /// sharded dispatcher then falls back to serial lockstep ticks,
+    /// where the per-tick completion check lives.
+    pub(crate) fn completion_bound_ticks(&self) -> u64 {
+        let cap_bytes =
+            self.testbed.link.capacity.as_bytes_per_sec() * self.sim.tick_len().as_secs();
+        if cap_bytes <= 0.0 {
+            return 0;
+        }
+        let mut bound = u64::MAX;
+        for s in self.sim.slots() {
+            if !s.is_active() {
+                continue;
+            }
+            let ticks = (s.engine.remaining().as_f64() / cap_bytes).floor() as i64 - 2;
+            bound = bound.min(ticks.max(0) as u64);
+        }
+        bound
     }
 
     /// The driver-level events at a segment boundary, in the order the
@@ -1051,6 +1127,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetOutcome {
         cfg.server_scaling,
         cfg.record_timeline,
         cfg.reference_stepper,
+        cfg.constant_bg,
     );
     let max = cfg.max_sim_time.as_secs();
 
@@ -1074,6 +1151,16 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetOutcome {
                 || world.now_secs() >= max
             {
                 break;
+            }
+            // Warm-epoch batching: the break checks just cleared, so burn
+            // the remaining pure warm ticks of this segment in one call
+            // (each bit-identical to a slow tick, the clock kept strictly
+            // short of the horizon) and re-enter the slow loop for the
+            // segment-ending ticks.
+            if let Some(stats) = world.warm_batch(horizon, max) {
+                if stats.session_completed {
+                    break;
+                }
             }
         }
 
@@ -1168,6 +1255,40 @@ mod tests {
         // And a different seed perturbs the background traffic.
         let c = run_fleet(&four_tenant_cfg(FleetPolicyKind::MinEnergyFleet, 124));
         assert_ne!(a.client_energy.as_joules(), c.client_energy.as_joules());
+    }
+
+    #[test]
+    fn warm_batched_fleet_matches_reference_bit_for_bit() {
+        // Constant-background fleet: warm epochs batch in run_fleet's
+        // inner loop; every figure must still carry the reference
+        // stepper's exact bits.
+        let mk = |reference: bool| {
+            let mut cfg = four_tenant_cfg(FleetPolicyKind::MinEnergyFleet, 17);
+            cfg.constant_bg = true;
+            cfg.reference_stepper = reference;
+            cfg
+        };
+        let fast = run_fleet(&mk(false));
+        let naive = run_fleet(&mk(true));
+        assert!(naive.completed, "reference fleet must finish");
+        assert_eq!(fast.duration.as_secs().to_bits(), naive.duration.as_secs().to_bits());
+        assert_eq!(fast.moved.as_f64().to_bits(), naive.moved.as_f64().to_bits());
+        assert_eq!(
+            fast.client_energy.as_joules().to_bits(),
+            naive.client_energy.as_joules().to_bits()
+        );
+        assert_eq!(
+            fast.server_energy.as_joules().to_bits(),
+            naive.server_energy.as_joules().to_bits()
+        );
+        for (f, n) in fast.tenants.iter().zip(&naive.tenants) {
+            assert_eq!(
+                f.finished_at.map(|x| x.as_secs().to_bits()),
+                n.finished_at.map(|x| x.as_secs().to_bits()),
+                "{}: finish time",
+                f.name
+            );
+        }
     }
 
     #[test]

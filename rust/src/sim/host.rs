@@ -231,6 +231,13 @@ impl Host {
     /// End-system throughput ceiling (bytes/s) at the current CPU
     /// settings, given the aggregate request rate and open-stream count of
     /// every session on the host.
+    ///
+    /// Warm-batch contract: apart from the lazy op-point cache refresh
+    /// (keyed on `(cores, P-state)`, pure memoization) this is a pure
+    /// function of the CPU settings and the demand — same input bits,
+    /// same output bits. The warm-epoch batched stepper relies on that:
+    /// with knobs and demand frozen it reads the capacity once per
+    /// batch instead of once per tick.
     pub fn capacity_bytes_per_sec(&mut self, requests_per_sec: f64, open_streams: f64) -> f64 {
         self.refresh_op_caches();
         let client = self.client_op.as_ref().unwrap().achievable(
@@ -248,6 +255,12 @@ impl Host {
 
     /// One tick of load/power/meter accounting for the aggregate demand of
     /// every session on the host.
+    ///
+    /// This is the *only* per-tick host mutation: the meters integrate
+    /// (RAPL sampling included), so it must run once per simulated tick
+    /// even inside a warm-batched epoch — the batch hoists everything
+    /// else but replays this call tick-for-tick, which is what keeps
+    /// the energy books bit-identical to the naive stepper.
     pub fn record_tick(
         &mut self,
         now: SimTime,

@@ -485,10 +485,96 @@ impl TransferEngine {
 
         let open_streams = rates.len();
         self.scratch_channel_rates = channel_rates;
-        // 5. Reassign channels of partitions that just finished to the
-        //    unfinished partition with the most remaining data (a real
-        //    tool's worker simply dequeues the next file). Streams stay
-        //    warm: the TCP connections are reused.
+        self.retire_finished_partitions();
+
+        TickOutput {
+            goodput: Rate::from_bytes_per_sec(moved_total / dt.as_secs()),
+            moved: Bytes::new(moved_total),
+            requests_per_sec,
+            open_streams,
+        }
+    }
+
+    /// Warm-epoch variant of [`Self::apply_shared_rates`]: move one
+    /// tick's bytes using the per-channel goodput rates cached by the
+    /// previous tick's stage two instead of recomputing them.
+    ///
+    /// # Contract
+    ///
+    /// The caller must guarantee that since the last
+    /// [`Self::apply_shared_rates`] call (a) no structural mutation
+    /// happened ([`Self::generation`] unchanged, no knob changes) and
+    /// (b) the per-stream rate slice this engine would receive is
+    /// bit-identical. Channel efficiency depends only on the raw rates
+    /// and per-partition knobs (average file size, pipelining level,
+    /// handshake RTTs) — never on remaining bytes — so under (a)+(b)
+    /// `scratch_channel_rates` carries exactly the bits stage two would
+    /// recompute, and the stages below are the reference code verbatim.
+    /// The epoch-cached stepper ([`crate::sim::Simulation`]) is the only
+    /// caller and enforces the contract through its epoch stamps.
+    ///
+    /// `open_streams` is this engine's staged stream count — the value
+    /// `rates.len()` carries on the slow path.
+    ///
+    /// Depletion stays self-detecting: the `.min(remaining)` clamp in
+    /// stage four and the generation bump in stage five happen here
+    /// exactly as on the slow path, so a partition finishing mid-batch
+    /// ends the epoch through the usual stamp mismatch.
+    pub fn apply_warm_rates(
+        &mut self,
+        dt: SimDuration,
+        cpu_cap_bytes_per_sec: f64,
+        open_streams: usize,
+    ) -> TickOutput {
+        if self.channels.is_empty() || dt.is_zero() {
+            return TickOutput::default();
+        }
+        let channel_rates = std::mem::take(&mut self.scratch_channel_rates);
+        debug_assert_eq!(
+            channel_rates.len(),
+            self.channels.len(),
+            "warm tick without one cached stage-two rate per channel"
+        );
+        // Same accumulation order as stage two's running `total_raw += g`.
+        let total_raw: f64 = channel_rates.iter().sum();
+
+        // 3. End-system cap: scale all channels uniformly if the CPUs
+        //    cannot keep up with the network allocation.
+        let scale = if total_raw > cpu_cap_bytes_per_sec && total_raw > 0.0 {
+            cpu_cap_bytes_per_sec / total_raw
+        } else {
+            1.0
+        };
+
+        // 4. Move bytes and account requests.
+        let mut moved_total = 0.0;
+        let mut requests_per_sec = 0.0;
+        for (c, &g) in self.channels.iter().zip(&channel_rates) {
+            let p = &mut self.partitions[c.partition];
+            let rate = g * scale;
+            let moved = (rate * dt.as_secs()).min(p.remaining.as_f64());
+            p.remaining = p.remaining.saturating_sub(Bytes::new(moved));
+            moved_total += moved;
+            requests_per_sec += rate / p.avg_file_size.as_f64().max(1.0);
+        }
+
+        self.scratch_channel_rates = channel_rates;
+        self.retire_finished_partitions();
+
+        TickOutput {
+            goodput: Rate::from_bytes_per_sec(moved_total / dt.as_secs()),
+            moved: Bytes::new(moved_total),
+            requests_per_sec,
+            open_streams,
+        }
+    }
+
+    /// Stage five of a tick, shared by [`Self::apply_shared_rates`] and
+    /// [`Self::apply_warm_rates`]: reassign channels of partitions that
+    /// just finished to the unfinished partition with the most remaining
+    /// data (a real tool's worker simply dequeues the next file).
+    /// Streams stay warm: the TCP connections are reused.
+    fn retire_finished_partitions(&mut self) {
         if self.partitions.iter().any(|p| p.done()) {
             let target = (0..self.partitions.len())
                 .filter(|&i| !self.partitions[i].done())
@@ -524,13 +610,6 @@ impl TransferEngine {
                 let count = self.channels.iter().filter(|c| c.partition == i).count() as u32;
                 self.partitions[i].cc_level = count;
             }
-        }
-
-        TickOutput {
-            goodput: Rate::from_bytes_per_sec(moved_total / dt.as_secs()),
-            moved: Bytes::new(moved_total),
-            requests_per_sec,
-            open_streams,
         }
     }
 }

@@ -7,14 +7,25 @@
 //! testbeds, algorithms, seeds, fleet arrivals/departures and scripted
 //! bandwidth events. These tests drive whole sessions through both
 //! steppers (`reference_stepper` flag) and compare outcomes exactly.
+//!
+//! The same contract extends to the two scale mechanisms layered on
+//! top: warm-epoch tick batching (`constant_bg`) and the sharded
+//! lockstep dispatcher (`shards`). Both are pinned here as bit-for-bit
+//! invariant — outcomes, dispatch records and migration records — for
+//! every shard count, including across mid-run power-cap squeezes that
+//! land inside warm epochs.
 
 use greendt::config::testbeds;
-use greendt::coordinator::{AlgorithmKind, FleetPolicyKind};
+use greendt::coordinator::{AlgorithmKind, FleetPolicyKind, PlacementKind};
 use greendt::dataset::standard;
 use greendt::netsim::BandwidthEvent;
+use greendt::rebalance::{RebalanceConfig, RebalancePolicyKind};
+use greendt::sim::dispatcher::{
+    run_dispatcher, DispatchOutcome, DispatcherConfig, HostSpec, SessionSpec,
+};
 use greendt::sim::fleet::{run_fleet, FleetConfig, FleetOutcome, TenantSpec};
 use greendt::sim::session::{run_session, SessionConfig};
-use greendt::units::{Rate, SimTime};
+use greendt::units::{Power, Rate, SimTime};
 
 fn assert_f64_bits(a: f64, b: f64, what: &str) {
     assert_eq!(a.to_bits(), b.to_bits(), "{what}: epoch {a} vs reference {b}");
@@ -192,4 +203,207 @@ fn empty_dataset_tenant_departs_identically() {
     let fast = run_fleet(&mk(false));
     let naive = run_fleet(&mk(true));
     assert_fleet_outcomes_identical(&fast, &naive, "empty-tenant");
+}
+
+#[test]
+fn constant_bg_fleet_warm_batching_bit_identical() {
+    // The warm-epoch fast path (constant background freezes the link
+    // between events, so whole epochs batch into one jump) must replay
+    // the naive per-tick stepper's accumulation exactly — including
+    // across scripted bandwidth events, which land mid-epoch and must
+    // break the batch on the same tick the reference reacts on.
+    for seed in [5u64, 9] {
+        let mk = |reference: bool| {
+            let mut cfg = fleet_cfg(FleetPolicyKind::MinEnergyFleet, seed, false, reference);
+            cfg.constant_bg = true;
+            cfg
+        };
+        let fast = run_fleet(&mk(false));
+        let naive = run_fleet(&mk(true));
+        assert!(naive.completed, "reference fleet must finish");
+        assert_fleet_outcomes_identical(&fast, &naive, &format!("constant-bg/seed{seed}"));
+    }
+}
+
+/// Shard-count invariance is the dispatcher's whole determinism
+/// contract: every piece of telemetry — not just the aggregate books —
+/// must come out identical whatever the worker-thread count.
+fn assert_dispatch_outcomes_identical(a: &DispatchOutcome, b: &DispatchOutcome, label: &str) {
+    assert_fleet_outcomes_identical(&a.fleet, &b.fleet, label);
+    assert_eq!(a.decisions.len(), b.decisions.len(), "{label}: decision count");
+    for (x, y) in a.decisions.iter().zip(&b.decisions) {
+        let t = format!("{label}/decision {}", x.session);
+        assert_eq!(x.session, y.session, "{t}: session order");
+        assert_f64_bits(x.t_secs, y.t_secs, &format!("{t}: decision time"));
+        assert_f64_bits(x.requested_at_secs, y.requested_at_secs, &format!("{t}: requested"));
+        assert_eq!(x.admitted_host, y.admitted_host, "{t}: admitted host");
+        assert_eq!(x.host, y.host, "{t}: host name");
+        assert_f64_bits(
+            x.projected_fleet_power_w,
+            y.projected_fleet_power_w,
+            &format!("{t}: projected power"),
+        );
+    }
+    assert_eq!(a.migrations.len(), b.migrations.len(), "{label}: migration count");
+    for (x, y) in a.migrations.iter().zip(&b.migrations) {
+        let t = format!("{label}/migration {}", x.session);
+        assert_eq!(x.session, y.session, "{t}: session order");
+        assert_f64_bits(x.t_secs, y.t_secs, &format!("{t}: preemption time"));
+        assert_eq!((x.from_host, x.to_host), (y.from_host, y.to_host), "{t}: hosts");
+        assert_f64_bits(x.moved_bytes, y.moved_bytes, &format!("{t}: moved"));
+        assert_f64_bits(x.remaining_bytes, y.remaining_bytes, &format!("{t}: remaining"));
+        assert_f64_bits(x.drain_secs, y.drain_secs, &format!("{t}: drain"));
+    }
+    assert_eq!(a.unplaced, b.unplaced, "{label}: unplaced");
+}
+
+/// A five-host heterogeneous fleet with staggered arrivals: enough
+/// hosts that 2- and 8-shard partitions differ, enough sessions that
+/// admissions land across segment boundaries.
+fn sharded_cfg(shards: usize, constant_bg: bool) -> DispatcherConfig {
+    let testbeds = testbeds::all();
+    let hosts: Vec<HostSpec> = (0..5)
+        .map(|i| {
+            let tb = testbeds[i % testbeds.len()].clone();
+            HostSpec::new(format!("host{i}-{}", tb.name), tb).with_max_sessions(2)
+        })
+        .collect();
+    let sessions: Vec<SessionSpec> = (0..10u64)
+        .map(|i| {
+            SessionSpec::new(
+                format!("session-{i}"),
+                standard::medium_dataset(100 + i),
+                if i % 2 == 0 { AlgorithmKind::MaxThroughput } else { AlgorithmKind::MinEnergy },
+            )
+            .arriving_at(SimTime::from_secs(10.0 * i as f64))
+        })
+        .collect();
+    let mut cfg = DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+        .with_sessions(sessions)
+        .with_seed(7)
+        .with_shards(shards);
+    if constant_bg {
+        cfg = cfg.with_constant_bg();
+    }
+    cfg
+}
+
+#[test]
+fn dispatcher_outcomes_invariant_to_shard_count() {
+    // The same fleet at 1 (serial reference loop), 2 and 8 worker
+    // threads, with and without warm-epoch batching: identical
+    // outcomes, identical dispatch records. The 1-shard run is the
+    // loop earlier releases shipped, so this also pins "sharding off
+    // by default changes nothing".
+    for constant_bg in [false, true] {
+        let reference = run_dispatcher(&sharded_cfg(1, constant_bg));
+        assert!(reference.fleet.completed, "serial run must finish");
+        for shards in [2usize, 8] {
+            let sharded = run_dispatcher(&sharded_cfg(shards, constant_bg));
+            assert_dispatch_outcomes_identical(
+                &reference,
+                &sharded,
+                &format!("{shards}-shard/constant_bg={constant_bg}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn migrations_are_invariant_to_shard_count() {
+    // The rebalancer's hot-spot scenario (a stranded session that must
+    // move from the legacy host to the efficient one): the preemption,
+    // the drain window and the re-admission all cross segment
+    // boundaries, and every record must be bit-identical however the
+    // inner loop is sharded.
+    let mk = |shards: usize| {
+        let hosts = vec![
+            HostSpec::new("efficient", testbeds::cloudlab()).with_max_sessions(1),
+            HostSpec::new("legacy", testbeds::didclab()).with_max_sessions(4),
+        ];
+        let sessions = vec![
+            SessionSpec::new("s0", standard::medium_dataset(301), AlgorithmKind::MaxThroughput),
+            SessionSpec::new("s1", standard::large_dataset(302), AlgorithmKind::MaxThroughput)
+                .arriving_at(SimTime::from_secs(5.0)),
+        ];
+        let mut cfg = DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+            .with_sessions(sessions)
+            .with_seed(61)
+            .with_shards(shards);
+        cfg.rebalance = RebalanceConfig::new(RebalancePolicyKind::MarginalEnergyDelta);
+        cfg
+    };
+    let reference = run_dispatcher(&mk(1));
+    assert!(!reference.migrations.is_empty(), "scenario must actually migrate");
+    for shards in [2usize, 8] {
+        let sharded = run_dispatcher(&mk(shards));
+        assert_dispatch_outcomes_identical(&reference, &sharded, &format!("{shards}-shard"));
+    }
+}
+
+#[test]
+fn cap_squeeze_mid_epoch_breaks_the_horizon() {
+    // Regression for the event-horizon contract: a scripted power-cap
+    // squeeze landing inside an otherwise-quiet stretch (every link
+    // frozen, warm epochs batching thousands of ticks) must still fire
+    // on its exact tick, and — the bug this test caught — a cap *lift*
+    // still ahead must keep a fully-drained fleet alive: the queued
+    // sessions wait out the squeeze on idle hosts and re-admit at the
+    // lift, instead of the run ending early and reporting them
+    // unplaced. Warm batching and sharding may not leap over either
+    // event.
+    let mk = |shards: usize, reference: bool| {
+        let testbeds = testbeds::all();
+        let hosts: Vec<HostSpec> = (0..3)
+            .map(|i| {
+                let tb = testbeds[i % testbeds.len()].clone();
+                HostSpec::new(format!("host{i}-{}", tb.name), tb).with_max_sessions(1)
+            })
+            .collect();
+        let sessions: Vec<SessionSpec> = (0..6u64)
+            .map(|i| {
+                SessionSpec::new(
+                    format!("session-{i}"),
+                    standard::medium_dataset(200 + i),
+                    AlgorithmKind::MaxThroughput,
+                )
+            })
+            .collect();
+        // The squeeze lands at t = 5 s — before the fastest possible
+        // session can finish (11.7 GB needs > 9 s even at 10 Gbps line
+        // rate) — so every slot a departure frees stays cap-blocked
+        // until the lift at t = 400 s.
+        let mut cfg = DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+            .with_sessions(sessions)
+            .with_seed(13)
+            .with_shards(shards)
+            .with_constant_bg()
+            .with_cap_event(SimTime::from_secs(5.0), Some(Power::from_watts(1.0)))
+            .with_cap_event(SimTime::from_secs(400.0), None);
+        cfg.reference_stepper = reference;
+        cfg
+    };
+    let naive = run_dispatcher(&mk(1, true));
+    assert!(naive.fleet.completed, "reference run must finish");
+    assert!(naive.unplaced.is_empty(), "the queue must survive the squeeze");
+    // The squeeze must actually bite: no admission between the cap
+    // events, and the queued half of the workload re-admitted only
+    // once the cap lifted.
+    assert!(
+        !naive
+            .decisions
+            .iter()
+            .any(|d| d.t_secs > 5.0 && d.t_secs < 400.0 - 1e-9 && !d.queued()),
+        "no admission may slip through the 1 W squeeze"
+    );
+    assert!(
+        naive.decisions.iter().any(|d| d.t_secs >= 400.0 - 1e-9 && !d.queued()),
+        "queued sessions must re-admit at the cap lift"
+    );
+    let serial_fast = run_dispatcher(&mk(1, false));
+    assert_dispatch_outcomes_identical(&naive, &serial_fast, "warm vs naive");
+    for shards in [2usize, 8] {
+        let sharded = run_dispatcher(&mk(shards, false));
+        assert_dispatch_outcomes_identical(&naive, &sharded, &format!("{shards}-shard warm"));
+    }
 }
