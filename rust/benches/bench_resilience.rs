@@ -1,0 +1,110 @@
+//! Resilience bench: the per-boundary cost of the fault machinery plus
+//! the end-to-end joules/goodput comparison under the shared fault
+//! script, written to `BENCH_resilience.json` (the committed seed
+//! carries the schema; CI regenerates and uploads the file next to the
+//! other bench artifacts).
+//!
+//!     cargo bench --bench bench_resilience
+//!
+//! Micro: what a segment boundary pays while the pipeline is armed —
+//! fault-spec parsing + timeline expansion, a PenaltyBox surcharge
+//! lookup sweep, and a HealthMonitor observation sweep over a 64-host
+//! fleet. Macro: the `benchkit::resilience` scenario end-to-end with
+//! recovery off vs on, asserting the acceptance invariant (recovery
+//! wins goodput at no extra joules) before the figures are published.
+
+use greendt::benchkit::resilience::{assert_recovery_wins, scenario, summarize, FaultRunSummary};
+use greendt::benchkit::{bench, time_once, BenchReport};
+use greendt::resilience::{FaultSchedule, HealthConfig, HealthMonitor, PenaltyBox, PenaltyConfig};
+use greendt::sim::dispatcher::run_dispatcher;
+
+fn main() {
+    println!("== bench_resilience: fault pipeline cost + recovery payoff ==\n");
+    let mut reports: Vec<BenchReport> = Vec::new();
+
+    // Micro: parse + expand a multi-clause fault spec (the CLI path).
+    let spec = "down:host=1,at=300,revive=900; degrade:host=0,at=60,until=240,frac=0.9; \
+                down:host=3,at=500";
+    reports.push(bench("faults parse+timeline/3 clauses", 200, 20_000, || {
+        let s = FaultSchedule::parse(spec).expect("valid spec");
+        s.timeline()
+    }));
+
+    // Micro: the placement-scoring surcharge lookup, per boundary, for a
+    // 64-host fleet with a handful of struck hosts.
+    let mut penalty = PenaltyBox::new(PenaltyConfig::default());
+    for h in [3usize, 17, 41] {
+        penalty.note_failure(h, 100.0);
+        penalty.note_failure(h, 180.0);
+    }
+    reports.push(bench("penalty surcharge/64 hosts", 200, 20_000, || {
+        (0..64usize).map(|h| penalty.surcharge_j_per_byte(h, 400.0)).sum::<f64>()
+    }));
+
+    // Micro: one health observation round over the same fleet.
+    let mut health = HealthMonitor::new(HealthConfig::default(), 64);
+    let mut t = 0.0f64;
+    reports.push(bench("health observe/64 hosts", 200, 20_000, || {
+        t += 5.0;
+        let mut advisories = 0u32;
+        for h in 0..64usize {
+            let observed = if h % 7 == 0 { 1e7 } else { 9e7 };
+            if health.observe(h, t, observed, 1e8).is_some() {
+                advisories += 1;
+            }
+        }
+        advisories
+    }));
+
+    // Macro: the shared scenario end-to-end, recovery off vs on.
+    let (off_out, off_s) = time_once("run_dispatcher/faults/recovery off", || {
+        run_dispatcher(&scenario(false))
+    });
+    let (on_out, on_s) = time_once("run_dispatcher/faults/recovery on", || {
+        run_dispatcher(&scenario(true))
+    });
+    let off = summarize(&off_out);
+    let on = summarize(&on_out);
+    assert_recovery_wins(&off, &on);
+    println!(
+        "\nrecovery off: {:.2} GB in {:.0} s ({:.1} MB/s) for {:.0} J, {} dead-lettered",
+        off.delivered_bytes / 1e9,
+        off.duration_s,
+        off.goodput_bps / 1e6,
+        off.joules,
+        off.dead_lettered
+    );
+    println!(
+        "recovery on : {:.2} GB in {:.0} s ({:.1} MB/s) for {:.0} J, {} advisories, {} moves",
+        on.delivered_bytes / 1e9,
+        on.duration_s,
+        on.goodput_bps / 1e6,
+        on.joules,
+        on_out.advisories.len(),
+        on_out.migrations.len()
+    );
+
+    // Machine-readable record, next to the other bench artifacts.
+    fn leg(s: &FaultRunSummary, wall: f64) -> String {
+        format!(
+            "{{\"goodput_bps\":{:.1},\"joules\":{:.1},\"delivered_bytes\":{:.0},\
+             \"duration_s\":{:.3},\"dead_lettered\":{},\"completed\":{},\
+             \"wall_seconds\":{}}}",
+            s.goodput_bps, s.joules, s.delivered_bytes, s.duration_s, s.dead_lettered,
+            s.completed, wall
+        )
+    }
+    let micro: Vec<String> = reports.iter().map(|r| r.to_json()).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"resilience\",\n  \"measured\": true,\n  \
+         \"macro\": {{\n    \"off\": {},\n    \"on\": {},\n    \
+         \"advisories\": {},\n    \"evacuations\": {}\n  }},\n  \"micro\": [{}]\n}}\n",
+        leg(&off, off_s),
+        leg(&on, on_s),
+        on_out.advisories.len(),
+        on_out.migrations.len(),
+        micro.join(",")
+    );
+    std::fs::write("BENCH_resilience.json", json).expect("writing BENCH_resilience.json");
+    println!("\nbench report written to BENCH_resilience.json");
+}

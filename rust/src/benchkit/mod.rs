@@ -6,6 +6,7 @@
 //! sessions.
 
 pub mod hotpath;
+pub mod resilience;
 pub mod scale;
 
 use crate::metrics::Summary;

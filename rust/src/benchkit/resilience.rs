@@ -1,0 +1,161 @@
+//! The resilience benchmark scenario: one fault script, recovery on
+//! vs off — shared by `cargo bench --bench bench_resilience`, the
+//! `fleet_faults` example and the integration tests, so every consumer
+//! measures the same story.
+//!
+//! The script: two single-slot hosts, `steady` (CloudLab, efficient)
+//! and `flaky` (DIDCLAB, legacy, wall-metered). Two sessions arrive
+//! together; the dispatcher puts `anchor` on the efficient host, which
+//! forces `victim` onto the legacy one. At [`DEGRADE_AT_S`] the flaky
+//! host's link collapses to a [`DEGRADED_FRACTION`] background
+//! fraction, and at [`DEATH_AT_S`] its transfer service dies for good.
+//!
+//! With recovery off the victim crawls on the degraded link until the
+//! crash dead-letters it: bytes are lost, and the fleet pays the
+//! legacy host's wall draw for the whole stretch. With recovery on the
+//! health monitor notices the goodput crater, latches an advisory, and
+//! the rebalancer evacuates the victim to the efficient host as soon
+//! as the anchor's slot frees — the run finishes earlier, delivers
+//! every byte, and never meters the long crawl. That is the acceptance
+//! claim in one scenario: recovery wins goodput *and* joules.
+
+use crate::config::testbeds;
+use crate::coordinator::{AlgorithmKind, PlacementKind};
+use crate::dataset::standard;
+use crate::resilience::{FaultSchedule, ResilienceConfig};
+use crate::sim::dispatcher::{DispatchOutcome, DispatcherConfig, HostSpec, SessionSpec};
+use crate::units::SimTime;
+
+/// When the flaky host's link collapses, simulated seconds.
+pub const DEGRADE_AT_S: f64 = 40.0;
+
+/// When the flaky host's transfer service dies, simulated seconds.
+/// Late enough that the degraded victim cannot finish first (a
+/// `large` dataset needs far longer than the crawl window allows), so
+/// the recovery-off run always loses bytes.
+pub const DEATH_AT_S: f64 = 800.0;
+
+/// Background fraction in force while degraded: sessions keep ~15% of
+/// the bottleneck (the `quiet` process ceiling — higher requests
+/// clamp there anyway).
+pub const DEGRADED_FRACTION: f64 = 0.85;
+
+/// The scripted fault sequence on the flaky host (index 1): link
+/// collapse at [`DEGRADE_AT_S`], death at [`DEATH_AT_S`].
+pub fn fault_schedule() -> FaultSchedule {
+    FaultSchedule::default()
+        .with_link_degrade(
+            1,
+            SimTime::from_secs(DEGRADE_AT_S),
+            SimTime::from_secs(DEATH_AT_S),
+            DEGRADED_FRACTION,
+        )
+        .with_host_failure(1, SimTime::from_secs(DEATH_AT_S), None)
+}
+
+/// The benchmark dispatcher config, identical apart from the recovery
+/// switch: same hosts, sessions, seed and fault script.
+pub fn scenario(recovery: bool) -> DispatcherConfig {
+    let hosts = vec![
+        HostSpec::new("steady", testbeds::cloudlab()).with_max_sessions(1),
+        HostSpec::new("flaky", testbeds::didclab()).with_max_sessions(1),
+    ];
+    let sessions = vec![
+        SessionSpec::new("anchor", standard::medium_dataset(21), AlgorithmKind::MaxThroughput),
+        SessionSpec::new("victim", standard::large_dataset(22), AlgorithmKind::MaxThroughput),
+    ];
+    let mut resilience = ResilienceConfig::new().with_faults(fault_schedule());
+    if recovery {
+        resilience = resilience.with_recovery();
+    }
+    DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+        .with_sessions(sessions)
+        .with_seed(42)
+        .with_resilience(resilience)
+}
+
+/// The figures the acceptance criteria compare, reduced from one run.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultRunSummary {
+    /// Bytes delivered across the fleet (partial residencies included).
+    pub delivered_bytes: f64,
+    /// Run makespan, seconds.
+    pub duration_s: f64,
+    /// Fleet goodput: delivered bytes over the makespan.
+    pub goodput_bps: f64,
+    /// Total client instrument energy, joules.
+    pub joules: f64,
+    /// Sessions quarantined (dead letters plus overflow).
+    pub dead_lettered: u64,
+    /// True when every session finished.
+    pub completed: bool,
+}
+
+/// Reduce a dispatcher outcome to the figures the bench compares.
+pub fn summarize(out: &DispatchOutcome) -> FaultRunSummary {
+    let fleet = &out.fleet;
+    let delivered = fleet.moved.as_f64();
+    let duration = fleet.duration.as_secs();
+    FaultRunSummary {
+        delivered_bytes: delivered,
+        duration_s: duration,
+        goodput_bps: if duration > 0.0 { delivered / duration } else { 0.0 },
+        joules: fleet.client_energy.as_joules(),
+        dead_lettered: fleet.dead_letters.len() as u64 + fleet.dead_letter_overflow,
+        completed: fleet.completed,
+    }
+}
+
+/// Assert the acceptance invariant on an (off, on) outcome pair:
+/// recovery-on completes, delivers strictly more goodput, and spends
+/// no more energy than recovery-off; recovery-off quarantines the
+/// victim. Panics with the offending figures otherwise.
+pub fn assert_recovery_wins(off: &FaultRunSummary, on: &FaultRunSummary) {
+    assert!(!off.completed, "recovery-off must lose the victim to the crash");
+    assert!(off.dead_lettered > 0, "recovery-off must quarantine the victim");
+    assert!(on.completed, "recovery-on must deliver every session");
+    assert_eq!(on.dead_lettered, 0, "recovery-on must quarantine nothing");
+    assert!(
+        on.goodput_bps > off.goodput_bps,
+        "recovery-on goodput {:.3e} B/s must beat recovery-off {:.3e} B/s",
+        on.goodput_bps,
+        off.goodput_bps
+    );
+    assert!(
+        on.joules <= off.joules,
+        "recovery-on spent {:.1} J, more than recovery-off {:.1} J",
+        on.joules,
+        off.joules
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_configs_differ_only_in_recovery() {
+        let off = scenario(false);
+        let on = scenario(true);
+        assert!(!off.resilience.enabled);
+        assert!(on.resilience.enabled);
+        assert!(off.resilience.active(), "faults alone keep the pipeline active");
+        assert_eq!(off.resilience.faults, on.resilience.faults);
+        assert_eq!(off.hosts.len(), 2);
+        assert_eq!(off.sessions.len(), 2);
+    }
+
+    #[test]
+    fn fault_script_is_valid_for_the_two_host_fleet() {
+        assert!(fault_schedule().validate(2).is_ok());
+        assert!(fault_schedule().validate(1).is_err(), "targets host 1");
+    }
+
+    #[test]
+    fn script_orders_degrade_before_death() {
+        assert!(DEGRADE_AT_S < DEATH_AT_S);
+        let mut t = fault_schedule().timeline();
+        let first = t.pop_due(DEATH_AT_S).expect("degrade first");
+        assert_eq!(first.at, SimTime::from_secs(DEGRADE_AT_S));
+    }
+}

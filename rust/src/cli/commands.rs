@@ -74,6 +74,18 @@ COMMANDS:
              --constant-bg         freeze each host's background traffic at
                                    the testbed mean (fully deterministic,
                                    lets warm epochs batch ticks)
+             --faults <SPEC>       scripted faults, semicolon-separated:
+                                   down:host=H,at=T[,revive=T2] kills host H
+                                   at T seconds; degrade:host=H,at=T,until=T2,
+                                   frac=F collapses its link to background
+                                   fraction F for the window
+             --resilience on|off   recovery machinery: PenaltyBox retries +
+                                   health-driven evacuation (default off —
+                                   with --faults, losses are then terminal
+                                   and dead-lettered immediately)
+             --retry-budget <N>    host failures one session may survive
+                                   before dead-letter quarantine (default 3;
+                                   only meaningful with --resilience on)
   history    Inspect or maintain a JSONL history store
              stats --history <F>   record counts + per-host/testbed costs
              query --history <F>   k-NN answer for a workload:
@@ -304,6 +316,9 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<i32> {
         || args.get("rebalance").is_some()
         || args.get("migration-cost").is_some()
         || args.get("shards").is_some()
+        || args.get("faults").is_some()
+        || args.get("resilience").is_some()
+        || args.get("retry-budget").is_some()
         || args.has("price-queue-delay")
         || args.has("constant-bg")
     {
@@ -444,6 +459,26 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
         rebalance = rebalance.with_cost(crate::rebalance::MigrationCost::with_drain_secs(drain));
     }
 
+    // The resilience pipeline: scripted faults (`--faults`), the
+    // recovery switch (`--resilience on|off`) and the retry budget.
+    let mut resilience = crate::resilience::ResilienceConfig::new();
+    if let Some(spec) = args.get("faults") {
+        let faults = crate::resilience::FaultSchedule::parse(spec)
+            .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+        faults.validate(hosts.len()).map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+        resilience = resilience.with_faults(faults);
+    }
+    match args.get_or("resilience", "off") {
+        "on" => resilience = resilience.with_recovery(),
+        "off" => {}
+        other => bail!("--resilience expects on|off, got '{other}'"),
+    }
+    if let Some(budget) =
+        args.get_u32("retry-budget").map_err(|e: ArgError| anyhow::anyhow!(e))?
+    {
+        resilience = resilience.with_retry_budget(budget);
+    }
+
     // Workload: an open Poisson process, or the scripted
     // --tenants/--spacing schedule the single-host mode uses.
     let sessions: Vec<SessionSpec> = if let Some(spec) = args.get("arrivals") {
@@ -501,6 +536,7 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
     cfg.rebalance = rebalance;
     cfg.price_queue_delay = args.has("price-queue-delay");
     cfg.history = index;
+    cfg.resilience = resilience;
     // `--shards N` (0 / absent = one per available core); outcomes are
     // shard-count invariant, so the CLI defaults to full parallelism.
     cfg.shards = args
@@ -571,6 +607,44 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
         }
         println!("{}", mt.to_markdown());
     }
+    if !out.faults.is_empty() {
+        let mut ft = crate::metrics::Table::new(
+            "fault timeline",
+            &["t (s)", "host", "event", "sessions hit"],
+        );
+        for f in &out.faults {
+            ft.push_row(vec![
+                format!("{:.1}", f.t_secs),
+                f.host_name.clone(),
+                f.kind.id().to_string(),
+                f.sessions_hit.to_string(),
+            ]);
+        }
+        println!("{}", ft.to_markdown());
+    }
+    if !fleet.dead_letters.is_empty() || fleet.dead_letter_overflow > 0 {
+        let mut dt = crate::metrics::Table::new(
+            "dead letters",
+            &["session", "host", "reason", "attempts", "moved", "owed"],
+        );
+        for d in &fleet.dead_letters {
+            dt.push_row(vec![
+                d.session.clone(),
+                fleet.hosts[d.host].host.clone(),
+                d.reason.id().to_string(),
+                d.attempts.to_string(),
+                format!("{}", crate::units::Bytes::new(d.moved_bytes)),
+                format!("{}", crate::units::Bytes::new(d.remaining_bytes)),
+            ]);
+        }
+        println!("{}", dt.to_markdown());
+        if fleet.dead_letter_overflow > 0 {
+            println!(
+                "  ({} more dead letters past the queue bound)",
+                fleet.dead_letter_overflow
+            );
+        }
+    }
     let queued = out.decisions.iter().filter(|d| d.queued()).count();
     println!("  completed        : {}", fleet.completed);
     println!("  makespan         : {}", fleet.duration);
@@ -587,6 +661,17 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
             "  rebalancer       : {} ({} migrations executed)",
             cfg.rebalance.policy.id(),
             out.migrations.len()
+        );
+    }
+    if cfg.resilience.active() {
+        println!(
+            "  resilience       : recovery {} | {} faults fired, {} retries, {} advisories, \
+             {} dead-lettered",
+            if cfg.resilience.enabled { "on" } else { "off" },
+            out.faults.len(),
+            out.retries.len(),
+            out.advisories.len(),
+            fleet.dead_letters.len() as u64 + fleet.dead_letter_overflow,
         );
     }
     if let Some(cap) = cfg.power_cap {
@@ -931,6 +1016,39 @@ mod tests {
         assert_eq!(run(&argv(&format!("{base} --shards 2 --constant-bg"))).unwrap(), 0);
         assert_eq!(run(&argv(&format!("{base} --shards 1"))).unwrap(), 0);
         assert_eq!(run(&argv("fleet --shards 0 --tenants 2 --dataset small --seed 3")).unwrap(), 0);
+    }
+
+    #[test]
+    fn fleet_resilience_flags_select_the_dispatcher_and_validate() {
+        // `--resilience on` alone selects the multi-host path; without a
+        // fault schedule nothing fails and the run completes clean.
+        let code = run(&argv(
+            "fleet --resilience on --tenants 2 --dataset small --spacing 5 --seed 3",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+        // A fault scheduled long after the workload drains never fires —
+        // the flags plumb through and the run still exits 0.
+        let code = run(&argv(
+            "fleet --hosts 2 --tenants 2 --dataset small --spacing 5 --seed 3 \
+             --resilience on --retry-budget 2 --faults down:host=1,at=14000",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+        // Recovery off + a death under a running session is a terminal
+        // loss: the session is dead-lettered and the run reports
+        // incomplete (exit 1).
+        let code = run(&argv(
+            "fleet --hosts 1 --tenants 1 --dataset small --seed 3 \
+             --faults down:host=0,at=1",
+        ))
+        .unwrap();
+        assert_eq!(code, 1);
+        // Malformed schedules, out-of-range hosts and bad switch values
+        // are rejected up front.
+        assert!(run(&argv("fleet --faults boom:host=0,at=1 --tenants 2")).is_err());
+        assert!(run(&argv("fleet --hosts 2 --faults down:host=7,at=10 --tenants 2")).is_err());
+        assert!(run(&argv("fleet --resilience maybe --tenants 2")).is_err());
     }
 
     #[test]

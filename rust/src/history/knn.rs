@@ -19,6 +19,15 @@
 //! the neighbours found, `0` for an empty index); callers fall back to
 //! the model-only path below [`CONFIDENCE_FLOOR`].
 //!
+//! Runs that ended without completing (schema v3
+//! [`RunOutcome`](super::RunOutcome)) are indexed *down-weighted*, not
+//! censored: their distance is inflated by [`INCOMPLETE_PENALTY`], so a
+//! completed twin always out-votes them but a host whose only history
+//! is failure still answers — and answers with the cost its failures
+//! actually ran up. Dropping them (the pre-v3 behaviour) was
+//! survivorship bias: a flaky host's disasters vanished from the log
+//! and only its lucky runs trained the learner.
+//!
 //! The index is a snapshot: it is built once from a store's records and
 //! is *not* invalidated by later appends — rebuild (cheap, linear) to see
 //! new history. See ARCHITECTURE.md §History.
@@ -37,6 +46,13 @@ pub const DEFAULT_K: usize = 5;
 /// cross-testbed one at comparable workload distance, small enough that a
 /// sparse store still answers.
 const CATEGORY_PENALTY: f64 = 1.0;
+
+/// Distance inflation applied to runs that ended without completing —
+/// twice the categorical penalty, so an incomplete run is out-voted by
+/// any completed record at comparable distance (even one from the
+/// wrong testbed) yet still answers when it is all the history a host
+/// has.
+pub const INCOMPLETE_PENALTY: f64 = 2.0;
 
 /// A warm-start recommendation: the operating point a
 /// [`HistoryTuned`](crate::coordinator::history_tuned::HistoryTuned)
@@ -62,6 +78,9 @@ struct Entry {
     /// The marginal J/B the dispatcher estimated at this run's admission
     /// (v2 records; `None` on v1 records and single-host runs).
     marginal_j_per_byte: Option<f64>,
+    /// Whether the residency completed; incomplete entries pay
+    /// [`INCOMPLETE_PENALTY`] in every distance computation.
+    completed: bool,
 }
 
 /// The index itself (see the module docs). Cloneable so a
@@ -74,9 +93,9 @@ pub struct KnnIndex {
 }
 
 impl KnnIndex {
-    /// Index `records` with the default neighbour count. Incomplete runs
-    /// and runs that moved no bytes are skipped — they carry no usable
-    /// operating point.
+    /// Index `records` with the default neighbour count. Runs that moved
+    /// no bytes are skipped — they carry no usable operating point or
+    /// cost; incomplete runs are kept but pay [`INCOMPLETE_PENALTY`].
     pub fn build(records: &[RunRecord]) -> KnnIndex {
         KnnIndex::with_k(records, DEFAULT_K)
     }
@@ -85,7 +104,7 @@ impl KnnIndex {
     pub fn with_k(records: &[RunRecord], k: usize) -> KnnIndex {
         let entries = records
             .iter()
-            .filter(|r| r.completed && r.moved_bytes > 0.0)
+            .filter(|r| r.moved_bytes > 0.0)
             .map(|r| Entry {
                 features: features::features(
                     &r.workload,
@@ -103,6 +122,7 @@ impl KnnIndex {
                 },
                 j_per_byte: r.j_per_byte,
                 marginal_j_per_byte: r.admission_marginal_jpb.filter(|m| m.is_finite()),
+                completed: r.outcome.is_completed(),
             })
             .collect();
         KnnIndex { k: k.max(1), entries }
@@ -147,6 +167,9 @@ impl KnnIndex {
             if algo != &entry.algorithm {
                 d += CATEGORY_PENALTY;
             }
+        }
+        if !entry.completed {
+            d += INCOMPLETE_PENALTY;
         }
         d
     }
@@ -277,6 +300,7 @@ impl KnnIndex {
 mod tests {
     use super::*;
     use crate::history::features::WorkloadFingerprint;
+    use crate::history::RunOutcome;
 
     fn record(
         host: &str,
@@ -312,9 +336,16 @@ mod tests {
             moved_bytes: total_gb * 1e9,
             duration_s: 100.0,
             completed: true,
+            outcome: RunOutcome::Completed,
             admission_marginal_jpb: None,
             traj: Vec::new(),
         }
+    }
+
+    fn failed(mut r: RunRecord) -> RunRecord {
+        r.completed = false;
+        r.outcome = RunOutcome::Failed;
+        r
     }
 
     fn query(total_gb: f64) -> Query {
@@ -359,10 +390,30 @@ mod tests {
     }
 
     #[test]
-    fn incomplete_runs_are_not_indexed() {
-        let mut r = record("h0", "DIDCLab", 10.0, (2, 1, 9), 4e-8);
-        r.completed = false;
-        assert!(KnnIndex::build(&[r]).is_empty());
+    fn incomplete_runs_are_indexed_but_down_weighted() {
+        // Alone, a failed run still answers — with the cost its failure
+        // actually ran up, dented by the built-in distance penalty.
+        let lone = failed(record("h0", "DIDCLab", 10.0, (2, 1, 9), 4e-8));
+        let idx = KnnIndex::build(&[lone]);
+        assert_eq!(idx.len(), 1, "failures are no longer censored");
+        let (jpb, conf) = idx.observed_j_per_byte("h0", &query(10.0)).unwrap();
+        assert!((jpb - 4e-8).abs() < 1e-12);
+        // An exact-match completed run would score 1.0; the penalty
+        // dents this one to 1/(1 + INCOMPLETE_PENALTY).
+        assert!((conf - 1.0 / (1.0 + INCOMPLETE_PENALTY)).abs() < 1e-9, "conf {conf}");
+        // Next to a completed twin, the twin dominates both the vote and
+        // the cost mean.
+        let good = record("h0", "DIDCLab", 10.0, (2, 1, 9), 2e-8);
+        let bad = failed(record("h0", "DIDCLab", 10.0, (8, 5, 30), 9e-8));
+        let idx = KnnIndex::build(&[bad, good]);
+        let (op, _) = idx.warm_start(&query(10.0)).unwrap();
+        assert_eq!(op.channels, 9, "completed twin out-votes the failure");
+        let (jpb, _) = idx.observed_j_per_byte("h0", &query(10.0)).unwrap();
+        assert!((jpb - 2e-8).abs() < 1e-9, "cost mean stays near the survivor: {jpb}");
+        // Zero-byte residencies stay out — nothing to learn from.
+        let mut empty = failed(record("h0", "DIDCLab", 10.0, (2, 1, 9), 4e-8));
+        empty.moved_bytes = 0.0;
+        assert!(KnnIndex::build(&[empty]).is_empty());
     }
 
     #[test]

@@ -38,5 +38,5 @@ pub mod store;
 
 pub use features::{Query, WorkloadFingerprint};
 pub use knn::{KnnIndex, WarmStart, CONFIDENCE_FLOOR};
-pub use record::{RunRecord, TrajPoint, FORMAT_VERSION, MIN_SUPPORTED_VERSION};
+pub use record::{RunOutcome, RunRecord, TrajPoint, FORMAT_VERSION, MIN_SUPPORTED_VERSION};
 pub use store::{HistoryStore, StoreStats};

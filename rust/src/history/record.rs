@@ -2,9 +2,11 @@
 //!
 //! Three record kinds share the stream, discriminated by `"kind"`:
 //!
-//! * `"run"` — one [`RunRecord`] per *completed* session/tenant: the
-//!   workload fingerprint, the path, the operating point the run settled
-//!   at, and what it cost. These are what the k-NN index learns from.
+//! * `"run"` — one [`RunRecord`] per *ended residency* that moved bytes:
+//!   the workload fingerprint, the path, the operating point the run
+//!   settled at, what it cost, and how it ended ([`RunOutcome`]). These
+//!   are what the k-NN index learns from (non-completed outcomes
+//!   down-weighted, never censored — see the v3 note below).
 //! * `"dispatch"` — one line per dispatcher placement decision
 //!   ([`DispatchRecord`]), written for offline mining; the store counts
 //!   and preserves them but does not parse them back into structs.
@@ -24,17 +26,74 @@
 //! (`null`/absent on single-host runs). It gives learned placement a
 //! scale-consistent observation to blend with the marginal model score,
 //! instead of the full-cost attributed bill v1 could only offer.
+//!
+//! **v2 → v3**: run records gained `"outcome"` ([`RunOutcome`]) and the
+//! fleet drivers started emitting records for runs that *ended without
+//! completing* — preempted, failed under a fault, dead-lettered. Before
+//! v3 the log only ever saw survivors, so the k-NN index learned a
+//! biased picture of flaky hosts (their disasters were censored, their
+//! lucky runs recorded). Loaders derive the outcome from the old
+//! boolean `"completed"` when the key is absent (v1/v2 lines), so old
+//! stores keep loading; old binaries reading v3 lines skip them by the
+//! unknown-version rule, which only costs them the new samples.
 
 use super::features::WorkloadFingerprint;
 use super::json::{self, Json};
 use crate::sim::{DispatchRecord, MigrationRecord};
 
 /// Version written into every line this build produces.
-pub const FORMAT_VERSION: u32 = 2;
+pub const FORMAT_VERSION: u32 = 3;
 
 /// Oldest line version this build still parses (older *known* versions
 /// simply leave their missing optional fields unset).
 pub const MIN_SUPPORTED_VERSION: u32 = 1;
+
+/// How a recorded residency ended — the v3 field that lets the learner
+/// see failures instead of only survivors (survivorship bias: a host
+/// that kills half its sessions used to look *better* in the log,
+/// because only its lucky half got recorded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunOutcome {
+    /// The transfer finished all its bytes on this host.
+    Completed,
+    /// A rebalancer/evacuation move ended the residency early; the
+    /// remaining bytes continued elsewhere.
+    Preempted,
+    /// The residency was cut short by a fault (or ran out of simulated
+    /// time) without finishing.
+    Failed,
+    /// The session exhausted its retry budget and was quarantined.
+    DeadLettered,
+}
+
+impl RunOutcome {
+    /// Stable string written into the `"outcome"` key.
+    pub fn id(self) -> &'static str {
+        match self {
+            RunOutcome::Completed => "completed",
+            RunOutcome::Preempted => "preempted",
+            RunOutcome::Failed => "failed",
+            RunOutcome::DeadLettered => "dead_lettered",
+        }
+    }
+
+    /// Parse the stable string back; `None` for unknown values (the
+    /// loader then falls back to the `"completed"` boolean).
+    pub fn parse(s: &str) -> Option<RunOutcome> {
+        match s {
+            "completed" => Some(RunOutcome::Completed),
+            "preempted" => Some(RunOutcome::Preempted),
+            "failed" => Some(RunOutcome::Failed),
+            "dead_lettered" => Some(RunOutcome::DeadLettered),
+            _ => None,
+        }
+    }
+
+    /// The pre-v3 boolean this outcome collapses to.
+    pub fn is_completed(self) -> bool {
+        self == RunOutcome::Completed
+    }
+}
 
 /// One sample of a session's `(cores, P-state, channels)` trajectory
 /// (recorded at tuning timeouts when the driver keeps timelines).
@@ -88,8 +147,13 @@ pub struct RunRecord {
     pub moved_bytes: f64,
     /// Residency on the host, seconds.
     pub duration_s: f64,
-    /// Whether the transfer finished before the run's time cap.
+    /// Whether the transfer finished before the run's time cap. Kept
+    /// alongside [`Self::outcome`] for pre-v3 readers; writers keep the
+    /// two consistent (`completed == outcome.is_completed()`).
     pub completed: bool,
+    /// How the residency ended (v3; derived from `completed` on older
+    /// lines, so v1/v2 stores load as all-completed/all-failed).
+    pub outcome: RunOutcome,
     /// The dispatcher's *marginal* J/B estimate for the admitting host
     /// at admission time (the `MarginalEnergy` model score) — `None` on
     /// single-host fleets and on v1 records. Scale-consistent with the
@@ -126,7 +190,7 @@ impl RunRecord {
                 "\"contention\":{},\"cores\":{},\"pstate\":{},\"channels\":{},",
                 "\"peak_channels\":{},\"goodput_bps\":{},\"joules\":{},",
                 "\"j_per_byte\":{},\"moved_bytes\":{},\"duration_s\":{},",
-                "\"completed\":{},\"adm_jpb\":{},\"traj\":[{}]}}"
+                "\"completed\":{},\"outcome\":\"{}\",\"adm_jpb\":{},\"traj\":[{}]}}"
             ),
             FORMAT_VERSION,
             json::escape(&self.session),
@@ -152,6 +216,7 @@ impl RunRecord {
             json::num(self.moved_bytes),
             json::num(self.duration_s),
             self.completed,
+            self.outcome.id(),
             match self.admission_marginal_jpb {
                 Some(m) => json::num(m),
                 None => "null".to_string(),
@@ -176,6 +241,15 @@ impl RunRecord {
                 channels: p.get("ch").and_then(Json::as_u32)?,
             });
         }
+        let completed = v.get("completed").and_then(Json::as_bool)?;
+        // v3 optional: older lines only have the boolean, which maps
+        // completed→Completed and not-completed→Failed (the only two
+        // fates a pre-v3 writer could record).
+        let outcome = v
+            .get("outcome")
+            .and_then(Json::as_str)
+            .and_then(RunOutcome::parse)
+            .unwrap_or(if completed { RunOutcome::Completed } else { RunOutcome::Failed });
         Some(RunRecord {
             session: s("session")?,
             algorithm: s("algo")?,
@@ -201,7 +275,8 @@ impl RunRecord {
             j_per_byte: f("j_per_byte")?,
             moved_bytes: f("moved_bytes")?,
             duration_s: f("duration_s")?,
-            completed: v.get("completed").and_then(Json::as_bool)?,
+            completed,
+            outcome,
             // v2 optional: absent (v1) and null both mean "not recorded".
             admission_marginal_jpb: f("adm_jpb"),
             traj,
@@ -317,6 +392,7 @@ pub(crate) fn sample_record() -> RunRecord {
         moved_bytes: 11.7e9,
         duration_s: 108.2,
         completed: true,
+        outcome: RunOutcome::Completed,
         admission_marginal_jpb: Some(3.2e-7),
         traj: vec![
             TrajPoint { t_secs: 3.0, cores: 1, pstate: 0, channels: 6 },
@@ -358,24 +434,63 @@ mod tests {
 
     #[test]
     fn v1_lines_without_the_marginal_field_still_parse() {
-        // A v1 writer never emitted "adm_jpb": stripping it (and carrying
-        // the old version stamp) must load with the field unset — the
-        // forgiving-loader side of the v2 bump.
+        // A v1 writer never emitted "adm_jpb" or "outcome": stripping
+        // both (and carrying the old version stamp) must load with the
+        // fields defaulted — the forgiving-loader side of the bumps.
         let mut r = sample();
         r.admission_marginal_jpb = Some(1.5e-7);
         let rendered = format!("\"adm_jpb\":{},", crate::history::json::num(1.5e-7));
         let line = r
             .to_json_line()
             .replace(&rendered, "")
-            .replace("\"v\":2,", "\"v\":1,");
+            .replace("\"outcome\":\"completed\",", "")
+            .replace("\"v\":3,", "\"v\":1,");
         let v = crate::history::json::parse(&line).expect("stripped line stays valid JSON");
         let back = RunRecord::from_json(&v).expect("v1 shape must parse");
         assert_eq!(back.admission_marginal_jpb, None);
+        assert_eq!(back.outcome, RunOutcome::Completed);
         assert_eq!(back.cores, r.cores);
         // And an explicit null means the same thing.
         let nulled = r.to_json_line().replace(&rendered, "\"adm_jpb\":null,");
         let v = crate::history::json::parse(&nulled).unwrap();
         assert_eq!(RunRecord::from_json(&v).unwrap().admission_marginal_jpb, None);
+    }
+
+    #[test]
+    fn v2_lines_derive_the_outcome_from_the_completed_boolean() {
+        // A v2 writer emitted "completed" but not "outcome": the loader
+        // must map true→Completed and false→Failed.
+        let r = sample();
+        let line = r
+            .to_json_line()
+            .replace("\"outcome\":\"completed\",", "")
+            .replace("\"v\":3,", "\"v\":2,");
+        let v = crate::history::json::parse(&line).unwrap();
+        assert_eq!(RunRecord::from_json(&v).unwrap().outcome, RunOutcome::Completed);
+        let line = line.replace("\"completed\":true,", "\"completed\":false,");
+        let v = crate::history::json::parse(&line).unwrap();
+        let back = RunRecord::from_json(&v).unwrap();
+        assert_eq!(back.outcome, RunOutcome::Failed);
+        assert!(!back.completed);
+    }
+
+    #[test]
+    fn every_outcome_round_trips() {
+        for (oc, done) in [
+            (RunOutcome::Completed, true),
+            (RunOutcome::Preempted, false),
+            (RunOutcome::Failed, false),
+            (RunOutcome::DeadLettered, false),
+        ] {
+            let mut r = sample();
+            r.outcome = oc;
+            r.completed = done;
+            assert_eq!(oc.is_completed(), done);
+            assert_eq!(RunOutcome::parse(oc.id()), Some(oc));
+            let v = crate::history::json::parse(&r.to_json_line()).unwrap();
+            assert_eq!(RunRecord::from_json(&v).unwrap(), r);
+        }
+        assert_eq!(RunOutcome::parse("exploded"), None);
     }
 
     #[test]

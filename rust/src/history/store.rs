@@ -404,7 +404,7 @@ mod tests {
     fn unknown_versions_and_garbage_are_skipped_with_a_count() {
         let path = temp_path("skip");
         let good = sample_run("good").to_json_line();
-        let future = good.replace("\"v\":2,", "\"v\":999,");
+        let future = good.replace("\"v\":3,", "\"v\":999,");
         let text = format!("{good}\nnot json at all\n{future}\n{{\"v\":1,\"kind\":\"??\"}}\n");
         std::fs::write(&path, text).unwrap();
         let store = HistoryStore::open(&path).unwrap();
@@ -435,7 +435,7 @@ mod tests {
         // A newer build's records must survive this build's maintenance.
         let path = temp_path("prune_foreign");
         let good = sample_run("mine").to_json_line();
-        let future = good.replace("\"v\":2,", "\"v\":9,");
+        let future = good.replace("\"v\":3,", "\"v\":9,");
         std::fs::write(&path, format!("{good}\n{future}\n")).unwrap();
         let mut store = HistoryStore::open(&path).unwrap();
         assert_eq!(store.stats(), StoreStats { runs: 1, dispatches: 0, migrations: 0, skipped: 1 });

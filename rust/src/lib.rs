@@ -34,6 +34,7 @@ pub mod power;
 pub mod transfer;
 pub mod sim;
 pub mod rebalance;
+pub mod resilience;
 pub mod history;
 pub mod coordinator;
 pub mod baselines;

@@ -182,6 +182,15 @@ impl Rebalancer {
         self.cfg.policy
     }
 
+    /// True when advisory-driven evacuation may propose moves. Separate
+    /// from [`Self::active`] on purpose: evacuation works even with the
+    /// trigger policy `Off` (damage control needs no optimization policy
+    /// to be on), so the dispatcher consults this flag — alongside its
+    /// own recovery switch — before building snapshots for it.
+    pub fn evacuates(&self) -> bool {
+        self.cfg.evacuate_on_advisory
+    }
+
     /// Record that `session` was moved (spends one unit of its budget).
     pub fn note_move(&mut self, session: &str) {
         *self.moves.entry(session.to_string()).or_insert(0) += 1;
@@ -203,6 +212,59 @@ impl Rebalancer {
             RebalancePolicyKind::CapPressure => self.propose_cap_pressure(hosts, cap_w?),
             RebalancePolicyKind::MarginalEnergyDelta => self.propose_delta(hosts, cap_w),
         }
+    }
+
+    /// Evacuate one session off a health-degraded host (see
+    /// [`HealthMonitor`](crate::resilience::HealthMonitor)): the
+    /// advisory already established the host is delivering a fraction
+    /// of what it should, so — unlike [`Self::propose`] — the move is
+    /// *not* benefit-gated; getting bytes off a dying host is damage
+    /// control. `degraded[h]` marks host `h` as advised-against (both
+    /// as a source to drain and as a target to avoid).
+    ///
+    /// Deterministic choice: the lowest-indexed degraded host with an
+    /// eligible session; its session with the most remaining bytes
+    /// (most future exposure; ties to the first in tenant order); the
+    /// non-degraded target with a free slot and the lowest incoming
+    /// J/B (ties to the lowest host index). One proposal per call —
+    /// multi-session evacuations drain one segment boundary at a time,
+    /// exactly like policy moves.
+    pub fn propose_evacuation(
+        &self,
+        hosts: &[HostView],
+        degraded: &[bool],
+    ) -> Option<MoveProposal> {
+        if !self.cfg.evacuate_on_advisory {
+            return None;
+        }
+        for src in hosts.iter().filter(|h| degraded.get(h.host).copied().unwrap_or(false)) {
+            let victim = src
+                .sessions
+                .iter()
+                .filter(|s| s.remaining_bytes > 0.0 && self.eligible(&s.name))
+                .max_by(|a, b| {
+                    a.remaining_bytes
+                        .total_cmp(&b.remaining_bytes)
+                        // max_by keeps the *last* max on ties; invert the
+                        // tenant order so the first tenant wins instead.
+                        .then_with(|| b.tenant.cmp(&a.tenant))
+                });
+            let Some(victim) = victim else { continue };
+            let target = hosts
+                .iter()
+                .filter(|dst| {
+                    dst.host != src.host
+                        && dst.free_slots > 0
+                        && !degraded.get(dst.host).copied().unwrap_or(false)
+                })
+                .min_by(|a, b| {
+                    a.jpb_in().total_cmp(&b.jpb_in()).then_with(|| a.host.cmp(&b.host))
+                });
+            let Some(target) = target else { continue };
+            let drop_w = src.marginal_out_w() - target.marginal_in_w();
+            return Some(self.proposal_for(hosts, victim, src.host, target.host, drop_w));
+        }
+        None
     }
 
     /// Projected fleet power after moving one session `from → to`.
@@ -480,6 +542,62 @@ mod tests {
         let mv = r.propose(&hosts, Some(40.0)).expect("well above the cap");
         assert_eq!(mv.from, 0, "the hungriest host gives up its session");
         assert_eq!(mv.to, 1);
+    }
+
+    #[test]
+    fn evacuation_drains_the_degraded_host_without_a_benefit_gate() {
+        // Near-identical hosts: the delta policy refuses this move (the
+        // saving cannot clear the migration cost — see
+        // `delta_respects_cost_hysteresis`), but an advisory against
+        // host 0 forces it anyway.
+        let r = delta_rebalancer();
+        let hosts = vec![host(0, 1, 3, 20.0, 10.0), host(1, 0, 4, 20.0, 9.9)];
+        assert_eq!(r.propose(&hosts, None), None, "no policy move");
+        let mv = r
+            .propose_evacuation(&hosts, &[true, false])
+            .expect("advisory must force the drain");
+        assert_eq!((mv.from, mv.to), (0, 1));
+        assert_eq!(mv.session, "h0-s0");
+        // No advisory, no move; advisory against an empty host, no move;
+        // evacuation disabled, no move.
+        assert_eq!(r.propose_evacuation(&hosts, &[false, false]), None);
+        assert_eq!(r.propose_evacuation(&hosts, &[false, true]), None);
+        let off = Rebalancer::new(
+            RebalanceConfig::new(RebalancePolicyKind::MarginalEnergyDelta)
+                .with_evacuation(false),
+        );
+        assert_eq!(off.propose_evacuation(&hosts, &[true, false]), None);
+    }
+
+    #[test]
+    fn evacuation_avoids_degraded_targets_and_respects_budgets() {
+        // Both non-source hosts have slots, but host 1 is itself
+        // degraded: the session must land on host 2 even though host 1
+        // is cheaper.
+        let mut r = Rebalancer::new(RebalanceConfig::new(RebalancePolicyKind::Off));
+        assert!(!r.active(), "evacuation needs no trigger policy");
+        let hosts = vec![
+            host(0, 2, 2, 20.0, 40.0),
+            host(1, 0, 4, 10.0, 5.0),
+            host(2, 0, 4, 10.0, 15.0),
+        ];
+        let mv = r.propose_evacuation(&hosts, &[true, true, false]).unwrap();
+        assert_eq!(mv.to, 2, "degraded hosts are not evacuation targets");
+        // Equal remaining bytes: ties break to the first tenant.
+        assert_eq!(mv.session, "h0-s0");
+        // Spend both sessions' budgets: the degraded host still holds
+        // them, but nothing is left to propose.
+        r.note_move("h0-s0");
+        r.note_move("h0-s0");
+        r.note_move("h0-s1");
+        r.note_move("h0-s1");
+        assert_eq!(
+            r.propose_evacuation(&hosts, &[true, true, false]),
+            None,
+            "move budgets still bind advisory moves"
+        );
+        // Everything degraded: nowhere to go.
+        assert_eq!(r.propose_evacuation(&hosts, &[true, true, true]), None);
     }
 
     #[test]

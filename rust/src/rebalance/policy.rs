@@ -60,6 +60,14 @@ pub struct RebalanceConfig {
     /// run — the anti-ping-pong budget. A session at its budget is
     /// pinned to wherever it currently runs.
     pub max_moves_per_session: u32,
+    /// Evacuate sessions off hosts the resilience
+    /// [`HealthMonitor`](crate::resilience::HealthMonitor) flags as
+    /// degraded, even when the trigger policy is `Off` — advisory moves
+    /// are damage control, not an optimization, so they bypass the
+    /// benefit gate (but still respect the move budget). Only consulted
+    /// while the dispatcher's recovery machinery is on; on by default
+    /// because advisories cannot exist without it.
+    pub evacuate_on_advisory: bool,
 }
 
 impl Default for RebalanceConfig {
@@ -68,6 +76,7 @@ impl Default for RebalanceConfig {
             policy: RebalancePolicyKind::Off,
             migration_cost: MigrationCost::default(),
             max_moves_per_session: 2,
+            evacuate_on_advisory: true,
         }
     }
 }
@@ -81,6 +90,12 @@ impl RebalanceConfig {
     /// Replace the migration cost model.
     pub fn with_cost(mut self, cost: MigrationCost) -> Self {
         self.migration_cost = cost;
+        self
+    }
+
+    /// Turn advisory-driven evacuation on or off.
+    pub fn with_evacuation(mut self, on: bool) -> Self {
+        self.evacuate_on_advisory = on;
         self
     }
 }

@@ -1,0 +1,146 @@
+//! The dead-letter queue: bounded quarantine for sessions that cannot
+//! be served.
+//!
+//! A session that exhausts its retry budget (or is lost to a failure
+//! in a run with recovery disabled) must not vanish silently: its
+//! bytes are part of the byte-conservation ledger, and the fleet
+//! report must account for every admitted byte as delivered,
+//! retried-and-delivered, or dead-lettered. The queue is bounded —
+//! quarantine is evidence, not a landfill — and overflow is *counted*,
+//! never hidden.
+
+/// Why a session was dead-lettered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureReason {
+    /// The serving host died and the run's recovery machinery is off —
+    /// the loss is terminal by configuration.
+    HostFailure,
+    /// The session was retried up to its budget and lost its host
+    /// every time.
+    RetryBudgetExhausted,
+}
+
+impl FailureReason {
+    /// Stable identifier (telemetry tables and JSON lines).
+    pub fn id(&self) -> &'static str {
+        match self {
+            FailureReason::HostFailure => "host-failure",
+            FailureReason::RetryBudgetExhausted => "retry-budget-exhausted",
+        }
+    }
+}
+
+/// One quarantined session: what it was, where it died, and how many
+/// bytes it still owed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeadLetter {
+    /// Session name.
+    pub session: String,
+    /// Host index the final failure happened on.
+    pub host: usize,
+    /// Why the session ended here.
+    pub reason: FailureReason,
+    /// Placement attempts the session consumed (1 = never retried).
+    pub attempts: u32,
+    /// Bytes the session delivered across all its residencies.
+    pub moved_bytes: f64,
+    /// Bytes it still owed when quarantined.
+    pub remaining_bytes: f64,
+    /// Simulated time of quarantine, seconds.
+    pub at_secs: f64,
+}
+
+/// Bounded FIFO of [`DeadLetter`]s. Entries past the capacity are
+/// dropped *and counted* — the report can always say how many losses
+/// it could not itemize.
+#[derive(Debug, Clone)]
+pub struct DeadLetterQueue {
+    capacity: usize,
+    entries: Vec<DeadLetter>,
+    dropped: u64,
+}
+
+impl DeadLetterQueue {
+    /// An empty queue holding at most `capacity` entries.
+    pub fn new(capacity: usize) -> Self {
+        DeadLetterQueue { capacity: capacity.max(1), entries: Vec::new(), dropped: 0 }
+    }
+
+    /// Quarantine one session. Returns `false` when the queue was full
+    /// and the entry was counted instead of stored.
+    pub fn push(&mut self, letter: DeadLetter) -> bool {
+        if self.entries.len() < self.capacity {
+            self.entries.push(letter);
+            true
+        } else {
+            self.dropped += 1;
+            false
+        }
+    }
+
+    /// The quarantined sessions, oldest first.
+    pub fn entries(&self) -> &[DeadLetter] {
+        &self.entries
+    }
+
+    /// Quarantined session count (stored entries only).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing was quarantined (and nothing overflowed).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty() && self.dropped == 0
+    }
+
+    /// Entries the bound forced out (0 unless the run lost more
+    /// sessions than the queue holds).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Tear down into the stored entries and the overflow count.
+    pub fn into_parts(self) -> (Vec<DeadLetter>, u64) {
+        (self.entries, self.dropped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn letter(name: &str) -> DeadLetter {
+        DeadLetter {
+            session: name.to_string(),
+            host: 0,
+            reason: FailureReason::RetryBudgetExhausted,
+            attempts: 4,
+            moved_bytes: 1e9,
+            remaining_bytes: 2e9,
+            at_secs: 300.0,
+        }
+    }
+
+    #[test]
+    fn bounded_queue_counts_overflow_instead_of_hiding_it() {
+        let mut q = DeadLetterQueue::new(2);
+        assert!(q.is_empty());
+        assert!(q.push(letter("a")));
+        assert!(q.push(letter("b")));
+        assert!(!q.push(letter("c")), "third entry overflows");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.dropped(), 1);
+        assert!(!q.is_empty());
+        assert_eq!(q.entries()[0].session, "a");
+        let (entries, dropped) = q.into_parts();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(dropped, 1);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut q = DeadLetterQueue::new(0);
+        assert!(q.push(letter("a")), "a degenerate bound still quarantines one entry");
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,436 @@
+//! Scripted fault events: host failures and link degradations.
+//!
+//! A fault schedule is data, not behavior: it names *what* goes wrong
+//! and *when*, and the dispatcher decides what that means for the
+//! sessions involved (preemption, retry, dead-lettering). Host
+//! failures model the transfer service dying — the host stops serving
+//! sessions and admits nothing until its optional revival — while link
+//! degradations model a path collapse beyond the everyday
+//! [`BandwidthEvent`](crate::netsim::BandwidthEvent) variation: the
+//! dispatcher maps them onto the host's background-traffic process and
+//! lets the health monitor notice the goodput crater.
+//!
+//! The schedule expands into a [`FaultTimeline`]: one sorted stream of
+//! [`FaultAction`]s the dispatcher pops at segment boundaries with the
+//! same `at <= now + 1e-9` comparison scripted
+//! [`PowerCapEvent`](crate::sim::dispatcher::PowerCapEvent)s use, so
+//! fault ordering is deterministic and shard-invariant by construction.
+
+use crate::units::SimTime;
+
+/// A host dying at a scheduled instant, optionally reviving later.
+///
+/// Failure means the transfer *service* crashes: every running session
+/// is lost (its delivered bytes stay delivered; the remainder must be
+/// re-sent elsewhere) and the host admits nothing while down. The
+/// host's meters keep running — a crashed daemon does not power off
+/// the machine, and the fleet keeps paying its idle draw.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostFailureEvent {
+    /// Index of the host (into the dispatcher's host list).
+    pub host: usize,
+    /// When the host dies.
+    pub at: SimTime,
+    /// When the host comes back (`None` = never during this run).
+    pub revive_at: Option<SimTime>,
+}
+
+/// A scripted link collapse on one host: from `at` until `until` the
+/// background-traffic mean jumps to `mean_fraction` (the fraction of
+/// the bottleneck *lost* to cross traffic — `0.95` leaves sessions 5%
+/// of the link). Restoration returns the mean to the testbed's own
+/// level. The process ceiling still applies, so extreme fractions
+/// clamp at the link's `max_fraction`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkDegradeEvent {
+    /// Index of the host whose link degrades.
+    pub host: usize,
+    /// When the collapse starts.
+    pub at: SimTime,
+    /// When the link recovers.
+    pub until: SimTime,
+    /// Background fraction in force while degraded, in `[0, 1)`.
+    pub mean_fraction: f64,
+}
+
+/// The full fault script of one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSchedule {
+    /// Host deaths (and revivals), in any order.
+    pub host_failures: Vec<HostFailureEvent>,
+    /// Link collapses, in any order.
+    pub link_degrades: Vec<LinkDegradeEvent>,
+}
+
+impl FaultSchedule {
+    /// True when the script contains no events at all.
+    pub fn is_empty(&self) -> bool {
+        self.host_failures.is_empty() && self.link_degrades.is_empty()
+    }
+
+    /// Append a host failure.
+    pub fn with_host_failure(
+        mut self,
+        host: usize,
+        at: SimTime,
+        revive_at: Option<SimTime>,
+    ) -> Self {
+        self.host_failures.push(HostFailureEvent { host, at, revive_at });
+        self
+    }
+
+    /// Append a link degradation.
+    pub fn with_link_degrade(
+        mut self,
+        host: usize,
+        at: SimTime,
+        until: SimTime,
+        mean_fraction: f64,
+    ) -> Self {
+        self.link_degrades.push(LinkDegradeEvent { host, at, until, mean_fraction });
+        self
+    }
+
+    /// Validate the script against a fleet of `hosts` hosts: every host
+    /// index must be in range, revivals must follow deaths, and
+    /// degradation windows must be non-empty with a fraction in
+    /// `[0, 1)`.
+    pub fn validate(&self, hosts: usize) -> Result<(), String> {
+        for f in &self.host_failures {
+            if f.host >= hosts {
+                return Err(format!("fault references host {} of a {hosts}-host fleet", f.host));
+            }
+            if let Some(r) = f.revive_at {
+                if r.as_secs() <= f.at.as_secs() {
+                    return Err(format!(
+                        "host {} revives at {}s, not after its death at {}s",
+                        f.host,
+                        r.as_secs(),
+                        f.at.as_secs()
+                    ));
+                }
+            }
+        }
+        for d in &self.link_degrades {
+            if d.host >= hosts {
+                return Err(format!("fault references host {} of a {hosts}-host fleet", d.host));
+            }
+            if d.until.as_secs() <= d.at.as_secs() {
+                return Err(format!(
+                    "host {} link degrade window [{}s, {}s] is empty",
+                    d.host,
+                    d.at.as_secs(),
+                    d.until.as_secs()
+                ));
+            }
+            if !(0.0..1.0).contains(&d.mean_fraction) {
+                return Err(format!(
+                    "degrade fraction {} must be in [0, 1)",
+                    d.mean_fraction
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI fault grammar: semicolon-separated clauses of
+    /// `down:host=H,at=T[,revive=T2]` and
+    /// `degrade:host=H,at=T,until=T2,frac=F` (times in simulated
+    /// seconds). Whitespace around clauses is ignored.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use greendt::resilience::FaultSchedule;
+    ///
+    /// let s = FaultSchedule::parse("down:host=1,at=300,revive=900; degrade:host=0,at=60,until=240,frac=0.9")
+    ///     .expect("valid spec");
+    /// assert_eq!(s.host_failures.len(), 1);
+    /// assert_eq!(s.link_degrades.len(), 1);
+    /// ```
+    pub fn parse(spec: &str) -> Result<FaultSchedule, String> {
+        let mut schedule = FaultSchedule::default();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (kind, rest) = clause
+                .split_once(':')
+                .ok_or_else(|| format!("fault clause '{clause}' needs a 'kind:' prefix"))?;
+            let mut host: Option<usize> = None;
+            let mut at: Option<f64> = None;
+            let mut until: Option<f64> = None;
+            let mut revive: Option<f64> = None;
+            let mut frac: Option<f64> = None;
+            for pair in rest.split(',') {
+                let (key, value) = pair
+                    .trim()
+                    .split_once('=')
+                    .ok_or_else(|| format!("fault field '{pair}' needs key=value"))?;
+                let parse_f = || {
+                    value
+                        .parse::<f64>()
+                        .map_err(|_| format!("fault field '{key}' has non-numeric value '{value}'"))
+                };
+                match key {
+                    "host" => {
+                        host = Some(value.parse::<usize>().map_err(|_| {
+                            format!("fault field 'host' has non-integer value '{value}'")
+                        })?)
+                    }
+                    "at" => at = Some(parse_f()?),
+                    "until" => until = Some(parse_f()?),
+                    "revive" => revive = Some(parse_f()?),
+                    "frac" => frac = Some(parse_f()?),
+                    other => return Err(format!("unknown fault field '{other}'")),
+                }
+            }
+            let host = host.ok_or_else(|| format!("fault clause '{clause}' needs host="))?;
+            let at = at.ok_or_else(|| format!("fault clause '{clause}' needs at="))?;
+            match kind.trim() {
+                "down" => schedule.host_failures.push(HostFailureEvent {
+                    host,
+                    at: SimTime::from_secs(at),
+                    revive_at: revive.map(SimTime::from_secs),
+                }),
+                "degrade" => schedule.link_degrades.push(LinkDegradeEvent {
+                    host,
+                    at: SimTime::from_secs(at),
+                    until: SimTime::from_secs(
+                        until.ok_or_else(|| format!("fault clause '{clause}' needs until="))?,
+                    ),
+                    mean_fraction: frac
+                        .ok_or_else(|| format!("fault clause '{clause}' needs frac="))?,
+                }),
+                other => return Err(format!("unknown fault kind '{other}'")),
+            }
+        }
+        Ok(schedule)
+    }
+
+    /// Expand the script into its sorted action stream.
+    pub fn timeline(&self) -> FaultTimeline {
+        let mut actions = Vec::new();
+        for f in &self.host_failures {
+            actions.push(FaultAction {
+                at: f.at,
+                host: f.host,
+                kind: FaultKind::HostDown,
+                mean_fraction: 0.0,
+            });
+            if let Some(r) = f.revive_at {
+                actions.push(FaultAction {
+                    at: r,
+                    host: f.host,
+                    kind: FaultKind::HostUp,
+                    mean_fraction: 0.0,
+                });
+            }
+        }
+        for d in &self.link_degrades {
+            actions.push(FaultAction {
+                at: d.at,
+                host: d.host,
+                kind: FaultKind::LinkDegrade,
+                mean_fraction: d.mean_fraction,
+            });
+            actions.push(FaultAction {
+                at: d.until,
+                host: d.host,
+                kind: FaultKind::LinkRestore,
+                mean_fraction: 0.0,
+            });
+        }
+        // Total order: time, then host, then kind rank — simultaneous
+        // actions fire in one deterministic sequence on every run and
+        // every shard count.
+        actions.sort_by(|a, b| {
+            a.at.as_secs()
+                .total_cmp(&b.at.as_secs())
+                .then_with(|| a.host.cmp(&b.host))
+                .then_with(|| a.kind.rank().cmp(&b.kind.rank()))
+        });
+        FaultTimeline { actions, next: 0 }
+    }
+}
+
+/// What kind of fault action fired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A host died.
+    HostDown,
+    /// A dead host came back (empty, admitting again).
+    HostUp,
+    /// A link collapsed to its scripted degraded fraction.
+    LinkDegrade,
+    /// A degraded link recovered to the testbed mean.
+    LinkRestore,
+}
+
+impl FaultKind {
+    /// Stable identifier (telemetry tables and JSON lines).
+    pub fn id(&self) -> &'static str {
+        match self {
+            FaultKind::HostDown => "host-down",
+            FaultKind::HostUp => "host-up",
+            FaultKind::LinkDegrade => "link-degrade",
+            FaultKind::LinkRestore => "link-restore",
+        }
+    }
+
+    /// Sort rank for simultaneous actions (deaths before revivals
+    /// before link changes at the same instant).
+    fn rank(&self) -> u8 {
+        match self {
+            FaultKind::HostDown => 0,
+            FaultKind::HostUp => 1,
+            FaultKind::LinkDegrade => 2,
+            FaultKind::LinkRestore => 3,
+        }
+    }
+}
+
+/// One expanded, timestamped fault action.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultAction {
+    /// When the action fires.
+    pub at: SimTime,
+    /// The host it targets.
+    pub host: usize,
+    /// What happens.
+    pub kind: FaultKind,
+    /// Degraded background fraction (meaningful for
+    /// [`FaultKind::LinkDegrade`] only; `0.0` otherwise).
+    pub mean_fraction: f64,
+}
+
+/// The sorted action stream of one run, consumed front to back as the
+/// dispatcher's segment clock passes each action's instant.
+#[derive(Debug, Clone)]
+pub struct FaultTimeline {
+    actions: Vec<FaultAction>,
+    next: usize,
+}
+
+impl FaultTimeline {
+    /// Pop the next action due at or before `now_secs` (the dispatcher
+    /// calls this in a loop at each segment boundary, with the same
+    /// `1e-9` epsilon every scripted event in the driver uses).
+    pub fn pop_due(&mut self, now_secs: f64) -> Option<FaultAction> {
+        let a = self.actions.get(self.next)?;
+        if a.at.as_secs() <= now_secs + 1e-9 {
+            self.next += 1;
+            Some(*a)
+        } else {
+            None
+        }
+    }
+
+    /// When the next unfired action fires (`None` once exhausted) —
+    /// folded into the dispatcher's segment horizon so a fault can
+    /// never fire late.
+    pub fn next_at(&self) -> Option<SimTime> {
+        self.actions.get(self.next).map(|a| a.at)
+    }
+
+    /// True once every action has fired.
+    pub fn is_exhausted(&self) -> bool {
+        self.next >= self.actions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_both_clause_kinds() {
+        let s = FaultSchedule::parse(
+            "down:host=1,at=300,revive=900 ; degrade:host=0,at=60,until=240,frac=0.9",
+        )
+        .expect("valid");
+        assert_eq!(s.host_failures.len(), 1);
+        assert_eq!(s.host_failures[0].host, 1);
+        assert_eq!(s.host_failures[0].at, SimTime::from_secs(300.0));
+        assert_eq!(s.host_failures[0].revive_at, Some(SimTime::from_secs(900.0)));
+        assert_eq!(s.link_degrades.len(), 1);
+        assert_eq!(s.link_degrades[0].mean_fraction, 0.9);
+        assert!(s.validate(2).is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultSchedule::parse("boom:host=0,at=1").is_err());
+        assert!(FaultSchedule::parse("down:at=1").is_err(), "missing host");
+        assert!(FaultSchedule::parse("down:host=0").is_err(), "missing at");
+        assert!(FaultSchedule::parse("degrade:host=0,at=1,frac=0.5").is_err(), "missing until");
+        assert!(FaultSchedule::parse("down:host=0,at=x").is_err(), "non-numeric");
+        assert!(FaultSchedule::parse("down:host=0,at=1,bogus=2").is_err(), "unknown field");
+        // The empty spec is the empty schedule, not an error.
+        assert!(FaultSchedule::parse("").expect("ok").is_empty());
+    }
+
+    #[test]
+    fn validate_catches_out_of_range_and_inverted_windows() {
+        let s = FaultSchedule::default().with_host_failure(3, SimTime::from_secs(10.0), None);
+        assert!(s.validate(2).is_err());
+        let s = FaultSchedule::default().with_host_failure(
+            0,
+            SimTime::from_secs(10.0),
+            Some(SimTime::from_secs(5.0)),
+        );
+        assert!(s.validate(2).is_err(), "revive before death");
+        let s = FaultSchedule::default().with_link_degrade(
+            0,
+            SimTime::from_secs(10.0),
+            SimTime::from_secs(5.0),
+            0.9,
+        );
+        assert!(s.validate(2).is_err(), "empty window");
+        let s = FaultSchedule::default().with_link_degrade(
+            0,
+            SimTime::from_secs(5.0),
+            SimTime::from_secs(10.0),
+            1.5,
+        );
+        assert!(s.validate(2).is_err(), "fraction out of range");
+    }
+
+    #[test]
+    fn timeline_fires_in_time_order_with_the_event_epsilon() {
+        let s = FaultSchedule::default()
+            .with_link_degrade(0, SimTime::from_secs(60.0), SimTime::from_secs(240.0), 0.9)
+            .with_host_failure(1, SimTime::from_secs(30.0), Some(SimTime::from_secs(90.0)));
+        let mut t = s.timeline();
+        assert_eq!(t.next_at(), Some(SimTime::from_secs(30.0)));
+        assert!(t.pop_due(29.0).is_none(), "not due yet");
+        let a = t.pop_due(30.0).expect("due");
+        assert_eq!((a.host, a.kind), (1, FaultKind::HostDown));
+        // The epsilon admits an action the clock lands exactly on.
+        let a = t.pop_due(60.0 - 5e-10).expect("within epsilon");
+        assert_eq!(a.kind, FaultKind::LinkDegrade);
+        assert_eq!(a.mean_fraction, 0.9);
+        assert!(!t.is_exhausted());
+        assert!(t.pop_due(1000.0).is_some()); // host-up @ 90
+        assert!(t.pop_due(1000.0).is_some()); // link-restore @ 240
+        assert!(t.pop_due(1000.0).is_none());
+        assert!(t.is_exhausted());
+        assert_eq!(t.next_at(), None);
+    }
+
+    #[test]
+    fn simultaneous_actions_order_deterministically() {
+        let s = FaultSchedule::default()
+            .with_host_failure(1, SimTime::from_secs(10.0), None)
+            .with_host_failure(0, SimTime::from_secs(10.0), None)
+            .with_link_degrade(0, SimTime::from_secs(10.0), SimTime::from_secs(20.0), 0.5);
+        let mut t = s.timeline();
+        let a = t.pop_due(10.0).expect("first");
+        let b = t.pop_due(10.0).expect("second");
+        let c = t.pop_due(10.0).expect("third");
+        assert_eq!((a.host, a.kind), (0, FaultKind::HostDown));
+        assert_eq!((b.host, b.kind), (0, FaultKind::LinkDegrade));
+        assert_eq!((c.host, c.kind), (1, FaultKind::HostDown));
+    }
+}

@@ -1,0 +1,171 @@
+//! The health monitor: notice a host degrading *before* it dies.
+//!
+//! The retry pipeline reacts to failures after the fact; the monitor
+//! is the proactive half. The dispatcher feeds it one observation per
+//! host per segment — delivered goodput versus the host's own
+//! projection — and when a host underdelivers past
+//! [`HealthConfig::degrade_ratio`] for a full
+//! [`HealthConfig::dwell_s`] dwell, the monitor emits one
+//! [`Advisory`]. Advisories feed the rebalancer's evacuation path:
+//! sessions leave a degrading host on the ordinary migration machinery
+//! (drain, re-ramp, byte conservation) instead of waiting to be lost.
+//!
+//! One advisory per degradation episode: the monitor stays latched
+//! until the host recovers (ratio back above the threshold, or no
+//! meaningful demand left to judge), then re-arms. Pure logic — the
+//! monitor never touches the simulation, it only compares the two
+//! numbers it is handed.
+
+/// Knobs of the [`HealthMonitor`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthConfig {
+    /// A host is degrading while `observed / expected` sits below this.
+    pub degrade_ratio: f64,
+    /// How long the ratio must stay below before an advisory fires,
+    /// seconds — one slow segment is noise, a dwell is a signal.
+    pub dwell_s: f64,
+    /// Expected-goodput floor, bytes/s: below it the host has no
+    /// meaningful demand (idle, or everything already evacuated) and
+    /// the monitor treats it as signal-free rather than stalled.
+    pub min_expected_bps: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig { degrade_ratio: 0.5, dwell_s: 30.0, min_expected_bps: 1e6 }
+    }
+}
+
+/// One emitted degradation advisory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Advisory {
+    /// The degrading host.
+    pub host: usize,
+    /// When the advisory fired, simulated seconds.
+    pub at_secs: f64,
+    /// Delivered goodput at that instant, bytes/s.
+    pub observed_bps: f64,
+    /// What the host's projection said it should deliver, bytes/s.
+    pub expected_bps: f64,
+    /// When the host first dipped below the ratio (the dwell start).
+    pub below_since_secs: f64,
+}
+
+/// Per-host dwell state.
+#[derive(Debug, Clone, Copy, Default)]
+struct HostHealth {
+    /// When the current below-ratio stretch began (`None` = healthy).
+    below_since: Option<f64>,
+    /// True once this episode's advisory has fired.
+    advised: bool,
+}
+
+/// Tracks per-host stall/degradation episodes (see the module docs).
+#[derive(Debug, Clone)]
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    states: Vec<HostHealth>,
+}
+
+impl HealthMonitor {
+    /// A monitor for `hosts` hosts, all healthy.
+    pub fn new(cfg: HealthConfig, hosts: usize) -> Self {
+        HealthMonitor { cfg, states: vec![HostHealth::default(); hosts] }
+    }
+
+    /// Feed one observation for `host`. Returns the episode's advisory
+    /// when the dwell just elapsed; `None` otherwise (healthy, still
+    /// dwelling, or already advised this episode).
+    pub fn observe(
+        &mut self,
+        host: usize,
+        now_secs: f64,
+        observed_bps: f64,
+        expected_bps: f64,
+    ) -> Option<Advisory> {
+        let st = &mut self.states[host];
+        if expected_bps < self.cfg.min_expected_bps
+            || observed_bps >= self.cfg.degrade_ratio * expected_bps
+        {
+            // Healthy (or signal-free): end the episode and re-arm.
+            st.below_since = None;
+            st.advised = false;
+            return None;
+        }
+        let since = *st.below_since.get_or_insert(now_secs);
+        if !st.advised && now_secs - since + 1e-9 >= self.cfg.dwell_s {
+            st.advised = true;
+            return Some(Advisory {
+                host,
+                at_secs: now_secs,
+                observed_bps,
+                expected_bps,
+                below_since_secs: since,
+            });
+        }
+        None
+    }
+
+    /// True while `host` is in an advised (latched) degradation
+    /// episode — the evacuation trigger.
+    pub fn is_degraded(&self, host: usize) -> bool {
+        self.states[host].advised
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor() -> HealthMonitor {
+        HealthMonitor::new(HealthConfig::default(), 2)
+    }
+
+    #[test]
+    fn advisory_fires_only_after_the_dwell() {
+        let mut m = monitor();
+        // 10% of expectation: clearly degraded, but the dwell gates it.
+        assert!(m.observe(0, 0.0, 1e7, 1e8).is_none());
+        assert!(m.observe(0, 15.0, 1e7, 1e8).is_none(), "still dwelling");
+        let a = m.observe(0, 30.0, 1e7, 1e8).expect("dwell elapsed");
+        assert_eq!(a.host, 0);
+        assert_eq!(a.below_since_secs, 0.0);
+        assert!(m.is_degraded(0));
+        // Latched: the episode advises once.
+        assert!(m.observe(0, 45.0, 1e7, 1e8).is_none());
+        assert!(!m.is_degraded(1), "other hosts independent");
+    }
+
+    #[test]
+    fn recovery_ends_the_episode_and_rearms() {
+        let mut m = monitor();
+        assert!(m.observe(0, 0.0, 1e7, 1e8).is_none());
+        let _ = m.observe(0, 30.0, 1e7, 1e8).expect("advised");
+        // Back above the ratio: episode over.
+        assert!(m.observe(0, 40.0, 9e7, 1e8).is_none());
+        assert!(!m.is_degraded(0));
+        // A fresh dip starts a fresh dwell — and advises again.
+        assert!(m.observe(0, 50.0, 1e7, 1e8).is_none());
+        assert!(m.observe(0, 80.0, 1e7, 1e8).is_some(), "re-armed episode advises");
+    }
+
+    #[test]
+    fn tiny_expectations_are_signal_free() {
+        let mut m = monitor();
+        // Below the demand floor nothing is judged — an idle host never
+        // reads as stalled, whatever its observed goodput.
+        for t in 0..100 {
+            assert!(m.observe(0, t as f64, 0.0, 1e3).is_none());
+        }
+        assert!(!m.is_degraded(0));
+    }
+
+    #[test]
+    fn healthy_hosts_never_advise() {
+        let mut m = monitor();
+        for t in 0..100 {
+            assert!(m.observe(0, t as f64, 8e7, 1e8).is_none());
+        }
+        assert!(!m.is_degraded(0));
+    }
+}

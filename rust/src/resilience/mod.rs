@@ -1,0 +1,153 @@
+//! Failure & resilience: scripted faults, retries, quarantine, and
+//! health-driven evacuation.
+//!
+//! Every fleet scenario before this subsystem assumed no transfer ever
+//! fails — yet GreenDataFlow (arXiv:1810.05892) motivates the work
+//! with wide-area transfers whose end systems and paths degrade
+//! mid-run, and the historical-log follow-up (arXiv:2104.01192) shows
+//! tuning must survive (and learn from) runs that did not finish
+//! cleanly. This module is the missing failure model, in four pure
+//! pieces the dispatcher wires together at segment boundaries:
+//!
+//! * **faults** ([`faults`]) — scripted [`HostFailureEvent`]s and
+//!   [`LinkDegradeEvent`]s, expanded into a deterministic
+//!   [`FaultTimeline`] fired alongside scripted power-cap events;
+//! * **penalty** ([`penalty`]) — the [`PenaltyBox`]: exponential
+//!   session backoff between retries, plus a decaying per-strike J/B
+//!   surcharge that deprioritizes flaky hosts in placement scoring;
+//! * **deadletter** ([`deadletter`]) — the bounded [`DeadLetterQueue`]
+//!   quarantining sessions that exhaust their retry budget, reported
+//!   as first-class [`FleetOutcome`](crate::sim::FleetOutcome) fields;
+//! * **health** ([`health`]) — the [`HealthMonitor`]: per-host
+//!   stall/degradation dwell detection emitting [`Advisory`] records
+//!   that trigger rebalancer evacuation *before* a host dies.
+//!
+//! Founding principle, borrowed from the `core-resilience` pattern
+//! set: everything here is plain types and arithmetic with zero
+//! knowledge of the simulation, the network model, or session
+//! internals. The dispatcher owns all side effects (preemption,
+//! re-materialized datasets, slow-start re-ramp); this module only
+//! decides *when* and *what*. Invariants — byte conservation across a
+//! crash, `--resilience off` bit-identity, shard invariance of the
+//! whole fault pipeline — are pinned by
+//! `rust/tests/resilience_faults.rs`.
+
+pub mod deadletter;
+pub mod faults;
+pub mod health;
+pub mod penalty;
+
+pub use deadletter::{DeadLetter, DeadLetterQueue, FailureReason};
+pub use faults::{
+    FaultAction, FaultKind, FaultSchedule, FaultTimeline, HostFailureEvent, LinkDegradeEvent,
+};
+pub use health::{Advisory, HealthConfig, HealthMonitor};
+pub use penalty::{PenaltyBox, PenaltyConfig};
+
+/// Everything the dispatcher needs to run the resilience pipeline.
+///
+/// Two independent switches live here. The *fault schedule* injects
+/// failures whenever it is non-empty — faults are part of the world,
+/// not of the response to them. The *recovery machinery* (`enabled`)
+/// is what `--resilience on|off` toggles: with it off, a session lost
+/// to a fault is dead-lettered immediately (the terminal-loss
+/// baseline the resilience benchmark compares against); with it on,
+/// lost sessions retry under the [`PenaltyBox`] and degrading hosts
+/// are evacuated on [`HealthMonitor`] advisories.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResilienceConfig {
+    /// Turn the recovery machinery on (retries, penalty scoring,
+    /// health-driven evacuation). Off by default: the dispatcher is
+    /// then bit-for-bit the pre-resilience dispatcher unless a fault
+    /// schedule is present, and terminal under faults when one is.
+    pub enabled: bool,
+    /// The run's scripted faults (empty = nothing ever fails).
+    pub faults: FaultSchedule,
+    /// Retries a session may consume before it is dead-lettered
+    /// (ignored — effectively 0 — while recovery is off).
+    pub retry_budget: u32,
+    /// PenaltyBox knobs (backoff and strike decay).
+    pub penalty: PenaltyConfig,
+    /// Health-monitor knobs (degradation ratio and dwell).
+    pub health: HealthConfig,
+    /// Dead-letter queue bound.
+    pub dead_letter_capacity: usize,
+}
+
+impl ResilienceConfig {
+    /// The disabled default with the standard knob values filled in:
+    /// recovery off, no faults, 3 retries, 64 quarantine slots.
+    pub fn new() -> Self {
+        ResilienceConfig {
+            enabled: false,
+            faults: FaultSchedule::default(),
+            retry_budget: 3,
+            penalty: PenaltyConfig::default(),
+            health: HealthConfig::default(),
+            dead_letter_capacity: 64,
+        }
+    }
+
+    /// Enable the recovery machinery.
+    pub fn with_recovery(mut self) -> Self {
+        self.enabled = true;
+        self
+    }
+
+    /// Install a fault schedule.
+    pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Set the retry budget.
+    pub fn with_retry_budget(mut self, budget: u32) -> Self {
+        self.retry_budget = budget;
+        self
+    }
+
+    /// True when the dispatcher must run any part of the pipeline —
+    /// recovery requested, or a fault schedule present. False is the
+    /// bit-identity contract: the dispatcher then takes no resilience
+    /// branch at all.
+    pub fn active(&self) -> bool {
+        self.enabled || !self.faults.is_empty()
+    }
+
+    /// The retry budget in force: the configured budget with recovery
+    /// on, zero (immediate quarantine) with it off.
+    pub fn effective_retry_budget(&self) -> u32 {
+        if self.enabled {
+            self.retry_budget
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::SimTime;
+
+    #[test]
+    fn default_config_is_inactive() {
+        let cfg = ResilienceConfig::default();
+        assert!(!cfg.active());
+        assert_eq!(cfg.effective_retry_budget(), 0);
+        let cfg = ResilienceConfig::new();
+        assert!(!cfg.active());
+        assert_eq!(cfg.retry_budget, 3);
+    }
+
+    #[test]
+    fn faults_alone_activate_the_pipeline_but_not_recovery() {
+        let cfg = ResilienceConfig::new().with_faults(
+            FaultSchedule::default().with_host_failure(0, SimTime::from_secs(10.0), None),
+        );
+        assert!(cfg.active());
+        assert_eq!(cfg.effective_retry_budget(), 0, "recovery off = terminal losses");
+        let cfg = cfg.with_recovery().with_retry_budget(5);
+        assert_eq!(cfg.effective_retry_budget(), 5);
+    }
+}

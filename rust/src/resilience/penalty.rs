@@ -1,0 +1,138 @@
+//! The PenaltyBox: exponential-backoff deprioritization of flaky hosts.
+//!
+//! Two different consequences flow from one host failure, and the box
+//! owns both clocks:
+//!
+//! * **session backoff** — a session lost to a failure waits an
+//!   exponentially growing delay before its retry re-enters placement
+//!   (attempt 1 waits [`PenaltyConfig::base_backoff_s`], each further
+//!   attempt multiplies by [`PenaltyConfig::backoff_factor`], capped at
+//!   [`PenaltyConfig::max_backoff_s`]), so a crash-looping host cannot
+//!   thrash the queue;
+//! * **host deprioritization** — every failure strikes the host, and
+//!   placement scoring pays a J/B surcharge per live strike
+//!   ([`PenaltyBox::surcharge_j_per_byte`]). Strikes expire after
+//!   [`PenaltyConfig::strike_decay_s`], so a host that stays healthy
+//!   earns its way back to neutral scoring instead of being
+//!   blacklisted forever — the decay contract ARCHITECTURE.md
+//!   §Resilience documents.
+//!
+//! Pure logic: seconds in, scores out; no clock, no RNG, no knowledge
+//! of what a host or session actually is.
+
+use std::collections::BTreeMap;
+
+/// Knobs of the [`PenaltyBox`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PenaltyConfig {
+    /// Backoff of a session's first retry, seconds.
+    pub base_backoff_s: f64,
+    /// Multiplier applied per further attempt.
+    pub backoff_factor: f64,
+    /// Ceiling on any single backoff, seconds.
+    pub max_backoff_s: f64,
+    /// How long one strike keeps penalizing its host, seconds.
+    pub strike_decay_s: f64,
+    /// Placement-score surcharge per live strike, J/B — the same unit
+    /// as the marginal-energy score, so a struck host is outbid rather
+    /// than masked (it still wins when every alternative is worse).
+    pub strike_surcharge_j_per_byte: f64,
+}
+
+impl Default for PenaltyConfig {
+    fn default() -> Self {
+        PenaltyConfig {
+            base_backoff_s: 10.0,
+            backoff_factor: 2.0,
+            max_backoff_s: 300.0,
+            strike_decay_s: 600.0,
+            strike_surcharge_j_per_byte: 1e-7,
+        }
+    }
+}
+
+/// Per-host failure memory (see the module docs).
+#[derive(Debug, Clone)]
+pub struct PenaltyBox {
+    cfg: PenaltyConfig,
+    /// Strike timestamps per host, oldest first.
+    strikes: BTreeMap<usize, Vec<f64>>,
+}
+
+impl PenaltyBox {
+    /// An empty box with the given knobs.
+    pub fn new(cfg: PenaltyConfig) -> Self {
+        PenaltyBox { cfg, strikes: BTreeMap::new() }
+    }
+
+    /// The configured knobs.
+    pub fn config(&self) -> &PenaltyConfig {
+        &self.cfg
+    }
+
+    /// Record one failure on `host` at `now_secs`.
+    pub fn note_failure(&mut self, host: usize, now_secs: f64) {
+        self.strikes.entry(host).or_default().push(now_secs);
+    }
+
+    /// Strikes still live on `host` at `now_secs` (failures younger
+    /// than the decay window).
+    pub fn strikes(&self, host: usize, now_secs: f64) -> u32 {
+        self.strikes
+            .get(&host)
+            .map(|s| {
+                s.iter()
+                    .filter(|&&at| now_secs - at < self.cfg.strike_decay_s)
+                    .count() as u32
+            })
+            .unwrap_or(0)
+    }
+
+    /// Placement-score surcharge for `host` at `now_secs`, J/B: the
+    /// per-strike surcharge times the live strike count (zero for a
+    /// clean host, so unstruck fleets score exactly as without a box).
+    pub fn surcharge_j_per_byte(&self, host: usize, now_secs: f64) -> f64 {
+        self.strikes(host, now_secs) as f64 * self.cfg.strike_surcharge_j_per_byte
+    }
+
+    /// Backoff before retry `attempt` (1-based) re-enters placement,
+    /// seconds: `base * factor^(attempt-1)`, capped at the maximum.
+    pub fn backoff_secs(&self, attempt: u32) -> f64 {
+        let exp = attempt.saturating_sub(1).min(63);
+        (self.cfg.base_backoff_s * self.cfg.backoff_factor.powi(exp as i32))
+            .min(self.cfg.max_backoff_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_exponentially_to_the_cap() {
+        let b = PenaltyBox::new(PenaltyConfig::default());
+        assert_eq!(b.backoff_secs(1), 10.0);
+        assert_eq!(b.backoff_secs(2), 20.0);
+        assert_eq!(b.backoff_secs(3), 40.0);
+        assert_eq!(b.backoff_secs(10), 300.0, "capped");
+        assert_eq!(b.backoff_secs(200), 300.0, "huge attempts stay capped, no overflow");
+    }
+
+    #[test]
+    fn strikes_accumulate_and_decay() {
+        let mut b = PenaltyBox::new(PenaltyConfig::default());
+        assert_eq!(b.strikes(0, 0.0), 0);
+        assert_eq!(b.surcharge_j_per_byte(0, 0.0), 0.0, "clean host pays nothing");
+        b.note_failure(0, 100.0);
+        b.note_failure(0, 200.0);
+        assert_eq!(b.strikes(0, 250.0), 2);
+        assert_eq!(
+            b.surcharge_j_per_byte(0, 250.0),
+            2.0 * PenaltyConfig::default().strike_surcharge_j_per_byte
+        );
+        // The first strike expires at 100 + 600.
+        assert_eq!(b.strikes(0, 750.0), 1);
+        assert_eq!(b.strikes(0, 850.0), 0, "fully decayed");
+        assert_eq!(b.strikes(1, 250.0), 0, "other hosts untouched");
+    }
+}

@@ -31,7 +31,24 @@
 //!   and slow-start re-ramp; scripted [`PowerCapEvent`]s tighten (or
 //!   lift) the admission cap mid-run, which is the cap-pressure
 //!   policy's trigger. Every move emits a
-//!   [`MigrationRecord`](crate::sim::MigrationRecord).
+//!   [`MigrationRecord`](crate::sim::MigrationRecord);
+//! * resilience — a scripted
+//!   [`FaultSchedule`](crate::resilience::FaultSchedule) fires host
+//!   deaths and link collapses at the same segment boundaries. A death
+//!   preempts every running session on the host; with recovery on
+//!   ([`ResilienceConfig::enabled`]) the lost bytes re-materialize as a
+//!   [`PenaltyBox`](crate::resilience::PenaltyBox)-backed retry (full
+//!   slow-start re-ramp, flaky hosts outbid by a decaying J/B
+//!   surcharge) until the retry budget runs out and the session is
+//!   quarantined in the bounded
+//!   [`DeadLetterQueue`](crate::resilience::DeadLetterQueue); with
+//!   recovery off the loss is terminal and quarantined immediately. A
+//!   [`HealthMonitor`](crate::resilience::HealthMonitor) watches every
+//!   host's delivered goodput against its own projection and its
+//!   advisories trigger rebalancer evacuation *before* a degrading
+//!   host dies. An inactive config takes none of these branches — the
+//!   `--resilience off` bit-identity contract
+//!   (`rust/tests/resilience_faults.rs` pins it).
 //!
 //! The driver extends the PR 2 event-horizon loop across hosts: each
 //! segment computes the earliest driver-level event over *all* hosts
@@ -55,13 +72,18 @@ use std::cell::RefCell;
 use std::collections::{BTreeMap, VecDeque};
 
 use super::fleet::{FleetOutcome, HostWorld, TenantSpec};
-use super::telemetry::{DispatchRecord, MigrationRecord, PlacementScore};
+use super::telemetry::{DispatchRecord, FaultRecord, MigrationRecord, PlacementScore, RetryRecord};
 use crate::config::experiment::TunerParams;
 use crate::config::Testbed;
 use crate::coordinator::fleet::{FleetPolicyKind, PlacementKind};
 use crate::coordinator::AlgorithmKind;
-use crate::history::{KnnIndex, Query, WorkloadFingerprint, CONFIDENCE_FLOOR};
+use crate::history::{KnnIndex, Query, RunOutcome, WorkloadFingerprint, CONFIDENCE_FLOOR};
+use crate::netsim::BandwidthEvent;
 use crate::rebalance::{HostView, RebalanceConfig, Rebalancer, SessionView};
+use crate::resilience::{
+    Advisory, DeadLetter, DeadLetterQueue, FailureReason, FaultKind, FaultSchedule, HealthMonitor,
+    PenaltyBox, ResilienceConfig,
+};
 use crate::rng::{self, Distribution, Exponential};
 use crate::units::{Bytes, Energy, Power, SimDuration, SimTime};
 
@@ -489,6 +511,13 @@ pub struct DispatcherConfig {
     /// `None` — and an index that knows nothing relevant — degrades to
     /// pure model-based scoring with cold slow starts.
     pub history: Option<KnnIndex>,
+    /// The failure model and its response (see [`crate::resilience`]):
+    /// a scripted fault schedule plus the recovery machinery — retries
+    /// under the PenaltyBox, dead-letter quarantine, health-driven
+    /// evacuation. The default ([`ResilienceConfig::new`]) is inactive,
+    /// and the dispatcher then runs bit-for-bit as it did before the
+    /// subsystem existed.
+    pub resilience: ResilienceConfig,
 }
 
 impl DispatcherConfig {
@@ -514,6 +543,7 @@ impl DispatcherConfig {
             shards: 1,
             constant_bg: false,
             history: None,
+            resilience: ResilienceConfig::new(),
         }
     }
 
@@ -572,6 +602,12 @@ impl DispatcherConfig {
         self.constant_bg = true;
         self
     }
+
+    /// Install the resilience config (fault schedule + recovery knobs).
+    pub fn with_resilience(mut self, resilience: ResilienceConfig) -> Self {
+        self.resilience = resilience;
+        self
+    }
 }
 
 /// What a dispatcher run produced: the fleet outcome (tenants flattened
@@ -587,8 +623,20 @@ pub struct DispatchOutcome {
     /// the rebalance policy off).
     pub migrations: Vec<MigrationRecord>,
     /// Sessions never admitted before the run ended (still queued, still
-    /// pending arrival, or mid-migration-drain at the time cap).
+    /// pending arrival, mid-migration-drain, or waiting out a retry
+    /// backoff at the time cap). Dead-lettered sessions are *not* here —
+    /// they are itemized in [`FleetOutcome::dead_letters`].
     pub unplaced: Vec<String>,
+    /// One record per fired fault action, in firing order (empty
+    /// without a fault schedule).
+    pub faults: Vec<FaultRecord>,
+    /// One record per retry the PenaltyBox pipeline scheduled, in
+    /// firing order (empty unless recovery is on and a host died under
+    /// running sessions).
+    pub retries: Vec<RetryRecord>,
+    /// Health-monitor degradation advisories, in firing order (empty
+    /// unless recovery is on).
+    pub advisories: Vec<Advisory>,
 }
 
 /// Derive one host's RNG seed from the fleet seed (distinct background
@@ -696,6 +744,43 @@ fn step_segment_sharded(worlds: &mut [HostWorld], shards: usize, horizon: f64, m
 /// migration re-admission path.
 fn cap_ok(cap: Option<Power>, projected_w: f64) -> bool {
     cap.is_none_or(|cap| projected_w <= cap.as_watts() + 1e-9)
+}
+
+/// Expand the fault schedule's link degradations targeting `host` into
+/// the scripted [`BandwidthEvent`]s its background process replays: the
+/// collapse jumps the background mean to the degraded fraction at `at`,
+/// the restore returns it to the testbed's own mean at `until`. An
+/// empty schedule yields the same empty vec every pre-resilience build
+/// passed, so inactive runs build bit-identical worlds.
+fn link_events(faults: &FaultSchedule, host: usize, bg_mean: f64) -> Vec<BandwidthEvent> {
+    let mut evs = Vec::new();
+    for d in faults.link_degrades.iter().filter(|d| d.host == host) {
+        evs.push(BandwidthEvent { at: d.at, mean_fraction: d.mean_fraction });
+        evs.push(BandwidthEvent { at: d.until, mean_fraction: bg_mean });
+    }
+    evs
+}
+
+/// Overlay the resilience view on freshly built placement candidates: a
+/// down host is masked out entirely (no free slots — it admits nothing
+/// until revival), and every other host pays the PenaltyBox's decaying
+/// per-strike J/B surcharge on its queue-delay price, so flaky hosts
+/// are outbid rather than blacklisted (a struck host still wins when
+/// every alternative is worse). Only called while the resilience config
+/// is active.
+fn apply_resilience(
+    candidates: &mut [HostCandidate],
+    down: &[bool],
+    penalty: &PenaltyBox,
+    now: f64,
+) {
+    for c in candidates.iter_mut() {
+        if down[c.host] {
+            c.free_slots = 0;
+        } else {
+            c.queue_delay_j_per_byte += penalty.surcharge_j_per_byte(c.host, now);
+        }
+    }
 }
 
 /// Session slots already spoken for by migrations mid-drain, per host —
@@ -932,6 +1017,10 @@ fn make_record(
 /// placement, admission control and the cross-host event horizon.
 pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
     assert!(!cfg.hosts.is_empty(), "a dispatcher needs at least one host");
+    cfg.resilience
+        .faults
+        .validate(cfg.hosts.len())
+        .unwrap_or_else(|e| panic!("invalid fault schedule: {e}"));
 
     let mut worlds: Vec<HostWorld> = cfg
         .hosts
@@ -947,7 +1036,10 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                 cfg.fleet_interval,
                 cfg.tick,
                 host_seed(cfg.seed, i),
-                Vec::new(),
+                // Scripted link collapses ride the same bandwidth-event
+                // machinery the single-host scenarios use (empty vec
+                // without a fault schedule).
+                link_events(&cfg.resilience.faults, i, h.testbed.bg_mean),
                 false,
                 cfg.record_timeline,
                 cfg.reference_stepper,
@@ -985,6 +1077,32 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
     let mut migrations: Vec<MigrationRecord> = Vec::new();
     let mut in_flight: Vec<InFlight> = Vec::new();
 
+    // The resilience pipeline (see `crate::resilience`): the expanded
+    // fault timeline, the per-host down mask, per-session attempt
+    // counts, the PenaltyBox, the dead-letter queue, the health monitor
+    // and the retries waiting out their backoff. All of it stays empty
+    // — and every gate below stays cold — while the config is inactive,
+    // which is the `--resilience off` bit-identity contract.
+    let res = &cfg.resilience;
+    let res_active = res.active();
+    let mut fault_timeline = res.faults.timeline();
+    let mut down = vec![false; worlds.len()];
+    let mut attempts: BTreeMap<String, u32> = BTreeMap::new();
+    // Cumulative bytes each preempted session delivered across all its
+    // residencies (retries *and* migrations), so a dead letter's ledger
+    // closes on its own: `moved_bytes + remaining_bytes` equals the
+    // session's original dataset size however many hops it survived.
+    let mut delivered: BTreeMap<String, f64> = BTreeMap::new();
+    let mut penalty_box = PenaltyBox::new(res.penalty);
+    let mut dead_letters = DeadLetterQueue::new(res.dead_letter_capacity);
+    let mut health = HealthMonitor::new(res.health, worlds.len());
+    let mut retries: Vec<SessionSpec> = Vec::new();
+    let mut faults_log: Vec<FaultRecord> = Vec::new();
+    let mut retry_log: Vec<RetryRecord> = Vec::new();
+    let mut advisories: Vec<Advisory> = Vec::new();
+    let mut last_moved = vec![0.0f64; worlds.len()];
+    let mut last_health_at = 0.0f64;
+
     let max = cfg.max_sim_time.as_secs();
     let shards = effective_shards(cfg.shards, cfg.hosts.len());
     loop {
@@ -998,6 +1116,87 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         {
             effective_cap = cap_events.pop_front().expect("non-empty").cap;
             dispatcher.set_power_cap(effective_cap);
+        }
+
+        // Scripted faults due now fire next — before re-admissions and
+        // arrivals, so nothing lands on a host in the instant it dies.
+        // A host death preempts every running session there (tenant
+        // order — deterministic); each victim's remaining bytes
+        // re-materialize as a backed-off retry when the budget allows,
+        // or a dead letter when it is exhausted (immediately, with
+        // recovery off — the terminal-loss baseline).
+        if res_active {
+            while let Some(action) = fault_timeline.pop_due(now) {
+                let mut sessions_hit = 0u32;
+                match action.kind {
+                    FaultKind::HostDown => {
+                        down[action.host] = true;
+                        for (tenant, name, _) in worlds[action.host].running_sessions() {
+                            sessions_hit += 1;
+                            let attempt = {
+                                let n = attempts.entry(name.clone()).or_insert(0);
+                                *n += 1;
+                                *n
+                            };
+                            let pre = worlds[action.host].preempt(tenant);
+                            let total_delivered = {
+                                let d = delivered.entry(name).or_insert(0.0);
+                                *d += pre.moved.as_f64();
+                                *d
+                            };
+                            if attempt > res.effective_retry_budget() {
+                                let reason = if res.enabled {
+                                    FailureReason::RetryBudgetExhausted
+                                } else {
+                                    FailureReason::HostFailure
+                                };
+                                worlds[action.host]
+                                    .mark_session_failed(tenant, RunOutcome::DeadLettered);
+                                dead_letters.push(DeadLetter {
+                                    session: pre.name,
+                                    host: action.host,
+                                    reason,
+                                    attempts: attempt,
+                                    moved_bytes: total_delivered,
+                                    remaining_bytes: pre.remaining.as_f64(),
+                                    at_secs: now,
+                                });
+                            } else {
+                                worlds[action.host]
+                                    .mark_session_failed(tenant, RunOutcome::Failed);
+                                penalty_box.note_failure(action.host, now);
+                                let backoff = penalty_box.backoff_secs(attempt);
+                                retry_log.push(RetryRecord {
+                                    t_secs: now,
+                                    session: pre.name.clone(),
+                                    from_host: action.host,
+                                    from: cfg.hosts[action.host].name.clone(),
+                                    attempt,
+                                    backoff_secs: backoff,
+                                    resume_at_secs: now + backoff,
+                                    remaining_bytes: pre.remaining.as_f64(),
+                                });
+                                retries.push(
+                                    TenantSpec::new(pre.name, pre.dataset, pre.algorithm)
+                                        .arriving_at(SimTime::from_secs(now + backoff)),
+                                );
+                            }
+                        }
+                    }
+                    FaultKind::HostUp => down[action.host] = false,
+                    // Link faults act through the bandwidth events each
+                    // world replays (scheduled at build time); firing
+                    // here only records that they happened.
+                    FaultKind::LinkDegrade | FaultKind::LinkRestore => {}
+                }
+                faults_log.push(FaultRecord {
+                    t_secs: now,
+                    host: action.host,
+                    host_name: cfg.hosts[action.host].name.clone(),
+                    kind: action.kind,
+                    sessions_hit,
+                });
+            }
         }
 
         // Migrations due re-admit before anything else: the session was
@@ -1015,13 +1214,19 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
             // Computed after the removal above, so the resuming session
             // does not block itself with its own reservation.
             let reserved = reserved_slots(&in_flight, worlds.len());
-            let candidates = build_candidates(
+            let mut candidates = build_candidates(
                 &worlds,
                 &cfg.hosts,
                 learned.as_ref(),
                 cfg.price_queue_delay,
                 &reserved,
             );
+            if res_active {
+                // A host that died during the drain is masked out, so
+                // the direct-return check below falls through to a
+                // fresh placement instead of resuming onto a corpse.
+                apply_resilience(&mut candidates, &down, &penalty_box, now);
+            }
             // The planned target takes the session back if it still can
             // (free slot, cap headroom); a fleet that changed during the
             // drain falls back to a fresh placement decision.
@@ -1068,13 +1273,92 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
             }
         }
 
+        // Retries whose PenaltyBox backoff has elapsed re-enter
+        // placement next: like a resuming migrant, a retried session
+        // was admitted once already, so it goes ahead of the FIFO
+        // queue rather than to its tail. The batch is ordered by
+        // (resume instant, name) — deterministic — and once one retry
+        // fails to land, the rest of the batch defers behind it in the
+        // same order (each gets its queued decision record, exactly as
+        // a blocked newcomer would).
+        if !retries.is_empty() {
+            let mut due: Vec<SessionSpec> = Vec::new();
+            let mut ri = 0;
+            while ri < retries.len() {
+                if retries[ri].arrive_at.as_secs() <= now + 1e-9 {
+                    due.push(retries.remove(ri));
+                } else {
+                    ri += 1;
+                }
+            }
+            due.sort_by(|a, b| {
+                a.arrive_at
+                    .as_secs()
+                    .total_cmp(&b.arrive_at.as_secs())
+                    .then_with(|| a.name.cmp(&b.name))
+            });
+            let mut deferred = Vec::new();
+            for mut spec in due {
+                let resumed_at = spec.arrive_at.as_secs();
+                let learned = LearnedQuery::for_spec(cfg.history.as_ref(), &spec);
+                let reserved = reserved_slots(&in_flight, worlds.len());
+                let mut candidates = build_candidates(
+                    &worlds,
+                    &cfg.hosts,
+                    learned.as_ref(),
+                    cfg.price_queue_delay,
+                    &reserved,
+                );
+                apply_resilience(&mut candidates, &down, &penalty_box, now);
+                let decision = if deferred.is_empty() {
+                    dispatcher.place(&candidates)
+                } else {
+                    PlaceDecision::QueuePowerCap // FIFO within the batch
+                };
+                match decision {
+                    PlaceDecision::Admit(h) => {
+                        decisions.push(make_record(
+                            now,
+                            &spec.name,
+                            resumed_at,
+                            Some(h),
+                            &candidates,
+                            &cfg.hosts,
+                        ));
+                        let marginal = candidates
+                            .iter()
+                            .find(|c| c.host == h)
+                            .map(|c| c.marginal_j_per_byte());
+                        warm_start_on_host(&mut spec, &worlds[h], learned.as_ref());
+                        let fp = learned.map(|l| l.fingerprint);
+                        worlds[h].register_arrival(spec, fp, marginal);
+                    }
+                    _ => {
+                        decisions.push(make_record(
+                            now,
+                            &spec.name,
+                            resumed_at,
+                            None,
+                            &candidates,
+                            &cfg.hosts,
+                        ));
+                        deferred.push((spec, resumed_at, learned, None));
+                    }
+                }
+            }
+            // Reverse push_front preserves the batch order at the head.
+            for entry in deferred.into_iter().rev() {
+                queue.push_front(entry);
+            }
+        }
+
         // Queued sessions retry first (FIFO: stop at the first that still
         // does not fit), then arrivals due now. A newcomer never jumps an
         // occupied queue. In-flight migrations keep their target slots
         // reserved against both.
         let reserved = reserved_slots(&in_flight, worlds.len());
         while !queue.is_empty() {
-            let candidates = {
+            let mut candidates = {
                 let head = queue.front().expect("non-empty");
                 build_candidates(
                     &worlds,
@@ -1084,6 +1368,9 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                     &reserved,
                 )
             };
+            if res_active {
+                apply_resilience(&mut candidates, &down, &penalty_box, now);
+            }
             match dispatcher.place(&candidates) {
                 PlaceDecision::Admit(h) => {
                     let (mut spec, requested, lq, migrated) =
@@ -1121,13 +1408,16 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
             let mut spec = pending.pop_front().expect("non-empty");
             let requested = spec.arrive_at.as_secs();
             let learned = LearnedQuery::for_spec(cfg.history.as_ref(), &spec);
-            let candidates = build_candidates(
+            let mut candidates = build_candidates(
                 &worlds,
                 &cfg.hosts,
                 learned.as_ref(),
                 cfg.price_queue_delay,
                 &reserved,
             );
+            if res_active {
+                apply_resilience(&mut candidates, &down, &penalty_box, now);
+            }
             let decision = if queue.is_empty() {
                 dispatcher.place(&candidates)
             } else {
@@ -1166,7 +1456,11 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         }
 
         let all_done = worlds.iter().all(|w| w.all_done());
-        if (pending.is_empty() && queue.is_empty() && in_flight.is_empty() && all_done)
+        if (pending.is_empty()
+            && queue.is_empty()
+            && in_flight.is_empty()
+            && retries.is_empty()
+            && all_done)
             || now >= max
         {
             break;
@@ -1180,12 +1474,17 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         // alive — and so does a scripted cap change still ahead: a
         // future `PowerCapEvent` can loosen the very cap blocking the
         // head, so the run must idle forward to it, not give up. The
-        // `stepper_equivalence` cap-squeeze test pins this.)
+        // `stepper_equivalence` cap-squeeze test pins this. Unfired
+        // fault actions and waiting retries equally keep the loop
+        // alive: a scripted revival can unmask the very host the head
+        // is blocked on, and a retry's re-admission changes occupancy.)
         if pending.is_empty()
             && in_flight.is_empty()
+            && retries.is_empty()
             && all_done
             && !queue.is_empty()
             && cap_events.is_empty()
+            && fault_timeline.is_exhausted()
         {
             break;
         }
@@ -1208,6 +1507,12 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         }
         if let Some(e) = cap_events.front() {
             horizon = horizon.min(e.at.as_secs());
+        }
+        for s in &retries {
+            horizon = horizon.min(s.arrive_at.as_secs());
+        }
+        if let Some(at) = fault_timeline.next_at() {
+            horizon = horizon.min(at.as_secs());
         }
         for w in worlds.iter() {
             horizon = horizon.min(w.internal_horizon(max));
@@ -1238,11 +1543,43 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
             w.post_segment();
         }
 
+        // Health observations: differentiate each host's delivered-byte
+        // counter over the segment against its own steady-state
+        // projection. A host below the degrade ratio for a full dwell
+        // earns one advisory per episode; down hosts are not judged —
+        // the failure path already owns them.
+        if res.enabled {
+            let now = worlds[0].now_secs();
+            let dt = now - last_health_at;
+            if dt > 1e-9 {
+                for (i, w) in worlds.iter().enumerate() {
+                    let moved_now = w.moved_bytes();
+                    let observed_bps = (moved_now - last_moved[i]) / dt;
+                    last_moved[i] = moved_now;
+                    if down[i] {
+                        continue;
+                    }
+                    let occ = w.occupancy();
+                    let expected_bps = w.projected_session_bps(occ) * occ as f64;
+                    if let Some(a) = health.observe(i, now, observed_bps, expected_bps) {
+                        advisories.push(a);
+                    }
+                }
+                last_health_at = now;
+            }
+        }
+
         // Rebalance step: with departures handled and the clock fresh,
         // the rebalancer sees exactly the occupancy the next admission
         // decision would. At most one move per segment boundary — each
         // subsequent move is priced against re-taken projections.
-        if rebalancer.active() {
+        // Advisory-driven evacuation rides the same machinery and takes
+        // precedence over the optimization policy: damage control
+        // first, savings second.
+        let evac_wanted = res.enabled
+            && rebalancer.evacuates()
+            && (0..worlds.len()).any(|i| health.is_degraded(i) && !down[i]);
+        if rebalancer.active() || evac_wanted {
             let now = worlds[0].now_secs();
             // Sessions mid-drain are resident nowhere, but their planned
             // target slot — and their imminent draw there — are spoken
@@ -1255,10 +1592,18 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                 .enumerate()
                 .map(|(i, w)| {
                     let active = w.occupancy() + reserved[i];
+                    // A dead host takes no moved session: masked like
+                    // it is for admission (it holds no sessions either
+                    // — the failure path preempted them all).
+                    let free_slots = if res_active && down[i] {
+                        0
+                    } else {
+                        cfg.hosts[i].max_sessions.saturating_sub(active)
+                    };
                     HostView {
                         host: i,
                         active,
-                        free_slots: cfg.hosts[i].max_sessions.saturating_sub(active),
+                        free_slots,
                         idle_power_w: w.projected_power_w(0),
                         power_now_w: w.projected_power_w(active),
                         power_minus_one_w: w.projected_power_w(active.saturating_sub(1)),
@@ -1279,8 +1624,29 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                     }
                 })
                 .collect();
-            if let Some(mv) = rebalancer.propose(&views, effective_cap.map(|p| p.as_watts())) {
+            let evac = if evac_wanted {
+                let degraded: Vec<bool> =
+                    (0..worlds.len()).map(|i| health.is_degraded(i) && !down[i]).collect();
+                rebalancer.propose_evacuation(&views, &degraded)
+            } else {
+                None
+            };
+            let (proposal, policy_id) = match evac {
+                Some(mv) => (Some(mv), "evacuate"),
+                None if rebalancer.active() => (
+                    rebalancer.propose(&views, effective_cap.map(|p| p.as_watts())),
+                    rebalancer.policy().id(),
+                ),
+                None => (None, rebalancer.policy().id()),
+            };
+            if let Some(mv) = proposal {
                 let pre = worlds[mv.from].preempt(mv.tenant);
+                if res_active {
+                    // The migrated residency's bytes join the session's
+                    // delivered ledger: a later dead letter must account
+                    // for them too.
+                    *delivered.entry(pre.name.clone()).or_insert(0.0) += pre.moved.as_f64();
+                }
                 rebalancer.note_move(&pre.name);
                 let drain = rebalancer.drain().as_secs();
                 let spec = TenantSpec::new(pre.name.clone(), pre.dataset, pre.algorithm)
@@ -1298,7 +1664,7 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                     resume_at_secs: now + drain,
                     est_benefit_j: mv.est_benefit_j,
                     est_cost_j: mv.est_cost_j,
-                    policy: rebalancer.policy().id(),
+                    policy: policy_id,
                 });
                 in_flight.push(InFlight {
                     spec,
@@ -1312,6 +1678,8 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
     let completed = pending.is_empty()
         && queue.is_empty()
         && in_flight.is_empty()
+        && retries.is_empty()
+        && dead_letters.is_empty()
         && worlds.iter().all(|w| w.all_done());
     let duration = worlds[0].sim.now.since(SimTime::ZERO);
     let unplaced: Vec<String> = queue
@@ -1319,7 +1687,9 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         .map(|(s, _, _, _)| s.name.clone())
         .chain(pending.iter().map(|s| s.name.clone()))
         .chain(in_flight.iter().map(|m| m.spec.name.clone()))
+        .chain(retries.iter().map(|s| s.name.clone()))
         .collect();
+    let (dead_letters, dead_letter_overflow) = dead_letters.into_parts();
     let policy = format!("{}+{}", cfg.placement.id(), worlds[0].policy_name());
 
     let mut tenants = Vec::new();
@@ -1360,10 +1730,15 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
             final_freq: hosts[0].final_freq,
             hosts,
             run_records,
+            dead_letters,
+            dead_letter_overflow,
         },
         decisions,
         migrations,
         unplaced,
+        faults: faults_log,
+        retries: retry_log,
+        advisories,
     }
 }
 
@@ -1583,7 +1958,7 @@ mod tests {
     #[test]
     fn warm_start_resolves_against_the_admitting_host() {
         use crate::config::experiment::TunerParams;
-        use crate::history::{KnnIndex, RunRecord, WorkloadFingerprint};
+        use crate::history::{KnnIndex, RunOutcome, RunRecord, WorkloadFingerprint};
 
         let tb = testbeds::didclab();
         let world = HostWorld::build(
@@ -1621,6 +1996,7 @@ mod tests {
             moved_bytes: 11.7e9,
             duration_s: 110.0,
             completed: true,
+            outcome: RunOutcome::Completed,
             admission_marginal_jpb: None,
             traj: Vec::new(),
         };

@@ -21,8 +21,9 @@ use crate::coordinator::fleet::{FleetPolicy, FleetPolicyKind};
 use crate::coordinator::{Algorithm, AlgorithmKind};
 use crate::cpusim::{CpuDemand, CpuState};
 use crate::dataset::{Dataset, FileSpec};
-use crate::history::{RunRecord, TrajPoint, WorkloadFingerprint};
+use crate::history::{RunOutcome, RunRecord, TrajPoint, WorkloadFingerprint};
 use crate::netsim::BandwidthEvent;
+use crate::resilience::DeadLetter;
 use crate::sim::{Simulation, TickStats, TuneCtx, MAX_APP_UTILIZATION};
 use crate::transfer::TransferEngine;
 use crate::units::{Bytes, Energy, Freq, Rate, SimDuration, SimTime};
@@ -255,10 +256,20 @@ pub struct FleetOutcome {
     /// Per-host breakdowns — one entry for a single-host fleet, one per
     /// host behind the dispatcher.
     pub hosts: Vec<HostBreakdown>,
-    /// One history record per completed tenant (see
+    /// One history record per ended residency that moved bytes (see
     /// [`crate::history::RunRecord`]) — what `--record-history` appends
     /// to the store. Always populated; persisting is the caller's choice.
     pub run_records: Vec<RunRecord>,
+    /// Sessions quarantined by the resilience pipeline (retry budget
+    /// exhausted, or lost to a fault with recovery off). Always empty
+    /// for single-host [`run_fleet`] runs and for dispatcher runs
+    /// without faults — a first-class outcome, not a log line, so
+    /// callers cannot mistake a quarantined fleet for a finished one
+    /// ([`Self::completed`] is false while any session sits here).
+    pub dead_letters: Vec<DeadLetter>,
+    /// Dead letters dropped because the quarantine was full — non-zero
+    /// means [`Self::dead_letters`] is an undercount.
+    pub dead_letter_overflow: u64,
 }
 
 impl FleetOutcome {
@@ -319,6 +330,11 @@ struct TenantRun {
     /// True when the residency ended by rebalancer preemption rather than
     /// completion (`finished_at` is then the preemption instant).
     preempted: bool,
+    /// How a residency that ended abnormally ended (set by
+    /// [`HostWorld::mark_session_failed`] after a fault preemption or a
+    /// dead-lettering): overrides the outcome `finish` would otherwise
+    /// derive, so history records the failure instead of censoring it.
+    failure: Option<RunOutcome>,
     /// The dispatcher's model-side marginal J/B score for the admitting
     /// host at admission time (`None` on single-host fleets, which have
     /// no placement step) — recorded into history so learned placement
@@ -828,6 +844,29 @@ impl HostWorld {
         }
     }
 
+    /// Record how an abnormally-ended residency ended (fault preemption,
+    /// dead-lettering). Called by the dispatcher right after
+    /// [`Self::preempt`]; `finish` then writes the failure outcome into
+    /// the tenant's history record instead of skipping it.
+    pub(crate) fn mark_session_failed(&mut self, tenant: usize, outcome: RunOutcome) {
+        debug_assert!(!outcome.is_completed(), "failures only");
+        self.tenants[tenant].failure = Some(outcome);
+    }
+
+    /// Total bytes every residency on this host has delivered so far —
+    /// the monotone counter the health monitor differentiates to get
+    /// per-segment delivered throughput. Slots are never reused, so the
+    /// per-tenant sum cannot double count.
+    pub(crate) fn moved_bytes(&self) -> f64 {
+        self.tenants
+            .iter()
+            .map(|t| {
+                let e = &self.sim.slot(t.slot).engine;
+                e.total().saturating_sub(e.remaining()).as_f64()
+            })
+            .sum()
+    }
+
     /// Analytic steady-state CPU demand estimate for `sessions` concurrent
     /// sessions on this host: aggregate goodput at the link's effective
     /// capacity (bottleneck minus mean background), bounded by the CPU
@@ -879,7 +918,8 @@ impl HostWorld {
     }
 
     /// Tear the world down into per-tenant outcomes, this host's totals,
-    /// and one history [`RunRecord`] per *completed* tenant (the record
+    /// and one history [`RunRecord`] per residency that moved bytes —
+    /// completed or not, each tagged with its [`RunOutcome`] (the record
     /// hook behind `--record-history`; callers that don't persist them
     /// pay only their construction).
     pub(crate) fn finish(self) -> (Vec<TenantOutcome>, HostBreakdown, Vec<RunRecord>) {
@@ -901,12 +941,25 @@ impl HostWorld {
             } else {
                 SimDuration::ZERO
             };
-            // Preempted residencies are partial-run accounting, not
-            // completed transfers: they produce an outcome (with
-            // `preempted` set) but no history record — their J/B covers
-            // a truncated run the k-NN must not learn an operating point
-            // from. The resumed run on the target host records normally.
-            if t.finished_at.is_some() && !t.preempted && !moved.is_zero() {
+            // Every residency that moved bytes leaves a history record —
+            // including the ones that ended badly. Recording only the
+            // completions (the pre-v3 behaviour) was survivorship bias:
+            // a flaky host's disasters vanished from the log and only
+            // its lucky runs trained the learner. The k-NN down-weights
+            // non-completed outcomes rather than trusting them; a
+            // rebalancer-preempted residency records as `Preempted` (its
+            // resumed run on the target records separately), a
+            // fault-preempted or quarantined one as whatever the
+            // dispatcher marked, and a residency still unfinished at
+            // the time cap as `Failed`.
+            if t.admitted && !moved.is_zero() {
+                let outcome = t.failure.unwrap_or(if t.finished_at.is_some() && !t.preempted {
+                    RunOutcome::Completed
+                } else if t.preempted {
+                    RunOutcome::Preempted
+                } else {
+                    RunOutcome::Failed
+                });
                 records.push(run_record(
                     &t,
                     spec,
@@ -915,6 +968,7 @@ impl HostWorld {
                     moved,
                     residency,
                     slot.attributed_energy(),
+                    outcome,
                 ));
             }
             outcomes.push(TenantOutcome {
@@ -1014,10 +1068,11 @@ fn remaining_dataset(name: &str, parts: &[crate::transfer::PartitionProgress]) -
     Dataset::new(name.to_string(), files)
 }
 
-/// Assemble one completed tenant's history record. The settled operating
+/// Assemble one ended residency's history record. The settled operating
 /// point is the host CPU setting at departure plus the channel count the
 /// session last tuned to; the trajectory is populated from the timeline
 /// when one was recorded.
+#[allow(clippy::too_many_arguments)]
 fn run_record(
     t: &TenantRun,
     spec: &TenantMeta,
@@ -1026,6 +1081,7 @@ fn run_record(
     moved: Bytes,
     residency: SimDuration,
     attributed: Energy,
+    outcome: RunOutcome,
 ) -> RunRecord {
     let ladder = &testbed.client_cpu.freq_levels;
     let traj = t
@@ -1058,7 +1114,8 @@ fn run_record(
         j_per_byte: if moved_f > 0.0 { joules / moved_f } else { 0.0 },
         moved_bytes: moved_f,
         duration_s: residency.as_secs(),
-        completed: true,
+        completed: outcome.is_completed(),
+        outcome,
         admission_marginal_jpb: t.admission_marginal_jpb,
         traj,
     }
@@ -1105,6 +1162,7 @@ fn init_tenant(
         settled_cores: cpu.active_cores(),
         settled_pstate: cpu.freq_index() as u32,
         preempted: false,
+        failure: None,
         admission_marginal_jpb: None,
     };
     (run, engine, cpu)
@@ -1185,6 +1243,8 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetOutcome {
         final_freq: breakdown.final_freq,
         hosts: vec![breakdown],
         run_records,
+        dead_letters: Vec::new(),
+        dead_letter_overflow: 0,
     }
 }
 

@@ -20,6 +20,8 @@ pub mod session;
 
 pub use engine::{SessionSlot, Simulation, TuneCtx};
 pub use host::{FleetView, Host, HostTick, ProjectedPoint, MAX_APP_UTILIZATION};
+pub use fleet::FleetOutcome;
 pub use telemetry::{
-    DispatchRecord, MigrationRecord, NetView, PlacementScore, Telemetry, TickStats,
+    DispatchRecord, FaultRecord, MigrationRecord, NetView, PlacementScore, RetryRecord,
+    Telemetry, TickStats,
 };

@@ -229,6 +229,53 @@ pub struct MigrationRecord {
     pub policy: &'static str,
 }
 
+/// One scripted fault firing at a dispatcher segment boundary — the
+/// telemetry surface of the resilience pipeline's injection side. One
+/// record per [`FaultAction`](crate::resilience::FaultAction) fired, in
+/// firing order.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    /// When the fault fired (simulated clock), seconds.
+    pub t_secs: f64,
+    /// Index of the host the fault targeted.
+    pub host: usize,
+    /// Name of that host.
+    pub host_name: String,
+    /// What happened.
+    pub kind: crate::resilience::FaultKind,
+    /// Running sessions the fault hit (preempted-and-retried or
+    /// dead-lettered for a host death; 0 for link events, which kill
+    /// nothing directly).
+    pub sessions_hit: u32,
+}
+
+/// One retry scheduled by the resilience pipeline: a session lost to a
+/// host failure, parked in the PenaltyBox, due to re-enter placement
+/// after its backoff. Its eventual re-admission emits an ordinary
+/// [`DispatchRecord`] (with a fresh slow-start ramp), so the pair
+/// tells the session's full recovery story.
+#[derive(Debug, Clone)]
+pub struct RetryRecord {
+    /// When the session was lost (simulated clock), seconds.
+    pub t_secs: f64,
+    /// Session name.
+    pub session: String,
+    /// Index of the host that failed under it.
+    pub from_host: usize,
+    /// Name of that host.
+    pub from: String,
+    /// Which attempt this loss consumed (1 = first failure).
+    pub attempt: u32,
+    /// PenaltyBox backoff the retry waits, seconds.
+    pub backoff_secs: f64,
+    /// When the retry re-enters placement, seconds
+    /// (`t_secs + backoff_secs`).
+    pub resume_at_secs: f64,
+    /// Bytes the session still owes (re-materialized, never
+    /// teleported: the retried dataset carries exactly these bytes).
+    pub remaining_bytes: f64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -16,7 +16,7 @@ use greendt::config::testbeds;
 use greendt::coordinator::{AlgorithmKind, FleetPolicyKind, PlacementKind};
 use greendt::dataset::standard;
 use greendt::history::{
-    HistoryStore, KnnIndex, Query, RunRecord, TrajPoint, WorkloadFingerprint,
+    HistoryStore, KnnIndex, Query, RunOutcome, RunRecord, TrajPoint, WorkloadFingerprint,
 };
 use greendt::sim::dispatcher::{run_dispatcher, DispatcherConfig, HostSpec};
 use greendt::sim::fleet::{run_fleet, FleetConfig, FleetOutcome, TenantSpec};
@@ -77,6 +77,7 @@ fn run_record_schema_round_trips_through_a_file() {
         moved_bytes: 11.7e9,
         duration_s: 108.2,
         completed: true,
+        outcome: RunOutcome::Completed,
         admission_marginal_jpb: Some(2.5e-7),
         traj: vec![TrajPoint { t_secs: 3.0, cores: 1, pstate: 0, channels: 6 }],
     };
@@ -124,21 +125,25 @@ fn unknown_version_lines_are_skipped_with_a_count() {
         moved_bytes: 2e9,
         duration_s: 20.0,
         completed: true,
+        outcome: RunOutcome::Completed,
         admission_marginal_jpb: None,
         traj: Vec::new(),
     }
     .to_json_line();
-    // A legacy v1 writer's line: no "adm_jpb" key, version stamp 1 —
-    // still a *known* version, so it must load (field left unset).
+    // A legacy v1 writer's line: no "adm_jpb" or "outcome" key, version
+    // stamp 1 — still a *known* version, so it must load (fields
+    // defaulted: marginal unset, outcome derived from "completed").
     let legacy = good
         .replace("\"adm_jpb\":null,", "")
-        .replace("\"v\":2,", "\"v\":1,");
-    let future = good.replace("\"v\":2,", "\"v\":999,");
+        .replace("\"outcome\":\"completed\",", "")
+        .replace("\"v\":3,", "\"v\":1,");
+    let future = good.replace("\"v\":3,", "\"v\":999,");
     let path = temp_store("skip");
     std::fs::write(&path, format!("{good}\n{legacy}\n{future}\nnot json\n")).unwrap();
     let store = HistoryStore::open(&path).unwrap();
-    assert_eq!(store.runs().len(), 2, "the v2 and legacy v1 lines both load");
+    assert_eq!(store.runs().len(), 2, "the v3 and legacy v1 lines both load");
     assert_eq!(store.runs()[1].admission_marginal_jpb, None);
+    assert_eq!(store.runs()[1].outcome, RunOutcome::Completed);
     assert_eq!(store.skipped(), 2, "unknown version + garbage are counted");
     let _ = std::fs::remove_file(&path);
 }

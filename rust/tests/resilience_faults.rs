@@ -1,0 +1,359 @@
+//! Acceptance tests for the failure & resilience subsystem (ISSUE 7).
+//!
+//! Pins the headline invariants:
+//!
+//! * **byte conservation** — across a scripted host crash every admitted
+//!   byte is accounted for: delivered, retried-and-redelivered on a
+//!   revived host, or dead-lettered with an explicit remainder;
+//! * **recovery pays** — on the shared `benchkit::resilience` fault
+//!   script, recovery-on beats recovery-off on goodput at no extra
+//!   joules (advisory-driven evacuation gets the victim off the dying
+//!   host before the crash);
+//! * **determinism** — the whole fault pipeline is bit-for-bit
+//!   invariant across dispatcher shard counts, and an inactive
+//!   resilience config is bit-for-bit today's dispatcher;
+//! * **degenerate fleets stay finite** — an all-failed fleet reports
+//!   finite fairness and energy figures, never NaN.
+
+use greendt::benchkit::resilience::{assert_recovery_wins, scenario, summarize};
+use greendt::config::testbeds;
+use greendt::coordinator::{AlgorithmKind, PlacementKind};
+use greendt::dataset::standard;
+use greendt::resilience::{FaultSchedule, ResilienceConfig};
+use greendt::sim::dispatcher::{
+    run_dispatcher, DispatchOutcome, DispatcherConfig, HostSpec, SessionSpec,
+};
+use greendt::units::SimTime;
+
+/// One host that dies at `down_at` and (optionally) revives, serving
+/// one medium session — the minimal crash-and-retry story.
+fn lone_host_cfg(down_at: f64, revive_at: Option<f64>, recovery: bool) -> DispatcherConfig {
+    let faults = FaultSchedule::default().with_host_failure(
+        0,
+        SimTime::from_secs(down_at),
+        revive_at.map(SimTime::from_secs),
+    );
+    let mut resilience = ResilienceConfig::new().with_faults(faults);
+    if recovery {
+        resilience = resilience.with_recovery();
+    }
+    DispatcherConfig::new(
+        vec![HostSpec::new("lone", testbeds::cloudlab()).with_max_sessions(1)],
+        PlacementKind::MarginalEnergy,
+    )
+    .with_sessions(vec![SessionSpec::new(
+        "survivor",
+        standard::medium_dataset(501),
+        AlgorithmKind::MaxThroughput,
+    )])
+    .with_seed(71)
+    .with_resilience(resilience)
+}
+
+#[test]
+fn crash_retry_revival_conserves_bytes() {
+    let total = standard::medium_dataset(501).total_size().as_f64();
+    let out = run_dispatcher(&lone_host_cfg(30.0, Some(120.0), true));
+    let fleet = &out.fleet;
+    assert!(fleet.completed, "the survivor must finish after the revival");
+    assert!(fleet.dead_letters.is_empty() && fleet.dead_letter_overflow == 0);
+
+    // The fault log tells the whole story: death with one session hit,
+    // revival with none (the host was emptied by the preemption).
+    assert_eq!(out.faults.len(), 2, "got {:?}", out.faults);
+    assert_eq!(out.faults[0].kind.id(), "host-down");
+    assert!(
+        (out.faults[0].t_secs - 30.0).abs() < 0.2,
+        "the death fires on the boundary at its instant, got t={}",
+        out.faults[0].t_secs
+    );
+    assert_eq!(out.faults[0].sessions_hit, 1);
+    assert_eq!(out.faults[1].kind.id(), "host-up");
+    assert_eq!(out.faults[1].sessions_hit, 0);
+
+    // One retry, first attempt, default PenaltyBox backoff.
+    assert_eq!(out.retries.len(), 1);
+    let r = &out.retries[0];
+    assert_eq!((r.session.as_str(), r.from.as_str(), r.attempt), ("survivor", "lone", 1));
+    assert_eq!(r.backoff_secs, 10.0, "first attempt waits the base backoff");
+    assert_eq!(r.resume_at_secs, r.t_secs + r.backoff_secs);
+
+    // Two residencies under one name: the failed partial run and the
+    // completed redelivery, which together conserve the dataset.
+    let runs: Vec<_> = fleet.tenants.iter().filter(|t| t.name == "survivor").collect();
+    assert_eq!(runs.len(), 2, "partial + redelivered outcome");
+    let (partial, redone) = (runs[0], runs[1]);
+    assert!(partial.preempted && !partial.completed);
+    assert!(redone.completed && !redone.preempted);
+    assert!(
+        redone.arrived_at.as_secs() >= 119.9,
+        "the retry could not land before the revival, got t={}",
+        redone.arrived_at.as_secs()
+    );
+    let delivered = partial.moved.as_f64() + redone.moved.as_f64();
+    assert!(
+        (delivered - total).abs() < 16.0,
+        "byte conservation across the crash: {delivered} vs {total}"
+    );
+    assert!(
+        (r.remaining_bytes - (total - partial.moved.as_f64())).abs() < 16.0,
+        "the retry carries exactly the owed bytes"
+    );
+}
+
+#[test]
+fn budget_exhaustion_and_recovery_off_dead_letter_the_loss() {
+    let total = standard::medium_dataset(501).total_size().as_f64();
+    // Recovery on, zero retry budget: the first failure is terminal,
+    // with the budget named as the reason.
+    let mut cfg = lone_host_cfg(30.0, Some(120.0), true);
+    cfg.resilience = cfg.resilience.with_retry_budget(0);
+    let budgeted = run_dispatcher(&cfg);
+    // Recovery off entirely: same terminal loss, blamed on the failure.
+    let off = run_dispatcher(&lone_host_cfg(30.0, Some(120.0), false));
+
+    for (label, out, reason) in [
+        ("zero budget", &budgeted, "retry-budget-exhausted"),
+        ("recovery off", &off, "host-failure"),
+    ] {
+        let fleet = &out.fleet;
+        assert!(!fleet.completed, "{label}: a quarantined fleet is not complete");
+        assert!(out.retries.is_empty(), "{label}: nothing may retry");
+        assert_eq!(fleet.dead_letters.len(), 1, "{label}");
+        assert_eq!(fleet.dead_letter_overflow, 0, "{label}");
+        let d = &fleet.dead_letters[0];
+        assert_eq!(d.session, "survivor", "{label}");
+        assert_eq!(d.host, 0, "{label}");
+        assert_eq!(d.reason.id(), reason, "{label}");
+        assert_eq!(d.attempts, 1, "{label}");
+        assert!((d.at_secs - 30.0).abs() < 0.2, "{label}: quarantined at the death");
+        // The dead letter's own ledger closes: delivered + owed = total.
+        assert!(
+            (d.moved_bytes + d.remaining_bytes - total).abs() < 16.0,
+            "{label}: {} + {} vs {total}",
+            d.moved_bytes,
+            d.remaining_bytes
+        );
+        // And it agrees with the partial residency's accounting.
+        let partial = fleet.tenants.iter().find(|t| t.name == "survivor").unwrap();
+        assert!((partial.moved.as_f64() - d.moved_bytes).abs() < 1.0, "{label}");
+    }
+}
+
+#[test]
+fn recovery_beats_terminal_loss_on_the_bench_scenario() {
+    let off_out = run_dispatcher(&scenario(false));
+    let on_out = run_dispatcher(&scenario(true));
+    assert_recovery_wins(&summarize(&off_out), &summarize(&on_out));
+
+    // Recovery off: no advisories, no moves — the victim crawls on the
+    // degraded host until the crash quarantines it.
+    assert!(off_out.advisories.is_empty() && off_out.migrations.is_empty());
+    let d = &off_out.fleet.dead_letters[0];
+    assert_eq!(d.session, "victim");
+    assert_eq!(d.reason.id(), "host-failure");
+    // Byte ledger of the lossy run: what the fleet delivered plus what
+    // the dead letter still owes is exactly the admitted workload.
+    let admitted = standard::medium_dataset(21).total_size().as_f64()
+        + standard::large_dataset(22).total_size().as_f64();
+    let off_ledger = off_out.fleet.moved.as_f64() + d.remaining_bytes;
+    assert!(
+        (off_ledger - admitted).abs() < 32.0,
+        "every admitted byte accounted for: {off_ledger} vs {admitted}"
+    );
+
+    // Recovery on: the health advisory fires after the dwell, the
+    // victim evacuates on the advisory (not a policy move), and the
+    // fleet delivers the full workload.
+    assert!(!on_out.advisories.is_empty(), "the collapse must be noticed");
+    let a = &on_out.advisories[0];
+    assert_eq!(a.host, 1, "the flaky host is the degraded one");
+    assert!(a.observed_bps < 0.5 * a.expected_bps);
+    assert_eq!(on_out.migrations.len(), 1, "one evacuation, got {:?}", on_out.migrations);
+    let m = &on_out.migrations[0];
+    assert_eq!(m.policy, "evacuate");
+    assert_eq!((m.from.as_str(), m.to.as_str()), ("flaky", "steady"));
+    assert_eq!(m.session, "victim");
+    assert!(
+        (on_out.fleet.moved.as_f64() - admitted).abs() < 32.0,
+        "recovery delivers the full workload"
+    );
+}
+
+/// A two-host script exercising every pipeline stage: a death that
+/// spawns retries, a revival that re-admits one, and a second death
+/// that exhausts the budget into a dead letter.
+fn gauntlet_cfg(shards: usize) -> DispatcherConfig {
+    let faults = FaultSchedule::default()
+        .with_host_failure(1, SimTime::from_secs(60.0), Some(SimTime::from_secs(200.0)))
+        .with_host_failure(1, SimTime::from_secs(260.0), None);
+    let hosts = vec![
+        HostSpec::new("efficient", testbeds::cloudlab()).with_max_sessions(1),
+        HostSpec::new("legacy", testbeds::didclab()).with_max_sessions(2),
+    ];
+    let sessions = vec![
+        SessionSpec::new("s0", standard::medium_dataset(511), AlgorithmKind::MaxThroughput),
+        SessionSpec::new("s1", standard::medium_dataset(512), AlgorithmKind::MaxThroughput),
+        SessionSpec::new("s2", standard::medium_dataset(513), AlgorithmKind::MaxThroughput),
+    ];
+    let mut cfg = DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+        .with_sessions(sessions)
+        .with_seed(83)
+        .with_resilience(
+            ResilienceConfig::new().with_recovery().with_faults(faults).with_retry_budget(1),
+        );
+    cfg.shards = shards;
+    cfg
+}
+
+#[test]
+fn fault_pipeline_is_bit_invariant_across_shard_counts() {
+    let assert_same = |a: &DispatchOutcome, b: &DispatchOutcome, label: &str| {
+        assert_eq!(
+            a.fleet.client_energy.as_joules().to_bits(),
+            b.fleet.client_energy.as_joules().to_bits(),
+            "{label}: fleet energy"
+        );
+        assert_eq!(
+            a.fleet.duration.as_secs().to_bits(),
+            b.fleet.duration.as_secs().to_bits(),
+            "{label}: makespan"
+        );
+        assert_eq!(a.fleet.completed, b.fleet.completed, "{label}");
+        assert_eq!(a.decisions.len(), b.decisions.len(), "{label}: decisions");
+        for (x, y) in a.decisions.iter().zip(&b.decisions) {
+            assert_eq!(x.session, y.session, "{label}");
+            assert_eq!(x.admitted_host, y.admitted_host, "{label}");
+        }
+        assert_eq!(a.faults.len(), b.faults.len(), "{label}: faults");
+        for (x, y) in a.faults.iter().zip(&b.faults) {
+            assert_eq!(x.t_secs.to_bits(), y.t_secs.to_bits(), "{label}");
+            assert_eq!((x.host, x.kind, x.sessions_hit), (y.host, y.kind, y.sessions_hit));
+        }
+        assert_eq!(a.retries.len(), b.retries.len(), "{label}: retries");
+        for (x, y) in a.retries.iter().zip(&b.retries) {
+            assert_eq!(x.session, y.session, "{label}");
+            assert_eq!(x.t_secs.to_bits(), y.t_secs.to_bits(), "{label}");
+            assert_eq!(x.remaining_bytes.to_bits(), y.remaining_bytes.to_bits(), "{label}");
+        }
+        assert_eq!(a.fleet.dead_letters.len(), b.fleet.dead_letters.len(), "{label}");
+        for (x, y) in a.fleet.dead_letters.iter().zip(&b.fleet.dead_letters) {
+            assert_eq!(x, y, "{label}: dead letters");
+        }
+        assert_eq!(a.advisories.len(), b.advisories.len(), "{label}: advisories");
+        assert_eq!(a.migrations.len(), b.migrations.len(), "{label}: migrations");
+    };
+
+    let reference = run_dispatcher(&gauntlet_cfg(1));
+    // The gauntlet actually exercises the pipeline end to end.
+    assert!(reference.retries.len() >= 2, "both legacy sessions retry");
+    assert_eq!(reference.fleet.dead_letters.len(), 1, "the second death exhausts one budget");
+    assert!(!reference.fleet.completed);
+    let d = &reference.fleet.dead_letters[0];
+    assert_eq!(d.attempts, 2);
+    assert_eq!(d.reason.id(), "retry-budget-exhausted");
+    // Multi-residency ledger: the dead letter's cumulative delivered
+    // bytes plus its remainder cover the session's whole dataset.
+    let total = standard::medium_dataset(match d.session.as_str() {
+        "s0" => 511,
+        "s1" => 512,
+        _ => 513,
+    })
+    .total_size()
+    .as_f64();
+    assert!(
+        (d.moved_bytes + d.remaining_bytes - total).abs() < 32.0,
+        "ledger closes across residencies: {} + {} vs {total}",
+        d.moved_bytes,
+        d.remaining_bytes
+    );
+
+    for shards in [2usize, 8] {
+        let other = run_dispatcher(&gauntlet_cfg(shards));
+        assert_same(&reference, &other, &format!("shards={shards}"));
+    }
+}
+
+#[test]
+fn inactive_resilience_is_bit_identical_to_todays_dispatcher() {
+    let mk = || {
+        let hosts = vec![
+            HostSpec::new("efficient", testbeds::cloudlab()),
+            HostSpec::new("legacy", testbeds::didclab()),
+        ];
+        let sessions = vec![
+            SessionSpec::new("a", standard::medium_dataset(521), AlgorithmKind::MaxThroughput),
+            SessionSpec::new("b", standard::medium_dataset(522), AlgorithmKind::MaxThroughput)
+                .arriving_at(SimTime::from_secs(20.0)),
+        ];
+        DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+            .with_sessions(sessions)
+            .with_seed(97)
+    };
+    let baseline = run_dispatcher(&mk());
+
+    // An explicit default config (the `--resilience off` path) and a
+    // recovery-enabled config with no faults to act on: both must match
+    // the baseline to the bit — arming the pipeline may not perturb a
+    // single tick of a fault-free run.
+    let explicit_off = run_dispatcher(&mk().with_resilience(ResilienceConfig::new()));
+    let armed_idle =
+        run_dispatcher(&mk().with_resilience(ResilienceConfig::new().with_recovery()));
+
+    for (label, other) in [("explicit off", &explicit_off), ("armed, no faults", &armed_idle)] {
+        assert!(other.faults.is_empty() && other.retries.is_empty(), "{label}");
+        assert!(other.advisories.is_empty(), "{label}: healthy fleet, no advisories");
+        assert!(other.fleet.dead_letters.is_empty(), "{label}");
+        assert_eq!(
+            baseline.fleet.client_energy.as_joules().to_bits(),
+            other.fleet.client_energy.as_joules().to_bits(),
+            "{label}: fleet energy must be bit-identical"
+        );
+        assert_eq!(
+            baseline.fleet.duration.as_secs().to_bits(),
+            other.fleet.duration.as_secs().to_bits(),
+            "{label}: makespan must be bit-identical"
+        );
+        assert_eq!(baseline.decisions.len(), other.decisions.len(), "{label}");
+        for (x, y) in baseline.decisions.iter().zip(&other.decisions) {
+            assert_eq!(x.session, y.session, "{label}");
+            assert_eq!(x.admitted_host, y.admitted_host, "{label}");
+            assert_eq!(
+                x.projected_fleet_power_w.to_bits(),
+                y.projected_fleet_power_w.to_bits(),
+                "{label}"
+            );
+        }
+        for (x, y) in baseline.fleet.tenants.iter().zip(&other.fleet.tenants) {
+            assert_eq!(x.host, y.host, "{label}: same placements");
+            assert_eq!(
+                x.attributed_energy.as_joules().to_bits(),
+                y.attributed_energy.as_joules().to_bits(),
+                "{label}: per-tenant energy"
+            );
+        }
+    }
+}
+
+#[test]
+fn all_failed_fleet_reports_finite_summaries() {
+    // Mid-flight loss: the host dies under its only session with
+    // recovery off — everything the fleet ever ran is quarantined.
+    let lost = run_dispatcher(&lone_host_cfg(15.0, None, false));
+    assert!(!lost.fleet.completed);
+    assert_eq!(lost.fleet.dead_letters.len(), 1);
+    assert!(lost.fleet.jain_fairness().is_finite());
+    assert!(lost.fleet.energy_per_tenant().as_joules().is_finite());
+    assert!(!lost.fleet.moved.as_f64().is_nan());
+
+    // Death before anything is admitted: the dispatcher ends an
+    // unservable run immediately, with the workload unplaced and every
+    // summary still finite.
+    let stillborn = run_dispatcher(&lone_host_cfg(0.0, None, false));
+    assert!(!stillborn.fleet.completed);
+    assert_eq!(stillborn.unplaced, vec!["survivor".to_string()]);
+    assert!(stillborn.fleet.tenants.is_empty());
+    assert!(stillborn.fleet.jain_fairness().is_finite());
+    assert!(stillborn.fleet.energy_per_tenant().as_joules().is_finite());
+    assert_eq!(stillborn.fleet.moved.as_f64(), 0.0);
+}
