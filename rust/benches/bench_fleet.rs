@@ -13,6 +13,7 @@ use greendt::config::testbeds;
 use greendt::coordinator::{AlgorithmKind, PlacementKind};
 use greendt::cpusim::CpuState;
 use greendt::dataset::{partition_files_capped, standard};
+use greendt::netsim::CrossTrafficConfig;
 use greendt::sim::dispatcher::{
     run_dispatcher, Dispatcher, DispatcherConfig, HostCandidate, HostSpec, SessionSpec,
 };
@@ -50,26 +51,36 @@ static ALLOCATOR: CountingAlloc = CountingAlloc;
 
 /// A world with `tenants` active large-dataset sessions (large files so no
 /// partition completes mid-audit, which would legitimately reopen
-/// channels).
-fn fleet_sim(tenants: usize, channels_each: u32) -> Simulation {
+/// channels), optionally on a contended link and/or with AIMD channels.
+fn fleet_sim_on(
+    tenants: usize,
+    channels_each: u32,
+    cross: Option<CrossTrafficConfig>,
+    aimd: bool,
+) -> Simulation {
     let tb = testbeds::cloudlab();
-    let mut sim = Simulation::empty(
-        &tb,
-        CpuState::performance(tb.client_cpu.clone()),
-        SimDuration::from_millis(100.0),
-        9,
-        Vec::new(),
-    );
+    let client = CpuState::performance(tb.client_cpu.clone());
+    let tick = SimDuration::from_millis(100.0);
+    let mut sim = match cross {
+        Some(c) => Simulation::empty_with_cross_traffic(&tb, client, tick, 9, Vec::new(), c),
+        None => Simulation::empty(&tb, client, tick, 9, Vec::new()),
+    };
     for i in 0..tenants {
         let ds = standard::large_dataset(20 + i as u64);
         let parts = partition_files_capped(&ds, tb.bdp(), 5);
         let mut engine =
             TransferEngine::with_knee(&parts, tb.link.avg_win, tb.link.knee_streams());
         engine.set_num_channels(channels_each);
+        engine.set_aimd(aimd);
         let slot = sim.add_slot(engine);
         sim.activate_slot(slot);
     }
     sim
+}
+
+/// The quiet baseline world every existing bench runs on.
+fn fleet_sim(tenants: usize, channels_each: u32) -> Simulation {
+    fleet_sim_on(tenants, channels_each, None, false)
 }
 
 fn main() {
@@ -80,6 +91,23 @@ fn main() {
         let mut sim = fleet_sim(tenants, 4);
         bench(&format!("fleet step/{tenants} tenants"), 200, 5000, || sim.step());
     }
+    println!();
+
+    // Contended-vs-quiet pair: the generators add a per-tick RNG draw +
+    // burst bookkeeping on the link, and AIMD a per-stream window update
+    // — this pins what that overhead costs against the same quiet world.
+    let cross = CrossTrafficConfig {
+        udp_fraction: 0.1,
+        tcp_rate_per_sec: 0.3,
+        tcp_burst_bytes: 20e6,
+        tcp_burst_secs: 1.0,
+    };
+    let mut quiet = fleet_sim(4, 4);
+    bench("fleet step/4 tenants/quiet", 200, 5000, || quiet.step());
+    let mut contended = fleet_sim_on(4, 4, Some(cross), false);
+    bench("fleet step/4 tenants/contended", 200, 5000, || contended.step());
+    let mut contended_aimd = fleet_sim_on(4, 4, Some(cross), true);
+    bench("fleet step/4 tenants/contended+aimd", 200, 5000, || contended_aimd.step());
     println!();
 
     // Allocation audit: warm up (scratch buffers grow to steady-state

@@ -48,6 +48,16 @@ COMMANDS:
                                    channel budget by remaining bytes)
              --spacing <SECS>      arrival spacing between tenants (default 30)
              --seed <N>            RNG seed (default 42)
+             --cross-traffic <SPEC>  seeded contending load on each link:
+                                   udp:FRAC;tcp:RATE:SIZE:DUR adds a steady
+                                   UDP floor (fraction of capacity) plus
+                                   bursty TCP flows (RATE bursts/s of mean
+                                   SIZE bytes over DUR s); 'off' (default)
+                                   keeps the quiet path bit-identical
+             --aimd                AIMD competing-flow channel dynamics:
+                                   additive increase per RTT, multiplicative
+                                   decrease on overload (default: slow-start
+                                   then hold)
              --record-history <F>  append completed sessions (and, multi-host,
                                    placement decisions) to a JSONL store
              --history <F>         learn from a store: warm-starts
@@ -113,7 +123,15 @@ ENVIRONMENT:
 pub fn run(argv: &[String]) -> Result<i32> {
     let args = ParsedArgs::parse(
         argv,
-        &["trace", "no-csv", "server-scaling", "smoke", "price-queue-delay", "constant-bg"],
+        &[
+            "trace",
+            "no-csv",
+            "server-scaling",
+            "smoke",
+            "price-queue-delay",
+            "constant-bg",
+            "aimd",
+        ],
     )
     .map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -214,6 +232,15 @@ fn record_history(
     Ok(())
 }
 
+/// Parse `--cross-traffic` (absent and `off` both mean a quiet link).
+fn parse_cross_traffic(args: &ParsedArgs) -> Result<Option<crate::netsim::CrossTrafficConfig>> {
+    match args.get("cross-traffic") {
+        Some(spec) => crate::netsim::CrossTrafficConfig::parse(spec)
+            .map_err(|e| anyhow::anyhow!("--cross-traffic: {e}")),
+        None => Ok(None),
+    }
+}
+
 fn parse_params(args: &ParsedArgs) -> Result<TunerParams> {
     let mut p = TunerParams::default();
     p.governor = match args.get_or("governor", "threshold") {
@@ -307,6 +334,18 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<i32> {
     use crate::sim::fleet::{run_fleet, FleetConfig, TenantSpec};
     use crate::units::SimTime;
 
+    // An *active* cross-traffic spec and a frozen constant background
+    // contradict each other (the generators unfreeze the link); reject
+    // the pair before either path builds a world. `--cross-traffic off`
+    // stays compatible with everything.
+    if parse_cross_traffic(args)?.is_some() && args.has("constant-bg") {
+        bail!(
+            "--constant-bg and --cross-traffic are mutually exclusive: stochastic \
+             cross-traffic unfreezes the link, so the constant (batchable) background \
+             cannot hold; drop one of the flags"
+        );
+    }
+
     // Any dispatcher-only flag selects the multi-host path.
     if args.get("hosts").is_some()
         || args.get("placement").is_some()
@@ -346,7 +385,12 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<i32> {
         testbeds::by_name(tb_name).with_context(|| format!("unknown testbed '{tb_name}'"))?;
     let index = load_history_index(args)?;
 
-    let mut cfg = FleetConfig::new(testbed, Some(policy)).with_seed(seed);
+    let mut cfg = FleetConfig::new(testbed, Some(policy))
+        .with_seed(seed)
+        .with_aimd(args.has("aimd"));
+    if let Some(cross) = parse_cross_traffic(args)? {
+        cfg = cfg.with_cross_traffic(cross);
+    }
     for i in 0..tenants {
         let ds = standard::by_name(ds_name, seed.wrapping_add(i as u64))
             .with_context(|| format!("unknown dataset '{ds_name}'"))?;
@@ -544,6 +588,8 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
         .map_err(|e: ArgError| anyhow::anyhow!(e))?
         .unwrap_or(0) as usize;
     cfg.constant_bg = args.has("constant-bg");
+    cfg.cross_traffic = parse_cross_traffic(args)?;
+    cfg.aimd = args.has("aimd");
     let out = run_dispatcher(&cfg);
     record_history(args, &out.fleet.run_records, &out.decisions, &out.migrations)?;
     let fleet = &out.fleet;
@@ -1049,6 +1095,48 @@ mod tests {
         assert!(run(&argv("fleet --faults boom:host=0,at=1 --tenants 2")).is_err());
         assert!(run(&argv("fleet --hosts 2 --faults down:host=7,at=10 --tenants 2")).is_err());
         assert!(run(&argv("fleet --resilience maybe --tenants 2")).is_err());
+    }
+
+    #[test]
+    fn fleet_cross_traffic_and_aimd_run_on_both_paths() {
+        // Single-host fleet under contention with AIMD channels.
+        let code = run(&argv(
+            "fleet --tenants 2 --dataset small --spacing 5 --seed 3 \
+             --cross-traffic udp:0.1;tcp:0.5:20e6:1 --aimd",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+        // The dispatcher path takes the same flags.
+        let code = run(&argv(
+            "fleet --hosts 2 --tenants 2 --dataset small --spacing 5 --seed 3 \
+             --cross-traffic udp:0.1;tcp:0.5:20e6:1 --aimd",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+        // 'off' is the quiet path and composes with anything.
+        let code = run(&argv(
+            "fleet --hosts 2 --tenants 2 --dataset small --spacing 5 --seed 3 \
+             --cross-traffic off --constant-bg",
+        ))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn fleet_cross_traffic_conflicts_and_garbage_are_rejected() {
+        // An active generator cannot ride a frozen constant background.
+        let err = run(&argv(
+            "fleet --tenants 2 --dataset small --seed 3 \
+             --constant-bg --cross-traffic udp:0.1",
+        ))
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("mutually exclusive"),
+            "unhelpful conflict error: {err}"
+        );
+        // Malformed specs are rejected up front with the flag named.
+        let err = run(&argv("fleet --tenants 2 --cross-traffic frob:1")).unwrap_err();
+        assert!(err.to_string().contains("--cross-traffic"), "{err}");
     }
 
     #[test]

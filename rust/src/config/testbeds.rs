@@ -69,6 +69,23 @@ impl Testbed {
         )
     }
 
+    /// Like [`Self::make_link_with_events`] with seeded cross-traffic
+    /// generators (steady UDP floor + bursty TCP flows) composed on top
+    /// of the OU background — the contended-path scenarios. The
+    /// generators derive their RNG stream from `seed`, so the load
+    /// trajectory is a pure function of `(cross, seed)`; such a link is
+    /// never frozen ([`Link::bg_frozen`]), so warm-epoch tick batching
+    /// stays off.
+    pub fn make_link_with_cross_traffic(
+        &self,
+        events: Vec<crate::netsim::BandwidthEvent>,
+        cross: crate::netsim::CrossTrafficConfig,
+        seed: u64,
+    ) -> Link {
+        self.make_link_with_events(events)
+            .with_cross_traffic(crate::netsim::CrossTraffic::new(cross, seed))
+    }
+
     /// Bandwidth-delay product of the path.
     pub fn bdp(&self) -> Bytes {
         self.link.bdp()

@@ -63,9 +63,30 @@ impl BackgroundTraffic {
         }
     }
 
-    /// Register scripted events (must be pushed in time order).
+    /// Register scripted events. The list may arrive in any order —
+    /// callers assemble it from several sources (fault schedules, CLI
+    /// scripts) — so it is validated and sorted here; an unsorted list
+    /// must never make [`Self::next_event_at`] skip a later-listed
+    /// earlier event. The sort is stable and by time only, so events
+    /// sharing a timestamp keep their listed order and the *last listed*
+    /// wins when both apply on the same tick.
     pub fn with_events(mut self, mut events: Vec<BandwidthEvent>) -> Self {
-        events.sort_by(|a, b| a.at.as_secs().partial_cmp(&b.at.as_secs()).unwrap());
+        for e in &events {
+            let at = e.at.as_secs();
+            assert!(
+                at.is_finite() && at >= 0.0,
+                "bandwidth event time {at} must be finite and >= 0"
+            );
+            assert!(
+                e.mean_fraction.is_finite() && (0.0..=1.0).contains(&e.mean_fraction),
+                "bandwidth event fraction {} must be in [0, 1]",
+                e.mean_fraction
+            );
+        }
+        // `total_cmp`, not `partial_cmp().unwrap()`: the times are
+        // finite by the assert above, but the ordering must not be able
+        // to panic on data it has already accepted.
+        events.sort_by(|a, b| a.at.as_secs().total_cmp(&b.at.as_secs()));
         self.events = events;
         self
     }
@@ -198,5 +219,56 @@ mod tests {
             BandwidthEvent { at: SimTime::from_secs(5.0), mean_fraction: 0.4 },
         ]);
         assert!(bg.events[0].at < bg.events[1].at);
+    }
+
+    #[test]
+    fn unsorted_and_duplicate_events_apply_in_time_order() {
+        // Regression: an unsorted list must not let `next_event_at` (and
+        // the apply loop) skip a later-listed earlier event, and
+        // duplicate timestamps must resolve deterministically — stable
+        // sort keeps the listed order, the apply loop consumes both, so
+        // the last-listed value is in force.
+        let mut bg = BackgroundTraffic::constant(0.0).with_events(vec![
+            BandwidthEvent { at: SimTime::from_secs(10.0), mean_fraction: 0.2 },
+            BandwidthEvent { at: SimTime::from_secs(5.0), mean_fraction: 0.4 },
+            BandwidthEvent { at: SimTime::from_secs(5.0), mean_fraction: 0.1 },
+        ]);
+        assert_eq!(bg.next_event_at(), Some(SimTime::from_secs(5.0)));
+        let mut rng = Xoshiro256::seeded(9);
+        let dt = SimDuration::from_millis(100.0);
+        let mut t = SimTime::ZERO;
+        for _ in 0..60 {
+            bg.tick(t, dt, &mut rng);
+            t += dt;
+        }
+        // Past t = 5 s: both duplicates consumed, last listed in force.
+        assert_eq!(bg.fraction(), 0.1);
+        assert_eq!(bg.next_event_at(), Some(SimTime::from_secs(10.0)));
+        for _ in 0..60 {
+            bg.tick(t, dt, &mut rng);
+            t += dt;
+        }
+        assert_eq!(bg.fraction(), 0.2);
+        assert_eq!(bg.next_event_at(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite")]
+    fn nan_event_time_is_rejected_loudly() {
+        // `partial_cmp().unwrap()` used to panic opaquely mid-sort on a
+        // NaN timestamp; construction now rejects it with a message.
+        let _ = BackgroundTraffic::constant(0.0).with_events(vec![BandwidthEvent {
+            at: SimTime::from_secs(f64::NAN),
+            mean_fraction: 0.2,
+        }]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be in [0, 1]")]
+    fn out_of_range_event_fraction_is_rejected() {
+        let _ = BackgroundTraffic::constant(0.0).with_events(vec![BandwidthEvent {
+            at: SimTime::from_secs(1.0),
+            mean_fraction: 1.5,
+        }]);
     }
 }

@@ -1,0 +1,361 @@
+//! Seeded background cross-traffic generators.
+//!
+//! The OU process in [`super::BackgroundTraffic`] models *diffuse* load:
+//! many small flows whose aggregate drifts around a mean. Real contended
+//! paths additionally carry structured competitors — a steady UDP floor
+//! (monitoring, VoIP, telemetry) and bursty TCP flows that arrive, pump a
+//! bounded number of bytes, and leave. This module reproduces the classic
+//! mgen experiment shape (an mgen config scripts exactly these two
+//! generators): a constant-rate UDP component plus TCP bursts with a mean
+//! size, a fixed duration and Poisson inter-burst gaps.
+//!
+//! [`CrossTraffic`] owns its own RNG stream (derived from the seed at
+//! construction), so a generator's fraction trajectory is a pure function
+//! of `(config, seed)` — bit-identical across runs regardless of what the
+//! rest of the simulation draws. The determinism tests in
+//! `rust/tests/fairness_convergence.rs` pin this.
+//!
+//! A link carrying an active generator is **never frozen**
+//! ([`crate::netsim::Link::bg_frozen`] returns `false`), so the
+//! warm-epoch batched stepper always falls back to the per-tick path and
+//! can never replay a stale rate across a burst boundary.
+
+use crate::rng::{self, Distribution, Exponential, Xoshiro256};
+use crate::units::{Rate, SimTime};
+
+/// Hard ceiling on the combined (OU + cross-traffic) fraction of the
+/// bottleneck: however bursty the competitors, the transfer keeps a
+/// sliver of the pipe (TCP never fully starves).
+pub const MAX_CROSS_FRACTION: f64 = 0.98;
+
+/// Parameters of the seeded cross-traffic generators: a steady UDP floor
+/// plus mgen-style bursty TCP flows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrossTrafficConfig {
+    /// Steady UDP floor as a fraction of link capacity, `[0, 1)`.
+    pub udp_fraction: f64,
+    /// Mean TCP burst arrivals per second (Poisson). `0` disables the
+    /// bursty component.
+    pub tcp_rate_per_sec: f64,
+    /// Mean bytes per TCP burst (sizes are exponentially distributed).
+    pub tcp_burst_bytes: f64,
+    /// Duration of each burst, seconds: a burst of `S` bytes occupies
+    /// `S / duration` bytes/s of the bottleneck while it lasts.
+    pub tcp_burst_secs: f64,
+}
+
+impl CrossTrafficConfig {
+    /// A config with only the steady UDP floor.
+    pub fn udp_floor(fraction: f64) -> Self {
+        CrossTrafficConfig {
+            udp_fraction: fraction,
+            tcp_rate_per_sec: 0.0,
+            tcp_burst_bytes: 0.0,
+            tcp_burst_secs: 1.0,
+        }
+    }
+
+    /// True when the config generates any load at all — an inactive
+    /// config must not be attached to a link (it would unfreeze warm
+    /// batching for nothing).
+    pub fn is_active(&self) -> bool {
+        self.udp_fraction > 0.0 || self.tcp_rate_per_sec > 0.0
+    }
+
+    /// Validate the parameter ranges; returns a human-readable complaint.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..1.0).contains(&self.udp_fraction) {
+            return Err(format!(
+                "udp fraction {} must be in [0, 1)",
+                self.udp_fraction
+            ));
+        }
+        if self.tcp_rate_per_sec < 0.0 || !self.tcp_rate_per_sec.is_finite() {
+            return Err(format!(
+                "tcp burst rate {} must be finite and >= 0",
+                self.tcp_rate_per_sec
+            ));
+        }
+        if self.tcp_rate_per_sec > 0.0 {
+            if !(self.tcp_burst_bytes > 0.0 && self.tcp_burst_bytes.is_finite()) {
+                return Err(format!(
+                    "tcp burst size {} must be finite and > 0",
+                    self.tcp_burst_bytes
+                ));
+            }
+            if !(self.tcp_burst_secs > 0.0 && self.tcp_burst_secs.is_finite()) {
+                return Err(format!(
+                    "tcp burst duration {} must be finite and > 0",
+                    self.tcp_burst_secs
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI spec `"udp:FRAC;tcp:RATE:SIZE:DUR"` (either component
+    /// may be given alone; `"off"` yields `None`). `RATE` is bursts per
+    /// second, `SIZE` mean bytes per burst, `DUR` the burst duration in
+    /// seconds.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use greendt::netsim::CrossTrafficConfig;
+    ///
+    /// assert_eq!(CrossTrafficConfig::parse("off").unwrap(), None);
+    /// let cfg = CrossTrafficConfig::parse("udp:0.1;tcp:0.05:4000000:2")
+    ///     .unwrap()
+    ///     .unwrap();
+    /// assert_eq!(cfg.udp_fraction, 0.1);
+    /// assert_eq!(cfg.tcp_rate_per_sec, 0.05);
+    /// ```
+    pub fn parse(spec: &str) -> Result<Option<Self>, String> {
+        let spec = spec.trim();
+        if spec.eq_ignore_ascii_case("off") {
+            return Ok(None);
+        }
+        if spec.is_empty() {
+            return Err("empty cross-traffic spec (use 'off' to disable)".into());
+        }
+        let mut cfg = CrossTrafficConfig {
+            udp_fraction: 0.0,
+            tcp_rate_per_sec: 0.0,
+            tcp_burst_bytes: 0.0,
+            tcp_burst_secs: 1.0,
+        };
+        let num = |s: &str, what: &str| -> Result<f64, String> {
+            s.parse::<f64>()
+                .map_err(|_| format!("bad {what} '{s}' in cross-traffic spec"))
+        };
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(frac) = part.strip_prefix("udp:") {
+                cfg.udp_fraction = num(frac, "udp fraction")?;
+            } else if let Some(rest) = part.strip_prefix("tcp:") {
+                let fields: Vec<&str> = rest.split(':').collect();
+                if fields.len() != 3 {
+                    return Err(format!(
+                        "tcp component '{part}' must be tcp:RATE:SIZE:DUR"
+                    ));
+                }
+                cfg.tcp_rate_per_sec = num(fields[0], "tcp burst rate")?;
+                cfg.tcp_burst_bytes = num(fields[1], "tcp burst size")?;
+                cfg.tcp_burst_secs = num(fields[2], "tcp burst duration")?;
+            } else {
+                return Err(format!(
+                    "unknown cross-traffic component '{part}' (expected udp:… or tcp:…)"
+                ));
+            }
+        }
+        cfg.validate()?;
+        if !cfg.is_active() {
+            return Err("cross-traffic spec generates no load (use 'off' to disable)".into());
+        }
+        Ok(Some(cfg))
+    }
+}
+
+/// One in-flight TCP burst: it occupies `bytes_per_sec` of the bottleneck
+/// until `ends_at`.
+#[derive(Debug, Clone, Copy)]
+struct Burst {
+    ends_at: f64,
+    bytes_per_sec: f64,
+}
+
+/// The live generator state composed onto a [`crate::netsim::Link`]: a
+/// constant UDP floor plus the currently active TCP bursts. Owns its RNG,
+/// so the trajectory depends only on `(config, seed)`.
+#[derive(Debug, Clone)]
+pub struct CrossTraffic {
+    cfg: CrossTrafficConfig,
+    rng: Xoshiro256,
+    /// When the next burst begins (absolute sim time, seconds).
+    next_burst_at: f64,
+    /// Bursts currently occupying the link.
+    bursts: Vec<Burst>,
+    /// Cached sum of active burst rates, bytes/s.
+    load_bytes_per_sec: f64,
+}
+
+impl CrossTraffic {
+    /// Build a generator from a validated config. The RNG stream is
+    /// derived from `seed` with a fixed label, so the generator's draws
+    /// never interleave with (or perturb) any other stream in the run.
+    pub fn new(cfg: CrossTrafficConfig, seed: u64) -> Self {
+        cfg.validate().unwrap_or_else(|e| panic!("invalid cross-traffic config: {e}"));
+        let mut rng = rng::stream(seed, "cross-traffic");
+        let next_burst_at = if cfg.tcp_rate_per_sec > 0.0 {
+            Exponential::new(cfg.tcp_rate_per_sec).sample(&mut rng)
+        } else {
+            f64::INFINITY
+        };
+        CrossTraffic {
+            cfg,
+            rng,
+            next_burst_at,
+            bursts: Vec::with_capacity(32),
+            load_bytes_per_sec: 0.0,
+        }
+    }
+
+    /// The configuration this generator runs.
+    pub fn config(&self) -> &CrossTrafficConfig {
+        &self.cfg
+    }
+
+    /// Advance the generators to `now`: expire finished bursts, start
+    /// every burst whose Poisson-scheduled instant has arrived (bursts
+    /// overlap freely), and refresh the cached load.
+    pub fn tick(&mut self, now: SimTime) {
+        let t = now.as_secs();
+        self.bursts.retain(|b| b.ends_at > t);
+        if self.cfg.tcp_rate_per_sec > 0.0 {
+            let gap = Exponential::new(self.cfg.tcp_rate_per_sec);
+            let size = Exponential::new(1.0 / self.cfg.tcp_burst_bytes);
+            while self.next_burst_at <= t {
+                let bytes = size.sample(&mut self.rng);
+                self.bursts.push(Burst {
+                    ends_at: self.next_burst_at + self.cfg.tcp_burst_secs,
+                    bytes_per_sec: bytes / self.cfg.tcp_burst_secs,
+                });
+                self.next_burst_at += gap.sample(&mut self.rng);
+            }
+        }
+        self.load_bytes_per_sec = self.bursts.iter().map(|b| b.bytes_per_sec).sum();
+    }
+
+    /// Current burst load on the link, bytes/s (the UDP floor is a
+    /// capacity fraction and not included here).
+    pub fn load_bytes_per_sec(&self) -> f64 {
+        self.load_bytes_per_sec
+    }
+
+    /// Fraction of `capacity` the generators currently occupy: the UDP
+    /// floor plus the active bursts, capped at [`MAX_CROSS_FRACTION`].
+    pub fn fraction(&self, capacity: Rate) -> f64 {
+        let cap = capacity.as_bytes_per_sec().max(1.0);
+        (self.cfg.udp_fraction + self.load_bytes_per_sec / cap).min(MAX_CROSS_FRACTION)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::SimDuration;
+
+    fn cfg() -> CrossTrafficConfig {
+        CrossTrafficConfig {
+            udp_fraction: 0.1,
+            tcp_rate_per_sec: 0.2,
+            tcp_burst_bytes: 25e6,
+            tcp_burst_secs: 2.0,
+        }
+    }
+
+    fn run(ct: &mut CrossTraffic, ticks: usize, capacity: Rate) -> Vec<f64> {
+        let dt = SimDuration::from_millis(100.0);
+        let mut t = SimTime::ZERO;
+        let mut out = Vec::with_capacity(ticks);
+        for _ in 0..ticks {
+            ct.tick(t);
+            out.push(ct.fraction(capacity));
+            t += dt;
+        }
+        out
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical() {
+        let capacity = Rate::from_gbps(1.0);
+        let a = run(&mut CrossTraffic::new(cfg(), 7), 5000, capacity);
+        let b = run(&mut CrossTraffic::new(cfg(), 7), 5000, capacity);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // A different seed produces a different trajectory.
+        let c = run(&mut CrossTraffic::new(cfg(), 8), 5000, capacity);
+        assert!(a.iter().zip(&c).any(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn mean_load_matches_configured_rates() {
+        // Expected load: udp floor + λ·E[size] bytes/s of bursts. With
+        // λ = 0.2/s and 25 MB mean bursts over a 1 Gbps (125 MB/s) link,
+        // the burst component averages 5 MB/s = 4% of capacity.
+        let capacity = Rate::from_gbps(1.0);
+        let trace = run(&mut CrossTraffic::new(cfg(), 11), 200_000, capacity);
+        let mean: f64 = trace.iter().sum::<f64>() / trace.len() as f64;
+        let expected = 0.1 + 0.2 * 25e6 / capacity.as_bytes_per_sec();
+        assert!(
+            (mean - expected).abs() < 0.02,
+            "mean fraction {mean} vs expected {expected}"
+        );
+        // Bursts actually fluctuate: the trace is not constant.
+        assert!(trace.iter().any(|&f| f > expected * 1.2));
+        assert!(trace.iter().any(|&f| (f - 0.1).abs() < 1e-12));
+    }
+
+    #[test]
+    fn udp_only_floor_is_constant() {
+        let capacity = Rate::from_gbps(1.0);
+        let mut ct = CrossTraffic::new(CrossTrafficConfig::udp_floor(0.25), 3);
+        for f in run(&mut ct, 1000, capacity) {
+            assert_eq!(f, 0.25);
+        }
+    }
+
+    #[test]
+    fn fraction_is_capped() {
+        // Absurd burst rates cannot starve the transfer entirely.
+        let c = CrossTrafficConfig {
+            udp_fraction: 0.5,
+            tcp_rate_per_sec: 50.0,
+            tcp_burst_bytes: 125e6,
+            tcp_burst_secs: 5.0,
+        };
+        let capacity = Rate::from_gbps(1.0);
+        let trace = run(&mut CrossTraffic::new(c, 5), 2000, capacity);
+        assert!(trace.iter().all(|&f| f <= MAX_CROSS_FRACTION));
+        assert!(trace.iter().any(|&f| f == MAX_CROSS_FRACTION));
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        assert_eq!(CrossTrafficConfig::parse("off").unwrap(), None);
+        assert_eq!(CrossTrafficConfig::parse("OFF").unwrap(), None);
+        let c = CrossTrafficConfig::parse("udp:0.1;tcp:0.2:25000000:2")
+            .unwrap()
+            .unwrap();
+        assert_eq!(c, cfg());
+        let udp_only = CrossTrafficConfig::parse("udp:0.3").unwrap().unwrap();
+        assert_eq!(udp_only.udp_fraction, 0.3);
+        assert_eq!(udp_only.tcp_rate_per_sec, 0.0);
+        let tcp_only = CrossTrafficConfig::parse("tcp:0.1:8000000:1.5").unwrap().unwrap();
+        assert_eq!(tcp_only.udp_fraction, 0.0);
+        assert_eq!(tcp_only.tcp_burst_secs, 1.5);
+
+        for bad in [
+            "",
+            "udp:1.5",
+            "udp:x",
+            "tcp:0.1:100",
+            "tcp:0.1:0:2",
+            "tcp:0.1:100:-1",
+            "wifi:0.1",
+            "udp:0;tcp:0:1:1",
+        ] {
+            assert!(
+                CrossTrafficConfig::parse(bad).is_err(),
+                "'{bad}' should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn inactive_config_is_detectable() {
+        assert!(!CrossTrafficConfig::udp_floor(0.0).is_active());
+        assert!(CrossTrafficConfig::udp_floor(0.1).is_active());
+        assert!(cfg().is_active());
+    }
+}

@@ -1,5 +1,6 @@
 //! Bottleneck link and fair-share goodput allocation.
 
+use super::crosstraffic::{CrossTraffic, MAX_CROSS_FRACTION};
 use super::{BackgroundTraffic, StreamState};
 use crate::rng::Xoshiro256;
 use crate::units::{Bytes, Rate, Rtt, SimDuration, SimTime};
@@ -59,17 +60,41 @@ pub struct Link {
     /// Static path parameters (capacity, RTT, window/knee model).
     pub params: LinkParams,
     bg: BackgroundTraffic,
+    /// Optional seeded cross-traffic generators (UDP floor + TCP bursts)
+    /// stacked on top of the OU background. `None` keeps every code path
+    /// bit-identical to a link built before this layer existed.
+    cross: Option<CrossTraffic>,
 }
 
 impl Link {
     /// A link with the given parameters and background process.
     pub fn new(params: LinkParams, bg: BackgroundTraffic) -> Self {
-        Link { params, bg }
+        Link { params, bg, cross: None }
+    }
+
+    /// Stack seeded cross-traffic generators on the link (see
+    /// [`CrossTraffic`]). A link carrying a generator is never frozen —
+    /// [`Self::bg_frozen`] returns `false` — so warm-epoch batching
+    /// always defers to the per-tick path.
+    pub fn with_cross_traffic(mut self, cross: CrossTraffic) -> Self {
+        self.cross = Some(cross);
+        self
     }
 
     /// Capacity left for the transfer after background cross traffic.
+    /// Without generators this is exactly the pre-cross-traffic
+    /// expression (bit-for-bit); with them, the OU fraction and the
+    /// generator fraction add, capped so the transfer is never fully
+    /// starved.
     pub fn available(&self) -> Rate {
-        self.params.capacity * (1.0 - self.bg.fraction())
+        match &self.cross {
+            None => self.params.capacity * (1.0 - self.bg.fraction()),
+            Some(ct) => {
+                let f = (self.bg.fraction() + ct.fraction(self.params.capacity))
+                    .min(MAX_CROSS_FRACTION);
+                self.params.capacity * (1.0 - f)
+            }
+        }
     }
 
     /// Current background fraction (observability for tests/metrics).
@@ -77,17 +102,29 @@ impl Link {
         self.bg.fraction()
     }
 
-    /// Advance the background process.
+    /// Current cross-traffic generator fraction of capacity (`None`
+    /// when no generator is attached).
+    pub fn cross_traffic_fraction(&self) -> Option<f64> {
+        self.cross.as_ref().map(|ct| ct.fraction(self.params.capacity))
+    }
+
+    /// Advance the background process and any cross-traffic generators.
     pub fn tick(&mut self, now: SimTime, dt: SimDuration, rng: &mut Xoshiro256) {
         self.bg.tick(now, dt, rng);
+        if let Some(ct) = &mut self.cross {
+            ct.tick(now);
+        }
     }
 
     /// True when [`Self::tick`] with no scripted event due is a state
     /// no-op (constant background, no RNG draws) — the link-side
     /// precondition for warm-epoch tick batching. See
-    /// [`BackgroundTraffic::is_frozen`].
+    /// [`BackgroundTraffic::is_frozen`]. A link with cross-traffic
+    /// generators attached is *never* frozen: burst arrivals move the
+    /// budget on any tick, so a batched warm epoch would silently replay
+    /// stale rates across a burst boundary.
     pub fn bg_frozen(&self) -> bool {
-        self.bg.is_frozen()
+        self.cross.is_none() && self.bg.is_frozen()
     }
 
     /// When the next scripted background event fires, if any — a batched
@@ -445,6 +482,37 @@ mod tests {
                 assert!(streams.iter().any(|s| s.in_slow_start()));
             }
         }
+    }
+
+    #[test]
+    fn cross_traffic_unfreezes_and_reduces_budget() {
+        use crate::netsim::{CrossTraffic, CrossTrafficConfig};
+
+        let quiet = Link::new(link().params.clone(), BackgroundTraffic::constant(0.1));
+        assert!(quiet.bg_frozen(), "constant background is frozen");
+        let avail_quiet = quiet.available().as_bytes_per_sec();
+
+        let contended = Link::new(link().params.clone(), BackgroundTraffic::constant(0.1))
+            .with_cross_traffic(CrossTraffic::new(CrossTrafficConfig::udp_floor(0.2), 7));
+        // The warm-batch gate must refuse a link with generators attached.
+        assert!(!contended.bg_frozen(), "cross traffic must unfreeze the link");
+        // Fractions stack: 0.1 OU + 0.2 UDP floor = 0.3 consumed.
+        let avail = contended.available().as_bytes_per_sec();
+        assert!(avail < avail_quiet);
+        let expected = contended.params.capacity.as_bytes_per_sec() * 0.7;
+        assert!((avail - expected).abs() < 1.0, "available {avail} vs {expected}");
+        assert_eq!(contended.cross_traffic_fraction(), Some(0.2));
+        assert_eq!(quiet.cross_traffic_fraction(), None);
+    }
+
+    #[test]
+    fn combined_fraction_is_capped() {
+        use crate::netsim::{CrossTraffic, CrossTrafficConfig, MAX_CROSS_FRACTION};
+
+        let l = Link::new(link().params.clone(), BackgroundTraffic::constant(0.9))
+            .with_cross_traffic(CrossTraffic::new(CrossTrafficConfig::udp_floor(0.9), 7));
+        let min_avail = l.params.capacity.as_bytes_per_sec() * (1.0 - MAX_CROSS_FRACTION);
+        assert!((l.available().as_bytes_per_sec() - min_avail).abs() < 1.0);
     }
 
     #[test]

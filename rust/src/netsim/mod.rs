@@ -8,7 +8,9 @@
 //!
 //! * [`Link`] — bottleneck capacity, RTT, and a mean-reverting background
 //!   cross-traffic process (plus scripted bandwidth events for failure
-//!   injection);
+//!   injection, and optional seeded [`CrossTraffic`] generators — a
+//!   steady UDP floor plus bursty TCP flows — for contended-path
+//!   scenarios);
 //! * [`StreamState`] — per-TCP-connection congestion window with slow
 //!   start, giving new channels the ramp-up that Algorithm 2 (Slow Start)
 //!   corrects for;
@@ -17,9 +19,11 @@
 //!   throughput-vs-channels curve that the FSM algorithms search.
 
 mod background;
+mod crosstraffic;
 mod link;
 mod stream;
 
 pub use background::{BackgroundTraffic, BandwidthEvent};
+pub use crosstraffic::{CrossTraffic, CrossTrafficConfig, MAX_CROSS_FRACTION};
 pub use link::{share_goodput, share_goodput_into, AllocCache, Link, LinkParams};
 pub use stream::StreamState;

@@ -9,8 +9,11 @@
 
 use crate::units::{Bytes, Rate, Rtt, SimDuration};
 
+/// TCP maximum segment size modeled by the window dynamics (bytes).
+pub const MSS: f64 = 1460.0;
+
 /// Initial congestion window: 10 MSS of 1460 B (RFC 6928).
-pub const INIT_WINDOW: f64 = 10.0 * 1460.0;
+pub const INIT_WINDOW: f64 = 10.0 * MSS;
 
 /// Congestion state of one TCP connection.
 #[derive(Debug, Clone, Copy)]
@@ -106,6 +109,43 @@ impl StreamState {
     pub fn backoff(&mut self) {
         self.window = Bytes::new((self.window.as_f64() * 0.5).max(INIT_WINDOW));
         self.slow_start = false;
+    }
+
+    /// AIMD additive increase: grow the window by one [`MSS`] per RTT
+    /// (continuous-time: `w += MSS * dt/rtt`), capped at `avg_win` — the
+    /// path ceiling the allocator models. Only meaningful once the stream
+    /// has left slow start; slow-start streams keep their exponential
+    /// ramp ([`Self::tick`]) until the first congestion signal. A zero
+    /// RTT holds the window still, exactly as [`Self::tick`] does.
+    pub fn additive_increase(&mut self, dt: SimDuration, rtt: Rtt) {
+        if self.slow_start || rtt.is_zero() {
+            return;
+        }
+        let w = self.window.as_f64() + MSS * (dt.as_secs() / rtt.as_secs());
+        self.window = Bytes::new(w.min(self.avg_win.as_f64()));
+    }
+
+    /// BBR-like congestion response (feature `bbr`): instead of halving,
+    /// drain to the delivered-rate BDP estimate `delivered_bps * rtt`
+    /// (floored at [`INIT_WINDOW`]) — model of BBR's ProbeBW leaving the
+    /// queue it built rather than multiplicatively backing off.
+    #[cfg(feature = "bbr")]
+    pub fn drain_to_delivered(&mut self, delivered_bps: f64, rtt: Rtt) {
+        let bdp = (delivered_bps * rtt.as_secs()).max(INIT_WINDOW);
+        self.window = Bytes::new(bdp.min(self.avg_win.as_f64()));
+        self.slow_start = false;
+    }
+
+    /// BBR-like probe (feature `bbr`): multiplicative 25%-per-RTT window
+    /// probe toward the path ceiling, the ProbeBW up-phase analogue of
+    /// [`Self::additive_increase`].
+    #[cfg(feature = "bbr")]
+    pub fn probe_gain(&mut self, dt: SimDuration, rtt: Rtt) {
+        if self.slow_start || rtt.is_zero() {
+            return;
+        }
+        let w = self.window.as_f64() * (1.0 + 0.25 * dt.as_secs() / rtt.as_secs());
+        self.window = Bytes::new(w.min(self.avg_win.as_f64()));
     }
 }
 
@@ -230,6 +270,57 @@ mod tests {
         s.tick_cached(factor);
         assert!(!s.in_slow_start(), "must exit on the exact-landing tick");
         assert_eq!(s.window(), avg);
+    }
+
+    #[test]
+    fn additive_increase_is_one_mss_per_rtt_capped_at_avg_win() {
+        let mut s = StreamState::warm(Bytes::from_mb(4.0));
+        s.backoff(); // 2 MB, out of slow start
+        let w0 = s.window().as_f64();
+        s.additive_increase(rtt(), rtt());
+        assert!((s.window().as_f64() - (w0 + MSS)).abs() < 1e-9);
+        // Fractional RTTs scale linearly.
+        s.additive_increase(SimDuration::from_millis(16.0), rtt());
+        assert!((s.window().as_f64() - (w0 + 1.5 * MSS)).abs() < 1e-9);
+        // Growth is capped at the path average window.
+        for _ in 0..100_000 {
+            s.additive_increase(rtt(), rtt());
+        }
+        assert_eq!(s.window(), Bytes::from_mb(4.0));
+    }
+
+    #[test]
+    fn additive_increase_ignores_slow_start_and_zero_rtt() {
+        let mut ramping = StreamState::new(Bytes::from_mb(4.0));
+        let w0 = ramping.window();
+        ramping.additive_increase(rtt(), rtt());
+        assert_eq!(ramping.window(), w0, "slow-start streams keep the exponential ramp");
+        let mut warm = StreamState::warm(Bytes::from_mb(4.0));
+        warm.backoff();
+        let w1 = warm.window();
+        warm.additive_increase(rtt(), SimDuration::ZERO);
+        assert_eq!(warm.window(), w1, "zero RTT holds the window still");
+    }
+
+    #[cfg(feature = "bbr")]
+    #[test]
+    fn bbr_drain_and_probe_track_the_delivered_bdp() {
+        let mut s = StreamState::warm(Bytes::from_mb(4.0));
+        // Delivered 31.25 MB/s over a 32 ms path: BDP = 1 MB.
+        s.drain_to_delivered(31.25e6, rtt());
+        assert!(!s.in_slow_start());
+        assert!((s.window().as_f64() - 1e6).abs() < 1.0, "window {}", s.window());
+        // Probe grows 25% per RTT, capped at avg_win.
+        let w0 = s.window().as_f64();
+        s.probe_gain(rtt(), rtt());
+        assert!((s.window().as_f64() - 1.25 * w0).abs() < 1.0);
+        for _ in 0..1000 {
+            s.probe_gain(rtt(), rtt());
+        }
+        assert_eq!(s.window(), Bytes::from_mb(4.0));
+        // Drain floors at the initial window.
+        s.drain_to_delivered(0.0, rtt());
+        assert_eq!(s.window().as_f64(), INIT_WINDOW);
     }
 
     #[test]

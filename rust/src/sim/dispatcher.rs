@@ -78,7 +78,7 @@ use crate::config::Testbed;
 use crate::coordinator::fleet::{FleetPolicyKind, PlacementKind};
 use crate::coordinator::AlgorithmKind;
 use crate::history::{KnnIndex, Query, RunOutcome, WorkloadFingerprint, CONFIDENCE_FLOOR};
-use crate::netsim::BandwidthEvent;
+use crate::netsim::{BandwidthEvent, CrossTrafficConfig};
 use crate::rebalance::{HostView, RebalanceConfig, Rebalancer, SessionView};
 use crate::resilience::{
     Advisory, DeadLetter, DeadLetterQueue, FailureReason, FaultKind, FaultSchedule, HealthMonitor,
@@ -501,6 +501,18 @@ pub struct DispatcherConfig {
     /// ([`crate::netsim::BackgroundTraffic::is_frozen`]) — large-scale
     /// runs and `bench_scale` set this so warm epochs batch.
     pub constant_bg: bool,
+    /// Seeded cross-traffic generators (steady UDP floor + bursty TCP
+    /// flows) on every host's link — the contended-network scenarios.
+    /// Each host derives its generator stream from its own
+    /// [`host_seed`], so trajectories differ per host but the whole
+    /// fleet stays a pure function of [`Self::seed`]. Mutually
+    /// exclusive with [`Self::constant_bg`]: a contended link is never
+    /// frozen, so warm-epoch batching stays off.
+    pub cross_traffic: Option<CrossTrafficConfig>,
+    /// Run every session's per-channel FSM with AIMD competing-flow
+    /// dynamics instead of slow-start-then-hold (see
+    /// [`crate::transfer::TransferEngine::set_aimd`]).
+    pub aimd: bool,
     /// Historical-log index consulted at every placement decision: each
     /// candidate host is annotated with the history-observed ΔJ/byte for
     /// workloads like the arriving one, which
@@ -542,6 +554,8 @@ impl DispatcherConfig {
             reference_stepper: false,
             shards: 1,
             constant_bg: false,
+            cross_traffic: None,
+            aimd: false,
             history: None,
             resilience: ResilienceConfig::new(),
         }
@@ -600,6 +614,20 @@ impl DispatcherConfig {
     /// warm epochs batch (see [`Self::constant_bg`]).
     pub fn with_constant_bg(mut self) -> Self {
         self.constant_bg = true;
+        self
+    }
+
+    /// Add seeded cross-traffic generators to every host's link (see
+    /// [`Self::cross_traffic`]).
+    pub fn with_cross_traffic(mut self, cross: CrossTrafficConfig) -> Self {
+        self.cross_traffic = Some(cross);
+        self
+    }
+
+    /// Run every session with AIMD competing-flow channel dynamics (see
+    /// [`Self::aimd`]).
+    pub fn with_aimd(mut self, on: bool) -> Self {
+        self.aimd = on;
         self
     }
 
@@ -1044,6 +1072,8 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                 cfg.record_timeline,
                 cfg.reference_stepper,
                 cfg.constant_bg,
+                cfg.cross_traffic,
+                cfg.aimd,
             )
         })
         .collect();
@@ -1974,6 +2004,8 @@ mod tests {
             false,
             false,
             false,
+            false,
+            None,
             false,
         );
         let ds = crate::dataset::standard::medium_dataset(11);

@@ -217,6 +217,29 @@ impl Simulation {
         )
     }
 
+    /// Like [`Self::empty`] on a *contended* path: seeded cross-traffic
+    /// generators (a steady UDP floor plus bursty TCP flows) composed on
+    /// top of the quiet OU background, plus the scripted events. The
+    /// generator RNG derives from `seed`, so runs are reproducible; the
+    /// link is never frozen, so every tick takes the slow path (warm
+    /// epochs cannot batch over stochastic cross-traffic).
+    pub fn empty_with_cross_traffic(
+        testbed: &Testbed,
+        client: CpuState,
+        tick: SimDuration,
+        seed: u64,
+        events: Vec<crate::netsim::BandwidthEvent>,
+        cross: crate::netsim::CrossTrafficConfig,
+    ) -> Self {
+        Self::empty_with_link(
+            testbed,
+            client,
+            tick,
+            seed,
+            testbed.make_link_with_cross_traffic(events, cross, seed),
+        )
+    }
+
     fn empty_with_link(
         testbed: &Testbed,
         client: CpuState,
@@ -1078,6 +1101,78 @@ mod tests {
         let now = sim.now.as_secs();
         assert!(now + sim.tick_len().as_secs() + 1e-9 >= 20.0, "stopped early: {now}");
         assert!(now + 1e-9 < 20.0, "overshot the stop line: {now}");
+    }
+
+    fn make_cross_traffic_sim(aimd: bool) -> Simulation {
+        let tb = testbeds::cloudlab();
+        let client = CpuState::performance(tb.client_cpu.clone());
+        let cross = crate::netsim::CrossTrafficConfig {
+            udp_fraction: 0.1,
+            tcp_rate_per_sec: 0.5,
+            tcp_burst_bytes: 20e6,
+            tcp_burst_secs: 1.0,
+        };
+        let mut sim = Simulation::empty_with_cross_traffic(
+            &tb,
+            client,
+            SimDuration::from_millis(100.0),
+            21,
+            Vec::new(),
+            cross,
+        );
+        for i in 0..2 {
+            let ds = standard::large_dataset(30 + i);
+            let parts = partition_files(&ds, tb.bdp());
+            let mut engine = TransferEngine::new(&parts, tb.link.avg_win);
+            engine.set_aimd(aimd);
+            engine.set_num_channels(4);
+            let slot = sim.add_slot(engine);
+            sim.activate_slot(slot);
+        }
+        sim
+    }
+
+    #[test]
+    fn cross_traffic_keeps_warm_batching_off_but_matches_reference() {
+        // A contended link is never frozen, so the warm-batch path must
+        // refuse every tick — while the epoch-cached slow path (which
+        // re-reads the moving budget each tick) stays bit-identical to
+        // the naive reference.
+        let mut fast = make_cross_traffic_sim(false);
+        let mut naive = fast.clone();
+        assert!(!fast.link.bg_frozen());
+        for tick in 0..300 {
+            let (n, _) = fast.warm_batch_ticks(1);
+            assert_eq!(n, 0, "warm tick engaged on a contended link at {tick}");
+            let a = fast.step();
+            let b = naive.step_reference();
+            assert_stats_bits_eq(&a, &b, tick);
+        }
+        assert_eq!(
+            fast.client_energy().as_joules().to_bits(),
+            naive.client_energy().as_joules().to_bits()
+        );
+    }
+
+    #[test]
+    fn aimd_world_matches_reference_bit_for_bit() {
+        // AIMD streams are permanently unstable (the epoch never warms),
+        // so the fast stepper restages every tick; its outcomes must
+        // still carry the reference's exact bits.
+        let mut fast = make_cross_traffic_sim(true);
+        let mut naive = fast.clone();
+        for tick in 0..300 {
+            let a = fast.step();
+            let b = naive.step_reference();
+            assert_stats_bits_eq(&a, &b, tick);
+        }
+        for i in 0..2 {
+            assert_eq!(
+                fast.slot(i).engine.remaining(),
+                naive.slot(i).engine.remaining(),
+                "tenant {i} remaining"
+            );
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::coordinator::{Algorithm, AlgorithmKind};
 use crate::cpusim::{CpuDemand, CpuState};
 use crate::dataset::{Dataset, FileSpec};
 use crate::history::{RunOutcome, RunRecord, TrajPoint, WorkloadFingerprint};
-use crate::netsim::BandwidthEvent;
+use crate::netsim::{BandwidthEvent, CrossTrafficConfig};
 use crate::resilience::DeadLetter;
 use crate::sim::{Simulation, TickStats, TuneCtx, MAX_APP_UTILIZATION};
 use crate::transfer::TransferEngine;
@@ -95,6 +95,15 @@ pub struct FleetConfig {
     /// the large-scale paths and `bench_scale` run in. Results stay
     /// bit-identical across steppers and shard counts either way.
     pub constant_bg: bool,
+    /// Seeded cross-traffic generators on the bottleneck (steady UDP
+    /// floor + bursty TCP flows) — the contended-path scenarios. Mutually
+    /// exclusive with [`Self::constant_bg`]: stochastic cross-traffic
+    /// unfreezes the link, so warm-epoch batching cannot engage.
+    pub cross_traffic: Option<CrossTrafficConfig>,
+    /// Run every tenant's streams with AIMD competing-flow dynamics
+    /// ([`crate::transfer::TransferEngine::set_aimd`]) instead of the
+    /// default slow-start-then-hold FSM.
+    pub aimd: bool,
 }
 
 impl FleetConfig {
@@ -114,7 +123,21 @@ impl FleetConfig {
             server_scaling: false,
             reference_stepper: false,
             constant_bg: false,
+            cross_traffic: None,
+            aimd: false,
         }
+    }
+
+    /// Attach seeded cross-traffic generators (contended-path runs).
+    pub fn with_cross_traffic(mut self, cross: CrossTrafficConfig) -> Self {
+        self.cross_traffic = Some(cross);
+        self
+    }
+
+    /// Switch every tenant's streams to AIMD competing-flow dynamics.
+    pub fn with_aimd(mut self, on: bool) -> Self {
+        self.aimd = on;
+        self
     }
 
     /// Append one tenant.
@@ -390,6 +413,10 @@ pub(crate) struct HostWorld {
     params: TunerParams,
     record_timeline: bool,
     reference_stepper: bool,
+    /// Every engine on this host runs AIMD competing-flow dynamics
+    /// (applied to pre-registered tenants and dispatcher placements
+    /// alike).
+    aimd: bool,
     fleet_step: f64,
     next_fleet: f64,
     channel_cap: Option<u32>,
@@ -415,6 +442,8 @@ impl HostWorld {
         record_timeline: bool,
         reference_stepper: bool,
         constant_bg: bool,
+        cross_traffic: Option<CrossTrafficConfig>,
+        aimd: bool,
     ) -> HostWorld {
         let policy: Option<Box<dyn FleetPolicy>> = policy_kind.map(|kind| kind.build(&params));
 
@@ -447,13 +476,31 @@ impl HostWorld {
             Some(p) => p.initial_cpu(&testbed.client_cpu),
             None => first_cpu.expect("a fleet without a policy needs at least one tenant"),
         };
-        let mut sim = if constant_bg {
+        let mut sim = if let Some(cross) = cross_traffic {
+            // The CLI rejects this pair with a proper error; a library
+            // caller mixing them gets a loud failure instead of silently
+            // losing the constant (batchable) background.
+            assert!(
+                !constant_bg,
+                "constant_bg and cross_traffic are mutually exclusive: \
+                 stochastic cross-traffic unfreezes the link"
+            );
+            Simulation::empty_with_cross_traffic(
+                testbed,
+                client,
+                tick,
+                seed,
+                bandwidth_events,
+                cross,
+            )
+        } else if constant_bg {
             Simulation::empty_constant_bg(testbed, client, tick, seed, bandwidth_events)
         } else {
             Simulation::empty(testbed, client, tick, seed, bandwidth_events)
         };
         sim.host.server_autoscale = server_scaling;
-        for (t, engine) in tenants.iter_mut().zip(engines) {
+        for (t, mut engine) in tenants.iter_mut().zip(engines) {
+            engine.set_aimd(aimd);
             t.slot = sim.add_slot(engine);
         }
 
@@ -471,6 +518,7 @@ impl HostWorld {
             params,
             record_timeline,
             reference_stepper,
+            aimd,
             fleet_step,
             next_fleet: fleet_step,
             channel_cap: None,
@@ -490,7 +538,8 @@ impl HostWorld {
         admission_marginal_jpb: Option<f64>,
     ) {
         spec.arrive_at = self.sim.now;
-        let (mut run, engine, _cpu) = init_tenant(&spec, self.params, &self.testbed);
+        let (mut run, mut engine, _cpu) = init_tenant(&spec, self.params, &self.testbed);
+        engine.set_aimd(self.aimd);
         run.slot = self.sim.add_slot(engine);
         run.admission_marginal_jpb = admission_marginal_jpb.filter(|m| m.is_finite());
         self.tenants.push(run);
@@ -1186,6 +1235,8 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetOutcome {
         cfg.record_timeline,
         cfg.reference_stepper,
         cfg.constant_bg,
+        cfg.cross_traffic,
+        cfg.aimd,
     );
     let max = cfg.max_sim_time.as_secs();
 
@@ -1315,6 +1366,58 @@ mod tests {
         // And a different seed perturbs the background traffic.
         let c = run_fleet(&four_tenant_cfg(FleetPolicyKind::MinEnergyFleet, 124));
         assert_ne!(a.client_energy.as_joules(), c.client_energy.as_joules());
+    }
+
+    #[test]
+    fn contended_fleet_is_reproducible_and_slower() {
+        let contended = || {
+            four_tenant_cfg(FleetPolicyKind::FairShare, 19).with_cross_traffic(
+                CrossTrafficConfig {
+                    udp_fraction: 0.15,
+                    tcp_rate_per_sec: 0.5,
+                    tcp_burst_bytes: 25e6,
+                    tcp_burst_secs: 1.0,
+                },
+            )
+        };
+        let a = run_fleet(&contended());
+        let b = run_fleet(&contended());
+        assert!(a.completed, "contended fleet must still finish");
+        assert_eq!(a.duration.as_secs().to_bits(), b.duration.as_secs().to_bits());
+        assert_eq!(
+            a.client_energy.as_joules().to_bits(),
+            b.client_energy.as_joules().to_bits()
+        );
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(
+                x.finished_at.map(|t| t.as_secs().to_bits()),
+                y.finished_at.map(|t| t.as_secs().to_bits()),
+                "{}: contended finish time must be seed-reproducible",
+                x.name
+            );
+        }
+        // The generators steal real bandwidth: the same workload takes
+        // longer than on the quiet path.
+        let quiet = run_fleet(&four_tenant_cfg(FleetPolicyKind::FairShare, 19));
+        assert!(
+            a.duration.as_secs() > quiet.duration.as_secs(),
+            "cross-traffic must slow the fleet: {} vs {}",
+            a.duration,
+            quiet.duration
+        );
+    }
+
+    #[test]
+    fn aimd_fleet_completes_and_is_reproducible() {
+        let mk = || four_tenant_cfg(FleetPolicyKind::FairShare, 23).with_aimd(true);
+        let a = run_fleet(&mk());
+        let b = run_fleet(&mk());
+        assert!(a.completed, "AIMD fleet must finish");
+        assert_eq!(a.duration.as_secs().to_bits(), b.duration.as_secs().to_bits());
+        assert_eq!(
+            a.client_energy.as_joules().to_bits(),
+            b.client_energy.as_joules().to_bits()
+        );
     }
 
     #[test]

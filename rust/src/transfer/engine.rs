@@ -73,6 +73,17 @@ pub struct TransferEngine {
     /// parallelism, handshake RTTs). The epoch cache in [`crate::sim`]
     /// watches it to learn when a staged stream snapshot goes stale.
     generation: u64,
+    /// Competing-flow mode: streams run AIMD (additive increase per RTT,
+    /// multiplicative decrease on the allocation clip) instead of holding
+    /// still after slow start. See [`Self::set_aimd`].
+    aimd: bool,
+    /// Seconds until the next multiplicative decrease is allowed —
+    /// classic TCP halves at most once per RTT, not once per ACK (tick).
+    aimd_cooldown_s: f64,
+    /// BBR-like variant (feature `bbr`): drain-to-delivered-BDP instead
+    /// of halving, 25%-per-RTT probing instead of one MSS per RTT.
+    #[cfg(feature = "bbr")]
+    bbr: bool,
 }
 
 impl TransferEngine {
@@ -114,9 +125,49 @@ impl TransferEngine {
             scratch_rates: Vec::new(),
             scratch_channel_rates: Vec::new(),
             generation: 0,
+            aimd: false,
+            aimd_cooldown_s: 0.0,
+            #[cfg(feature = "bbr")]
+            bbr: false,
         };
         engine.update_weights();
         engine
+    }
+
+    /// Switch the per-stream congestion model between the default
+    /// slow-start-then-hold FSM (the paper's loss-managed testbeds, where
+    /// the overload penalty at the link absorbs contention) and AIMD
+    /// competing-flow dynamics: additive increase of one MSS per RTT
+    /// while the allocation grants the full window demand, multiplicative
+    /// decrease (at most once per RTT) when the grant falls short. The
+    /// grant is the stream's fair share of the *penalty-scaled* budget
+    /// ([`crate::netsim::AllocCache`]), so past the stream-count knee the
+    /// overload penalty is exactly what drives the backoff.
+    ///
+    /// Structural (bumps the generation): AIMD windows move on every
+    /// tick, so the epoch cache must never treat the snapshot as warm —
+    /// [`Self::stage_streams`] reports every AIMD stream as unstable.
+    pub fn set_aimd(&mut self, on: bool) {
+        if self.aimd != on {
+            self.aimd = on;
+            self.aimd_cooldown_s = 0.0;
+            self.generation += 1;
+        }
+    }
+
+    /// True when AIMD competing-flow dynamics are active.
+    pub fn aimd_enabled(&self) -> bool {
+        self.aimd
+    }
+
+    /// Use the BBR-like congestion response instead of AIMD halving
+    /// (requires [`Self::set_aimd`] to be on for any effect).
+    #[cfg(feature = "bbr")]
+    pub fn set_bbr(&mut self, on: bool) {
+        if self.bbr != on {
+            self.bbr = on;
+            self.generation += 1;
+        }
     }
 
     /// Structural-mutation counter (see the field doc). Equal generations
@@ -384,9 +435,13 @@ impl TransferEngine {
     /// Stage one of a tick: advance every stream's congestion window by
     /// `dt` and append snapshots to `flat` (a buffer that may already hold
     /// other tenants' streams). Returns how many staged streams are still
-    /// in slow start — zero means the snapshot stays valid until the next
+    /// *unstable* — zero means the snapshot stays valid until the next
     /// structural mutation (see [`Self::generation`]), which is what lets
-    /// the epoch-cached stepper skip restaging entirely.
+    /// the epoch-cached stepper skip restaging entirely. With the default
+    /// FSM only slow-start streams are unstable; under AIMD
+    /// ([`Self::set_aimd`]) every stream is, because additive increase
+    /// and backoff move windows on arbitrary later ticks, so a warm epoch
+    /// would replay stale rates.
     ///
     /// The slow-start growth factor is computed once per call
     /// ([`StreamState::growth_factor`]) instead of one `powf` per stream;
@@ -398,6 +453,7 @@ impl TransferEngine {
         flat: &mut Vec<StreamState>,
     ) -> usize {
         let growth = StreamState::growth_factor(dt, rtt);
+        let start = flat.len();
         let mut in_slow_start = 0;
         for c in &mut self.channels {
             for s in &mut c.streams {
@@ -410,7 +466,11 @@ impl TransferEngine {
                 flat.push(*s);
             }
         }
-        in_slow_start
+        if self.aimd {
+            flat.len() - start
+        } else {
+            in_slow_start
+        }
     }
 
     /// Stage two of a tick: consume this engine's per-stream goodput rates
@@ -427,6 +487,12 @@ impl TransferEngine {
             return TickOutput::default();
         }
         let rtt = link.params.rtt;
+
+        // AIMD reaction to this tick's grants (windows move for the *next*
+        // tick; this tick's rates are already fixed by the allocation).
+        if self.aimd {
+            self.aimd_update(rates, rtt, dt);
+        }
 
         // 2. Per-channel raw rate, then pipelining efficiency:
         //    long-run goodput of a channel moving files of size S at raw
@@ -492,6 +558,58 @@ impl TransferEngine {
             moved: Bytes::new(moved_total),
             requests_per_sec,
             open_streams,
+        }
+    }
+
+    /// The AIMD competing-flow step, run inside
+    /// [`Self::apply_shared_rates`] against this tick's per-stream grants
+    /// (staged order):
+    ///
+    /// * a stream whose grant covers its window demand grows additively
+    ///   (one MSS per RTT, [`StreamState::additive_increase`]);
+    /// * a *clipped* stream — grant short of `window / RTT`, i.e. its
+    ///   penalty-scaled fair share ran out — backs off multiplicatively,
+    ///   at most once per RTT across the engine (the cooldown), which is
+    ///   the loss-event granularity of real TCP rather than per-ACK.
+    ///   A clipped slow-start stream exits slow start through the same
+    ///   backoff, like classic TCP on its first loss.
+    ///
+    /// With the `bbr` feature and [`Self::set_bbr`] on, the responses are
+    /// the BBR-like drain/probe pair instead.
+    fn aimd_update(&mut self, rates: &[f64], rtt: Rtt, dt: SimDuration) {
+        if rtt.is_zero() {
+            return;
+        }
+        self.aimd_cooldown_s = (self.aimd_cooldown_s - dt.as_secs()).max(0.0);
+        let md_armed = self.aimd_cooldown_s == 0.0;
+        let mut backed_off = false;
+        let mut idx = 0;
+        for c in &mut self.channels {
+            for s in &mut c.streams {
+                let rate = rates[idx];
+                idx += 1;
+                let demand = s.window_rate(rtt).as_bytes_per_sec();
+                let clipped = rate < demand * (1.0 - 1e-9);
+                if clipped && md_armed {
+                    backed_off = true;
+                    #[cfg(feature = "bbr")]
+                    if self.bbr {
+                        s.drain_to_delivered(rate, rtt);
+                        continue;
+                    }
+                    s.backoff();
+                } else if !clipped {
+                    #[cfg(feature = "bbr")]
+                    if self.bbr {
+                        s.probe_gain(dt, rtt);
+                        continue;
+                    }
+                    s.additive_increase(dt, rtt);
+                }
+            }
+        }
+        if backed_off {
+            self.aimd_cooldown_s = rtt.as_secs();
         }
     }
 
@@ -859,6 +977,125 @@ mod tests {
         let g1 = e.generation();
         e.drain_channels();
         assert_eq!(e.generation(), g1);
+    }
+
+    #[test]
+    fn aimd_streams_stay_unstable_for_the_epoch_cache() {
+        let link = cloudlab_link();
+        let mut e = engine_for("medium", &link);
+        e.set_num_channels(4);
+        let g0 = e.generation();
+        e.set_aimd(true);
+        assert!(e.aimd_enabled());
+        assert!(e.generation() > g0, "switching the congestion model is structural");
+        let dt = SimDuration::from_millis(100.0);
+        for _ in 0..200 {
+            e.tick(&link, dt, f64::INFINITY);
+        }
+        // Long past the slow-start ramp, every stream must still report
+        // unstable: AIMD windows move on arbitrary later ticks, so a warm
+        // epoch would replay stale rates.
+        let mut flat = Vec::new();
+        let unstable = e.stage_streams(dt, link.params.rtt, &mut flat);
+        assert_eq!(unstable, e.open_streams(), "all AIMD streams are unstable");
+        // Toggling back to the default FSM is also structural.
+        let g1 = e.generation();
+        e.set_aimd(false);
+        assert!(e.generation() > g1);
+        e.set_aimd(false); // no-op: same mode
+        assert_eq!(e.generation(), g1 + 1);
+    }
+
+    #[test]
+    fn aimd_halves_at_most_once_per_rtt() {
+        let link = cloudlab_link(); // rtt 36 ms
+        let mut e = engine_for("large", &link);
+        e.set_num_channels(1);
+        // Warm the streams to avg_win under the default FSM first.
+        let dt = SimDuration::from_millis(100.0);
+        for _ in 0..100 {
+            e.tick(&link, dt, f64::INFINITY);
+        }
+        e.set_aimd(true);
+        let avg_win = link.params.avg_win.as_f64();
+        assert_eq!(e.channels()[0].streams[0].window().as_f64(), avg_win);
+        // Starve the engine (zero grants) with a 10 ms tick: every stream
+        // is clipped every tick, but the per-RTT cooldown arms the
+        // multiplicative decrease only on ticks 0, 4 and 8 — exactly
+        // three halvings over 100 ms, not ten.
+        let zero = vec![0.0; e.open_streams()];
+        let small = SimDuration::from_millis(10.0);
+        let mut flat = Vec::new();
+        for _ in 0..10 {
+            flat.clear();
+            e.stage_streams(small, link.params.rtt, &mut flat);
+            e.apply_shared_rates(&zero, &link, small, f64::INFINITY);
+        }
+        let w = e.channels()[0].streams[0].window().as_f64();
+        assert_eq!(w, avg_win * 0.125, "expected exactly three backoffs, window {w}");
+        assert!(!e.channels()[0].streams[0].in_slow_start());
+    }
+
+    #[test]
+    fn aimd_adapts_windows_below_the_path_ceiling() {
+        // On a link whose capacity cannot cover every window at avg_win,
+        // AIMD streams sawtooth below the ceiling while the default FSM
+        // pins every warm window at avg_win regardless of contention.
+        let link = cloudlab_link();
+        let dt = SimDuration::from_millis(100.0);
+        let mut hold = engine_for("large", &link);
+        hold.set_num_channels(8);
+        let mut aimd = engine_for("large", &link);
+        aimd.set_aimd(true);
+        aimd.set_num_channels(8);
+        let (mut moved_hold, mut moved_aimd) = (0.0, 0.0);
+        for _ in 0..300 {
+            moved_hold += hold.tick(&link, dt, f64::INFINITY).moved.as_f64();
+            moved_aimd += aimd.tick(&link, dt, f64::INFINITY).moved.as_f64();
+        }
+        let max_win = |e: &TransferEngine| {
+            e.channels()
+                .iter()
+                .flat_map(|c| c.streams.iter())
+                .map(|s| s.window().as_f64())
+                .fold(0.0, f64::max)
+        };
+        let ceiling = link.params.avg_win.as_f64();
+        assert_eq!(max_win(&hold), ceiling, "default FSM pins warm windows");
+        assert!(
+            max_win(&aimd) < ceiling,
+            "AIMD must back off under contention: {} vs {ceiling}",
+            max_win(&aimd)
+        );
+        // Backing off costs some utilization but not collapse.
+        assert!(
+            moved_aimd > 0.25 * moved_hold,
+            "AIMD moved {moved_aimd} vs hold {moved_hold}"
+        );
+    }
+
+    #[cfg(feature = "bbr")]
+    #[test]
+    fn bbr_mode_drains_instead_of_halving() {
+        let link = cloudlab_link();
+        let mut e = engine_for("large", &link);
+        e.set_num_channels(1);
+        let dt = SimDuration::from_millis(100.0);
+        for _ in 0..100 {
+            e.tick(&link, dt, f64::INFINITY);
+        }
+        e.set_aimd(true);
+        e.set_bbr(true);
+        // A grant of 10 MB/s against a 1 MB window (27.8 MB/s demand at
+        // 36 ms) is a clip: BBR drains to delivered BDP = 360 KB rather
+        // than halving to 500 KB.
+        let grants = vec![10e6; e.open_streams()];
+        let mut flat = Vec::new();
+        flat.clear();
+        e.stage_streams(dt, link.params.rtt, &mut flat);
+        e.apply_shared_rates(&grants, &link, dt, f64::INFINITY);
+        let w = e.channels()[0].streams[0].window().as_f64();
+        assert!((w - 10e6 * 0.036).abs() < 1.0, "drained window {w}");
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Fairness of competing flows on one shared bottleneck.
+//!
+//! The paper's testbeds are shared WAN paths: whenever two transfer
+//! sessions overlap, the per-channel FSM plus the host's fair-share
+//! allocation decide who gets the pipe. These tests pin the convergence
+//! contract for both channel FSMs — the legacy slow-start-then-hold
+//! model and the AIMD competing-flow dynamics — on quiet and contended
+//! links: a flow joining an occupied bottleneck must converge to its
+//! fair share (Jain index >= 0.95 over residency-normalized goodput),
+//! and the incumbent must actually give that share up.
+
+use greendt::config::testbeds;
+use greendt::coordinator::{AlgorithmKind, FleetPolicyKind};
+use greendt::dataset::standard;
+use greendt::netsim::CrossTrafficConfig;
+use greendt::sim::fleet::{run_fleet, FleetConfig, FleetOutcome, TenantSpec};
+use greendt::units::SimTime;
+
+/// Two identical large transfers on one CloudLab host; the second joins
+/// the occupied link 5 s in. Static 8-channel sessions (no tuner) keep
+/// both flows demanding well above the fair share for the whole run, so
+/// the outcome isolates the channel FSM + allocator.
+fn staggered_cfg(aimd: bool, cross: Option<CrossTrafficConfig>, seed: u64) -> FleetConfig {
+    let mut cfg = FleetConfig::new(testbeds::cloudlab(), Some(FleetPolicyKind::FairShare))
+        .with_seed(seed)
+        .with_aimd(aimd);
+    if let Some(cross) = cross {
+        cfg = cfg.with_cross_traffic(cross);
+    }
+    for (name, at) in [("incumbent", 0.0), ("joiner", 5.0)] {
+        cfg.tenants.push(
+            TenantSpec::new(name, standard::large_dataset(seed), AlgorithmKind::NoTune(8))
+                .arriving_at(SimTime::from_secs(at)),
+        );
+    }
+    cfg
+}
+
+fn assert_fair(out: &FleetOutcome, label: &str) {
+    assert!(out.completed, "{label}: both flows must finish");
+    let j = out.jain_fairness();
+    assert!(
+        j >= 0.95,
+        "{label}: staggered flows must converge to fair shares, Jain {j:.4}"
+    );
+    // Fairness must come from actual sharing, not from the flows taking
+    // turns: the runs overlap for almost their whole lifetime.
+    let first_out = out
+        .tenants
+        .iter()
+        .map(|t| t.finished_at.unwrap().as_secs())
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        first_out > 0.5 * out.duration.as_secs(),
+        "{label}: flows must overlap, first finished at {first_out:.0} s \
+         of a {} run",
+        out.duration
+    );
+}
+
+#[test]
+fn staggered_flows_converge_on_a_quiet_link() {
+    for aimd in [false, true] {
+        let out = run_fleet(&staggered_cfg(aimd, None, 5));
+        assert_fair(&out, &format!("quiet/aimd={aimd}"));
+    }
+}
+
+#[test]
+fn staggered_flows_converge_under_cross_traffic() {
+    let cross = CrossTrafficConfig {
+        udp_fraction: 0.1,
+        tcp_rate_per_sec: 0.3,
+        tcp_burst_bytes: 20e6,
+        tcp_burst_secs: 1.0,
+    };
+    for aimd in [false, true] {
+        let out = run_fleet(&staggered_cfg(aimd, Some(cross), 5));
+        assert_fair(&out, &format!("contended/aimd={aimd}"));
+    }
+}
+
+#[test]
+fn the_joiner_costs_the_incumbent_real_bandwidth() {
+    // Convergence to a fair share has to mean the incumbent slowed
+    // down: against a solo run of the same transfer, sharing the
+    // bottleneck must push its finish time out substantially.
+    let solo = {
+        let mut cfg = FleetConfig::new(testbeds::cloudlab(), Some(FleetPolicyKind::FairShare))
+            .with_seed(5);
+        cfg.tenants.push(TenantSpec::new(
+            "incumbent",
+            standard::large_dataset(5),
+            AlgorithmKind::NoTune(8),
+        ));
+        run_fleet(&cfg)
+    };
+    let shared = run_fleet(&staggered_cfg(false, None, 5));
+    let solo_finish = solo.tenants[0].finished_at.unwrap().as_secs();
+    let shared_finish = shared
+        .tenants
+        .iter()
+        .find(|t| t.name == "incumbent")
+        .unwrap()
+        .finished_at
+        .unwrap()
+        .as_secs();
+    assert!(
+        shared_finish > 1.5 * solo_finish,
+        "the incumbent must cede bandwidth: solo {solo_finish:.0} s vs \
+         shared {shared_finish:.0} s"
+    );
+}
+
+#[test]
+fn aimd_changes_the_trajectory_but_not_the_fairness() {
+    // The two FSMs are genuinely different dynamics — same workload,
+    // different bits — yet both land at the fair split. (The AIMD-off
+    // path being bit-identical to the pre-AIMD engine is pinned in the
+    // stepper_equivalence suite.)
+    let hold = run_fleet(&staggered_cfg(false, None, 7));
+    let aimd = run_fleet(&staggered_cfg(true, None, 7));
+    assert_fair(&hold, "trajectory/hold");
+    assert_fair(&aimd, "trajectory/aimd");
+    assert_ne!(
+        hold.duration.as_secs().to_bits(),
+        aimd.duration.as_secs().to_bits(),
+        "AIMD must actually change the window dynamics"
+    );
+}
+
+#[test]
+fn contended_fairness_is_seed_reproducible() {
+    // The generators are the only stochastic input; the whole fairness
+    // figure must be a pure function of the seed.
+    let cross = CrossTrafficConfig {
+        udp_fraction: 0.1,
+        tcp_rate_per_sec: 0.3,
+        tcp_burst_bytes: 20e6,
+        tcp_burst_secs: 1.0,
+    };
+    let a = run_fleet(&staggered_cfg(true, Some(cross), 11));
+    let b = run_fleet(&staggered_cfg(true, Some(cross), 11));
+    assert_eq!(a.jain_fairness().to_bits(), b.jain_fairness().to_bits());
+    assert_eq!(a.duration.as_secs().to_bits(), b.duration.as_secs().to_bits());
+}

@@ -18,7 +18,7 @@
 use greendt::config::testbeds;
 use greendt::coordinator::{AlgorithmKind, FleetPolicyKind, PlacementKind};
 use greendt::dataset::standard;
-use greendt::netsim::BandwidthEvent;
+use greendt::netsim::{BandwidthEvent, CrossTrafficConfig};
 use greendt::rebalance::{RebalanceConfig, RebalancePolicyKind};
 use greendt::sim::dispatcher::{
     run_dispatcher, DispatchOutcome, DispatcherConfig, HostSpec, SessionSpec,
@@ -222,6 +222,77 @@ fn constant_bg_fleet_warm_batching_bit_identical() {
         let naive = run_fleet(&mk(true));
         assert!(naive.completed, "reference fleet must finish");
         assert_fleet_outcomes_identical(&fast, &naive, &format!("constant-bg/seed{seed}"));
+    }
+}
+
+/// The contended-path scenarios share one generator shape: a 10% UDP
+/// floor plus ~0.3 bursts/s of 20 MB TCP flows.
+fn cross() -> CrossTrafficConfig {
+    CrossTrafficConfig {
+        udp_fraction: 0.1,
+        tcp_rate_per_sec: 0.3,
+        tcp_burst_bytes: 20e6,
+        tcp_burst_secs: 1.0,
+    }
+}
+
+#[test]
+fn contended_fleet_bit_identical_to_reference() {
+    // Cross-traffic keeps the link un-frozen, so warm batching never
+    // engages — but the epoch *cache* still does (the allocator re-reads
+    // the link budget every tick), and under AIMD even that is held off
+    // because every stream stays "unstable". Both modes must replay the
+    // naive per-tick reference exactly.
+    for aimd in [false, true] {
+        let mk = |reference: bool| {
+            fleet_cfg(FleetPolicyKind::MinEnergyFleet, 5, false, reference)
+                .with_cross_traffic(cross())
+                .with_aimd(aimd)
+        };
+        let fast = run_fleet(&mk(false));
+        let naive = run_fleet(&mk(true));
+        assert!(naive.completed, "contended reference fleet must finish");
+        assert_fleet_outcomes_identical(&fast, &naive, &format!("contended/aimd={aimd}"));
+    }
+}
+
+#[test]
+fn cross_traffic_off_is_the_quiet_path_bit_for_bit() {
+    // `--cross-traffic off` parses to `None`; a config routed through
+    // that spelling must be indistinguishable from one that never
+    // mentioned the flag — the quiet engine's bits are the contract.
+    assert_eq!(CrossTrafficConfig::parse("off").unwrap(), None);
+    let mk = |spell_it_out: bool| {
+        let mut cfg = fleet_cfg(FleetPolicyKind::FairShare, 9, false, false);
+        if spell_it_out {
+            cfg.cross_traffic = CrossTrafficConfig::parse("off").unwrap();
+            cfg.aimd = false;
+        }
+        cfg
+    };
+    let spelled = run_fleet(&mk(true));
+    let default = run_fleet(&mk(false));
+    assert_fleet_outcomes_identical(&spelled, &default, "cross-traffic-off");
+}
+
+#[test]
+fn contended_dispatcher_invariant_to_shard_count() {
+    // Shard-count invariance must survive the contended path: each
+    // host's generators are seeded from its own host_seed, so the
+    // partition of hosts onto worker threads may not leak into any
+    // outcome or record.
+    let mk = |shards: usize| {
+        sharded_cfg(shards, false).with_cross_traffic(cross()).with_aimd(true)
+    };
+    let reference = run_dispatcher(&mk(1));
+    assert!(reference.fleet.completed, "contended serial run must finish");
+    for shards in [2usize, 8] {
+        let sharded = run_dispatcher(&mk(shards));
+        assert_dispatch_outcomes_identical(
+            &reference,
+            &sharded,
+            &format!("contended/{shards}-shard"),
+        );
     }
 }
 
