@@ -73,16 +73,26 @@ impl HotpathReport {
     }
 
     /// The machine-readable report (the `BENCH_hotpath.json` schema).
+    /// `histograms` carries the full per-iteration cost distribution of
+    /// every micro bench (log2 buckets, exact p50/p99) so a perf
+    /// trajectory can distinguish a shifted median from a fat tail.
     pub fn to_json(&self) -> String {
         let micro: Vec<String> = self.micro.iter().map(|r| r.to_json()).collect();
+        let hists: Vec<String> = self
+            .micro
+            .iter()
+            .map(|r| format!("\"{}\": {}", json_escape(&r.name), r.hist.to_json()))
+            .collect();
         format!(
             "{{\n  \"bench\": \"hotpath\",\n  \"case\": \"{}\",\n  \"measured\": true,\n  \
-             \"reference\": {},\n  \"epoch\": {},\n  \"speedup\": {},\n  \"micro\": [{}]\n}}\n",
+             \"reference\": {},\n  \"epoch\": {},\n  \"speedup\": {},\n  \"micro\": [{}],\n  \
+             \"histograms\": {{{}}}\n}}\n",
             json_escape(HEADLINE_CASE),
             self.reference.to_json(),
             self.epoch.to_json(),
             json_f64(self.speedup()),
-            micro.join(", ")
+            micro.join(", "),
+            hists.join(", ")
         )
     }
 
@@ -234,5 +244,20 @@ mod tests {
         assert!(j.contains("\"bench\": \"hotpath\""));
         assert!(j.contains("\"speedup\": 4"));
         assert!(j.contains("\"micro\": []"));
+        assert!(j.contains("\"histograms\": {}"));
+    }
+
+    #[test]
+    fn histograms_section_carries_percentiles() {
+        let rate = SessionRate { sim_seconds: 10.0, wall_seconds: 1.0 };
+        let report = HotpathReport {
+            micro: vec![super::super::bench("step/quick", 0, 8, || 1 + 1)],
+            reference: rate,
+            epoch: rate,
+        };
+        let j = report.to_json();
+        assert!(j.contains("\"step/quick\": {\"count\":8"), "{j}");
+        assert!(j.contains("\"p99\":"), "{j}");
+        assert!(j.contains("\"buckets\":[["), "{j}");
     }
 }

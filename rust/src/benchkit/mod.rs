@@ -10,6 +10,7 @@ pub mod resilience;
 pub mod scale;
 
 use crate::metrics::Summary;
+use crate::obs::Histogram;
 use std::time::Instant;
 
 /// One benchmark result.
@@ -19,6 +20,9 @@ pub struct BenchReport {
     pub name: String,
     /// Timing summary over the samples.
     pub summary: Summary,
+    /// Exact-percentile histogram over the same samples — feeds the
+    /// `histograms` section of `BENCH_*.json` (log2 buckets + p50/p99).
+    pub hist: Histogram,
 }
 
 impl BenchReport {
@@ -77,12 +81,15 @@ pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -
         std::hint::black_box(f());
     }
     let mut samples = Vec::with_capacity(iters as usize);
+    let mut hist = Histogram::default();
     for _ in 0..iters {
         let t0 = Instant::now();
         std::hint::black_box(f());
-        samples.push(t0.elapsed().as_secs_f64());
+        let dt = t0.elapsed().as_secs_f64();
+        samples.push(dt);
+        hist.record(dt);
     }
-    let report = BenchReport { name: name.to_string(), summary: Summary::of(&samples) };
+    let report = BenchReport { name: name.to_string(), summary: Summary::of(&samples), hist };
     report.print();
     report
 }
@@ -105,6 +112,8 @@ mod tests {
         let r = bench("noop", 2, 16, || 1 + 1);
         assert_eq!(r.summary.n, 16);
         assert!(r.summary.mean >= 0.0);
+        assert_eq!(r.hist.count(), 16);
+        assert!(r.hist.percentile(0.99).is_some());
     }
 
     #[test]

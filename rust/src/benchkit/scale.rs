@@ -42,19 +42,24 @@ pub struct ScalePoint {
     pub shards: usize,
     /// Measured simulated-time throughput.
     pub rate: SessionRate,
+    /// Warm-batched share of all advanced ticks for this run (the
+    /// stepper occupancy carve-out: legitimately shard-sensitive, so
+    /// every shard count reports its own figure).
+    pub warm_hit_rate: Option<f64>,
 }
 
 impl ScalePoint {
     fn to_json(self) -> String {
         format!(
             "{{\"hosts\":{},\"sessions\":{},\"shards\":{},\"sim_seconds\":{},\
-             \"wall_seconds\":{},\"sim_seconds_per_wall_second\":{}}}",
+             \"wall_seconds\":{},\"sim_seconds_per_wall_second\":{},\"warm_hit_rate\":{}}}",
             self.hosts,
             self.sessions,
             self.shards,
             json_f64(self.rate.sim_seconds),
             json_f64(self.rate.wall_seconds),
-            json_f64(self.rate.sim_seconds_per_wall_second())
+            json_f64(self.rate.sim_seconds_per_wall_second()),
+            self.warm_hit_rate.map(json_f64).unwrap_or_else(|| "null".to_string())
         )
     }
 }
@@ -66,6 +71,10 @@ pub struct ScaleReport {
     pub smoke: bool,
     /// Every `(hosts, sessions, shards)` run, in execution order.
     pub points: Vec<ScalePoint>,
+    /// Fleet metrics of the last run (the largest grid point at 8
+    /// shards) — its registry histograms (segment goodput/watts, queue
+    /// wait) become the report's `histograms` section.
+    pub metrics: Option<crate::obs::FleetMetrics>,
 }
 
 impl ScaleReport {
@@ -96,12 +105,19 @@ impl ScaleReport {
     /// The machine-readable report (the `BENCH_scale.json` schema).
     pub fn to_json(&self) -> String {
         let grid: Vec<String> = self.points.iter().map(|p| p.to_json()).collect();
+        let hists = self
+            .metrics
+            .as_ref()
+            .map(|m| m.registry.histograms_json())
+            .unwrap_or_else(|| "{}".to_string());
         format!(
             "{{\n  \"bench\": \"scale\",\n  \"measured\": true,\n  \"smoke\": {},\n  \
-             \"shard_sweep\": [1, 2, 8],\n  \"speedup_8v1\": {},\n  \"grid\": [\n    {}\n  ]\n}}\n",
+             \"shard_sweep\": [1, 2, 8],\n  \"speedup_8v1\": {},\n  \"grid\": [\n    {}\n  ],\n  \
+             \"histograms\": {}\n}}\n",
             self.smoke,
             json_f64(self.speedup_8v1()),
-            grid.join(",\n    ")
+            grid.join(",\n    "),
+            hists
         )
     }
 
@@ -151,6 +167,10 @@ fn scale_cfg(hosts: usize, sessions: usize, shards: usize, smoke: bool) -> Dispa
         .with_constant_bg();
     cfg.policy = FleetPolicyKind::MinEnergyFleet;
     cfg.max_sim_time = SimDuration::from_secs(28_800.0);
+    // Metrics ride the measured runs: collection is segment-boundary
+    // only, so the overhead is invisible next to tick stepping, and it
+    // buys the warm-batch hit rate + segment histograms for the report.
+    cfg.metrics = true;
     cfg
 }
 
@@ -188,6 +208,7 @@ pub fn run(smoke: bool) -> ScaleReport {
         &[(10, 1_000), (100, 10_000), (1_000, 100_000)]
     };
     let mut points = Vec::new();
+    let mut last_metrics = None;
     for &(hosts, sessions) in grid {
         let mut serial: Option<DispatchOutcome> = None;
         for shards in SHARD_SWEEP {
@@ -209,12 +230,17 @@ pub fn run(smoke: bool) -> ScaleReport {
                     sim_seconds: out.fleet.duration.as_secs(),
                     wall_seconds: wall,
                 },
+                warm_hit_rate: out.metrics.as_ref().and_then(|m| m.warm_hit_rate()),
             });
+            last_metrics = out.metrics;
         }
         println!();
     }
-    let report = ScaleReport { smoke, points };
+    let report = ScaleReport { smoke, points, metrics: last_metrics };
     println!("  speedup (8 shards vs 1, largest point): {:.2}x", report.speedup_8v1());
+    if let Some(warm) = report.points.last().and_then(|p| p.warm_hit_rate) {
+        println!("  warm-batch hit rate (largest point, 8 shards): {:.1}%", warm * 100.0);
+    }
     report
 }
 
@@ -228,6 +254,7 @@ mod tests {
             sessions,
             shards,
             rate: SessionRate { sim_seconds: rate, wall_seconds: 1.0 },
+            warm_hit_rate: Some(0.75),
         }
     }
 
@@ -241,21 +268,26 @@ mod tests {
                 point(16, 64, 1, 100.0),
                 point(16, 64, 8, 600.0), // 6x on the largest — this wins
             ],
+            metrics: None,
         };
         assert!((report.speedup_8v1() - 6.0).abs() < 1e-9);
     }
 
     #[test]
     fn speedup_without_pairs_is_zero() {
-        let report = ScaleReport { smoke: true, points: vec![point(4, 16, 2, 100.0)] };
+        let report =
+            ScaleReport { smoke: true, points: vec![point(4, 16, 2, 100.0)], metrics: None };
         assert_eq!(report.speedup_8v1(), 0.0);
     }
 
     #[test]
     fn report_json_shape() {
+        let mut metrics = crate::obs::FleetMetrics::default();
+        metrics.registry.record("goodput.segment_bps", 1e9);
         let report = ScaleReport {
             smoke: false,
             points: vec![point(4, 16, 1, 100.0), point(4, 16, 8, 500.0)],
+            metrics: Some(metrics),
         };
         let j = report.to_json();
         assert!(j.contains("\"bench\": \"scale\""));
@@ -264,6 +296,8 @@ mod tests {
         assert!(j.contains("\"speedup_8v1\": 5"));
         assert!(j.contains("\"hosts\":4"));
         assert!(j.contains("\"shards\":8"));
+        assert!(j.contains("\"warm_hit_rate\":0.75"));
+        assert!(j.contains("\"histograms\": {\"goodput.segment_bps\":{\"count\":1"), "{j}");
     }
 
     #[test]

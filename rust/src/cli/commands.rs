@@ -96,6 +96,22 @@ COMMANDS:
              --retry-budget <N>    host failures one session may survive
                                    before dead-letter quarantine (default 3;
                                    only meaningful with --resilience on)
+             --trace <FILE>        write lifecycle spans + decision events
+                                   (admission, placement scores, migrations,
+                                   retries, faults) to FILE; off-path runs
+                                   are bit-identical to runs without it
+             --trace-format jsonl|chrome   trace encoding (default jsonl;
+                                   chrome = trace_event JSON, loadable in
+                                   Perfetto / chrome://tracing)
+             --metrics <FILE>      write the fleet metrics registry
+                                   (counters, gauges, percentile histograms,
+                                   per-segment snapshots) as JSON to FILE
+  trace      Inspect a JSONL trace written by `fleet --trace`
+             summarize <FILE>      per-session rollup + span-duration
+                                   percentile table (default action)
+             sessions <FILE>       list session names in the trace
+             spans <FILE> --session <NAME>   span-tree waterfall for one
+                                   session (omit --session for all)
   history    Inspect or maintain a JSONL history store
              stats --history <F>   record counts + per-host/testbed costs
              query --history <F>   k-NN answer for a workload:
@@ -121,23 +137,29 @@ ENVIRONMENT:
 
 /// Entry point used by `main` (and by CLI tests). Returns the exit code.
 pub fn run(argv: &[String]) -> Result<i32> {
-    let args = ParsedArgs::parse(
-        argv,
-        &[
-            "trace",
-            "no-csv",
-            "server-scaling",
-            "smoke",
-            "price-queue-delay",
-            "constant-bg",
-            "aimd",
-        ],
-    )
-    .map_err(|e| anyhow::anyhow!(e))?;
+    // `--trace` means two different things: for `run`/`session` it is a
+    // bare switch (print the per-timeout timeline); for `fleet` and the
+    // `trace` subcommand it takes a file path. The switch list is
+    // therefore command-dependent, keyed on the first positional.
+    let cmd0 = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let value_trace = matches!(cmd0, "fleet" | "trace");
+    let mut switches: Vec<&str> = vec![
+        "no-csv",
+        "server-scaling",
+        "smoke",
+        "price-queue-delay",
+        "constant-bg",
+        "aimd",
+    ];
+    if !value_trace {
+        switches.push("trace");
+    }
+    let args = ParsedArgs::parse(argv, &switches).map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" | "session" => cmd_run(&args),
         "fleet" => cmd_fleet(&args),
+        "trace" => cmd_trace(&args),
         "history" => cmd_history(&args),
         "sweep" => cmd_sweep(&args),
         "bench" => cmd_bench(&args),
@@ -360,6 +382,9 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<i32> {
         || args.get("retry-budget").is_some()
         || args.has("price-queue-delay")
         || args.has("constant-bg")
+        || args.get("trace").is_some()
+        || args.get("trace-format").is_some()
+        || args.get("metrics").is_some()
     {
         return cmd_fleet_dispatch(args);
     }
@@ -454,6 +479,18 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
     let seed = seed_of(args)?;
     let ds_name = args.get_or("dataset", "medium");
     let kind = parse_algo(args)?;
+
+    // Observability flags are validated before the run so a typo'd
+    // format fails fast instead of after minutes of simulation.
+    let trace_path = args.get("trace");
+    let trace_format = args.get_or("trace-format", "jsonl");
+    if !matches!(trace_format, "jsonl" | "chrome") {
+        bail!("--trace-format expects jsonl|chrome, got '{trace_format}'");
+    }
+    if args.get("trace-format").is_some() && trace_path.is_none() {
+        bail!("--trace-format needs --trace <FILE>");
+    }
+    let metrics_path = args.get("metrics");
 
     // Hosts: `--hosts N` machines, testbeds cycled from the (comma-
     // separated) `--testbed` list — `--testbed cloudlab,didclab` builds a
@@ -590,8 +627,24 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
     cfg.constant_bg = args.has("constant-bg");
     cfg.cross_traffic = parse_cross_traffic(args)?;
     cfg.aimd = args.has("aimd");
+    cfg.trace = trace_path.is_some();
+    cfg.metrics = metrics_path.is_some();
     let out = run_dispatcher(&cfg);
     record_history(args, &out.fleet.run_records, &out.decisions, &out.migrations)?;
+
+    if let (Some(path), Some(records)) = (trace_path, &out.trace) {
+        let text = match trace_format {
+            "chrome" => crate::obs::chrome_trace_json(records),
+            _ => crate::obs::trace_jsonl(records),
+        };
+        std::fs::write(path, text).with_context(|| format!("writing trace to {path}"))?;
+        println!("trace: {} records ({trace_format}) -> {path}", records.len());
+    }
+    if let (Some(path), Some(m)) = (metrics_path, &out.metrics) {
+        std::fs::write(path, m.to_json())
+            .with_context(|| format!("writing metrics to {path}"))?;
+        println!("metrics: {} segment snapshots -> {path}", m.timeline.snapshots.len());
+    }
     let fleet = &out.fleet;
 
     println!(
@@ -736,6 +789,62 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
         println!("  never admitted   : {}", out.unplaced.join(", "));
     }
     Ok(if fleet.completed { 0 } else { 1 })
+}
+
+/// The `greendt trace` subcommand: offline inspection of a JSONL trace
+/// written by `fleet --trace` (`summarize` / `sessions` / `spans`).
+fn cmd_trace(args: &ParsedArgs) -> Result<i32> {
+    use crate::obs::TraceLog;
+
+    // `greendt trace <FILE>` reads as `summarize <FILE>`: a bare path in
+    // the action slot is treated as the file.
+    let mut action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("summarize");
+    let mut path = args.positional.get(2).map(|s| s.as_str());
+    if !matches!(action, "summarize" | "sessions" | "spans") {
+        if path.is_none() && args.positional.len() == 2 {
+            path = Some(action);
+            action = "summarize";
+        } else {
+            bail!("trace expects summarize|sessions|spans <FILE>, got '{action}'");
+        }
+    }
+    let path = path.context("trace commands need a trace file: greendt trace <ACTION> <FILE>")?;
+    let log = TraceLog::load(path)?;
+    if log.skipped > 0 {
+        eprintln!("note: {} unparseable line(s) skipped in {path}", log.skipped);
+    }
+    match action {
+        "sessions" => {
+            for s in log.sessions() {
+                println!("{s}");
+            }
+        }
+        "spans" => {
+            let names = match args.get("session") {
+                Some(one) => vec![one.to_string()],
+                None => log.sessions(),
+            };
+            if names.is_empty() {
+                println!("(no sessions in trace)");
+            }
+            for name in names {
+                let tree = log.tree(&name);
+                if tree.records.is_empty() {
+                    bail!("no records for session '{name}' in {path}");
+                }
+                let status = if tree.connected() { "connected" } else { "DISCONNECTED" };
+                println!("session {name} ({} records, {status})", tree.records.len());
+                print!("{}", tree.waterfall());
+                println!();
+            }
+        }
+        _ => {
+            println!("trace: {path} ({} records)", log.records.len());
+            println!("{}", log.summary_table().to_markdown());
+            println!("{}", log.histogram_table().to_markdown());
+        }
+    }
+    Ok(0)
 }
 
 /// The `greendt history` subcommand: inspect or maintain a JSONL store
@@ -1188,5 +1297,55 @@ mod tests {
         // Destructive prune refuses to guess a budget.
         assert!(run(&argv(&format!("history prune --history {p}"))).is_err());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fleet_trace_and_metrics_write_then_trace_inspects() {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir();
+        let trace = dir.join(format!("greendt_cli_trace_{pid}.jsonl"));
+        let chrome = dir.join(format!("greendt_cli_trace_{pid}.chrome.json"));
+        let metrics = dir.join(format!("greendt_cli_metrics_{pid}.json"));
+        let (tp, cp, mp) =
+            (trace.to_str().unwrap(), chrome.to_str().unwrap(), metrics.to_str().unwrap());
+        let base = "fleet --hosts 2 --tenants 2 --dataset small --spacing 5 --seed 3";
+        assert_eq!(run(&argv(&format!("{base} --trace {tp} --metrics {mp}"))).unwrap(), 0);
+        let text = std::fs::read_to_string(&trace).unwrap();
+        assert!(text.lines().count() > 4, "trace too sparse:\n{text}");
+        assert!(text.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+        let mtext = std::fs::read_to_string(&metrics).unwrap();
+        assert!(mtext.contains("greendt-metrics"), "{mtext}");
+        // The Chrome export is a top-level JSON array of trace events.
+        assert_eq!(
+            run(&argv(&format!("{base} --trace {cp} --trace-format chrome"))).unwrap(),
+            0
+        );
+        let ctext = std::fs::read_to_string(&chrome).unwrap();
+        assert!(ctext.trim_start().starts_with('['), "{ctext}");
+        assert!(ctext.contains("\"ph\":\"X\""), "no complete events: {ctext}");
+        // All three inspection actions run against the JSONL file, and a
+        // bare path defaults to `summarize`.
+        assert_eq!(run(&argv(&format!("trace summarize {tp}"))).unwrap(), 0);
+        assert_eq!(run(&argv(&format!("trace {tp}"))).unwrap(), 0);
+        assert_eq!(run(&argv(&format!("trace sessions {tp}"))).unwrap(), 0);
+        assert_eq!(
+            run(&argv(&format!("trace spans {tp} --session session-0"))).unwrap(),
+            0
+        );
+        let _ = std::fs::remove_file(&trace);
+        let _ = std::fs::remove_file(&chrome);
+        let _ = std::fs::remove_file(&metrics);
+    }
+
+    #[test]
+    fn trace_flag_misuse_is_rejected_up_front() {
+        // Bad formats and a dangling --trace-format fail before any run.
+        assert!(run(&argv("fleet --tenants 2 --trace /tmp/x.jsonl --trace-format svg"))
+            .is_err());
+        assert!(run(&argv("fleet --tenants 2 --trace-format chrome")).is_err());
+        // Unknown trace actions and missing files are errors too.
+        assert!(run(&argv("trace frobnicate /tmp/x.jsonl")).is_err());
+        assert!(run(&argv("trace summarize /nonexistent/greendt.jsonl")).is_err());
+        assert!(run(&argv("trace summarize")).is_err());
     }
 }

@@ -36,6 +36,7 @@ pub mod sim;
 pub mod rebalance;
 pub mod resilience;
 pub mod history;
+pub mod obs;
 pub mod coordinator;
 pub mod baselines;
 pub mod predictor;

@@ -1,9 +1,16 @@
 //! Summary statistics over f64 samples (used by benches and reports).
+//!
+//! Robustness contract (ISSUE 9 satellite): non-finite samples (NaN,
+//! ±inf) are dropped before any arithmetic, sorting uses the IEEE-754
+//! total order (no `partial_cmp().unwrap()` panic path), and callers
+//! who need to distinguish "no usable samples" from real zeros use
+//! [`Summary::try_of`], which returns `None` instead of a zeroed
+//! summary. Every field of a returned summary is finite.
 
 /// Mean / spread / percentile summary of a sample set.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
-    /// Sample count.
+    /// Sample count (finite samples only).
     pub n: usize,
     /// Arithmetic mean.
     pub mean: f64,
@@ -22,17 +29,35 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute a summary. Returns a zeroed summary for an empty slice.
+    /// Compute a summary. Returns a zeroed summary when no finite
+    /// samples remain (empty input, or all-NaN/inf input).
     pub fn of(samples: &[f64]) -> Summary {
-        let n = samples.len();
+        Summary::try_of(samples).unwrap_or(Summary {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            p50: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+            max: 0.0,
+        })
+    }
+
+    /// Compute a summary, or `None` when no finite samples remain.
+    ///
+    /// NaN and infinite inputs are filtered out rather than propagated;
+    /// `n` counts only the samples that survived the filter.
+    pub fn try_of(samples: &[f64]) -> Option<Summary> {
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+        let n = sorted.len();
         if n == 0 {
-            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
+            return None;
         }
-        let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-        Summary {
+        Some(Summary {
             n,
             mean,
             std: var.sqrt(),
@@ -41,7 +66,7 @@ impl Summary {
             p95: percentile(&sorted, 0.95),
             p99: percentile(&sorted, 0.99),
             max: sorted[n - 1],
-        }
+        })
     }
 }
 
@@ -92,5 +117,37 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.p50, 2.0);
         assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn try_of_empty_is_none() {
+        assert_eq!(Summary::try_of(&[]), None);
+    }
+
+    #[test]
+    fn nan_inputs_are_dropped_not_propagated() {
+        let s = Summary::of(&[f64::NAN, 1.0, 2.0, f64::NAN, 3.0]);
+        assert_eq!(s.n, 3, "only finite samples counted");
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert!(s.mean.is_finite() && s.std.is_finite());
+    }
+
+    #[test]
+    fn infinities_are_dropped() {
+        let s = Summary::of(&[f64::INFINITY, 5.0, f64::NEG_INFINITY]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.min, 5.0);
+        assert_eq!(s.max, 5.0);
+        assert!(s.mean.is_finite());
+    }
+
+    #[test]
+    fn all_nan_is_none_not_panic() {
+        assert_eq!(Summary::try_of(&[f64::NAN, f64::NAN]), None);
+        let s = Summary::of(&[f64::NAN]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.p99, 0.0);
     }
 }

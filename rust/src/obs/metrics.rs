@@ -1,0 +1,382 @@
+//! Counters, gauges, percentile histograms and the per-segment
+//! [`MetricsTimeline`].
+//!
+//! The registry is deliberately exact: a [`Histogram`] keeps every
+//! recorded value (plus log2 bucket counts for shape), and percentiles
+//! are computed nearest-rank over a `total_cmp`-sorted copy — so the
+//! reported p50/p95/p99 are insensitive to recording order and contain
+//! no floating-point summation ambiguity. Bucket boundaries come from
+//! the value's IEEE-754 exponent bits (not `log2()`, whose libm
+//! implementation may differ across platforms), keeping the JSON output
+//! bit-deterministic for one `(config, seed, shards)` triple.
+//!
+//! **Shard-sensitivity carve-out.** Everything in here describes the
+//! *simulated* run except the `stepper.*` series (warm-batched vs
+//! slow-path tick occupancy): the warm/slow split is an implementation
+//! detail of the driver — the serial 1-shard loop steps tick-at-a-time
+//! while the sharded path batches warm epochs — so those counters are
+//! deliberately metrics-only (never traced) and are excluded from
+//! shard-invariance comparisons. See ARCHITECTURE §Observability.
+
+use std::collections::BTreeMap;
+
+use crate::history::json;
+
+/// Version written into the metrics JSON document (`"v"`).
+pub const METRICS_FORMAT_VERSION: u32 = 1;
+
+/// An exact-percentile histogram with log2 bucket counts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Histogram {
+    /// Every finite recorded value, in recording order.
+    values: Vec<f64>,
+}
+
+/// Bucket key: IEEE-754 exponent of the value (so the bucket covers
+/// `[2^e, 2^(e+1))`), `i64::MIN` for values ≤ 0 or subnormal.
+fn bucket_exp(x: f64) -> i64 {
+    if x <= 0.0 {
+        return i64::MIN;
+    }
+    let biased = (x.to_bits() >> 52) & 0x7ff;
+    if biased == 0 {
+        return i64::MIN; // subnormal: lump with the ≤0 bucket
+    }
+    biased as i64 - 1023
+}
+
+impl Histogram {
+    /// Record one sample; non-finite values are dropped (counted by
+    /// nothing — NaN must never poison a percentile, see
+    /// `metrics::Summary` for the same policy).
+    pub fn record(&mut self, x: f64) {
+        if x.is_finite() {
+            self.values.push(x);
+        }
+    }
+
+    /// Recorded (finite) sample count.
+    pub fn count(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Smallest recorded value.
+    pub fn min(&self) -> Option<f64> {
+        self.values.iter().copied().min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Largest recorded value.
+    pub fn max(&self) -> Option<f64> {
+        self.values.iter().copied().max_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Arithmetic mean of the recorded values.
+    pub fn mean(&self) -> Option<f64> {
+        if self.values.is_empty() {
+            return None;
+        }
+        Some(self.values.iter().sum::<f64>() / self.values.len() as f64)
+    }
+
+    /// Exact nearest-rank percentile (`q` in `[0, 1]`) over a
+    /// `total_cmp`-sorted copy; `None` when empty.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if self.values.is_empty() {
+            return None;
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len());
+        Some(sorted[idx - 1])
+    }
+
+    /// Log2 bucket counts as `(upper_bound, count)` pairs, ascending.
+    /// The bucket for values ≤ 0 reports an upper bound of 0.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        let mut counts: BTreeMap<i64, u64> = BTreeMap::new();
+        for &x in &self.values {
+            *counts.entry(bucket_exp(x)).or_insert(0) += 1;
+        }
+        counts
+            .into_iter()
+            .map(|(e, n)| {
+                let hi = if e == i64::MIN { 0.0 } else { 2f64.powi((e + 1) as i32) };
+                (hi, n)
+            })
+            .collect()
+    }
+
+    /// One JSON object: count, min/mean/max, exact p50/p95/p99 and the
+    /// log2 buckets (`[[upper_bound, count], …]`).
+    pub fn to_json(&self) -> String {
+        let opt = |v: Option<f64>| v.map(json::num).unwrap_or_else(|| "null".to_string());
+        let buckets: Vec<String> = self
+            .buckets()
+            .iter()
+            .map(|(hi, n)| format!("[{},{}]", json::num(*hi), n))
+            .collect();
+        format!(
+            "{{\"count\":{},\"min\":{},\"mean\":{},\"p50\":{},\"p95\":{},\"p99\":{},\
+             \"max\":{},\"buckets\":[{}]}}",
+            self.count(),
+            opt(self.min()),
+            opt(self.mean()),
+            opt(self.percentile(0.50)),
+            opt(self.percentile(0.95)),
+            opt(self.percentile(0.99)),
+            opt(self.max()),
+            buckets.join(",")
+        )
+    }
+}
+
+/// Named counters, gauges and histograms (`BTreeMap`s keep every JSON
+/// rendering deterministically key-ordered).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to counter `name` (created at 0).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Current value of counter `name` (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set gauge `name` to `v` (last write wins).
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Current value of gauge `name`.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record one sample into histogram `name` (created empty).
+    pub fn record(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    /// Histogram `name`, if any samples were ever recorded into it.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Iterate histograms in name order.
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.histograms.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// The `"histograms"` JSON object alone (embedded by `BENCH_*.json`
+    /// reports as well as the full metrics document).
+    pub fn histograms_json(&self) -> String {
+        let entries: Vec<String> = self
+            .histograms
+            .iter()
+            .map(|(k, h)| format!("\"{}\":{}", json::escape(k), h.to_json()))
+            .collect();
+        format!("{{{}}}", entries.join(","))
+    }
+
+    /// The full registry as one JSON object.
+    pub fn to_json(&self) -> String {
+        let counters: Vec<String> = self
+            .counters
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{}", json::escape(k), v))
+            .collect();
+        let gauges: Vec<String> = self
+            .gauges
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{}", json::escape(k), json::num(*v)))
+            .collect();
+        format!(
+            "{{\"counters\":{{{}}},\"gauges\":{{{}}},\"histograms\":{}}}",
+            counters.join(","),
+            gauges.join(","),
+            self.histograms_json()
+        )
+    }
+}
+
+/// One fleet-level snapshot, taken at a dispatcher segment boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentSnapshot {
+    /// Simulated time of the boundary, seconds.
+    pub t_secs: f64,
+    /// Sessions actively transferring across the fleet.
+    pub active_sessions: u64,
+    /// Sessions waiting in the admission queue (FIFO + deferred).
+    pub queued: u64,
+    /// Fleet goodput over the segment: Δbytes / Δt.
+    pub goodput_bps: f64,
+    /// Fleet client power over the segment: Δjoules / Δt.
+    pub watts: f64,
+    /// Ticks the segment advanced through warm-epoch batching
+    /// (shard-sensitive — see the module docs).
+    pub warm_ticks: u64,
+    /// Ticks the segment advanced one at a time on the slow path.
+    pub slow_ticks: u64,
+}
+
+impl SegmentSnapshot {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"t\":{},\"active\":{},\"queued\":{},\"goodput_bps\":{},\"watts\":{},\
+             \"warm_ticks\":{},\"slow_ticks\":{}}}",
+            json::num(self.t_secs),
+            self.active_sessions,
+            self.queued,
+            json::num(self.goodput_bps),
+            json::num(self.watts),
+            self.warm_ticks,
+            self.slow_ticks
+        )
+    }
+}
+
+/// The per-segment snapshot series.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsTimeline {
+    /// Snapshots in boundary order.
+    pub snapshots: Vec<SegmentSnapshot>,
+}
+
+/// Everything `--metrics` collects: the registry plus the timeline.
+#[derive(Debug, Clone, Default)]
+pub struct FleetMetrics {
+    /// Counters, gauges and histograms.
+    pub registry: MetricsRegistry,
+    /// Per-segment fleet snapshots.
+    pub timeline: MetricsTimeline,
+}
+
+impl FleetMetrics {
+    /// Warm-batched share of all advanced ticks (`None` before any tick).
+    pub fn warm_hit_rate(&self) -> Option<f64> {
+        let warm = self.registry.counter("stepper.warm_ticks");
+        let slow = self.registry.counter("stepper.slow_ticks");
+        let total = warm + slow;
+        if total == 0 {
+            return None;
+        }
+        Some(warm as f64 / total as f64)
+    }
+
+    /// The versioned metrics JSON document (`greendt fleet --metrics`).
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> =
+            self.timeline.snapshots.iter().map(SegmentSnapshot::to_json).collect();
+        format!(
+            "{{\n  \"v\": {},\n  \"kind\": \"greendt-metrics\",\n  \"registry\": {},\n  \
+             \"timeline\": [\n    {}\n  ]\n}}\n",
+            METRICS_FORMAT_VERSION,
+            self.registry.to_json(),
+            rows.join(",\n    ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_all_none() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.5), None);
+        assert_eq!(h.min(), None);
+        assert_eq!(h.mean(), None);
+        assert!(h.to_json().contains("\"p50\":null"));
+    }
+
+    #[test]
+    fn nan_and_infinity_are_dropped() {
+        let mut h = Histogram::default();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(3.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(0.99), Some(3.0));
+    }
+
+    #[test]
+    fn percentiles_are_exact_and_order_insensitive() {
+        let mut fwd = Histogram::default();
+        let mut rev = Histogram::default();
+        for i in 1..=100 {
+            fwd.record(i as f64);
+            rev.record((101 - i) as f64);
+        }
+        assert_eq!(fwd.percentile(0.5), Some(50.0));
+        assert_eq!(fwd.percentile(0.95), Some(95.0));
+        assert_eq!(fwd.percentile(0.99), Some(99.0));
+        assert_eq!(fwd.to_json(), rev.to_json(), "recording order must not matter");
+    }
+
+    #[test]
+    fn buckets_are_log2_with_a_nonpositive_bucket() {
+        let mut h = Histogram::default();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(1.5); // [1, 2)
+        h.record(3.0); // [2, 4)
+        h.record(3.9); // [2, 4)
+        let b = h.buckets();
+        assert_eq!(b, vec![(0.0, 2), (2.0, 1), (4.0, 2)]);
+    }
+
+    #[test]
+    fn registry_counts_and_records() {
+        let mut r = MetricsRegistry::new();
+        r.inc("sessions.admitted", 1);
+        r.inc("sessions.admitted", 2);
+        r.set_gauge("fleet.hosts", 4.0);
+        r.record("queue.wait_s", 1.0);
+        r.record("queue.wait_s", 9.0);
+        assert_eq!(r.counter("sessions.admitted"), 3);
+        assert_eq!(r.counter("never"), 0);
+        assert_eq!(r.gauge("fleet.hosts"), Some(4.0));
+        assert_eq!(r.histogram("queue.wait_s").unwrap().count(), 2);
+        let j = r.to_json();
+        assert!(j.contains("\"sessions.admitted\":3"));
+        assert!(j.contains("\"queue.wait_s\""));
+        assert!(crate::history::json::parse(&j).is_some(), "registry JSON parses: {j}");
+    }
+
+    #[test]
+    fn fleet_metrics_document_parses_and_reports_hit_rate() {
+        let mut m = FleetMetrics::default();
+        assert_eq!(m.warm_hit_rate(), None);
+        m.registry.inc("stepper.warm_ticks", 30);
+        m.registry.inc("stepper.slow_ticks", 10);
+        m.timeline.snapshots.push(SegmentSnapshot {
+            t_secs: 3.0,
+            active_sessions: 2,
+            queued: 1,
+            goodput_bps: 1e8,
+            watts: 40.0,
+            warm_ticks: 30,
+            slow_ticks: 10,
+        });
+        assert_eq!(m.warm_hit_rate(), Some(0.75));
+        let doc = m.to_json();
+        assert!(crate::history::json::parse(&doc).is_some(), "metrics JSON parses: {doc}");
+        assert!(doc.contains("\"kind\": \"greendt-metrics\""));
+        assert!(doc.contains("\"warm_ticks\":30"));
+    }
+}

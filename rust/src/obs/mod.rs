@@ -1,0 +1,43 @@
+//! Deterministic, zero-dependency observability: lifecycle spans,
+//! decision events, counters and percentile histograms (ISSUE 9).
+//!
+//! The paper's algorithms live on runtime measurements — throughput
+//! deltas, power draw, tuning reactions per monitoring interval — yet
+//! until this subsystem the reproduction only reported end-of-run
+//! aggregates. `obs` adds the missing substrate in three pieces:
+//!
+//! * **[`trace`]** — sim-clock spans (`session` → `admit` residencies,
+//!   `slow_start`, `migrate`, `penalty_box`) and instant decision events
+//!   (`tune`, `placement`/`placement_score`, `rebalance_proposal`
+//!   including rejected candidates, `cap_event`, `fault`, `retry`,
+//!   `complete`/`dead_letter`) with parent links, versioned JSONL
+//!   serialization and a Chrome `trace_event` export for Perfetto;
+//! * **[`metrics`]** — counters, gauges and exact-percentile log2-bucket
+//!   histograms, snapshotted per dispatcher segment into a
+//!   [`MetricsTimeline`];
+//! * **[`summarize`]** — the read side: parse a trace back, rebuild
+//!   per-session span trees, check connectivity, render waterfalls and
+//!   histogram tables (the `greendt trace` CLI).
+//!
+//! The governing constraint is *determinism preservation*: tracing off
+//! is bit-identical to an untraced run (every hook is a pure read behind
+//! an `Option`), and trace bytes are bit-identical across `--shards`
+//! 1/2/8 (emission only at segment boundaries, per-host buffers merged
+//! in host-index order — the PR-6 lockstep discipline). The one
+//! deliberately shard-*sensitive* series, warm/slow stepper occupancy,
+//! lives in metrics only — see [`metrics`]'s module docs. Pinned by
+//! `rust/tests/trace_determinism.rs`.
+
+pub mod metrics;
+pub mod summarize;
+pub mod trace;
+
+pub use metrics::{
+    FleetMetrics, Histogram, MetricsRegistry, MetricsTimeline, SegmentSnapshot,
+    METRICS_FORMAT_VERSION,
+};
+pub use summarize::{SessionTree, TraceLog};
+pub use trace::{
+    chrome_trace_json, trace_jsonl, AttrValue, TraceBuf, TraceRecord, TraceSink,
+    TRACE_FORMAT_VERSION,
+};

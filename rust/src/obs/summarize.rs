@@ -1,0 +1,318 @@
+//! Trace reading: parse a JSONL trace back, rebuild per-session span
+//! trees, and render waterfalls and histogram tables.
+//!
+//! This is the read side of the `greendt trace` CLI (`summarize` /
+//! `sessions` / `spans`) and of `examples/fleet_trace.rs`. Loading is
+//! forgiving in the history-store tradition: unparseable lines are
+//! counted in [`TraceLog::skipped`], never fatal.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::metrics::Histogram;
+use super::trace::TraceRecord;
+use crate::history::json;
+use crate::metrics::Table;
+
+/// A parsed trace file.
+#[derive(Debug, Clone, Default)]
+pub struct TraceLog {
+    /// Every parsed record, in file order.
+    pub records: Vec<TraceRecord>,
+    /// Lines that failed to parse (unknown version/kind, syntax).
+    pub skipped: usize,
+}
+
+impl TraceLog {
+    /// Parse trace JSONL text (blank lines ignored, bad lines counted).
+    pub fn parse(text: &str) -> TraceLog {
+        let mut log = TraceLog::default();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            match json::parse(line).as_ref().and_then(TraceRecord::from_json) {
+                Some(r) => log.records.push(r),
+                None => log.skipped += 1,
+            }
+        }
+        log
+    }
+
+    /// Load and parse the trace file at `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<TraceLog> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Ok(TraceLog::parse(&text))
+    }
+
+    /// Session names present in the log, sorted and deduplicated.
+    pub fn sessions(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.records.iter().filter_map(|r| r.session.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Every record attributed to `session`, in file order.
+    pub fn session_records(&self, session: &str) -> Vec<&TraceRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.session.as_deref() == Some(session))
+            .collect()
+    }
+
+    /// Rebuild the span tree for one session.
+    pub fn tree(&self, session: &str) -> SessionTree {
+        let records: Vec<TraceRecord> =
+            self.session_records(session).into_iter().cloned().collect();
+        let root = records.iter().find(|r| r.name == "session").cloned();
+        SessionTree { session: session.to_string(), root, records }
+    }
+
+    /// Per-session roll-up table: residencies, lifecycle events, bytes
+    /// and joules summed over ended residencies, and how the session
+    /// ended.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(
+            "sessions",
+            &["session", "spans", "events", "residencies", "moved", "joules", "end"],
+        );
+        for name in self.sessions() {
+            let recs = self.session_records(&name);
+            let spans = recs.iter().filter(|r| r.is_span()).count();
+            let events = recs.iter().filter(|r| !r.is_span()).count();
+            let residencies: Vec<&&TraceRecord> =
+                recs.iter().filter(|r| r.name == "admit").collect();
+            let moved: f64 =
+                residencies.iter().filter_map(|r| r.attr_f64("moved_bytes")).sum();
+            let joules: f64 =
+                residencies.iter().filter_map(|r| r.attr_f64("attributed_j")).sum();
+            let end = if recs.iter().any(|r| r.name == "dead_letter") {
+                "dead_letter"
+            } else if recs.iter().any(|r| r.name == "complete") {
+                "complete"
+            } else {
+                "open"
+            };
+            t.push_row(vec![
+                name,
+                spans.to_string(),
+                events.to_string(),
+                residencies.len().to_string(),
+                format!("{:.2e} B", moved),
+                format!("{:.1} J", joules),
+                end.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Span-duration histogram table: one row per span name with exact
+    /// p50/p95/p99 over the recorded durations.
+    pub fn histogram_table(&self) -> Table {
+        let mut by_name: BTreeMap<String, Histogram> = BTreeMap::new();
+        for r in &self.records {
+            if let Some(d) = r.duration_secs() {
+                by_name.entry(r.name.clone()).or_default().record(d);
+            }
+        }
+        let mut t = Table::new(
+            "span durations (seconds)",
+            &["span", "count", "min", "p50", "p95", "p99", "max"],
+        );
+        let cell = |v: Option<f64>| match v {
+            Some(x) => format!("{x:.2}"),
+            None => "-".to_string(),
+        };
+        for (name, h) in &by_name {
+            t.push_row(vec![
+                name.clone(),
+                h.count().to_string(),
+                cell(h.min()),
+                cell(h.percentile(0.50)),
+                cell(h.percentile(0.95)),
+                cell(h.percentile(0.99)),
+                cell(h.max()),
+            ]);
+        }
+        t
+    }
+}
+
+/// One session's records, rooted at its `session` span.
+#[derive(Debug, Clone)]
+pub struct SessionTree {
+    /// The session name.
+    pub session: String,
+    /// The root `session` span, when the log carries one.
+    pub root: Option<TraceRecord>,
+    /// Every record of the session, in file order (root included).
+    pub records: Vec<TraceRecord>,
+}
+
+impl SessionTree {
+    /// True when every record is reachable from the root via parent
+    /// links — the "single connected span tree" acceptance property.
+    pub fn connected(&self) -> bool {
+        let Some(root) = &self.root else {
+            return false;
+        };
+        let ids: BTreeMap<u64, Option<u64>> =
+            self.records.iter().map(|r| (r.id, r.parent)).collect();
+        self.records.iter().all(|r| {
+            let mut cur = r.id;
+            // Walk up; bounded by the record count to survive cycles.
+            for _ in 0..=self.records.len() {
+                if cur == root.id {
+                    return true;
+                }
+                match ids.get(&cur).copied().flatten() {
+                    Some(p) => cur = p,
+                    None => return false,
+                }
+            }
+            false
+        })
+    }
+
+    /// Direct children of record `id`, sorted by `(t0, id)`.
+    pub fn children(&self, id: u64) -> Vec<&TraceRecord> {
+        let mut out: Vec<&TraceRecord> =
+            self.records.iter().filter(|r| r.parent == Some(id)).collect();
+        out.sort_by(|a, b| a.t0_secs.total_cmp(&b.t0_secs).then(a.id.cmp(&b.id)));
+        out
+    }
+
+    /// Render the tree as an indented text waterfall: spans as
+    /// `[t0 .. t1]` intervals, events as `@t` instants, with hosts and
+    /// key attributes inline.
+    pub fn waterfall(&self) -> String {
+        let mut out = String::new();
+        match &self.root {
+            Some(root) => {
+                let root = root.clone();
+                self.render(&root, 0, &mut out);
+            }
+            None => out.push_str(&format!("(no session root span for '{}')\n", self.session)),
+        }
+        out
+    }
+
+    fn render(&self, r: &TraceRecord, depth: usize, out: &mut String) {
+        let indent = "  ".repeat(depth);
+        let host = r.host.as_deref().map(|h| format!(" on {h}")).unwrap_or_default();
+        let attrs: Vec<String> = r
+            .attrs
+            .iter()
+            .map(|(k, v)| match v.as_f64() {
+                Some(x) => format!("{k}={x:.4}"),
+                None => format!("{k}={}", v.as_str().unwrap_or("?")),
+            })
+            .collect();
+        let attrs =
+            if attrs.is_empty() { String::new() } else { format!("  ({})", attrs.join(", ")) };
+        match r.t1_secs {
+            Some(t1) => out.push_str(&format!(
+                "{indent}[{:>8.1}s .. {:>8.1}s] {}{host}{attrs}\n",
+                r.t0_secs, t1, r.name
+            )),
+            None => out.push_str(&format!(
+                "{indent}@{:>8.1}s           {}{host}{attrs}\n",
+                r.t0_secs, r.name
+            )),
+        }
+        for c in self.children(r.id) {
+            self.render(c, depth + 1, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{trace_jsonl, AttrValue, TraceSink};
+
+    fn sample_log() -> TraceLog {
+        let mut sink = TraceSink::new();
+        let root = sink.root("s1", 0.0);
+        let other = sink.root("s2", 1.0);
+        sink.event("admit_event", 0.0, Some("s1"), Some("h0"), Some(root), vec![]);
+        sink.span(
+            "admit",
+            0.0,
+            20.0,
+            Some("s1"),
+            Some("h0"),
+            Some(root),
+            vec![
+                ("moved_bytes", AttrValue::F64(5e8)),
+                ("attributed_j", AttrValue::F64(120.0)),
+                ("end", "complete".into()),
+            ],
+        );
+        sink.event("complete", 20.0, Some("s1"), Some("h0"), Some(root), vec![]);
+        sink.span("admit", 1.0, 9.0, Some("s2"), Some("h1"), Some(other), vec![
+            ("moved_bytes", AttrValue::F64(1e8)),
+            ("attributed_j", AttrValue::F64(30.0)),
+        ]);
+        let recs = sink.finalize(20.0);
+        TraceLog::parse(&trace_jsonl(&recs))
+    }
+
+    #[test]
+    fn parse_round_trips_and_counts_bad_lines() {
+        let log = sample_log();
+        assert_eq!(log.skipped, 0);
+        assert_eq!(log.sessions(), vec!["s1".to_string(), "s2".to_string()]);
+        let bad = TraceLog::parse("not json\n{\"v\":99,\"kind\":\"span\"}\n");
+        assert_eq!(bad.records.len(), 0);
+        assert_eq!(bad.skipped, 2);
+    }
+
+    #[test]
+    fn trees_are_connected_and_render() {
+        let log = sample_log();
+        let tree = log.tree("s1");
+        assert!(tree.root.is_some());
+        assert!(tree.connected(), "all s1 records hang off the root");
+        let wf = tree.waterfall();
+        assert!(wf.contains("session"), "waterfall starts at the root: {wf}");
+        assert!(wf.contains("admit on h0"));
+        assert!(wf.contains("complete"));
+    }
+
+    #[test]
+    fn orphan_records_break_connectivity() {
+        let mut log = sample_log();
+        // Detach the residency span from its parent.
+        for r in &mut log.records {
+            if r.name == "admit" && r.session.as_deref() == Some("s1") {
+                r.parent = None;
+            }
+        }
+        assert!(!log.tree("s1").connected());
+    }
+
+    #[test]
+    fn summary_table_reconciles_attrs() {
+        let log = sample_log();
+        let md = log.summary_table().to_markdown();
+        assert!(md.contains("s1"));
+        assert!(md.contains("complete"));
+        assert!(md.contains("120.0 J"), "joules summed from residency attrs: {md}");
+    }
+
+    #[test]
+    fn histogram_table_covers_span_names() {
+        let log = sample_log();
+        let md = log.histogram_table().to_markdown();
+        assert!(md.contains("admit"));
+        assert!(md.contains("session"));
+    }
+}

@@ -1,0 +1,638 @@
+//! Spans, instant events and the deterministic trace collector.
+//!
+//! The trace model is deliberately small: one record type,
+//! [`TraceRecord`], is either a *span* (a closed `[t0, t1]` interval on
+//! the simulated clock) or an *instant event* (`t1` absent). Records
+//! carry structured attributes and a `parent` link, so a session's
+//! causal path — `session` root → `admit` residencies → `tune` /
+//! `complete` events, with `migrate` / `penalty_box` spans between
+//! residencies — reconstructs as a tree (see [`super::summarize`]).
+//!
+//! **Determinism contract.** Record ids are `(track, seq)` pairs packed
+//! into a `u64` ([`TraceBuf::next_id`]): the dispatcher/collector owns
+//! track 0, host *i* owns track *i + 1*. Every emitter allocates ids in
+//! its own deterministic program order, emission only ever happens at
+//! segment boundaries (never inside the tick loop), and the dispatcher
+//! drains per-host buffers in host-index order — so the merged log is
+//! byte-identical across `--shards` counts and across repeated runs of
+//! one `(config, seed)`. [`TraceSink::finalize`] sorts the merged log by
+//! `(t0, id)` with a total order (`f64::total_cmp`), which is itself
+//! insensitive to merge arrival order.
+//!
+//! Serialization is versioned JSONL through the same hand-rolled codec
+//! the history store uses ([`crate::history::json`]); a Chrome
+//! `trace_event` export ([`chrome_trace_json`]) loads directly into
+//! Perfetto / `chrome://tracing`.
+
+use std::collections::BTreeMap;
+
+use crate::history::json::{self, Json};
+
+/// Version written into every trace line (`"v"`); bump on schema change.
+pub const TRACE_FORMAT_VERSION: u32 = 1;
+
+/// One structured attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    /// A float (serialized with shortest-round-trip `Display`).
+    F64(f64),
+    /// An unsigned integer (counts, attempts).
+    U64(u64),
+    /// A boolean.
+    Bool(bool),
+    /// A string (labels, verdicts).
+    Str(String),
+}
+
+impl AttrValue {
+    fn to_json(&self) -> String {
+        match self {
+            AttrValue::F64(x) => json::num(*x),
+            AttrValue::U64(n) => format!("{n}"),
+            AttrValue::Bool(b) => format!("{b}"),
+            AttrValue::Str(s) => format!("\"{}\"", json::escape(s)),
+        }
+    }
+
+    fn from_json(v: &Json) -> Option<AttrValue> {
+        match v {
+            Json::Num(x) => Some(AttrValue::F64(*x)),
+            Json::Bool(b) => Some(AttrValue::Bool(*b)),
+            Json::Str(s) => Some(AttrValue::Str(s.clone())),
+            _ => None,
+        }
+    }
+
+    /// The value as a float (integers widen; `None` for bool/str).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            AttrValue::F64(x) => Some(*x),
+            AttrValue::U64(n) => Some(*n as f64),
+            _ => None,
+        }
+    }
+
+    /// The value as a string slice, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            AttrValue::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+}
+
+impl From<f64> for AttrValue {
+    fn from(x: f64) -> AttrValue {
+        AttrValue::F64(x)
+    }
+}
+
+impl From<u64> for AttrValue {
+    fn from(n: u64) -> AttrValue {
+        AttrValue::U64(n)
+    }
+}
+
+impl From<u32> for AttrValue {
+    fn from(n: u32) -> AttrValue {
+        AttrValue::U64(n as u64)
+    }
+}
+
+impl From<bool> for AttrValue {
+    fn from(b: bool) -> AttrValue {
+        AttrValue::Bool(b)
+    }
+}
+
+impl From<&str> for AttrValue {
+    fn from(s: &str) -> AttrValue {
+        AttrValue::Str(s.to_string())
+    }
+}
+
+impl From<String> for AttrValue {
+    fn from(s: String) -> AttrValue {
+        AttrValue::Str(s)
+    }
+}
+
+/// One span (closed interval) or instant event (`t1_secs` absent).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Deterministic id: `((track + 1) << 32) | seq` (see [`TraceBuf`]).
+    pub id: u64,
+    /// Parent record id, `None` for roots and free-standing events.
+    pub parent: Option<u64>,
+    /// Taxonomy label (`"session"`, `"admit"`, `"tune"`, `"migrate"`, …).
+    pub name: String,
+    /// Start (spans) or occurrence (events) on the simulated clock.
+    pub t0_secs: f64,
+    /// End of a span; `None` marks an instant event.
+    pub t1_secs: Option<f64>,
+    /// Session/tenant this record belongs to, when any.
+    pub session: Option<String>,
+    /// Host name the record is attributed to, when any.
+    pub host: Option<String>,
+    /// Structured attributes, serialized in insertion order.
+    pub attrs: Vec<(String, AttrValue)>,
+}
+
+impl TraceRecord {
+    /// True for closed-interval spans (`t1_secs` present).
+    pub fn is_span(&self) -> bool {
+        self.t1_secs.is_some()
+    }
+
+    /// Span duration in seconds (`None` for instant events).
+    pub fn duration_secs(&self) -> Option<f64> {
+        self.t1_secs.map(|t1| t1 - self.t0_secs)
+    }
+
+    /// Attribute lookup.
+    pub fn attr(&self, key: &str) -> Option<&AttrValue> {
+        self.attrs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Numeric attribute lookup (integers widen to `f64`).
+    pub fn attr_f64(&self, key: &str) -> Option<f64> {
+        self.attr(key).and_then(AttrValue::as_f64)
+    }
+
+    /// String attribute lookup.
+    pub fn attr_str(&self, key: &str) -> Option<&str> {
+        self.attr(key).and_then(AttrValue::as_str)
+    }
+
+    /// One versioned JSONL line (fixed key order, deterministic bytes).
+    pub fn to_json_line(&self) -> String {
+        let mut out = format!(
+            "{{\"v\":{},\"kind\":\"{}\",\"id\":{},\"name\":\"{}\",\"t0\":{}",
+            TRACE_FORMAT_VERSION,
+            if self.is_span() { "span" } else { "event" },
+            self.id,
+            json::escape(&self.name),
+            json::num(self.t0_secs),
+        );
+        if let Some(t1) = self.t1_secs {
+            out.push_str(&format!(",\"t1\":{}", json::num(t1)));
+        }
+        if let Some(p) = self.parent {
+            out.push_str(&format!(",\"parent\":{p}"));
+        }
+        if let Some(s) = &self.session {
+            out.push_str(&format!(",\"session\":\"{}\"", json::escape(s)));
+        }
+        if let Some(h) = &self.host {
+            out.push_str(&format!(",\"host\":\"{}\"", json::escape(h)));
+        }
+        if !self.attrs.is_empty() {
+            out.push_str(",\"attrs\":{");
+            for (i, (k, v)) in self.attrs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("\"{}\":{}", json::escape(k), v.to_json()));
+            }
+            out.push('}');
+        }
+        out.push('}');
+        out
+    }
+
+    /// Parse one line back (any supported version). Numeric attributes
+    /// come back as [`AttrValue::F64`] — JSON does not distinguish
+    /// integer widths. Returns `None` for unknown versions or shapes.
+    pub fn from_json(v: &Json) -> Option<TraceRecord> {
+        let version = v.get("v").and_then(Json::as_u32)?;
+        if version == 0 || version > TRACE_FORMAT_VERSION {
+            return None;
+        }
+        let kind = v.get("kind").and_then(Json::as_str)?;
+        let t1_secs = match kind {
+            "span" => Some(v.get("t1").and_then(Json::as_f64)?),
+            "event" => None,
+            _ => return None,
+        };
+        let mut attrs = Vec::new();
+        if let Some(Json::Obj(m)) = v.get("attrs") {
+            for (k, av) in m {
+                attrs.push((k.clone(), AttrValue::from_json(av)?));
+            }
+        }
+        Some(TraceRecord {
+            id: v.get("id").and_then(Json::as_u64)?,
+            parent: v.get("parent").and_then(Json::as_u64),
+            name: v.get("name").and_then(Json::as_str)?.to_string(),
+            t0_secs: v.get("t0").and_then(Json::as_f64)?,
+            t1_secs,
+            session: v.get("session").and_then(Json::as_str).map(str::to_string),
+            host: v.get("host").and_then(Json::as_str).map(str::to_string),
+            attrs,
+        })
+    }
+}
+
+/// A per-emitter record buffer with deterministic id allocation.
+///
+/// Each emitter (the dispatcher's collector, each `HostWorld`) owns one
+/// buffer with a unique track number; ids are allocated in emission
+/// order within the track, so the id stream is a pure function of that
+/// emitter's deterministic program order — independent of thread
+/// scheduling and shard count.
+#[derive(Debug, Clone)]
+pub struct TraceBuf {
+    track: u64,
+    seq: u64,
+    records: Vec<TraceRecord>,
+}
+
+impl TraceBuf {
+    /// A fresh buffer owning `track` (0 = dispatcher, host *i* = *i*+1).
+    pub fn new(track: u64) -> TraceBuf {
+        TraceBuf { track, seq: 0, records: Vec::new() }
+    }
+
+    /// The track this buffer allocates ids on.
+    pub fn track(&self) -> u64 {
+        self.track
+    }
+
+    /// Allocate the next record id on this track.
+    pub fn next_id(&mut self) -> u64 {
+        self.seq += 1;
+        ((self.track + 1) << 32) | self.seq
+    }
+
+    /// Append an instant event; returns its id.
+    #[allow(clippy::too_many_arguments)]
+    pub fn event(
+        &mut self,
+        name: &str,
+        t_secs: f64,
+        session: Option<&str>,
+        host: Option<&str>,
+        parent: Option<u64>,
+        attrs: Vec<(&str, AttrValue)>,
+    ) -> u64 {
+        let id = self.next_id();
+        self.records.push(TraceRecord {
+            id,
+            parent,
+            name: name.to_string(),
+            t0_secs: t_secs,
+            t1_secs: None,
+            session: session.map(str::to_string),
+            host: host.map(str::to_string),
+            attrs: attrs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        });
+        id
+    }
+
+    /// Append a closed span; returns its id. Pass `id` to close a span
+    /// whose id was pre-allocated with [`Self::next_id`] (residency
+    /// spans hand their id to children before they close).
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &mut self,
+        id: Option<u64>,
+        name: &str,
+        t0_secs: f64,
+        t1_secs: f64,
+        session: Option<&str>,
+        host: Option<&str>,
+        parent: Option<u64>,
+        attrs: Vec<(&str, AttrValue)>,
+    ) -> u64 {
+        let id = id.unwrap_or_else(|| self.next_id());
+        self.records.push(TraceRecord {
+            id,
+            parent,
+            name: name.to_string(),
+            t0_secs,
+            t1_secs: Some(t1_secs),
+            session: session.map(str::to_string),
+            host: host.map(str::to_string),
+            attrs: attrs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        });
+        id
+    }
+
+    /// Take the buffered records (id allocation state is kept).
+    pub fn drain(&mut self) -> Vec<TraceRecord> {
+        std::mem::take(&mut self.records)
+    }
+}
+
+/// The dispatcher-side collector: owns track 0, allocates session root
+/// spans, merges per-host buffers, and finalizes the log.
+#[derive(Debug, Clone)]
+pub struct TraceSink {
+    buf: TraceBuf,
+    /// Session name → root span id (one root per session for its whole
+    /// life, across residencies, retries and migrations).
+    roots: BTreeMap<String, u64>,
+    /// Root span open time, keyed like `roots`.
+    root_t0: BTreeMap<String, f64>,
+    records: Vec<TraceRecord>,
+}
+
+impl Default for TraceSink {
+    fn default() -> TraceSink {
+        TraceSink::new()
+    }
+}
+
+impl TraceSink {
+    /// An empty collector.
+    pub fn new() -> TraceSink {
+        TraceSink {
+            buf: TraceBuf::new(0),
+            roots: BTreeMap::new(),
+            root_t0: BTreeMap::new(),
+            records: Vec::new(),
+        }
+    }
+
+    /// The root span id for `session`, created at `t_secs` on first use.
+    pub fn root(&mut self, session: &str, t_secs: f64) -> u64 {
+        if let Some(id) = self.roots.get(session) {
+            return *id;
+        }
+        let id = self.buf.next_id();
+        self.roots.insert(session.to_string(), id);
+        self.root_t0.insert(session.to_string(), t_secs);
+        id
+    }
+
+    /// The root span id for `session`, if one exists already.
+    pub fn root_of(&self, session: &str) -> Option<u64> {
+        self.roots.get(session).copied()
+    }
+
+    /// Emit a collector-side instant event; returns its id.
+    #[allow(clippy::too_many_arguments)]
+    pub fn event(
+        &mut self,
+        name: &str,
+        t_secs: f64,
+        session: Option<&str>,
+        host: Option<&str>,
+        parent: Option<u64>,
+        attrs: Vec<(&str, AttrValue)>,
+    ) -> u64 {
+        let id = self.buf.event(name, t_secs, session, host, parent, attrs);
+        self.records.append(&mut self.buf.drain());
+        id
+    }
+
+    /// Emit a collector-side closed span; returns its id.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &mut self,
+        name: &str,
+        t0_secs: f64,
+        t1_secs: f64,
+        session: Option<&str>,
+        host: Option<&str>,
+        parent: Option<u64>,
+        attrs: Vec<(&str, AttrValue)>,
+    ) -> u64 {
+        let id = self.buf.span(None, name, t0_secs, t1_secs, session, host, parent, attrs);
+        self.records.append(&mut self.buf.drain());
+        id
+    }
+
+    /// Merge a host buffer's drained records (call in host-index order
+    /// at each segment boundary — the merge discipline that keeps the
+    /// log shard-invariant).
+    pub fn absorb(&mut self, mut records: Vec<TraceRecord>) {
+        self.records.append(&mut records);
+    }
+
+    /// Close every session root (a root ends at its last record, or at
+    /// `end_secs` for sessions with none) and return the full log sorted
+    /// by `(t0, id)` under a total order.
+    pub fn finalize(mut self, end_secs: f64) -> Vec<TraceRecord> {
+        // Last activity per session, from the merged children.
+        let mut last: BTreeMap<String, f64> = BTreeMap::new();
+        for r in &self.records {
+            if let Some(s) = &r.session {
+                let t = r.t1_secs.unwrap_or(r.t0_secs);
+                let e = last.entry(s.clone()).or_insert(t);
+                if t > *e {
+                    *e = t;
+                }
+            }
+        }
+        for (session, id) in std::mem::take(&mut self.roots) {
+            let t0 = self.root_t0.get(&session).copied().unwrap_or(0.0);
+            let t1 = last.get(&session).copied().unwrap_or(end_secs).max(t0);
+            self.records.push(TraceRecord {
+                id,
+                parent: None,
+                name: "session".to_string(),
+                t0_secs: t0,
+                t1_secs: Some(t1),
+                session: Some(session),
+                host: None,
+                attrs: Vec::new(),
+            });
+        }
+        self.records
+            .sort_by(|a, b| a.t0_secs.total_cmp(&b.t0_secs).then(a.id.cmp(&b.id)));
+        self.records
+    }
+}
+
+/// Render a record list as versioned JSONL (one record per line,
+/// trailing newline, deterministic bytes).
+pub fn trace_jsonl(records: &[TraceRecord]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_json_line());
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a record list in Chrome `trace_event` format (a JSON array of
+/// `"X"` complete events and `"i"` instants), loadable in Perfetto or
+/// `chrome://tracing`. Timestamps are simulated microseconds; `pid` is
+/// always 1 and `tid` is the emitter track (0 = dispatcher, host *i* =
+/// *i* + 1), so each host renders as its own row.
+pub fn chrome_trace_json(records: &[TraceRecord]) -> String {
+    let mut events = Vec::with_capacity(records.len());
+    for r in records {
+        let tid = (r.id >> 32).saturating_sub(1);
+        let mut args = String::new();
+        if let Some(s) = &r.session {
+            args.push_str(&format!(",\"session\":\"{}\"", json::escape(s)));
+        }
+        if let Some(h) = &r.host {
+            args.push_str(&format!(",\"host\":\"{}\"", json::escape(h)));
+        }
+        for (k, v) in &r.attrs {
+            args.push_str(&format!(",\"{}\":{}", json::escape(k), v.to_json()));
+        }
+        let args = if args.is_empty() {
+            "{}".to_string()
+        } else {
+            format!("{{{}}}", &args[1..])
+        };
+        let common = format!(
+            "\"name\":\"{}\",\"pid\":1,\"tid\":{},\"ts\":{},\"args\":{}",
+            json::escape(&r.name),
+            tid,
+            json::num(r.t0_secs * 1e6),
+            args
+        );
+        match r.t1_secs {
+            Some(t1) => events.push(format!(
+                "{{{common},\"ph\":\"X\",\"dur\":{}}}",
+                json::num((t1 - r.t0_secs) * 1e6)
+            )),
+            None => events.push(format!("{{{common},\"ph\":\"i\",\"s\":\"t\"}}")),
+        }
+    }
+    format!("[\n{}\n]\n", events.join(",\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TraceRecord {
+        TraceRecord {
+            id: (2 << 32) | 7,
+            parent: Some(1 << 32),
+            name: "admit".to_string(),
+            t0_secs: 1.5,
+            t1_secs: Some(4.25),
+            session: Some("s1".to_string()),
+            host: Some("h0".to_string()),
+            attrs: vec![
+                ("moved_bytes".to_string(), AttrValue::F64(1e9)),
+                ("attempt".to_string(), AttrValue::U64(2)),
+                ("end".to_string(), AttrValue::Str("complete".to_string())),
+                ("halved".to_string(), AttrValue::Bool(false)),
+            ],
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let r = sample();
+        let line = r.to_json_line();
+        let v = json::parse(&line).expect("line parses");
+        let back = TraceRecord::from_json(&v).expect("record parses");
+        assert_eq!(back.id, r.id);
+        assert_eq!(back.parent, r.parent);
+        assert_eq!(back.name, r.name);
+        assert_eq!(back.t0_secs.to_bits(), r.t0_secs.to_bits());
+        assert_eq!(back.t1_secs.map(f64::to_bits), r.t1_secs.map(f64::to_bits));
+        assert_eq!(back.session, r.session);
+        assert_eq!(back.attr_f64("moved_bytes"), Some(1e9));
+        assert_eq!(back.attr_f64("attempt"), Some(2.0));
+        assert_eq!(back.attr_str("end"), Some("complete"));
+    }
+
+    #[test]
+    fn events_have_no_t1() {
+        let mut buf = TraceBuf::new(3);
+        let id = buf.event("tune", 9.0, Some("s"), None, None, vec![("ch", 4u32.into())]);
+        let recs = buf.drain();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].id, id);
+        assert!(!recs[0].is_span());
+        assert!(!recs[0].to_json_line().contains("\"t1\""));
+        assert!(recs[0].to_json_line().contains("\"kind\":\"event\""));
+    }
+
+    #[test]
+    fn ids_encode_track_and_order() {
+        let mut buf = TraceBuf::new(0);
+        let a = buf.next_id();
+        let b = buf.next_id();
+        assert_eq!(a, (1 << 32) | 1);
+        assert_eq!(b, (1 << 32) | 2);
+        let mut host = TraceBuf::new(1);
+        assert_eq!(host.next_id(), (2 << 32) | 1);
+    }
+
+    #[test]
+    fn sink_roots_are_stable_per_session() {
+        let mut sink = TraceSink::new();
+        let a = sink.root("s1", 0.0);
+        let b = sink.root("s1", 99.0);
+        assert_eq!(a, b, "one root per session for its whole life");
+        assert_ne!(sink.root("s2", 1.0), a);
+        assert_eq!(sink.root_of("s1"), Some(a));
+        assert_eq!(sink.root_of("nope"), None);
+    }
+
+    #[test]
+    fn finalize_closes_roots_at_last_activity_and_sorts() {
+        let mut sink = TraceSink::new();
+        let root = sink.root("s1", 2.0);
+        sink.event("tune", 10.0, Some("s1"), None, Some(root), vec![]);
+        sink.span("admit", 2.0, 30.0, Some("s1"), Some("h"), Some(root), vec![]);
+        let recs = sink.finalize(99.0);
+        let session = recs.iter().find(|r| r.name == "session").unwrap();
+        assert_eq!(session.id, root);
+        assert_eq!(session.t0_secs, 2.0);
+        assert_eq!(session.t1_secs, Some(30.0), "ends at the last child, not the run end");
+        // Sorted by (t0, id).
+        for w in recs.windows(2) {
+            assert!(
+                (w[0].t0_secs, w[0].id) <= (w[1].t0_secs, w[1].id),
+                "unsorted: {w:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn finalize_without_children_uses_run_end() {
+        let mut sink = TraceSink::new();
+        sink.root("ghost", 5.0);
+        let recs = sink.finalize(50.0);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].t1_secs, Some(50.0));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_span_and_instant() {
+        let mut sink = TraceSink::new();
+        let root = sink.root("s1", 0.0);
+        sink.event("retry", 3.0, Some("s1"), Some("h0"), Some(root), vec![
+            ("attempt", 1u64.into()),
+        ]);
+        sink.span("admit", 0.0, 8.0, Some("s1"), Some("h0"), Some(root), vec![]);
+        let recs = sink.finalize(8.0);
+        let chrome = chrome_trace_json(&recs);
+        let v = json::parse(&chrome).expect("chrome export parses as JSON");
+        let arr = v.as_arr().expect("an array of events");
+        assert_eq!(arr.len(), 3);
+        let phases: Vec<&str> =
+            arr.iter().filter_map(|e| e.get("ph").and_then(Json::as_str)).collect();
+        assert_eq!(phases.iter().filter(|p| **p == "X").count(), 2);
+        assert_eq!(phases.iter().filter(|p| **p == "i").count(), 1);
+        // µs timestamps.
+        let spans: Vec<f64> =
+            arr.iter().filter_map(|e| e.get("dur").and_then(Json::as_f64)).collect();
+        assert!(spans.contains(&8e6));
+    }
+
+    #[test]
+    fn jsonl_renderer_is_one_line_per_record() {
+        let mut sink = TraceSink::new();
+        sink.root("s", 0.0);
+        sink.event("cap_event", 1.0, None, None, None, vec![("cap_w", 40.0.into())]);
+        let recs = sink.finalize(2.0);
+        let text = trace_jsonl(&recs);
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            assert!(json::parse(line).is_some(), "unparseable line: {line}");
+        }
+    }
+}

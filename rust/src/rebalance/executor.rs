@@ -150,6 +150,33 @@ pub struct MoveProposal {
     pub est_power_drop_w: f64,
 }
 
+/// The cost-model verdict on one candidate move — the audit trail the
+/// tracer turns into `rebalance_proposal` events, *including rejected
+/// candidates* (ISSUE 9). Produced by [`Rebalancer::propose_audited`];
+/// [`Rebalancer::propose`] evaluates the same candidates without
+/// recording them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoveVerdict {
+    /// Session name of the candidate.
+    pub session: String,
+    /// Source host index.
+    pub from: usize,
+    /// Target host index.
+    pub to: usize,
+    /// Estimated joules saved on the remaining bytes.
+    pub est_benefit_j: f64,
+    /// Estimated joules the move would burn (drain + re-ramp).
+    pub est_cost_j: f64,
+    /// Projected fleet-power change of the move, W (cap-pressure nets
+    /// the contention toll off this figure before ranking).
+    pub est_power_drop_w: f64,
+    /// True for the one candidate the policy picked this boundary.
+    pub accepted: bool,
+    /// Why the candidate was (not) picked: `picked`, `outscored`,
+    /// `cost-hysteresis`, `cap-worsened`, or `below-min-drop`.
+    pub reason: &'static str,
+}
+
 /// The rebalancer: policy + cost model + per-session move budgets.
 #[derive(Debug, Clone)]
 pub struct Rebalancer {
@@ -207,10 +234,77 @@ impl Rebalancer {
     /// projections). `cap_w` is the *effective* admission power cap at
     /// this instant, if any.
     pub fn propose(&self, hosts: &[HostView], cap_w: Option<f64>) -> Option<MoveProposal> {
+        self.propose_inner(hosts, cap_w, None)
+    }
+
+    /// Like [`Self::propose`], additionally recording a [`MoveVerdict`]
+    /// for *every* candidate evaluated — picked, outscored, or gated by
+    /// the cost model — into `audit`. The returned proposal is
+    /// bit-identical to [`Self::propose`] on the same inputs; auditing
+    /// only observes the scan, it never changes it. The tracer is the
+    /// intended caller.
+    pub fn propose_audited(
+        &self,
+        hosts: &[HostView],
+        cap_w: Option<f64>,
+        audit: &mut Vec<MoveVerdict>,
+    ) -> Option<MoveProposal> {
+        self.propose_inner(hosts, cap_w, Some(audit))
+    }
+
+    fn propose_inner(
+        &self,
+        hosts: &[HostView],
+        cap_w: Option<f64>,
+        audit: Option<&mut Vec<MoveVerdict>>,
+    ) -> Option<MoveProposal> {
         match self.cfg.policy {
             RebalancePolicyKind::Off => None,
-            RebalancePolicyKind::CapPressure => self.propose_cap_pressure(hosts, cap_w?),
-            RebalancePolicyKind::MarginalEnergyDelta => self.propose_delta(hosts, cap_w),
+            RebalancePolicyKind::CapPressure => {
+                self.propose_cap_pressure(hosts, cap_w?, audit)
+            }
+            RebalancePolicyKind::MarginalEnergyDelta => {
+                self.propose_delta(hosts, cap_w, audit)
+            }
+        }
+    }
+
+    /// Record one candidate's verdict (no-op without an audit sink).
+    #[allow(clippy::too_many_arguments)]
+    fn audit_push(
+        audit: &mut Option<&mut Vec<MoveVerdict>>,
+        s: &SessionView,
+        from: usize,
+        to: usize,
+        benefit: f64,
+        cost: f64,
+        drop_w: f64,
+        reason: &'static str,
+    ) {
+        if let Some(a) = audit.as_deref_mut() {
+            a.push(MoveVerdict {
+                session: s.name.clone(),
+                from,
+                to,
+                est_benefit_j: benefit,
+                est_cost_j: cost,
+                est_power_drop_w: drop_w,
+                accepted: false,
+                reason,
+            });
+        }
+    }
+
+    /// Promote the winning candidate's verdict to `accepted`/`picked`.
+    fn audit_pick(audit: &mut Option<&mut Vec<MoveVerdict>>, mv: &MoveProposal) {
+        if let Some(a) = audit.as_deref_mut() {
+            if let Some(v) = a
+                .iter_mut()
+                .find(|v| v.session == mv.session && v.from == mv.from && v.to == mv.to)
+            {
+                v.accepted = true;
+                v.reason = "picked";
+            }
         }
     }
 
@@ -300,7 +394,12 @@ impl Rebalancer {
     /// residency — see [`HostView::contention_toll_w`]); ties break to
     /// the session with the most remaining bytes (longest future
     /// benefit), then to the first candidate in scan order.
-    fn propose_cap_pressure(&self, hosts: &[HostView], cap_w: f64) -> Option<MoveProposal> {
+    fn propose_cap_pressure(
+        &self,
+        hosts: &[HostView],
+        cap_w: f64,
+        mut audit: Option<&mut Vec<MoveVerdict>>,
+    ) -> Option<MoveProposal> {
         let fleet_now: f64 = hosts.iter().map(|h| h.power_now_w).sum();
         if fleet_now <= cap_w + 1e-6 {
             return None;
@@ -312,8 +411,10 @@ impl Rebalancer {
             let drop = fleet_now - Self::power_after(hosts, fleet_now, from, to);
             let net = drop - hosts[to].contention_toll_w();
             if net < MIN_POWER_DROP_W {
+                Self::audit_push(&mut audit, s, from, to, 0.0, 0.0, net, "below-min-drop");
                 continue;
             }
+            Self::audit_push(&mut audit, s, from, to, 0.0, 0.0, net, "outscored");
             let better = match &best {
                 Some((bn, br, _)) => {
                     net > *bn + 1e-12 || (net > *bn - 1e-12 && s.remaining_bytes > *br)
@@ -324,14 +425,24 @@ impl Rebalancer {
                 best = Some((net, s.remaining_bytes, (s, from, to, drop)));
             }
         }
-        best.map(|(_, _, (s, from, to, drop))| self.proposal_for(hosts, s, from, to, drop))
+        let mv =
+            best.map(|(_, _, (s, from, to, drop))| self.proposal_for(hosts, s, from, to, drop));
+        if let Some(mv) = &mv {
+            Self::audit_pick(&mut audit, mv);
+        }
+        mv
     }
 
     /// Marginal-energy delta: move whenever the estimated saving on the
     /// remaining bytes clears the migration cost plus hysteresis. With a
     /// cap in force a move may never push the projection further above
     /// it. Picks the largest net (benefit − cost) saving.
-    fn propose_delta(&self, hosts: &[HostView], cap_w: Option<f64>) -> Option<MoveProposal> {
+    fn propose_delta(
+        &self,
+        hosts: &[HostView],
+        cap_w: Option<f64>,
+        mut audit: Option<&mut Vec<MoveVerdict>>,
+    ) -> Option<MoveProposal> {
         let fleet_now: f64 = hosts.iter().map(|h| h.power_now_w).sum();
         let cost_model: &MigrationCost = &self.cfg.migration_cost;
         // Scan with scalars only (see `propose_cap_pressure`); benefit
@@ -340,31 +451,39 @@ impl Rebalancer {
         let mut best: Option<(f64, (&SessionView, usize, usize, f64))> = None;
         for (s, from, to) in self.candidates(hosts) {
             let after = Self::power_after(hosts, fleet_now, from, to);
-            if let Some(cap) = cap_w {
-                // Never worsen a cap violation (reducing one is fine).
-                if after > cap + 1e-9 && after > fleet_now - 1e-9 {
-                    continue;
-                }
-            }
             let benefit = s.remaining_bytes * (hosts[from].jpb_stay() - hosts[to].jpb_in());
             let cost = cost_model.estimate_joules(
                 hosts[to].idle_power_w,
                 hosts[to].marginal_in_w(),
                 hosts[to].rtt_s,
             );
+            let drop = fleet_now - after;
+            if let Some(cap) = cap_w {
+                // Never worsen a cap violation (reducing one is fine).
+                if after > cap + 1e-9 && after > fleet_now - 1e-9 {
+                    Self::audit_push(&mut audit, s, from, to, benefit, cost, drop, "cap-worsened");
+                    continue;
+                }
+            }
             if !cost_model.worth_it(benefit, cost) {
+                Self::audit_push(&mut audit, s, from, to, benefit, cost, drop, "cost-hysteresis");
                 continue;
             }
+            Self::audit_push(&mut audit, s, from, to, benefit, cost, drop, "outscored");
             let net = benefit - cost;
             let better = match &best {
                 Some((bn, _)) => net > *bn + 1e-12,
                 None => true,
             };
             if better {
-                best = Some((net, (s, from, to, fleet_now - after)));
+                best = Some((net, (s, from, to, drop)));
             }
         }
-        best.map(|(_, (s, from, to, drop))| self.proposal_for(hosts, s, from, to, drop))
+        let mv = best.map(|(_, (s, from, to, drop))| self.proposal_for(hosts, s, from, to, drop));
+        if let Some(mv) = &mv {
+            Self::audit_pick(&mut audit, mv);
+        }
+        mv
     }
 
     /// Assemble the proposal record for one candidate move.
@@ -598,6 +717,38 @@ mod tests {
         );
         // Everything degraded: nowhere to go.
         assert_eq!(r.propose_evacuation(&hosts, &[true, true, true]), None);
+    }
+
+    #[test]
+    fn audited_propose_matches_plain_and_records_rejections() {
+        let r = delta_rebalancer();
+        // Three hosts: one winning target, one cost-gated near-twin of
+        // the source — so the audit must carry both a pick and a
+        // rejection.
+        let hosts = vec![
+            host(0, 1, 3, 20.0, 40.0),
+            host(1, 0, 4, 10.0, 5.0),
+            host(2, 0, 4, 20.0, 39.9),
+        ];
+        let plain = r.propose(&hosts, None);
+        let mut audit = Vec::new();
+        let audited = r.propose_audited(&hosts, None, &mut audit);
+        assert_eq!(plain, audited, "auditing must not change the decision");
+        let mv = audited.expect("the cheap host attracts the session");
+        let picked: Vec<&MoveVerdict> = audit.iter().filter(|v| v.accepted).collect();
+        assert_eq!(picked.len(), 1, "exactly one accepted verdict");
+        assert_eq!(picked[0].reason, "picked");
+        assert_eq!((picked[0].from, picked[0].to), (mv.from, mv.to));
+        assert!(
+            audit.iter().any(|v| !v.accepted && v.reason == "cost-hysteresis"),
+            "the near-twin target must be recorded as cost-gated: {audit:?}"
+        );
+        // Cap-pressure audit carries `below-min-drop` rejections too.
+        let rcap = Rebalancer::new(RebalanceConfig::new(RebalancePolicyKind::CapPressure));
+        let mut audit = Vec::new();
+        let capped = rcap.propose_audited(&hosts, Some(40.0), &mut audit);
+        assert_eq!(capped, rcap.propose(&hosts, Some(40.0)));
+        assert!(audit.iter().any(|v| v.accepted));
     }
 
     #[test]

@@ -41,5 +41,5 @@ pub mod executor;
 pub mod policy;
 
 pub use cost::{contention_price_j_per_byte, MigrationCost};
-pub use executor::{HostView, MoveProposal, Rebalancer, SessionView};
+pub use executor::{HostView, MoveProposal, MoveVerdict, Rebalancer, SessionView};
 pub use policy::{RebalanceConfig, RebalancePolicyKind};

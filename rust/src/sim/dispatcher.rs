@@ -79,7 +79,9 @@ use crate::coordinator::fleet::{FleetPolicyKind, PlacementKind};
 use crate::coordinator::AlgorithmKind;
 use crate::history::{KnnIndex, Query, RunOutcome, WorkloadFingerprint, CONFIDENCE_FLOOR};
 use crate::netsim::{BandwidthEvent, CrossTrafficConfig};
-use crate::rebalance::{HostView, RebalanceConfig, Rebalancer, SessionView};
+use crate::obs::metrics::{FleetMetrics, SegmentSnapshot};
+use crate::obs::trace::{AttrValue, TraceRecord, TraceSink};
+use crate::rebalance::{HostView, MoveVerdict, RebalanceConfig, Rebalancer, SessionView};
 use crate::resilience::{
     Advisory, DeadLetter, DeadLetterQueue, FailureReason, FaultKind, FaultSchedule, HealthMonitor,
     PenaltyBox, ResilienceConfig,
@@ -530,6 +532,21 @@ pub struct DispatcherConfig {
     /// and the dispatcher then runs bit-for-bit as it did before the
     /// subsystem existed.
     pub resilience: ResilienceConfig,
+    /// Collect the session-lifecycle trace (see [`crate::obs::trace`]):
+    /// every residency, tune, migration, retry and decision becomes a
+    /// span or instant event in [`DispatchOutcome::trace`]. Off by
+    /// default, and an off run takes none of the collection branches —
+    /// the `--trace` off bit-identity contract
+    /// (`rust/tests/trace_determinism.rs` pins it). All emission happens
+    /// at segment boundaries on the dispatcher thread, so the trace is
+    /// byte-identical across shard counts.
+    pub trace: bool,
+    /// Collect the fleet metrics registry + per-segment timeline (see
+    /// [`crate::obs::metrics`]) into [`DispatchOutcome::metrics`]. Off
+    /// by default. Unlike the trace, the `stepper.*` series (and the
+    /// snapshot warm/slow tick fields) are shard-*sensitive* by design —
+    /// they measure the driver, not the simulated fleet.
+    pub metrics: bool,
 }
 
 impl DispatcherConfig {
@@ -558,6 +575,8 @@ impl DispatcherConfig {
             aimd: false,
             history: None,
             resilience: ResilienceConfig::new(),
+            trace: false,
+            metrics: false,
         }
     }
 
@@ -636,6 +655,18 @@ impl DispatcherConfig {
         self.resilience = resilience;
         self
     }
+
+    /// Collect the session-lifecycle trace (see [`Self::trace`]).
+    pub fn with_trace(mut self) -> Self {
+        self.trace = true;
+        self
+    }
+
+    /// Collect the metrics registry + timeline (see [`Self::metrics`]).
+    pub fn with_metrics(mut self) -> Self {
+        self.metrics = true;
+        self
+    }
 }
 
 /// What a dispatcher run produced: the fleet outcome (tenants flattened
@@ -665,6 +696,14 @@ pub struct DispatchOutcome {
     /// Health-monitor degradation advisories, in firing order (empty
     /// unless recovery is on).
     pub advisories: Vec<Advisory>,
+    /// The merged session-lifecycle trace, sorted by `(t0, id)` (`None`
+    /// unless [`DispatcherConfig::trace`] was set). Serialize with
+    /// [`crate::obs::trace::trace_jsonl`] or
+    /// [`crate::obs::trace::chrome_trace_json`].
+    pub trace: Option<Vec<TraceRecord>>,
+    /// The metrics registry + per-segment timeline (`None` unless
+    /// [`DispatcherConfig::metrics`] was set).
+    pub metrics: Option<FleetMetrics>,
 }
 
 /// Derive one host's RNG seed from the fleet seed (distinct background
@@ -1038,6 +1077,361 @@ fn make_record(
     }
 }
 
+/// The run's observability funnel: the trace sink (collector track 0)
+/// and/or the metrics registry, both optional and both fed exclusively
+/// from segment-boundary code on the dispatcher thread. An inactive
+/// collector (`--trace` and `--metrics` both off) is a pair of `None`s
+/// and every hook below is a cold branch — the off-path bit-identity
+/// contract.
+struct Collector {
+    sink: Option<TraceSink>,
+    metrics: Option<FleetMetrics>,
+    /// Segment-delta bookkeeping for the timeline (previous boundary's
+    /// clock, fleet byte/joule odometers and driver tick counters).
+    last_t: f64,
+    last_moved: f64,
+    last_joules: f64,
+    last_warm: u64,
+    last_slow: u64,
+    last_aimd: u64,
+}
+
+impl Collector {
+    fn new(trace: bool, metrics: bool) -> Collector {
+        Collector {
+            sink: trace.then(TraceSink::new),
+            metrics: metrics.then(FleetMetrics::default),
+            last_t: 0.0,
+            last_moved: 0.0,
+            last_joules: 0.0,
+            last_warm: 0,
+            last_slow: 0,
+            last_aimd: 0,
+        }
+    }
+
+    fn active(&self) -> bool {
+        self.sink.is_some() || self.metrics.is_some()
+    }
+
+    /// A scripted cap change fired.
+    fn on_cap_event(&mut self, now: f64, cap: Option<Power>) {
+        if let Some(sink) = &mut self.sink {
+            let cap_attr = match cap {
+                Some(p) => AttrValue::F64(p.as_watts()),
+                None => "none".into(),
+            };
+            sink.event("cap_event", now, None, None, None, vec![("cap_w", cap_attr)]);
+        }
+        if let Some(m) = &mut self.metrics {
+            m.registry.inc("cap.events", 1);
+        }
+    }
+
+    /// A scripted fault action fired (recorded after its victims, so the
+    /// event carries the final `sessions_hit` count).
+    fn on_fault(&mut self, rec: &FaultRecord) {
+        if let Some(sink) = &mut self.sink {
+            sink.event(
+                "fault",
+                rec.t_secs,
+                None,
+                Some(&rec.host_name),
+                None,
+                vec![
+                    ("kind", rec.kind.id().into()),
+                    ("sessions_hit", AttrValue::U64(rec.sessions_hit as u64)),
+                ],
+            );
+        }
+        if let Some(m) = &mut self.metrics {
+            m.registry.inc("faults.fired", 1);
+        }
+    }
+
+    /// A session was quarantined in the dead-letter queue.
+    fn on_dead_letter(&mut self, dl: &DeadLetter, host_name: &str) {
+        if let Some(sink) = &mut self.sink {
+            let root = sink.root(&dl.session, dl.at_secs);
+            sink.event(
+                "dead_letter",
+                dl.at_secs,
+                Some(&dl.session),
+                Some(host_name),
+                Some(root),
+                vec![
+                    ("reason", dl.reason.id().into()),
+                    ("attempts", AttrValue::U64(dl.attempts as u64)),
+                    ("moved_bytes", AttrValue::F64(dl.moved_bytes)),
+                    ("remaining_bytes", AttrValue::F64(dl.remaining_bytes)),
+                ],
+            );
+        }
+        if let Some(m) = &mut self.metrics {
+            m.registry.inc("sessions.dead_lettered", 1);
+        }
+    }
+
+    /// The PenaltyBox scheduled a retry: an instant `retry` event plus a
+    /// `penalty_box` span covering the backoff wait.
+    fn on_retry(&mut self, rec: &RetryRecord) {
+        if let Some(sink) = &mut self.sink {
+            let root = sink.root(&rec.session, rec.t_secs);
+            sink.event(
+                "retry",
+                rec.t_secs,
+                Some(&rec.session),
+                Some(&rec.from),
+                Some(root),
+                vec![
+                    ("attempt", AttrValue::U64(rec.attempt as u64)),
+                    ("backoff_s", AttrValue::F64(rec.backoff_secs)),
+                    ("remaining_bytes", AttrValue::F64(rec.remaining_bytes)),
+                ],
+            );
+            sink.span(
+                "penalty_box",
+                rec.t_secs,
+                rec.resume_at_secs,
+                Some(&rec.session),
+                None,
+                Some(root),
+                vec![("attempt", AttrValue::U64(rec.attempt as u64))],
+            );
+        }
+        if let Some(m) = &mut self.metrics {
+            m.registry.inc("retries.scheduled", 1);
+            m.registry.record("retry.backoff_s", rec.backoff_secs);
+        }
+    }
+
+    /// A placement decision was made (admitted or queued): a `placement`
+    /// event under the session root plus one `placement_score` child per
+    /// candidate host, so rejected candidates are visible with the
+    /// scores that outbid them.
+    fn on_decision(&mut self, rec: &DispatchRecord) {
+        if let Some(m) = &mut self.metrics {
+            match rec.admitted_host {
+                Some(_) => {
+                    m.registry.inc("placements.admitted", 1);
+                    m.registry.record("queue.wait_s", rec.waited_secs());
+                }
+                None => m.registry.inc("placements.queued", 1),
+            }
+        }
+        let Some(sink) = &mut self.sink else { return };
+        let root = sink.root(&rec.session, rec.t_secs);
+        let mut attrs = vec![
+            ("queued", AttrValue::Bool(rec.queued())),
+            ("waited_s", AttrValue::F64(rec.waited_secs())),
+            ("projected_fleet_power_w", AttrValue::F64(rec.projected_fleet_power_w)),
+        ];
+        if let Some(h) = &rec.host {
+            attrs.push(("host", h.as_str().into()));
+        }
+        let placement = sink.event(
+            "placement",
+            rec.t_secs,
+            Some(&rec.session),
+            rec.host.as_deref(),
+            Some(root),
+            attrs,
+        );
+        for s in &rec.scores {
+            sink.event(
+                "placement_score",
+                rec.t_secs,
+                Some(&rec.session),
+                Some(&s.host),
+                Some(placement),
+                vec![
+                    ("active_sessions", AttrValue::U64(s.active_sessions as u64)),
+                    ("marginal_j_per_byte", AttrValue::F64(s.marginal_j_per_byte)),
+                    ("queue_delay_j_per_byte", AttrValue::F64(s.queue_delay_j_per_byte)),
+                    ("projected_session_bps", AttrValue::F64(s.projected_session_bps)),
+                ],
+            );
+        }
+    }
+
+    /// A session is about to register on `world`: hand the host buffer
+    /// the session's root id so residency spans parent correctly.
+    fn on_admit(&mut self, world: &mut HostWorld, session: &str, now: f64) {
+        if let Some(sink) = &mut self.sink {
+            let root = sink.root(session, now);
+            world.trace_root(session, root);
+        }
+    }
+
+    /// The rebalancer executed a move: a `migrate` span covering the
+    /// drain window, plus the est-cost histograms the realized-delay
+    /// series is compared against.
+    fn on_migration(&mut self, rec: &MigrationRecord) {
+        if let Some(sink) = &mut self.sink {
+            let root = sink.root(&rec.session, rec.t_secs);
+            sink.span(
+                "migrate",
+                rec.t_secs,
+                rec.resume_at_secs,
+                Some(&rec.session),
+                Some(&rec.from),
+                Some(root),
+                vec![
+                    ("from", rec.from.as_str().into()),
+                    ("to", rec.to.as_str().into()),
+                    ("moved_bytes", AttrValue::F64(rec.moved_bytes)),
+                    ("remaining_bytes", AttrValue::F64(rec.remaining_bytes)),
+                    ("drain_s", AttrValue::F64(rec.drain_secs)),
+                    ("est_benefit_j", AttrValue::F64(rec.est_benefit_j)),
+                    ("est_cost_j", AttrValue::F64(rec.est_cost_j)),
+                    ("policy", rec.policy.into()),
+                ],
+            );
+        }
+        if let Some(m) = &mut self.metrics {
+            m.registry.inc("migrations.executed", 1);
+            m.registry.record("migration.est_benefit_j", rec.est_benefit_j);
+            m.registry.record("migration.est_cost_j", rec.est_cost_j);
+        }
+    }
+
+    /// A migrated session re-admitted: how late past the planned resume
+    /// instant it actually landed (0 when the drain window ended exactly
+    /// on plan, positive when the fleet kept it queued longer).
+    fn on_migration_resumed(&mut self, now: f64, planned_resume: f64) {
+        if let Some(m) = &mut self.metrics {
+            m.registry.record("migration.realized_delay_s", (now - planned_resume).max(0.0));
+        }
+    }
+
+    /// The rebalancer's audited scan: one `rebalance_proposal` event per
+    /// candidate verdict, accepted and rejected alike, with the cost
+    /// model's reasoning attached.
+    fn on_rebalance_verdicts(&mut self, now: f64, verdicts: &[MoveVerdict], hosts: &[HostSpec]) {
+        if let Some(m) = &mut self.metrics {
+            let rejected = verdicts.iter().filter(|v| !v.accepted).count() as u64;
+            m.registry.inc("rebalance.rejected", rejected);
+        }
+        let Some(sink) = &mut self.sink else { return };
+        for v in verdicts {
+            let root = sink.root_of(&v.session);
+            sink.event(
+                "rebalance_proposal",
+                now,
+                Some(&v.session),
+                Some(&hosts[v.from].name),
+                root,
+                vec![
+                    ("to", hosts[v.to].name.as_str().into()),
+                    ("est_benefit_j", AttrValue::F64(v.est_benefit_j)),
+                    ("est_cost_j", AttrValue::F64(v.est_cost_j)),
+                    ("est_power_drop_w", AttrValue::F64(v.est_power_drop_w)),
+                    ("accepted", AttrValue::Bool(v.accepted)),
+                    ("reason", v.reason.into()),
+                ],
+            );
+        }
+    }
+
+    /// The health monitor flagged a degrading host.
+    fn on_advisory(&mut self, a: &Advisory, host_name: &str) {
+        if let Some(sink) = &mut self.sink {
+            sink.event(
+                "health_advisory",
+                a.at_secs,
+                None,
+                Some(host_name),
+                None,
+                vec![
+                    ("observed_bps", AttrValue::F64(a.observed_bps)),
+                    ("expected_bps", AttrValue::F64(a.expected_bps)),
+                    ("below_since_s", AttrValue::F64(a.below_since_secs)),
+                ],
+            );
+        }
+        if let Some(m) = &mut self.metrics {
+            m.registry.inc("health.advisories", 1);
+        }
+    }
+
+    /// Segment boundary: drain every host's trace buffer into the sink
+    /// in host-index order (the merge discipline that keeps the log
+    /// shard-invariant) and snapshot the fleet for the timeline.
+    fn on_segment(&mut self, worlds: &mut [HostWorld], queued: usize) {
+        if let Some(sink) = &mut self.sink {
+            for w in worlds.iter_mut() {
+                sink.absorb(w.take_trace());
+            }
+        }
+        let Some(m) = &mut self.metrics else { return };
+        let t = worlds[0].now_secs();
+        let mut moved = 0.0;
+        let mut joules = 0.0;
+        let mut warm = 0u64;
+        let mut slow = 0u64;
+        let mut aimd = 0u64;
+        let mut active = 0u64;
+        for w in worlds.iter() {
+            moved += w.moved_bytes();
+            joules += w.sim.client_energy().as_joules();
+            let (tw, ts) = w.sim.tick_counts();
+            warm += tw;
+            slow += ts;
+            aimd += w.sim.slots().iter().map(|s| s.engine.aimd_backoffs()).sum::<u64>();
+            active += w.occupancy() as u64;
+        }
+        let dt = t - self.last_t;
+        let (goodput_bps, watts) = if dt > 1e-9 {
+            ((moved - self.last_moved) / dt, (joules - self.last_joules) / dt)
+        } else {
+            (0.0, 0.0)
+        };
+        if dt > 1e-9 {
+            m.registry.record("goodput.segment_bps", goodput_bps);
+            m.registry.record("watts.segment_w", watts);
+        }
+        m.registry.inc("stepper.warm_ticks", warm - self.last_warm);
+        m.registry.inc("stepper.slow_ticks", slow - self.last_slow);
+        m.registry.inc("aimd.backoffs", aimd.saturating_sub(self.last_aimd));
+        m.timeline.snapshots.push(SegmentSnapshot {
+            t_secs: t,
+            active_sessions: active,
+            queued: queued as u64,
+            goodput_bps,
+            watts,
+            warm_ticks: warm - self.last_warm,
+            slow_ticks: slow - self.last_slow,
+        });
+        self.last_t = t;
+        self.last_moved = moved;
+        self.last_joules = joules;
+        self.last_warm = warm;
+        self.last_slow = slow;
+        self.last_aimd = aimd;
+    }
+
+    /// End of run: close every host's still-open residency, drain the
+    /// leftovers and finalize the merged log.
+    fn finish(mut self, worlds: &mut [HostWorld], end_secs: f64) -> FinishedCollector {
+        if let Some(sink) = &mut self.sink {
+            for w in worlds.iter_mut() {
+                w.finalize_trace();
+                sink.absorb(w.take_trace());
+            }
+        }
+        FinishedCollector {
+            trace: self.sink.map(|s| s.finalize(end_secs)),
+            metrics: self.metrics,
+        }
+    }
+}
+
+/// What [`Collector::finish`] hands the outcome.
+struct FinishedCollector {
+    trace: Option<Vec<TraceRecord>>,
+    metrics: Option<FleetMetrics>,
+}
+
 /// Run a multi-host fleet to completion (or the time cap): sessions
 /// arrive on their [`TenantSpec::arrive_at`] schedule, the
 /// [`Dispatcher`] places each one, and every host runs the shared
@@ -1077,6 +1471,20 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
             )
         })
         .collect();
+
+    // The observability funnel: trace sink and/or metrics registry,
+    // inert (and bit-invisible to the run) unless enabled. Host worlds
+    // get per-host trace buffers on tracks 1..=N; the collector itself
+    // is track 0.
+    let mut coll = Collector::new(cfg.trace, cfg.metrics);
+    if cfg.trace {
+        for (i, w) in worlds.iter_mut().enumerate() {
+            w.enable_trace(i as u64 + 1);
+        }
+    }
+    if let Some(m) = &mut coll.metrics {
+        m.registry.set_gauge("fleet.hosts", cfg.hosts.len() as f64);
+    }
 
     // Arrivals ordered by request time (stable for equal instants, so
     // spec order breaks ties deterministically).
@@ -1146,6 +1554,9 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         {
             effective_cap = cap_events.pop_front().expect("non-empty").cap;
             dispatcher.set_power_cap(effective_cap);
+            if coll.active() {
+                coll.on_cap_event(now, effective_cap);
+            }
         }
 
         // Scripted faults due now fire next — before re-admissions and
@@ -1182,7 +1593,7 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                                 };
                                 worlds[action.host]
                                     .mark_session_failed(tenant, RunOutcome::DeadLettered);
-                                dead_letters.push(DeadLetter {
+                                let letter = DeadLetter {
                                     session: pre.name,
                                     host: action.host,
                                     reason,
@@ -1190,7 +1601,11 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                                     moved_bytes: total_delivered,
                                     remaining_bytes: pre.remaining.as_f64(),
                                     at_secs: now,
-                                });
+                                };
+                                if coll.active() {
+                                    coll.on_dead_letter(&letter, &cfg.hosts[action.host].name);
+                                }
+                                dead_letters.push(letter);
                             } else {
                                 worlds[action.host]
                                     .mark_session_failed(tenant, RunOutcome::Failed);
@@ -1206,6 +1621,9 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                                     resume_at_secs: now + backoff,
                                     remaining_bytes: pre.remaining.as_f64(),
                                 });
+                                if coll.active() {
+                                    coll.on_retry(retry_log.last().expect("just pushed"));
+                                }
                                 retries.push(
                                     TenantSpec::new(pre.name, pre.dataset, pre.algorithm)
                                         .arriving_at(SimTime::from_secs(now + backoff)),
@@ -1226,6 +1644,9 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                     kind: action.kind,
                     sessions_hit,
                 });
+                if coll.active() {
+                    coll.on_fault(faults_log.last().expect("just pushed"));
+                }
             }
         }
 
@@ -1275,6 +1696,10 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         &candidates,
                         &cfg.hosts,
                     ));
+                    if coll.active() {
+                        coll.on_decision(decisions.last().expect("just pushed"));
+                        coll.on_migration_resumed(now, resumed_at);
+                    }
                     if h != target {
                         migrations[record].to_host = h;
                         migrations[record].to = cfg.hosts[h].name.clone();
@@ -1285,6 +1710,7 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         .map(|c| c.marginal_j_per_byte());
                     warm_start_on_host(&mut spec, &worlds[h], learned.as_ref());
                     let fp = learned.map(|l| l.fingerprint);
+                    coll.on_admit(&mut worlds[h], &spec.name, now);
                     worlds[h].register_arrival(spec, fp, marginal);
                 }
                 _ => {
@@ -1298,6 +1724,9 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         &candidates,
                         &cfg.hosts,
                     ));
+                    if coll.active() {
+                        coll.on_decision(decisions.last().expect("just pushed"));
+                    }
                     queue.push_front((spec, resumed_at, learned, Some(record)));
                 }
             }
@@ -1355,12 +1784,16 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                             &candidates,
                             &cfg.hosts,
                         ));
+                        if coll.active() {
+                            coll.on_decision(decisions.last().expect("just pushed"));
+                        }
                         let marginal = candidates
                             .iter()
                             .find(|c| c.host == h)
                             .map(|c| c.marginal_j_per_byte());
                         warm_start_on_host(&mut spec, &worlds[h], learned.as_ref());
                         let fp = learned.map(|l| l.fingerprint);
+                        coll.on_admit(&mut worlds[h], &spec.name, now);
                         worlds[h].register_arrival(spec, fp, marginal);
                     }
                     _ => {
@@ -1372,6 +1805,9 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                             &candidates,
                             &cfg.hosts,
                         ));
+                        if coll.active() {
+                            coll.on_decision(decisions.last().expect("just pushed"));
+                        }
                         deferred.push((spec, resumed_at, learned, None));
                     }
                 }
@@ -1413,6 +1849,12 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         &candidates,
                         &cfg.hosts,
                     ));
+                    if coll.active() {
+                        coll.on_decision(decisions.last().expect("just pushed"));
+                        if migrated.is_some() {
+                            coll.on_migration_resumed(now, requested);
+                        }
+                    }
                     // A resuming migrant that lands off its planned
                     // target corrects its migration record.
                     if let Some(rec) = migrated {
@@ -1426,6 +1868,7 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         .find(|c| c.host == h)
                         .map(|c| c.marginal_j_per_byte());
                     warm_start_on_host(&mut spec, &worlds[h], lq.as_ref());
+                    coll.on_admit(&mut worlds[h], &spec.name, now);
                     worlds[h].register_arrival(spec, lq.map(|l| l.fingerprint), marginal);
                 }
                 _ => break,
@@ -1463,12 +1906,16 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         &candidates,
                         &cfg.hosts,
                     ));
+                    if coll.active() {
+                        coll.on_decision(decisions.last().expect("just pushed"));
+                    }
                     let marginal = candidates
                         .iter()
                         .find(|c| c.host == h)
                         .map(|c| c.marginal_j_per_byte());
                     warm_start_on_host(&mut spec, &worlds[h], learned.as_ref());
                     let fp = learned.map(|l| l.fingerprint);
+                    coll.on_admit(&mut worlds[h], &spec.name, now);
                     worlds[h].register_arrival(spec, fp, marginal);
                 }
                 _ => {
@@ -1480,6 +1927,9 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                         &candidates,
                         &cfg.hosts,
                     ));
+                    if coll.active() {
+                        coll.on_decision(decisions.last().expect("just pushed"));
+                    }
                     queue.push_back((spec, requested, learned, None));
                 }
             }
@@ -1592,6 +2042,9 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                     let occ = w.occupancy();
                     let expected_bps = w.projected_session_bps(occ) * occ as f64;
                     if let Some(a) = health.observe(i, now, observed_bps, expected_bps) {
+                        if coll.active() {
+                            coll.on_advisory(&a, &cfg.hosts[i].name);
+                        }
                         advisories.push(a);
                     }
                 }
@@ -1663,10 +2116,22 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
             };
             let (proposal, policy_id) = match evac {
                 Some(mv) => (Some(mv), "evacuate"),
-                None if rebalancer.active() => (
-                    rebalancer.propose(&views, effective_cap.map(|p| p.as_watts())),
-                    rebalancer.policy().id(),
-                ),
+                None if rebalancer.active() => {
+                    let cap_w = effective_cap.map(|p| p.as_watts());
+                    // With the collector on, the audited scan records a
+                    // verdict per candidate (identical decision — the
+                    // executor test pins plain == audited); off, the
+                    // plain path runs verbatim.
+                    let proposal = if coll.active() {
+                        let mut verdicts: Vec<MoveVerdict> = Vec::new();
+                        let p = rebalancer.propose_audited(&views, cap_w, &mut verdicts);
+                        coll.on_rebalance_verdicts(now, &verdicts, &cfg.hosts);
+                        p
+                    } else {
+                        rebalancer.propose(&views, cap_w)
+                    };
+                    (proposal, rebalancer.policy().id())
+                }
                 None => (None, rebalancer.policy().id()),
             };
             if let Some(mv) = proposal {
@@ -1696,12 +2161,21 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
                     est_cost_j: mv.est_cost_j,
                     policy: policy_id,
                 });
+                if coll.active() {
+                    coll.on_migration(migrations.last().expect("just pushed"));
+                }
                 in_flight.push(InFlight {
                     spec,
                     target: mv.to,
                     record: migrations.len() - 1,
                 });
             }
+        }
+
+        // Segment boundary complete: drain host trace buffers (in host
+        // index order) and snapshot the fleet for the metrics timeline.
+        if coll.active() {
+            coll.on_segment(&mut worlds, queue.len());
         }
     }
 
@@ -1712,6 +2186,11 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         && dead_letters.is_empty()
         && worlds.iter().all(|w| w.all_done());
     let duration = worlds[0].sim.now.since(SimTime::ZERO);
+    // Close still-open residencies (time-capped sessions), drain the
+    // last host buffers and finalize the merged log before `finish`
+    // consumes the worlds.
+    let end_secs = worlds[0].now_secs();
+    let observed = coll.finish(&mut worlds, end_secs);
     let unplaced: Vec<String> = queue
         .iter()
         .map(|(s, _, _, _)| s.name.clone())
@@ -1769,6 +2248,8 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         faults: faults_log,
         retries: retry_log,
         advisories,
+        trace: observed.trace,
+        metrics: observed.metrics,
     }
 }
 
@@ -2131,5 +2612,104 @@ mod tests {
         for h in &out.fleet.hosts {
             assert!(h.client_energy.as_joules() > 0.0, "{} unbilled", h.host);
         }
+        // Observability is strictly opt-in.
+        assert!(out.trace.is_none());
+        assert!(out.metrics.is_none());
+    }
+
+    #[test]
+    fn collector_produces_reconciled_trace_and_metrics() {
+        let hosts = vec![
+            HostSpec::new("a", testbeds::cloudlab()),
+            HostSpec::new("b", testbeds::cloudlab()),
+        ];
+        let sessions = vec![
+            TenantSpec::new(
+                "s0",
+                crate::dataset::standard::medium_dataset(1),
+                AlgorithmKind::MaxThroughput,
+            ),
+            TenantSpec::new(
+                "s1",
+                crate::dataset::standard::medium_dataset(2),
+                AlgorithmKind::MaxThroughput,
+            ),
+        ];
+        let cfg = DispatcherConfig::new(hosts, PlacementKind::LeastLoaded)
+            .with_sessions(sessions)
+            .with_seed(5)
+            .with_trace()
+            .with_metrics();
+        let out = run_dispatcher(&cfg);
+        assert!(out.fleet.completed);
+        let trace = out.trace.as_ref().expect("trace enabled");
+        for s in ["s0", "s1"] {
+            assert!(
+                trace
+                    .iter()
+                    .any(|r| r.name == "session" && r.session.as_deref() == Some(s)),
+                "{s} has a root span"
+            );
+            assert!(
+                trace.iter().any(|r| r.name == "admit"
+                    && r.session.as_deref() == Some(s)
+                    && r.is_span()),
+                "{s} has a residency span"
+            );
+            assert!(
+                trace
+                    .iter()
+                    .any(|r| r.name == "complete" && r.session.as_deref() == Some(s)),
+                "{s} has a completion event"
+            );
+        }
+        // One placement event per decision, each with per-host scores.
+        assert_eq!(
+            trace.iter().filter(|r| r.name == "placement").count(),
+            out.decisions.len()
+        );
+        assert_eq!(
+            trace.iter().filter(|r| r.name == "placement_score").count(),
+            out.decisions.iter().map(|d| d.scores.len()).sum::<usize>()
+        );
+        // The residency span's byte/joule attrs reconcile *exactly* with
+        // the tenant outcome — same reads, same instant.
+        for t in &out.fleet.tenants {
+            let span = trace
+                .iter()
+                .find(|r| r.name == "admit" && r.session.as_deref() == Some(t.name.as_str()))
+                .expect("residency span");
+            assert_eq!(
+                span.attr_f64("moved_bytes").unwrap().to_bits(),
+                t.moved.as_f64().to_bits(),
+                "{} moved bytes reconcile",
+                t.name
+            );
+            assert_eq!(
+                span.attr_f64("attributed_j").unwrap().to_bits(),
+                t.attributed_energy.as_joules().to_bits(),
+                "{} attributed joules reconcile",
+                t.name
+            );
+        }
+        // The log is sorted by (t0, id) and ids are unique.
+        for w in trace.windows(2) {
+            assert!(
+                (w[0].t0_secs, w[0].id) <= (w[1].t0_secs, w[1].id),
+                "log sorted by (t0, id)"
+            );
+        }
+        let mut ids: Vec<u64> = trace.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "record ids unique");
+
+        let m = out.metrics.as_ref().expect("metrics enabled");
+        assert_eq!(m.registry.counter("placements.admitted"), 2);
+        assert!(m.registry.histogram("queue.wait_s").is_some());
+        assert!(m.registry.histogram("goodput.segment_bps").is_some());
+        assert!(!m.timeline.snapshots.is_empty());
+        assert_eq!(m.registry.gauge("fleet.hosts"), Some(2.0));
+        assert!(m.warm_hit_rate().is_some(), "ticks were counted");
     }
 }

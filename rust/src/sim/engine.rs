@@ -151,6 +151,12 @@ pub struct Simulation {
     scratch_rates: Vec<f64>,
     last_world_stats: TickStats,
     epoch: EpochCache,
+    /// Ticks run on the per-tick (slow) path vs. inside a warm batch.
+    /// Observability only ([`Self::tick_counts`]) — the split is
+    /// shard-count-sensitive by design (the serial driver never warm
+    /// batches), so it feeds metrics, never the trace.
+    ticks_slow: u64,
+    ticks_warm: u64,
 }
 
 impl Simulation {
@@ -258,6 +264,8 @@ impl Simulation {
             scratch_rates: Vec::new(),
             last_world_stats: TickStats::default(),
             epoch: EpochCache::default(),
+            ticks_slow: 0,
+            ticks_warm: 0,
         }
     }
 
@@ -388,6 +396,7 @@ impl Simulation {
 
     fn step_inner(&mut self, force_naive: bool) -> TickStats {
         let dt = self.tick;
+        self.ticks_slow += 1;
         self.link.tick(self.now, dt, &mut self.rng);
 
         let reuse = !force_naive && self.epoch.valid && self.epoch_stamps_match();
@@ -668,6 +677,7 @@ impl Simulation {
                 None => break,
             }
         }
+        self.ticks_warm += done;
         (done, last)
     }
 
@@ -689,7 +699,17 @@ impl Simulation {
                 None => break,
             }
         }
+        self.ticks_warm += done;
         (done, last)
+    }
+
+    /// Cumulative `(warm, slow)` tick counts for this world: ticks run
+    /// inside a warm batch vs. on the per-tick path. The split depends
+    /// on the driver (the serial dispatcher loop never warm-batches),
+    /// so it is exported through the metrics registry only — never the
+    /// trace, which must stay bit-identical across shard counts.
+    pub fn tick_counts(&self) -> (u64, u64) {
+        (self.ticks_warm, self.ticks_slow)
     }
 
     /// Path + transfer model view for the predictive governor.

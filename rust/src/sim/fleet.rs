@@ -15,6 +15,8 @@
 //! per-host driver state lives in the crate-internal `HostWorld` so both
 //! entry points share one implementation.
 
+use std::collections::BTreeMap;
+
 use crate::config::experiment::{GovernorKind, TunerParams};
 use crate::config::Testbed;
 use crate::coordinator::fleet::{FleetPolicy, FleetPolicyKind};
@@ -23,6 +25,7 @@ use crate::cpusim::{CpuDemand, CpuState};
 use crate::dataset::{Dataset, FileSpec};
 use crate::history::{RunOutcome, RunRecord, TrajPoint, WorkloadFingerprint};
 use crate::netsim::{BandwidthEvent, CrossTrafficConfig};
+use crate::obs::trace::{AttrValue, TraceBuf, TraceRecord};
 use crate::resilience::DeadLetter;
 use crate::sim::{Simulation, TickStats, TuneCtx, MAX_APP_UTILIZATION};
 use crate::transfer::TransferEngine;
@@ -381,6 +384,35 @@ struct TenantMeta {
     kind: AlgorithmKind,
 }
 
+/// Per-host trace state ([`HostWorld`]'s side of the ISSUE-9 tracer).
+/// Lives entirely at segment boundaries: every emission happens from the
+/// driver-event methods (`admissions_due`, `post_segment`, `preempt`),
+/// never inside the tick loop, so the record stream is a pure function
+/// of this host's deterministic event order — shard-count invariant by
+/// construction.
+struct HostTrace {
+    /// This host's record buffer (track = host index + 1).
+    buf: TraceBuf,
+    /// Session-root span ids (allocated on the dispatcher's track 0 by
+    /// its collector, handed over via [`HostWorld::trace_root`]).
+    roots: BTreeMap<String, u64>,
+    /// Open residency spans by tenant index: ids are pre-allocated at
+    /// admission so child records can reference them, the span record
+    /// itself is emitted at close (departure, preemption or time cap).
+    open: BTreeMap<usize, OpenResidency>,
+}
+
+/// One open residency span (see [`HostTrace::open`]).
+struct OpenResidency {
+    /// Pre-allocated id of the `admit` span.
+    span: u64,
+    /// Admission instant, seconds.
+    t0: f64,
+    /// Open slow-start phase `(pre-allocated id, t0)`; closed at the
+    /// first tuning timeout where the FSM has left slow start.
+    slow_start: Option<(u64, f64)>,
+}
+
 /// Install the policy's per-session channel budget on one tenant's
 /// engine: future `set_num_channels` calls clamp to it (no churn), and a
 /// count already above the new budget shrinks once now.
@@ -420,6 +452,10 @@ pub(crate) struct HostWorld {
     fleet_step: f64,
     next_fleet: f64,
     channel_cap: Option<u32>,
+    /// Segment-boundary tracer state; `None` (the default) keeps every
+    /// hook a no-op so untraced runs take the exact code path they
+    /// always did.
+    trace: Option<HostTrace>,
 }
 
 impl HostWorld {
@@ -522,7 +558,163 @@ impl HostWorld {
             fleet_step,
             next_fleet: fleet_step,
             channel_cap: None,
+            trace: None,
         }
+    }
+
+    /// Turn on segment-boundary tracing for this world, emitting on
+    /// `track` (the dispatcher passes host index + 1; track 0 is the
+    /// collector's).
+    pub(crate) fn enable_trace(&mut self, track: u64) {
+        self.trace = Some(HostTrace {
+            buf: TraceBuf::new(track),
+            roots: BTreeMap::new(),
+            open: BTreeMap::new(),
+        });
+    }
+
+    /// Hand this world the collector-allocated root span id for
+    /// `session`, so residency spans opened here parent onto it. The
+    /// dispatcher calls this right after [`Self::register_arrival`].
+    pub(crate) fn trace_root(&mut self, session: &str, root: u64) {
+        if let Some(tr) = self.trace.as_mut() {
+            tr.roots.insert(session.to_string(), root);
+        }
+    }
+
+    /// Drain this world's buffered trace records (the dispatcher merges
+    /// per-host buffers in host-index order at every segment boundary).
+    pub(crate) fn take_trace(&mut self) -> Vec<TraceRecord> {
+        self.trace.as_mut().map(|tr| tr.buf.drain()).unwrap_or_default()
+    }
+
+    /// Close every still-open residency span at the current clock with
+    /// `end="timecap"` — called once by the dispatcher before `finish`
+    /// so sessions cut off by the run's time cap still serialize their
+    /// byte/joule attribution.
+    pub(crate) fn finalize_trace(&mut self) {
+        let open: Vec<usize> = match &self.trace {
+            Some(tr) => tr.open.keys().copied().collect(),
+            None => return,
+        };
+        for tenant in open {
+            self.trace_close_residency(tenant, "timecap");
+        }
+    }
+
+    /// Open the residency (`admit`) span for a tenant admitted *now*:
+    /// the span id is pre-allocated so children can reference it, the
+    /// record itself is emitted at close with the final byte/joule
+    /// attribution. A session admitted in slow start also opens its
+    /// `slow_start` phase span.
+    fn trace_open_residency(&mut self, tenant: usize, now: f64) {
+        let in_slow_start = self.tenants[tenant].algo.fsm_label() == "slow-start";
+        let Some(tr) = self.trace.as_mut() else { return };
+        let span = tr.buf.next_id();
+        let slow_start = in_slow_start.then(|| (tr.buf.next_id(), now));
+        tr.open.insert(tenant, OpenResidency { span, t0: now, slow_start });
+    }
+
+    /// Emit the `admit` residency span for one tenant, ending now. The
+    /// byte/joule attributes are read with the *identical* expressions
+    /// [`Self::finish`] uses for [`TenantOutcome`] — that is what makes
+    /// the trace reconcile exactly with [`FleetOutcome`]. `end` is one
+    /// of `complete`, `preempt`, `timecap`.
+    fn trace_close_residency(&mut self, tenant: usize, end: &str) {
+        let Some(tr) = self.trace.as_mut() else { return };
+        let Some(open) = tr.open.remove(&tenant) else { return };
+        let t = &self.tenants[tenant];
+        let slot = self.sim.slot(t.slot);
+        let engine = &slot.engine;
+        let moved = engine.total().saturating_sub(engine.remaining());
+        let now = self.sim.now.as_secs();
+        let session = &self.specs[tenant].name;
+        let root = tr.roots.get(session).copied();
+        if let Some((ss, ss_t0)) = open.slow_start {
+            tr.buf.span(
+                Some(ss),
+                "slow_start",
+                ss_t0,
+                now,
+                Some(session),
+                Some(&self.name),
+                Some(open.span),
+                Vec::new(),
+            );
+        }
+        tr.buf.span(
+            Some(open.span),
+            "admit",
+            open.t0,
+            now,
+            Some(session),
+            Some(&self.name),
+            root,
+            vec![
+                ("end", end.into()),
+                ("moved_bytes", AttrValue::F64(moved.as_f64())),
+                ("attributed_j", AttrValue::F64(slot.attributed_energy().as_joules())),
+                (
+                    "attributed_pkg_j",
+                    AttrValue::F64(slot.attributed_package_energy().as_joules()),
+                ),
+                ("peak_channels", t.peak_channels.into()),
+            ],
+        );
+    }
+
+    /// Emit one `tune` decision event (and close the tenant's
+    /// `slow_start` phase at the first timeout past it).
+    fn trace_tune(&mut self, tenant: usize, ch_before: u32, throughput_bps: f64, power_w: f64) {
+        let fsm = self.tenants[tenant].algo.fsm_label();
+        let ch_after = self.tenants[tenant].last_channels;
+        let now = self.sim.now.as_secs();
+        let Some(tr) = self.trace.as_mut() else { return };
+        let session = &self.specs[tenant].name;
+        let parent = tr.open.get(&tenant).map(|o| o.span);
+        tr.buf.event(
+            "tune",
+            now,
+            Some(session),
+            Some(&self.name),
+            parent,
+            vec![
+                ("fsm", fsm.into()),
+                ("channels_before", ch_before.into()),
+                ("channels", ch_after.into()),
+                ("throughput_bps", AttrValue::F64(throughput_bps)),
+                ("power_w", AttrValue::F64(power_w)),
+                ("halved", (ch_after < ch_before).into()),
+            ],
+        );
+        if fsm != "slow-start" {
+            if let Some(o) = tr.open.get_mut(&tenant) {
+                if let Some((ss, ss_t0)) = o.slow_start.take() {
+                    let span = o.span;
+                    tr.buf.span(
+                        Some(ss),
+                        "slow_start",
+                        ss_t0,
+                        now,
+                        Some(session),
+                        Some(&self.name),
+                        Some(span),
+                        Vec::new(),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Emit the departure pair for a tenant that completed now: the
+    /// closed `admit` span plus a `complete` instant under it.
+    fn trace_complete(&mut self, tenant: usize) {
+        let parent = self.trace.as_ref().and_then(|tr| tr.open.get(&tenant).map(|o| o.span));
+        self.trace_close_residency(tenant, "complete");
+        let now = self.sim.now.as_secs();
+        let Some(tr) = self.trace.as_mut() else { return };
+        let session = &self.specs[tenant].name;
+        tr.buf.event("complete", now, Some(session), Some(&self.name), parent, Vec::new());
     }
 
     /// Register a session that arrives *now* (a dispatcher placement): its
@@ -568,8 +760,9 @@ impl HostWorld {
         // admissions in this call count each other in admission order.
         let mut active =
             self.tenants.iter().filter(|t| t.admitted && t.finished_at.is_none()).count() as u32;
-        for (t, spec) in self.tenants.iter_mut().zip(&self.specs) {
-            if !t.admitted && spec.arrive_at.as_secs() <= now + 1e-9 {
+        for i in 0..self.tenants.len() {
+            let t = &mut self.tenants[i];
+            if !t.admitted && self.specs[i].arrive_at.as_secs() <= now + 1e-9 {
                 t.admitted = true;
                 t.contention = active;
                 active += 1;
@@ -580,6 +773,7 @@ impl HostWorld {
                 engine.set_num_channels(t.init_channels);
                 t.peak_channels = engine.num_channels();
                 t.last_channels = engine.num_channels();
+                self.trace_open_residency(i, now);
             }
         }
     }
@@ -697,12 +891,14 @@ impl HostWorld {
         // Per-tenant tuning timeouts. A tick that overshoots several
         // timeouts drains once and then advances `next_timeout` past the
         // clock, so long ticks cannot skew the tuning cadence.
-        for t in self.tenants.iter_mut() {
+        for i in 0..self.tenants.len() {
+            let t = &mut self.tenants[i];
             if !t.admitted || t.finished_at.is_some() {
                 continue;
             }
             if self.sim.now.as_secs() + 1e-9 >= t.next_timeout {
                 let tel = self.sim.drain_telemetry_for(t.slot);
+                let ch_before = tel.num_channels;
                 if self.record_timeline {
                     t.timeline.push(TimelinePoint {
                         t_secs: tel.now.as_secs(),
@@ -730,6 +926,11 @@ impl HostWorld {
                 t.next_timeout += t.timeout;
                 while self.sim.now.as_secs() + 1e-9 >= t.next_timeout {
                     t.next_timeout += t.timeout;
+                }
+                if self.trace.is_some() {
+                    let throughput_bps = tel.avg_throughput.as_bytes_per_sec();
+                    let power_w = tel.avg_power.as_watts();
+                    self.trace_tune(i, ch_before, throughput_bps, power_w);
                 }
             }
         }
@@ -780,7 +981,8 @@ impl HostWorld {
         }
 
         // Departures: a finished tenant releases its share of the host.
-        for t in self.tenants.iter_mut() {
+        for i in 0..self.tenants.len() {
+            let t = &mut self.tenants[i];
             if t.admitted
                 && t.finished_at.is_none()
                 && self.sim.slot(t.slot).engine.is_done()
@@ -792,6 +994,9 @@ impl HostWorld {
                 t.settled_cores = self.sim.host.client.active_cores();
                 t.settled_pstate = self.sim.host.client.freq_index() as u32;
                 self.sim.deactivate_slot(t.slot);
+                if self.trace.is_some() {
+                    self.trace_complete(i);
+                }
             }
         }
     }
@@ -868,6 +1073,10 @@ impl HostWorld {
     /// engine keeps them only as inert bookkeeping (`all_done` treats the
     /// preempted tenant as departed).
     pub(crate) fn preempt(&mut self, tenant: usize) -> PreemptedSession {
+        // Close the residency span first: the byte/joule reads below are
+        // unaffected by the drain, and the close must see the slot still
+        // resident.
+        self.trace_close_residency(tenant, "preempt");
         let now = self.sim.now;
         let t = &mut self.tenants[tenant];
         debug_assert!(

@@ -80,6 +80,10 @@ pub struct TransferEngine {
     /// Seconds until the next multiplicative decrease is allowed —
     /// classic TCP halves at most once per RTT, not once per ACK (tick).
     aimd_cooldown_s: f64,
+    /// Total multiplicative decreases taken (per stream, across the
+    /// engine's lifetime). Observability only — the fleet metrics
+    /// registry reads it; nothing on the decision path does.
+    aimd_backoffs: u64,
     /// BBR-like variant (feature `bbr`): drain-to-delivered-BDP instead
     /// of halving, 25%-per-RTT probing instead of one MSS per RTT.
     #[cfg(feature = "bbr")]
@@ -127,6 +131,7 @@ impl TransferEngine {
             generation: 0,
             aimd: false,
             aimd_cooldown_s: 0.0,
+            aimd_backoffs: 0,
             #[cfg(feature = "bbr")]
             bbr: false,
         };
@@ -158,6 +163,13 @@ impl TransferEngine {
     /// True when AIMD competing-flow dynamics are active.
     pub fn aimd_enabled(&self) -> bool {
         self.aimd
+    }
+
+    /// Total multiplicative decreases this engine's streams have taken
+    /// (0 unless AIMD/BBR is on). Pure read; feeds the `aimd.backoffs`
+    /// fleet counter.
+    pub fn aimd_backoffs(&self) -> u64 {
+        self.aimd_backoffs
     }
 
     /// Use the BBR-like congestion response instead of AIMD halving
@@ -592,6 +604,7 @@ impl TransferEngine {
                 let clipped = rate < demand * (1.0 - 1e-9);
                 if clipped && md_armed {
                     backed_off = true;
+                    self.aimd_backoffs += 1;
                     #[cfg(feature = "bbr")]
                     if self.bbr {
                         s.drain_to_delivered(rate, rtt);

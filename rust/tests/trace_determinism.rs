@@ -1,0 +1,307 @@
+//! Acceptance tests for the observability layer (ISSUE 9).
+//!
+//! Tracing is only admissible if it is *free* in the determinism
+//! currency the rest of the repo trades in:
+//!
+//! * **off-path identity** — a traced run's simulated outcome is
+//!   bit-identical to an untraced run of the same `(config, seed)`;
+//! * **replay identity** — two traced runs of one `(config, seed)`
+//!   produce byte-identical JSONL (and Chrome) exports;
+//! * **shard invariance** — the trace bytes are identical across
+//!   `--shards` 1/2/8; metrics agree too, except the warm/slow stepper
+//!   occupancy carve-out (an implementation detail of the driver, see
+//!   `obs::metrics`'s module docs);
+//! * **reconciliation** — the acceptance scenario (admit → migrate →
+//!   host failure → retry → complete) yields one connected span tree
+//!   per session whose byte/joule attributes equal the corresponding
+//!   `FleetOutcome` entries to the bit.
+
+use greendt::config::testbeds;
+use greendt::coordinator::{AlgorithmKind, PlacementKind};
+use greendt::dataset::standard;
+use greendt::obs::{chrome_trace_json, trace_jsonl, FleetMetrics, TraceLog};
+use greendt::rebalance::{RebalanceConfig, RebalancePolicyKind};
+use greendt::resilience::{FaultSchedule, ResilienceConfig};
+use greendt::sim::dispatcher::{
+    run_dispatcher, DispatchOutcome, DispatcherConfig, HostSpec, SessionSpec,
+};
+use greendt::units::SimTime;
+
+fn assert_f64_bits(a: f64, b: f64, what: &str) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b}");
+}
+
+/// The outcome fields tracing must never perturb, compared exactly.
+fn assert_outcomes_identical(a: &DispatchOutcome, b: &DispatchOutcome, label: &str) {
+    assert_eq!(a.fleet.completed, b.fleet.completed, "{label}: completed");
+    assert_f64_bits(
+        a.fleet.duration.as_secs(),
+        b.fleet.duration.as_secs(),
+        &format!("{label}: duration"),
+    );
+    assert_f64_bits(
+        a.fleet.moved.as_f64(),
+        b.fleet.moved.as_f64(),
+        &format!("{label}: moved"),
+    );
+    assert_f64_bits(
+        a.fleet.client_energy.as_joules(),
+        b.fleet.client_energy.as_joules(),
+        &format!("{label}: client energy"),
+    );
+    assert_eq!(a.fleet.tenants.len(), b.fleet.tenants.len(), "{label}: tenant count");
+    for (x, y) in a.fleet.tenants.iter().zip(&b.fleet.tenants) {
+        let t = format!("{label}/{}", x.name);
+        assert_eq!(x.name, y.name, "{t}: order");
+        assert_f64_bits(x.moved.as_f64(), y.moved.as_f64(), &format!("{t}: moved"));
+        assert_f64_bits(
+            x.attributed_energy.as_joules(),
+            y.attributed_energy.as_joules(),
+            &format!("{t}: attributed energy"),
+        );
+    }
+    assert_eq!(a.decisions.len(), b.decisions.len(), "{label}: decisions");
+    assert_eq!(a.migrations.len(), b.migrations.len(), "{label}: migrations");
+    assert_eq!(a.retries.len(), b.retries.len(), "{label}: retries");
+    assert_eq!(a.unplaced, b.unplaced, "{label}: unplaced");
+}
+
+/// A five-host heterogeneous fleet with staggered arrivals — the same
+/// shape `stepper_equivalence` pins, busy enough that admissions,
+/// completions and tuning land across many segment boundaries.
+fn busy_cfg(shards: usize) -> DispatcherConfig {
+    let testbeds = testbeds::all();
+    let hosts: Vec<HostSpec> = (0..5)
+        .map(|i| {
+            let tb = testbeds[i % testbeds.len()].clone();
+            HostSpec::new(format!("host{i}-{}", tb.name), tb).with_max_sessions(2)
+        })
+        .collect();
+    let sessions: Vec<SessionSpec> = (0..8u64)
+        .map(|i| {
+            SessionSpec::new(
+                format!("session-{i}"),
+                standard::medium_dataset(100 + i),
+                if i % 2 == 0 { AlgorithmKind::MaxThroughput } else { AlgorithmKind::MinEnergy },
+            )
+            .arriving_at(SimTime::from_secs(10.0 * i as f64))
+        })
+        .collect();
+    DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+        .with_sessions(sessions)
+        .with_seed(7)
+        .with_shards(shards)
+}
+
+#[test]
+fn tracing_off_path_is_bit_identical() {
+    // The observability hooks are pure reads: switching them on may not
+    // move a single bit of the simulated outcome, and switching them
+    // off must leave no residue in the output struct.
+    let plain = run_dispatcher(&busy_cfg(1));
+    assert!(plain.trace.is_none() && plain.metrics.is_none());
+    let observed = run_dispatcher(&busy_cfg(1).with_trace().with_metrics());
+    assert!(observed.trace.is_some() && observed.metrics.is_some());
+    assert!(plain.fleet.completed, "the base workload must finish");
+    assert_outcomes_identical(&plain, &observed, "trace on vs off");
+}
+
+/// Everything shard-invariant in a metrics snapshot — all fields except
+/// the warm/slow tick split (the documented stepper-occupancy
+/// carve-out).
+fn assert_metrics_shard_invariant(a: &FleetMetrics, b: &FleetMetrics, label: &str) {
+    assert_eq!(
+        a.registry.histograms_json(),
+        b.registry.histograms_json(),
+        "{label}: histogram series must be shard-invariant"
+    );
+    for name in [
+        "placements.admitted",
+        "placements.queued",
+        "cap.events",
+        "faults.fired",
+        "retries.scheduled",
+        "sessions.dead_lettered",
+        "migrations.executed",
+        "rebalance.rejected",
+        "health.advisories",
+        "aimd.backoffs",
+    ] {
+        assert_eq!(
+            a.registry.counter(name),
+            b.registry.counter(name),
+            "{label}: counter {name}"
+        );
+    }
+    let (sa, sb) = (&a.timeline.snapshots, &b.timeline.snapshots);
+    assert_eq!(sa.len(), sb.len(), "{label}: snapshot count");
+    for (x, y) in sa.iter().zip(sb) {
+        let t = format!("{label}/segment t={}", x.t_secs);
+        assert_f64_bits(x.t_secs, y.t_secs, &format!("{t}: boundary time"));
+        assert_eq!(x.active_sessions, y.active_sessions, "{t}: active");
+        assert_eq!(x.queued, y.queued, "{t}: queued");
+        assert_f64_bits(x.goodput_bps, y.goodput_bps, &format!("{t}: goodput"));
+        assert_f64_bits(x.watts, y.watts, &format!("{t}: watts"));
+        // warm_ticks / slow_ticks deliberately NOT compared.
+    }
+}
+
+#[test]
+fn trace_bytes_identical_across_repeats_and_shard_counts() {
+    let run = |shards: usize| run_dispatcher(&busy_cfg(shards).with_trace().with_metrics());
+    let reference = run(1);
+    let ref_jsonl = trace_jsonl(reference.trace.as_ref().unwrap());
+    let ref_chrome = chrome_trace_json(reference.trace.as_ref().unwrap());
+    assert!(!ref_jsonl.is_empty(), "the busy fleet must trace something");
+
+    // Replay identity: the same (config, seed) twice.
+    let again = run(1);
+    assert_eq!(ref_jsonl, trace_jsonl(again.trace.as_ref().unwrap()), "repeat run drifted");
+
+    // Shard invariance: the merged log is a pure function of the
+    // simulated run, not of the worker-thread partition.
+    for shards in [2usize, 8] {
+        let sharded = run(shards);
+        let label = format!("{shards}-shard");
+        assert_eq!(
+            ref_jsonl,
+            trace_jsonl(sharded.trace.as_ref().unwrap()),
+            "{label}: trace bytes diverged from the serial loop"
+        );
+        assert_eq!(
+            ref_chrome,
+            chrome_trace_json(sharded.trace.as_ref().unwrap()),
+            "{label}: chrome export diverged"
+        );
+        assert_metrics_shard_invariant(
+            reference.metrics.as_ref().unwrap(),
+            sharded.metrics.as_ref().unwrap(),
+            &label,
+        );
+    }
+
+    // The JSONL round-trips: parsing the bytes back loses nothing.
+    let log = TraceLog::parse(&ref_jsonl);
+    assert_eq!(log.skipped, 0, "every line must parse");
+    assert_eq!(log.records.len(), reference.trace.as_ref().unwrap().len());
+}
+
+/// The hot-spot scenario from `rebalance_migration`: an efficient
+/// single-slot host and a roomy legacy host, so the second session
+/// lands on legacy and the marginal-delta rebalancer moves it over once
+/// the efficient slot frees up.
+fn hotspot_cfg(faults: Option<FaultSchedule>) -> DispatcherConfig {
+    let hosts = vec![
+        HostSpec::new("efficient", testbeds::cloudlab()).with_max_sessions(1),
+        HostSpec::new("legacy", testbeds::didclab()).with_max_sessions(4),
+    ];
+    let sessions = vec![
+        SessionSpec::new("s0", standard::medium_dataset(301), AlgorithmKind::MaxThroughput),
+        SessionSpec::new("s1", standard::large_dataset(302), AlgorithmKind::MaxThroughput)
+            .arriving_at(SimTime::from_secs(5.0)),
+    ];
+    let mut cfg = DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+        .with_sessions(sessions)
+        .with_seed(61)
+        .with_trace()
+        .with_metrics();
+    cfg.rebalance = RebalanceConfig::new(RebalancePolicyKind::MarginalEnergyDelta);
+    if let Some(f) = faults {
+        cfg.resilience = ResilienceConfig::new().with_faults(f).with_recovery();
+    }
+    cfg
+}
+
+#[test]
+fn migrated_retried_session_reconciles_as_one_connected_tree() {
+    // Probe run (no faults): learn when s1's post-migration residency
+    // runs, so the scripted death can land squarely inside it.
+    let probe = run_dispatcher(&hotspot_cfg(None));
+    assert!(probe.fleet.completed);
+    let mig = probe
+        .migrations
+        .iter()
+        .find(|m| m.session == "s1")
+        .expect("the hot-spot scenario must migrate s1");
+    let resume = mig.t_secs + mig.drain_secs;
+    let finish = probe
+        .fleet
+        .tenants
+        .iter()
+        .filter(|t| t.name == "s1")
+        .filter_map(|t| t.finished_at)
+        .map(|t| t.as_secs())
+        .fold(0.0_f64, f64::max);
+    assert!(finish > resume, "s1 must finish after its migration resumes");
+
+    // Faulted run: kill the migration target mid-residency, revive it
+    // later; recovery retries s1 through the penalty box.
+    let down = (resume + finish) / 2.0;
+    let faults = FaultSchedule::default().with_host_failure(
+        0,
+        SimTime::from_secs(down),
+        Some(SimTime::from_secs(finish + 200.0)),
+    );
+    let out = run_dispatcher(&hotspot_cfg(Some(faults)));
+    assert!(out.fleet.completed, "s1 must be redelivered after the crash");
+    assert!(out.migrations.iter().any(|m| m.session == "s1"), "still migrates");
+    assert!(out.retries.iter().any(|r| r.session == "s1"), "the death must retry s1");
+
+    let log = TraceLog::parse(&trace_jsonl(out.trace.as_ref().unwrap()));
+    assert_eq!(log.skipped, 0);
+
+    // One connected tree per session; s1's carries the whole story.
+    for session in ["s0", "s1"] {
+        let tree = log.tree(session);
+        assert!(tree.root.is_some(), "{session}: synthesized session root");
+        assert!(tree.connected(), "{session}: span tree must be connected:\n{}", tree.waterfall());
+    }
+    let s1: Vec<_> = log.session_records("s1");
+    let names: Vec<&str> = s1.iter().map(|r| r.name.as_str()).collect();
+    for expected in ["admit", "migrate", "retry", "penalty_box", "complete"] {
+        assert!(names.contains(&expected), "s1 trace lacks '{expected}': {names:?}");
+    }
+    // Three residencies: legacy, the migration target, the redelivery.
+    let admits = s1.iter().filter(|r| r.name == "admit").count();
+    assert!(admits >= 3, "expected >= 3 residencies for s1, got {admits}");
+    assert!(
+        s1.iter().any(|r| r.name == "admit" && r.attr_str("end") == Some("preempt")),
+        "the killed residency must close as a preemption"
+    );
+
+    // Byte/joule reconciliation: each residency span's closing
+    // attributes equal the matching FleetOutcome tenant entry bits.
+    for session in ["s0", "s1"] {
+        let mut outcomes: Vec<_> =
+            out.fleet.tenants.iter().filter(|t| t.name == session).collect();
+        outcomes.sort_by(|a, b| a.arrived_at.as_secs().total_cmp(&b.arrived_at.as_secs()));
+        let mut spans: Vec<_> = log
+            .session_records(session)
+            .into_iter()
+            .filter(|r| r.name == "admit")
+            .collect();
+        spans.sort_by(|a, b| a.t0_secs.total_cmp(&b.t0_secs));
+        assert_eq!(spans.len(), outcomes.len(), "{session}: residency count");
+        for (span, tenant) in spans.iter().zip(&outcomes) {
+            let what = format!("{session} residency @ {}", span.t0_secs);
+            assert_f64_bits(
+                span.attr_f64("moved_bytes").unwrap(),
+                tenant.moved.as_f64(),
+                &format!("{what}: moved"),
+            );
+            assert_f64_bits(
+                span.attr_f64("attributed_j").unwrap(),
+                tenant.attributed_energy.as_joules(),
+                &format!("{what}: attributed joules"),
+            );
+        }
+    }
+
+    // The decision log and the trace agree on counts.
+    let m = out.metrics.as_ref().unwrap();
+    assert_eq!(m.registry.counter("retries.scheduled"), out.retries.len() as u64);
+    assert_eq!(m.registry.counter("migrations.executed"), out.migrations.len() as u64);
+    assert_eq!(m.registry.counter("faults.fired"), out.faults.len() as u64);
+    let placements = log.records.iter().filter(|r| r.name == "placement").count();
+    assert_eq!(placements, out.decisions.len(), "one placement event per decision");
+}
