@@ -8,6 +8,7 @@
 pub mod hotpath;
 pub mod resilience;
 pub mod scale;
+pub mod sentinel;
 
 use crate::metrics::Summary;
 use crate::obs::Histogram;

@@ -1,0 +1,402 @@
+//! The perf/energy regression sentinel: compare a freshly regenerated
+//! `BENCH_*.json` against the committed baseline, metric by metric,
+//! with per-metric tolerances and direction-aware verdicts.
+//!
+//! The sentinel walks both documents with the observability flattener
+//! ([`crate::obs::diff::flatten`]) so nested sections (`reference.*`,
+//! `micro[...]`, grid rows) compare on stable dotted paths. Each
+//! numeric leaf gets a verdict:
+//!
+//! - **Pass** — within tolerance (default ±25% relative; `micro`
+//!   paths get ±50%, timer noise on sub-microsecond samples being what
+//!   it is).
+//! - **Warn** — a metric *improved* beyond tolerance (verify the gain
+//!   is real before celebrating), appeared, disappeared, or moved in a
+//!   direction the sentinel cannot rank (unknown metric names are
+//!   two-sided).
+//! - **Fail** — a metric the sentinel can rank (throughput-like up,
+//!   latency-like down) worsened beyond tolerance.
+//!
+//! One global switch defangs the whole run: while the committed
+//! baseline says `"measured": false` (the schema-only seed this repo
+//! starts from — no toolchain in the authoring container), every Fail
+//! downgrades to Warn, so CI reports drift without gating on numbers
+//! nobody has measured yet.
+
+use crate::history::json::{self, Json};
+use crate::metrics::Table;
+use crate::obs::diff::flatten;
+use std::collections::BTreeMap;
+
+/// Which way "better" points for a metric, inferred from its path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Direction {
+    /// Bigger is better (throughput, speedups, hit rates).
+    HigherBetter,
+    /// Smaller is better (wall seconds, latencies).
+    LowerBetter,
+    /// Unknown name: any large move is a Warn, never a Fail.
+    Unknown,
+}
+
+/// Infer the ranking direction from a dotted metric path. Checked in
+/// order: rate-like markers first so `sim_seconds_per_wall_second`
+/// (which also contains `seconds`) ranks as a throughput.
+fn direction(path: &str) -> Direction {
+    let p = path.to_ascii_lowercase();
+    if p.contains("per_wall_second")
+        || p.contains("speedup")
+        || p.contains("hit_rate")
+        || p.ends_with("_bps")
+        || p.contains("per_second")
+    {
+        Direction::HigherBetter
+    } else if p.ends_with("_s")
+        || p.contains("seconds")
+        || p.contains("wall")
+        || p.contains("latency")
+    {
+        Direction::LowerBetter
+    } else {
+        Direction::Unknown
+    }
+}
+
+/// Relative tolerance for a path: `micro` benches time sub-microsecond
+/// bodies where ±50% is honest noise; everything else gets the default.
+fn tolerance_for(path: &str, default_tol: f64) -> f64 {
+    if path.contains("micro") {
+        default_tol.max(0.5)
+    } else {
+        default_tol
+    }
+}
+
+/// Verdict on one metric, ordered by severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verdict {
+    /// Within tolerance (or an exact non-numeric match).
+    Pass,
+    /// Worth a look, not a gate: large improvement, appeared/vanished,
+    /// unrankable drift, or a Fail defanged by an unmeasured baseline.
+    Warn,
+    /// A rankable metric worsened beyond tolerance on a measured
+    /// baseline.
+    Fail,
+}
+
+impl Verdict {
+    /// Stable lowercase label (reports, JSON).
+    pub fn label(self) -> &'static str {
+        match self {
+            Verdict::Pass => "pass",
+            Verdict::Warn => "warn",
+            Verdict::Fail => "fail",
+        }
+    }
+}
+
+/// One compared metric.
+#[derive(Debug, Clone)]
+pub struct SentinelRow {
+    /// Dotted path into the BENCH document.
+    pub path: String,
+    /// Baseline value rendered as text (`"null"` when absent).
+    pub baseline: String,
+    /// Fresh value rendered as text (`"null"` when absent).
+    pub fresh: String,
+    /// Relative change `(fresh − baseline) / |baseline|` when both
+    /// sides are finite numbers and the baseline is non-zero.
+    pub rel_change: Option<f64>,
+    /// The verdict after tolerance, direction and the measured switch.
+    pub verdict: Verdict,
+    /// One-phrase reason backing the verdict.
+    pub reason: &'static str,
+}
+
+/// The sentinel's full comparison of one baseline/fresh pair.
+#[derive(Debug, Clone)]
+pub struct SentinelReport {
+    /// Whether the baseline was a measured record (`"measured": true`);
+    /// when false every Fail is downgraded to Warn.
+    pub measured: bool,
+    /// Metrics that passed (count only — passing rows carry no news).
+    pub passed: usize,
+    /// Every non-Pass row, sorted by severity then path.
+    pub rows: Vec<SentinelRow>,
+}
+
+fn leaf_text(v: &Json) -> String {
+    match v {
+        Json::Null => "null".to_string(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(x) => json::num(*x),
+        Json::Str(s) => s.clone(),
+        _ => String::new(),
+    }
+}
+
+/// Paths the sentinel never compares: the format stamp, prose, and the
+/// measured switch itself (which legitimately flips when CI
+/// regenerates a seed).
+fn skipped(path: &str) -> bool {
+    path == "v" || path == "measured" || path == "note" || path.ends_with(".note")
+}
+
+impl SentinelReport {
+    /// Compare `fresh` against `baseline`. `default_tol` is the
+    /// relative tolerance applied outside `micro` paths (the CLI
+    /// default is 0.25).
+    pub fn compare(baseline: &Json, fresh: &Json, default_tol: f64) -> SentinelReport {
+        let measured =
+            baseline.get("measured").and_then(Json::as_bool).unwrap_or(false);
+        let mut merged: BTreeMap<String, (Option<Json>, Option<Json>)> = BTreeMap::new();
+        for (path, v) in flatten(baseline) {
+            merged.entry(path).or_insert((None, None)).0 = Some(v);
+        }
+        for (path, v) in flatten(fresh) {
+            merged.entry(path).or_insert((None, None)).1 = Some(v);
+        }
+        let mut passed = 0usize;
+        let mut rows = Vec::new();
+        for (path, (a, b)) in merged {
+            if skipped(&path) {
+                continue;
+            }
+            let (verdict, reason, rel) = judge(&path, a.as_ref(), b.as_ref(), default_tol);
+            let verdict = match verdict {
+                Verdict::Fail if !measured => Verdict::Warn,
+                v => v,
+            };
+            if verdict == Verdict::Pass {
+                passed += 1;
+                continue;
+            }
+            rows.push(SentinelRow {
+                path,
+                baseline: a.as_ref().map(leaf_text).unwrap_or_else(|| "null".to_string()),
+                fresh: b.as_ref().map(leaf_text).unwrap_or_else(|| "null".to_string()),
+                rel_change: rel,
+                verdict,
+                reason,
+            });
+        }
+        rows.sort_by(|x, y| y.verdict.cmp(&x.verdict).then_with(|| x.path.cmp(&y.path)));
+        SentinelReport { measured, passed, rows }
+    }
+
+    /// The most severe verdict in the report (Pass when every metric
+    /// passed).
+    pub fn worst(&self) -> Verdict {
+        self.rows.iter().map(|r| r.verdict).max().unwrap_or(Verdict::Pass)
+    }
+
+    /// True when the run should gate (some metric failed).
+    pub fn failed(&self) -> bool {
+        self.worst() == Verdict::Fail
+    }
+
+    /// Markdown report: a verdict summary line plus one table row per
+    /// non-Pass metric.
+    pub fn to_markdown(&self, label_a: &str, label_b: &str) -> String {
+        let mut out = format!(
+            "# Sentinel: {} vs {}\n\nVerdict: **{}** — {} passed, {} flagged{}\n",
+            label_a,
+            label_b,
+            self.worst().label(),
+            self.passed,
+            self.rows.len(),
+            if self.measured { "" } else { " (baseline unmeasured: warn-only)" },
+        );
+        if !self.rows.is_empty() {
+            let mut table = Table::new(
+                "Flagged metrics",
+                &["verdict", "metric", "baseline", "fresh", "rel", "reason"],
+            );
+            for r in &self.rows {
+                table.push_row(vec![
+                    r.verdict.label().to_string(),
+                    r.path.clone(),
+                    r.baseline.clone(),
+                    r.fresh.clone(),
+                    r.rel_change.map(|x| format!("{:+.1}%", x * 100.0)).unwrap_or_default(),
+                    r.reason.to_string(),
+                ]);
+            }
+            out.push('\n');
+            out.push_str(&table.to_markdown());
+        }
+        out
+    }
+
+    /// Machine-readable report (kind `greendt-sentinel`).
+    pub fn to_json(&self, label_a: &str, label_b: &str) -> String {
+        let rows: Vec<String> = self
+            .rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"verdict\":\"{}\",\"path\":\"{}\",\"baseline\":\"{}\",\
+                     \"fresh\":\"{}\",\"rel_change\":{},\"reason\":\"{}\"}}",
+                    r.verdict.label(),
+                    json::escape(&r.path),
+                    json::escape(&r.baseline),
+                    json::escape(&r.fresh),
+                    r.rel_change.map(json::num).unwrap_or_else(|| "null".to_string()),
+                    json::escape(r.reason),
+                )
+            })
+            .collect();
+        format!(
+            "{{\"kind\":\"greendt-sentinel\",\"baseline\":\"{}\",\"fresh\":\"{}\",\
+             \"verdict\":\"{}\",\"measured\":{},\"passed\":{},\"rows\":[{}]}}",
+            json::escape(label_a),
+            json::escape(label_b),
+            self.worst().label(),
+            self.measured,
+            self.passed,
+            rows.join(","),
+        )
+    }
+}
+
+/// Verdict for one path. Returns `(verdict, reason, rel_change)`
+/// *before* the unmeasured-baseline downgrade.
+fn judge(
+    path: &str,
+    a: Option<&Json>,
+    b: Option<&Json>,
+    default_tol: f64,
+) -> (Verdict, &'static str, Option<f64>) {
+    match (a, b) {
+        (None, None) => (Verdict::Pass, "absent", None),
+        (Some(Json::Null), Some(Json::Null)) => (Verdict::Pass, "unmeasured", None),
+        (None, Some(_)) | (Some(Json::Null), Some(_)) => {
+            (Verdict::Warn, "new metric", None)
+        }
+        (Some(_), None) | (Some(_), Some(Json::Null)) => {
+            (Verdict::Warn, "metric vanished", None)
+        }
+        (Some(Json::Num(x)), Some(Json::Num(y))) => {
+            if !x.is_finite() || !y.is_finite() {
+                return (Verdict::Warn, "non-finite value", None);
+            }
+            if x == y {
+                return (Verdict::Pass, "unchanged", Some(0.0));
+            }
+            if *x == 0.0 {
+                return (Verdict::Warn, "baseline zero", None);
+            }
+            let rel = (y - x) / x.abs();
+            let tol = tolerance_for(path, default_tol);
+            if rel.abs() <= tol {
+                return (Verdict::Pass, "within tolerance", Some(rel));
+            }
+            match direction(path) {
+                Direction::HigherBetter if rel < 0.0 => {
+                    (Verdict::Fail, "regressed (lower)", Some(rel))
+                }
+                Direction::LowerBetter if rel > 0.0 => {
+                    (Verdict::Fail, "regressed (higher)", Some(rel))
+                }
+                Direction::Unknown => (Verdict::Warn, "drifted", Some(rel)),
+                _ => (Verdict::Warn, "improved: verify", Some(rel)),
+            }
+        }
+        (Some(x), Some(y)) if x == y => (Verdict::Pass, "unchanged", None),
+        _ => (Verdict::Warn, "value changed", None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::history::json::parse;
+
+    fn doc(s: &str) -> Json {
+        parse(s).expect("test doc parses")
+    }
+
+    #[test]
+    fn identical_measured_docs_all_pass() {
+        let a = doc(r#"{"bench":"x","measured":true,"speedup":4.0,"wall_seconds":2.0}"#);
+        let r = SentinelReport::compare(&a, &a, 0.25);
+        assert!(r.measured);
+        assert_eq!(r.worst(), Verdict::Pass);
+        assert!(r.rows.is_empty());
+        assert_eq!(r.passed, 3);
+    }
+
+    #[test]
+    fn direction_aware_fail_and_improvement_warn() {
+        let a = doc(r#"{"measured":true,"speedup":4.0,"wall_seconds":2.0}"#);
+        // Speedup halved (regression), wall time halved (improvement —
+        // beyond tolerance, so verify-warn rather than silent pass).
+        let b = doc(r#"{"measured":true,"speedup":2.0,"wall_seconds":1.0}"#);
+        let r = SentinelReport::compare(&a, &b, 0.25);
+        assert!(r.failed());
+        let speedup = r.rows.iter().find(|x| x.path == "speedup").unwrap();
+        assert_eq!(speedup.verdict, Verdict::Fail);
+        let wall = r.rows.iter().find(|x| x.path == "wall_seconds").unwrap();
+        assert_eq!(wall.verdict, Verdict::Warn);
+        assert_eq!(wall.reason, "improved: verify");
+    }
+
+    #[test]
+    fn unmeasured_baseline_downgrades_fail_to_warn() {
+        let a = doc(r#"{"measured":false,"speedup":4.0}"#);
+        let b = doc(r#"{"measured":false,"speedup":1.0}"#);
+        let r = SentinelReport::compare(&a, &b, 0.25);
+        assert!(!r.measured);
+        assert!(!r.failed());
+        assert_eq!(r.worst(), Verdict::Warn);
+    }
+
+    #[test]
+    fn null_seed_vs_fresh_numbers_warns_not_fails() {
+        // The committed schema-only seed: every metric null. Fresh CI
+        // numbers must read as "new metric", never a gate.
+        let a = doc(r#"{"measured":false,"speedup":null,"epoch":{"wall_seconds":null}}"#);
+        let b = doc(r#"{"measured":true,"speedup":5.1,"epoch":{"wall_seconds":0.8}}"#);
+        let r = SentinelReport::compare(&a, &b, 0.25);
+        assert_eq!(r.worst(), Verdict::Warn);
+        assert!(r.rows.iter().all(|x| x.reason == "new metric"));
+    }
+
+    #[test]
+    fn micro_paths_get_looser_tolerance() {
+        let a = doc(r#"{"measured":true,"micro":[{"name":"tick","mean_s":1.0e-7}]}"#);
+        // +40% on a micro timing: inside the ±50% micro band.
+        let b = doc(r#"{"measured":true,"micro":[{"name":"tick","mean_s":1.4e-7}]}"#);
+        let r = SentinelReport::compare(&a, &b, 0.25);
+        assert_eq!(r.worst(), Verdict::Pass, "{:?}", r.rows);
+        // The same drift outside micro on a latency-like name fails.
+        let a2 = doc(r#"{"measured":true,"wall_seconds":1.0}"#);
+        let b2 = doc(r#"{"measured":true,"wall_seconds":1.4}"#);
+        assert!(SentinelReport::compare(&a2, &b2, 0.25).failed());
+    }
+
+    #[test]
+    fn reports_render_and_json_parses() {
+        let a = doc(r#"{"measured":true,"speedup":4.0}"#);
+        let b = doc(r#"{"measured":true,"speedup":2.0}"#);
+        let r = SentinelReport::compare(&a, &b, 0.25);
+        let md = r.to_markdown("BENCH_scale.json", "fresh.json");
+        assert!(md.contains("**fail**"));
+        assert!(md.contains("speedup"));
+        let j = parse(&r.to_json("BENCH_scale.json", "fresh.json")).expect("sentinel json");
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("greendt-sentinel"));
+        assert_eq!(j.get("verdict").and_then(Json::as_str), Some("fail"));
+        assert_eq!(
+            j.get("rows").and_then(|r| r.as_arr()).map(|r| r.len()),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn direction_inference_orders_rate_before_seconds() {
+        assert_eq!(direction("epoch.sim_seconds_per_wall_second"), Direction::HigherBetter);
+        assert_eq!(direction("reference.wall_seconds"), Direction::LowerBetter);
+        assert_eq!(direction("grid[h8s64x1].n"), Direction::Unknown);
+    }
+}

@@ -106,12 +106,20 @@ COMMANDS:
              --metrics <FILE>      write the fleet metrics registry
                                    (counters, gauges, percentile histograms,
                                    per-segment snapshots) as JSON to FILE
+             --metrics-csv <FILE>  write the per-segment metrics timeline
+                                   as CSV (enables metrics collection on
+                                   its own, like --metrics)
   trace      Inspect a JSONL trace written by `fleet --trace`
              summarize <FILE>      per-session rollup + span-duration
                                    percentile table (default action)
              sessions <FILE>       list session names in the trace
              spans <FILE> --session <NAME>   span-tree waterfall for one
                                    session (omit --session for all)
+             diff <A> <B>          structural diff of two trace logs (or
+                                   two --metrics JSON files): records only
+                                   in one side, per-session tally drift;
+                                   exit 0 when identical, 1 when not
+             --json                machine-readable output (all actions)
   history    Inspect or maintain a JSONL history store
              stats --history <F>   record counts + per-host/testbed costs
              query --history <F>   k-NN answer for a workload:
@@ -123,6 +131,15 @@ COMMANDS:
              --json <FILE>         write the machine-readable report
                                    (e.g. BENCH_hotpath.json)
              --smoke               trimmed iteration counts (CI)
+  sentinel   Perf/energy regression gate: compare a freshly regenerated
+             BENCH_*.json against the committed baseline
+             <BASELINE> <FRESH>    the two reports to compare
+             --tolerance <F>       relative tolerance (default 0.25;
+                                   micro paths get at least 0.5)
+             --json                machine-readable report
+             exit 0 = pass/warn, 1 = a measured metric regressed
+                                   (warn-only while the baseline says
+                                   \"measured\": false)
   fig2       Reproduce Figure 2 (all tools × datasets × testbeds)
   fig3       Reproduce Figure 3 (target-throughput comparison)
   fig4       Reproduce Figure 4 (frequency/core-scaling ablation)
@@ -154,6 +171,11 @@ pub fn run(argv: &[String]) -> Result<i32> {
     if !value_trace {
         switches.push("trace");
     }
+    // `--json` is a value flag for `bench` (the output file) but a bare
+    // switch for the inspection commands, which print to stdout.
+    if matches!(cmd0, "trace" | "sentinel") {
+        switches.push("json");
+    }
     let args = ParsedArgs::parse(argv, &switches).map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -163,6 +185,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "history" => cmd_history(&args),
         "sweep" => cmd_sweep(&args),
         "bench" => cmd_bench(&args),
+        "sentinel" => cmd_sentinel(&args),
         "fig2" => cmd_fig2(&args),
         "fig3" => cmd_fig3(&args),
         "fig4" => cmd_fig4(&args),
@@ -385,6 +408,7 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<i32> {
         || args.get("trace").is_some()
         || args.get("trace-format").is_some()
         || args.get("metrics").is_some()
+        || args.get("metrics-csv").is_some()
     {
         return cmd_fleet_dispatch(args);
     }
@@ -491,6 +515,7 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
         bail!("--trace-format needs --trace <FILE>");
     }
     let metrics_path = args.get("metrics");
+    let metrics_csv_path = args.get("metrics-csv");
 
     // Hosts: `--hosts N` machines, testbeds cycled from the (comma-
     // separated) `--testbed` list — `--testbed cloudlab,didclab` builds a
@@ -628,7 +653,7 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
     cfg.cross_traffic = parse_cross_traffic(args)?;
     cfg.aimd = args.has("aimd");
     cfg.trace = trace_path.is_some();
-    cfg.metrics = metrics_path.is_some();
+    cfg.metrics = metrics_path.is_some() || metrics_csv_path.is_some();
     let out = run_dispatcher(&cfg);
     record_history(args, &out.fleet.run_records, &out.decisions, &out.migrations)?;
 
@@ -644,6 +669,19 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
         std::fs::write(path, m.to_json())
             .with_context(|| format!("writing metrics to {path}"))?;
         println!("metrics: {} segment snapshots -> {path}", m.timeline.snapshots.len());
+    }
+    if let (Some(path), Some(m)) = (metrics_csv_path, &out.metrics) {
+        std::fs::write(path, m.timeline.to_csv())
+            .with_context(|| format!("writing metrics CSV to {path}"))?;
+        println!("metrics: {} timeline rows (csv) -> {path}", m.timeline.snapshots.len());
+    }
+    if let Some(cal) = &out.calibration {
+        println!(
+            "calibration: {} residencies, {} migrations joined, {} anomalies",
+            cal.placements.len(),
+            cal.migrations.iter().filter(|m| m.realized_benefit_j.is_some()).count(),
+            cal.anomalies.len()
+        );
     }
     let fleet = &out.fleet;
 
@@ -792,7 +830,8 @@ fn cmd_fleet_dispatch(args: &ParsedArgs) -> Result<i32> {
 }
 
 /// The `greendt trace` subcommand: offline inspection of a JSONL trace
-/// written by `fleet --trace` (`summarize` / `sessions` / `spans`).
+/// written by `fleet --trace` (`summarize` / `sessions` / `spans` /
+/// `diff`), each with a `--json` sibling for machine consumers.
 fn cmd_trace(args: &ParsedArgs) -> Result<i32> {
     use crate::obs::TraceLog;
 
@@ -800,14 +839,18 @@ fn cmd_trace(args: &ParsedArgs) -> Result<i32> {
     // the action slot is treated as the file.
     let mut action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("summarize");
     let mut path = args.positional.get(2).map(|s| s.as_str());
+    if action == "diff" {
+        return cmd_trace_diff(args);
+    }
     if !matches!(action, "summarize" | "sessions" | "spans") {
         if path.is_none() && args.positional.len() == 2 {
             path = Some(action);
             action = "summarize";
         } else {
-            bail!("trace expects summarize|sessions|spans <FILE>, got '{action}'");
+            bail!("trace expects summarize|sessions|spans|diff <FILE..>, got '{action}'");
         }
     }
+    let json = args.has("json");
     let path = path.context("trace commands need a trace file: greendt trace <ACTION> <FILE>")?;
     let log = TraceLog::load(path)?;
     if log.skipped > 0 {
@@ -815,8 +858,12 @@ fn cmd_trace(args: &ParsedArgs) -> Result<i32> {
     }
     match action {
         "sessions" => {
-            for s in log.sessions() {
-                println!("{s}");
+            if json {
+                println!("{}", log.sessions_json());
+            } else {
+                for s in log.sessions() {
+                    println!("{s}");
+                }
             }
         }
         "spans" => {
@@ -824,13 +871,17 @@ fn cmd_trace(args: &ParsedArgs) -> Result<i32> {
                 Some(one) => vec![one.to_string()],
                 None => log.sessions(),
             };
-            if names.is_empty() {
+            if names.is_empty() && !json {
                 println!("(no sessions in trace)");
             }
             for name in names {
                 let tree = log.tree(&name);
                 if tree.records.is_empty() {
                     bail!("no records for session '{name}' in {path}");
+                }
+                if json {
+                    println!("{}", tree.to_json());
+                    continue;
                 }
                 let status = if tree.connected() { "connected" } else { "DISCONNECTED" };
                 println!("session {name} ({} records, {status})", tree.records.len());
@@ -839,12 +890,115 @@ fn cmd_trace(args: &ParsedArgs) -> Result<i32> {
             }
         }
         _ => {
-            println!("trace: {path} ({} records)", log.records.len());
-            println!("{}", log.summary_table().to_markdown());
-            println!("{}", log.histogram_table().to_markdown());
+            if json {
+                println!("{}", log.summary_json());
+            } else {
+                println!("trace: {path} ({} records)", log.records.len());
+                println!("{}", log.summary_table().to_markdown());
+                println!("{}", log.histogram_table().to_markdown());
+            }
         }
     }
     Ok(0)
+}
+
+/// `greendt trace diff A B`: structural, id-insensitive diff of two
+/// trace logs — or of two `--metrics` JSON documents, routed by their
+/// `kind` stamp. Exit 0 when the sides are identical, 1 when they
+/// differ (the CI smoke gates on that).
+fn cmd_trace_diff(args: &ParsedArgs) -> Result<i32> {
+    use crate::history::json;
+    use crate::obs::{MetricsDiff, TraceDiff, TraceLog};
+
+    let path_a = args
+        .positional
+        .get(2)
+        .context("trace diff needs two files: greendt trace diff <A> <B>")?;
+    let path_b = args
+        .positional
+        .get(3)
+        .context("trace diff needs two files: greendt trace diff <A> <B>")?;
+    let json_out = args.has("json");
+
+    // A `--metrics` export is one JSON document stamped
+    // `"kind":"greendt-metrics"`; anything else is treated as a JSONL
+    // trace log.
+    let text_a =
+        std::fs::read_to_string(path_a).with_context(|| format!("reading {path_a}"))?;
+    let text_b =
+        std::fs::read_to_string(path_b).with_context(|| format!("reading {path_b}"))?;
+    let is_metrics = |text: &str| {
+        json::parse(text)
+            .and_then(|d| d.get("kind").and_then(json::Json::as_str).map(String::from))
+            .is_some_and(|k| k == "greendt-metrics")
+    };
+    if is_metrics(&text_a) || is_metrics(&text_b) {
+        let (Some(a), Some(b)) = (json::parse(&text_a), json::parse(&text_b)) else {
+            bail!("metrics diff needs two parseable JSON documents");
+        };
+        if !(is_metrics(&text_a) && is_metrics(&text_b)) {
+            bail!("cannot diff a metrics document against a trace log");
+        }
+        let diff = MetricsDiff::compute(&a, &b);
+        if json_out {
+            println!("{}", diff.to_json(path_a, path_b));
+        } else {
+            print!("{}", diff.to_markdown(path_a, path_b));
+        }
+        return Ok(if diff.is_empty() { 0 } else { 1 });
+    }
+
+    let a = TraceLog::parse(&text_a);
+    let b = TraceLog::parse(&text_b);
+    for (path, log) in [(path_a, &a), (path_b, &b)] {
+        if log.skipped > 0 {
+            eprintln!("note: {} unparseable line(s) skipped in {path}", log.skipped);
+        }
+    }
+    let diff = TraceDiff::compute(&a, &b);
+    if json_out {
+        println!("{}", diff.to_json(path_a, path_b));
+    } else {
+        print!("{}", diff.to_markdown(path_a, path_b));
+    }
+    Ok(if diff.is_empty() { 0 } else { 1 })
+}
+
+/// The `greendt sentinel` subcommand: compare a regenerated bench
+/// report against the committed baseline and gate on regressions.
+fn cmd_sentinel(args: &ParsedArgs) -> Result<i32> {
+    use crate::benchkit::sentinel::SentinelReport;
+    use crate::history::json;
+
+    let path_a = args
+        .positional
+        .get(1)
+        .context("sentinel needs two files: greendt sentinel <BASELINE> <FRESH>")?;
+    let path_b = args
+        .positional
+        .get(2)
+        .context("sentinel needs two files: greendt sentinel <BASELINE> <FRESH>")?;
+    let tol = args
+        .get_f64("tolerance")
+        .map_err(|e: ArgError| anyhow::anyhow!(e))?
+        .unwrap_or(0.25);
+    if !(tol > 0.0) {
+        bail!("--tolerance must be positive, got {tol}");
+    }
+    let text_a =
+        std::fs::read_to_string(path_a).with_context(|| format!("reading {path_a}"))?;
+    let text_b =
+        std::fs::read_to_string(path_b).with_context(|| format!("reading {path_b}"))?;
+    let baseline =
+        json::parse(&text_a).with_context(|| format!("{path_a} is not valid JSON"))?;
+    let fresh = json::parse(&text_b).with_context(|| format!("{path_b} is not valid JSON"))?;
+    let report = SentinelReport::compare(&baseline, &fresh, tol);
+    if args.has("json") {
+        println!("{}", report.to_json(path_a, path_b));
+    } else {
+        print!("{}", report.to_markdown(path_a, path_b));
+    }
+    Ok(if report.failed() { 1 } else { 0 })
 }
 
 /// The `greendt history` subcommand: inspect or maintain a JSONL store
@@ -1347,5 +1501,85 @@ mod tests {
         assert!(run(&argv("trace frobnicate /tmp/x.jsonl")).is_err());
         assert!(run(&argv("trace summarize /nonexistent/greendt.jsonl")).is_err());
         assert!(run(&argv("trace summarize")).is_err());
+        // `diff` demands both files; `sentinel` demands both + JSON.
+        assert!(run(&argv("trace diff /tmp/only_one.jsonl")).is_err());
+        assert!(run(&argv("sentinel /tmp/only_one.json")).is_err());
+    }
+
+    #[test]
+    fn trace_json_siblings_and_metrics_csv_write() {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir();
+        let trace = dir.join(format!("greendt_cli_tracejson_{pid}.jsonl"));
+        let csv = dir.join(format!("greendt_cli_metrics_{pid}.csv"));
+        let (tp, cp) = (trace.to_str().unwrap(), csv.to_str().unwrap());
+        let base = "fleet --hosts 2 --tenants 2 --dataset small --spacing 5 --seed 3";
+        assert_eq!(
+            run(&argv(&format!("{base} --trace {tp} --metrics-csv {cp}"))).unwrap(),
+            0
+        );
+        // --metrics-csv alone turned metrics collection on and wrote the
+        // timeline with its fixed header.
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(
+            csv_text.starts_with("t_secs,active_sessions,queued,goodput_bps,watts"),
+            "{csv_text}"
+        );
+        assert!(csv_text.lines().count() > 1, "timeline rows missing:\n{csv_text}");
+        // The --json siblings exit 0 on every action (stdout content is
+        // pinned by the obs unit tests).
+        assert_eq!(run(&argv(&format!("trace summarize {tp} --json"))).unwrap(), 0);
+        assert_eq!(run(&argv(&format!("trace sessions {tp} --json"))).unwrap(), 0);
+        assert_eq!(
+            run(&argv(&format!("trace spans {tp} --session session-0 --json"))).unwrap(),
+            0
+        );
+        let _ = std::fs::remove_file(&trace);
+        let _ = std::fs::remove_file(&csv);
+    }
+
+    #[test]
+    fn trace_diff_cli_discriminates_identical_from_drifted() {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir();
+        let a = dir.join(format!("greendt_cli_diff_a_{pid}.jsonl"));
+        let b = dir.join(format!("greendt_cli_diff_b_{pid}.jsonl"));
+        let (ap, bp) = (a.to_str().unwrap(), b.to_str().unwrap());
+        let base = "fleet --hosts 2 --tenants 2 --dataset small --spacing 5 --seed 3";
+        assert_eq!(run(&argv(&format!("{base} --trace {ap}"))).unwrap(), 0);
+        assert_eq!(run(&argv(&format!("{base} --trace {bp}"))).unwrap(), 0);
+        // Seed-matched runs: empty diff, exit 0 (markdown and JSON).
+        assert_eq!(run(&argv(&format!("trace diff {ap} {bp}"))).unwrap(), 0);
+        assert_eq!(run(&argv(&format!("trace diff {ap} {bp} --json"))).unwrap(), 0);
+        // A different seed drifts: exit 1.
+        let base7 = base.replace("--seed 3", "--seed 7");
+        assert_eq!(run(&argv(&format!("{base7} --trace {bp}"))).unwrap(), 0);
+        assert_eq!(run(&argv(&format!("trace diff {ap} {bp}"))).unwrap(), 1);
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
+    }
+
+    #[test]
+    fn sentinel_cli_gates_on_measured_regressions() {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir();
+        let base = dir.join(format!("greendt_cli_sent_base_{pid}.json"));
+        let fresh = dir.join(format!("greendt_cli_sent_fresh_{pid}.json"));
+        let (bp, fp) = (base.to_str().unwrap(), fresh.to_str().unwrap());
+        std::fs::write(&base, r#"{"measured":true,"speedup":4.0}"#).unwrap();
+        std::fs::write(&fresh, r#"{"measured":true,"speedup":3.5}"#).unwrap();
+        // Within the default ±25%: pass.
+        assert_eq!(run(&argv(&format!("sentinel {bp} {fp}"))).unwrap(), 0);
+        // A halved speedup fails — unless the baseline is unmeasured.
+        std::fs::write(&fresh, r#"{"measured":true,"speedup":2.0}"#).unwrap();
+        assert_eq!(run(&argv(&format!("sentinel {bp} {fp} --json"))).unwrap(), 1);
+        std::fs::write(&base, r#"{"measured":false,"speedup":4.0}"#).unwrap();
+        assert_eq!(run(&argv(&format!("sentinel {bp} {fp}"))).unwrap(), 0);
+        // A loose explicit tolerance also passes the measured pair.
+        std::fs::write(&base, r#"{"measured":true,"speedup":4.0}"#).unwrap();
+        assert_eq!(run(&argv(&format!("sentinel {bp} {fp} --tolerance 0.6"))).unwrap(), 0);
+        assert!(run(&argv(&format!("sentinel {bp} {fp} --tolerance -1"))).is_err());
+        let _ = std::fs::remove_file(&base);
+        let _ = std::fs::remove_file(&fresh);
     }
 }

@@ -166,6 +166,19 @@ pub struct RunRecord {
 }
 
 impl RunRecord {
+    /// Relative calibration error of the admission-time J/B prediction
+    /// against the realized bill: `realized / predicted − 1` (0 = the
+    /// model was exact, +1 = the session cost twice the estimate).
+    /// `None` when the record carries no prediction (single-host fleet,
+    /// v1 line) or either side is non-positive.
+    pub fn jpb_calibration_error(&self) -> Option<f64> {
+        let predicted = self.admission_marginal_jpb?;
+        if predicted <= 0.0 || self.j_per_byte <= 0.0 {
+            return None;
+        }
+        Some(self.j_per_byte / predicted - 1.0)
+    }
+
     /// Serialize to one JSONL line (no trailing newline).
     pub fn to_json_line(&self) -> String {
         let traj: Vec<String> = self
@@ -422,6 +435,25 @@ mod tests {
         // f64 equality above is bitwise in practice (shortest round-trip
         // rendering); pin the sharpest field explicitly.
         assert_eq!(back.j_per_byte.to_bits(), r.j_per_byte.to_bits());
+    }
+
+    #[test]
+    fn jpb_calibration_error_joins_prediction_and_bill() {
+        let mut r = sample();
+        r.j_per_byte = 3.0e-7;
+        r.admission_marginal_jpb = Some(2.0e-7);
+        assert!((r.jpb_calibration_error().unwrap() - 0.5).abs() < 1e-12);
+        // Exact prediction → zero error.
+        r.admission_marginal_jpb = Some(3.0e-7);
+        assert_eq!(r.jpb_calibration_error(), Some(0.0));
+        // No prediction (single-host fleet) or degenerate sides → None.
+        r.admission_marginal_jpb = None;
+        assert_eq!(r.jpb_calibration_error(), None);
+        r.admission_marginal_jpb = Some(0.0);
+        assert_eq!(r.jpb_calibration_error(), None);
+        r.admission_marginal_jpb = Some(2.0e-7);
+        r.j_per_byte = 0.0;
+        assert_eq!(r.jpb_calibration_error(), None);
     }
 
     #[test]

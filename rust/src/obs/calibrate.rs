@@ -1,0 +1,507 @@
+//! Decision calibration: join predicted scores against realized
+//! outcomes (ISSUE 10).
+//!
+//! The dispatcher's placement and rebalance layers act on *predicted*
+//! joules-per-byte (`PlacementScore::marginal_j_per_byte`, the
+//! rebalancer's `est_benefit_j`/`est_cost_j`), but nothing upstream of
+//! this module measured how those predictions square with what the
+//! fleet actually delivered. The calibration ledger closes that loop:
+//! every residency close joins the admission-time prediction against
+//! the realized bytes/joules — read with the *identical* expressions
+//! [`crate::sim::FleetOutcome`] bills tenants with, so the ledger's
+//! realized side reconciles with the outcome to the bit (pinned in
+//! `rust/tests/calibration_diff.rs`).
+//!
+//! Three artifact kinds come out:
+//!
+//! * **[`CalibrationRecord`]** — one per residency, carrying the
+//!   predicted marginal J/B next to the realized J/B;
+//! * **[`MigrationCalibration`]** — one per executed move, the cost
+//!   model's estimated net joules next to the realized J/B drop between
+//!   the source and target residencies of the same session;
+//! * **[`CalibrationAnomaly`]** — residencies whose realized J/B
+//!   deviates from the prediction beyond
+//!   [`CalibrationConfig::anomaly_factor`] (also emitted as
+//!   `calibration_anomaly` instant events when the trace is on).
+//!
+//! The collector additionally derives two watchdogs from the same
+//! segment-boundary data: a starved-queue alarm (sessions queued with
+//! no admission for [`CalibrationConfig::starve_secs`]) and a
+//! fairness-drop alarm (per-host delivered-byte [`jain_index`] under
+//! [`CalibrationConfig::fairness_floor`]). Both are edge-triggered
+//! instant events plus `watchdog.*` counters.
+//!
+//! Everything here is derived at segment boundaries from
+//! shard-invariant inputs, so ledger, histograms and events all honor
+//! the `--shards` 1/2/8 byte-identity contract of
+//! `rust/tests/trace_determinism.rs`.
+
+use crate::history::json;
+use crate::metrics::Table;
+
+/// Knobs for the calibration ledger and its watchdogs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibrationConfig {
+    /// Flag a residency whose realized J/B is more than this factor
+    /// above — or below `1/factor` of — its predicted marginal J/B.
+    pub anomaly_factor: f64,
+    /// Alarm when sessions sit queued this many simulated seconds with
+    /// no admission at all.
+    pub starve_secs: f64,
+    /// Alarm when the per-host delivered-byte Jain index of a segment
+    /// drops below this floor (with at least two hosts active).
+    pub fairness_floor: f64,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> CalibrationConfig {
+        CalibrationConfig { anomaly_factor: 4.0, starve_secs: 300.0, fairness_floor: 0.4 }
+    }
+}
+
+impl CalibrationConfig {
+    /// The default knobs (factor 4, 300 s starvation, 0.4 fairness).
+    pub fn new() -> CalibrationConfig {
+        CalibrationConfig::default()
+    }
+
+    /// Set the anomaly deviation factor (values ≤ 1 flag everything).
+    pub fn with_anomaly_factor(mut self, factor: f64) -> CalibrationConfig {
+        self.anomaly_factor = factor;
+        self
+    }
+
+    /// Set the starved-queue alarm threshold, simulated seconds.
+    pub fn with_starve_secs(mut self, secs: f64) -> CalibrationConfig {
+        self.starve_secs = secs;
+        self
+    }
+
+    /// Set the fairness-drop alarm floor (a Jain index in `(0, 1]`).
+    pub fn with_fairness_floor(mut self, floor: f64) -> CalibrationConfig {
+        self.fairness_floor = floor;
+        self
+    }
+}
+
+/// One residency's prediction-vs-realized join, produced at residency
+/// close with the same byte/joule reads [`crate::sim::FleetOutcome`]
+/// uses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationRecord {
+    /// Session/tenant name.
+    pub session: String,
+    /// Host that served the residency.
+    pub host: String,
+    /// How the residency ended: `complete`, `preempt` or `timecap`.
+    pub end: String,
+    /// Admission instant, seconds.
+    pub t0_secs: f64,
+    /// Close instant, seconds.
+    pub t1_secs: f64,
+    /// The dispatcher's marginal J/B score for the admitting host at
+    /// admission time (`None` when the placement had no model score).
+    pub predicted_jpb: Option<f64>,
+    /// Bytes the residency delivered (bit-equal to the tenant outcome).
+    pub realized_bytes: f64,
+    /// Host energy attributed to the residency, joules (bit-equal to
+    /// the tenant outcome).
+    pub realized_joules: f64,
+}
+
+impl CalibrationRecord {
+    /// Realized joules per byte (`None` for zero-byte residencies).
+    pub fn realized_jpb(&self) -> Option<f64> {
+        (self.realized_bytes > 0.0).then(|| self.realized_joules / self.realized_bytes)
+    }
+
+    /// `realized J/B ÷ predicted J/B` — the calibration ratio (`None`
+    /// without a positive prediction or realized bytes).
+    pub fn error_ratio(&self) -> Option<f64> {
+        let predicted = self.predicted_jpb.filter(|p| *p > 0.0)?;
+        Some(self.realized_jpb()? / predicted)
+    }
+
+    /// Signed relative error, `ratio - 1` (0 = perfectly calibrated,
+    /// +1 = realized cost double the prediction).
+    pub fn rel_error(&self) -> Option<f64> {
+        self.error_ratio().map(|r| r - 1.0)
+    }
+
+    /// True when the record deviates beyond `factor` in either
+    /// direction (realized > factor × predicted, or < predicted ÷
+    /// factor).
+    pub fn is_anomalous(&self, factor: f64) -> bool {
+        match self.error_ratio() {
+            Some(r) => r > factor || (factor > 0.0 && r < 1.0 / factor),
+            None => false,
+        }
+    }
+
+    fn to_json(&self) -> String {
+        let opt = |v: Option<f64>| v.map(json::num).unwrap_or_else(|| "null".to_string());
+        format!(
+            "{{\"session\":\"{}\",\"host\":\"{}\",\"end\":\"{}\",\"t0\":{},\"t1\":{},\
+             \"predicted_jpb\":{},\"realized_bytes\":{},\"realized_joules\":{},\
+             \"realized_jpb\":{},\"error_ratio\":{}}}",
+            json::escape(&self.session),
+            json::escape(&self.host),
+            json::escape(&self.end),
+            json::num(self.t0_secs),
+            json::num(self.t1_secs),
+            opt(self.predicted_jpb),
+            json::num(self.realized_bytes),
+            json::num(self.realized_joules),
+            opt(self.realized_jpb()),
+            opt(self.error_ratio()),
+        )
+    }
+}
+
+/// One executed migration's cost-model estimate joined against the
+/// realized J/B drop between the session's source and target
+/// residencies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationCalibration {
+    /// Migrated session.
+    pub session: String,
+    /// Source host name.
+    pub from: String,
+    /// Target host name.
+    pub to: String,
+    /// Preemption instant, seconds.
+    pub t_secs: f64,
+    /// Planned re-admission instant (preemption + drain), seconds.
+    pub resume_at_secs: f64,
+    /// The cost model's estimated joules saved on the remaining bytes.
+    pub est_benefit_j: f64,
+    /// The cost model's estimated joules burned by the move.
+    pub est_cost_j: f64,
+    /// How late past the planned resume the session actually
+    /// re-admitted, seconds (`None` when the run ended mid-drain).
+    pub realized_delay_s: Option<f64>,
+    /// `(source J/B − target J/B) × target bytes` — the realized
+    /// benefit over what the target residency moved (`None` until both
+    /// residencies closed with bytes on the meter).
+    pub realized_benefit_j: Option<f64>,
+}
+
+impl MigrationCalibration {
+    /// The cost model's predicted net gain, joules.
+    pub fn predicted_net_j(&self) -> f64 {
+        self.est_benefit_j - self.est_cost_j
+    }
+
+    /// `realized_benefit_j - est_benefit_j` (`None` until realized).
+    pub fn benefit_error_j(&self) -> Option<f64> {
+        self.realized_benefit_j.map(|r| r - self.est_benefit_j)
+    }
+
+    fn to_json(&self) -> String {
+        let opt = |v: Option<f64>| v.map(json::num).unwrap_or_else(|| "null".to_string());
+        format!(
+            "{{\"session\":\"{}\",\"from\":\"{}\",\"to\":\"{}\",\"t\":{},\"resume_at\":{},\
+             \"est_benefit_j\":{},\"est_cost_j\":{},\"realized_delay_s\":{},\
+             \"realized_benefit_j\":{}}}",
+            json::escape(&self.session),
+            json::escape(&self.from),
+            json::escape(&self.to),
+            json::num(self.t_secs),
+            json::num(self.resume_at_secs),
+            json::num(self.est_benefit_j),
+            json::num(self.est_cost_j),
+            opt(self.realized_delay_s),
+            opt(self.realized_benefit_j),
+        )
+    }
+}
+
+/// A flagged prediction-error outlier (see
+/// [`CalibrationConfig::anomaly_factor`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationAnomaly {
+    /// Session whose residency deviated.
+    pub session: String,
+    /// Host that served it.
+    pub host: String,
+    /// Residency close instant, seconds.
+    pub t_secs: f64,
+    /// The admission-time prediction, J/B.
+    pub predicted_jpb: f64,
+    /// What the residency actually cost, J/B.
+    pub realized_jpb: f64,
+    /// `realized ÷ predicted`.
+    pub ratio: f64,
+}
+
+/// The decision calibration ledger a dispatcher run accumulates when
+/// observability is on (see [`crate::sim::DispatchOutcome::calibration`]).
+#[derive(Debug, Clone, Default)]
+pub struct CalibrationLedger {
+    /// One record per closed residency, in close order (host-index
+    /// order within a segment boundary).
+    pub placements: Vec<CalibrationRecord>,
+    /// One record per executed migration, in execution order.
+    pub migrations: Vec<MigrationCalibration>,
+    /// Flagged outliers, in close order.
+    pub anomalies: Vec<CalibrationAnomaly>,
+}
+
+impl CalibrationLedger {
+    /// Summed realized joules over every residency record — bit-derived
+    /// from the same reads [`crate::sim::FleetOutcome`] bills tenants
+    /// with.
+    pub fn realized_joules(&self) -> f64 {
+        self.placements.iter().map(|r| r.realized_joules).sum()
+    }
+
+    /// Summed realized bytes over every residency record.
+    pub fn realized_bytes(&self) -> f64 {
+        self.placements.iter().map(|r| r.realized_bytes).sum()
+    }
+
+    /// Join each migration's estimate against the realized J/B of the
+    /// session's source (`preempt`-ended, on `from`) and first
+    /// subsequent target (on `to`) residencies. Called once by the
+    /// collector after the last residency closed.
+    pub fn join_migrations(&mut self) {
+        for m in &mut self.migrations {
+            let source = self
+                .placements
+                .iter()
+                .filter(|r| {
+                    r.session == m.session
+                        && r.host == m.from
+                        && r.end == "preempt"
+                        && (r.t1_secs - m.t_secs).abs() < 1e-6
+                })
+                .last();
+            let target = self
+                .placements
+                .iter()
+                .filter(|r| r.session == m.session && r.host == m.to && r.t0_secs >= m.t_secs)
+                .min_by(|a, b| a.t0_secs.total_cmp(&b.t0_secs));
+            if let (Some(src), Some(tgt)) = (source, target) {
+                m.realized_delay_s = Some((tgt.t0_secs - m.resume_at_secs).max(0.0));
+                if let (Some(jpb_src), Some(jpb_tgt)) = (src.realized_jpb(), tgt.realized_jpb())
+                {
+                    m.realized_benefit_j = Some((jpb_src - jpb_tgt) * tgt.realized_bytes);
+                }
+            }
+        }
+    }
+
+    /// Per-residency calibration table (markdown-renderable).
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(
+            "decision calibration",
+            &["session", "host", "end", "predicted J/B", "realized J/B", "ratio"],
+        );
+        let cell = |v: Option<f64>| match v {
+            Some(x) => format!("{x:.3e}"),
+            None => "-".to_string(),
+        };
+        for r in &self.placements {
+            t.push_row(vec![
+                r.session.clone(),
+                r.host.clone(),
+                r.end.clone(),
+                cell(r.predicted_jpb),
+                cell(r.realized_jpb()),
+                match r.error_ratio() {
+                    Some(x) => format!("{x:.2}"),
+                    None => "-".to_string(),
+                },
+            ]);
+        }
+        t
+    }
+
+    /// The whole ledger as one JSON object (placements, migrations,
+    /// anomalies).
+    pub fn to_json(&self) -> String {
+        let placements: Vec<String> = self.placements.iter().map(|r| r.to_json()).collect();
+        let migrations: Vec<String> = self.migrations.iter().map(|m| m.to_json()).collect();
+        let anomalies: Vec<String> = self
+            .anomalies
+            .iter()
+            .map(|a| {
+                format!(
+                    "{{\"session\":\"{}\",\"host\":\"{}\",\"t\":{},\"predicted_jpb\":{},\
+                     \"realized_jpb\":{},\"ratio\":{}}}",
+                    json::escape(&a.session),
+                    json::escape(&a.host),
+                    json::num(a.t_secs),
+                    json::num(a.predicted_jpb),
+                    json::num(a.realized_jpb),
+                    json::num(a.ratio),
+                )
+            })
+            .collect();
+        format!(
+            "{{\"kind\":\"greendt-calibration\",\"placements\":[{}],\"migrations\":[{}],\
+             \"anomalies\":[{}]}}",
+            placements.join(","),
+            migrations.join(","),
+            anomalies.join(",")
+        )
+    }
+}
+
+/// Jain's fairness index over an iterator of non-negative shares:
+/// `(Σx)² / (n·Σx²)`, 1 for perfectly equal shares, `1/n` for one
+/// share taking everything. `None` when no positive share exists.
+pub fn jain_index(shares: impl Iterator<Item = f64>) -> Option<f64> {
+    let mut sum = 0.0;
+    let mut sum_sq = 0.0;
+    let mut n = 0usize;
+    for x in shares {
+        if x > 0.0 {
+            sum += x;
+            sum_sq += x * x;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return None;
+    }
+    Some((sum * sum) / (n as f64 * sum_sq))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(session: &str, predicted: Option<f64>, bytes: f64, joules: f64) -> CalibrationRecord {
+        CalibrationRecord {
+            session: session.to_string(),
+            host: "h0".to_string(),
+            end: "complete".to_string(),
+            t0_secs: 0.0,
+            t1_secs: 10.0,
+            predicted_jpb: predicted,
+            realized_bytes: bytes,
+            realized_joules: joules,
+        }
+    }
+
+    #[test]
+    fn error_ratio_and_anomaly_flags() {
+        let perfect = rec("a", Some(2e-8), 1e9, 20.0);
+        assert_eq!(perfect.realized_jpb(), Some(2e-8));
+        assert_eq!(perfect.error_ratio(), Some(1.0));
+        assert_eq!(perfect.rel_error(), Some(0.0));
+        assert!(!perfect.is_anomalous(4.0));
+
+        let over = rec("b", Some(2e-8), 1e9, 100.0); // 5x the prediction
+        assert!(over.is_anomalous(4.0));
+        assert!(!over.is_anomalous(6.0));
+        let under = rec("c", Some(2e-8), 1e9, 2.0); // 10x cheaper
+        assert!(under.is_anomalous(4.0), "deviation is flagged in both directions");
+
+        let unpredicted = rec("d", None, 1e9, 20.0);
+        assert_eq!(unpredicted.error_ratio(), None);
+        assert!(!unpredicted.is_anomalous(4.0));
+        let empty = rec("e", Some(2e-8), 0.0, 0.0);
+        assert_eq!(empty.realized_jpb(), None);
+        assert!(!empty.is_anomalous(4.0));
+    }
+
+    #[test]
+    fn migration_join_computes_realized_benefit() {
+        let mut ledger = CalibrationLedger::default();
+        // Source residency on `legacy`: 10 J over 1e9 B, preempted at 100 s.
+        ledger.placements.push(CalibrationRecord {
+            session: "s".into(),
+            host: "legacy".into(),
+            end: "preempt".into(),
+            t0_secs: 0.0,
+            t1_secs: 100.0,
+            predicted_jpb: Some(1e-8),
+            realized_bytes: 1e9,
+            realized_joules: 10.0,
+        });
+        // Target residency: 4 J over 2e9 B, resumed 2 s late.
+        ledger.placements.push(CalibrationRecord {
+            session: "s".into(),
+            host: "efficient".into(),
+            end: "complete".into(),
+            t0_secs: 107.0,
+            t1_secs: 300.0,
+            predicted_jpb: Some(2e-9),
+            realized_bytes: 2e9,
+            realized_joules: 4.0,
+        });
+        ledger.migrations.push(MigrationCalibration {
+            session: "s".into(),
+            from: "legacy".into(),
+            to: "efficient".into(),
+            t_secs: 100.0,
+            resume_at_secs: 105.0,
+            est_benefit_j: 12.0,
+            est_cost_j: 3.0,
+            realized_delay_s: None,
+            realized_benefit_j: None,
+        });
+        ledger.join_migrations();
+        let m = &ledger.migrations[0];
+        assert_eq!(m.realized_delay_s, Some(2.0));
+        // (1e-8 - 2e-9) * 2e9 = 16 J realized vs 12 J estimated.
+        let realized = m.realized_benefit_j.expect("joined");
+        assert!((realized - 16.0).abs() < 1e-9, "got {realized}");
+        assert!((m.benefit_error_j().unwrap() - 4.0).abs() < 1e-9);
+        assert_eq!(m.predicted_net_j(), 9.0);
+    }
+
+    #[test]
+    fn unjoined_migration_stays_unrealized() {
+        let mut ledger = CalibrationLedger::default();
+        ledger.migrations.push(MigrationCalibration {
+            session: "ghost".into(),
+            from: "a".into(),
+            to: "b".into(),
+            t_secs: 10.0,
+            resume_at_secs: 15.0,
+            est_benefit_j: 1.0,
+            est_cost_j: 0.5,
+            realized_delay_s: None,
+            realized_benefit_j: None,
+        });
+        ledger.join_migrations();
+        assert_eq!(ledger.migrations[0].realized_benefit_j, None);
+        assert_eq!(ledger.migrations[0].benefit_error_j(), None);
+    }
+
+    #[test]
+    fn ledger_json_parses_and_sums() {
+        let mut ledger = CalibrationLedger::default();
+        ledger.placements.push(rec("a", Some(2e-8), 1e9, 20.0));
+        ledger.placements.push(rec("b", None, 5e8, 7.5));
+        ledger.anomalies.push(CalibrationAnomaly {
+            session: "a".into(),
+            host: "h0".into(),
+            t_secs: 10.0,
+            predicted_jpb: 2e-8,
+            realized_jpb: 1e-7,
+            ratio: 5.0,
+        });
+        assert_eq!(ledger.realized_joules(), 27.5);
+        assert_eq!(ledger.realized_bytes(), 1.5e9);
+        let doc = ledger.to_json();
+        let v = crate::history::json::parse(&doc).expect("ledger JSON parses");
+        assert_eq!(v.get("placements").and_then(|p| p.as_arr()).unwrap().len(), 2);
+        assert_eq!(v.get("anomalies").and_then(|p| p.as_arr()).unwrap().len(), 1);
+        let md = ledger.summary_table().to_markdown();
+        assert!(md.contains("calibration"));
+    }
+
+    #[test]
+    fn jain_index_matches_definition() {
+        assert_eq!(jain_index([1.0, 1.0, 1.0, 1.0].into_iter()), Some(1.0));
+        let skew = jain_index([1.0, 0.0, 0.0].into_iter()).unwrap();
+        assert_eq!(skew, 1.0, "zero shares are ignored");
+        let two = jain_index([3.0, 1.0].into_iter()).unwrap();
+        assert!((two - 0.8).abs() < 1e-12);
+        assert_eq!(jain_index(std::iter::empty()), None);
+    }
+}

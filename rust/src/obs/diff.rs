@@ -1,0 +1,635 @@
+//! Structural diffing of trace logs and metrics documents
+//! (`greendt trace diff A B`).
+//!
+//! The determinism contract (ARCHITECTURE §Observability) makes traces
+//! byte-comparable: one `(config, seed)` produces the same log
+//! regardless of `--shards` or wall-clock. This module turns that
+//! contract into an A/B tool — diff two runs at the same seed and
+//! whatever differs *is* the behavioral change (policy vs policy,
+//! `--resilience on` vs `off`, commit vs commit).
+//!
+//! Records are compared **structurally, not positionally**: each record
+//! is canonicalized to its `(kind, name, t0, t1, session, host, attrs)`
+//! content — record *ids* and parent links are deliberately excluded,
+//! because id sequences shift wholesale when one side emits an extra
+//! collector event, and a positional diff would then flag every
+//! subsequent record. The comparison is a multiset: records present in
+//! both logs cancel, whatever survives is reported per side, plus
+//! per-session outcome-tally deltas (the `trace summarize` roll-up) and
+//! sessions present on only one side.
+//!
+//! [`MetricsDiff`] does the same for two `--metrics` JSON documents,
+//! excluding the `stepper.*` / `warm_ticks` / `slow_ticks`
+//! shard-sensitivity carve-out so that shard-count A/Bs compare clean.
+//! [`flatten`] is the shared JSON-walking primitive; the
+//! [`crate::benchkit::sentinel`] regression checker reuses it for
+//! `BENCH_*.json` comparisons.
+
+use std::collections::BTreeMap;
+
+use crate::history::json::{self, Json};
+use crate::metrics::Table;
+
+use super::summarize::TraceLog;
+use super::trace::{AttrValue, TraceRecord};
+
+/// Render one attribute value the way the canonical form spells it.
+fn attr_text(v: &AttrValue) -> String {
+    match v {
+        AttrValue::F64(x) => json::num(*x),
+        AttrValue::U64(n) => n.to_string(),
+        AttrValue::Bool(b) => b.to_string(),
+        AttrValue::Str(s) => s.clone(),
+    }
+}
+
+/// Canonical content form of a record: everything except id/parent.
+/// Floats render with shortest-round-trip `Display`, so bit-equal
+/// records canonicalize identically and only bit-equal records cancel.
+fn canonical(r: &TraceRecord) -> String {
+    let mut s = format!(
+        "{} {} @{}",
+        if r.is_span() { "span" } else { "event" },
+        r.name,
+        json::num(r.t0_secs)
+    );
+    if let Some(t1) = r.t1_secs {
+        s.push_str(&format!("..{}", json::num(t1)));
+    }
+    if let Some(sess) = &r.session {
+        s.push_str(&format!(" session={sess}"));
+    }
+    if let Some(host) = &r.host {
+        s.push_str(&format!(" host={host}"));
+    }
+    for (k, v) in &r.attrs {
+        s.push_str(&format!(" {k}={}", attr_text(v)));
+    }
+    s
+}
+
+/// One record (multiset) present on only one side of a trace diff.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecordDelta {
+    /// Session the record is attributed to (`None` for fleet-level
+    /// records like cap events and rebalance proposals).
+    pub session: Option<String>,
+    /// Record name (`admit`, `retry`, `penalty_box`, …).
+    pub name: String,
+    /// Start/occurrence time, seconds.
+    pub t0_secs: f64,
+    /// How many copies survive cancellation (usually 1).
+    pub count: u64,
+    /// The canonical content form (ids/parents excluded).
+    pub record: String,
+}
+
+/// One per-session outcome-tally field that differs between the sides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionDelta {
+    /// The session.
+    pub session: String,
+    /// Which tally differs: `spans`, `events`, `residencies`, `moved`,
+    /// `joules` or `end`.
+    pub field: String,
+    /// Side-A value, rendered.
+    pub a: String,
+    /// Side-B value, rendered.
+    pub b: String,
+}
+
+/// A structural diff of two trace logs.
+#[derive(Debug, Clone, Default)]
+pub struct TraceDiff {
+    /// Records (after multiset cancellation) present only in side A.
+    pub only_in_a: Vec<RecordDelta>,
+    /// Records present only in side B.
+    pub only_in_b: Vec<RecordDelta>,
+    /// Sessions that appear only in side A.
+    pub sessions_only_in_a: Vec<String>,
+    /// Sessions that appear only in side B.
+    pub sessions_only_in_b: Vec<String>,
+    /// Outcome-tally fields differing for sessions present in both.
+    pub session_deltas: Vec<SessionDelta>,
+}
+
+impl TraceDiff {
+    /// Diff two parsed logs. Seed-matched identical runs produce an
+    /// empty diff (pinned in `rust/tests/calibration_diff.rs`).
+    pub fn compute(a: &TraceLog, b: &TraceLog) -> TraceDiff {
+        struct Entry {
+            ca: u64,
+            cb: u64,
+            session: Option<String>,
+            name: String,
+            t0: f64,
+        }
+        let mut entries: BTreeMap<String, Entry> = BTreeMap::new();
+        for (side, log) in [(0, a), (1, b)] {
+            for r in &log.records {
+                let e = entries.entry(canonical(r)).or_insert_with(|| Entry {
+                    ca: 0,
+                    cb: 0,
+                    session: r.session.clone(),
+                    name: r.name.clone(),
+                    t0: r.t0_secs,
+                });
+                if side == 0 {
+                    e.ca += 1;
+                } else {
+                    e.cb += 1;
+                }
+            }
+        }
+        let mut diff = TraceDiff::default();
+        for (record, e) in &entries {
+            let delta = |count: u64| RecordDelta {
+                session: e.session.clone(),
+                name: e.name.clone(),
+                t0_secs: e.t0,
+                count,
+                record: record.clone(),
+            };
+            if e.ca > e.cb {
+                diff.only_in_a.push(delta(e.ca - e.cb));
+            } else if e.cb > e.ca {
+                diff.only_in_b.push(delta(e.cb - e.ca));
+            }
+        }
+        let sort = |v: &mut Vec<RecordDelta>| {
+            v.sort_by(|x, y| {
+                x.t0_secs.total_cmp(&y.t0_secs).then_with(|| x.record.cmp(&y.record))
+            })
+        };
+        sort(&mut diff.only_in_a);
+        sort(&mut diff.only_in_b);
+
+        let sa = a.sessions();
+        let sb = b.sessions();
+        diff.sessions_only_in_a = sa.iter().filter(|s| !sb.contains(s)).cloned().collect();
+        diff.sessions_only_in_b = sb.iter().filter(|s| !sa.contains(s)).cloned().collect();
+        for s in sa.iter().filter(|s| sb.contains(s)) {
+            let (ta, tb) = (a.session_summary(s), b.session_summary(s));
+            let mut push = |field: &str, va: String, vb: String| {
+                if va != vb {
+                    diff.session_deltas.push(SessionDelta {
+                        session: s.clone(),
+                        field: field.to_string(),
+                        a: va,
+                        b: vb,
+                    });
+                }
+            };
+            push("spans", ta.spans.to_string(), tb.spans.to_string());
+            push("events", ta.events.to_string(), tb.events.to_string());
+            push("residencies", ta.residencies.to_string(), tb.residencies.to_string());
+            push("moved", json::num(ta.moved_bytes), json::num(tb.moved_bytes));
+            push("joules", json::num(ta.joules), json::num(tb.joules));
+            push("end", ta.end.to_string(), tb.end.to_string());
+        }
+        diff
+    }
+
+    /// True when the logs are structurally identical.
+    pub fn is_empty(&self) -> bool {
+        self.only_in_a.is_empty()
+            && self.only_in_b.is_empty()
+            && self.sessions_only_in_a.is_empty()
+            && self.sessions_only_in_b.is_empty()
+            && self.session_deltas.is_empty()
+    }
+
+    /// Sessions implicated by any delta, sorted and deduplicated
+    /// (fleet-level records contribute no session).
+    pub fn sessions(&self) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .only_in_a
+            .iter()
+            .chain(&self.only_in_b)
+            .filter_map(|d| d.session.clone())
+            .chain(self.sessions_only_in_a.iter().cloned())
+            .chain(self.sessions_only_in_b.iter().cloned())
+            .chain(self.session_deltas.iter().map(|d| d.session.clone()))
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    /// Render the diff as markdown (`labels` name the two sides).
+    pub fn to_markdown(&self, label_a: &str, label_b: &str) -> String {
+        let mut out = format!("# trace diff: {label_a} vs {label_b}\n\n");
+        if self.is_empty() {
+            out.push_str("identical (structurally empty diff)\n");
+            return out;
+        }
+        if !self.sessions_only_in_a.is_empty() {
+            out.push_str(&format!(
+                "sessions only in {label_a}: {}\n",
+                self.sessions_only_in_a.join(", ")
+            ));
+        }
+        if !self.sessions_only_in_b.is_empty() {
+            out.push_str(&format!(
+                "sessions only in {label_b}: {}\n",
+                self.sessions_only_in_b.join(", ")
+            ));
+        }
+        if !self.session_deltas.is_empty() {
+            let mut t =
+                Table::new("session tallies", &["session", "field", label_a, label_b]);
+            for d in &self.session_deltas {
+                t.push_row(vec![
+                    d.session.clone(),
+                    d.field.clone(),
+                    d.a.clone(),
+                    d.b.clone(),
+                ]);
+            }
+            out.push_str(&t.to_markdown());
+            out.push('\n');
+        }
+        let mut side = |label: &str, sign: char, deltas: &[RecordDelta]| {
+            if deltas.is_empty() {
+                return;
+            }
+            out.push_str(&format!("## records only in {label} ({})\n\n", deltas.len()));
+            const CAP: usize = 200;
+            for d in deltas.iter().take(CAP) {
+                if d.count > 1 {
+                    out.push_str(&format!("{sign} {} (x{})\n", d.record, d.count));
+                } else {
+                    out.push_str(&format!("{sign} {}\n", d.record));
+                }
+            }
+            if deltas.len() > CAP {
+                out.push_str(&format!("… and {} more\n", deltas.len() - CAP));
+            }
+            out.push('\n');
+        };
+        side(label_a, '-', &self.only_in_a);
+        side(label_b, '+', &self.only_in_b);
+        out
+    }
+
+    /// Render the diff as one JSON document
+    /// (`kind: "greendt-trace-diff"`).
+    pub fn to_json(&self, label_a: &str, label_b: &str) -> String {
+        let recs = |v: &[RecordDelta]| {
+            let rows: Vec<String> = v
+                .iter()
+                .map(|d| {
+                    format!(
+                        "{{\"session\":{},\"name\":\"{}\",\"t0\":{},\"count\":{},\
+                         \"record\":\"{}\"}}",
+                        match &d.session {
+                            Some(s) => format!("\"{}\"", json::escape(s)),
+                            None => "null".to_string(),
+                        },
+                        json::escape(&d.name),
+                        json::num(d.t0_secs),
+                        d.count,
+                        json::escape(&d.record)
+                    )
+                })
+                .collect();
+            format!("[{}]", rows.join(","))
+        };
+        let names = |v: &[String]| {
+            let rows: Vec<String> =
+                v.iter().map(|s| format!("\"{}\"", json::escape(s))).collect();
+            format!("[{}]", rows.join(","))
+        };
+        let deltas: Vec<String> = self
+            .session_deltas
+            .iter()
+            .map(|d| {
+                format!(
+                    "{{\"session\":\"{}\",\"field\":\"{}\",\"a\":\"{}\",\"b\":\"{}\"}}",
+                    json::escape(&d.session),
+                    json::escape(&d.field),
+                    json::escape(&d.a),
+                    json::escape(&d.b)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"kind\":\"greendt-trace-diff\",\"a\":\"{}\",\"b\":\"{}\",\
+             \"identical\":{},\"sessions_only_in_a\":{},\"sessions_only_in_b\":{},\
+             \"session_deltas\":[{}],\"only_in_a\":{},\"only_in_b\":{}}}",
+            json::escape(label_a),
+            json::escape(label_b),
+            self.is_empty(),
+            names(&self.sessions_only_in_a),
+            names(&self.sessions_only_in_b),
+            deltas.join(","),
+            recs(&self.only_in_a),
+            recs(&self.only_in_b)
+        )
+    }
+}
+
+/// Flatten a JSON document to `(dotted.path, leaf)` pairs in
+/// deterministic order. Objects contribute `prefix.key` segments;
+/// array elements are labeled by their `"name"` member when present
+/// (the `BENCH_*.json` micro arrays), by a `h{hosts}s{sessions}x{shards}`
+/// label for scale-grid rows, and by index otherwise. Leaves are
+/// `Null`/`Bool`/`Num`/`Str` clones.
+pub fn flatten(doc: &Json) -> Vec<(String, Json)> {
+    fn label(item: &Json, i: usize) -> String {
+        if let Some(name) = item.get("name").and_then(Json::as_str) {
+            return name.to_string();
+        }
+        if let (Some(h), Some(s)) = (
+            item.get("hosts").and_then(Json::as_u64),
+            item.get("sessions").and_then(Json::as_u64),
+        ) {
+            let x = item.get("shards").and_then(Json::as_u64).unwrap_or(1);
+            return format!("h{h}s{s}x{x}");
+        }
+        i.to_string()
+    }
+    fn walk(v: &Json, prefix: &str, out: &mut Vec<(String, Json)>) {
+        match v {
+            Json::Obj(m) => {
+                for (k, child) in m {
+                    let path =
+                        if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                    walk(child, &path, out);
+                }
+            }
+            Json::Arr(items) => {
+                for (i, child) in items.iter().enumerate() {
+                    walk(child, &format!("{prefix}[{}]", label(child, i)), out);
+                }
+            }
+            leaf => out.push((prefix.to_string(), leaf.clone())),
+        }
+    }
+    let mut out = Vec::new();
+    walk(doc, "", &mut out);
+    out
+}
+
+fn leaf_text(v: &Json) -> String {
+    match v {
+        Json::Null => "null".to_string(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(x) => json::num(*x),
+        Json::Str(s) => s.clone(),
+        _ => "?".to_string(),
+    }
+}
+
+/// One leaf path differing between two metrics documents.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsDelta {
+    /// Dotted leaf path (e.g. `registry.counters.placements.admitted`).
+    pub path: String,
+    /// Side-A value, rendered (`None` when the path is absent there).
+    pub a: Option<String>,
+    /// Side-B value, rendered.
+    pub b: Option<String>,
+}
+
+/// A structural diff of two `--metrics` JSON documents, with the
+/// shard-sensitivity carve-out (`stepper.*`, `warm_ticks`,
+/// `slow_ticks`) excluded so shard-count A/Bs compare clean.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsDiff {
+    /// Differing leaf paths, in path order.
+    pub deltas: Vec<MetricsDelta>,
+}
+
+impl MetricsDiff {
+    /// True when `path` is in the shard-sensitivity carve-out.
+    fn shard_sensitive(path: &str) -> bool {
+        path.contains("stepper.")
+            || path.ends_with("warm_ticks")
+            || path.ends_with("slow_ticks")
+    }
+
+    /// Diff two parsed metrics documents.
+    pub fn compute(a: &Json, b: &Json) -> MetricsDiff {
+        let to_map = |doc: &Json| -> BTreeMap<String, String> {
+            flatten(doc)
+                .into_iter()
+                .filter(|(p, _)| !MetricsDiff::shard_sensitive(p))
+                .map(|(p, v)| (p, leaf_text(&v)))
+                .collect()
+        };
+        let (ma, mb) = (to_map(a), to_map(b));
+        let mut deltas = Vec::new();
+        let mut paths: Vec<&String> = ma.keys().chain(mb.keys()).collect();
+        paths.sort();
+        paths.dedup();
+        for p in paths {
+            let (va, vb) = (ma.get(p), mb.get(p));
+            if va != vb {
+                deltas.push(MetricsDelta {
+                    path: p.clone(),
+                    a: va.cloned(),
+                    b: vb.cloned(),
+                });
+            }
+        }
+        MetricsDiff { deltas }
+    }
+
+    /// True when the documents agree on every compared leaf.
+    pub fn is_empty(&self) -> bool {
+        self.deltas.is_empty()
+    }
+
+    /// Render as markdown (`labels` name the two sides).
+    pub fn to_markdown(&self, label_a: &str, label_b: &str) -> String {
+        let mut out = format!("# metrics diff: {label_a} vs {label_b}\n\n");
+        if self.is_empty() {
+            out.push_str("identical (shard-sensitive series excluded)\n");
+            return out;
+        }
+        let mut t = Table::new("metrics deltas", &["path", label_a, label_b]);
+        let cell = |v: &Option<String>| v.clone().unwrap_or_else(|| "(absent)".to_string());
+        for d in &self.deltas {
+            t.push_row(vec![d.path.clone(), cell(&d.a), cell(&d.b)]);
+        }
+        out.push_str(&t.to_markdown());
+        out
+    }
+
+    /// Render as one JSON document (`kind: "greendt-metrics-diff"`).
+    pub fn to_json(&self, label_a: &str, label_b: &str) -> String {
+        let opt = |v: &Option<String>| match v {
+            Some(s) => format!("\"{}\"", json::escape(s)),
+            None => "null".to_string(),
+        };
+        let rows: Vec<String> = self
+            .deltas
+            .iter()
+            .map(|d| {
+                format!(
+                    "{{\"path\":\"{}\",\"a\":{},\"b\":{}}}",
+                    json::escape(&d.path),
+                    opt(&d.a),
+                    opt(&d.b)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"kind\":\"greendt-metrics-diff\",\"a\":\"{}\",\"b\":\"{}\",\
+             \"identical\":{},\"deltas\":[{}]}}",
+            json::escape(label_a),
+            json::escape(label_b),
+            self.is_empty(),
+            rows.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{trace_jsonl, TraceSink};
+
+    fn sample_sink() -> TraceSink {
+        let mut sink = TraceSink::new();
+        let root = sink.root("s1", 0.0);
+        sink.span(
+            "admit",
+            0.0,
+            20.0,
+            Some("s1"),
+            Some("h0"),
+            Some(root),
+            vec![("moved_bytes", 5e8.into()), ("attributed_j", 120.0.into())],
+        );
+        sink.event("complete", 20.0, Some("s1"), Some("h0"), Some(root), vec![]);
+        sink
+    }
+
+    #[test]
+    fn identical_logs_diff_empty() {
+        let a = TraceLog::parse(&trace_jsonl(&sample_sink().finalize(20.0)));
+        let b = TraceLog::parse(&trace_jsonl(&sample_sink().finalize(20.0)));
+        let d = TraceDiff::compute(&a, &b);
+        assert!(d.is_empty(), "{:?}", d);
+        assert!(d.to_markdown("a", "b").contains("identical"));
+        let j = json::parse(&d.to_json("a", "b")).expect("diff JSON parses");
+        assert_eq!(j.get("identical").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn id_shifts_alone_do_not_diff() {
+        let a = TraceLog::parse(&trace_jsonl(&sample_sink().finalize(20.0)));
+        // Same content, every id (and parent link) shifted wholesale.
+        let mut b = TraceLog::parse(&trace_jsonl(&sample_sink().finalize(20.0)));
+        for r in &mut b.records {
+            r.id += 100;
+            r.parent = r.parent.map(|p| p + 100);
+        }
+        assert!(TraceDiff::compute(&a, &b).is_empty(), "ids/parents are excluded");
+    }
+
+    #[test]
+    fn extra_records_localize_to_their_session() {
+        let a = TraceLog::parse(&trace_jsonl(&sample_sink().finalize(20.0)));
+        let mut sink = sample_sink();
+        let root2 = sink.root("s2", 5.0);
+        sink.event("retry", 6.0, Some("s2"), None, Some(root2), vec![("attempt", 1u64.into())]);
+        let b = TraceLog::parse(&trace_jsonl(&sink.finalize(20.0)));
+        let d = TraceDiff::compute(&a, &b);
+        assert!(!d.is_empty());
+        assert!(d.only_in_a.is_empty());
+        assert_eq!(d.sessions_only_in_b, vec!["s2".to_string()]);
+        assert!(d.only_in_b.iter().all(|r| r.session.as_deref() == Some("s2")));
+        assert_eq!(d.sessions(), vec!["s2".to_string()]);
+        let md = d.to_markdown("a", "b");
+        assert!(md.contains("+ event retry"), "{md}");
+    }
+
+    #[test]
+    fn attr_change_shows_on_both_sides() {
+        let a = TraceLog::parse(&trace_jsonl(&sample_sink().finalize(20.0)));
+        let mut sink = TraceSink::new();
+        let root = sink.root("s1", 0.0);
+        sink.span(
+            "admit",
+            0.0,
+            20.0,
+            Some("s1"),
+            Some("h0"),
+            Some(root),
+            vec![("moved_bytes", 5e8.into()), ("attributed_j", 130.0.into())],
+        );
+        sink.event("complete", 20.0, Some("s1"), Some("h0"), Some(root), vec![]);
+        let b = TraceLog::parse(&trace_jsonl(&sink.finalize(20.0)));
+        let d = TraceDiff::compute(&a, &b);
+        assert_eq!(d.only_in_a.len(), 1);
+        assert_eq!(d.only_in_b.len(), 1);
+        assert_eq!(d.only_in_a[0].name, "admit");
+        // The tally roll-up localizes the change to the joules column.
+        assert!(d.session_deltas.iter().any(|s| s.field == "joules"));
+        assert!(d.session_deltas.iter().all(|s| s.session == "s1"));
+    }
+
+    #[test]
+    fn duplicate_records_cancel_by_count() {
+        let mut sink_a = TraceSink::new();
+        let root = sink_a.root("s", 0.0);
+        for _ in 0..3 {
+            sink_a.event("tune", 1.0, Some("s"), Some("h"), Some(root), vec![]);
+        }
+        let mut sink_b = TraceSink::new();
+        let root_b = sink_b.root("s", 0.0);
+        sink_b.event("tune", 1.0, Some("s"), Some("h"), Some(root_b), vec![]);
+        let a = TraceLog::parse(&trace_jsonl(&sink_a.finalize(2.0)));
+        let b = TraceLog::parse(&trace_jsonl(&sink_b.finalize(2.0)));
+        let d = TraceDiff::compute(&a, &b);
+        assert_eq!(d.only_in_a.len(), 1);
+        assert_eq!(d.only_in_a[0].count, 2, "two surplus copies on side A");
+        assert!(d.only_in_b.is_empty());
+    }
+
+    #[test]
+    fn flatten_labels_named_and_grid_rows() {
+        let doc = json::parse(
+            r#"{"micro":[{"name":"alloc","mean_s":0.5}],
+                "grid":[{"hosts":10,"sessions":100,"shards":8,"wall_seconds":2.0}],
+                "plain":[1,2]}"#,
+        )
+        .unwrap();
+        let flat = flatten(&doc);
+        let paths: Vec<&str> = flat.iter().map(|(p, _)| p.as_str()).collect();
+        assert!(paths.contains(&"micro[alloc].mean_s"), "{paths:?}");
+        assert!(paths.contains(&"grid[h10s100x8].wall_seconds"));
+        assert!(paths.contains(&"plain[0]"));
+        assert!(paths.contains(&"micro[alloc].name"), "string leaves kept");
+    }
+
+    #[test]
+    fn metrics_diff_excludes_shard_carveout() {
+        let a = json::parse(
+            r#"{"registry":{"counters":{"placements.admitted":2,"stepper.warm_ticks":100}},
+                "timeline":[{"t":3,"warm_ticks":50,"slow_ticks":1,"watts":40}]}"#,
+        )
+        .unwrap();
+        let b = json::parse(
+            r#"{"registry":{"counters":{"placements.admitted":2,"stepper.warm_ticks":999}},
+                "timeline":[{"t":3,"warm_ticks":2,"slow_ticks":9,"watts":40}]}"#,
+        )
+        .unwrap();
+        assert!(MetricsDiff::compute(&a, &b).is_empty(), "only carve-out series differ");
+        let c = json::parse(
+            r#"{"registry":{"counters":{"placements.admitted":3}},"timeline":[]}"#,
+        )
+        .unwrap();
+        let d = MetricsDiff::compute(&a, &c);
+        assert!(!d.is_empty());
+        assert!(d
+            .deltas
+            .iter()
+            .any(|x| x.path == "registry.counters.placements.admitted"));
+        assert!(json::parse(&d.to_json("a", "c")).is_some());
+        assert!(d.to_markdown("a", "c").contains("placements.admitted"));
+    }
+}

@@ -255,6 +255,30 @@ pub struct MetricsTimeline {
     pub snapshots: Vec<SegmentSnapshot>,
 }
 
+impl MetricsTimeline {
+    /// Render the timeline as CSV (`greendt fleet --metrics-csv`), one
+    /// row per segment boundary with the same fields — and the same
+    /// shortest-round-trip float rendering — as the JSON document, so
+    /// spreadsheet tooling shares the exports' bit-determinism.
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("t_secs,active_sessions,queued,goodput_bps,watts,warm_ticks,slow_ticks\n");
+        for s in &self.snapshots {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                json::num(s.t_secs),
+                s.active_sessions,
+                s.queued,
+                json::num(s.goodput_bps),
+                json::num(s.watts),
+                s.warm_ticks,
+                s.slow_ticks
+            ));
+        }
+        out
+    }
+}
+
 /// Everything `--metrics` collects: the registry plus the timeline.
 #[derive(Debug, Clone, Default)]
 pub struct FleetMetrics {
@@ -378,5 +402,28 @@ mod tests {
         assert!(crate::history::json::parse(&doc).is_some(), "metrics JSON parses: {doc}");
         assert!(doc.contains("\"kind\": \"greendt-metrics\""));
         assert!(doc.contains("\"warm_ticks\":30"));
+    }
+
+    #[test]
+    fn timeline_csv_matches_snapshots() {
+        let mut tl = MetricsTimeline::default();
+        assert_eq!(tl.to_csv().lines().count(), 1, "header only when empty");
+        tl.snapshots.push(SegmentSnapshot {
+            t_secs: 3.5,
+            active_sessions: 2,
+            queued: 1,
+            goodput_bps: 1e8,
+            watts: 40.25,
+            warm_ticks: 30,
+            slow_ticks: 10,
+        });
+        let csv = tl.to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next(),
+            Some("t_secs,active_sessions,queued,goodput_bps,watts,warm_ticks,slow_ticks")
+        );
+        assert_eq!(lines.next(), Some("3.5,2,1,100000000,40.25,30,10"));
+        assert_eq!(lines.next(), None);
     }
 }

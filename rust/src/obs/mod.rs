@@ -1,10 +1,12 @@
 //! Deterministic, zero-dependency observability: lifecycle spans,
-//! decision events, counters and percentile histograms (ISSUE 9).
+//! decision events, counters, percentile histograms (ISSUE 9) and the
+//! analysis layer on top of them — decision calibration and structural
+//! trace diffing (ISSUE 10).
 //!
 //! The paper's algorithms live on runtime measurements — throughput
 //! deltas, power draw, tuning reactions per monitoring interval — yet
 //! until this subsystem the reproduction only reported end-of-run
-//! aggregates. `obs` adds the missing substrate in three pieces:
+//! aggregates. `obs` adds the missing substrate in five pieces:
 //!
 //! * **[`trace`]** — sim-clock spans (`session` → `admit` residencies,
 //!   `slow_start`, `migrate`, `penalty_box`) and instant decision events
@@ -17,7 +19,15 @@
 //!   [`MetricsTimeline`];
 //! * **[`summarize`]** — the read side: parse a trace back, rebuild
 //!   per-session span trees, check connectivity, render waterfalls and
-//!   histogram tables (the `greendt trace` CLI).
+//!   histogram tables (the `greendt trace` CLI);
+//! * **[`calibrate`]** — the decision calibration ledger: join each
+//!   placement's and migration's *predicted* joules-per-byte against
+//!   the realized bytes/joules at residency close (bit-reconciled with
+//!   [`crate::sim::FleetOutcome`]), flag anomalies, and run the
+//!   starved-queue / fairness-drop watchdogs;
+//! * **[`diff`]** — `greendt trace diff A B`: structural, seed-matched
+//!   diffing of two trace logs or metrics documents, turning the
+//!   determinism contract into an A/B debugging tool.
 //!
 //! The governing constraint is *determinism preservation*: tracing off
 //! is bit-identical to an untraced run (every hook is a pure read behind
@@ -25,13 +35,22 @@
 //! 1/2/8 (emission only at segment boundaries, per-host buffers merged
 //! in host-index order — the PR-6 lockstep discipline). The one
 //! deliberately shard-*sensitive* series, warm/slow stepper occupancy,
-//! lives in metrics only — see [`metrics`]'s module docs. Pinned by
-//! `rust/tests/trace_determinism.rs`.
+//! lives in metrics only — see [`metrics`]'s module docs, and note that
+//! [`diff`] excludes exactly that carve-out. Pinned by
+//! `rust/tests/trace_determinism.rs` and
+//! `rust/tests/calibration_diff.rs`.
 
+pub mod calibrate;
+pub mod diff;
 pub mod metrics;
 pub mod summarize;
 pub mod trace;
 
+pub use calibrate::{
+    jain_index, CalibrationAnomaly, CalibrationConfig, CalibrationLedger,
+    CalibrationRecord, MigrationCalibration,
+};
+pub use diff::{MetricsDelta, MetricsDiff, RecordDelta, SessionDelta, TraceDiff};
 pub use metrics::{
     FleetMetrics, Histogram, MetricsRegistry, MetricsTimeline, SegmentSnapshot,
     METRICS_FORMAT_VERSION,

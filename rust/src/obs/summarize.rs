@@ -75,6 +75,36 @@ impl TraceLog {
         SessionTree { session: session.to_string(), root, records }
     }
 
+    /// Roll up one session: record counts, bytes/joules summed over
+    /// ended residencies, and how the session ended. This is the one
+    /// tally every consumer shares — the markdown table, the `--json`
+    /// output and [`super::diff::TraceDiff`] all read it.
+    pub fn session_summary(&self, session: &str) -> SessionSummary {
+        let recs = self.session_records(session);
+        let residencies: Vec<&&TraceRecord> =
+            recs.iter().filter(|r| r.name == "admit").collect();
+        SessionSummary {
+            session: session.to_string(),
+            spans: recs.iter().filter(|r| r.is_span()).count(),
+            events: recs.iter().filter(|r| !r.is_span()).count(),
+            residencies: residencies.len(),
+            moved_bytes: residencies.iter().filter_map(|r| r.attr_f64("moved_bytes")).sum(),
+            joules: residencies.iter().filter_map(|r| r.attr_f64("attributed_j")).sum(),
+            end: if recs.iter().any(|r| r.name == "dead_letter") {
+                "dead_letter"
+            } else if recs.iter().any(|r| r.name == "complete") {
+                "complete"
+            } else {
+                "open"
+            },
+        }
+    }
+
+    /// Every session's roll-up, in session-name order.
+    pub fn summaries(&self) -> Vec<SessionSummary> {
+        self.sessions().iter().map(|s| self.session_summary(s)).collect()
+    }
+
     /// Per-session roll-up table: residencies, lifecycle events, bytes
     /// and joules summed over ended residencies, and how the session
     /// ended.
@@ -83,34 +113,43 @@ impl TraceLog {
             "sessions",
             &["session", "spans", "events", "residencies", "moved", "joules", "end"],
         );
-        for name in self.sessions() {
-            let recs = self.session_records(&name);
-            let spans = recs.iter().filter(|r| r.is_span()).count();
-            let events = recs.iter().filter(|r| !r.is_span()).count();
-            let residencies: Vec<&&TraceRecord> =
-                recs.iter().filter(|r| r.name == "admit").collect();
-            let moved: f64 =
-                residencies.iter().filter_map(|r| r.attr_f64("moved_bytes")).sum();
-            let joules: f64 =
-                residencies.iter().filter_map(|r| r.attr_f64("attributed_j")).sum();
-            let end = if recs.iter().any(|r| r.name == "dead_letter") {
-                "dead_letter"
-            } else if recs.iter().any(|r| r.name == "complete") {
-                "complete"
-            } else {
-                "open"
-            };
+        for s in self.summaries() {
             t.push_row(vec![
-                name,
-                spans.to_string(),
-                events.to_string(),
-                residencies.len().to_string(),
-                format!("{:.2e} B", moved),
-                format!("{:.1} J", joules),
-                end.to_string(),
+                s.session,
+                s.spans.to_string(),
+                s.events.to_string(),
+                s.residencies.to_string(),
+                format!("{:.2e} B", s.moved_bytes),
+                format!("{:.1} J", s.joules),
+                s.end.to_string(),
             ]);
         }
         t
+    }
+
+    /// The `summarize` roll-up as one JSON document
+    /// (`kind: "greendt-trace-summary"`), the machine-readable sibling
+    /// of [`TraceLog::summary_table`].
+    pub fn summary_json(&self) -> String {
+        let rows: Vec<String> = self.summaries().iter().map(SessionSummary::to_json).collect();
+        format!(
+            "{{\"kind\":\"greendt-trace-summary\",\"records\":{},\"skipped\":{},\
+             \"sessions\":[{}]}}",
+            self.records.len(),
+            self.skipped,
+            rows.join(",")
+        )
+    }
+
+    /// The session-name list as one JSON document
+    /// (`kind: "greendt-trace-sessions"`).
+    pub fn sessions_json(&self) -> String {
+        let names: Vec<String> =
+            self.sessions().iter().map(|s| format!("\"{}\"", json::escape(s))).collect();
+        format!(
+            "{{\"kind\":\"greendt-trace-sessions\",\"sessions\":[{}]}}",
+            names.join(",")
+        )
     }
 
     /// Span-duration histogram table: one row per span name with exact
@@ -142,6 +181,42 @@ impl TraceLog {
             ]);
         }
         t
+    }
+}
+
+/// One session's `summarize` roll-up row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSummary {
+    /// The session name.
+    pub session: String,
+    /// Span records attributed to the session.
+    pub spans: usize,
+    /// Instant events attributed to the session.
+    pub events: usize,
+    /// `admit` residencies (closed host stays).
+    pub residencies: usize,
+    /// Bytes summed over the residencies' `moved_bytes` attrs.
+    pub moved_bytes: f64,
+    /// Joules summed over the residencies' `attributed_j` attrs.
+    pub joules: f64,
+    /// `complete`, `dead_letter` or `open`.
+    pub end: &'static str,
+}
+
+impl SessionSummary {
+    /// One JSON object (embedded by [`TraceLog::summary_json`]).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"session\":\"{}\",\"spans\":{},\"events\":{},\"residencies\":{},\
+             \"moved_bytes\":{},\"joules\":{},\"end\":\"{}\"}}",
+            json::escape(&self.session),
+            self.spans,
+            self.events,
+            self.residencies,
+            json::num(self.moved_bytes),
+            json::num(self.joules),
+            self.end
+        )
     }
 }
 
@@ -187,6 +262,21 @@ impl SessionTree {
             self.records.iter().filter(|r| r.parent == Some(id)).collect();
         out.sort_by(|a, b| a.t0_secs.total_cmp(&b.t0_secs).then(a.id.cmp(&b.id)));
         out
+    }
+
+    /// The tree as one JSON document (`kind: "greendt-trace-spans"`):
+    /// connectivity plus every record in file order, each serialized
+    /// with the trace-line codec (the machine-readable sibling of
+    /// [`SessionTree::waterfall`]).
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self.records.iter().map(|r| r.to_json_line()).collect();
+        format!(
+            "{{\"kind\":\"greendt-trace-spans\",\"session\":\"{}\",\"connected\":{},\
+             \"records\":[{}]}}",
+            json::escape(&self.session),
+            self.connected(),
+            rows.join(",")
+        )
     }
 
     /// Render the tree as an indented text waterfall: spans as
@@ -306,6 +396,33 @@ mod tests {
         assert!(md.contains("s1"));
         assert!(md.contains("complete"));
         assert!(md.contains("120.0 J"), "joules summed from residency attrs: {md}");
+    }
+
+    #[test]
+    fn json_siblings_parse_and_reconcile() {
+        let log = sample_log();
+        let summary = json::parse(&log.summary_json()).expect("summary JSON parses");
+        assert_eq!(
+            summary.get("kind").and_then(|k| k.as_str()),
+            Some("greendt-trace-summary")
+        );
+        let sessions = summary.get("sessions").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(sessions.len(), 2);
+        let s1 = &sessions[0];
+        assert_eq!(s1.get("session").and_then(|v| v.as_str()), Some("s1"));
+        assert_eq!(s1.get("joules").and_then(|v| v.as_f64()), Some(120.0));
+        assert_eq!(s1.get("end").and_then(|v| v.as_str()), Some("complete"));
+
+        let names = json::parse(&log.sessions_json()).expect("sessions JSON parses");
+        let arr = names.get("sessions").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].as_str(), Some("s2"));
+
+        let tree = json::parse(&log.tree("s1").to_json()).expect("spans JSON parses");
+        assert_eq!(tree.get("connected").and_then(|v| v.as_bool()), Some(true));
+        let recs = tree.get("records").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(recs.len(), log.session_records("s1").len());
+        assert!(recs.iter().all(|r| r.get("v").is_some()), "records use the line codec");
     }
 
     #[test]

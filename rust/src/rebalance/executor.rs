@@ -177,6 +177,16 @@ pub struct MoveVerdict {
     pub reason: &'static str,
 }
 
+impl MoveVerdict {
+    /// Predicted net joules saved by the move: estimated benefit minus
+    /// the drain/re-ramp toll. Positive means the cost model expects
+    /// the move to pay for itself; the calibration ledger compares this
+    /// against the realized benefit at residency close.
+    pub fn net_j(&self) -> f64 {
+        self.est_benefit_j - self.est_cost_j
+    }
+}
+
 /// The rebalancer: policy + cost model + per-session move budgets.
 #[derive(Debug, Clone)]
 pub struct Rebalancer {
@@ -764,5 +774,20 @@ mod tests {
         assert_eq!(a, b);
         // Equal-score targets tie-break to the first in scan order.
         assert_eq!(a.unwrap().to, 1);
+    }
+
+    #[test]
+    fn verdict_net_is_benefit_minus_cost() {
+        let v = MoveVerdict {
+            session: "s".to_string(),
+            from: 0,
+            to: 1,
+            est_benefit_j: 12.5,
+            est_cost_j: 4.5,
+            est_power_drop_w: 1.0,
+            accepted: true,
+            reason: "picked",
+        };
+        assert_eq!(v.net_j(), 8.0);
     }
 }

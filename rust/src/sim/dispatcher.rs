@@ -79,6 +79,10 @@ use crate::coordinator::fleet::{FleetPolicyKind, PlacementKind};
 use crate::coordinator::AlgorithmKind;
 use crate::history::{KnnIndex, Query, RunOutcome, WorkloadFingerprint, CONFIDENCE_FLOOR};
 use crate::netsim::{BandwidthEvent, CrossTrafficConfig};
+use crate::obs::calibrate::{
+    jain_index, CalibrationAnomaly, CalibrationConfig, CalibrationLedger, CalibrationRecord,
+    MigrationCalibration,
+};
 use crate::obs::metrics::{FleetMetrics, SegmentSnapshot};
 use crate::obs::trace::{AttrValue, TraceRecord, TraceSink};
 use crate::rebalance::{HostView, MoveVerdict, RebalanceConfig, Rebalancer, SessionView};
@@ -547,6 +551,11 @@ pub struct DispatcherConfig {
     /// snapshot warm/slow tick fields) are shard-*sensitive* by design —
     /// they measure the driver, not the simulated fleet.
     pub metrics: bool,
+    /// Knobs for the decision calibration ledger and its watchdogs
+    /// (see [`crate::obs::calibrate`]). The ledger itself runs whenever
+    /// any observability is on (`trace` or `metrics`) — this only tunes
+    /// the anomaly factor and the watchdog thresholds.
+    pub calibration: CalibrationConfig,
 }
 
 impl DispatcherConfig {
@@ -577,6 +586,7 @@ impl DispatcherConfig {
             resilience: ResilienceConfig::new(),
             trace: false,
             metrics: false,
+            calibration: CalibrationConfig::default(),
         }
     }
 
@@ -667,6 +677,13 @@ impl DispatcherConfig {
         self.metrics = true;
         self
     }
+
+    /// Tune the calibration ledger / watchdog knobs (see
+    /// [`Self::calibration`]).
+    pub fn with_calibration(mut self, calibration: CalibrationConfig) -> Self {
+        self.calibration = calibration;
+        self
+    }
 }
 
 /// What a dispatcher run produced: the fleet outcome (tenants flattened
@@ -704,6 +721,12 @@ pub struct DispatchOutcome {
     /// The metrics registry + per-segment timeline (`None` unless
     /// [`DispatcherConfig::metrics`] was set).
     pub metrics: Option<FleetMetrics>,
+    /// The decision calibration ledger: per-residency predicted-vs-
+    /// realized J/B joins, per-migration benefit joins and flagged
+    /// anomalies (`None` unless some observability — trace or metrics —
+    /// was on). Its realized joules bit-match
+    /// [`FleetOutcome`]'s per-tenant attribution.
+    pub calibration: Option<CalibrationLedger>,
 }
 
 /// Derive one host's RNG seed from the fleet seed (distinct background
@@ -1086,6 +1109,25 @@ fn make_record(
 struct Collector {
     sink: Option<TraceSink>,
     metrics: Option<FleetMetrics>,
+    /// The decision calibration ledger (on whenever any observability
+    /// is — it feeds trace events, metrics histograms and the outcome's
+    /// ledger alike).
+    calib: Option<CalibrationLedger>,
+    /// Anomaly/watchdog thresholds for the ledger.
+    calib_cfg: CalibrationConfig,
+    /// Admissions so far — the starvation watchdog's progress marker.
+    admitted_total: u64,
+    /// `(admissions at anchor, anchor time)`: the queue has been
+    /// non-empty with no admission since the anchor. `None` while the
+    /// queue is empty.
+    starve_anchor: Option<(u64, f64)>,
+    /// Edge trigger: the starvation alarm already fired for this stall.
+    starving: bool,
+    /// Edge trigger: the fairness alarm already fired for this dip.
+    fairness_low: bool,
+    /// Previous boundary's per-host delivered-byte odometers (fairness
+    /// watchdog deltas).
+    last_moved_by_host: Vec<f64>,
     /// Segment-delta bookkeeping for the timeline (previous boundary's
     /// clock, fleet byte/joule odometers and driver tick counters).
     last_t: f64,
@@ -1097,10 +1139,17 @@ struct Collector {
 }
 
 impl Collector {
-    fn new(trace: bool, metrics: bool) -> Collector {
+    fn new(trace: bool, metrics: bool, calib_cfg: CalibrationConfig) -> Collector {
         Collector {
             sink: trace.then(TraceSink::new),
             metrics: metrics.then(FleetMetrics::default),
+            calib: (trace || metrics).then(CalibrationLedger::default),
+            calib_cfg,
+            admitted_total: 0,
+            starve_anchor: None,
+            starving: false,
+            fairness_low: false,
+            last_moved_by_host: Vec::new(),
             last_t: 0.0,
             last_moved: 0.0,
             last_joules: 0.0,
@@ -1210,6 +1259,9 @@ impl Collector {
     /// candidate host, so rejected candidates are visible with the
     /// scores that outbid them.
     fn on_decision(&mut self, rec: &DispatchRecord) {
+        if rec.admitted_host.is_some() {
+            self.admitted_total += 1;
+        }
         if let Some(m) = &mut self.metrics {
             match rec.admitted_host {
                 Some(_) => {
@@ -1267,6 +1319,19 @@ impl Collector {
     /// drain window, plus the est-cost histograms the realized-delay
     /// series is compared against.
     fn on_migration(&mut self, rec: &MigrationRecord) {
+        if let Some(c) = &mut self.calib {
+            c.migrations.push(MigrationCalibration {
+                session: rec.session.clone(),
+                from: rec.from.clone(),
+                to: rec.to.clone(),
+                t_secs: rec.t_secs,
+                resume_at_secs: rec.resume_at_secs,
+                est_benefit_j: rec.est_benefit_j,
+                est_cost_j: rec.est_cost_j,
+                realized_delay_s: None,
+                realized_benefit_j: None,
+            });
+        }
         if let Some(sink) = &mut self.sink {
             let root = sink.root(&rec.session, rec.t_secs);
             sink.span(
@@ -1311,6 +1376,9 @@ impl Collector {
         if let Some(m) = &mut self.metrics {
             let rejected = verdicts.iter().filter(|v| !v.accepted).count() as u64;
             m.registry.inc("rebalance.rejected", rejected);
+            for v in verdicts.iter().filter(|v| v.accepted) {
+                m.registry.record("rebalance.net_j", v.net_j());
+            }
         }
         let Some(sink) = &mut self.sink else { return };
         for v in verdicts {
@@ -1363,8 +1431,16 @@ impl Collector {
                 sink.absorb(w.take_trace());
             }
         }
-        let Some(m) = &mut self.metrics else { return };
         let t = worlds[0].now_secs();
+        if self.calib.is_some() {
+            for i in 0..worlds.len() {
+                for rec in worlds[i].take_calibration() {
+                    self.process_calibration(rec);
+                }
+            }
+            self.watchdogs(worlds, queued, t);
+        }
+        let Some(m) = &mut self.metrics else { return };
         let mut moved = 0.0;
         let mut joules = 0.0;
         let mut warm = 0u64;
@@ -1410,9 +1486,171 @@ impl Collector {
         self.last_aimd = aimd;
     }
 
+    /// One closed residency reaches the ledger: error histogram,
+    /// anomaly screen (trace event + counter when the realized J/B
+    /// deviates beyond the configured factor), then the record itself.
+    fn process_calibration(&mut self, rec: CalibrationRecord) {
+        if let Some(m) = &mut self.metrics {
+            if let Some(e) = rec.rel_error() {
+                m.registry.record("placement.jpb_error", e);
+            }
+            m.registry.inc("calibration.records", 1);
+        }
+        if rec.is_anomalous(self.calib_cfg.anomaly_factor) {
+            let anomaly = CalibrationAnomaly {
+                session: rec.session.clone(),
+                host: rec.host.clone(),
+                t_secs: rec.t1_secs,
+                predicted_jpb: rec.predicted_jpb.unwrap_or(0.0),
+                realized_jpb: rec.realized_jpb().unwrap_or(0.0),
+                ratio: rec.error_ratio().unwrap_or(0.0),
+            };
+            if let Some(m) = &mut self.metrics {
+                m.registry.inc("calibration.anomalies", 1);
+            }
+            if let Some(sink) = &mut self.sink {
+                let root = sink.root_of(&rec.session);
+                sink.event(
+                    "calibration_anomaly",
+                    rec.t1_secs,
+                    Some(&rec.session),
+                    Some(&rec.host),
+                    root,
+                    vec![
+                        ("predicted_jpb", AttrValue::F64(anomaly.predicted_jpb)),
+                        ("realized_jpb", AttrValue::F64(anomaly.realized_jpb)),
+                        ("ratio", AttrValue::F64(anomaly.ratio)),
+                    ],
+                );
+            }
+            if let Some(c) = &mut self.calib {
+                c.anomalies.push(anomaly);
+            }
+        }
+        if let Some(c) = &mut self.calib {
+            c.placements.push(rec);
+        }
+    }
+
+    /// Segment-boundary health screens: a starvation alarm when the
+    /// queue stays non-empty with zero admissions past the configured
+    /// window, and a Jain-fairness alarm when active hosts' segment
+    /// byte deltas skew below the floor. Both are edge-triggered — one
+    /// event per stall/dip, re-armed on recovery.
+    fn watchdogs(&mut self, worlds: &[HostWorld], queued: usize, t: f64) {
+        if queued == 0 {
+            self.starve_anchor = None;
+            self.starving = false;
+        } else {
+            match self.starve_anchor {
+                Some((n, since)) if n == self.admitted_total => {
+                    if !self.starving && t - since > self.calib_cfg.starve_secs {
+                        self.starving = true;
+                        if let Some(m) = &mut self.metrics {
+                            m.registry.inc("watchdog.queue_starved", 1);
+                        }
+                        if let Some(sink) = &mut self.sink {
+                            sink.event(
+                                "queue_starved",
+                                t,
+                                None,
+                                None,
+                                None,
+                                vec![
+                                    ("queued", AttrValue::U64(queued as u64)),
+                                    ("starved_s", AttrValue::F64(t - since)),
+                                ],
+                            );
+                        }
+                    }
+                }
+                _ => {
+                    self.starve_anchor = Some((self.admitted_total, t));
+                    self.starving = false;
+                }
+            }
+        }
+        self.last_moved_by_host.resize(worlds.len(), 0.0);
+        let mut deltas = Vec::new();
+        for (i, w) in worlds.iter().enumerate() {
+            let moved = w.moved_bytes();
+            let delta = moved - self.last_moved_by_host[i];
+            self.last_moved_by_host[i] = moved;
+            if w.occupancy() > 0 {
+                deltas.push(delta);
+            }
+        }
+        if deltas.len() >= 2 {
+            if let Some(j) = jain_index(deltas.iter().copied()) {
+                if let Some(m) = &mut self.metrics {
+                    m.registry.record("fairness.jain_hosts", j);
+                }
+                if j < self.calib_cfg.fairness_floor {
+                    if !self.fairness_low {
+                        self.fairness_low = true;
+                        if let Some(m) = &mut self.metrics {
+                            m.registry.inc("watchdog.fairness_drop", 1);
+                        }
+                        if let Some(sink) = &mut self.sink {
+                            sink.event(
+                                "fairness_drop",
+                                t,
+                                None,
+                                None,
+                                None,
+                                vec![
+                                    ("jain", AttrValue::F64(j)),
+                                    ("hosts_active", AttrValue::U64(deltas.len() as u64)),
+                                ],
+                            );
+                        }
+                    }
+                } else {
+                    self.fairness_low = false;
+                }
+            }
+        } else {
+            self.fairness_low = false;
+        }
+    }
+
+    /// End of run (satellite: censored-wait accounting): admissions
+    /// still queued when the run ends never reach [`Self::on_decision`],
+    /// so their waits would silently vanish from `queue.wait_s` and the
+    /// histogram would under-report exactly the saturated tail. Record
+    /// each censored wait (request → run end) plus a `queue.censored`
+    /// counter so readers can tell observed waits from censored ones.
+    fn on_run_end(&mut self, end_secs: f64, queued_requested: &[f64]) {
+        if let Some(m) = &mut self.metrics {
+            m.registry.inc("queue.censored", queued_requested.len() as u64);
+            for &req in queued_requested {
+                m.registry.record("queue.wait_s", (end_secs - req).max(0.0));
+            }
+        }
+    }
+
     /// End of run: close every host's still-open residency, drain the
-    /// leftovers and finalize the merged log.
+    /// leftovers, join migrations against their resumed residencies and
+    /// finalize the merged log.
     fn finish(mut self, worlds: &mut [HostWorld], end_secs: f64) -> FinishedCollector {
+        if self.calib.is_some() {
+            for i in 0..worlds.len() {
+                worlds[i].finalize_calibration();
+                for rec in worlds[i].take_calibration() {
+                    self.process_calibration(rec);
+                }
+            }
+            if let Some(c) = &mut self.calib {
+                c.join_migrations();
+                if let Some(m) = &mut self.metrics {
+                    for mig in &c.migrations {
+                        if let Some(e) = mig.benefit_error_j() {
+                            m.registry.record("migration.benefit_error_j", e);
+                        }
+                    }
+                }
+            }
+        }
         if let Some(sink) = &mut self.sink {
             for w in worlds.iter_mut() {
                 w.finalize_trace();
@@ -1422,6 +1660,7 @@ impl Collector {
         FinishedCollector {
             trace: self.sink.map(|s| s.finalize(end_secs)),
             metrics: self.metrics,
+            calibration: self.calib,
         }
     }
 }
@@ -1430,6 +1669,7 @@ impl Collector {
 struct FinishedCollector {
     trace: Option<Vec<TraceRecord>>,
     metrics: Option<FleetMetrics>,
+    calibration: Option<CalibrationLedger>,
 }
 
 /// Run a multi-host fleet to completion (or the time cap): sessions
@@ -1476,10 +1716,15 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
     // inert (and bit-invisible to the run) unless enabled. Host worlds
     // get per-host trace buffers on tracks 1..=N; the collector itself
     // is track 0.
-    let mut coll = Collector::new(cfg.trace, cfg.metrics);
+    let mut coll = Collector::new(cfg.trace, cfg.metrics, cfg.calibration);
     if cfg.trace {
         for (i, w) in worlds.iter_mut().enumerate() {
             w.enable_trace(i as u64 + 1);
+        }
+    }
+    if coll.active() {
+        for w in worlds.iter_mut() {
+            w.enable_calibration();
         }
     }
     if let Some(m) = &mut coll.metrics {
@@ -2190,6 +2435,10 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
     // last host buffers and finalize the merged log before `finish`
     // consumes the worlds.
     let end_secs = worlds[0].now_secs();
+    if coll.active() {
+        let censored: Vec<f64> = queue.iter().map(|(_, req, _, _)| *req).collect();
+        coll.on_run_end(end_secs, &censored);
+    }
     let observed = coll.finish(&mut worlds, end_secs);
     let unplaced: Vec<String> = queue
         .iter()
@@ -2250,6 +2499,7 @@ pub fn run_dispatcher(cfg: &DispatcherConfig) -> DispatchOutcome {
         advisories,
         trace: observed.trace,
         metrics: observed.metrics,
+        calibration: observed.calibration,
     }
 }
 
@@ -2711,5 +2961,98 @@ mod tests {
         assert!(!m.timeline.snapshots.is_empty());
         assert_eq!(m.registry.gauge("fleet.hosts"), Some(2.0));
         assert!(m.warm_hit_rate().is_some(), "ticks were counted");
+    }
+
+    #[test]
+    fn calibration_ledger_reconciles_with_fleet_outcome() {
+        let hosts = vec![
+            HostSpec::new("a", testbeds::cloudlab()),
+            HostSpec::new("b", testbeds::cloudlab()),
+        ];
+        let sessions = vec![
+            TenantSpec::new(
+                "s0",
+                crate::dataset::standard::medium_dataset(1),
+                AlgorithmKind::MaxThroughput,
+            ),
+            TenantSpec::new(
+                "s1",
+                crate::dataset::standard::medium_dataset(2),
+                AlgorithmKind::MaxThroughput,
+            ),
+        ];
+        let cfg = DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+            .with_sessions(sessions)
+            .with_seed(5)
+            .with_metrics();
+        let out = run_dispatcher(&cfg);
+        assert!(out.fleet.completed);
+        let cal = out.calibration.as_ref().expect("metrics turns the ledger on");
+        // One close per residency, each bit-matching the tenant outcome
+        // the same (session, host) pair reconciles to.
+        assert_eq!(cal.placements.len(), out.fleet.tenants.len());
+        for rec in &cal.placements {
+            let t = out
+                .fleet
+                .tenants
+                .iter()
+                .find(|t| t.name == rec.session && t.host == rec.host)
+                .expect("tenant outcome for calibration record");
+            assert_eq!(
+                rec.realized_bytes.to_bits(),
+                t.moved.as_f64().to_bits(),
+                "{} bytes reconcile",
+                rec.session
+            );
+            assert_eq!(
+                rec.realized_joules.to_bits(),
+                t.attributed_energy.as_joules().to_bits(),
+                "{} joules reconcile",
+                rec.session
+            );
+            assert_eq!(rec.end, "complete");
+            // Marginal-energy placement carries a J/B prediction, so
+            // every record is a joined prediction-vs-realized pair.
+            assert!(rec.predicted_jpb.is_some(), "{} has a prediction", rec.session);
+            assert!(rec.realized_jpb().is_some());
+        }
+        let summed: f64 = cal.realized_joules();
+        let fleet: f64 = out
+            .fleet
+            .tenants
+            .iter()
+            .map(|t| t.attributed_energy.as_joules())
+            .sum();
+        assert_eq!(summed.to_bits(), fleet.to_bits(), "summed joules bit-match");
+        let m = out.metrics.as_ref().expect("metrics enabled");
+        assert_eq!(
+            m.registry.counter("calibration.records"),
+            cal.placements.len() as u64
+        );
+        assert!(m.registry.histogram("placement.jpb_error").is_some());
+        // The ledger round-trips through its JSON report.
+        let doc = crate::history::json::parse(&cal.to_json()).expect("ledger json");
+        assert_eq!(
+            doc.get("placements").and_then(|p| p.as_arr()).map(|a| a.len()),
+            Some(cal.placements.len())
+        );
+    }
+
+    #[test]
+    fn trace_off_metrics_off_leaves_calibration_none() {
+        let hosts = vec![HostSpec::new("solo", testbeds::cloudlab())];
+        let sessions = vec![TenantSpec::new(
+            "s0",
+            crate::dataset::standard::medium_dataset(1),
+            AlgorithmKind::MaxThroughput,
+        )];
+        let cfg = DispatcherConfig::new(hosts, PlacementKind::LeastLoaded)
+            .with_sessions(sessions)
+            .with_seed(1);
+        let out = run_dispatcher(&cfg);
+        assert!(out.fleet.completed);
+        assert!(out.calibration.is_none(), "ledger off without observability");
+        assert!(out.trace.is_none());
+        assert!(out.metrics.is_none());
     }
 }

@@ -15,7 +15,7 @@
 //! per-host driver state lives in the crate-internal `HostWorld` so both
 //! entry points share one implementation.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::experiment::{GovernorKind, TunerParams};
 use crate::config::Testbed;
@@ -25,6 +25,7 @@ use crate::cpusim::{CpuDemand, CpuState};
 use crate::dataset::{Dataset, FileSpec};
 use crate::history::{RunOutcome, RunRecord, TrajPoint, WorkloadFingerprint};
 use crate::netsim::{BandwidthEvent, CrossTrafficConfig};
+use crate::obs::calibrate::CalibrationRecord;
 use crate::obs::trace::{AttrValue, TraceBuf, TraceRecord};
 use crate::resilience::DeadLetter;
 use crate::sim::{Simulation, TickStats, TuneCtx, MAX_APP_UTILIZATION};
@@ -402,6 +403,21 @@ struct HostTrace {
     open: BTreeMap<usize, OpenResidency>,
 }
 
+/// Per-host calibration state ([`HostWorld`]'s side of the ISSUE-10
+/// decision calibration ledger). Like [`HostTrace`], it only acts at
+/// segment-boundary events — the same three residency-close sites the
+/// tracer uses — so the record stream is shard-count invariant by
+/// construction, and it reads bytes/joules with the identical
+/// expressions [`HostWorld::finish`] bills [`TenantOutcome`]s with, so
+/// the ledger reconciles with the outcome to the bit.
+struct HostCalib {
+    /// Closed-residency records awaiting collection.
+    records: Vec<CalibrationRecord>,
+    /// Tenant indices whose residency already produced a record (one
+    /// record per residency, whichever close site fires first).
+    closed: BTreeSet<usize>,
+}
+
 /// One open residency span (see [`HostTrace::open`]).
 struct OpenResidency {
     /// Pre-allocated id of the `admit` span.
@@ -456,6 +472,9 @@ pub(crate) struct HostWorld {
     /// hook a no-op so untraced runs take the exact code path they
     /// always did.
     trace: Option<HostTrace>,
+    /// Decision-calibration state; same `Option` discipline as `trace`
+    /// (the dispatcher enables it whenever any observability is on).
+    calib: Option<HostCalib>,
 }
 
 impl HostWorld {
@@ -559,6 +578,7 @@ impl HostWorld {
             next_fleet: fleet_step,
             channel_cap: None,
             trace: None,
+            calib: None,
         }
     }
 
@@ -599,6 +619,67 @@ impl HostWorld {
         };
         for tenant in open {
             self.trace_close_residency(tenant, "timecap");
+        }
+    }
+
+    /// Turn on decision calibration for this world: every residency
+    /// close will join the admission-time predicted J/B against the
+    /// realized bytes/joules.
+    pub(crate) fn enable_calibration(&mut self) {
+        self.calib = Some(HostCalib { records: Vec::new(), closed: BTreeSet::new() });
+    }
+
+    /// Drain this world's buffered calibration records (the dispatcher
+    /// collects per-host buffers in host-index order at every segment
+    /// boundary, mirroring [`Self::take_trace`]).
+    pub(crate) fn take_calibration(&mut self) -> Vec<CalibrationRecord> {
+        self.calib.as_mut().map(|c| std::mem::take(&mut c.records)).unwrap_or_default()
+    }
+
+    /// Close every still-open residency's calibration record with
+    /// `end="timecap"` — the calibration sibling of
+    /// [`Self::finalize_trace`], called once by the dispatcher before
+    /// `finish`.
+    pub(crate) fn finalize_calibration(&mut self) {
+        let pending: Vec<usize> = match &self.calib {
+            Some(cal) => (0..self.tenants.len())
+                .filter(|i| self.tenants[*i].admitted && !cal.closed.contains(i))
+                .collect(),
+            None => return,
+        };
+        for tenant in pending {
+            self.calib_close_residency(tenant, "timecap");
+        }
+    }
+
+    /// Record one residency's calibration join, ending now. Bytes and
+    /// joules are read with the *identical* expressions [`Self::finish`]
+    /// uses for [`TenantOutcome`] (and [`Self::trace_close_residency`]
+    /// uses for the `admit` span), so the ledger's realized side
+    /// bit-matches both. Fires at the same three sites as the trace
+    /// close (`complete`, `preempt`, `timecap`); the `closed` set makes
+    /// it idempotent per tenant.
+    fn calib_close_residency(&mut self, tenant: usize, end: &str) {
+        match self.calib.as_mut() {
+            Some(cal) if cal.closed.insert(tenant) => {}
+            _ => return,
+        }
+        let t = &self.tenants[tenant];
+        let slot = self.sim.slot(t.slot);
+        let engine = &slot.engine;
+        let moved = engine.total().saturating_sub(engine.remaining());
+        let record = CalibrationRecord {
+            session: self.specs[tenant].name.clone(),
+            host: self.name.clone(),
+            end: end.to_string(),
+            t0_secs: self.specs[tenant].arrive_at.as_secs(),
+            t1_secs: self.sim.now.as_secs(),
+            predicted_jpb: t.admission_marginal_jpb,
+            realized_bytes: moved.as_f64(),
+            realized_joules: slot.attributed_energy().as_joules(),
+        };
+        if let Some(cal) = self.calib.as_mut() {
+            cal.records.push(record);
         }
     }
 
@@ -994,6 +1075,7 @@ impl HostWorld {
                 t.settled_cores = self.sim.host.client.active_cores();
                 t.settled_pstate = self.sim.host.client.freq_index() as u32;
                 self.sim.deactivate_slot(t.slot);
+                self.calib_close_residency(i, "complete");
                 if self.trace.is_some() {
                     self.trace_complete(i);
                 }
@@ -1073,10 +1155,11 @@ impl HostWorld {
     /// engine keeps them only as inert bookkeeping (`all_done` treats the
     /// preempted tenant as departed).
     pub(crate) fn preempt(&mut self, tenant: usize) -> PreemptedSession {
-        // Close the residency span first: the byte/joule reads below are
-        // unaffected by the drain, and the close must see the slot still
-        // resident.
+        // Close the residency span (and its calibration record) first:
+        // the byte/joule reads below are unaffected by the drain, and the
+        // close must see the slot still resident.
         self.trace_close_residency(tenant, "preempt");
+        self.calib_close_residency(tenant, "preempt");
         let now = self.sim.now;
         let t = &mut self.tenants[tenant];
         debug_assert!(

@@ -1,0 +1,258 @@
+//! Acceptance tests for the analysis half of the observability stack
+//! (ISSUE 10): the structural trace differ and the decision calibration
+//! ledger.
+//!
+//! * **shard-invariant diff** — `trace diff` of a 1-shard and an
+//!   8-shard run of the same `(config, seed)` is empty (the differ
+//!   agrees with the byte-identity contract in `trace_determinism`);
+//! * **fault localization** — diffing a `--resilience on` run against
+//!   the `off` run of the same faulted workload confines every
+//!   per-session delta to the session the fault actually hit, and the
+//!   on-side surplus names the recovery machinery (retry, penalty box);
+//! * **ledger reconciliation** — calibration records join 1:1 with
+//!   `FleetOutcome` tenants by (session, host) and match their realized
+//!   bytes/joules to the bit, migrations included.
+
+use greendt::config::testbeds;
+use greendt::coordinator::{AlgorithmKind, PlacementKind};
+use greendt::dataset::standard;
+use greendt::obs::{trace_jsonl, TraceDiff, TraceLog};
+use greendt::rebalance::{RebalanceConfig, RebalancePolicyKind};
+use greendt::resilience::{FaultSchedule, ResilienceConfig};
+use greendt::sim::dispatcher::{run_dispatcher, DispatcherConfig, HostSpec, SessionSpec};
+use greendt::units::SimTime;
+
+/// The busy heterogeneous fleet from `trace_determinism`: five hosts,
+/// eight staggered sessions, enough churn to cross many segments.
+fn busy_cfg(shards: usize) -> DispatcherConfig {
+    let testbeds = testbeds::all();
+    let hosts: Vec<HostSpec> = (0..5)
+        .map(|i| {
+            let tb = testbeds[i % testbeds.len()].clone();
+            HostSpec::new(format!("host{i}-{}", tb.name), tb).with_max_sessions(2)
+        })
+        .collect();
+    let sessions: Vec<SessionSpec> = (0..8u64)
+        .map(|i| {
+            SessionSpec::new(
+                format!("session-{i}"),
+                standard::medium_dataset(100 + i),
+                if i % 2 == 0 { AlgorithmKind::MaxThroughput } else { AlgorithmKind::MinEnergy },
+            )
+            .arriving_at(SimTime::from_secs(10.0 * i as f64))
+        })
+        .collect();
+    DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+        .with_sessions(sessions)
+        .with_seed(7)
+        .with_shards(shards)
+        .with_trace()
+        .with_metrics()
+}
+
+#[test]
+fn diff_of_shard_counts_is_empty() {
+    let a = run_dispatcher(&busy_cfg(1));
+    let b = run_dispatcher(&busy_cfg(8));
+    let log_a = TraceLog::parse(&trace_jsonl(a.trace.as_ref().unwrap()));
+    let log_b = TraceLog::parse(&trace_jsonl(b.trace.as_ref().unwrap()));
+    assert!(!log_a.records.is_empty(), "the busy fleet must trace something");
+    let diff = TraceDiff::compute(&log_a, &log_b);
+    assert!(
+        diff.is_empty(),
+        "1-shard vs 8-shard logs must diff empty:\n{}",
+        diff.to_markdown("shards=1", "shards=8")
+    );
+    // And the diff of a log against itself is trivially empty too.
+    assert!(TraceDiff::compute(&log_a, &log_a).is_empty());
+}
+
+/// Two single-slot hosts, one session each, so placement is forced and
+/// the scripted death of host 1 hits exactly `session-1`.
+fn pair_cfg(faults: Option<FaultSchedule>, recovery: bool) -> DispatcherConfig {
+    let hosts = vec![
+        HostSpec::new("host-a", testbeds::cloudlab()).with_max_sessions(1),
+        HostSpec::new("host-b", testbeds::cloudlab()).with_max_sessions(1),
+    ];
+    let sessions = vec![
+        SessionSpec::new("session-0", standard::medium_dataset(11), AlgorithmKind::MaxThroughput),
+        SessionSpec::new("session-1", standard::medium_dataset(12), AlgorithmKind::MaxThroughput)
+            .arriving_at(SimTime::from_secs(1.0)),
+    ];
+    let mut cfg = DispatcherConfig::new(hosts, PlacementKind::LeastLoaded)
+        .with_sessions(sessions)
+        .with_seed(13)
+        .with_trace()
+        .with_metrics();
+    if let Some(f) = faults {
+        let mut res = ResilienceConfig::new().with_faults(f);
+        if recovery {
+            res = res.with_recovery();
+        }
+        cfg.resilience = res;
+    }
+    cfg
+}
+
+#[test]
+fn resilience_diff_localizes_to_the_faulted_session() {
+    // Probe (no faults): learn when session-1 finishes so the scripted
+    // death lands mid-residency.
+    let probe = run_dispatcher(&pair_cfg(None, false));
+    assert!(probe.fleet.completed);
+    let finish = probe
+        .fleet
+        .tenants
+        .iter()
+        .find(|t| t.name == "session-1")
+        .and_then(|t| t.finished_at)
+        .expect("session-1 finishes in the probe")
+        .as_secs();
+    let down = (1.0 + finish) / 2.0;
+    let faults = || {
+        FaultSchedule::default().with_host_failure(
+            1,
+            SimTime::from_secs(down),
+            Some(SimTime::from_secs(finish + 200.0)),
+        )
+    };
+
+    let off = run_dispatcher(&pair_cfg(Some(faults()), false));
+    let on = run_dispatcher(&pair_cfg(Some(faults()), true));
+    assert!(!off.fleet.completed, "without recovery the loss is terminal");
+    assert!(on.fleet.completed, "recovery must redeliver session-1");
+    assert!(on.retries.iter().any(|r| r.session == "session-1"));
+
+    let log_off = TraceLog::parse(&trace_jsonl(off.trace.as_ref().unwrap()));
+    let log_on = TraceLog::parse(&trace_jsonl(on.trace.as_ref().unwrap()));
+    let diff = TraceDiff::compute(&log_off, &log_on);
+    assert!(!diff.is_empty(), "the recovery switch must change the trace");
+
+    // Every sessioned delta — missing records, surplus records, tally
+    // drift — belongs to the session the fault hit. session-0's story
+    // is untouched by the recovery machinery.
+    for d in diff.only_in_a.iter().chain(&diff.only_in_b) {
+        if let Some(s) = &d.session {
+            assert_eq!(s, "session-1", "delta leaked outside the faulted session: {}", d.record);
+        }
+    }
+    for d in &diff.session_deltas {
+        assert_eq!(d.session, "session-1", "tally drift outside the faulted session");
+    }
+    assert!(diff.sessions_only_in_a.is_empty() && diff.sessions_only_in_b.is_empty());
+
+    // The on-side surplus is the recovery machinery by name.
+    let on_names: Vec<&str> = diff.only_in_b.iter().map(|d| d.name.as_str()).collect();
+    for expected in ["retry", "penalty_box"] {
+        assert!(on_names.contains(&expected), "on-side lacks '{expected}': {on_names:?}");
+    }
+    // The off-side surplus contains the terminal dead-letter.
+    assert!(
+        diff.only_in_a.iter().any(|d| d.name == "dead_letter"),
+        "off-side must dead-letter the lost session"
+    );
+}
+
+/// The hot-spot scenario from `trace_determinism`: the marginal-delta
+/// rebalancer migrates s1 off the legacy host, so the ledger sees a
+/// preempt-closed residency, a migration join, and completions.
+fn hotspot_cfg() -> DispatcherConfig {
+    let hosts = vec![
+        HostSpec::new("efficient", testbeds::cloudlab()).with_max_sessions(1),
+        HostSpec::new("legacy", testbeds::didclab()).with_max_sessions(4),
+    ];
+    let sessions = vec![
+        SessionSpec::new("s0", standard::medium_dataset(301), AlgorithmKind::MaxThroughput),
+        SessionSpec::new("s1", standard::large_dataset(302), AlgorithmKind::MaxThroughput)
+            .arriving_at(SimTime::from_secs(5.0)),
+    ];
+    let mut cfg = DispatcherConfig::new(hosts, PlacementKind::MarginalEnergy)
+        .with_sessions(sessions)
+        .with_seed(61)
+        .with_trace()
+        .with_metrics();
+    cfg.rebalance = RebalanceConfig::new(RebalancePolicyKind::MarginalEnergyDelta);
+    cfg
+}
+
+#[test]
+fn calibration_ledger_reconciles_to_the_bit() {
+    let out = run_dispatcher(&hotspot_cfg());
+    assert!(out.fleet.completed);
+    assert!(
+        out.migrations.iter().any(|m| m.session == "s1"),
+        "the hot-spot scenario must migrate s1"
+    );
+    let cal = out.calibration.as_ref().expect("observability turns the ledger on");
+
+    // One calibration record per residency, joined 1:1 against the
+    // tenant outcomes by (session, host) — the migration means s1 has
+    // two residencies on two hosts, and both must reconcile.
+    assert_eq!(cal.placements.len(), out.fleet.tenants.len(), "one record per residency");
+    for rec in &cal.placements {
+        let tenant = out
+            .fleet
+            .tenants
+            .iter()
+            .find(|t| t.name == rec.session && t.host == rec.host)
+            .unwrap_or_else(|| panic!("no tenant outcome for {}@{}", rec.session, rec.host));
+        assert_eq!(
+            rec.realized_bytes.to_bits(),
+            tenant.moved.as_f64().to_bits(),
+            "{}@{}: realized bytes",
+            rec.session,
+            rec.host
+        );
+        assert_eq!(
+            rec.realized_joules.to_bits(),
+            tenant.attributed_energy.as_joules().to_bits(),
+            "{}@{}: realized joules",
+            rec.session,
+            rec.host
+        );
+        assert_eq!(
+            rec.end == "preempt",
+            tenant.preempted,
+            "{}@{}: end kind agrees with the outcome",
+            rec.session,
+            rec.host
+        );
+    }
+
+    // The fleet-level sums bit-match too (per-host accumulation order
+    // is the same on both sides).
+    let ledger_joules: f64 = cal.placements.iter().map(|r| r.realized_joules).sum();
+    let fleet_joules: f64 =
+        out.fleet.tenants.iter().map(|t| t.attributed_energy.as_joules()).sum();
+    assert_eq!(
+        cal.realized_joules().to_bits(),
+        ledger_joules.to_bits(),
+        "ledger sum accessor agrees with a manual fold"
+    );
+    // Order-insensitive check against the outcome side: same multiset
+    // of per-residency joules ⇒ compare sorted folds.
+    let mut a: Vec<f64> = cal.placements.iter().map(|r| r.realized_joules).collect();
+    let mut b: Vec<f64> =
+        out.fleet.tenants.iter().map(|t| t.attributed_energy.as_joules()).collect();
+    a.sort_by(f64::total_cmp);
+    b.sort_by(f64::total_cmp);
+    let (sa, sb) = (a.iter().sum::<f64>(), b.iter().sum::<f64>());
+    assert_eq!(sa.to_bits(), sb.to_bits(), "summed realized joules bit-match");
+    assert!(fleet_joules.is_finite());
+
+    // The migration joined: the preempt-side and resume-side
+    // residencies produced a realized delay and a realized benefit.
+    let mig = cal
+        .migrations
+        .iter()
+        .find(|m| m.session == "s1")
+        .expect("the ledger records the migration");
+    assert!(mig.realized_delay_s.is_some(), "migration joined to its resumed residency");
+    assert!(mig.realized_benefit_j.is_some());
+    assert!(mig.realized_delay_s.unwrap() >= 0.0);
+
+    // Metrics agree with the ledger's counts.
+    let m = out.metrics.as_ref().unwrap();
+    assert_eq!(m.registry.counter("calibration.records"), cal.placements.len() as u64);
+    assert_eq!(m.registry.counter("calibration.anomalies"), cal.anomalies.len() as u64);
+}
